@@ -1,0 +1,70 @@
+//! Regenerate the paper's Table I (per-block power of the 3-bit
+//! self-attention module on the systolic substrate), plus a bit-width
+//! sweep showing how the integerized blocks scale.
+//!
+//! ```sh
+//! cargo run --release --example power_table
+//! ```
+
+use ivit::sim::{AttentionSim, EnergyModel};
+
+fn main() {
+    // DeiT-S attention geometry (paper §V-B): N=198 tokens (196 patches +
+    // cls + distill), I=384 input dim, O=64 head dim, 100 MHz, 3-bit.
+    let m = EnergyModel::default();
+    println!("=== Table I — 3-bit self-attention, DeiT-S dims (N=198, I=384, O=64) ===\n");
+    let report = AttentionSim::paper_geometry(198, 384, 64, 3);
+    print!("{}", report.render(&m));
+    println!(
+        "\ntotal: {} PEs | {:.2}M MACs | {:.2} W\n",
+        report.total_pes(),
+        report.total_macs() as f64 / 1e6,
+        report.total_power_w(&m)
+    );
+
+    println!("paper reference (Table I, legible rows):");
+    println!("  Q/K linear   24,576 PE  4.87M MAC  10.188 W  0.414 mW/PE");
+    println!("  LayerNorm       128 PE             0.598 W   4.67  mW/PE");
+    println!("  delay        12,672 PE             0.858 W");
+    println!("  QK^T+softmax 39,204 PE  2.51M MAC  58.959 W  1.504 mW/PE");
+    println!("  PV matmul    12,672 PE  2.51M MAC   4.597 W  0.362 mW/PE");
+    println!("  reversing     4,096 PE             1.511 W");
+
+    println!("\n=== bit-width sweep (same geometry) ===\n");
+    println!(
+        "{:<6} {:>14} {:>14} {:>14} {:>12}",
+        "bits", "linear mW/PE", "QK mW/PE", "PV mW/PE", "total W"
+    );
+    for bits in [2u32, 3, 4, 8] {
+        let r = AttentionSim::paper_geometry(198, 384, 64, bits);
+        let pe = |name: &str| {
+            r.blocks.iter().find(|b| b.name == name).map(|b| b.per_pe_mw(&m)).unwrap_or(0.0)
+        };
+        println!(
+            "{:<6} {:>14.3} {:>14.3} {:>14.3} {:>12.2}",
+            bits,
+            pe("Q linear"),
+            pe("QK^T matmul+softmax"),
+            pe("PV matmul"),
+            r.total_power_w(&m)
+        );
+    }
+    println!("\n(fp32-equivalent multiplier for the un-reordered Fig. 1(a) path:");
+    let fp_equiv = m.mac_pj(32) + m.c_ws_overhead_pj;
+    println!(
+        "  a 32-bit MAC PE would burn {:.2} mW — {:.0}× the 3-bit PE)",
+        fp_equiv * 1e-12 * m.freq_hz * 1e3,
+        fp_equiv / (m.mac_pj(3) + m.c_ws_overhead_pj)
+    );
+
+    println!("\n=== workload energy per inference (the paper's motivation) ===\n");
+    for bits in [2u32, 3, 8] {
+        let r = AttentionSim::paper_geometry(198, 384, 64, bits);
+        let int_e = r.workload_energy_uj(&m);
+        let fp_e = r.workload_energy_dequant_fp32_uj(&m);
+        println!(
+            "  {bits}-bit reordered: {int_e:8.1} µJ   dequantize-first fp32: {fp_e:8.1} µJ   ({:.1}×)",
+            fp_e / int_e
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Quickstart: load the AOT artifacts, classify one batch of eval images
+//! with the fp32 and the 3-bit integerized executables, and compare.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use ivit::model::EvalSet;
+use ivit::runtime::Engine;
+use ivit::util::tensorio::Tensor;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let mut engine = Engine::new(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+    println!("eval set: {} images of {} elements", ev.n, ev.image_elems);
+
+    // one batch of 8 images
+    let batch = 8;
+    let mut payload = vec![0f32; batch * ev.image_elems];
+    for b in 0..batch {
+        payload[b * ev.image_elems..(b + 1) * ev.image_elems].copy_from_slice(ev.image(b)?);
+    }
+
+    let run = |name: &str, engine: &mut Engine| -> Result<Vec<f32>> {
+        engine.load(name)?;
+        let exe = engine.get(name).unwrap();
+        let t = Tensor::f32(exe.spec.inputs[0].shape.clone(), payload.clone());
+        let out = exe.run(&[t])?;
+        Ok(out[0].as_f32()?.to_vec())
+    };
+
+    let fp = run("model_fp32_b8", &mut engine)?;
+    let int3 = run("model_int_3b_b8", &mut engine)?;
+    let classes = fp.len() / batch;
+
+    // optional: compare against a python-exported expectation if present
+    if let Ok(expect) = Tensor::read_from(&dir.join("debug_expected_fp32_b8.bin")) {
+        let e = expect.as_f32()?;
+        let max_diff = fp
+            .iter()
+            .zip(e)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("fp32 rust-vs-jax max |Δlogit| = {max_diff:.6}");
+    }
+
+    println!("\n{:<5} {:>6} {:>10} {:>10}  logits(fp32)[..4]", "img", "label", "pred_fp32", "pred_int3");
+    let mut agree = 0;
+    for b in 0..batch {
+        let row_fp = &fp[b * classes..(b + 1) * classes];
+        let row_int = &int3[b * classes..(b + 1) * classes];
+        let am = |r: &[f32]| {
+            r.iter().enumerate().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0
+        };
+        let (pf, pi) = (am(row_fp), am(row_int));
+        if pf == pi {
+            agree += 1;
+        }
+        println!(
+            "{:<5} {:>6} {:>10} {:>10}  {:?}",
+            b,
+            ev.labels[b],
+            pf,
+            pi,
+            &row_fp[..4.min(classes)]
+        );
+    }
+    println!("\nfp32/int3 argmax agreement on this batch: {agree}/{batch}");
+    Ok(())
+}

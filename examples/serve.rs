@@ -1,0 +1,86 @@
+//! End-to-end serving driver (DESIGN.md experiment E2E): load the 3-bit
+//! integerized ViT, serve batched classification requests through the
+//! coordinator at several offered loads, and report latency/throughput/
+//! accuracy. This is the "all layers compose" proof: Pallas-verified
+//! kernels → JAX-lowered HLO → PJRT → Rust batcher.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve [artifacts-dir]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use ivit::coordinator::{BatcherConfig, Coordinator, PjrtExecutor, SubmitError};
+use ivit::model::EvalSet;
+use ivit::util::XorShift;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+
+    println!("{:<24} {:>9} {:>10} {:>10} {:>10} {:>9} {:>8}",
+        "scenario", "reqs", "thru img/s", "p50 ms", "p99 ms", "batch", "acc");
+
+    // closed-loop (max throughput) and two open-loop arrival rates
+    for (label, rate) in [("closed-loop", 0.0), ("open 100 req/s", 100.0), ("open 400 req/s", 400.0)] {
+        let exec = PjrtExecutor::load(&dir, "integerized", 3, 8)?;
+        let coord = Coordinator::start(
+            exec,
+            BatcherConfig { queue_capacity: 512, max_wait: Duration::from_millis(2) },
+        );
+        let h = coord.handle();
+        let n_requests = 512usize;
+        let mut rng = XorShift::new(11);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_requests);
+        let mut labels = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let idx = (rng.next_u64() as usize) % ev.n;
+            labels.push(ev.labels[idx]);
+            let img = ev.image(idx)?.to_vec();
+            loop {
+                match h.submit(img.clone()) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(SubmitError::QueueFull) => std::thread::sleep(Duration::from_micros(100)),
+                    Err(SubmitError::Closed) => anyhow::bail!("coordinator closed"),
+                }
+            }
+            if rate > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+            }
+        }
+        let mut correct = 0usize;
+        for (rx, &y) in pending.into_iter().zip(&labels) {
+            let r = rx.recv()?;
+            anyhow::ensure!(r.error.is_none(), "request failed: {:?}", r.error);
+            let pred = r
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k as i32);
+            if pred == Some(y) {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = coord.shutdown();
+        println!(
+            "{:<24} {:>9} {:>10.1} {:>10.2} {:>10.2} {:>9.2} {:>8.4}",
+            label,
+            n_requests,
+            n_requests as f64 / wall,
+            s.p50_us as f64 / 1e3,
+            s.p99_us as f64 / 1e3,
+            s.mean_batch,
+            correct as f64 / n_requests as f64
+        );
+    }
+    Ok(())
+}

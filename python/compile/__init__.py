@@ -1,0 +1,4 @@
+"""Build-time Python package: JAX model (L2), Pallas kernels (L1), AOT export.
+
+Never imported at runtime — the Rust binary consumes only ``artifacts/``.
+"""

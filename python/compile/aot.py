@@ -1,0 +1,350 @@
+"""AOT build driver: train → integerize → export artifacts.
+
+``python -m compile.aot --out ../artifacts`` produces everything the Rust
+binary consumes (HLO text, weights, eval set, cross-language test vectors,
+manifest.json). Heavy stages cache into ``<out>/checkpoints`` so re-runs
+are incremental; ``make artifacts`` wraps this.
+
+Emits HLO **text**, not ``.serialize()`` — xla_extension 0.5.1 rejects
+jax≥0.5's 64-bit-id protos (see hlo.py and /opt/xla-example/README.md).
+
+``--fast`` builds a small-config, few-step variant of everything (used by
+CI-style smoke tests); the artifact layout is identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, data as data_mod, hlo, integerize, train as train_mod, vit
+from .configs import DataConfig, ModelConfig, QuantConfig, TrainConfig, TEST, TINY
+from .kernels import ref
+from .params import init_params, load_npz, reinit_qsteps, save_npz, tree_count
+from .quantizers import quantize_int
+from .tensorio import write_tensor
+
+BITS = (2, 3, 8)
+
+
+def _train_cfgs(fast: bool):
+    if fast:
+        return (
+            TEST,
+            TrainConfig(
+                last_layer_steps=2,
+                finetune_steps=6,
+                warmup_steps=2,
+                train_samples=256,
+                eval_samples=128,
+            ),
+            DataConfig(img_size=TEST.img_size),
+        )
+    return (
+        TINY,
+        TrainConfig(
+            last_layer_steps=30,
+            finetune_steps=300,
+            warmup_steps=20,
+            train_samples=2048,
+            eval_samples=1024,
+        ),
+        DataConfig(),
+    )
+
+
+def _fp32_tcfg(tcfg: TrainConfig) -> TrainConfig:
+    """The fp32 'pretrain' stand-in: single phase, slightly shorter."""
+    return dataclasses.replace(
+        tcfg,
+        last_layer_steps=0,
+        finetune_steps=max(tcfg.finetune_steps - 50, tcfg.finetune_steps // 2, 4),
+    )
+
+
+def stage_train(out: str, fast: bool, log=print):
+    """Train fp32 then QAT per bit-width; cache checkpoints + metrics."""
+    cfg, tcfg, dcfg = _train_cfgs(fast)
+    ckpt_dir = os.path.join(out, "checkpoints")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    metrics_path = os.path.join(out, "metrics.json")
+    metrics = {}
+    if os.path.exists(metrics_path):
+        with open(metrics_path) as f:
+            metrics = json.load(f)
+
+    template = init_params(jax.random.PRNGKey(tcfg.seed), cfg, QuantConfig(bits=3))
+
+    def ckpt(name):
+        return os.path.join(ckpt_dir, f"{name}.npz")
+
+    # --- fp32 pretrain stand-in -------------------------------------------
+    if not os.path.exists(ckpt("fp32")):
+        log("=== training fp32 baseline ===")
+        p, hist = train_mod.train_model(
+            cfg, QuantConfig(bits=3), _fp32_tcfg(tcfg), dcfg, mode="fp32", log=log
+        )
+        save_npz(ckpt("fp32"), p)
+        metrics["fp32"] = {"eval_acc": hist[-1]["eval_acc"], "history": hist}
+        _dump(metrics_path, metrics)
+    p_fp = load_npz(ckpt("fp32"), template)
+
+    # --- QAT per bit-width -------------------------------------------------
+    for bits in BITS:
+        name = f"qat_{bits}b"
+        qcfg = QuantConfig(bits=bits, attn_bits=min(bits, 4))
+        if os.path.exists(ckpt(name)):
+            continue
+        log(f"=== QAT {bits}-bit ===")
+        tmpl_b = init_params(jax.random.PRNGKey(tcfg.seed), cfg, qcfg)
+        init = reinit_qsteps(p_fp, cfg, qcfg)
+        # 8-bit converges quickly; spend the budget on the hard low-bit runs
+        tq = tcfg if bits < 8 else dataclasses.replace(
+            tcfg, finetune_steps=max(tcfg.finetune_steps // 2, 4)
+        )
+        p, hist = train_mod.train_model(cfg, qcfg, tq, dcfg, mode="qvit", init_from=init, log=log)
+        save_npz(ckpt(name), p)
+        metrics[name] = {"eval_acc": hist[-1]["eval_acc"], "history": hist}
+        _dump(metrics_path, metrics)
+        del tmpl_b
+    return cfg, tcfg, dcfg, metrics
+
+
+def stage_eval_int(out: str, cfg, tcfg, dcfg, metrics, log=print):
+    """Table II body: eval qvit vs integerized (shift / exact) per bits."""
+    template3 = init_params(jax.random.PRNGKey(tcfg.seed), cfg, QuantConfig(bits=3))
+    eval_x, eval_y = data_mod.make_dataset(dcfg, tcfg.eval_samples, split_seed=1)
+    metrics_path = os.path.join(out, "metrics.json")
+    for bits in BITS:
+        key = f"int_{bits}b"
+        if key in metrics:
+            continue
+        qcfg = QuantConfig(bits=bits, attn_bits=min(bits, 4))
+        p = load_npz(os.path.join(out, "checkpoints", f"qat_{bits}b.npz"), template3)
+        ip = integerize.integerize(p, cfg, qcfg)
+        accs = {}
+        for variant, shift in (("shift", True), ("exact", False)):
+            fwd = jax.jit(lambda imgs: vit.forward_int(ip, imgs, cfg, qcfg, shift=shift))
+            correct = 0
+            bs = 128
+            for i in range(0, eval_x.shape[0], bs):
+                logits = np.asarray(fwd(jnp.asarray(eval_x[i : i + bs])))
+                correct += int((logits.argmax(-1) == eval_y[i : i + bs]).sum())
+            accs[variant] = correct / eval_x.shape[0]
+            log(f"[int/{bits}b/{variant}] eval accuracy = {accs[variant]:.4f}")
+        metrics[key] = accs
+        _dump(metrics_path, metrics)
+    return metrics
+
+
+def stage_export(out: str, cfg, tcfg, dcfg, metrics, fast: bool, log=print):
+    """HLO text + weights + eval set + cross-language vectors + manifest."""
+    template3 = init_params(jax.random.PRNGKey(tcfg.seed), cfg, QuantConfig(bits=3))
+    executables = []
+    batches = (1, 8)
+
+    # fp32 model
+    p_fp = load_npz(os.path.join(out, "checkpoints", "fp32.npz"), template3)
+    for b in batches:
+        name = f"model_fp32_b{b}"
+        spec = jax.ShapeDtypeStruct((b, cfg.img_size, cfg.img_size, cfg.in_chans), jnp.float32)
+        n = hlo.export(lambda imgs: (vit.forward_fp32(p_fp, imgs, cfg),), (spec,), _p(out, name))
+        executables.append(_exe(name, b, "fp32", 32, cfg))
+        log(f"exported {name} ({n} chars)")
+
+    for bits in BITS:
+        qcfg = QuantConfig(bits=bits, attn_bits=min(bits, 4))
+        p = load_npz(os.path.join(out, "checkpoints", f"qat_{bits}b.npz"), template3)
+        ip = integerize.integerize(p, cfg, qcfg)
+        for b in batches:
+            name = f"model_int_{bits}b_b{b}"
+            spec = jax.ShapeDtypeStruct(
+                (b, cfg.img_size, cfg.img_size, cfg.in_chans), jnp.float32
+            )
+            n = hlo.export(
+                lambda imgs: (vit.forward_int(ip, imgs, cfg, qcfg, shift=True),),
+                (spec,),
+                _p(out, name),
+            )
+            executables.append(_exe(name, b, "integerized", bits, cfg))
+            log(f"exported {name} ({n} chars)")
+        # Q-ViT baseline (dequantize-then-fp-matmul) at serving batch size
+        name = f"model_qvit_{bits}b_b8"
+        spec = jax.ShapeDtypeStruct((8, cfg.img_size, cfg.img_size, cfg.in_chans), jnp.float32)
+        n = hlo.export(
+            lambda imgs: (vit.forward_qvit(p, imgs, cfg, qcfg),), (spec,), _p(out, name)
+        )
+        executables.append(_exe(name, 8, "qvit", bits, cfg))
+        log(f"exported {name} ({n} chars)")
+
+    # Flagship: attention module with the Pallas kernels inside, batch 1.
+    qcfg3 = QuantConfig(bits=3, attn_bits=3)
+    p3 = load_npz(os.path.join(out, "checkpoints", "qat_3b.npz"), template3)
+    ip3 = integerize.integerize(p3, cfg, qcfg3)
+    blk = ip3["blocks"][0]["attn"]
+    spec = jax.ShapeDtypeStruct((cfg.tokens, cfg.dim), jnp.int32)
+    name = "attn_pallas_3b_b1"
+    n = hlo.export(
+        lambda codes: (attention.attention_int_pallas(blk, codes, cfg, qcfg3, shift=True),),
+        (spec,),
+        _p(out, name),
+    )
+    log(f"exported {name} ({n} chars)")
+    executables.append(
+        dict(
+            name=name,
+            path=f"{name}.hlo.txt",
+            batch=1,
+            mode="attn_pallas",
+            bits=3,
+            inputs=[dict(shape=[cfg.tokens, cfg.dim], dtype="i32")],
+            outputs=[dict(shape=[cfg.tokens, cfg.dim], dtype="f32")],
+        )
+    )
+
+    # --- eval set -----------------------------------------------------------
+    eval_x, eval_y = data_mod.make_dataset(dcfg, tcfg.eval_samples, split_seed=1)
+    write_tensor(os.path.join(out, "eval_images.bin"), eval_x.astype(np.float32))
+    write_tensor(os.path.join(out, "eval_labels.bin"), eval_y.astype(np.int32))
+
+    # --- cross-language vectors (block-0 attention, 3-bit) -------------------
+    _export_attn_case(out, cfg, qcfg3, p3, ip3)
+
+    manifest = {
+        "version": 1,
+        "fast": fast,
+        "model": dict(
+            img_size=cfg.img_size,
+            patch_size=cfg.patch_size,
+            in_chans=cfg.in_chans,
+            num_classes=cfg.num_classes,
+            dim=cfg.dim,
+            depth=cfg.depth,
+            heads=cfg.heads,
+            tokens=cfg.tokens,
+            params=int(tree_count(p_fp)),
+        ),
+        "executables": executables,
+        "evalset": {
+            "images": "eval_images.bin",
+            "labels": "eval_labels.bin",
+            "count": int(eval_x.shape[0]),
+        },
+        "metrics": metrics,
+        "bits": list(BITS),
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"manifest written with {len(executables)} executables")
+
+
+def _export_attn_case(out: str, cfg, qcfg, params, iparams):
+    """Bit-exact test vectors for the Rust quant/sim modules.
+
+    Everything the Rust side needs to replay block-0 attention: folded
+    constants, an input code matrix, and the expected integer outputs of
+    every stage (computed by the jnp reference — the same oracle the
+    Pallas kernels are tested against).
+    """
+    case_dir = os.path.join(out, "attn_case")
+    os.makedirs(case_dir, exist_ok=True)
+    blk = iparams["blocks"][0]["attn"]
+    rng = np.random.default_rng(7)
+    t, d = cfg.tokens, cfg.dim
+    x_codes = rng.integers(qcfg.qmin, qcfg.qmax + 1, (t, d)).astype(np.int32)
+
+    w = lambda name: blk[name]
+    for name in ("wq", "wk", "wv", "wo"):
+        write_tensor(os.path.join(case_dir, f"{name}_codes.bin"), np.asarray(w(name)["codes"], np.int32))
+        write_tensor(os.path.join(case_dir, f"{name}_bias_folded.bin"), np.asarray(w(name)["bias_folded"], np.float32))
+        write_tensor(os.path.join(case_dir, f"{name}_w_scale.bin"), np.asarray(w(name)["w_scale"], np.float32))
+        write_tensor(os.path.join(case_dir, f"{name}_out_scale.bin"), np.asarray(w(name)["out_scale"], np.float32))
+    for name in ("lnq", "lnk"):
+        write_tensor(os.path.join(case_dir, f"{name}_g.bin"), np.asarray(blk[name]["g"], np.float32))
+        write_tensor(os.path.join(case_dir, f"{name}_b.bin"), np.asarray(blk[name]["b"], np.float32))
+    scalars = dict(
+        sx=float(blk["sx"]),
+        s_q=float(blk["s_q"]),
+        s_k=float(blk["s_k"]),
+        s_v=float(blk["s_v"]),
+        s_attn=float(blk["s_attn"]),
+        s_o=float(blk["s_o"]),
+        score_scale=float(blk["score_scale"]),
+        o_eff=float(blk["o_eff"]),
+        bits=qcfg.bits,
+        attn_bits=qcfg.attn_bits,
+        heads=cfg.heads,
+        head_dim=cfg.head_dim,
+        tokens=cfg.tokens,
+        dim=cfg.dim,
+    )
+    with open(os.path.join(case_dir, "scalars.json"), "w") as f:
+        json.dump(scalars, f, indent=1)
+
+    write_tensor(os.path.join(case_dir, "x_codes.bin"), x_codes)
+    # expected stage outputs via the jnp reference path
+    xj = jnp.asarray(x_codes)
+    q_pre = (attention.ref_int_matmul(xj, blk["wq"]["codes"]) + blk["wq"]["bias_folded"]) * blk["wq"]["w_scale"]
+    k_pre = (attention.ref_int_matmul(xj, blk["wk"]["codes"]) + blk["wk"]["bias_folded"]) * blk["wk"]["w_scale"]
+    q_codes = ref.qlayernorm(q_pre, blk["lnq"]["g"], blk["lnq"]["b"], blk["s_q"], qcfg.bits)
+    k_codes = ref.qlayernorm(k_pre, blk["lnk"]["g"], blk["lnk"]["b"], blk["s_k"], qcfg.bits)
+    v_acc = attention.ref_int_matmul(xj, blk["wv"]["codes"]).astype(jnp.float32)
+    v_codes = jnp.clip(
+        jnp.round((v_acc + blk["wv"]["bias_folded"]) * blk["v_eff"]), qcfg.qmin, qcfg.qmax
+    )
+    write_tensor(os.path.join(case_dir, "q_codes.bin"), np.asarray(q_codes, np.int32))
+    write_tensor(os.path.join(case_dir, "k_codes.bin"), np.asarray(k_codes, np.int32))
+    write_tensor(os.path.join(case_dir, "v_codes.bin"), np.asarray(v_codes, np.int32))
+    # per-head attention codes + final output
+    out = attention.attention_int(blk, xj[None], cfg, qcfg, shift=True)
+    write_tensor(os.path.join(case_dir, "out.bin"), np.asarray(out[0], np.float32))
+    h0 = slice(0, cfg.head_dim)
+    attn0, _ = ref.qk_shift_softmax(
+        q_codes[:, h0], k_codes[:, h0], blk["score_scale"], blk["s_attn"], qcfg.attn_bits
+    )
+    write_tensor(os.path.join(case_dir, "attn_head0_codes.bin"), np.asarray(attn0, np.int32))
+
+
+def _p(out, name):
+    return os.path.join(out, f"{name}.hlo.txt")
+
+
+def _exe(name, batch, mode, bits, cfg):
+    return dict(
+        name=name,
+        path=f"{name}.hlo.txt",
+        batch=batch,
+        mode=mode,
+        bits=bits,
+        inputs=[dict(shape=[batch, cfg.img_size, cfg.img_size, cfg.in_chans], dtype="f32")],
+        outputs=[dict(shape=[batch, cfg.num_classes], dtype="f32")],
+    )
+
+
+def _dump(path, obj):
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true", help="small config, few steps")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    cfg, tcfg, dcfg, metrics = stage_train(args.out, args.fast)
+    metrics = stage_eval_int(args.out, cfg, tcfg, dcfg, metrics)
+    stage_export(args.out, cfg, tcfg, dcfg, metrics, args.fast)
+    print(f"artifacts built in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""The paper's self-attention module in its three inference dataflows.
+
+``attention_fp32``      — plain float attention (upper bound).
+``attention_qvit``      — Fig. 1(a): every operand is fake-quantized
+                          (quantize→dequantize) *before* the matmuls, which
+                          therefore run in floating point. This is the QAT
+                          training graph and the Q-ViT baseline.
+``attention_int``       — Fig. 1(b): operand-reordered. Dequantization
+                          scales are delayed past the matmuls (Eq. 2), the
+                          scalar Δ̄_X is cancelled by the following
+                          LayerNorm, QKᵀ uses the Eq. 4 shift-softmax, and
+                          every O(N³) op consumes integer codes. Consumes
+                          the folded parameters built by ``integerize.py``.
+
+``attention_int`` with ``shift=False`` must agree with ``attention_qvit``
+to float-associativity tolerance — that equality *is* the paper's claim
+that the reordering is lossless; the shift-softmax is the only approximant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig, QuantConfig
+from .kernels import ref
+from .quantizers import fake_quant, quantize_int
+
+
+def _split_heads(x, heads: int):
+    b, t, d = x.shape
+    return x.reshape(b, t, heads, d // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def _layernorm(x, p, eps=1e-6):
+    return ref.layernorm(x, p["g"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+
+
+def attention_fp32(p, x, cfg: ModelConfig):
+    q = x @ p["wq"]["w"].T + p["wq"]["b"]
+    k = x @ p["wk"]["w"].T + p["wk"]["b"]
+    v = x @ p["wv"]["w"].T + p["wv"]["b"]
+    q = _layernorm(q, p["lnq"])
+    k = _layernorm(k, p["lnk"])
+    qh, kh, vh = (_split_heads(t, cfg.heads) for t in (q, k, v))
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(float(cfg.head_dim))
+    attn = jnp.exp(scores - scores.max(-1, keepdims=True))
+    attn = attn / attn.sum(-1, keepdims=True)
+    out = _merge_heads(jnp.einsum("bhts,bhsd->bhtd", attn, vh))
+    return out @ p["wo"]["w"].T + p["wo"]["b"]
+
+
+# ---------------------------------------------------------------------------
+
+
+def _fq_linear(x, lin, sx, sw, qcfg: QuantConfig):
+    """Fake-quant linear, Fig. 1(a): dequantized operands, fp matmul."""
+    xq = fake_quant(x, sx, qcfg.bits)
+    wq = fake_quant(lin["w"], sw[:, None] if jnp.ndim(sw) else sw, qcfg.bits)
+    return xq @ wq.T + lin["b"]
+
+
+def attention_qvit(p, q_p, x, cfg: ModelConfig, qcfg: QuantConfig):
+    """Q-ViT-style quantized-but-not-integerized attention (training graph)."""
+    sx = q_p["sx"]
+    q = _fq_linear(x, p["wq"], sx, q_p["sw_q"], qcfg)
+    k = _fq_linear(x, p["wk"], sx, q_p["sw_k"], qcfg)
+    v = _fq_linear(x, p["wv"], sx, q_p["sw_v"], qcfg)
+    q = fake_quant(_layernorm(q, p["lnq"]), q_p["s_q"], qcfg.bits)
+    k = fake_quant(_layernorm(k, p["lnk"]), q_p["s_k"], qcfg.bits)
+    v = fake_quant(v, q_p["s_v"], qcfg.bits)
+    qh, kh, vh = (_split_heads(t, cfg.heads) for t in (q, k, v))
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(float(cfg.head_dim))
+    attn = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    attn = attn / jnp.sum(attn, axis=-1, keepdims=True)
+    attn = fake_quant(attn, q_p["s_attn"], qcfg.attn_bits, signed=False)
+    o = _merge_heads(jnp.einsum("bhts,bhsd->bhtd", attn, vh))
+    o = fake_quant(o, q_p["s_o"], qcfg.bits)
+    return o @ fake_quant(p["wo"]["w"], _pc(q_p["sw_o"]), qcfg.bits).T + p["wo"]["b"]
+
+
+def _pc(sw):
+    return sw[:, None] if jnp.ndim(sw) else sw
+
+
+# ---------------------------------------------------------------------------
+# Integerized path. ``ip`` is the folded parameter dict produced by
+# integerize.fold_attention: integer weight codes plus pre-divided biases
+# and post-scales, exactly the constants the hardware (and the Rust
+# reference) holds.
+# ---------------------------------------------------------------------------
+
+
+def attention_int(ip, x_codes, cfg: ModelConfig, qcfg: QuantConfig, *, shift: bool = True):
+    """Operand-reordered attention over integer activation codes.
+
+    x_codes: (B, T, D) int32 codes of the block input (quantized by Δ̄_X).
+    Returns the float attention output (post out-projection, pre-residual).
+
+    Every matmul below is integer×integer→int32; the only fp work is the
+    O(N²) epilogues the paper leaves in float (LN stats, softmax scale,
+    per-channel post-scales) — Fig. 1(b)'s red datapath.
+    """
+    b, t, d = x_codes.shape
+    x2 = x_codes.reshape(b * t, d)
+
+    # Q/K linears: post-scale by diag(Δ_W) only — the scalar Δ̄_X is
+    # cancelled by the following quantizing LayerNorm (Eq. 2, §IV-A).
+    q_pre = (ref_int_matmul(x2, ip["wq"]["codes"]) + ip["wq"]["bias_folded"]) * ip["wq"]["w_scale"]
+    k_pre = (ref_int_matmul(x2, ip["wk"]["codes"]) + ip["wk"]["bias_folded"]) * ip["wk"]["w_scale"]
+    q_codes = ref.qlayernorm(q_pre, ip["lnq"]["g"], ip["lnq"]["b"], ip["s_q"], qcfg.bits)
+    k_codes = ref.qlayernorm(k_pre, ip["lnk"]["g"], ip["lnk"]["b"], ip["s_k"], qcfg.bits)
+
+    # V linear: full post-scale then requantize with Δ_V (scale absorbed
+    # into the quantizer: codes = round(acc·eff + bias_eff)).
+    v_acc = ref_int_matmul(x2, ip["wv"]["codes"]).astype(jnp.float32)
+    v_codes = jnp.clip(
+        jnp.round((v_acc + ip["wv"]["bias_folded"]) * ip["v_eff"]),
+        qcfg.qmin,
+        qcfg.qmax,
+    )
+
+    qh = _split_heads(q_codes.reshape(b, t, d), cfg.heads)
+    kh = _split_heads(k_codes.reshape(b, t, d), cfg.heads)
+    vh = _split_heads(v_codes.reshape(b, t, d), cfg.heads)
+
+    # QKᵀ int matmul + shift-softmax + attn quantizer (Fig. 4).
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh.astype(jnp.int32), kh.astype(jnp.int32))
+    sm = ref.shift_softmax if shift else ref.exact_softmax
+    p_attn = sm(scores, ip["score_scale"])
+    attn_codes = jnp.clip(jnp.round(p_attn / ip["s_attn"]), 0, qcfg.attn_qmax)
+
+    # attn·V int matmul, scales absorbed into the Δ_O quantizer (Fig. 3).
+    o_acc = jnp.einsum(
+        "bhts,bhsd->bhtd", attn_codes.astype(jnp.int32), vh.astype(jnp.int32)
+    ).astype(jnp.float32)
+    o_codes = jnp.clip(jnp.round(o_acc * ip["o_eff"]), qcfg.qmin, qcfg.qmax)
+
+    # Out-projection: Eq. 2 with Δ̄_X = Δ_O (no LN follows, so the full
+    # post-scale Δ_O·diag(Δ_W) is applied).
+    o2 = _merge_heads(o_codes).reshape(b * t, d)
+    out = (ref_int_matmul(o2, ip["wo"]["codes"]) + ip["wo"]["bias_folded"]) * ip["wo"]["out_scale"]
+    return out.reshape(b, t, d)
+
+
+def ref_int_matmul(x_codes, w_codes):
+    """X_q · W_qᵀ in int32 — the O(N³) op the whole paper is about."""
+    return jnp.matmul(
+        x_codes.astype(jnp.int32),
+        w_codes.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def attention_int_pallas(ip, x_codes, cfg: ModelConfig, qcfg: QuantConfig, *, shift: bool = True):
+    """attention_int with every O(N³) op running through the L1 Pallas kernels.
+
+    Batch-1 (T, D) codes → (T, D) float output. Used for the flagship
+    attention artifact and the kernel-composition tests; must agree with
+    ``attention_int`` exactly (both round the same quantizer arithmetic).
+    """
+    from .kernels import (
+        attn_value_pallas,
+        int_linear_pallas,
+        qk_shift_softmax_pallas,
+        qlayernorm_pallas,
+    )
+
+    t, d = x_codes.shape
+    h, dh = cfg.heads, cfg.head_dim
+
+    # Q/K: Eq. 2 with the scalar Δ̄_X dropped (cancelled by the quantizing
+    # LN): pass step_x=1 and the already-folded bias re-multiplied so the
+    # kernel's internal fold reproduces b/(Δ̄_X·Δ_W).
+    def ln_linear(lin, ln, step):
+        pre = int_linear_pallas(
+            x_codes, lin["codes"], lin["bias_folded"] * lin["w_scale"], 1.0, lin["w_scale"]
+        )
+        return qlayernorm_pallas(pre, ln["g"], ln["b"], float(step), qcfg.bits)
+
+    q_codes = ln_linear(ip["wq"], ip["lnq"], ip["s_q"])
+    k_codes = ln_linear(ip["wk"], ip["lnk"], ip["s_k"])
+
+    v_fp = int_linear_pallas(
+        x_codes,
+        ip["wv"]["codes"],
+        ip["wv"]["bias_folded"] * ip["wv"]["out_scale"],
+        float(ip["sx"]),
+        ip["wv"]["w_scale"],
+    )
+    v_codes = jnp.clip(jnp.round(v_fp / ip["s_v"]), qcfg.qmin, qcfg.qmax).astype(jnp.int32)
+
+    outs = []
+    for head in range(h):
+        sl = slice(head * dh, (head + 1) * dh)
+        attn = qk_shift_softmax_pallas(
+            q_codes[:, sl],
+            k_codes[:, sl],
+            float(ip["score_scale"]),
+            float(ip["s_attn"]),
+            qcfg.attn_bits,
+            shift=shift,
+        )
+        o = attn_value_pallas(
+            attn,
+            v_codes[:, sl],
+            float(ip["s_attn"]),
+            float(ip["s_v"]),
+            float(ip["s_o"]),
+            qcfg.bits,
+        )
+        outs.append(o)
+    o_codes = jnp.concatenate(outs, axis=-1)
+    return int_linear_pallas(
+        o_codes,
+        ip["wo"]["codes"],
+        ip["wo"]["bias_folded"] * ip["wo"]["out_scale"],
+        float(ip["s_o"]),
+        ip["wo"]["w_scale"],
+    )

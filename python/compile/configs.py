@@ -1,0 +1,113 @@
+"""Model / quantization / training configuration.
+
+Plain dataclasses (no external deps) shared by the model, trainer, and AOT
+exporter. The default model is a scaled-down DeiT-style ViT: the paper uses
+DeiT-S (ImageNet-pretrained), which is substituted per DESIGN.md §3 with a
+from-scratch trainable model of the same family. Global-average-pool head
+(no CLS token) keeps the token count a power of two so low-bit systolic /
+Pallas tiles divide evenly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    img_size: int = 32
+    patch_size: int = 4
+    in_chans: int = 3
+    num_classes: int = 10
+    dim: int = 128
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+
+    @property
+    def tokens(self) -> int:
+        side = self.img_size // self.patch_size
+        return side * side
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.in_chans
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization scheme, Q-ViT-style (LSQ learned steps).
+
+    bits: operand width for weights and activations feeding matmuls.
+    per_channel_weights: Δ_W is a per-output-channel vector (paper Eq. 1).
+    per_channel_acts: if True, Δ_X per-channel — the paper's Eq. 2 collapses
+      this to a single Δ̄_X to enable the reorder; we keep the flag for the
+      ablation bench (A1 in DESIGN.md).
+    shift_exp: use the Eq. 4 base-2 shift approximation in softmax
+      (integerized path); False = exact exp (used to verify the reorder
+      algebra is lossless).
+    attn_bits: width of the quantized attention probabilities (Δ_ATTN).
+    """
+
+    bits: int = 3
+    attn_bits: int = 3
+    per_channel_weights: bool = True
+    per_channel_acts: bool = False
+    shift_exp: bool = True
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def attn_qmax(self) -> int:
+        # attention probabilities are non-negative: unsigned levels
+        return 2 ** self.attn_bits - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Two-phase QAT recipe (paper §V-A, scaled down per DESIGN.md §3)."""
+
+    batch_size: int = 32
+    base_lr: float = 2e-3
+    # paper: 300 epochs each phase with LAMB + cosine; we keep the optimizer
+    # and schedule shape but shrink the step counts for the build budget.
+    last_layer_steps: int = 150
+    finetune_steps: int = 600
+    warmup_steps: int = 30
+    seed: int = 0
+    train_samples: int = 4096
+    eval_samples: int = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    """Synthetic CIFAR-like dataset (DESIGN.md §3 substitution)."""
+
+    img_size: int = 32
+    channels: int = 3
+    num_classes: int = 10
+    seed: int = 1234
+    noise: float = 0.3
+    max_shift: int = 3
+
+
+TINY = ModelConfig()
+# An even smaller config used by unit tests so interpret-mode Pallas stays fast.
+TEST = ModelConfig(img_size=16, patch_size=4, dim=32, depth=2, heads=2)
+
+
+def bit_variants() -> Tuple[int, ...]:
+    """Bit-widths swept by Table II (2/3-bit ours vs 8-bit I-ViT-class)."""
+    return (2, 3, 8)

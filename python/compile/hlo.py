@@ -1,0 +1,34 @@
+"""Lower a jitted JAX function to HLO **text** for the Rust PJRT loader.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big weight
+    # constants as "{...}", which the HLO text parser silently reads back as
+    # zeros — the model would run but with empty weights.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def export(fn, example_args, out_path: str) -> int:
+    text = to_hlo_text(fn, *example_args)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)

@@ -1,0 +1,126 @@
+"""Post-training integerization: fold scales per Eq. 2 (the paper's §III).
+
+This is a pure parameter transformation — no data, no retraining. Given QAT
+parameters (fp weights + learned LSQ steps) it emits the constants the
+Fig. 1(b) datapath holds:
+
+  * integer weight codes          W_q = clip(round(W/Δ_W))
+  * folded biases                 b̃  = b / (Δ̄_X · Δ_W)
+  * post-scales                   Δ̄_X·diag(Δ_W), or diag(Δ_W) alone where
+                                  the scalar cancels into a LayerNorm
+  * absorbed quantizer scales     e.g. (Δ_attn·Δ_V)/Δ_O for attn·V
+
+The same folded constants are exported to ``artifacts/`` and loaded by the
+Rust ``quant``/``model`` modules, so this file defines the cross-language
+integerized-checkpoint contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, QuantConfig
+from .quantizers import quantize_int
+
+
+def collapse_act_step(sx) -> jnp.ndarray:
+    """Per-channel Δ_X → scalar Δ̄_X (the Eq. 2 approximation).
+
+    The paper replaces diag(Δ_X) with Δ̄_X·I to make the reorder legal; we
+    use the mean step (ablated against per-channel in bench A1).
+    """
+    sx = jnp.asarray(sx)
+    return jnp.mean(sx) if sx.ndim else sx
+
+
+def fold_linear(lin, sx_bar, sw, qcfg: QuantConfig):
+    """Eq. 2 constants for one linear layer."""
+    codes = quantize_int(lin["w"], sw[:, None] if jnp.ndim(sw) else sw, qcfg.bits).astype(
+        jnp.int32
+    )
+    sw_vec = jnp.broadcast_to(jnp.asarray(sw), (lin["w"].shape[0],))
+    return {
+        "codes": codes,
+        "bias_folded": lin["b"] / (sx_bar * sw_vec),
+        "w_scale": sw_vec,  # diag(Δ_W): post-scale when Δ̄_X cancels in LN
+        "out_scale": sx_bar * sw_vec,  # full post-scale Δ̄_X·diag(Δ_W)
+    }
+
+
+def fold_attention(p, q_p, cfg: ModelConfig, qcfg: QuantConfig):
+    """Folded constants for one attention block (consumed by attention_int)."""
+    sx = collapse_act_step(q_p["sx"])
+    ip = {
+        "sx": sx,
+        "wq": fold_linear(p["wq"], sx, q_p["sw_q"], qcfg),
+        "wk": fold_linear(p["wk"], sx, q_p["sw_k"], qcfg),
+        "wv": fold_linear(p["wv"], sx, q_p["sw_v"], qcfg),
+        "wo": fold_linear(p["wo"], q_p["s_o"], q_p["sw_o"], qcfg),
+        "lnq": p["lnq"],
+        "lnk": p["lnk"],
+        "s_q": q_p["s_q"],
+        "s_k": q_p["s_k"],
+        "s_v": q_p["s_v"],
+        "s_attn": q_p["s_attn"],
+        "s_o": q_p["s_o"],
+        # Δ_V quantizer with the linear's scales absorbed (codes =
+        # round((acc+b̃)·v_eff)):
+        "v_eff": sx * jnp.broadcast_to(jnp.asarray(q_p["sw_v"]), (cfg.dim,)) / q_p["s_v"],
+        # QKᵀ softmax input scale  s = Δ_Q·Δ_K/√d  (Eq. 3):
+        "score_scale": q_p["s_q"] * q_p["s_k"] / jnp.sqrt(float(cfg.head_dim)),
+        # attn·V output quantizer with both input scales absorbed (Fig. 3):
+        "o_eff": q_p["s_attn"] * q_p["s_v"] / q_p["s_o"],
+    }
+    return ip
+
+
+def fold_mlp(p, q_p, qcfg: QuantConfig):
+    sx1 = collapse_act_step(q_p["sx1"])
+    return {
+        "sx1": sx1,
+        "sx2": q_p["sx2"],
+        "fc1": fold_linear(p["w1"], sx1, q_p["sw1"], qcfg),
+        "fc2": fold_linear(p["w2"], q_p["sx2"], q_p["sw2"], qcfg),
+    }
+
+
+def integerize(params, cfg: ModelConfig, qcfg: QuantConfig):
+    """Whole-model folding. Non-attention/MLP parts stay fp32 (paper §III)."""
+    return {
+        "patch_embed": params["patch_embed"],
+        "pos_embed": params["pos_embed"],
+        "blocks": [
+            {
+                "ln1": blk["ln1"],
+                "attn": fold_attention(blk["attn"], blk["q"]["attn"], cfg, qcfg),
+                "ln2": blk["ln2"],
+                "mlp": fold_mlp(blk["mlp"], blk["q"]["mlp"], qcfg),
+            }
+            for blk in params["blocks"]
+        ],
+        "ln_f": params["ln_f"],
+        "head": params["head"],
+    }
+
+
+def lowbit_size_bytes(params, cfg: ModelConfig, qcfg: QuantConfig) -> int:
+    """Checkpoint size with matmul weights stored at qcfg.bits (Table II)."""
+    low_elems = 0
+    fp_elems = 0
+    import jax
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if "w" in names and any(n in names for n in ("wq", "wk", "wv", "wo", "w1", "w2", "mlp", "attn")):
+            if leaf.ndim == 2:
+                low_elems += leaf.size
+                continue
+        fp_elems += leaf.size
+    return (low_elems * qcfg.bits + fp_elems * 32) // 8
+
+
+def to_numpy_tree(tree):
+    import jax
+
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)

@@ -1,0 +1,17 @@
+"""L1 — Pallas kernels for the integerized self-attention hot path.
+
+All kernels run ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is anchored to the pure-jnp oracles in ``ref``.
+"""
+
+from .attn_value import attn_value_pallas
+from .int_linear import int_linear_pallas
+from .qlayernorm import qlayernorm_pallas
+from .shift_softmax import qk_shift_softmax_pallas
+
+__all__ = [
+    "attn_value_pallas",
+    "int_linear_pallas",
+    "qlayernorm_pallas",
+    "qk_shift_softmax_pallas",
+]

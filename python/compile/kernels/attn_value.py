@@ -1,0 +1,66 @@
+"""Pallas kernel: requantizing matmul  W_attn · V  (paper Fig. 3, §IV-B).
+
+"Since this matrix multiplication result is passed onto a quantizer, it can
+be performed at lower bit precision by absorbing the input scales for both
+operands within the quantizer." — the kernel multiplies integer attention
+codes by integer V codes (int32 accumulate) and re-quantizes in the epilogue
+with the effective scale (Δ_attn·Δ_V)/Δ_out, never materialising a
+dequantized matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(eff_scale: float, out_bits: int):
+    qmin, qmax = -(2 ** (out_bits - 1)), 2 ** (out_bits - 1) - 1
+
+    def kernel(a_ref, v_ref, o_ref):
+        acc = jax.lax.dot_general(
+            a_ref[...],
+            v_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        o_ref[...] = jnp.clip(
+            jnp.round(acc.astype(jnp.float32) * eff_scale), qmin, qmax
+        ).astype(jnp.int32)
+
+    return kernel
+
+
+def attn_value_pallas(
+    attn_q,
+    v_q,
+    step_attn: float,
+    step_v: float,
+    step_out: float,
+    out_bits: int,
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+):
+    """(M,N) attn codes × (N,D) V codes → (M,D) signed ``out_bits`` codes.
+
+    Matches ``ref.attn_value`` (first return value).
+    """
+    m, n = attn_q.shape
+    d = v_q.shape[1]
+    bm, bd = min(block_m, m), min(block_n, d)
+    assert m % bm == 0 and d % bd == 0, (m, d, bm, bd)
+    eff = float(step_attn) * float(step_v) / float(step_out)
+    kern = _make_kernel(eff, int(out_bits))
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, d // bd),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.int32),
+        interpret=True,
+    )(attn_q.astype(jnp.int32), v_q.astype(jnp.int32))

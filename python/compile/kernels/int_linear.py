@@ -1,0 +1,72 @@
+"""Pallas kernel for the integerized linear layer (paper Eq. 2 / Fig. 3).
+
+The systolic linear array of the paper streams low-bit operand codes through
+a PE grid and applies the folded bias + post-scale at the array boundary.
+The TPU-shaped analogue (DESIGN.md §6): a tiled matmul whose BlockSpec
+expresses the HBM→VMEM streaming schedule, int8-carried operands accumulated
+in int32 (`preferred_element_type`), and the Eq. 2 epilogue fused into the
+same kernel so no fp multiply touches the operands before the MAC.
+
+Run with ``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, fb_ref, sc_ref, o_ref):
+    """One (block_m × block_n) output tile.
+
+    x_ref: (bm, K) int32 codes — the activation stream.
+    w_ref: (bn, K) int32 codes — the stationary weight tile.
+    fb_ref: (1, bn) folded bias  b/(Δ̄_X·Δ_W).
+    sc_ref: (1, bn) post-scale  Δ̄_X·Δ_W  (paper: diag(Δ_W)·Δ̄_X).
+    """
+    acc = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = (acc.astype(jnp.float32) + fb_ref[...]) * sc_ref[...]
+
+
+def int_linear_pallas(x_q, w_q, bias, step_x, step_w, *, block_m: int = 32, block_n: int = 32):
+    """Integerized linear: (M,K) codes × (N,K) codes → (M,N) float32.
+
+    Equivalent to ``ref.int_linear`` (and hence to dequantize-then-matmul).
+    ``step_x`` is the collapsed scalar Δ̄_X, ``step_w`` the per-channel Δ_W.
+    """
+    m, k = x_q.shape
+    n = w_q.shape[0]
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    scale = jnp.asarray(step_x * step_w, jnp.float32).reshape(1, n)
+    folded_bias = (jnp.asarray(bias, jnp.float32) / (step_x * step_w)).reshape(1, n)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x_q.astype(jnp.int32), w_q.astype(jnp.int32), folded_bias, scale)
+
+
+def vmem_bytes(m: int, k: int, n: int, block_m: int, block_n: int) -> int:
+    """Estimated VMEM residency of one grid step (perf model, DESIGN.md §8)."""
+    bm, bn = min(block_m, m), min(block_n, n)
+    x = bm * k * 4
+    w = bn * k * 4
+    epi = 2 * bn * 4
+    out = bm * bn * 4
+    return x + w + epi + out

@@ -1,0 +1,71 @@
+"""Pallas kernel: quantizing LayerNorm, division/sqrt-free (Fig. 5 / Eq. 5).
+
+The hardware computes row statistics with the Eq. 5 incremental (Welford)
+PE rows, then resolves each output level with comparators that never divide
+or take a square root: LN(x) > s_k is decided as
+``[(x-μ)·γ]² vs σ²·(s_k-β)²`` plus sign logic. The kernel evaluates exactly
+that comparator bank — the output integer is qmin + (number of boundaries
+crossed) — so the test against ``ref.qlayernorm`` (the round/clip form)
+checks the paper's central hardware identity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(step: float, bits: int, eps: float):
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    nk = qmax - qmin  # number of boundaries
+
+    def kernel(x_ref, g_ref, b_ref, o_ref):
+        # Boundary ladder s_k = (k-½)Δ, k = qmin+1 … qmax (e.g. -3.5Δ…2.5Δ
+        # at 3 bits). Built with iota so Pallas doesn't capture a constant.
+        ks = jax.lax.iota(jnp.float32, nk) + float(qmin + 1)
+        s_k = (ks - 0.5) * step
+        x = x_ref[...]  # (bm, D)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True) + eps
+        u = (x - mu) * g_ref[...]  # (bm, D)
+        tk = s_k[None, None, :] - b_ref[...].reshape(1, -1, 1)  # (1, D, K)
+        u_ = u[..., None]  # (bm, D, 1)
+        u_sq = u_ * u_
+        t_sq = var[..., None] * tk * tk
+        gt = jnp.where(
+            (u_ >= 0) & (tk < 0),
+            True,
+            jnp.where(
+                (u_ < 0) & (tk >= 0),
+                False,
+                jnp.where(u_ >= 0, u_sq > t_sq, u_sq < t_sq),
+            ),
+        )
+        o_ref[...] = (qmin + jnp.sum(gt.astype(jnp.int32), axis=-1)).astype(jnp.int32)
+
+    return kernel
+
+
+def qlayernorm_pallas(x, gamma, beta, step: float, bits: int, *, block_m: int = 32, eps: float = 1e-6):
+    """(M,D) float32 → (M,D) signed ``bits`` codes = quantize(LN(x)).
+
+    Matches ``ref.qlayernorm`` everywhere off the (measure-zero) boundary
+    ties; matches ``ref.qlayernorm_comparator`` exactly.
+    """
+    m, d = x.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    kern = _make_kernel(float(step), int(bits), float(eps))
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.float32), gamma.reshape(1, d), beta.reshape(1, d))

@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematically transparent statement of what the
+corresponding kernel in this package must compute. pytest asserts
+``assert_allclose(kernel(...), ref(...))`` under hypothesis sweeps, and the
+Rust ``quant``/``sim`` modules are tested against exported cases generated
+from these same functions, so this file anchors the whole stack.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Eq. 2 — integerized linear layer.
+# --------------------------------------------------------------------------
+
+
+def int_linear(x_q, w_q, bias, step_x, step_w):
+    """Y = [X_q W_qᵀ + b/(Δ̄_X·Δ_W)] · Δ̄_X · diag(Δ_W)   (paper Eq. 2).
+
+    x_q: (..., K) integer codes carried in an int dtype or float-valued ints.
+    w_q: (N, K) integer weight codes.  bias: (N,) float.
+    step_x: scalar Δ̄_X.  step_w: (N,) per-channel Δ_W.
+    Returns float32 (..., N): identical to dequantize-then-matmul.
+    """
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+    folded_bias = bias / (step_x * step_w)
+    return (acc.astype(jnp.float32) + folded_bias) * (step_x * step_w)
+
+
+def dequant_linear(x_q, w_q, bias, step_x, step_w):
+    """The Fig. 1(a) reference path: dequantize operands, then fp matmul."""
+    x = x_q.astype(jnp.float32) * step_x
+    w = w_q.astype(jnp.float32) * step_w[:, None]
+    return jnp.matmul(x, w.T) + bias
+
+
+# --------------------------------------------------------------------------
+# Eq. 4 — base-2 shift exponential and the softmax built from it.
+# --------------------------------------------------------------------------
+
+LOG2E = 1.4426950408889634
+
+
+def shift_exp(x):
+    """exp(x) ≈ (1+r) · 2^⌊x·log2(e)⌋ with r the fractional exponent residue.
+
+    This is the float-domain statement of the paper's ``(r+1) << ⌊·⌋``
+    hardware shift (Eq. 4): 2^r is linearised to (1+r) on r∈[0,1), the
+    classic Mitchell approximation (max rel. error ≈ 5.7%).
+    """
+    t = x * LOG2E
+    fl = jnp.floor(t)
+    r = t - fl
+    return (1.0 + r) * jnp.exp2(fl)
+
+
+def shift_softmax(scores, scale):
+    """Row softmax over the last axis using shift_exp, max-subtracted."""
+    z = scores.astype(jnp.float32) * scale
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = shift_exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def exact_softmax(scores, scale):
+    z = scores.astype(jnp.float32) * scale
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def qk_shift_softmax(q_q, k_q, scale, step_attn, attn_bits: int, shift: bool = True):
+    """Fig. 4 module: int QKᵀ → (shift-)softmax → unsigned attn quantizer.
+
+    q_q: (M, D) int codes, k_q: (N, D) int codes. ``scale`` already contains
+    Δ_Q·Δ_K/√d. Returns (attn_q, scores): attn codes in [0, 2^attn_bits-1]
+    and the raw int32 score matrix (exposed for cross-checking the sim).
+    """
+    scores = jnp.matmul(
+        q_q.astype(jnp.int32), k_q.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+    p = shift_softmax(scores, scale) if shift else exact_softmax(scores, scale)
+    qmax = 2**attn_bits - 1
+    attn_q = jnp.clip(jnp.round(p / step_attn), 0, qmax)
+    return attn_q, scores
+
+
+# --------------------------------------------------------------------------
+# Fig. 3 — requantizing matmul for  W_attn · V.
+# --------------------------------------------------------------------------
+
+
+def attn_value(attn_q, v_q, step_attn, step_v, step_out, out_bits: int):
+    """Int matmul attn_q·V_q; input scales absorbed into the output quantizer.
+
+    The hardware never multiplies by Δ_attn·Δ_V — the quantizer thresholds
+    are pre-divided instead. Numerically: q_out = clip(round(acc·(Δa·Δv)/Δo)).
+    Returns (out_q, acc).
+    """
+    acc = jnp.matmul(
+        attn_q.astype(jnp.int32), v_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    eff = (step_attn * step_v) / step_out
+    qmin, qmax = -(2 ** (out_bits - 1)), 2 ** (out_bits - 1) - 1
+    out_q = jnp.clip(jnp.round(acc.astype(jnp.float32) * eff), qmin, qmax)
+    return out_q, acc
+
+
+# --------------------------------------------------------------------------
+# Eq. 5 / Fig. 5 — quantizing LayerNorm.
+# --------------------------------------------------------------------------
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def qlayernorm(x, gamma, beta, step, bits: int, eps: float = 1e-6):
+    """quantize(LN(x)) — the functional spec of the Fig. 5 comparator array."""
+    y = layernorm(x, gamma, beta, eps)
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(y / step), qmin, qmax)
+
+
+def qlayernorm_comparator(x, gamma, beta, step, bits: int, eps: float = 1e-6):
+    """The division/sqrt-free form actually wired in Fig. 5(b).
+
+    Output level for element x is  qmin + #{k : LN(x) > s_k}, with
+    boundaries s_k = (k - ½)·Δ, k = qmin+1 … qmax (e.g. -3.5Δ…2.5Δ at
+    3 bits, the sequence quoted in §IV-B). The comparison
+    LN(x) > s_k  ⟺  (x-μ)·γ > (s_k-β)·σ  is evaluated without σ = √(σ²):
+    square both sides, compare [(x-μ)·γ]² vs σ²·(s_k-β)², and recover the
+    ordering with sign logic (the Fig. 5 sgn block). Multiplying by γ on
+    the lhs instead of dividing the threshold keeps the rule correct for
+    any sign of γ and matches the division-free datapath.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True) + eps
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    ks = jnp.arange(qmin + 1, qmax + 1, dtype=jnp.float32)
+    s_k = (ks - 0.5) * step
+    u = (x - mu) * gamma  # (..., D)
+    t = s_k - beta[..., None]  # (D, K)
+    u_ = u[..., None]  # (..., D, 1)
+    var_ = var[..., None]  # (..., 1, 1)
+    u_sq = u_ * u_
+    t_sq = var_ * t * t
+    gt = jnp.where(
+        (u_ >= 0) & (t < 0),
+        True,
+        jnp.where(
+            (u_ < 0) & (t >= 0),
+            False,
+            jnp.where(u_ >= 0, u_sq > t_sq, u_sq < t_sq),
+        ),
+    )
+    return (qmin + jnp.sum(gt, axis=-1)).astype(jnp.float32)
+
+
+def welford(x):
+    """Eq. 5 incremental mean/variance (population variance, matches jnp.var).
+
+    Implemented as the literal recurrence so the oracle exercises the same
+    update order the systolic μ/σ² PE rows use.
+    """
+    import jax
+
+    def body(carry, xi):
+        i, mu, m2 = carry
+        i = i + 1.0
+        d = xi - mu
+        mu = mu + d / i
+        m2 = m2 + d * (xi - mu)
+        return (i, mu, m2), None
+
+    init = (
+        jnp.zeros(x.shape[:-1], x.dtype),
+        jnp.zeros(x.shape[:-1], x.dtype),
+        jnp.zeros(x.shape[:-1], x.dtype),
+    )
+    (n, mu, m2), _ = jax.lax.scan(body, init, jnp.moveaxis(x, -1, 0))
+    return mu, m2 / n

@@ -1,0 +1,86 @@
+"""Pallas kernel: QKᵀ int matmul with embedded shift-softmax (Fig. 4 / Eq. 4).
+
+The paper fuses exponentiation into the matmul array: each PE turns its MAC
+result into ``(r+1) << ⌊s·log2(e)·acc⌋`` while a systolic adder row carries
+the running Σexp to the row edge, where the quantizer thresholds are scaled
+by the sum. The kernel mirrors that: one grid step owns a row-block of Q and
+the *entire* K (the row sum is a hardware-global along the row, so the row
+axis cannot be tiled without a second pass), computes the int32 score tile,
+applies the Mitchell shift-exp, normalises by the row sum, and emits
+attention codes quantized to ``attn_bits``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG2E = 1.4426950408889634
+
+
+def _shift_exp(z):
+    """(1+r)·2^⌊t⌋ for t = z·log2(e) — Eq. 4 in float form."""
+    t = z * LOG2E
+    fl = jnp.floor(t)
+    return (1.0 + (t - fl)) * jnp.exp2(fl)
+
+
+def _make_kernel(scale: float, step_attn: float, attn_bits: int, shift: bool):
+    qmax = 2**attn_bits - 1
+
+    def kernel(q_ref, k_ref, o_ref):
+        scores = jax.lax.dot_general(
+            q_ref[...],
+            k_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        z = scores.astype(jnp.float32) * scale
+        z = z - jnp.max(z, axis=-1, keepdims=True)
+        e = _shift_exp(z) if shift else jnp.exp(z)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o_ref[...] = jnp.clip(jnp.round(p / step_attn), 0, qmax).astype(jnp.int32)
+
+    return kernel
+
+
+def qk_shift_softmax_pallas(
+    q_q,
+    k_q,
+    scale: float,
+    step_attn: float,
+    attn_bits: int,
+    *,
+    shift: bool = True,
+    block_m: int = 32,
+):
+    """(M,D) × (N,D) int codes → (M,N) unsigned attention codes.
+
+    ``scale`` already folds Δ_Q·Δ_K/√d; matches ``ref.qk_shift_softmax``.
+    """
+    m, d = q_q.shape
+    n = k_q.shape[0]
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    kern = _make_kernel(float(scale), float(step_attn), int(attn_bits), bool(shift))
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            # K is row-global: the Σexp accumulator needs every column.
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(q_q.astype(jnp.int32), k_q.astype(jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def flops_per_row(n: int, d: int) -> int:
+    """MACs + exp/normalise ops for one attention row (perf model input)."""
+    return 2 * n * d + 6 * n

@@ -1,0 +1,168 @@
+"""Parameter initialisation and pytree utilities for the ViT.
+
+Parameters live in plain nested dicts (no flax in this image). Weight
+matrices use the (out_features, in_features) = (N, K) layout throughout —
+the same layout the paper's Eq. 1 writes as W_qᵀ with per-output-channel
+step vector Δ_W, and the layout the Rust side consumes.
+
+Quantizer step sizes (LSQ) are part of the trainable tree under the
+``"q"`` key of each module so QAT learns them jointly with the weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, QuantConfig
+from .quantizers import init_step_from
+
+
+def _linear(key, n_out: int, n_in: int):
+    w = jax.random.normal(key, (n_out, n_in), jnp.float32) * (2.0 / (n_in + n_out)) ** 0.5
+    return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def _ln(dim: int):
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def _qsteps(block_params, cfg: ModelConfig, qcfg: QuantConfig):
+    """Initial LSQ steps for one encoder block (refined during QAT)."""
+    a = block_params["attn"]
+    pc = qcfg.per_channel_weights
+    act_shape = (cfg.dim,) if qcfg.per_channel_acts else ()
+    one = jnp.ones(act_shape, jnp.float32) if act_shape else jnp.float32(1.0)
+    return {
+        "attn": {
+            "sx": 0.1 * one,  # Δ_X of the LN1 output feeding Q/K/V linears
+            "sw_q": init_step_from(a["wq"]["w"], qcfg.bits, per_channel=pc),
+            "sw_k": init_step_from(a["wk"]["w"], qcfg.bits, per_channel=pc),
+            "sw_v": init_step_from(a["wv"]["w"], qcfg.bits, per_channel=pc),
+            "sw_o": init_step_from(a["wo"]["w"], qcfg.bits, per_channel=pc),
+            "s_q": jnp.float32(0.5),  # post-LN Q quantizer
+            "s_k": jnp.float32(0.5),
+            "s_v": jnp.float32(0.1),
+            "s_attn": jnp.float32(1.0 / qcfg.attn_qmax),
+            "s_o": jnp.float32(0.1),  # quantizer feeding the out-projection
+            "sx_o": jnp.float32(0.1),
+        },
+        "mlp": {
+            "sx1": 0.1 * one,
+            "sw1": init_step_from(block_params["mlp"]["w1"]["w"], qcfg.bits, per_channel=pc),
+            "sx2": jnp.float32(0.1),
+            "sw2": init_step_from(block_params["mlp"]["w2"]["w"], qcfg.bits, per_channel=pc),
+        },
+    }
+
+
+def init_params(key, cfg: ModelConfig, qcfg: QuantConfig):
+    keys = jax.random.split(key, 4 + 8 * cfg.depth)
+    d, h = cfg.dim, cfg.mlp_ratio * cfg.dim
+    params = {
+        "patch_embed": _linear(keys[0], d, cfg.patch_dim),
+        "pos_embed": jax.random.normal(keys[1], (cfg.tokens, d), jnp.float32) * 0.02,
+        "blocks": [],
+        "ln_f": _ln(d),
+        "head": _linear(keys[2], cfg.num_classes, d),
+    }
+    for i in range(cfg.depth):
+        ks = keys[4 + 8 * i : 4 + 8 * (i + 1)]
+        blk = {
+            "ln1": _ln(d),
+            "attn": {
+                "wq": _linear(ks[0], d, d),
+                "wk": _linear(ks[1], d, d),
+                "wv": _linear(ks[2], d, d),
+                "wo": _linear(ks[3], d, d),
+                "lnq": _ln(d),
+                "lnk": _ln(d),
+            },
+            "ln2": _ln(d),
+            "mlp": {"w1": _linear(ks[4], h, d), "w2": _linear(ks[5], d, h)},
+        }
+        blk["q"] = _qsteps(blk, cfg, qcfg)
+        params["blocks"].append(blk)
+    return params
+
+
+def reinit_qsteps(params, cfg: ModelConfig, qcfg: QuantConfig):
+    """Re-derive LSQ steps for a new bit-width from the current weights.
+
+    Used when switching a pretrained fp32 checkpoint into QAT at a given
+    precision (the paper initialises from the DeiT checkpoint, then trains
+    the quantizers jointly).
+    """
+    out = dict(params)
+    out["blocks"] = []
+    for blk in params["blocks"]:
+        b = dict(blk)
+        b["q"] = _qsteps(blk, cfg, qcfg)
+        out["blocks"].append(b)
+    return out
+
+
+def flatten_tree(tree, prefix="") -> dict:
+    """Pytree → {dotted-path: np.ndarray} for npz checkpointing."""
+    import numpy as np
+
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_tree(v, f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_tree(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_into(template, flat: dict):
+    """Fill a template pytree (from init_params) with flattened leaves."""
+    import jax.numpy as jnp
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}.") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, f"{prefix}{i}.") for i, v in enumerate(node)]
+        key = prefix[:-1]
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        return jnp.asarray(flat[key])
+
+    return walk(template)
+
+
+def save_npz(path, tree):
+    import numpy as np
+
+    np.savez(path, **flatten_tree(tree))
+
+
+def load_npz(path, template):
+    import numpy as np
+
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return unflatten_into(template, flat)
+
+
+def tree_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes_lowbit(params, qcfg: QuantConfig, cfg: ModelConfig) -> int:
+    """Storage estimate with matmul weights at qcfg.bits (Table II 'Size')."""
+    total_bits = 0
+    for x in jax.tree_util.tree_leaves(params):
+        total_bits += x.size * 32
+    low = 0
+    for blk in params["blocks"]:
+        for m in ("wq", "wk", "wv", "wo"):
+            low += blk["attn"][m]["w"].size
+        low += blk["mlp"]["w1"]["w"].size + blk["mlp"]["w2"]["w"].size
+    total_bits -= low * 32
+    total_bits += low * qcfg.bits
+    return total_bits // 8

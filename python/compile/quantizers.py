@@ -1,0 +1,100 @@
+"""LSQ-style uniform quantizers with straight-through gradients.
+
+The paper builds on Q-ViT [3], whose quantizers are learned-step-size
+(LSQ-like) symmetric uniform quantizers. Three views of the same quantizer
+are used across the stack:
+
+  * ``quantize_int``   — the integer code  q = clip(round(x/Δ), qmin, qmax).
+  * ``fake_quant``     — q·Δ, the dequantized value used during QAT and in
+                         the Fig. 1(a) "qvit" inference path.
+  * integer-carried    — the Fig. 1(b) path keeps ``q`` and folds Δ into a
+                         post-matmul scale (see ``integerize.py``).
+
+Gradients follow LSQ (Esser et al. 2020): STE on x inside the clip range,
+and the step Δ receives  ∂q̂/∂Δ = (q - x/Δ) inside the range, qmin/qmax
+outside, scaled by g = 1/sqrt(numel·qmax).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def int_range(bits: int, signed: bool = True):
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def quantize_int(x, step, bits: int, signed: bool = True):
+    """Integer codes. ``step`` broadcasts (scalar or per-channel on axis -1)."""
+    qmin, qmax = int_range(bits, signed)
+    return jnp.clip(jnp.round(x / step), qmin, qmax)
+
+
+def dequantize(q, step):
+    return q * step
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_quant(x, step, bits: int, signed: bool = True):
+    """Quantize-dequantize with LSQ gradients (QAT workhorse)."""
+    return quantize_int(x, step, bits, signed) * step
+
+
+def _fq_fwd(x, step, bits, signed):
+    qmin, qmax = int_range(bits, signed)
+    v = x / step
+    q = jnp.clip(jnp.round(v), qmin, qmax)
+    return q * step, (v, q, step)
+
+
+def _fq_bwd(bits, signed, res, g):
+    qmin, qmax = int_range(bits, signed)
+    v, q, step = res
+    inside = (v >= qmin) & (v <= qmax)
+    gx = jnp.where(inside, g, 0.0)
+    # LSQ step gradient: (q - v) inside, clip level outside.
+    dstep_elem = jnp.where(inside, q - v, jnp.clip(v, qmin, qmax))
+    gscale = 1.0 / jnp.sqrt(jnp.asarray(v.size, v.dtype) * max(qmax, 1))
+    dstep = g * dstep_elem * gscale
+    # Reduce to the (broadcast) shape of step — scalar or per-channel on
+    # any axis (weights use (N,1), activations (D,)).
+    sshape = jnp.shape(step)
+    if len(sshape) == 0 or step.size == 1:
+        dstep = jnp.sum(dstep).reshape(sshape)
+    else:
+        pad = (1,) * (dstep.ndim - len(sshape)) + sshape
+        axes = tuple(i for i, s in enumerate(pad) if s == 1)
+        dstep = jnp.sum(dstep, axis=axes, keepdims=True).reshape(sshape)
+    return gx, dstep
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def init_step_from(x, bits: int, signed: bool = True, per_channel: bool = False, axis: int = 0):
+    """LSQ init: Δ = 2·mean(|x|)/sqrt(qmax).
+
+    ``per_channel`` keeps ``axis`` (default 0 — the out-channel axis of an
+    (N, K) weight, the paper's Δ_W vector) and reduces everything else.
+    """
+    _, qmax = int_range(bits, signed)
+    qmax = max(qmax, 1)
+    if per_channel:
+        axes = tuple(a for a in range(x.ndim) if a != axis)
+        m = jnp.mean(jnp.abs(x), axis=axes)
+    else:
+        m = jnp.mean(jnp.abs(x))
+    return jnp.maximum(2.0 * m / jnp.sqrt(jnp.asarray(float(qmax))), 1e-6)
+
+
+def calibrate_step_minmax(x, bits: int, signed: bool = True):
+    """Min-max calibration used for activation steps before QAT refines them."""
+    qmin, qmax = int_range(bits, signed)
+    if signed:
+        return jnp.maximum(jnp.max(jnp.abs(x)) / max(qmax, 1), 1e-6)
+    return jnp.maximum(jnp.max(x) / max(qmax, 1), 1e-6)

@@ -1,0 +1,37 @@
+"""Binary tensor interchange format (``IVT1``) between python and rust.
+
+No serde/npz on the Rust side of this image, so the format is deliberately
+trivial:  magic ``IVT1`` | u8 dtype | u8 ndim | u16 zero | ndim×u32 dims |
+raw little-endian data.  ``rust/src/util/tensorio.rs`` implements the
+mirror reader/writer; both sides are covered by round-trip tests.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"IVT1"
+DTYPES = {0: np.float32, 1: np.int32, 2: np.int8, 3: np.uint8, 4: np.int64}
+CODES = {np.dtype(v): k for k, v in DTYPES.items()}
+
+
+def write_tensor(path, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    code = CODES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BBH", code, arr.ndim, 0))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read_tensor(path) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r} in {path}"
+        code, ndim, _ = struct.unpack("<BBH", f.read(4))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        data = np.frombuffer(f.read(), dtype=DTYPES[code])
+    return data.reshape(dims)

@@ -1,0 +1,119 @@
+"""DeiT-style ViT with three inference dataflows (fp32 / qvit / integerized).
+
+The encoder block follows the paper's Fig. 1 graph: pre-LN, quantized
+Q/K/V linears, quantizing LayerNorm on Q and K, quantized attention
+probabilities, quantized out-projection, then a quantized two-layer MLP.
+Patch embedding, positional embedding, final LN and the classifier head
+remain fp32 in every mode (the paper integerizes the self-attention module;
+first/last layers stay high precision — §III).
+
+Head style is global-average-pool (no CLS token) so the token count is a
+power of two and systolic / Pallas tiles divide evenly (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention
+from .configs import ModelConfig, QuantConfig
+from .kernels import ref
+from .quantizers import fake_quant, quantize_int
+
+
+def patchify(images, cfg: ModelConfig):
+    """(B, H, W, C) → (B, tokens, patch_dim)."""
+    b = images.shape[0]
+    p = cfg.patch_size
+    s = cfg.img_size // p
+    x = images.reshape(b, s, p, s, p, cfg.in_chans)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, s * s, p * p * cfg.in_chans)
+
+
+def _embed(params, images, cfg: ModelConfig):
+    x = patchify(images, cfg)
+    x = x @ params["patch_embed"]["w"].T + params["patch_embed"]["b"]
+    return x + params["pos_embed"][None]
+
+
+def _head(params, x):
+    x = jnp.mean(x, axis=1)  # GAP over tokens
+    x = ref.layernorm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["head"]["w"].T + params["head"]["b"]
+
+
+def _mlp_fp32(p, x):
+    h = x @ p["w1"]["w"].T + p["w1"]["b"]
+    h = jax.nn.gelu(h, approximate=False)
+    return h @ p["w2"]["w"].T + p["w2"]["b"]
+
+
+def _mlp_qvit(p, q_p, x, qcfg: QuantConfig):
+    h = attention._fq_linear(x, p["w1"], q_p["sx1"], q_p["sw1"], qcfg)
+    h = jax.nn.gelu(h, approximate=False)
+    h = fake_quant(h, q_p["sx2"], qcfg.bits)
+    w2 = fake_quant(p["w2"]["w"], attention._pc(q_p["sw2"]), qcfg.bits)
+    return h @ w2.T + p["w2"]["b"]
+
+
+def _mlp_int(ip, x_codes, qcfg: QuantConfig):
+    """Integerized MLP: both matmuls consume codes; GELU stays fp (O(N²))."""
+    b, t, d = x_codes.shape
+    x2 = x_codes.reshape(b * t, d)
+    h = (attention.ref_int_matmul(x2, ip["fc1"]["codes"]) + ip["fc1"]["bias_folded"]) * ip[
+        "fc1"
+    ]["out_scale"]
+    h = jax.nn.gelu(h, approximate=False)
+    h_codes = jnp.clip(jnp.round(h / ip["sx2"]), qcfg.qmin, qcfg.qmax)
+    y = (attention.ref_int_matmul(h_codes, ip["fc2"]["codes"]) + ip["fc2"]["bias_folded"]) * ip[
+        "fc2"
+    ]["out_scale"]
+    return y.reshape(b, t, d)
+
+
+# ---------------------------------------------------------------------------
+
+
+def forward_fp32(params, images, cfg: ModelConfig):
+    x = _embed(params, images, cfg)
+    for blk in params["blocks"]:
+        h = ref.layernorm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        x = x + attention.attention_fp32(blk["attn"], h, cfg)
+        h = ref.layernorm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        x = x + _mlp_fp32(blk["mlp"], h)
+    return _head(params, x)
+
+
+def forward_qvit(params, images, cfg: ModelConfig, qcfg: QuantConfig):
+    """Fig. 1(a): fake-quant everywhere, fp matmuls. QAT training graph."""
+    x = _embed(params, images, cfg)
+    for blk in params["blocks"]:
+        h = ref.layernorm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        x = x + attention.attention_qvit(blk["attn"], blk["q"]["attn"], h, cfg, qcfg)
+        h = ref.layernorm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        x = x + _mlp_qvit(blk["mlp"], blk["q"]["mlp"], h, qcfg)
+    return _head(params, x)
+
+
+def forward_int(iparams, images, cfg: ModelConfig, qcfg: QuantConfig, *, shift: bool = True):
+    """Fig. 1(b): operand-reordered integer dataflow (inference only).
+
+    ``iparams`` comes from ``integerize.integerize``. With ``shift=False``
+    (exact exp) this matches ``forward_qvit`` to fp tolerance — the
+    reordering itself is lossless; Eq. 4 is the only approximation.
+    """
+    x = _embed(iparams, images, cfg)
+    for blk in iparams["blocks"]:
+        h = ref.layernorm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        codes = quantize_int(h, blk["attn"]["sx"], qcfg.bits)
+        x = x + attention.attention_int(blk["attn"], codes, cfg, qcfg, shift=shift)
+        h = ref.layernorm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        codes = quantize_int(h, blk["mlp"]["sx1"], qcfg.bits)
+        x = x + _mlp_int(blk["mlp"], codes, qcfg)
+    return _head(iparams, x)
+
+
+def accuracy(logits, labels) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

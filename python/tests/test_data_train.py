@@ -1,0 +1,106 @@
+"""Dataset determinism and the hand-rolled LAMB optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import train as T
+from compile.configs import DataConfig
+
+
+def test_dataset_deterministic():
+    d = DataConfig()
+    a_x, a_y = data_mod.make_dataset(d, 64, split_seed=0)
+    b_x, b_y = data_mod.make_dataset(d, 64, split_seed=0)
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+
+
+def test_dataset_splits_differ_but_share_prototypes():
+    d = DataConfig()
+    a_x, _ = data_mod.make_dataset(d, 64, split_seed=0)
+    b_x, _ = data_mod.make_dataset(d, 64, split_seed=1)
+    assert not np.array_equal(a_x, b_x)
+
+
+def test_dataset_shapes_and_range():
+    d = DataConfig()
+    x, y = data_mod.make_dataset(d, 32)
+    assert x.shape == (32, d.img_size, d.img_size, d.channels)
+    assert x.dtype == np.float32
+    assert y.min() >= 0 and y.max() < d.num_classes
+    assert np.abs(x).max() < 10  # sane scale
+
+
+def test_dataset_classes_separable():
+    # mean intra-class distance should be below inter-class distance
+    d = DataConfig(noise=0.1, max_shift=0)
+    x, y = data_mod.make_dataset(d, 200, split_seed=3)
+    x = x.reshape(len(x), -1)
+    intra, inter = [], []
+    for i in range(0, 100):
+        for j in range(i + 1, min(i + 8, 200)):
+            dist = np.linalg.norm(x[i] - x[j])
+            (intra if y[i] == y[j] else inter).append(dist)
+    assert np.mean(intra) < np.mean(inter)
+
+
+def test_batches_deterministic():
+    x = np.arange(40, dtype=np.float32).reshape(10, 2, 2, 1)
+    y = np.arange(10, dtype=np.int32)
+    a = list(data_mod.batches(x, y, 4, 3, seed=5))
+    b = list(data_mod.batches(x, y, 4, 3, seed=5))
+    for (ax, ay), (bx, by) in zip(a, b):
+        np.testing.assert_array_equal(ax, bx)
+        np.testing.assert_array_equal(ay, by)
+
+
+# ---------------------------------------------------------------- LAMB ----
+
+
+def test_lamb_converges_on_quadratic():
+    # minimise ||w - t||² — LAMB should get close quickly
+    t = jnp.asarray(np.random.default_rng(0).normal(size=16).astype(np.float32))
+    params = {"w": jnp.zeros(16)}
+    opt = T.lamb_init(params)
+    for i in range(200):
+        grads = {"w": 2 * (params["w"] - t)}
+        params, opt = T.lamb_update(params, grads, opt, lr=0.05)
+    assert float(jnp.linalg.norm(params["w"] - t)) < 0.2
+
+
+def test_lamb_zero_grads_no_update():
+    params = {"w": jnp.ones(4)}
+    opt = T.lamb_init(params)
+    p2, _ = T.lamb_update(params, {"w": jnp.zeros(4)}, opt, lr=0.1)
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.ones(4))
+
+
+def test_cosine_schedule_shape():
+    total, warm = 100, 10
+    lrs = [float(T.cosine_lr(1.0, s, total, warm)) for s in range(total)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[warm] - 1.0) < 0.12  # peak right after warmup
+    assert lrs[-1] < 0.01  # annealed to ~0
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_grad_masking_head_only():
+    from compile.configs import TEST, QuantConfig
+    from compile.params import init_params
+
+    params = init_params(jax.random.PRNGKey(0), TEST, QuantConfig(bits=3))
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    masked = T.mask_grads(grads, T.head_only)
+    assert float(jnp.sum(masked["head"]["w"])) > 0
+    assert float(jnp.sum(jnp.abs(masked["blocks"][0]["attn"]["wq"]["w"]))) == 0.0
+    assert float(jnp.sum(jnp.abs(masked["patch_embed"]["w"]))) == 0.0
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0]])
+    labels = jnp.asarray([0, 1])
+    got = float(T.cross_entropy(logits, labels))
+    want = -np.log(np.exp(2) / (np.exp(2) + 1))
+    assert abs(got - want) < 1e-6

@@ -1,0 +1,88 @@
+"""Eq. 2 folding tests (python side of the cross-language contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import integerize
+from compile.configs import TEST, QuantConfig
+from compile.kernels import ref
+from compile.params import init_params
+
+CFG = TEST
+QCFG = QuantConfig(bits=3)
+
+
+def test_collapse_act_step():
+    assert float(integerize.collapse_act_step(jnp.asarray([1.0, 2.0, 3.0]))) == 2.0
+    assert float(integerize.collapse_act_step(jnp.float32(0.5))) == 0.5
+
+
+def test_fold_linear_constants():
+    rng = np.random.default_rng(0)
+    lin = {
+        "w": jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32) * 0.1),
+        "b": jnp.asarray(rng.normal(size=8).astype(np.float32)),
+    }
+    sw = jnp.asarray((0.02 + rng.random(8) * 0.1).astype(np.float32))
+    f = integerize.fold_linear(lin, 0.1, sw, QCFG)
+    assert f["codes"].shape == (8, 16)
+    assert f["codes"].dtype == jnp.int32
+    assert int(jnp.max(jnp.abs(f["codes"]))) <= 4
+    np.testing.assert_allclose(
+        np.asarray(f["out_scale"]), 0.1 * np.asarray(sw), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(f["bias_folded"]) * np.asarray(f["out_scale"]),
+        np.asarray(lin["b"]),
+        rtol=1e-5,
+    )
+
+
+def test_folded_forward_equals_fake_quant_linear():
+    rng = np.random.default_rng(1)
+    lin = {
+        "w": jnp.asarray(rng.normal(size=(12, 24)).astype(np.float32) * 0.1),
+        "b": jnp.asarray(rng.normal(size=12).astype(np.float32)),
+    }
+    sw = jnp.asarray((0.02 + rng.random(12) * 0.1).astype(np.float32))
+    sx = 0.08
+    f = integerize.fold_linear(lin, sx, sw, QCFG)
+    x_codes = jnp.asarray(rng.integers(-4, 4, (5, 24)).astype(np.int32))
+    got = ref.int_linear(x_codes, f["codes"], lin["b"], sx, sw)
+    want = ref.dequant_linear(x_codes, f["codes"], lin["b"], sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_integerize_whole_model_structure():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    ip = integerize.integerize(params, CFG, QCFG)
+    assert len(ip["blocks"]) == CFG.depth
+    blk = ip["blocks"][0]["attn"]
+    for k in ("wq", "wk", "wv", "wo"):
+        assert blk[k]["codes"].shape == (CFG.dim, CFG.dim)
+    assert blk["score_scale"] > 0
+    assert float(blk["o_eff"]) > 0
+    # fp parts passed through untouched
+    np.testing.assert_array_equal(
+        np.asarray(ip["pos_embed"]), np.asarray(params["pos_embed"])
+    )
+
+
+def test_lowbit_size_accounting():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    s3 = integerize.lowbit_size_bytes(params, CFG, QuantConfig(bits=3))
+    s8 = integerize.lowbit_size_bytes(params, CFG, QuantConfig(bits=8))
+    s2 = integerize.lowbit_size_bytes(params, CFG, QuantConfig(bits=2))
+    assert s2 < s3 < s8  # Table II "Size" ordering
+
+
+def test_v_eff_absorbs_scales():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    ip = integerize.integerize(params, CFG, QCFG)
+    blk = ip["blocks"][0]["attn"]
+    q = params["blocks"][0]["q"]["attn"]
+    want = float(integerize.collapse_act_step(q["sx"])) * np.asarray(
+        jnp.broadcast_to(q["sw_v"], (CFG.dim,))
+    ) / float(q["s_v"])
+    np.testing.assert_allclose(np.asarray(blk["v_eff"]), want, rtol=1e-6)

@@ -1,0 +1,148 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, bit-widths and scales; assertions are exact on
+integer outputs and allclose on float outputs. interpret=True keeps this
+executable on CPU (and is the same lowering the AOT artifacts embed).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attn_value_pallas,
+    int_linear_pallas,
+    qk_shift_softmax_pallas,
+    qlayernorm_pallas,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def codes(rng, shape, bits):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return rng.integers(lo, hi + 1, shape).astype(np.int32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64]),
+    k=st.sampled_from([16, 48, 128]),
+    n=st.sampled_from([32, 96]),
+    bits=st.sampled_from([2, 3, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int_linear_matches_ref(m, k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    xq = codes(rng, (m, k), bits)
+    wq = codes(rng, (n, k), bits)
+    b = rng.normal(size=n).astype(np.float32)
+    sw = (0.01 + rng.random(n) * 0.2).astype(np.float32)
+    sx = float(0.01 + rng.random() * 0.2)
+    got = int_linear_pallas(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(b), sx, jnp.asarray(sw))
+    want = ref.int_linear(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(b), sx, jnp.asarray(sw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_int_linear_equals_dequant_path():
+    rng = np.random.default_rng(0)
+    xq, wq = codes(rng, (64, 32), 3), codes(rng, (32, 32), 3)
+    b = rng.normal(size=32).astype(np.float32)
+    sw = (0.02 + rng.random(32) * 0.1).astype(np.float32)
+    got = int_linear_pallas(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(b), 0.07, jnp.asarray(sw))
+    want = ref.dequant_linear(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(b), 0.07, jnp.asarray(sw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64]),
+    n=st.sampled_from([32, 64]),
+    d=st.sampled_from([16, 32]),
+    attn_bits=st.sampled_from([2, 3, 4]),
+    shift=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qk_shift_softmax_matches_ref(m, n, d, attn_bits, shift, seed):
+    rng = np.random.default_rng(seed)
+    qq, kq = codes(rng, (m, d), 3), codes(rng, (n, d), 3)
+    scale = float(0.005 + rng.random() * 0.05) / np.sqrt(d)
+    step = 1.0 / (2**attn_bits - 1)
+    got = qk_shift_softmax_pallas(jnp.asarray(qq), jnp.asarray(kq), scale, step, attn_bits, shift=shift)
+    want, _ = ref.qk_shift_softmax(jnp.asarray(qq), jnp.asarray(kq), scale, step, attn_bits, shift=shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64]),
+    n=st.sampled_from([32, 64]),
+    d=st.sampled_from([32, 64]),
+    out_bits=st.sampled_from([2, 3, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attn_value_matches_ref(m, n, d, out_bits, seed):
+    rng = np.random.default_rng(seed)
+    aq = rng.integers(0, 8, (m, n)).astype(np.int32)
+    vq = codes(rng, (n, d), 3)
+    sa, sv, so = 1.0 / 7, float(0.02 + rng.random() * 0.1), float(0.05 + rng.random() * 0.1)
+    got = attn_value_pallas(jnp.asarray(aq), jnp.asarray(vq), sa, sv, so, out_bits)
+    want, _ = ref.attn_value(jnp.asarray(aq), jnp.asarray(vq), sa, sv, so, out_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64]),
+    d=st.sampled_from([32, 128]),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qlayernorm_matches_round_form(m, d, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(m, d)) * 2).astype(np.float32)
+    g = (0.3 + rng.random(d)).astype(np.float32)
+    b = (rng.normal(size=d) * 0.3).astype(np.float32)
+    step = float(0.2 + rng.random() * 0.5)
+    got = qlayernorm_pallas(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), step, bits)
+    want = ref.qlayernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), step, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qlayernorm_negative_gamma():
+    rng = np.random.default_rng(5)
+    x = (rng.normal(size=(32, 16)) * 2).astype(np.float32)
+    g = -np.abs(0.5 + rng.random(16)).astype(np.float32)  # all negative
+    b = np.zeros(16, np.float32)
+    got = qlayernorm_pallas(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 0.4, 3)
+    want = ref.qlayernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 0.4, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shift_exp_properties():
+    x = jnp.linspace(-12.0, 3.0, 301)
+    approx = np.asarray(ref.shift_exp(x))
+    exact = np.exp(np.asarray(x))
+    rel = np.abs(approx - exact) / exact
+    assert rel.max() < 0.062  # Mitchell bound
+    assert np.all(approx + 1e-9 >= exact)  # 1+r ≥ 2^r: always overestimates
+    assert np.all(np.diff(approx) > 0)  # monotone
+
+
+def test_comparator_form_equals_round_form():
+    rng = np.random.default_rng(6)
+    x = (rng.normal(size=(64, 48)) * 3).astype(np.float32)
+    g = (rng.uniform(-1.5, 1.5, 48)).astype(np.float32)
+    b = (rng.normal(size=48) * 0.2).astype(np.float32)
+    a = ref.qlayernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 0.37, 3)
+    c = ref.qlayernorm_comparator(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 0.37, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_welford_matches_two_pass():
+    rng = np.random.default_rng(7)
+    x = (rng.normal(size=(8, 200)) * 5).astype(np.float32)
+    mu, var = ref.welford(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(mu), x.mean(-1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var), x.var(-1), rtol=1e-4, atol=1e-4)

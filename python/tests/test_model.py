@@ -1,0 +1,99 @@
+"""Model-level tests: patchify, shapes, determinism, parameter counting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import vit
+from compile.configs import TEST, ModelConfig, QuantConfig
+from compile.params import (
+    flatten_tree,
+    init_params,
+    load_npz,
+    reinit_qsteps,
+    save_npz,
+    tree_count,
+    unflatten_into,
+)
+
+CFG = TEST
+QCFG = QuantConfig(bits=3)
+
+
+def test_patchify_shape_and_content():
+    cfg = ModelConfig(img_size=8, patch_size=4, in_chans=3, dim=16, depth=1, heads=2)
+    imgs = jnp.arange(8 * 8 * 3, dtype=jnp.float32).reshape(1, 8, 8, 3)
+    p = vit.patchify(imgs, cfg)
+    assert p.shape == (1, 4, 48)
+    # first patch = rows 0..3 × cols 0..3
+    img = np.asarray(imgs[0])
+    want = img[:4, :4, :].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(p[0, 0]), want)
+
+
+def test_forward_shapes_all_modes():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    x = jnp.zeros((2, CFG.img_size, CFG.img_size, 3))
+    assert vit.forward_fp32(params, x, CFG).shape == (2, CFG.num_classes)
+    assert vit.forward_qvit(params, x, CFG, QCFG).shape == (2, CFG.num_classes)
+
+
+def test_forward_deterministic():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, CFG.img_size, CFG.img_size, 3)).astype(np.float32))
+    a = np.asarray(vit.forward_fp32(params, x, CFG))
+    b = np.asarray(vit.forward_fp32(params, x, CFG))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_param_count_scales_with_depth():
+    small = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    big_cfg = ModelConfig(
+        img_size=CFG.img_size, patch_size=CFG.patch_size, dim=CFG.dim, depth=CFG.depth * 2, heads=CFG.heads
+    )
+    big = init_params(jax.random.PRNGKey(0), big_cfg, QCFG)
+    assert tree_count(big) > 1.7 * tree_count(small)
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[1.0, 2.0], [3.0, 0.0]])
+    labels = jnp.asarray([1, 0])
+    assert float(vit.accuracy(logits, labels)) == 1.0
+    assert float(vit.accuracy(logits, jnp.asarray([0, 0]))) == 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = init_params(jax.random.PRNGKey(1), CFG, QCFG)
+    p = tmp_path / "ck.npz"
+    save_npz(p, params)
+    template = init_params(jax.random.PRNGKey(2), CFG, QCFG)
+    restored = load_npz(p, template)
+    for k, v in flatten_tree(params).items():
+        np.testing.assert_array_equal(v, flatten_tree(restored)[k], err_msg=k)
+
+
+def test_unflatten_missing_leaf_raises(tmp_path):
+    params = init_params(jax.random.PRNGKey(1), CFG, QCFG)
+    flat = flatten_tree(params)
+    key = next(iter(flat))
+    del flat[key]
+    try:
+        unflatten_into(params, flat)
+        raise AssertionError("should have raised")
+    except KeyError as e:
+        assert key.split(".")[0] in str(e) or key in str(e)
+
+
+def test_reinit_qsteps_changes_only_q():
+    params = init_params(jax.random.PRNGKey(0), CFG, QCFG)
+    re = reinit_qsteps(params, CFG, QuantConfig(bits=2))
+    # weights untouched
+    np.testing.assert_array_equal(
+        np.asarray(params["blocks"][0]["attn"]["wq"]["w"]),
+        np.asarray(re["blocks"][0]["attn"]["wq"]["w"]),
+    )
+    # q-steps re-derived (2-bit qmax differs)
+    a = float(params["blocks"][0]["q"]["attn"]["sw_q"][0])
+    b = float(re["blocks"][0]["q"]["attn"]["sw_q"][0])
+    assert a != b

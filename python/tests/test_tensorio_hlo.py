@@ -1,0 +1,72 @@
+"""Tensor interchange format + HLO export invariants."""
+
+import numpy as np
+import pytest
+
+from compile import hlo
+from compile.tensorio import read_tensor, write_tensor
+
+
+@pytest.mark.parametrize(
+    "arr",
+    [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.arange(-8, 8, dtype=np.int32).reshape(2, 2, 4),
+        np.array([1, -2, 3], dtype=np.int8),
+        np.array([[250, 1], [0, 7]], dtype=np.uint8),
+        np.arange(4, dtype=np.int64),
+    ],
+)
+def test_roundtrip(tmp_path, arr):
+    p = tmp_path / "t.bin"
+    write_tensor(p, arr)
+    back = read_tensor(p)
+    assert back.dtype == arr.dtype
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        read_tensor(p)
+
+
+def test_header_layout_stable(tmp_path):
+    """The byte layout is a cross-language contract — pin it."""
+    p = tmp_path / "t.bin"
+    write_tensor(p, np.array([[1.0]], dtype=np.float32))
+    raw = p.read_bytes()
+    assert raw[:4] == b"IVT1"
+    assert raw[4] == 0  # f32 code
+    assert raw[5] == 2  # ndim
+    assert raw[8:12] == (1).to_bytes(4, "little")
+    assert raw[12:16] == (1).to_bytes(4, "little")
+    assert raw[16:20] == np.float32(1.0).tobytes()
+
+
+# ------------------------------------------------------------------ HLO ---
+
+
+def test_hlo_export_includes_large_constants(tmp_path):
+    """Regression for the elided-constants bug: a weight matrix closed over
+    by the jitted function must appear fully in the HLO text (the text
+    parser reads `{...}` back as zeros — silently destroying the model)."""
+    import jax
+    import jax.numpy as jnp
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32))
+    text = hlo.to_hlo_text(lambda x: (x @ w,), jax.ShapeDtypeStruct((4, 64), jnp.float32))
+    assert "constant({...})" not in text
+    assert len(text) > 64 * 64 * 4  # the constant payload is actually there
+    assert "ENTRY" in text
+
+
+def test_hlo_export_writes_file(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    out = tmp_path / "f.hlo.txt"
+    n = hlo.export(lambda x: (x + 1.0,), (jax.ShapeDtypeStruct((2, 2), jnp.float32),), str(out))
+    assert out.exists()
+    assert n == len(out.read_text())

@@ -1,0 +1,120 @@
+//! Bench A1 — the Eq. 2 approximation: collapsing the per-channel
+//! activation step diag(Δ_X) to the scalar Δ̄_X is what makes the reorder
+//! legal. This ablation measures what the collapse costs, as a function
+//! of how *heterogeneous* the channel scales are, at several bit widths.
+//!
+//! No artifacts required. `cargo bench --bench ablation_scales`
+
+use ivit::bench::TableWriter;
+use ivit::quant::fold::collapse_step;
+use ivit::quant::linear::{dequant_linear, IntMat};
+use ivit::quant::{int_range, quantize};
+use ivit::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    println!("Eq. 2 ablation — per-channel diag(Δ_X) vs collapsed scalar Δ̄_X\n");
+    let mut tbl = TableWriter::new(&[
+        "bits", "scale spread", "rel MSE (collapsed)", "rel MSE (per-chan)", "penalty ×",
+    ]);
+    let mut rng = XorShift::new(77);
+    let (m, k, n) = (64usize, 96usize, 48usize);
+
+    for &bits in &[2u32, 3, 4, 8] {
+        for &spread in &[1.0f64, 2.0, 4.0, 8.0] {
+            // channel scales log-uniform in [s/√spread, s·√spread]
+            let base = 0.8f64;
+            let ch_scales: Vec<f32> = (0..k)
+                .map(|_| (base * spread.powf(rng.uniform(-0.5, 0.5))) as f32)
+                .collect();
+            // activations with genuinely per-channel magnitudes
+            let x: Vec<f32> = (0..m * k)
+                .map(|i| (rng.normal() as f32) * ch_scales[i % k])
+                .collect();
+            let w: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 0.1) as f32).collect();
+            let step_w: Vec<f32> = (0..n).map(|_| 0.02f32).collect();
+            let (qmin, qmax) = int_range(bits);
+
+            // exact fp reference
+            let mut want = vec![0f64; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for p in 0..k {
+                        acc += x[i * k + p] as f64 * w[j * k + p] as f64;
+                    }
+                    want[i * n + j] = acc;
+                }
+            }
+            let ref_pow: f64 = want.iter().map(|v| v * v).sum::<f64>() / want.len() as f64;
+
+            // quantize W once
+            let mut w_codes = vec![0i32; n * k];
+            for j in 0..n {
+                for p in 0..k {
+                    w_codes[j * k + p] = quantize(w[j * k + p], step_w[j], bits, true);
+                }
+            }
+            let w_mat = IntMat::new(n, k, w_codes);
+
+            let mse = |per_channel: bool| -> f64 {
+                // per-channel steps: Δ_c = max|x_c|/qmax; collapsed: mean
+                let steps: Vec<f32> = (0..k)
+                    .map(|c| {
+                        let amax = (0..m)
+                            .map(|i| x[i * k + c].abs())
+                            .fold(0f32, f32::max);
+                        (amax / qmax.max(1) as f32).max(1e-6)
+                    })
+                    .collect();
+                let sbar = collapse_step(&steps);
+                let mut err = 0f64;
+                for i in 0..m {
+                    // quantize activations with chosen scheme
+                    let codes: Vec<i32> = (0..k)
+                        .map(|c| {
+                            let s = if per_channel { steps[c] } else { sbar };
+                            quantize(x[i * k + c], s, bits, true)
+                        })
+                        .collect();
+                    let xm = IntMat::new(1, k, codes);
+                    let out = if per_channel {
+                        // dequant path (Fig 1a) — only legal un-reordered
+                        let mut o = vec![0f32; n];
+                        for j in 0..n {
+                            let mut acc = 0f64;
+                            for c in 0..k {
+                                acc += (xm.at(0, c) as f64 * steps[c] as f64)
+                                    * (w_mat.at(j, c) as f64 * step_w[j] as f64);
+                            }
+                            o[j] = acc as f32;
+                        }
+                        o
+                    } else {
+                        dequant_linear(&xm, &w_mat, &vec![0.0; n], sbar, &step_w).unwrap()
+                    };
+                    for j in 0..n {
+                        let d = out[j] as f64 - want[i * n + j];
+                        err += d * d;
+                    }
+                }
+                err / (m * n) as f64 / ref_pow
+            };
+
+            let mse_col = mse(false);
+            let mse_pc = mse(true);
+            let _ = qmin;
+            tbl.row(vec![
+                bits.to_string(),
+                format!("{spread}x"),
+                format!("{mse_col:.3e}"),
+                format!("{mse_pc:.3e}"),
+                format!("{:.2}", mse_col / mse_pc.max(1e-18)),
+            ]);
+        }
+    }
+    print!("{}", tbl.render());
+    println!("\nreading: the collapse is nearly free when channel scales are homogeneous");
+    println!("(spread 1–2×) and costs a bounded factor as heterogeneity grows — the");
+    println!("regime QAT actively trains the network into (LSQ learns a shared Δ̄_X).");
+    Ok(())
+}

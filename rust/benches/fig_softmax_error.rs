@@ -1,0 +1,79 @@
+//! Bench F4 — fidelity of the Eq. 4 shift-softmax (the design claim
+//! behind Fig. 4): sweep logit scale and sequence length, report the
+//! L∞/L1 distance between shift-softmax and exact softmax rows, the
+//! fraction of quantized attention codes that differ, and argmax flips.
+//!
+//! No artifacts required. `cargo bench --bench fig_softmax_error`
+
+use ivit::bench::TableWriter;
+use ivit::quant::linear::IntMat;
+use ivit::quant::softmax::{exact_softmax_row, qk_attention, shift_softmax_row};
+use ivit::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    println!("Eq. 4 shift-softmax vs exact softmax\n");
+
+    // --- raw row error vs logit spread -----------------------------------
+    let mut t = TableWriter::new(&["logit spread", "N", "L_inf", "L1", "argmax flips"]);
+    let mut rng = XorShift::new(31);
+    for &spread in &[0.5f64, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        for &n in &[16usize, 64, 198] {
+            let (mut linf, mut l1, mut flips) = (0f32, 0f32, 0usize);
+            let trials = 200;
+            for _ in 0..trials {
+                let z: Vec<f32> =
+                    (0..n).map(|_| (rng.normal() * spread) as f32).collect();
+                let a = shift_softmax_row(&z);
+                let b = exact_softmax_row(&z);
+                let d: f32 =
+                    a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+                linf = linf.max(d);
+                l1 += a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>();
+                let am = |v: &[f32]| {
+                    v.iter().enumerate().max_by(|p, q| p.1.partial_cmp(q.1).unwrap()).unwrap().0
+                };
+                if am(&a) != am(&b) {
+                    flips += 1;
+                }
+            }
+            t.row(vec![
+                format!("{spread:.1}"),
+                n.to_string(),
+                format!("{linf:.4}"),
+                format!("{:.4}", l1 / trials as f32),
+                format!("{flips}/{trials}"),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // --- end effect on quantized attention codes (what the hardware emits) --
+    println!("\nquantized attention-code disagreement (3-bit codes, head dim 32):\n");
+    let mut t2 = TableWriter::new(&["score scale", "codes differing", "max |Δcode|"]);
+    for &scale in &[0.005f32, 0.02, 0.05, 0.1, 0.2] {
+        let (m, d, n) = (64usize, 32usize, 64usize);
+        let q = IntMat::new(m, d, rng.codes(m * d, -4, 3));
+        let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+        let step = 1.0 / 7.0;
+        let (a, _) = qk_attention(&q, &k, scale, step, 3, true)?;
+        let (b, _) = qk_attention(&q, &k, scale, step, 3, false)?;
+        let diff = a.data.iter().zip(&b.data).filter(|(x, y)| x != y).count();
+        let maxd = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .max()
+            .unwrap_or(0);
+        t2.row(vec![
+            format!("{scale}"),
+            format!("{diff}/{} ({:.2}%)", a.data.len(), 100.0 * diff as f64 / a.data.len() as f64),
+            maxd.to_string(),
+        ]);
+        assert!(maxd <= 1, "shift-exp must never move a code by more than 1 LSB");
+    }
+    print!("{}", t2.render());
+    println!("\nMitchell bound: raw rel. err ≤ 6.2%; normalisation cancels most of it;");
+    println!("quantization absorbs the rest — codes differ by at most 1 LSB.");
+    Ok(())
+}

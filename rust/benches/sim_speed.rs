@@ -1,0 +1,69 @@
+//! Bench P — simulator performance: PE-cycles/second of the systolic
+//! attention simulation at paper dimensions (the L3 perf target in
+//! DESIGN.md §8 is ≥ 10M PE-cycles/s), plus per-module throughput.
+//!
+//! No artifacts required. `cargo bench --bench sim_speed`
+
+use std::time::Duration;
+
+use ivit::bench::{bench_for, report};
+use ivit::quant::fold::{FoldedLinear, QuantParams};
+use ivit::quant::linear::IntMat;
+use ivit::sim::linear::{Epilogue, LinearArraySim};
+use ivit::sim::softmax_matmul::SoftmaxMatmulSim;
+use ivit::sim::AttentionSim;
+use ivit::util::XorShift;
+
+fn main() {
+    let budget = Duration::from_secs(3);
+    let mut timings = Vec::new();
+    let mut rng = XorShift::new(5);
+
+    // full attention module at paper dims
+    let t = bench_for("attention_sim N=198 I=384 O=64 3b", budget, || {
+        let r = AttentionSim::paper_geometry(198, 384, 64, 3);
+        std::hint::black_box(r.total_macs());
+    });
+    // PE-cycles processed per wall second: Σ pe_count × cycles
+    let report_geo = AttentionSim::paper_geometry(198, 384, 64, 3);
+    let pe_cycles: u64 = report_geo.blocks.iter().map(|b| b.pe_count * b.cycles).sum();
+    let rate = pe_cycles as f64 / t.mean.as_secs_f64();
+    timings.push(t);
+
+    // isolated linear array
+    let w: Vec<f32> = rng.normal_vec(64 * 384).iter().map(|v| v * 0.1).collect();
+    let folded = FoldedLinear::fold(
+        &w,
+        64,
+        384,
+        &vec![0.0; 64],
+        &QuantParams { bits: 3, step_x: 0.1, step_w: vec![0.05; 64] },
+    )
+    .unwrap();
+    let lin = LinearArraySim::new("lin", folded, 3);
+    let x = IntMat::new(198, 384, rng.codes(198 * 384, -4, 3));
+    timings.push(bench_for("linear_array 198x384 -> 64", budget, || {
+        let o = lin.run(&x, Epilogue::Scale, true).unwrap();
+        std::hint::black_box(o.stats.mac_ops);
+    }));
+
+    // isolated QKᵀ+softmax array
+    let q = IntMat::new(198, 64, rng.codes(198 * 64, -4, 3));
+    let k = IntMat::new(198, 64, rng.codes(198 * 64, -4, 3));
+    let qk = SoftmaxMatmulSim::new("qk", 3);
+    timings.push(bench_for("softmax_matmul 198x198x64", budget, || {
+        let o = qk.run(&q, &k, 0.01, 0.14, 3, true).unwrap();
+        std::hint::black_box(o.codes.data.len());
+    }));
+
+    report(&timings);
+    println!("\nfull-module simulation: {pe_cycles} PE-cycles per run");
+    println!("simulator rate: {:.1}M PE-cycles/s (target ≥ 10M)", rate / 1e6);
+    println!(
+        "MAC simulation rate: {:.1}M MACs/s",
+        report_geo.total_macs() as f64 / timings[0].mean.as_secs_f64() / 1e6
+    );
+    if rate < 10e6 {
+        println!("WARNING: below the DESIGN.md §8 target");
+    }
+}

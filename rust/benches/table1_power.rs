@@ -1,0 +1,85 @@
+//! Bench T1 — regenerates the paper's Table I: per-block #PE, #MAC, total
+//! and per-PE power of the 3-bit self-attention module, side by side with
+//! the paper's published numbers, plus the bit-width sweep ablation.
+//!
+//! `cargo bench --bench table1_power`
+
+use ivit::bench::TableWriter;
+use ivit::sim::{AttentionSim, EnergyModel};
+
+/// Paper Table I values (3-bit, Spartan-7, 100 MHz). Garbled rows in the
+/// source PDF are marked None.
+const PAPER: &[(&str, u64, Option<f64>, Option<f64>, Option<f64>)] = &[
+    // (block, #PE, #MAC M, total W, per-PE mW)
+    ("Q linear", 24_576, Some(4.87), Some(10.188), Some(0.414)),
+    ("Q LayerNorm", 128, Some(0.03), Some(0.598), Some(4.67)),
+    ("Q delay", 12_672, None, Some(0.858), None),
+    ("K linear", 24_576, Some(4.87), Some(10.188), Some(0.414)),
+    ("K LayerNorm", 128, Some(0.03), Some(0.598), Some(4.67)),
+    ("K delay", 12_672, None, Some(0.858), None),
+    ("V linear", 24_576, Some(4.87), Some(10.399), Some(0.423)),
+    ("reversing", 4_096, None, Some(1.511), None),
+    ("QK^T matmul+softmax", 39_204, Some(2.51), Some(58.959), Some(1.504)),
+    ("PV matmul", 12_672, Some(2.51), Some(4.597), Some(0.362)),
+];
+
+fn main() {
+    let m = EnergyModel::default();
+    let t0 = std::time::Instant::now();
+    let report = AttentionSim::paper_geometry(198, 384, 64, 3);
+    let sim_time = t0.elapsed();
+
+    let mut tbl = TableWriter::new(&[
+        "block", "#PE", "#PE paper", "#MAC (M)", "MAC paper", "W", "W paper", "mW/PE", "mW/PE paper",
+    ]);
+    let fmt_opt = |o: Option<f64>| o.map(|v| format!("{v:.3}")).unwrap_or_else(|| "—".into());
+    for (name, pe_paper, mac_paper, w_paper, pepow_paper) in PAPER {
+        let b = report
+            .blocks
+            .iter()
+            .find(|b| b.name == *name)
+            .unwrap_or_else(|| panic!("missing block {name}"));
+        tbl.row(vec![
+            name.to_string(),
+            b.pe_count.to_string(),
+            pe_paper.to_string(),
+            format!("{:.2}", b.mac_ops as f64 / 1e6),
+            mac_paper.map(|v| format!("{v:.2}")).unwrap_or_else(|| "—".into()),
+            format!("{:.3}", b.power_w(&m)),
+            fmt_opt(*w_paper),
+            format!("{:.3}", b.per_pe_mw(&m)),
+            fmt_opt(*pepow_paper),
+        ]);
+        assert_eq!(b.pe_count, *pe_paper, "{name}: #PE must match the paper exactly");
+    }
+    println!("Table I reproduction (3-bit, N=198, I=384, O=64, 100 MHz)\n");
+    print!("{}", tbl.render());
+    println!(
+        "\nsimulated numerically in {} — total {:.1} W (paper ≈ {:.1} W across listed rows)",
+        ivit::bench::fmt_dur(sim_time),
+        report.total_power_w(&m),
+        99.2
+    );
+
+    // headline claim: MAC blocks dominate OPs but have the lowest per-PE power
+    let per_pe = |n: &str| report.blocks.iter().find(|b| b.name == n).unwrap().per_pe_mw(&m);
+    assert!(per_pe("Q linear") < per_pe("QK^T matmul+softmax"));
+    assert!(per_pe("PV matmul") < per_pe("QK^T matmul+softmax"));
+    assert!(per_pe("QK^T matmul+softmax") < per_pe("Q LayerNorm"));
+    println!("\nordering check: linear/PV < QK+softmax < LayerNorm per-PE power ✓");
+
+    println!("\n=== ablation: operand bit-width sweep (same geometry) ===\n");
+    let mut sweep = TableWriter::new(&["bits", "linear mW/PE", "QK mW/PE", "PV mW/PE", "total W"]);
+    for bits in [2u32, 3, 4, 8] {
+        let r = AttentionSim::paper_geometry(198, 384, 64, bits);
+        let pe = |n: &str| r.blocks.iter().find(|b| b.name == n).map(|b| b.per_pe_mw(&m)).unwrap();
+        sweep.row(vec![
+            bits.to_string(),
+            format!("{:.3}", pe("Q linear")),
+            format!("{:.3}", pe("QK^T matmul+softmax")),
+            format!("{:.3}", pe("PV matmul")),
+            format!("{:.2}", r.total_power_w(&m)),
+        ]);
+    }
+    print!("{}", sweep.render());
+}

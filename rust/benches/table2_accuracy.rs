@@ -1,0 +1,141 @@
+//! Bench T2 — regenerates the paper's Table II: model comparison across
+//! bit-widths and inference paths. Every accuracy is *measured here*, by
+//! executing the AOT artifacts through the Rust PJRT runtime on the
+//! exported eval set (the QAT-time accuracies recorded in metrics.json
+//! are printed alongside as a cross-check).
+//!
+//! Requires `make artifacts`. `cargo bench --bench table2_accuracy`
+
+use std::path::PathBuf;
+
+use ivit::bench::TableWriter;
+use ivit::model::EvalSet;
+use ivit::runtime::Engine;
+use ivit::util::tensorio::Tensor;
+use ivit::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts();
+    let Some(dir) = dir else {
+        println!("SKIP: no artifacts directory (run `make artifacts`)");
+        return Ok(());
+    };
+    let mut engine = Engine::new(&dir)?;
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+    let params_m = engine.manifest.model.get("params").copied().unwrap_or(0.0) / 1e6;
+    let limit = std::env::var("IVIT_EVAL_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(ev.n);
+
+    println!("Table II reproduction — synthetic-CIFAR, tiny DeiT-style ViT ({params_m:.2}M params)");
+    println!("(paper: DeiT-S 21.8M on CIFAR-10; substitution per DESIGN.md §3)\n");
+
+    let mut tbl = TableWriter::new(&[
+        "variant", "int-only", "multiplier", "size (MB)", "acc (PJRT)", "acc (QAT-time)",
+    ]);
+
+    // fp32 upper bound
+    let acc = measure(&mut engine, "model_fp32_b8", &ev, limit)?;
+    tbl.row(vec![
+        "fp32 (upper bound)".into(),
+        "—".into(),
+        "FP32".into(),
+        size_mb(&engine, 32),
+        format!("{acc:.4}"),
+        recorded(&engine, "fp32.eval_acc"),
+    ]);
+
+    for bits in [2u32, 3, 8] {
+        // Q-ViT-style baseline: quantized storage, fp multiplier (Fig 1a)
+        let acc_q = measure(&mut engine, &format!("model_qvit_{bits}b_b8"), &ev, limit)?;
+        tbl.row(vec![
+            format!("Q-ViT-style {bits}-bit"),
+            "X".into(),
+            "FP32".into(),
+            size_mb(&engine, bits),
+            format!("{acc_q:.4}"),
+            recorded(&engine, &format!("qat_{bits}b.eval_acc")),
+        ]);
+        // Ours: operand-reordered, integer multiplier (Fig 1b)
+        let acc_i = measure(&mut engine, &format!("model_int_{bits}b_b8"), &ev, limit)?;
+        tbl.row(vec![
+            format!("Ours integerized {bits}-bit"),
+            "V".into(),
+            format!("{bits}-bit"),
+            size_mb(&engine, bits),
+            format!("{acc_i:.4}"),
+            recorded(&engine, &format!("int_{bits}b.shift")),
+        ]);
+        // the paper's claim: integerization costs almost nothing vs Q-ViT
+        assert!(
+            acc_q - acc_i < 0.03,
+            "{bits}-bit: integerization cost {:.4} exceeds 3 points",
+            acc_q - acc_i
+        );
+    }
+    print!("{}", tbl.render());
+    println!("\npaper shape: I-BERT/I-ViT are INT8-only; Q-ViT reaches 2/3-bit but needs FP32");
+    println!("multipliers; Ours matches Q-ViT accuracy (Δ ≤ ~0.3pt in paper) with int-only MACs.");
+    Ok(())
+}
+
+fn measure(engine: &mut Engine, name: &str, ev: &EvalSet, limit: usize) -> anyhow::Result<f64> {
+    engine.load(name)?;
+    let exe = engine.get(name).unwrap();
+    let batch = exe.spec.batch;
+    let classes = *exe.spec.outputs[0].shape.last().unwrap();
+    let elems = ev.image_elems;
+    let mut correct = 0usize;
+    let n = limit.min(ev.n);
+    let mut i = 0;
+    while i < n {
+        let take = batch.min(n - i);
+        let mut payload = vec![0f32; batch * elems];
+        for b in 0..take {
+            payload[b * elems..(b + 1) * elems].copy_from_slice(ev.image(i + b)?);
+        }
+        let out = exe.run(&[Tensor::f32(exe.spec.inputs[0].shape.clone(), payload)])?;
+        let logits = out[0].as_f32()?;
+        for b in 0..take {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(k, _)| k as i32)
+                .unwrap();
+            if pred == ev.labels[i + b] {
+                correct += 1;
+            }
+        }
+        i += take;
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+fn recorded(engine: &Engine, path: &str) -> String {
+    engine
+        .manifest
+        .metrics
+        .path(path)
+        .and_then(Json::as_f64)
+        .map(|v| format!("{v:.4}"))
+        .unwrap_or_else(|| "—".into())
+}
+
+fn size_mb(engine: &Engine, bits: u32) -> String {
+    // matmul weights at `bits`, everything else fp32 (paper's Size column)
+    let params = engine.manifest.model.get("params").copied().unwrap_or(0.0);
+    let dim = engine.manifest.model.get("dim").copied().unwrap_or(128.0);
+    let depth = engine.manifest.model.get("depth").copied().unwrap_or(4.0);
+    let low = depth * (4.0 * dim * dim + 8.0 * dim * dim); // attn + mlp weights
+    let rest = params - low;
+    format!("{:.2}", (low * bits as f64 + rest * 32.0) / 8.0 / 1e6)
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var("IVIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(dir);
+    p.join("manifest.json").exists().then_some(p)
+}

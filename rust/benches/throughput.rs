@@ -1,0 +1,127 @@
+//! Bench E2E — serving throughput/latency of the coordinator over the
+//! PJRT executables: integerized vs Q-ViT-style vs fp32, batch-1 vs
+//! batch-8, plus coordinator overhead vs bare `execute`.
+//!
+//! Requires `make artifacts`. `cargo bench --bench throughput`
+//!
+//! NOTE on reading the numbers: on this CPU PJRT substrate the integerized
+//! path is *slower* than fp32 — XLA-CPU has no low-bit fast path, so the
+//! int graph pays conversion/round chains. The paper's efficiency claim
+//! lives in the systolic hardware model (bench table1_power); this bench
+//! demonstrates the serving stack and measures coordinator overhead.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ivit::bench::TableWriter;
+use ivit::coordinator::{BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
+use ivit::model::EvalSet;
+use ivit::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else {
+        println!("SKIP: no artifacts directory (run `make artifacts`)");
+        return Ok(());
+    };
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+    let n_requests: usize =
+        std::env::var("IVIT_BENCH_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(128);
+
+    let mut tbl = TableWriter::new(&[
+        "variant", "batch", "img/s", "p50 ms", "p99 ms", "mean batch",
+    ]);
+
+    for (mode, bits, batch) in [
+        ("integerized", 3u32, 8usize),
+        ("integerized", 3, 1),
+        ("integerized", 2, 8),
+        ("integerized", 8, 8),
+        ("qvit", 3, 8),
+        ("fp32", 32, 8),
+    ] {
+        let exec = match PjrtExecutor::load(&dir, mode, bits, batch) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {mode}/{bits}b b{batch}: {e:#}");
+                continue;
+            }
+        };
+        let coord = Coordinator::start(
+            exec,
+            BatcherConfig { queue_capacity: 256, max_wait: Duration::from_millis(2) },
+        );
+        let h = coord.handle();
+        let mut rng = XorShift::new(3);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let idx = (rng.next_u64() as usize) % ev.n;
+            let img = ev.image(idx)?.to_vec();
+            loop {
+                match h.submit(img.clone()) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+        }
+        for rx in pending {
+            let r = rx.recv()?;
+            anyhow::ensure!(r.error.is_none(), "batch failed: {:?}", r.error);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = coord.shutdown();
+        tbl.row(vec![
+            format!("{mode}/{bits}b"),
+            batch.to_string(),
+            format!("{:.1}", n_requests as f64 / wall),
+            format!("{:.2}", s.p50_us as f64 / 1e3),
+            format!("{:.2}", s.p99_us as f64 / 1e3),
+            format!("{:.2}", s.mean_batch),
+        ]);
+    }
+    print!("{}", tbl.render());
+
+    // coordinator overhead: bare execute vs through-the-batcher p50 at batch 1
+    println!("\ncoordinator overhead (batch-1, integerized 3-bit):");
+    let mut exec = PjrtExecutor::load(&dir, "integerized", 3, 1)?;
+    let img = ev.image(0)?.to_vec();
+    let mut bare = Vec::new();
+    for _ in 0..32 {
+        let t0 = Instant::now();
+        let _ = exec.execute(&img)?;
+        bare.push(t0.elapsed());
+    }
+    bare.sort();
+    let bare_p50 = bare[bare.len() / 2];
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig { queue_capacity: 32, max_wait: Duration::ZERO },
+    );
+    let h = coord.handle();
+    let mut through = Vec::new();
+    for _ in 0..32 {
+        let t0 = Instant::now();
+        let r = h.infer(img.clone())?;
+        anyhow::ensure!(r.error.is_none());
+        through.push(t0.elapsed());
+    }
+    through.sort();
+    let thr_p50 = through[through.len() / 2];
+    coord.shutdown();
+    println!(
+        "  bare execute p50 = {:.3} ms; through coordinator p50 = {:.3} ms; overhead = {:.0} µs",
+        bare_p50.as_secs_f64() * 1e3,
+        thr_p50.as_secs_f64() * 1e3,
+        (thr_p50.as_secs_f64() - bare_p50.as_secs_f64()) * 1e6
+    );
+    Ok(())
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var("IVIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(dir);
+    p.join("manifest.json").exists().then_some(p)
+}

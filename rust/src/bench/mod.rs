@@ -1,0 +1,180 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline crate
+//! set). Provides warmup + timed iterations with mean/σ/min reporting and
+//! simple table formatting shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and summarise.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+/// Keep running `f` until `budget` elapses (at least 3 iterations).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> Timing {
+    let n = samples.len().max(1) as f64;
+    let mean_s = samples.iter().map(Duration::as_secs_f64).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n;
+    Timing {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples.iter().min().copied().unwrap_or_default(),
+    }
+}
+
+/// Pretty-print a list of timings.
+pub fn report(timings: &[Timing]) {
+    println!(
+        "{:<40} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "stddev", "min"
+    );
+    for t in timings {
+        println!(
+            "{:<40} {:>8} {:>12} {:>12} {:>12}",
+            t.name,
+            t.iters,
+            fmt_dur(t.mean),
+            fmt_dur(t.stddev),
+            fmt_dur(t.min),
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Markdown-style table writer used by the table benches.
+pub struct TableWriter {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(header: &[&str]) -> Self {
+        TableWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarises() {
+        let mut x = 0u64;
+        let t = bench("noop", 2, 10, || {
+            x = x.wrapping_add(1);
+        });
+        assert_eq!(t.iters, 10);
+        assert!(t.mean >= t.min);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TableWriter::new(&["a", "block"]);
+        t.row(vec!["1".into(), "linear".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | block  |") || s.contains("| a"), "{s}");
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

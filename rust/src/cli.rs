@@ -1,0 +1,129 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! `ivit <subcommand> [--flag value]...` — see `ivit help` for the list.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        if let Some(cmd) = argv.next() {
+            out.command = cmd;
+        }
+        while let Some(a) = argv.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key.to_string(), argv.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u32(&self, key: &str, default: u32) -> Result<u32> {
+        Ok(self.usize(key, default as usize)? as u32)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
+
+USAGE: ivit <command> [flags]
+
+COMMANDS:
+  serve       run the batching inference server over an AOT artifact
+              --artifacts DIR  --mode integerized|qvit|fp32  --bits N
+              --batch N  --requests N  --rate R (req/s, 0 = closed-loop)
+  eval        Table II: accuracy of a model variant on the eval set
+              --artifacts DIR  --mode ...  --bits N  [--limit N]
+  power       Table I: per-block power of the systolic self-attention
+              --tokens N --din D --dhead O --bits B [--freq-mhz F]
+  simulate    run the attention simulator on the exported attn_case and
+              verify bit-exactness against the JAX reference
+              --artifacts DIR [--exact-exp]
+  info        print the artifact manifest summary  --artifacts DIR
+  help        this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        // NB: a bare positional cannot follow a boolean flag (it would be
+        // read as its value) — standard for this minimal syntax.
+        let a = parse("serve pos1 --artifacts ./a --bits 3 --fast");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.str("artifacts", ""), "./a");
+        assert_eq!(a.u32("bits", 0).unwrap(), 3);
+        assert!(a.bool("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --bits=8 --mode=qvit");
+        assert_eq!(a.u32("bits", 0).unwrap(), 8);
+        assert_eq!(a.str("mode", ""), "qvit");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("power");
+        assert_eq!(a.usize("tokens", 198).unwrap(), 198);
+        assert!(a.require("artifacts").is_err());
+        let b = parse("eval --bits x");
+        assert!(b.u32("bits", 0).is_err());
+    }
+}

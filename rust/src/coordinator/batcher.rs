@@ -1,0 +1,339 @@
+//! The dynamic batcher: bounded queue → deadline-or-full batches → one
+//! worker thread owning the executor.
+//!
+//! Policy (vLLM-router-style, scaled to this substrate): the worker blocks
+//! for the first request, then keeps admitting until either the batch is
+//! full or `max_wait` has elapsed since the first admit. Short batches are
+//! padded to the executable's static batch size (AOT shapes are fixed);
+//! padding rows are zero images whose outputs are dropped.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::executor::BatchExecutor;
+use super::metrics::{Metrics, Snapshot};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: SyncSender<Response>,
+}
+
+/// The reply: logits for the request's image.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Queue + batch + execute time, measured at completion.
+    pub latency: Duration,
+    /// How many real requests shared the batch.
+    pub batch_size: usize,
+    /// Set when the executor failed; logits empty.
+    pub error: Option<String>,
+}
+
+/// Backpressure signal.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue is full — shed load upstream.
+    QueueFull,
+    /// Coordinator has shut down.
+    Closed,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Bounded queue capacity (backpressure boundary).
+    pub queue_capacity: usize,
+    /// Max time the first request in a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { queue_capacity: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Clonable submission handle.
+#[derive(Clone)]
+pub struct Handle {
+    tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<std::sync::atomic::AtomicU64>,
+    image_elems: usize,
+}
+
+impl Handle {
+    /// Submit an image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>, SubmitError> {
+        assert_eq!(image.len(), self.image_elems, "image payload size");
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self
+            .submit(image)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The batching coordinator; owns the worker thread.
+pub struct Coordinator {
+    handle: Handle,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker around an executor.
+    pub fn start<E: BatchExecutor + 'static>(executor: E, config: BatcherConfig) -> Self {
+        let (tx, rx) = sync_channel::<Request>(config.queue_capacity);
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let image_elems = executor.image_elems();
+        let handle = Handle {
+            tx,
+            metrics: Arc::clone(&metrics),
+            next_id: Arc::new(std::sync::atomic::AtomicU64::new(0)),
+            image_elems,
+        };
+        let stop2 = Arc::clone(&stop);
+        let worker = std::thread::Builder::new()
+            .name("ivit-batcher".into())
+            .spawn(move || worker_loop(executor, rx, metrics, stop2, config))
+            .expect("spawn batcher worker");
+        Coordinator { handle, stop, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.handle.snapshot()
+    }
+
+    /// Stop the worker and wait for it to drain.
+    pub fn shutdown(mut self) -> Snapshot {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.handle.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<E: BatchExecutor>(
+    mut executor: E,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    config: BatcherConfig,
+) {
+    let bsz = executor.batch_size();
+    let elems = executor.image_elems();
+    let classes = executor.num_classes();
+    let mut batch: Vec<Request> = Vec::with_capacity(bsz);
+    let mut payload = vec![0f32; bsz * elems];
+
+    while !stop.load(Ordering::Relaxed) {
+        batch.clear();
+        // block for the head-of-line request
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // admit until full or the deadline passes
+        let deadline = Instant::now() + config.max_wait;
+        while batch.len() < bsz {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // pad + execute
+        payload.iter_mut().for_each(|v| *v = 0.0);
+        for (i, r) in batch.iter().enumerate() {
+            payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+        }
+        let result = executor.execute(&payload);
+        metrics.record_batch(batch.len());
+
+        let real = batch.len();
+        match result {
+            Ok(logits) => {
+                for (i, req) in batch.drain(..).enumerate() {
+                    let latency = req.enqueued.elapsed();
+                    metrics.latency.record(latency);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        latency,
+                        batch_size: real,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                // fail the whole batch; callers decide on retry
+                let msg = format!("{e:#}");
+                for req in batch.drain(..) {
+                    let latency = req.enqueued.elapsed();
+                    metrics.latency.record(latency);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        logits: Vec::new(),
+                        latency,
+                        batch_size: 0,
+                        error: Some(msg.clone()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::MockExecutor;
+
+    fn image(v: f32, n: usize) -> Vec<f32> {
+        vec![v; n]
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = Coordinator::start(MockExecutor::new(4, 8, 3), BatcherConfig::default());
+        let h = c.handle();
+        let resp = h.infer(image(2.0, 8)).unwrap();
+        assert!(resp.error.is_none());
+        // mock: logit k = mean + k = 2 + k
+        assert_eq!(resp.logits, vec![2.0, 3.0, 4.0]);
+        let s = c.shutdown();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn batches_fill_under_load() {
+        let mut exec = MockExecutor::new(4, 2, 2);
+        exec.delay = Duration::from_millis(1);
+        let c = Coordinator::start(
+            exec,
+            BatcherConfig { queue_capacity: 64, max_wait: Duration::from_millis(50) },
+        );
+        let h = c.handle();
+        let rxs: Vec<_> = (0..16).map(|i| h.submit(image(i as f32, 2)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.logits[0], i as f32, "request {i} got wrong logits");
+        }
+        let s = c.shutdown();
+        assert_eq!(s.requests, 16);
+        // under saturation the mean batch should exceed 1
+        assert!(s.mean_batch > 1.5, "mean batch {}", s.mean_batch);
+    }
+
+    #[test]
+    fn deadline_fires_for_lone_request() {
+        let c = Coordinator::start(
+            MockExecutor::new(8, 2, 2),
+            BatcherConfig { queue_capacity: 8, max_wait: Duration::from_millis(5) },
+        );
+        let h = c.handle();
+        let t0 = Instant::now();
+        let r = h.infer(image(1.0, 2)).unwrap();
+        assert!(r.error.is_none());
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        let s = c.shutdown();
+        assert!((s.mean_batch - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut exec = MockExecutor::new(1, 1, 1);
+        exec.delay = Duration::from_millis(50);
+        let c = Coordinator::start(
+            exec,
+            BatcherConfig { queue_capacity: 2, max_wait: Duration::ZERO },
+        );
+        let h = c.handle();
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for _ in 0..20 {
+            match h.submit(vec![0.0]) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "bounded queue never pushed back");
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        let s = c.shutdown();
+        assert_eq!(s.rejected, rejected);
+    }
+
+    #[test]
+    fn executor_failure_propagates() {
+        let mut exec = MockExecutor::new(1, 1, 1);
+        exec.fail_every = Some(1); // every call fails
+        let c = Coordinator::start(exec, BatcherConfig::default());
+        let r = c.handle().infer(vec![0.0]).unwrap();
+        assert!(r.error.is_some());
+        assert!(r.logits.is_empty());
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_pending_worker() {
+        let c = Coordinator::start(MockExecutor::new(2, 2, 2), BatcherConfig::default());
+        let s = c.shutdown();
+        assert_eq!(s.requests, 0);
+    }
+}

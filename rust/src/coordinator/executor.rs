@@ -1,0 +1,162 @@
+//! Batch executors: the trait the batcher drives, its PJRT-backed
+//! implementation, and a deterministic mock for coordinator tests.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::util::tensorio::Tensor;
+
+/// Executes one padded batch of images → logits.
+///
+/// `images` is row-major `[batch, h, w, c]` with exactly `batch_size()`
+/// rows (the batcher pads); returns `batch_size() × num_classes` logits.
+pub trait BatchExecutor: Send {
+    fn batch_size(&self) -> usize;
+    fn image_elems(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed executor over a loaded manifest executable.
+pub struct PjrtExecutor {
+    engine: Engine,
+    exe_name: String,
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+    input_shape: Vec<usize>,
+}
+
+impl PjrtExecutor {
+    /// Load `(mode, bits, batch)` from the artifacts dir.
+    pub fn load(artifacts: &std::path::Path, mode: &str, bits: u32, batch: usize) -> Result<Self> {
+        let mut engine = Engine::new(artifacts)?;
+        let exe_name = engine.load_variant(mode, bits, batch)?;
+        let spec = engine.get(&exe_name).unwrap().spec.clone();
+        let input_shape = spec.inputs[0].shape.clone();
+        let image_elems: usize = input_shape[1..].iter().product();
+        let classes = *spec.outputs[0].shape.last().unwrap_or(&0);
+        Ok(PjrtExecutor { engine, exe_name, batch, image_elems, classes, input_shape })
+    }
+
+    pub fn engine(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(images.len() == self.batch * self.image_elems, "batch payload size");
+        let t = Tensor::f32(self.input_shape.clone(), images.to_vec());
+        let exe = self
+            .engine
+            .get(&self.exe_name)
+            .ok_or_else(|| anyhow::anyhow!("executable dropped"))?;
+        let out = exe.run(&[t])?;
+        Ok(out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no output"))?
+            .as_f32()?
+            .to_vec())
+    }
+}
+
+// PjRtClient/LoadedExecutable wrap heap pointers used from a single thread;
+// the coordinator moves the whole executor onto its one worker thread and
+// never shares it, so the move-only Send is sound.
+unsafe impl Send for PjrtExecutor {}
+
+/// Deterministic mock: logit k of image i = mean(image i) + k. Lets tests
+/// assert batching math end-to-end without artifacts; can inject failures
+/// and simulated compute latency.
+pub struct MockExecutor {
+    pub batch: usize,
+    pub image_elems: usize,
+    pub classes: usize,
+    pub delay: std::time::Duration,
+    pub fail_every: Option<u64>,
+    pub calls: u64,
+}
+
+impl MockExecutor {
+    pub fn new(batch: usize, image_elems: usize, classes: usize) -> Self {
+        MockExecutor {
+            batch,
+            image_elems,
+            classes,
+            delay: std::time::Duration::ZERO,
+            fail_every: None,
+            calls: 0,
+        }
+    }
+}
+
+impl BatchExecutor for MockExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        self.calls += 1;
+        if let Some(k) = self.fail_every {
+            if self.calls % k == 0 {
+                anyhow::bail!("injected failure on call {}", self.calls);
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = vec![0f32; self.batch * self.classes];
+        for i in 0..self.batch {
+            let img = &images[i * self.image_elems..(i + 1) * self.image_elems];
+            let mean: f32 = img.iter().sum::<f32>() / self.image_elems as f32;
+            for k in 0..self.classes {
+                out[i * self.classes + k] = mean + k as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut m = MockExecutor::new(2, 4, 3);
+        let imgs = vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
+        let a = m.execute(&imgs).unwrap();
+        assert_eq!(a, vec![1.0, 2.0, 3.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn mock_fail_injection() {
+        let mut m = MockExecutor::new(1, 1, 1);
+        m.fail_every = Some(2);
+        assert!(m.execute(&[0.0]).is_ok());
+        assert!(m.execute(&[0.0]).is_err());
+        assert!(m.execute(&[0.0]).is_ok());
+    }
+}

@@ -1,0 +1,162 @@
+//! Latency/throughput metrics: lock-free-ish counters and a log-bucketed
+//! histogram with percentile queries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (µs), 1µs … ~17min.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i covers [2^i, 2^(i+1)) µs
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..30).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (µs).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time metrics summary for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    pub rejected: u64,
+}
+
+/// Shared metrics for one coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub latency: Histogram,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batch_sizes: Mutex<Vec<u32>>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+        if let Ok(mut v) = self.batch_sizes.lock() {
+            if v.len() < 1_000_000 {
+                v.push(n as u32);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let reqs = self.batched_requests.load(Ordering::Relaxed);
+        Snapshot {
+            requests: self.latency.count(),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { reqs as f64 / batches as f64 },
+            p50_us: self.latency.quantile_us(0.50),
+            p95_us: self.latency.quantile_us(0.95),
+            p99_us: self.latency.quantile_us(0.99),
+            mean_us: self.latency.mean_us(),
+            max_us: self.latency.max_us(),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 256 && p50 <= 1024, "p50 bucket {p50}");
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max_us(), 1000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_snapshot() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        m.latency.record(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert_eq!(s.requests, 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the serving layer over the PJRT executables.
+//!
+//! The paper's contribution is the integerized *datapath*; the coordinator
+//! is the thin-but-real serving harness around it (DESIGN.md maps this to
+//! the "thin driver + request loop" case): a bounded request queue with
+//! backpressure, a dynamic batcher (max-batch + deadline), a worker thread
+//! that owns the PJRT engine (the `xla` handles hold raw pointers and stay
+//! on one thread), and latency/throughput metrics.
+//!
+//! The executor is a trait so every coordinator test runs against a mock;
+//! the PJRT-backed implementation lives in [`executor`] and is exercised
+//! by the integration tests and examples once artifacts exist.
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+
+pub use batcher::{BatcherConfig, Coordinator, Handle, Request, Response, SubmitError};
+pub use executor::{BatchExecutor, MockExecutor, PjrtExecutor};
+pub use metrics::{Histogram, Snapshot};

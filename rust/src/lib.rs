@@ -1,0 +1,42 @@
+//! # ivit — Low-Bit Integerization of Vision Transformers
+//!
+//! Production-quality reproduction of *"Low-Bit Integerization of Vision
+//! Transformers using Operand Reordering for Efficient Hardware"*
+//! (Lin & Shah, 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: an inference server (request
+//!   router + dynamic batcher over AOT-compiled PJRT executables), the
+//!   integerization toolchain, and the cycle-level **systolic-array
+//!   simulator** substrate that reproduces the paper's FPGA evaluation
+//!   (Table I).
+//! * **L2** — the JAX ViT in `python/compile/`, lowered once to HLO text
+//!   (`make artifacts`); never imported at runtime.
+//! * **L1** — Pallas kernels for the integerized attention hot path.
+//!
+//! Modules:
+//!
+//! * [`util`] — tensor I/O, mini-JSON, PRNG, property-testing harness.
+//! * [`quant`] — bit-accurate integer quantization math: Eq. 2 scale
+//!   folding, the Eq. 4 shift-exponential, the Fig. 5 sqrt/div-free
+//!   LayerNorm comparator.
+//! * [`sim`] — the systolic-array hardware model: PE grids, scan chains,
+//!   cycle counts and the activity-based energy model behind Table I.
+//! * [`model`] — ViT configuration and integerized checkpoint loading.
+//! * [`runtime`] — PJRT engine wrapping the `xla` crate (HLO-text load,
+//!   compile cache, literal marshalling).
+//! * [`coordinator`] — request queue, dynamic batcher, worker pool,
+//!   latency/throughput metrics.
+//! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
+//!   (criterion is not in this image's offline crate set).
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

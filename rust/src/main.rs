@@ -1,0 +1,291 @@
+//! `ivit` — the L3 coordinator binary.
+//!
+//! Self-contained after `make artifacts`: loads AOT-compiled HLO via PJRT
+//! and never touches Python.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use ivit::cli::{Args, USAGE};
+use ivit::coordinator::{BatcherConfig, Coordinator, PjrtExecutor, SubmitError};
+use ivit::model::{AttnCase, EvalSet};
+use ivit::runtime::Engine;
+use ivit::sim::{AttentionSim, EnergyModel};
+use ivit::util::tensorio::Tensor;
+use ivit::util::XorShift;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e:#}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "power" => cmd_power(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+/// `ivit serve` — the end-to-end driver: batching server + synthetic load.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mode = args.str("mode", "integerized");
+    let bits = args.u32("bits", 3)?;
+    let batch = args.usize("batch", 8)?;
+    let n_requests = args.usize("requests", 256)?;
+    let rate = args.f64("rate", 0.0)?;
+    let max_wait_ms = args.f64("max-wait-ms", 2.0)?;
+
+    println!("loading {mode}/{bits}b batch={batch} from {dir:?} ...");
+    let exec = PjrtExecutor::load(&dir, &mode, bits, batch)?;
+    let image_elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 512,
+            max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+        },
+    );
+    let h = coord.handle();
+
+    println!("serving {n_requests} requests (rate = {} req/s) ...", if rate > 0.0 { rate.to_string() } else { "closed-loop".into() });
+    let mut rng = XorShift::new(7);
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
+    let mut labels = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let idx = (rng.next_u64() as usize) % ev.n;
+        let img = ev.image(idx)?.to_vec();
+        assert_eq!(img.len(), image_elems);
+        labels.push(ev.labels[idx]);
+        loop {
+            match h.submit(img.clone()) {
+                Ok(rx) => {
+                    receivers.push(rx);
+                    break;
+                }
+                Err(SubmitError::QueueFull) => std::thread::sleep(Duration::from_micros(200)),
+                Err(SubmitError::Closed) => anyhow::bail!("coordinator closed"),
+            }
+        }
+        if rate > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+        }
+        if (i + 1) % 64 == 0 {
+            println!("  submitted {}/{n_requests}", i + 1);
+        }
+    }
+    let mut logits = Vec::with_capacity(n_requests);
+    for rx in receivers {
+        let resp = rx.recv()?;
+        if let Some(e) = resp.error {
+            anyhow::bail!("request {} failed: {e}", resp.id);
+        }
+        logits.push(resp.logits);
+    }
+    let wall = t0.elapsed();
+    let correct = logits
+        .iter()
+        .zip(&labels)
+        .filter(|(l, &y)| {
+            l.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(k, _)| k as i32)
+                == Some(y)
+        })
+        .count();
+    let s = coord.shutdown();
+    println!("\n== serve report ({mode}/{bits}b, batch {batch}) ==");
+    println!("requests      : {n_requests} ({} rejected-retries recorded)", s.rejected);
+    println!("wall time     : {:.3}s", wall.as_secs_f64());
+    println!("throughput    : {:.1} img/s", n_requests as f64 / wall.as_secs_f64());
+    println!("mean batch    : {:.2}", s.mean_batch);
+    println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
+    println!("latency p95   : {:.2} ms", s.p95_us as f64 / 1e3);
+    println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
+    println!("accuracy      : {:.4}", correct as f64 / n_requests as f64);
+    Ok(())
+}
+
+/// `ivit eval` — Table II accuracy for one variant.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mode = args.str("mode", "integerized");
+    let bits = args.u32("bits", 3)?;
+    let mut engine = Engine::new(&dir)?;
+    // prefer the largest batch variant available
+    let spec = engine
+        .manifest
+        .executables
+        .iter()
+        .filter(|e| e.mode == mode && e.bits == bits)
+        .max_by_key(|e| e.batch)
+        .ok_or_else(|| anyhow::anyhow!("no executable for mode={mode} bits={bits}"))?
+        .clone();
+    let name = spec.name.clone();
+    engine.load(&name)?;
+    let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
+    let limit = args.usize("limit", ev.n)?.min(ev.n);
+    let (acc, n_eval, wall) = eval_accuracy(&engine, &name, &ev, limit)?;
+    println!("mode={mode} bits={bits} eval_acc={acc:.4} over {n_eval} images in {:.2}s", wall);
+    Ok(())
+}
+
+/// Shared accuracy loop (also used by the table2 bench).
+pub fn eval_accuracy(engine: &Engine, exe_name: &str, ev: &EvalSet, limit: usize) -> Result<(f64, usize, f64)> {
+    let exe = engine.get(exe_name).unwrap();
+    let batch = exe.spec.batch;
+    let elems = ev.image_elems;
+    let classes = *exe.spec.outputs[0].shape.last().unwrap();
+    let mut correct = 0usize;
+    let t0 = Instant::now();
+    let mut i = 0usize;
+    while i < limit {
+        let n = batch.min(limit - i);
+        let mut payload = vec![0f32; batch * elems];
+        for b in 0..n {
+            payload[b * elems..(b + 1) * elems].copy_from_slice(ev.image(i + b)?);
+        }
+        let out = exe.run(&[Tensor::f32(exe.spec.inputs[0].shape.clone(), payload)])?;
+        let logits = out[0].as_f32()?;
+        for b in 0..n {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(k, _)| k as i32)
+                .unwrap();
+            if pred == ev.labels[i + b] {
+                correct += 1;
+            }
+        }
+        i += n;
+    }
+    Ok((correct as f64 / limit as f64, limit, t0.elapsed().as_secs_f64()))
+}
+
+/// `ivit power` — Table I for arbitrary geometry.
+fn cmd_power(args: &Args) -> Result<()> {
+    let n = args.usize("tokens", 198)?;
+    let d_in = args.usize("din", 384)?;
+    let d_head = args.usize("dhead", 64)?;
+    let bits = args.u32("bits", 3)?;
+    let mut model = EnergyModel::default();
+    model.freq_hz = args.f64("freq-mhz", 100.0)? * 1e6;
+    println!(
+        "Table I — {bits}-bit self-attention, N={n}, I={d_in}, O={d_head}, {:.0} MHz\n",
+        model.freq_hz / 1e6
+    );
+    let report = AttentionSim::paper_geometry(n, d_in, d_head, bits);
+    print!("{}", report.render(&model));
+    println!(
+        "\ntotal: {} PEs, {:.2}M MACs, {:.3} W",
+        report.total_pes(),
+        report.total_macs() as f64 / 1e6,
+        report.total_power_w(&model)
+    );
+    Ok(())
+}
+
+/// `ivit simulate` — replay the exported attention case bit-exactly.
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let case = AttnCase::load(&dir.join("attn_case"))?;
+    let shift = !args.bool("exact-exp");
+    let sim = case.build_sim(shift);
+    let t0 = Instant::now();
+    let out = sim.run(&case.x_codes)?;
+    let dt = t0.elapsed();
+    let mut ok = true;
+    ok &= check("Q codes", &out.q_codes.data, &case.expect_q_codes.data);
+    ok &= check("K codes", &out.k_codes.data, &case.expect_k_codes.data);
+    ok &= check("V codes", &out.v_codes.data, &case.expect_v_codes.data);
+    if shift {
+        ok &= check("attn head0", &out.attn_codes[0].data, &case.expect_attn_head0.data);
+    }
+    println!(
+        "simulated {} tokens × {} dim, {} heads in {:.1} ms — {}",
+        case.tokens,
+        case.dim,
+        case.heads,
+        dt.as_secs_f64() * 1e3,
+        if ok { "BIT-EXACT vs JAX" } else { "MISMATCH" }
+    );
+    let m = EnergyModel::default();
+    print!("{}", out.report.render(&m));
+    if !ok {
+        anyhow::bail!("simulation does not match the exported JAX reference");
+    }
+    Ok(())
+}
+
+fn check(name: &str, got: &[i32], want: &[i32]) -> bool {
+    let diff = got.iter().zip(want).filter(|(a, b)| a != b).count();
+    if diff == 0 {
+        println!("  {name:<12} OK ({} values)", got.len());
+        true
+    } else {
+        println!("  {name:<12} {diff}/{} MISMATCHED", got.len());
+        false
+    }
+}
+
+/// `ivit info` — manifest summary.
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let engine = Engine::new(&dir)?;
+    let m = &engine.manifest;
+    println!("artifacts : {:?}", m.dir);
+    println!("platform  : {}", engine.platform());
+    println!("model     : {:?}", m.model);
+    println!("eval set  : {} images", m.eval_count);
+    println!("executables:");
+    for e in &m.executables {
+        println!(
+            "  {:<22} mode={:<12} bits={:<2} batch={:<2} in={:?}",
+            e.name, e.mode, e.bits, e.batch, e.inputs.first().map(|s| &s.shape)
+        );
+    }
+    if let Some(obj) = m.metrics.as_obj() {
+        println!("metrics:");
+        for (k, v) in obj {
+            if let Some(acc) = v.path("eval_acc").and_then(ivit::util::Json::as_f64) {
+                println!("  {k:<10} eval_acc = {acc:.4}");
+            } else if let Some(o) = v.as_obj() {
+                let kv: Vec<String> = o
+                    .iter()
+                    .filter_map(|(k2, v2)| v2.as_f64().map(|x| format!("{k2}={x:.4}")))
+                    .collect();
+                if !kv.is_empty() {
+                    println!("  {k:<10} {}", kv.join(" "));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn _unused(_: &Path) {}

@@ -1,0 +1,162 @@
+//! The exported block-0 attention test case (`artifacts/attn_case/`):
+//! folded constants + input codes + expected stage outputs, produced by
+//! `compile.aot._export_attn_case`. Loading it lets the Rust quant/sim
+//! modules replay the exact attention computation the JAX model performs
+//! and assert bit-identical integer results — the cross-language contract.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::quant::fold::FoldedLinear;
+use crate::quant::linear::IntMat;
+use crate::sim::attention::{AttentionSim, AttentionSteps};
+use crate::sim::layernorm::LayerNormSim;
+use crate::sim::linear::LinearArraySim;
+use crate::util::json::Json;
+use crate::util::tensorio::Tensor;
+
+/// One folded linear layer as exported.
+#[derive(Debug)]
+pub struct CaseLinear {
+    pub codes: IntMat,
+    pub bias_folded: Vec<f32>,
+    pub w_scale: Vec<f32>,
+    pub out_scale: Vec<f32>,
+}
+
+/// The whole exported case.
+#[derive(Debug)]
+pub struct AttnCase {
+    pub dir: PathBuf,
+    pub bits: u32,
+    pub attn_bits: u32,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub tokens: usize,
+    pub dim: usize,
+    pub sx: f32,
+    pub s_q: f32,
+    pub s_k: f32,
+    pub s_v: f32,
+    pub s_attn: f32,
+    pub s_o: f32,
+    pub score_scale: f32,
+    pub o_eff: f32,
+    pub wq: CaseLinear,
+    pub wk: CaseLinear,
+    pub wv: CaseLinear,
+    pub wo: CaseLinear,
+    pub lnq_g: Vec<f32>,
+    pub lnq_b: Vec<f32>,
+    pub lnk_g: Vec<f32>,
+    pub lnk_b: Vec<f32>,
+    pub x_codes: IntMat,
+    pub expect_q_codes: IntMat,
+    pub expect_k_codes: IntMat,
+    pub expect_v_codes: IntMat,
+    pub expect_attn_head0: IntMat,
+    pub expect_out: Vec<f32>,
+}
+
+impl AttnCase {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let scalars = Json::parse(
+            &std::fs::read_to_string(dir.join("scalars.json")).context("read scalars.json")?,
+        )?;
+        let f = |k: &str| -> Result<f64> {
+            scalars.get(k).and_then(Json::as_f64).context(format!("scalar {k}"))
+        };
+        let lin = |name: &str| -> Result<CaseLinear> {
+            let codes = read_mat(dir, &format!("{name}_codes.bin"))?;
+            Ok(CaseLinear {
+                codes,
+                bias_folded: read_f32(dir, &format!("{name}_bias_folded.bin"))?,
+                w_scale: read_f32(dir, &format!("{name}_w_scale.bin"))?,
+                out_scale: read_f32(dir, &format!("{name}_out_scale.bin"))?,
+            })
+        };
+        Ok(AttnCase {
+            dir: dir.to_path_buf(),
+            bits: f("bits")? as u32,
+            attn_bits: f("attn_bits")? as u32,
+            heads: f("heads")? as usize,
+            head_dim: f("head_dim")? as usize,
+            tokens: f("tokens")? as usize,
+            dim: f("dim")? as usize,
+            sx: f("sx")? as f32,
+            s_q: f("s_q")? as f32,
+            s_k: f("s_k")? as f32,
+            s_v: f("s_v")? as f32,
+            s_attn: f("s_attn")? as f32,
+            s_o: f("s_o")? as f32,
+            score_scale: f("score_scale")? as f32,
+            o_eff: f("o_eff")? as f32,
+            wq: lin("wq")?,
+            wk: lin("wk")?,
+            wv: lin("wv")?,
+            wo: lin("wo")?,
+            lnq_g: read_f32(dir, "lnq_g.bin")?,
+            lnq_b: read_f32(dir, "lnq_b.bin")?,
+            lnk_g: read_f32(dir, "lnk_g.bin")?,
+            lnk_b: read_f32(dir, "lnk_b.bin")?,
+            x_codes: read_mat(dir, "x_codes.bin")?,
+            expect_q_codes: read_mat(dir, "q_codes.bin")?,
+            expect_k_codes: read_mat(dir, "k_codes.bin")?,
+            expect_v_codes: read_mat(dir, "v_codes.bin")?,
+            expect_attn_head0: read_mat(dir, "attn_head0_codes.bin")?,
+            expect_out: read_f32(dir, "out.bin")?,
+        })
+    }
+
+    /// Build the systolic simulator for this case.
+    pub fn build_sim(&self, shift: bool) -> AttentionSim {
+        let fold = |l: &CaseLinear| FoldedLinear {
+            codes: l.codes.clone(),
+            bias_folded: l.bias_folded.clone(),
+            w_scale: l.w_scale.clone(),
+            out_scale: l.out_scale.clone(),
+        };
+        AttentionSim {
+            wq: LinearArraySim::new("Q linear", fold(&self.wq), self.bits),
+            wk: LinearArraySim::new("K linear", fold(&self.wk), self.bits),
+            wv: LinearArraySim::new("V linear", fold(&self.wv), self.bits),
+            lnq: LayerNormSim::new(
+                "Q LayerNorm",
+                self.lnq_g.clone(),
+                self.lnq_b.clone(),
+                self.s_q,
+                self.bits,
+            ),
+            lnk: LayerNormSim::new(
+                "K LayerNorm",
+                self.lnk_g.clone(),
+                self.lnk_b.clone(),
+                self.s_k,
+                self.bits,
+            ),
+            steps: AttentionSteps {
+                s_q: self.s_q,
+                s_k: self.s_k,
+                s_v: self.s_v,
+                s_attn: self.s_attn,
+                s_o: self.s_o,
+                score_scale: self.score_scale,
+            },
+            heads: self.heads,
+            bits: self.bits,
+            attn_bits: self.attn_bits,
+            shift,
+        }
+    }
+}
+
+fn read_mat(dir: &Path, name: &str) -> Result<IntMat> {
+    let t = Tensor::read_from(&dir.join(name))?;
+    anyhow::ensure!(t.shape.len() == 2, "{name}: expected 2-d, got {:?}", t.shape);
+    Ok(IntMat::new(t.shape[0], t.shape[1], t.to_i32_vec()?))
+}
+
+fn read_f32(dir: &Path, name: &str) -> Result<Vec<f32>> {
+    Ok(Tensor::read_from(&dir.join(name))?.as_f32()?.to_vec())
+}

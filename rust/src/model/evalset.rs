@@ -1,0 +1,91 @@
+//! The exported evaluation split (synthetic-CIFAR images + labels).
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::tensorio::Tensor;
+
+/// Images `[n, h, w, c]` f32 and labels `[n]` i32.
+#[derive(Debug)]
+pub struct EvalSet {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub image_elems: usize,
+}
+
+impl EvalSet {
+    pub fn load(images_path: &Path, labels_path: &Path) -> Result<Self> {
+        let images = Tensor::read_from(images_path)?;
+        let labels_t = Tensor::read_from(labels_path)?;
+        ensure!(images.shape.len() == 4, "images must be [n,h,w,c], got {:?}", images.shape);
+        let n = images.shape[0];
+        let labels = labels_t.to_i32_vec()?;
+        ensure!(labels.len() == n, "labels {} vs images {n}", labels.len());
+        let image_elems = images.shape[1..].iter().product();
+        Ok(EvalSet { images, labels, n, image_elems })
+    }
+
+    /// Borrow image `i` as a flat f32 slice.
+    pub fn image(&self, i: usize) -> Result<&[f32]> {
+        let all = self.images.as_f32()?;
+        Ok(&all[i * self.image_elems..(i + 1) * self.image_elems])
+    }
+
+    /// Top-1 accuracy of per-image logits.
+    pub fn accuracy(&self, logits: &[Vec<f32>]) -> f64 {
+        let mut correct = 0usize;
+        for (i, l) in logits.iter().enumerate() {
+            if l.is_empty() {
+                continue;
+            }
+            let pred = l
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k as i32)
+                .unwrap_or(-1);
+            if pred == self.labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / logits.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorio::{Data, Tensor};
+
+    fn fixture(dir: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
+        std::fs::create_dir_all(dir).unwrap();
+        let ip = dir.join("img.bin");
+        let lp = dir.join("lab.bin");
+        Tensor::f32(vec![2, 2, 2, 1], (0..8).map(|i| i as f32).collect()).write_to(&ip).unwrap();
+        Tensor { shape: vec![2], data: Data::I32(vec![1, 0]) }.write_to(&lp).unwrap();
+        (ip, lp)
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("ivit_evalset");
+        let (ip, lp) = fixture(&dir);
+        let ev = EvalSet::load(&ip, &lp).unwrap();
+        assert_eq!(ev.n, 2);
+        assert_eq!(ev.image(1).unwrap(), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let dir = std::env::temp_dir().join("ivit_evalset2");
+        let (ip, lp) = fixture(&dir);
+        let ev = EvalSet::load(&ip, &lp).unwrap();
+        // labels are [1, 0]
+        let acc = ev.accuracy(&[vec![0.0, 1.0], vec![0.0, 1.0]]);
+        assert!((acc - 0.5).abs() < 1e-9);
+        let acc2 = ev.accuracy(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!((acc2 - 1.0).abs() < 1e-9);
+    }
+}

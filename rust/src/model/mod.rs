@@ -1,0 +1,8 @@
+//! Model-side loading: the eval set, cross-language attention test case,
+//! and integerized-checkpoint representation consumed by quant/sim.
+
+pub mod attn_case;
+pub mod evalset;
+
+pub use attn_case::AttnCase;
+pub use evalset::EvalSet;

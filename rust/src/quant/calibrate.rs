@@ -1,0 +1,113 @@
+//! Step-size calibration for post-training quantization.
+//!
+//! QAT learns its steps (LSQ, python side), but the Rust toolchain also
+//! supports calibrating a step from sample activations when integerizing a
+//! checkpoint without retraining (`ivit integerize`): min-max, percentile
+//! clipping, and an MSE line-search — the standard PTQ menu the paper's
+//! related work (FQ-ViT, PTQ4ViT) draws from.
+
+use super::{int_range, quantize};
+
+/// Δ = max|x| / qmax — the loosest (outlier-dominated) choice.
+pub fn calibrate_minmax(x: &[f32], bits: u32) -> f32 {
+    let (_, qmax) = int_range(bits);
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    (amax / qmax.max(1) as f32).max(1e-8)
+}
+
+/// Δ from the p-th percentile of |x| (p in (0,1]) — clips outliers.
+pub fn calibrate_percentile(x: &[f32], bits: u32, p: f64) -> f32 {
+    assert!((0.0..=1.0).contains(&p) && !x.is_empty());
+    let (_, qmax) = int_range(bits);
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((mags.len() as f64 - 1.0) * p).round() as usize;
+    (mags[idx] / qmax.max(1) as f32).max(1e-8)
+}
+
+/// Line-search over candidate steps minimising reconstruction MSE.
+pub fn calibrate_mse(x: &[f32], bits: u32, grid: usize) -> f32 {
+    assert!(grid >= 2 && !x.is_empty());
+    let base = calibrate_minmax(x, bits);
+    let mut best = (f64::INFINITY, base);
+    for g in 1..=grid {
+        let step = base * g as f32 / grid as f32;
+        let mse: f64 = x
+            .iter()
+            .map(|&v| {
+                let q = quantize(v, step, bits, true);
+                let e = (q as f32 * step - v) as f64;
+                e * e
+            })
+            .sum();
+        if mse < best.0 {
+            best = (mse, step);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn minmax_covers_extremes() {
+        let x = vec![-3.0, 0.1, 2.0];
+        let s = calibrate_minmax(&x, 3);
+        // qmax·Δ must reach max|x|
+        assert!((s * 3.0 - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_1_equals_minmax() {
+        prop_check("pct1-eq-minmax", 61, 100, |rng| {
+            let n = rng.int_in(2, 200) as usize;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let a = calibrate_minmax(&x, 4);
+            let b = calibrate_percentile(&x, 4, 1.0);
+            if (a - b).abs() > 1e-7 {
+                return Err(format!("{a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut x = vec![0.1f32; 99];
+        x.push(100.0);
+        let tight = calibrate_percentile(&x, 3, 0.9);
+        let loose = calibrate_minmax(&x, 3);
+        assert!(tight < loose / 100.0);
+    }
+
+    #[test]
+    fn mse_beats_or_ties_minmax() {
+        prop_check("mse-le-minmax", 62, 50, |rng| {
+            let n = 256;
+            // heavy-tailed: normal + a few large outliers
+            let mut x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for _ in 0..3 {
+                x.push(rng.uniform(8.0, 15.0) as f32);
+            }
+            let bits = 3;
+            let err = |s: f32| -> f64 {
+                x.iter()
+                    .map(|&v| {
+                        let q = quantize(v, s, bits, true);
+                        let e = (q as f32 * s - v) as f64;
+                        e * e
+                    })
+                    .sum()
+            };
+            let e_mse = err(calibrate_mse(&x, bits, 64));
+            let e_mm = err(calibrate_minmax(&x, bits));
+            if e_mse > e_mm + 1e-9 {
+                return Err(format!("mse {e_mse} > minmax {e_mm}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Eq. 2 scale folding — the integerization transform itself.
+//!
+//! Mirrors `python/compile/integerize.py`: given fp weights and learned
+//! steps, produce the constants the Fig. 1(b) datapath holds. Used by the
+//! `ivit integerize` CLI path and by tests that fold checkpoints in Rust
+//! and compare against the python-exported artifacts.
+
+use anyhow::{ensure, Result};
+
+use super::linear::IntMat;
+use super::{int_range, quantize};
+
+/// Quantizer hyper-parameters for one linear layer.
+#[derive(Debug, Clone)]
+pub struct QuantParams {
+    pub bits: u32,
+    /// Scalar Δ̄_X (the paper's collapsed activation step).
+    pub step_x: f32,
+    /// Per-output-channel Δ_W.
+    pub step_w: Vec<f32>,
+}
+
+/// The folded constants of one integerized linear layer (Eq. 2).
+#[derive(Debug, Clone)]
+pub struct FoldedLinear {
+    /// W_q codes, shape (N, K) row-major.
+    pub codes: IntMat,
+    /// b̃ = b / (Δ̄_X·Δ_W) — added to the integer accumulator.
+    pub bias_folded: Vec<f32>,
+    /// diag(Δ_W) — post-scale when Δ̄_X cancels into a following LayerNorm.
+    pub w_scale: Vec<f32>,
+    /// Δ̄_X·diag(Δ_W) — the full post-scale otherwise.
+    pub out_scale: Vec<f32>,
+}
+
+impl FoldedLinear {
+    /// Fold an fp weight matrix (N×K row-major) + bias with the given steps.
+    pub fn fold(w: &[f32], n: usize, k: usize, bias: &[f32], qp: &QuantParams) -> Result<Self> {
+        ensure!(w.len() == n * k, "weight shape");
+        ensure!(bias.len() == n && qp.step_w.len() == n, "bias/step shape");
+        let mut codes = vec![0i32; n * k];
+        for r in 0..n {
+            let sw = qp.step_w[r];
+            ensure!(sw > 0.0, "non-positive step_w[{r}]");
+            for c in 0..k {
+                codes[r * k + c] = quantize(w[r * k + c], sw, qp.bits, true);
+            }
+        }
+        let bias_folded: Vec<f32> =
+            bias.iter().zip(&qp.step_w).map(|(&b, &sw)| b / (qp.step_x * sw)).collect();
+        let w_scale = qp.step_w.clone();
+        let out_scale: Vec<f32> = qp.step_w.iter().map(|&sw| qp.step_x * sw).collect();
+        Ok(FoldedLinear { codes: IntMat::new(n, k, codes), bias_folded, w_scale, out_scale })
+    }
+
+    /// Apply the folded layer to activation codes: Eq. 2 end to end.
+    pub fn forward(&self, x: &IntMat) -> Result<Vec<f32>> {
+        let acc = super::linear::int_matmul(x, &self.codes)?;
+        let n = self.codes.rows;
+        let mut out = vec![0f32; acc.rows * n];
+        for i in 0..acc.rows {
+            for j in 0..n {
+                out[i * n + j] =
+                    (acc.at(i, j) as f32 + self.bias_folded[j]) * self.out_scale[j];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Checkpoint storage of this layer at `bits` precision, in bits.
+    pub fn storage_bits(&self, bits: u32) -> usize {
+        self.codes.data.len() * bits as usize + (self.bias_folded.len() + self.out_scale.len()) * 32
+    }
+}
+
+/// Collapse a per-channel activation step vector to the scalar Δ̄_X
+/// (mean — the Eq. 2 approximation; bench A1 measures its cost).
+pub fn collapse_step(steps: &[f32]) -> f32 {
+    steps.iter().sum::<f32>() / steps.len().max(1) as f32
+}
+
+/// Fold a weight-only quantization and verify the dequantized weights
+/// stay within half a step of the originals inside the clip range.
+pub fn fold_error(w: &[f32], codes: &IntMat, step_w: &[f32], bits: u32) -> f32 {
+    let (qmin, qmax) = int_range(bits);
+    let k = codes.cols;
+    let mut max_err = 0f32;
+    for r in 0..codes.rows {
+        for c in 0..k {
+            let orig = w[r * k + c];
+            let deq = codes.at(r, c) as f32 * step_w[r];
+            // only inside the representable range is the bound meaningful
+            if orig > (qmin as f32 + 0.5) * step_w[r] && orig < (qmax as f32 - 0.5) * step_w[r] {
+                max_err = max_err.max((deq - orig).abs() / step_w[r]);
+            }
+        }
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::linear::dequant_linear;
+    use crate::util::proptest::{assert_close, prop_check};
+    use crate::util::XorShift;
+
+    fn random_fold(rng: &mut XorShift, bits: u32) -> (Vec<f32>, usize, usize, Vec<f32>, QuantParams) {
+        let n = rng.int_in(1, 10) as usize;
+        let k = rng.int_in(1, 16) as usize;
+        let w: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 0.2) as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.02, 0.2) as f32).collect();
+        let qp = QuantParams { bits, step_x: rng.uniform(0.02, 0.3) as f32, step_w };
+        (w, n, k, bias, qp)
+    }
+
+    #[test]
+    fn folded_forward_equals_dequant_path() {
+        prop_check("fold-eq2", 71, 150, |rng| {
+            let bits = rng.int_in(2, 8) as u32;
+            let (w, n, k, bias, qp) = random_fold(rng, bits);
+            let folded = FoldedLinear::fold(&w, n, k, &bias, &qp).map_err(|e| e.to_string())?;
+            let m = rng.int_in(1, 8) as usize;
+            let (qmin, qmax) = int_range(bits);
+            let x = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
+            let got = folded.forward(&x).map_err(|e| e.to_string())?;
+            let want = dequant_linear(&x, &folded.codes, &bias, qp.step_x, &qp.step_w)
+                .map_err(|e| e.to_string())?;
+            assert_close(&got, &want, 3e-5, 3e-5)
+        });
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let mut rng = XorShift::new(72);
+        let (w, n, k, bias, qp) = random_fold(&mut rng, 3);
+        let folded = FoldedLinear::fold(&w, n, k, &bias, &qp).unwrap();
+        let (qmin, qmax) = int_range(3);
+        assert!(folded.codes.data.iter().all(|&c| (qmin..=qmax).contains(&c)));
+    }
+
+    #[test]
+    fn fold_quantization_error_bounded() {
+        let mut rng = XorShift::new(73);
+        let (w, n, k, bias, qp) = random_fold(&mut rng, 4);
+        let folded = FoldedLinear::fold(&w, n, k, &bias, &qp).unwrap();
+        let err = fold_error(&w, &folded.codes, &qp.step_w, 4);
+        assert!(err <= 0.5 + 1e-5, "fold error {err} exceeds half a step");
+    }
+
+    #[test]
+    fn collapse_is_mean() {
+        assert_eq!(collapse_step(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let qp = QuantParams { bits: 3, step_x: 0.1, step_w: vec![0.1] };
+        assert!(FoldedLinear::fold(&[0.0; 4], 1, 3, &[0.0], &qp).is_err());
+        assert!(FoldedLinear::fold(&[0.0; 3], 1, 3, &[0.0, 0.0], &qp).is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_step() {
+        let qp = QuantParams { bits: 3, step_x: 0.1, step_w: vec![0.0] };
+        assert!(FoldedLinear::fold(&[0.0; 3], 1, 3, &[0.0], &qp).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Eq. 5 / Fig. 5 — Welford statistics and the quantizing LayerNorm
+//! comparator, exactly as the systolic hardware evaluates them.
+
+use super::{int_range, round_half_even};
+
+/// Eq. 5 incremental mean/variance (population variance), the literal
+/// recurrence the μ/σ² PE rows run:
+/// μ_i = μ_{i-1} + (x_i-μ_{i-1})/i,  M2_i = M2_{i-1} + (x_i-μ_{i-1})(x_i-μ_i).
+pub fn welford(x: &[f32]) -> (f32, f32) {
+    let mut mu = 0f64;
+    let mut m2 = 0f64;
+    for (i, &xi) in x.iter().enumerate() {
+        let xi = xi as f64;
+        let d = xi - mu;
+        mu += d / (i + 1) as f64;
+        m2 += d * (xi - mu);
+    }
+    let n = x.len().max(1) as f64;
+    (mu as f32, (m2 / n) as f32)
+}
+
+/// Reference quantizing LayerNorm: `clip(round(LN(x)/Δ))`.
+pub fn qlayernorm_reference(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    step: f32,
+    bits: u32,
+    eps: f32,
+) -> Vec<i32> {
+    let (mu, var) = welford(x);
+    let (qmin, qmax) = int_range(bits);
+    let inv_sigma = 1.0 / (var + eps).sqrt();
+    x.iter()
+        .enumerate()
+        .map(|(i, &xi)| {
+            let y = (xi - mu) * inv_sigma * gamma[i] + beta[i];
+            (round_half_even(y / step) as i32).clamp(qmin, qmax)
+        })
+        .collect()
+}
+
+/// Fig. 5(b): the division/sqrt-free comparator bank.
+///
+/// Output level = qmin + #{k : LN(x) > s_k}, boundaries s_k = (k-½)Δ.
+/// Each comparison is decided as `[(x-μ)·γ]² vs σ²·(s_k-β)²` plus sign
+/// logic — no division, no square root, exactly the datapath in the
+/// figure. Bit-identical to [`qlayernorm_reference`] away from exact
+/// boundary ties (where round-half-even and a strict `>` may differ by
+/// one code; ties are measure-zero on real activations).
+pub fn qlayernorm_comparator(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    step: f32,
+    bits: u32,
+    eps: f32,
+) -> Vec<i32> {
+    let (mu, var) = welford(x);
+    let var = var + eps;
+    let (qmin, qmax) = int_range(bits);
+    x.iter()
+        .enumerate()
+        .map(|(i, &xi)| {
+            let u = (xi - mu) * gamma[i];
+            let u_sq = u * u;
+            let mut level = qmin;
+            for k in (qmin + 1)..=qmax {
+                let s_k = (k as f32 - 0.5) * step;
+                let t = s_k - beta[i];
+                let t_sq = var * t * t;
+                let crossed = if u >= 0.0 && t < 0.0 {
+                    true
+                } else if u < 0.0 && t >= 0.0 {
+                    false
+                } else if u >= 0.0 {
+                    u_sq > t_sq
+                } else {
+                    u_sq < t_sq
+                };
+                if crossed {
+                    level += 1;
+                }
+            }
+            level
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_eq_i32, prop_check};
+
+    #[test]
+    fn welford_matches_two_pass() {
+        prop_check("welford", 51, 300, |rng| {
+            let n = rng.int_in(1, 128) as usize;
+            let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+            let (mu, var) = welford(&x);
+            let mu2 = x.iter().sum::<f32>() / n as f32;
+            let var2 = x.iter().map(|&v| (v - mu2) * (v - mu2)).sum::<f32>() / n as f32;
+            if (mu - mu2).abs() > 1e-4 || (var - var2).abs() > 1e-3 {
+                return Err(format!("({mu},{var}) vs ({mu2},{var2})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn comparator_equals_reference() {
+        // The paper's central hardware identity: the sqrt/div-free
+        // comparator computes quantize(LN(x)).
+        prop_check("fig5-identity", 52, 300, |rng| {
+            let n = rng.int_in(4, 96) as usize;
+            let bits = rng.int_in(2, 6) as u32;
+            let step = rng.uniform(0.1, 0.8) as f32;
+            let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.3) as f32).collect();
+            let r = qlayernorm_reference(&x, &g, &b, step, bits, 1e-6);
+            let c = qlayernorm_comparator(&x, &g, &b, step, bits, 1e-6);
+            assert_eq_i32(&r, &c)
+        });
+    }
+
+    #[test]
+    fn negative_gamma_handled() {
+        // sign logic must survive γ < 0 (inequality direction flips).
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        let g = vec![-1.0; 4];
+        let b = vec![0.0; 4];
+        let r = qlayernorm_reference(&x, &g, &b, 0.5, 3, 1e-6);
+        let c = qlayernorm_comparator(&x, &g, &b, 0.5, 3, 1e-6);
+        assert_eq!(r, c);
+    }
+
+    #[test]
+    fn output_saturates_at_range() {
+        let x = vec![100.0, -100.0, 0.0, 0.1];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let r = qlayernorm_comparator(&x, &g, &b, 0.1, 3, 1e-6);
+        assert_eq!(r[0], 3); // qmax
+        assert_eq!(r[1], -4); // qmin
+    }
+
+    #[test]
+    fn constant_row_is_stable() {
+        // zero variance: eps keeps the comparator defined; LN(x)=β.
+        let x = vec![2.5; 8];
+        let g = vec![1.0; 8];
+        let b = vec![0.3; 8];
+        let r = qlayernorm_reference(&x, &g, &b, 0.25, 3, 1e-6);
+        let c = qlayernorm_comparator(&x, &g, &b, 0.25, 3, 1e-6);
+        assert_eq!(r, c);
+        assert!(r.iter().all(|&v| v == 1)); // round(0.3/0.25)=1
+    }
+}

@@ -1,0 +1,168 @@
+//! Integer matmul and the Eq. 2 integerized linear layer.
+//!
+//! `int_matmul` is the O(N³) workhorse the paper reorders the graph
+//! around; `int_linear` applies the folded-bias + post-scale epilogue and
+//! must agree with `dequant_linear` (the Fig. 1(a) path) to fp tolerance —
+//! that equality is the paper's core algebraic claim, and is property-
+//! tested below over random shapes, codes and scales.
+
+use anyhow::{ensure, Result};
+
+/// Row-major integer matrix of codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl IntMat {
+    pub fn new(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        IntMat { rows, cols, data }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// `X (M×K) · Wᵀ (N×K) → acc (M×N)` in i32 (wide accumulator, like the
+/// paper's low-bit MAC PEs with a full-width accumulation register).
+pub fn int_matmul(x: &IntMat, w: &IntMat) -> Result<IntMat> {
+    ensure!(x.cols == w.cols, "K mismatch: {} vs {}", x.cols, w.cols);
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let xr = x.row(i);
+        for j in 0..n {
+            let wr = w.row(j);
+            let mut acc = 0i64; // guard against i32 overflow mid-sum
+            for p in 0..k {
+                acc += xr[p] as i64 * wr[p] as i64;
+            }
+            out[i * n + j] = i32::try_from(acc).map_err(|_| {
+                anyhow::anyhow!("accumulator overflow at ({i},{j}): {acc}")
+            })?;
+        }
+    }
+    Ok(IntMat::new(m, n, out))
+}
+
+/// Eq. 2:  Y = [X_q·W_qᵀ + b/(Δ̄_X·Δ_W)] · Δ̄_X·diag(Δ_W).
+///
+/// `step_w` has one entry per output channel (row of `w`).
+pub fn int_linear(
+    x: &IntMat,
+    w: &IntMat,
+    bias: &[f32],
+    step_x: f32,
+    step_w: &[f32],
+) -> Result<Vec<f32>> {
+    ensure!(bias.len() == w.rows && step_w.len() == w.rows, "bias/step_w shape");
+    let acc = int_matmul(x, w)?;
+    let mut out = vec![0f32; acc.rows * acc.cols];
+    for j in 0..acc.cols {
+        let folded_bias = bias[j] / (step_x * step_w[j]);
+        let scale = step_x * step_w[j];
+        for i in 0..acc.rows {
+            out[i * acc.cols + j] = (acc.at(i, j) as f32 + folded_bias) * scale;
+        }
+    }
+    Ok(out)
+}
+
+/// Fig. 1(a) reference: dequantize both operands, multiply in f32.
+pub fn dequant_linear(
+    x: &IntMat,
+    w: &IntMat,
+    bias: &[f32],
+    step_x: f32,
+    step_w: &[f32],
+) -> Result<Vec<f32>> {
+    ensure!(x.cols == w.cols, "K mismatch");
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                let xv = x.at(i, p) as f64 * step_x as f64;
+                let wv = w.at(j, p) as f64 * step_w[j] as f64;
+                acc += xv * wv;
+            }
+            out[i * n + j] = (acc + bias[j] as f64) as f32;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, prop_check};
+
+    fn rand_case(rng: &mut crate::util::XorShift, bits: u32) -> (IntMat, IntMat, Vec<f32>, f32, Vec<f32>) {
+        let (qmin, qmax) = crate::quant::int_range(bits);
+        let m = rng.int_in(1, 12) as usize;
+        let k = rng.int_in(1, 24) as usize;
+        let n = rng.int_in(1, 12) as usize;
+        let x = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
+        let w = IntMat::new(n, k, rng.codes(n * k, qmin, qmax));
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let sx = rng.uniform(0.01, 0.3) as f32;
+        let sw: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 0.3) as f32).collect();
+        (x, w, bias, sx, sw)
+    }
+
+    #[test]
+    fn matmul_2x2_known() {
+        let x = IntMat::new(2, 2, vec![1, 2, 3, 4]);
+        let w = IntMat::new(2, 2, vec![1, 0, 0, 1]); // identity rows
+        let acc = int_matmul(&x, &w).unwrap();
+        assert_eq!(acc.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn matmul_rejects_shape_mismatch() {
+        let x = IntMat::new(2, 3, vec![0; 6]);
+        let w = IntMat::new(2, 2, vec![0; 4]);
+        assert!(int_matmul(&x, &w).is_err());
+    }
+
+    #[test]
+    fn reordering_is_lossless() {
+        // The paper's Eq. 2: integerized == dequantize-then-matmul.
+        prop_check("eq2-lossless", 21, 200, |rng| {
+            let bits = rng.int_in(2, 8) as u32;
+            let (x, w, bias, sx, sw) = rand_case(rng, bits);
+            let a = int_linear(&x, &w, &bias, sx, &sw).map_err(|e| e.to_string())?;
+            let b = dequant_linear(&x, &w, &bias, sx, &sw).map_err(|e| e.to_string())?;
+            assert_close(&a, &b, 2e-5, 2e-5)
+        });
+    }
+
+    #[test]
+    fn zero_codes_give_bias() {
+        let x = IntMat::new(2, 3, vec![0; 6]);
+        let w = IntMat::new(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let bias = vec![0.5, -1.5];
+        let y = int_linear(&x, &w, &bias, 0.1, &[0.2, 0.3]).unwrap();
+        assert_close(&y, &[0.5, -1.5, 0.5, -1.5], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn accumulator_uses_wide_sum() {
+        // K large enough that i32 codes at 8 bits cannot overflow i64 but
+        // a naive i16 accumulator would overflow.
+        let k = 4096;
+        let x = IntMat::new(1, k, vec![127; k]);
+        let w = IntMat::new(1, k, vec![127; k]);
+        let acc = int_matmul(&x, &w).unwrap();
+        assert_eq!(acc.data[0], 127 * 127 * k as i32);
+    }
+}

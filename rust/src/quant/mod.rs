@@ -1,0 +1,131 @@
+//! Bit-accurate integer quantization math — the Rust statement of §III.
+//!
+//! This module is the L3-side mirror of `python/compile/{quantizers,
+//! integerize,kernels/ref}.py`: the same Eq. 2 scale folding, Eq. 4
+//! shift-exponential and Fig. 5 comparator LayerNorm, over plain `i32`
+//! code vectors. It is the golden reference the systolic simulator
+//! ([`crate::sim`]) is checked against, and executes the exported
+//! cross-language test vectors so python and rust can never drift apart.
+
+pub mod calibrate;
+pub mod fold;
+pub mod layernorm;
+pub mod linear;
+pub mod shift_exp;
+pub mod softmax;
+
+pub use calibrate::{calibrate_minmax, calibrate_mse, calibrate_percentile};
+pub use fold::{FoldedLinear, QuantParams};
+pub use layernorm::{qlayernorm_comparator, qlayernorm_reference, welford};
+pub use linear::{dequant_linear, int_linear, int_matmul};
+pub use shift_exp::{shift_exp, shift_exp_fixed, LOG2E};
+pub use softmax::{exact_softmax_row, qk_attention, shift_softmax_row};
+
+/// Signed integer range of a `bits`-wide operand: `[-2^(b-1), 2^(b-1)-1]`.
+pub fn int_range(bits: u32) -> (i32, i32) {
+    assert!((1..=16).contains(&bits), "unsupported bit width {bits}");
+    (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+}
+
+/// Unsigned range `[0, 2^b - 1]` (attention probabilities).
+pub fn uint_range(bits: u32) -> (i32, i32) {
+    assert!((1..=16).contains(&bits), "unsupported bit width {bits}");
+    (0, (1 << bits) - 1)
+}
+
+/// `q = clip(round(x/Δ))` with round-half-even, matching `jnp.round`.
+pub fn quantize(x: f32, step: f32, bits: u32, signed: bool) -> i32 {
+    let (qmin, qmax) = if signed { int_range(bits) } else { uint_range(bits) };
+    let v = round_half_even(x / step);
+    (v as i32).clamp(qmin, qmax)
+}
+
+/// Round-half-to-even, the IEEE default used by numpy/jax `round`.
+/// (Rust's `f32::round` rounds half away from zero, which would diverge
+/// from the Python oracle on exact .5 boundaries.)
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let down = x.trunc();
+        let up = down + x.signum();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+/// Quantize a slice.
+pub fn quantize_vec(x: &[f32], step: f32, bits: u32, signed: bool) -> Vec<i32> {
+    x.iter().map(|&v| quantize(v, step, bits, signed)).collect()
+}
+
+/// Dequantize a code vector.
+pub fn dequantize_vec(q: &[i32], step: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * step).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(int_range(3), (-4, 3));
+        assert_eq!(int_range(2), (-2, 1));
+        assert_eq!(int_range(8), (-128, 127));
+        assert_eq!(uint_range(3), (0, 7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn range_rejects_zero_bits() {
+        int_range(0);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // numpy: round(0.5)=0, round(1.5)=2, round(2.5)=2, round(-0.5)=-0, round(-1.5)=-2
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(3.49), 3.0);
+        assert_eq!(round_half_even(-3.51), -4.0);
+    }
+
+    #[test]
+    fn quantize_clips() {
+        assert_eq!(quantize(100.0, 0.5, 3, true), 3);
+        assert_eq!(quantize(-100.0, 0.5, 3, true), -4);
+        assert_eq!(quantize(0.26, 0.5, 3, true), 1);
+        assert_eq!(quantize(-0.9, 0.5, 3, true), -2);
+        assert_eq!(quantize(0.9, 0.25, 3, false), 4);
+        assert_eq!(quantize(-0.3, 0.25, 3, false), 0);
+    }
+
+    #[test]
+    fn quantize_dequantize_bounded_error() {
+        prop_check("quant-error-le-half-step", 11, 300, |rng| {
+            let step = rng.uniform(0.01, 0.5) as f32;
+            let bits = rng.int_in(2, 8) as u32;
+            let (qmin, qmax) = int_range(bits);
+            let x = rng.normal() as f32;
+            let q = quantize(x, step, bits, true);
+            let back = q as f32 * step;
+            // inside the clip range the error is ≤ step/2
+            if x > qmin as f32 * step && x < qmax as f32 * step
+                && (back - x).abs() > step / 2.0 + 1e-6
+            {
+                return Err(format!("x={x} step={step} bits={bits} back={back}"));
+            }
+            Ok(())
+        });
+    }
+}

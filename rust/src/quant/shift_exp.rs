@@ -1,0 +1,120 @@
+//! Eq. 4 — the base-2 shift exponential: `e^x ≈ (1+r) · 2^⌊x·log2(e)⌋`.
+//!
+//! Two forms are provided:
+//!
+//! * [`shift_exp`] — the float-domain statement (what the JAX oracle and
+//!   the Pallas kernel compute);
+//! * [`shift_exp_fixed`] — the bit-level fixed-point form the PE actually
+//!   wires: mantissa `(1+r)` in Qm fixed point, shifted by the integer
+//!   exponent. This is what [`crate::sim`]'s exp-PEs execute, and it is
+//!   tested here against the float form to a mantissa-LSB bound.
+
+pub const LOG2E: f32 = std::f32::consts::LOG2_E;
+
+/// Float-domain Eq. 4 (Mitchell's approximation of 2^r by 1+r).
+pub fn shift_exp(x: f32) -> f32 {
+    let t = x * LOG2E;
+    let fl = t.floor();
+    let r = t - fl;
+    (1.0 + r) * fl.exp2()
+}
+
+/// Fixed-point Eq. 4, `frac_bits` of mantissa precision.
+///
+/// Returns the value as f32 for comparison, but internally performs only
+/// the integer ops the hardware has: multiply by a fixed-point log2(e),
+/// split integer/fraction, and a shift of the `(1 << frac) + r_fixed`
+/// mantissa. Negative exponents shift right (values < 1).
+pub fn shift_exp_fixed(x: f32, frac_bits: u32) -> f32 {
+    debug_assert!(frac_bits <= 24);
+    let one = 1i64 << frac_bits;
+    // t = x·log2(e) in Q(frac_bits)
+    let t_fixed = (x * LOG2E * one as f32).round() as i64;
+    let fl = t_fixed >> frac_bits; // floor (arithmetic shift)
+    let r_fixed = t_fixed - (fl << frac_bits); // fractional part, in [0, one)
+    let mantissa = one + r_fixed; // (1 + r) in Q(frac_bits)
+    // value = mantissa · 2^fl / one
+    let v = if fl >= 0 {
+        (mantissa as f64) * (1u64 << fl.min(62)) as f64
+    } else {
+        (mantissa as f64) / (1u64 << (-fl).min(62)) as f64
+    };
+    (v / one as f64) as f32
+}
+
+/// Max relative error of Mitchell's 2^r ≈ 1+r on r ∈ [0,1): the maximum of
+/// (1+r)·2^(-r) − 1 at r = 1/ln2 − 1 ≈ 0.4427 is ≈ 0.0615 (plus a little
+/// f32 slack for the t = x·log2(e) rounding).
+pub const MITCHELL_MAX_REL_ERR: f32 = 0.0620;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn exact_at_integer_exponents() {
+        // x = k·ln2 → r = 0 → exact powers of two.
+        for k in -8..=8 {
+            let x = k as f32 * std::f32::consts::LN_2;
+            let want = (k as f32).exp2();
+            let got = shift_exp(x);
+            assert!(
+                (got - want).abs() / want < 1e-5,
+                "k={k}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_mitchell() {
+        prop_check("mitchell-bound", 31, 500, |rng| {
+            let x = rng.uniform(-20.0, 3.0) as f32;
+            let approx = shift_exp(x);
+            let exact = x.exp();
+            let rel = (approx - exact).abs() / exact;
+            if rel > MITCHELL_MAX_REL_ERR {
+                return Err(format!("x={x}: rel err {rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn approximation_overestimates() {
+        // 1+r ≥ 2^r on [0,1] → shift_exp ≥ exp, always.
+        prop_check("mitchell-overestimates", 32, 300, |rng| {
+            let x = rng.uniform(-10.0, 3.0) as f32;
+            if shift_exp(x) + 1e-9 < x.exp() {
+                return Err(format!("x={x} under-estimates"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_point_matches_float() {
+        prop_check("fixed-matches-float", 33, 300, |rng| {
+            let x = rng.uniform(-12.0, 2.0) as f32;
+            let f = shift_exp(x);
+            let q = shift_exp_fixed(x, 12);
+            // quantisation of t to Q12 perturbs the exponent by ≤ 2^-12
+            let tol = f * 3e-3 + 1e-6;
+            if (f - q).abs() > tol {
+                return Err(format!("x={x}: float {f} vs fixed {q}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_point_monotone() {
+        let mut prev = 0.0f32;
+        for i in 0..200 {
+            let x = -10.0 + i as f32 * 0.06;
+            let v = shift_exp_fixed(x, 12);
+            assert!(v >= prev, "not monotone at x={x}");
+            prev = v;
+        }
+    }
+}

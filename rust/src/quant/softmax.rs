@@ -1,0 +1,129 @@
+//! Row softmax built on the shift exponential, plus the full Fig. 4
+//! QKᵀ→softmax→quantize attention stage over integer codes.
+
+use anyhow::Result;
+
+use super::linear::{int_matmul, IntMat};
+use super::shift_exp::shift_exp;
+use super::{round_half_even, uint_range};
+
+/// Softmax of one row of (already scaled) scores using `exp` = shift_exp.
+pub fn shift_softmax_row(z: &[f32]) -> Vec<f32> {
+    softmax_row_with(z, shift_exp)
+}
+
+/// Exact-softmax reference for the same row.
+pub fn exact_softmax_row(z: &[f32]) -> Vec<f32> {
+    softmax_row_with(z, |x| x.exp())
+}
+
+fn softmax_row_with(z: &[f32], exp: impl Fn(f32) -> f32) -> Vec<f32> {
+    let m = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = z.iter().map(|&x| exp(x - m)).collect();
+    let s: f32 = e.iter().sum();
+    e.iter().map(|&x| x / s).collect()
+}
+
+/// Fig. 4 stage: scores = Q_q·K_qᵀ (int), softmax(scale·scores), quantize
+/// to unsigned `attn_bits` codes with step `step_attn`.
+///
+/// Matches `ref.qk_shift_softmax` (and the Pallas kernel) exactly on the
+/// integer outputs. Returns (attn codes M×N, raw int scores).
+pub fn qk_attention(
+    q: &IntMat,
+    k: &IntMat,
+    scale: f32,
+    step_attn: f32,
+    attn_bits: u32,
+    shift: bool,
+) -> Result<(IntMat, IntMat)> {
+    let scores = int_matmul(q, k)?;
+    let (lo, hi) = uint_range(attn_bits);
+    let mut codes = vec![0i32; scores.rows * scores.cols];
+    for i in 0..scores.rows {
+        let row: Vec<f32> = scores.row(i).iter().map(|&s| s as f32 * scale).collect();
+        let p = if shift { shift_softmax_row(&row) } else { exact_softmax_row(&row) };
+        for (j, &pj) in p.iter().enumerate() {
+            codes[i * scores.cols + j] =
+                (round_half_even(pj / step_attn) as i32).clamp(lo, hi);
+        }
+    }
+    Ok((IntMat::new(scores.rows, scores.cols, codes), scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn rows_sum_to_one() {
+        prop_check("softmax-normalised", 41, 200, |rng| {
+            let n = rng.int_in(2, 64) as usize;
+            let z: Vec<f32> = (0..n).map(|_| rng.uniform(-8.0, 8.0) as f32).collect();
+            for p in [shift_softmax_row(&z), exact_softmax_row(&z)] {
+                let s: f32 = p.iter().sum();
+                if (s - 1.0).abs() > 1e-5 {
+                    return Err(format!("sum {s}"));
+                }
+                if p.iter().any(|&x| !(0.0..=1.0001).contains(&x)) {
+                    return Err("out of [0,1]".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shift_close_to_exact() {
+        // normalisation cancels most of the Mitchell error: row-wise
+        // L∞ distance stays well under the raw 5.7% bound.
+        prop_check("shift-vs-exact", 42, 200, |rng| {
+            let n = rng.int_in(2, 64) as usize;
+            let z: Vec<f32> = (0..n).map(|_| rng.uniform(-6.0, 6.0) as f32).collect();
+            let a = shift_softmax_row(&z);
+            let b = exact_softmax_row(&z);
+            let d = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            if d > 0.06 {
+                return Err(format!("L∞ {d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preserves_argmax() {
+        prop_check("softmax-argmax", 43, 200, |rng| {
+            let n = rng.int_in(2, 32) as usize;
+            let z: Vec<f32> = (0..n).map(|_| rng.uniform(-5.0, 5.0) as f32).collect();
+            let am = |v: &[f32]| {
+                v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+            };
+            if am(&shift_softmax_row(&z)) != am(&exact_softmax_row(&z)) {
+                return Err("argmax flipped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qk_attention_shapes_and_range() {
+        let mut rng = crate::util::XorShift::new(44);
+        let (m, n, d) = (8, 8, 16);
+        let q = IntMat::new(m, d, rng.codes(m * d, -4, 3));
+        let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+        let (codes, scores) = qk_attention(&q, &k, 0.02, 1.0 / 7.0, 3, true).unwrap();
+        assert_eq!((codes.rows, codes.cols), (m, n));
+        assert_eq!((scores.rows, scores.cols), (m, n));
+        assert!(codes.data.iter().all(|&c| (0..=7).contains(&c)));
+    }
+
+    #[test]
+    fn uniform_scores_give_uniform_attention() {
+        let q = IntMat::new(2, 4, vec![0; 8]);
+        let k = IntMat::new(4, 4, vec![1, 2, 3, 4, 5, 6, 7, 8, 1, 1, 1, 1, 2, 2, 2, 2]);
+        // zero Q → all scores 0 → softmax uniform = 0.25 → code round(0.25/step)
+        let (codes, _) = qk_attention(&q, &k, 0.1, 0.125, 3, true).unwrap();
+        assert!(codes.data.iter().all(|&c| c == 2), "{:?}", codes.data);
+    }
+}

@@ -1,0 +1,149 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! One [`Engine`] owns a CPU PJRT client and a registry of compiled
+//! executables keyed by manifest name. Compilation happens once at load;
+//! the request path is `buffers in → execute → literal out` only.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::tensorio::{Data, Tensor};
+
+use super::manifest::{ExecutableSpec, Manifest};
+
+/// A compiled model variant plus its manifest spec.
+pub struct Executable {
+    pub spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling this executable.
+    pub compile_time_s: f64,
+}
+
+impl Executable {
+    /// Execute on one batch. Inputs must match the spec's shapes/dtypes.
+    ///
+    /// Outputs come back as [`Tensor`]s; the AOT path lowers with
+    /// `return_tuple=True`, so the single device output is a tuple that is
+    /// unpacked here.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{} inputs given, spec wants {}",
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "input shape {:?} != spec {:?}",
+                t.shape,
+                spec.shape
+            );
+            literals.push(tensor_to_literal(t)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?;
+        let lit = first.to_literal_sync()?;
+        // return_tuple=True → unpack the tuple elements
+        let elems = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for (i, e) in elems.into_iter().enumerate() {
+            let spec = self.spec.outputs.get(i);
+            out.push(literal_to_tensor(&e, spec.map(|s| s.shape.clone()))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Compile-once registry over the artifact manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Create the engine; compiles nothing yet.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create CPU PJRT client")?;
+        Ok(Engine { manifest, client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one executable by manifest name (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.executables.contains_key(name) {
+            let spec = self.manifest.find(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            let compile_time_s = t0.elapsed().as_secs_f64();
+            log::info!("compiled {name} in {compile_time_s:.2}s");
+            self.executables.insert(
+                name.to_string(),
+                Executable { spec, exe, compile_time_s },
+            );
+        }
+        Ok(&self.executables[name])
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.executables.get(name)
+    }
+
+    /// Load the variant for (mode, bits, batch).
+    pub fn load_variant(&mut self, mode: &str, bits: u32, batch: usize) -> Result<String> {
+        let name = self.manifest.select(mode, bits, batch)?.name.clone();
+        self.load(&name)?;
+        Ok(name)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+        Data::I64(v) => xla::Literal::vec1(v),
+        other => anyhow::bail!(
+            "unsupported input dtype {:?} — the AOT contract uses f32/i32",
+            Tensor { shape: t.shape.clone(), data: other.clone() }.dtype()
+        ),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape_hint: Option<Vec<usize>>) -> Result<Tensor> {
+    let ty = lit.ty()?;
+    let n = lit.element_count();
+    let shape = shape_hint.unwrap_or_else(|| vec![n]);
+    anyhow::ensure!(
+        shape.iter().product::<usize>() == n,
+        "shape {:?} does not hold {n} elements",
+        shape
+    );
+    let data = match ty {
+        xla::ElementType::F32 => Data::F32(lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => Data::I32(lit.to_vec::<i32>()?),
+        xla::ElementType::S64 => Data::I64(lit.to_vec::<i64>()?),
+        xla::ElementType::U8 => Data::U8(lit.to_vec::<u8>()?),
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    };
+    Ok(Tensor { shape, data })
+}

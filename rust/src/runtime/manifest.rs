@@ -1,0 +1,171 @@
+//! `artifacts/manifest.json` — the contract between `compile.aot` and the
+//! Rust runtime: which executables exist, their shapes, batch sizes and
+//! modes, where the eval set lives, and the recorded training metrics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifacts dir.
+    pub path: String,
+    pub batch: usize,
+    /// "fp32" | "qvit" | "integerized" | "attn_pallas".
+    pub mode: String,
+    pub bits: u32,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: Vec<ExecutableSpec>,
+    pub model: BTreeMap<String, f64>,
+    pub eval_images: PathBuf,
+    pub eval_labels: PathBuf,
+    pub eval_count: usize,
+    /// Training/eval accuracy metrics recorded by the build (Table II).
+    pub metrics: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read manifest in {dir:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&raw).context("parse manifest.json")?;
+        let execs = j
+            .get("executables")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing executables"))?;
+        let mut executables = Vec::new();
+        for e in execs {
+            executables.push(ExecutableSpec {
+                name: req_str(e, "name")?.to_string(),
+                path: req_str(e, "path")?.to_string(),
+                batch: e.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                mode: req_str(e, "mode")?.to_string(),
+                bits: e.get("bits").and_then(Json::as_usize).unwrap_or(32) as u32,
+                inputs: specs(e.get("inputs"))?,
+                outputs: specs(e.get("outputs"))?,
+            });
+        }
+        let model = j
+            .get("model")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let ev = j.get("evalset").ok_or_else(|| anyhow!("manifest missing evalset"))?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            executables,
+            model,
+            eval_images: dir.join(req_str(ev, "images")?),
+            eval_labels: dir.join(req_str(ev, "labels")?),
+            eval_count: ev.get("count").and_then(Json::as_usize).unwrap_or(0),
+            metrics: j.get("metrics").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))
+    }
+
+    /// Pick the model variant for a mode/bits/batch combination.
+    pub fn select(&self, mode: &str, bits: u32, batch: usize) -> Result<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.mode == mode && e.bits == bits && e.batch == batch)
+            .ok_or_else(|| anyhow!("no executable for mode={mode} bits={bits} batch={batch}"))
+    }
+
+    pub fn hlo_path(&self, spec: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key).and_then(Json::as_str).ok_or_else(|| anyhow!("manifest missing '{key}'"))
+}
+
+fn specs(j: Option<&Json>) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    if let Some(arr) = j.and_then(Json::as_arr) {
+        for s in arr {
+            out.push(TensorSpec {
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|v| v.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: s.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let doc = r#"{
+          "version": 1,
+          "model": {"dim": 128, "depth": 4},
+          "executables": [
+            {"name": "model_int_3b_b8", "path": "m.hlo.txt", "batch": 8,
+             "mode": "integerized", "bits": 3,
+             "inputs": [{"shape": [8,32,32,3], "dtype": "f32"}],
+             "outputs": [{"shape": [8,10], "dtype": "f32"}]}
+          ],
+          "evalset": {"images": "ei.bin", "labels": "el.bin", "count": 64},
+          "metrics": {"fp32": {"eval_acc": 0.9}}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join("ivit_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.executables.len(), 1);
+        let e = m.select("integerized", 3, 8).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![8, 32, 32, 3]);
+        assert_eq!(m.eval_count, 64);
+        assert!(m.select("fp32", 32, 1).is_err());
+        assert_eq!(
+            m.metrics.path("fp32.eval_acc").and_then(Json::as_f64),
+            Some(0.9)
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

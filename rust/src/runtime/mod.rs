@@ -1,0 +1,13 @@
+//! PJRT runtime — loads and executes the AOT artifacts.
+//!
+//! Wraps the published `xla` crate (xla_extension 0.5.1, CPU PJRT):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that 0.5.1's proto path
+//! rejects — see /opt/xla-example/README.md). Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ExecutableSpec, Manifest, TensorSpec};

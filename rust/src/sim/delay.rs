@@ -1,0 +1,53 @@
+//! Delay lines — the Table I "delay" rows (N×O register grids).
+//!
+//! The Q/K paths need their operand streams held while the other-side
+//! linear array and LayerNorm fill; the hardware spends an N×O grid of
+//! shift registers per path. Functionally a no-op, but it burns real
+//! power (0.858 W per path in the paper's 3-bit synthesis), so the
+//! simulator accounts it explicitly.
+
+use super::stats::BlockStats;
+
+#[derive(Debug)]
+pub struct DelayLineSim {
+    pub name: String,
+    /// Word width held in each register (operand bits).
+    pub bits: u32,
+}
+
+impl DelayLineSim {
+    pub fn new(name: impl Into<String>, bits: u32) -> Self {
+        DelayLineSim { name: name.into(), bits }
+    }
+
+    /// Hold an `rows×cols` stream for `hold_cycles` cycles.
+    pub fn run(&self, rows: usize, cols: usize, hold_cycles: u64) -> BlockStats {
+        let mut stats = BlockStats::new(self.name.clone(), "N x O", (rows * cols) as u64);
+        stats.kind = super::energy::PeKind::Delay;
+        stats.cycles = hold_cycles;
+        // every register shifts its word once per cycle while holding
+        stats.delay_shifts = (rows * cols) as u64 * hold_cycles;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::EnergyModel;
+
+    #[test]
+    fn paper_pe_count() {
+        // DeiT-S head: 198×64 = 12,672 delay registers per path (Table I).
+        let s = DelayLineSim::new("delay", 3).run(198, 64, 100);
+        assert_eq!(s.pe_count, 12_672);
+    }
+
+    #[test]
+    fn energy_scales_with_hold() {
+        let m = EnergyModel::default();
+        let a = DelayLineSim::new("d", 3).run(4, 4, 10);
+        let b = DelayLineSim::new("d", 3).run(4, 4, 20);
+        assert!((b.energy_pj(&m) / a.energy_pj(&m) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig. 5 / Eq. 5 — systolic-compatible quantizing LayerNorm.
+//!
+//! Two PE rows (a μ row and a σ² row, the paper's "2×O" grid) run the
+//! Eq. 5 incremental statistics as each activation row streams past; the
+//! result broadcasts to a comparator array that resolves the output code
+//! without division or square root (Fig. 5(b)): each boundary s_k is
+//! decided as [(x−μ)·γ]² vs σ²·(s_k−β)² with sign logic.
+
+use anyhow::Result;
+
+use crate::quant::layernorm::qlayernorm_comparator;
+use crate::quant::linear::IntMat;
+
+use super::stats::BlockStats;
+
+#[derive(Debug)]
+pub struct LayerNormSim {
+    pub name: String,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub step: f32,
+    pub bits: u32,
+    pub eps: f32,
+}
+
+#[derive(Debug)]
+pub struct LayerNormOutput {
+    pub codes: IntMat,
+    pub stats: BlockStats,
+}
+
+impl LayerNormSim {
+    pub fn new(
+        name: impl Into<String>,
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+        step: f32,
+        bits: u32,
+    ) -> Self {
+        assert_eq!(gamma.len(), beta.len());
+        LayerNormSim { name: name.into(), gamma, beta, step, bits, eps: 1e-6 }
+    }
+
+    /// Normalise + quantize each row of `x` (M×D fp values).
+    pub fn run(&self, x: &[f32], rows: usize) -> Result<LayerNormOutput> {
+        let d = self.gamma.len();
+        anyhow::ensure!(x.len() == rows * d, "shape {} vs {rows}×{d}", x.len());
+        // paper grid: a μ row and a σ² row of width D
+        let mut stats = BlockStats::new(self.name.clone(), "2 x O", 2 * d as u64);
+        stats.kind = super::energy::PeKind::LnStats;
+
+        let mut codes = vec![0i32; rows * d];
+        for r in 0..rows {
+            let row = &x[r * d..(r + 1) * d];
+            let c = qlayernorm_comparator(row, &self.gamma, &self.beta, self.step, self.bits, self.eps);
+            codes[r * d..(r + 1) * d].copy_from_slice(&c);
+        }
+
+        // Welford PEs: each element passes a fused update station on both
+        // rows (≈2 fp ops each at the station, see energy calibration).
+        stats.fp_ops = (rows * d) as u64 * 4;
+        // comparator bank: per element, u=(x-μ)γ and u² (2 fp) plus per
+        // boundary one σ²·t² mult + one comparison.
+        let boundaries = (1u64 << self.bits) - 1;
+        stats.fp_ops += (rows * d) as u64 * 2 + (rows * d) as u64 * boundaries;
+        stats.cmp_ops = (rows * d) as u64 * boundaries;
+        stats.cmp_bits = self.bits;
+        // stream cycles: D fill + D drain per row, rows pipelined
+        stats.cycles = (rows + 2 * d) as u64;
+        stats.idle_pe_cycles =
+            (stats.pe_count * stats.cycles).saturating_sub((rows * d * 2) as u64);
+
+        Ok(LayerNormOutput { codes: IntMat::new(rows, d, codes), stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::layernorm::qlayernorm_reference;
+    use crate::util::proptest::{assert_eq_i32, prop_check};
+
+    #[test]
+    fn matches_reference_quantized_ln() {
+        prop_check("lnsim-vs-ref", 111, 60, |rng| {
+            let d = rng.int_in(4, 48) as usize;
+            let rows = rng.int_in(1, 6) as usize;
+            let g: Vec<f32> = (0..d).map(|_| rng.uniform(0.3, 1.5) as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| (rng.normal() * 0.2) as f32).collect();
+            let x: Vec<f32> = (0..rows * d).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let sim = LayerNormSim::new("ln", g.clone(), b.clone(), 0.4, 3);
+            let out = sim.run(&x, rows).map_err(|e| e.to_string())?;
+            for r in 0..rows {
+                let want = qlayernorm_reference(&x[r * d..(r + 1) * d], &g, &b, 0.4, 3, 1e-6);
+                assert_eq_i32(out.codes.row(r), &want)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_pe_count() {
+        // DeiT-S head: O=64 → 2×64 = 128 LayerNorm PEs (Table I).
+        let sim = LayerNormSim::new("ln", vec![1.0; 64], vec![0.0; 64], 0.4, 3);
+        let out = sim.run(&vec![0.5; 64], 1).unwrap();
+        assert_eq!(out.stats.pe_count, 128);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let sim = LayerNormSim::new("ln", vec![1.0; 4], vec![0.0; 4], 0.4, 3);
+        assert!(sim.run(&[0.0; 7], 2).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Fig. 3 — low-bit systolic array for the linear layer (weight-stationary).
+//!
+//! A K×N grid of low-bit MAC PEs holds W_q; activation code rows stream in
+//! skewed by one cycle per column, partial sums flow down the K axis, and
+//! finished rows latch into a per-row scan chain that drains to the
+//! post-scale / quantizer unit. The wavefront gives closed-form activity:
+//! each PE fires `M` MACs; the pipeline occupies `M + K + N - 2` cycles
+//! plus `N` scan-drain cycles.
+//!
+//! Functionally the array computes exactly [`crate::quant::int_linear`] —
+//! each output accumulates in ascending-k order — which the tests assert.
+
+use anyhow::Result;
+
+use crate::quant::fold::FoldedLinear;
+use crate::quant::linear::IntMat;
+use crate::quant::{int_range, round_half_even};
+
+use super::stats::BlockStats;
+
+/// What happens at the array boundary after the MACs (paper §IV-A/B).
+#[derive(Debug, Clone, Copy)]
+pub enum Epilogue {
+    /// Post-scale by Δ̄_X·diag(Δ_W) (or diag(Δ_W) when Δ̄_X cancels into a
+    /// following LayerNorm): fp output.
+    Scale,
+    /// Absorb the scales into an output quantizer of the given signed
+    /// width: integer output codes (the V path).
+    Quantize { out_bits: u32, step_out: f32 },
+}
+
+/// Result of simulating one linear layer over a batch of rows.
+#[derive(Debug)]
+pub struct LinearOutput {
+    /// Fp output (Scale epilogue) — empty otherwise.
+    pub values: Vec<f32>,
+    /// Code output (Quantize epilogue) — empty otherwise.
+    pub codes: Vec<i32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub stats: BlockStats,
+}
+
+/// Weight-stationary systolic linear layer.
+#[derive(Debug)]
+pub struct LinearArraySim {
+    pub folded: FoldedLinear,
+    pub bits: u32,
+    pub name: String,
+}
+
+impl LinearArraySim {
+    pub fn new(name: impl Into<String>, folded: FoldedLinear, bits: u32) -> Self {
+        LinearArraySim { folded, bits, name: name.into() }
+    }
+
+    pub fn pe_count(&self) -> u64 {
+        (self.folded.codes.rows * self.folded.codes.cols) as u64
+    }
+
+    /// Stream `x` (M×K codes) through the array.
+    ///
+    /// `use_w_scale_only`: post-scale by diag(Δ_W) instead of the full
+    /// Δ̄_X·diag(Δ_W) — the Q/K path where the scalar cancels into the
+    /// following LayerNorm (Eq. 2 / §IV-A).
+    pub fn run(&self, x: &IntMat, epilogue: Epilogue, use_w_scale_only: bool) -> Result<LinearOutput> {
+        let w = &self.folded.codes;
+        anyhow::ensure!(x.cols == w.cols, "K mismatch {} vs {}", x.cols, w.cols);
+        let (m, k, n) = (x.rows, x.cols, w.rows);
+        let mut stats = BlockStats::new(self.name.clone(), "I x O", (k * n) as u64);
+        stats.kind = super::energy::PeKind::Mac { bits: self.bits, weight_stationary: true };
+        stats.mac_bits = self.bits;
+
+        // --- MAC phase: identical accumulation order to quant::int_matmul.
+        // With ≤8-bit operand codes a product is ≤ 2^14, so K < 2^17 rows
+        // cannot overflow an i32 accumulator — the narrow accumulate
+        // auto-vectorizes where the i64 widening does not (§Perf log).
+        let narrow = self.bits <= 8 && k < (1 << 17);
+        let mut acc = vec![0i64; m * n];
+        for i in 0..m {
+            let xr = x.row(i);
+            for j in 0..n {
+                let wr = w.row(j);
+                acc[i * n + j] = if narrow {
+                    let mut a = 0i32;
+                    for p in 0..k {
+                        a += xr[p] * wr[p];
+                    }
+                    a as i64
+                } else {
+                    let mut a = 0i64;
+                    for p in 0..k {
+                        a += xr[p] as i64 * wr[p] as i64;
+                    }
+                    a
+                };
+            }
+        }
+        stats.mac_ops = (m * k * n) as u64;
+
+        // --- cycle accounting (wavefront + scan drain).
+        let fill = (m + k + n).saturating_sub(2) as u64;
+        let drain = n as u64;
+        stats.cycles = fill + drain;
+        stats.idle_pe_cycles = stats.pe_count * stats.cycles - stats.mac_ops;
+        // input-skew and scan-chain registers
+        stats.reg_bit_writes = (m * k) as u64 * self.bits as u64 // operand skew
+            + (m * n) as u64 * 24; // accumulator scan-out words
+
+        // --- epilogue.
+        let mut out = LinearOutput {
+            values: Vec::new(),
+            codes: Vec::new(),
+            rows: m,
+            cols: n,
+            stats,
+        };
+        match epilogue {
+            Epilogue::Scale => {
+                let mut vals = vec![0f32; m * n];
+                for j in 0..n {
+                    let scale = if use_w_scale_only {
+                        self.folded.w_scale[j]
+                    } else {
+                        self.folded.out_scale[j]
+                    };
+                    for i in 0..m {
+                        vals[i * n + j] =
+                            (acc[i * n + j] as f32 + self.folded.bias_folded[j]) * scale;
+                    }
+                }
+                // one fp add (bias) + one fp mult (scale) per element
+                out.stats.fp_ops += 2 * (m * n) as u64;
+                out.values = vals;
+            }
+            Epilogue::Quantize { out_bits, step_out } => {
+                let (qmin, qmax) = int_range(out_bits);
+                let mut codes = vec![0i32; m * n];
+                for j in 0..n {
+                    // scales absorbed into the quantizer threshold (§IV-B)
+                    let eff = self.folded.out_scale[j] / step_out;
+                    for i in 0..m {
+                        let v = (acc[i * n + j] as f32 + self.folded.bias_folded[j]) * eff;
+                        codes[i * n + j] = (round_half_even(v) as i32).clamp(qmin, qmax);
+                    }
+                }
+                // parallel comparator: 2^b - 1 boundary compares per element
+                out.stats.cmp_ops = (m * n) as u64 * ((1u64 << out_bits) - 1);
+                out.stats.cmp_bits = out_bits;
+                out.stats.fp_ops += 2 * (m * n) as u64; // bias add + eff mult
+                out.codes = codes;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fold::QuantParams;
+    use crate::quant::linear::int_linear;
+    use crate::util::proptest::{assert_close, prop_check};
+    use crate::util::XorShift;
+
+    fn folded(rng: &mut XorShift, n: usize, k: usize, bits: u32) -> FoldedLinear {
+        let w: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 0.2) as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.02, 0.2) as f32).collect();
+        FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x: 0.1, step_w }).unwrap()
+    }
+
+    #[test]
+    fn matches_quant_reference() {
+        prop_check("linear-sim-vs-quant", 81, 60, |rng| {
+            let bits = rng.int_in(2, 4) as u32;
+            let (m, k, n) = (
+                rng.int_in(1, 10) as usize,
+                rng.int_in(1, 16) as usize,
+                rng.int_in(1, 10) as usize,
+            );
+            let f = folded(rng, n, k, bits);
+            let sim = LinearArraySim::new("lin", f, bits);
+            let (qmin, qmax) = int_range(bits);
+            let x = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
+            let got = sim.run(&x, Epilogue::Scale, false).map_err(|e| e.to_string())?;
+            let bias: Vec<f32> = sim
+                .folded
+                .bias_folded
+                .iter()
+                .zip(&sim.folded.out_scale)
+                .map(|(&b, &s)| b * s)
+                .collect();
+            let want = int_linear(
+                &x,
+                &sim.folded.codes,
+                &bias,
+                1.0,
+                &sim.folded.out_scale,
+            )
+            .map_err(|e| e.to_string())?;
+            assert_close(&got.values, &want, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn mac_count_is_mkn() {
+        let mut rng = XorShift::new(82);
+        let f = folded(&mut rng, 6, 8, 3);
+        let sim = LinearArraySim::new("lin", f, 3);
+        let x = IntMat::new(5, 8, rng.codes(40, -4, 3));
+        let out = sim.run(&x, Epilogue::Scale, false).unwrap();
+        assert_eq!(out.stats.mac_ops, 5 * 8 * 6);
+        assert_eq!(out.stats.pe_count, 48);
+        assert_eq!(out.stats.cycles, (5 + 8 + 6 - 2 + 6) as u64);
+    }
+
+    #[test]
+    fn quantize_epilogue_matches_round() {
+        let mut rng = XorShift::new(83);
+        let f = folded(&mut rng, 4, 8, 3);
+        let sim = LinearArraySim::new("v", f, 3);
+        let x = IntMat::new(3, 8, rng.codes(24, -4, 3));
+        let step_out = 0.09;
+        let q = sim
+            .run(&x, Epilogue::Quantize { out_bits: 3, step_out }, false)
+            .unwrap();
+        let fp = sim.run(&x, Epilogue::Scale, false).unwrap();
+        for (c, v) in q.codes.iter().zip(&fp.values) {
+            let want = (round_half_even(v / step_out) as i32).clamp(-4, 3);
+            assert_eq!(*c, want);
+        }
+        assert!(q.stats.cmp_ops > 0);
+    }
+
+    #[test]
+    fn w_scale_only_drops_step_x() {
+        // Q/K path: output should be the full output divided by Δ̄_X.
+        let mut rng = XorShift::new(84);
+        let f = folded(&mut rng, 4, 6, 3);
+        let step_x = 0.1; // as set in folded()
+        let sim = LinearArraySim::new("q", f, 3);
+        let x = IntMat::new(2, 6, rng.codes(12, -4, 3));
+        let full = sim.run(&x, Epilogue::Scale, false).unwrap();
+        let ln = sim.run(&x, Epilogue::Scale, true).unwrap();
+        for (a, b) in full.values.iter().zip(&ln.values) {
+            assert!((a - b * step_x).abs() < 1e-5, "{a} vs {}", b * step_x);
+        }
+    }
+}

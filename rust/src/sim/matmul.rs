@@ -1,0 +1,168 @@
+//! Fig. 3 — output-stationary matmul array with scan-chain readout
+//! (the attn·V stage: "performed at lower bit precision by absorbing the
+//! input scales for both operands within the quantizer").
+//!
+//! An M×N grid of low-bit MAC PEs; operand matrices stream channel-wise
+//! (A rows from the left, B columns from the top), PE(i,j) accumulates
+//! A(i,:)·B(:,j) over K cycles, then latches into its row scan chain. The
+//! quantizer at the chain end re-quantizes with (Δ_A·Δ_B)/Δ_out — a
+//! parallel comparator plus adder, never a dequantized matrix.
+
+use anyhow::Result;
+
+use crate::quant::linear::IntMat;
+use crate::quant::{int_range, round_half_even};
+
+use super::stats::BlockStats;
+
+/// Simulated attn·V matmul (integer in, integer out).
+#[derive(Debug)]
+pub struct MatmulArraySim {
+    pub name: String,
+    pub bits: u32,
+}
+
+#[derive(Debug)]
+pub struct MatmulOutput {
+    pub codes: IntMat,
+    /// Raw integer accumulators (pre-quantizer), for cross-checks.
+    pub acc: Vec<i64>,
+    pub stats: BlockStats,
+}
+
+impl MatmulArraySim {
+    pub fn new(name: impl Into<String>, bits: u32) -> Self {
+        MatmulArraySim { name: name.into(), bits }
+    }
+
+    /// `a` (M×K codes) × `b` (K×N codes, given row-major K rows) →
+    /// quantized codes with effective scale `eff = Δ_A·Δ_B/Δ_out`.
+    pub fn run(
+        &self,
+        a: &IntMat,
+        b_rows: &IntMat, // K×N
+        eff_scale: f32,
+        out_bits: u32,
+    ) -> Result<MatmulOutput> {
+        anyhow::ensure!(a.cols == b_rows.rows, "K mismatch {} vs {}", a.cols, b_rows.rows);
+        let (m, k, n) = (a.rows, a.cols, b_rows.cols);
+        let mut stats = BlockStats::new(self.name.clone(), "N x O", (m * n) as u64);
+        stats.kind = super::energy::PeKind::Mac { bits: self.bits, weight_stationary: false };
+        stats.mac_bits = self.bits;
+
+        // i,p,j order streams B rows contiguously; narrow i32 accumulate
+        // is exact for ≤8-bit codes with K < 2^17 (§Perf log).
+        let mut acc = vec![0i64; m * n];
+        if self.bits <= 8 && k < (1 << 17) {
+            let mut acc32 = vec![0i32; m * n];
+            for i in 0..m {
+                let ar = a.row(i);
+                let out = &mut acc32[i * n..(i + 1) * n];
+                for p in 0..k {
+                    let av = ar[p];
+                    let br = b_rows.row(p);
+                    for j in 0..n {
+                        out[j] += av * br[j];
+                    }
+                }
+            }
+            for (w, v) in acc.iter_mut().zip(&acc32) {
+                *w = *v as i64;
+            }
+        } else {
+            for i in 0..m {
+                let ar = a.row(i);
+                for p in 0..k {
+                    let av = ar[p] as i64;
+                    let br = b_rows.row(p);
+                    for j in 0..n {
+                        acc[i * n + j] += av * br[j] as i64;
+                    }
+                }
+            }
+        }
+        stats.mac_ops = (m * k * n) as u64;
+
+        // output-stationary wavefront: fill M+N+K-2, drain N per row chain
+        stats.cycles = (m + n + k).saturating_sub(2) as u64 + n as u64;
+        stats.idle_pe_cycles = stats.pe_count * stats.cycles - stats.mac_ops;
+        stats.reg_bit_writes = (m * n) as u64 * 24; // scan-out words
+
+        let (qmin, qmax) = int_range(out_bits);
+        let mut codes = vec![0i32; m * n];
+        for (idx, &v) in acc.iter().enumerate() {
+            codes[idx] = (round_half_even(v as f32 * eff_scale) as i32).clamp(qmin, qmax);
+        }
+        stats.cmp_ops = (m * n) as u64 * ((1u64 << out_bits) - 1);
+        stats.cmp_bits = out_bits;
+        stats.fp_ops += (m * n) as u64; // eff-scale mult at the quantizer
+
+        Ok(MatmulOutput { codes: IntMat::new(m, n, codes), acc, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::softmax; // for attn-like inputs
+    use crate::util::proptest::{assert_eq_i32, prop_check};
+    use crate::util::XorShift;
+
+    #[test]
+    fn matches_quant_attn_value() {
+        // Same math as ref.attn_value / quant path: acc·eff → round/clip.
+        prop_check("matmul-sim-vs-ref", 91, 80, |rng| {
+            let (m, k, n) = (
+                rng.int_in(1, 10) as usize,
+                rng.int_in(1, 12) as usize,
+                rng.int_in(1, 10) as usize,
+            );
+            let a = IntMat::new(m, k, rng.codes(m * k, 0, 7));
+            let b = IntMat::new(k, n, rng.codes(k * n, -4, 3));
+            let eff = rng.uniform(0.001, 0.1) as f32;
+            let sim = MatmulArraySim::new("pv", 3);
+            let out = sim.run(&a, &b, eff, 3).map_err(|e| e.to_string())?;
+            // reference: direct i64 accumulate + round
+            let mut want = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0i64;
+                    for p in 0..k {
+                        s += a.at(i, p) as i64 * b.at(p, j) as i64;
+                    }
+                    want[i * n + j] =
+                        (round_half_even(s as f32 * eff) as i32).clamp(-4, 3);
+                }
+            }
+            assert_eq_i32(&out.codes.data, &want)
+        });
+    }
+
+    #[test]
+    fn stats_counts() {
+        let mut rng = XorShift::new(92);
+        let a = IntMat::new(4, 6, rng.codes(24, 0, 7));
+        let b = IntMat::new(6, 5, rng.codes(30, -4, 3));
+        let out = MatmulArraySim::new("pv", 3).run(&a, &b, 0.01, 3).unwrap();
+        assert_eq!(out.stats.pe_count, 20);
+        assert_eq!(out.stats.mac_ops, 4 * 6 * 5);
+        assert_eq!(out.stats.cycles, (4 + 5 + 6 - 2 + 5) as u64);
+        assert_eq!(out.stats.cmp_ops, 20 * 7);
+    }
+
+    #[test]
+    fn attention_weighted_sum_sane() {
+        // uniform attention codes → output ≈ scaled column means of V
+        let n = 8;
+        let a = IntMat::new(1, n, vec![4; n]); // uniform weights
+        let v = IntMat::new(n, 2, (0..n as i32 * 2).map(|i| i % 5 - 2).collect());
+        let out = MatmulArraySim::new("pv", 3).run(&a, &v, 0.05, 8).unwrap();
+        // acc = 4·Σv per column; just check against direct dot
+        let mut want0 = 0i64;
+        for p in 0..n {
+            want0 += 4 * v.at(p, 0) as i64;
+        }
+        assert_eq!(out.acc[0], want0);
+        let _ = softmax::exact_softmax_row(&[0.0, 1.0]); // keep import used
+    }
+}

@@ -1,0 +1,43 @@
+//! Cycle-accounted systolic-array simulator — the paper's hardware (§IV).
+//!
+//! The paper validates integerization by synthesising the self-attention
+//! module on a Spartan-7 FPGA and reporting per-block power (Table I).
+//! This environment has no FPGA toolchain, so per DESIGN.md §3 the
+//! evaluation substrate is this simulator:
+//!
+//! * **functionally exact** — every module computes bit-identical integer
+//!   outputs to the [`crate::quant`] reference (asserted by tests), by
+//!   executing the same per-PE accumulation order the arrays use;
+//! * **cycle-accounted** — systolic wavefront schedules give closed-form
+//!   per-PE activity windows (start cycle `i+j`, length `K` for an
+//!   output-stationary array, etc.); the simulator tracks per-PE active
+//!   cycles, op counts by class, and scan-chain drain cycles;
+//! * **energy-modelled** — an activity-based model ([`energy`]) maps op
+//!   counts to energy: MAC energy grows quadratically with operand bits
+//!   (multiplier), fp ops carry the large flat cost that makes the
+//!   paper's LayerNorm PEs ~10× hungrier than 3-bit MAC PEs.
+//!
+//! `#PE` and `#MAC` columns of Table I are *computed facts* and must match
+//! the paper exactly for DeiT-S dimensions (N=198, D=384, O=64); the power
+//! columns follow the calibrated model and are compared by ratio in
+//! EXPERIMENTS.md.
+//!
+//! Modules mirror Fig. 2: [`linear`] (Q/K/V projections), [`layernorm`]
+//! (μ/σ² PE rows + comparator bank), [`softmax_matmul`] (QKᵀ with on-PE
+//! exp and systolic Σ row), [`matmul`] (attn·V with output quantizer),
+//! [`reversing`] and [`delay`] (dataflow alignment), composed by
+//! [`attention`] into the full self-attention pipeline.
+
+pub mod attention;
+pub mod delay;
+pub mod energy;
+pub mod layernorm;
+pub mod linear;
+pub mod matmul;
+pub mod reversing;
+pub mod softmax_matmul;
+pub mod stats;
+
+pub use attention::{AttentionSim, AttentionReport};
+pub use energy::EnergyModel;
+pub use stats::BlockStats;

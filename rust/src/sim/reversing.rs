@@ -1,0 +1,66 @@
+//! The reversing module (Fig. 2) — an O×O register crossbar that flips
+//! the V stream's channel order so the attn·V array receives operands in
+//! the order the scan chains emit them. Functionally `reverse` on the
+//! channel axis; power-wise a grid of word-level register moves.
+
+use crate::quant::linear::IntMat;
+
+use super::stats::BlockStats;
+
+#[derive(Debug)]
+pub struct ReversingSim {
+    pub name: String,
+}
+
+impl ReversingSim {
+    pub fn new(name: impl Into<String>) -> Self {
+        ReversingSim { name: name.into() }
+    }
+
+    /// Reverse the channel (column) order of a code matrix.
+    pub fn run(&self, v: &IntMat) -> (IntMat, BlockStats) {
+        let (rows, cols) = (v.rows, v.cols);
+        let mut out = vec![0i32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[r * cols + c] = v.at(r, cols - 1 - c);
+            }
+        }
+        let mut stats = BlockStats::new(self.name.clone(), "O x O", (cols * cols) as u64);
+        stats.kind = super::energy::PeKind::Reversing;
+        // each element traverses the O×O crossbar: one word move per
+        // stage, cols stages deep, rows·cols elements
+        stats.rev_moves = (rows * cols) as u64 * cols as u64;
+        stats.cycles = (rows + 2 * cols) as u64;
+        (IntMat::new(rows, cols, out), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reverses_columns() {
+        let v = IntMat::new(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let (r, _) = ReversingSim::new("rev").run(&v);
+        assert_eq!(r.data, vec![3, 2, 1, 6, 5, 4]);
+    }
+
+    #[test]
+    fn double_reverse_is_identity() {
+        let v = IntMat::new(3, 4, (0..12).collect());
+        let sim = ReversingSim::new("rev");
+        let (once, _) = sim.run(&v);
+        let (twice, _) = sim.run(&once);
+        assert_eq!(twice.data, v.data);
+    }
+
+    #[test]
+    fn paper_pe_count() {
+        // DeiT-S head: O=64 → 64×64 = 4,096 reversing PEs.
+        let v = IntMat::new(198, 64, vec![0; 198 * 64]);
+        let (_, s) = ReversingSim::new("rev").run(&v);
+        assert_eq!(s.pe_count, 4_096);
+    }
+}

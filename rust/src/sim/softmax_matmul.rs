@@ -1,0 +1,184 @@
+//! Fig. 4 — matmul array with embedded softmax (the QKᵀ stage).
+//!
+//! Each PE computes its Q(i,:)·K(:,j) MAC result, converts it through the
+//! scaled Eq. 4 shift-exponential, and pushes the exponential into the row
+//! scan chain while a systolic adder row accumulates Σ_j exp(·) toward the
+//! row edge. The quantizer at the end of the chain divides by nothing: its
+//! boundary values (-3.5Δ…2.5Δ at 3 bits, §IV-B) are *multiplied* by the
+//! row sum, so attention probabilities are produced directly as codes.
+//!
+//! A numerically-stable max-subtraction pass precedes the exp (the same
+//! max the reference/Pallas softmax uses), modelled as part of the scan.
+
+use anyhow::Result;
+
+use crate::quant::linear::IntMat;
+use crate::quant::shift_exp::shift_exp;
+use crate::quant::{round_half_even, uint_range};
+
+use super::stats::BlockStats;
+
+#[derive(Debug)]
+pub struct SoftmaxMatmulSim {
+    pub name: String,
+    pub bits: u32,
+}
+
+#[derive(Debug)]
+pub struct SoftmaxMatmulOutput {
+    /// Attention probability codes (M×N, unsigned `attn_bits`).
+    pub codes: IntMat,
+    /// Raw integer scores (for cross-checking against quant/jax).
+    pub scores: IntMat,
+    pub stats: BlockStats,
+}
+
+impl SoftmaxMatmulSim {
+    pub fn new(name: impl Into<String>, bits: u32) -> Self {
+        SoftmaxMatmulSim { name: name.into(), bits }
+    }
+
+    /// q (M×D codes) × kᵀ (N×D codes) with exp scale `scale` = Δ_Q·Δ_K/√d,
+    /// quantizing probabilities to `attn_bits` codes with step `step_attn`.
+    ///
+    /// `shift=false` swaps the Eq. 4 unit for exact exp (ablation).
+    pub fn run(
+        &self,
+        q: &IntMat,
+        k: &IntMat,
+        scale: f32,
+        step_attn: f32,
+        attn_bits: u32,
+        shift: bool,
+    ) -> Result<SoftmaxMatmulOutput> {
+        anyhow::ensure!(q.cols == k.cols, "D mismatch {} vs {}", q.cols, k.cols);
+        let (m, d, n) = (q.rows, q.cols, k.rows);
+        let mut stats = BlockStats::new(self.name.clone(), "N x N", (m * n) as u64);
+        stats.kind = super::energy::PeKind::ExpMac { bits: self.bits };
+        stats.mac_bits = self.bits;
+
+        // MAC phase (output-stationary, ascending-d accumulation). Narrow
+        // i32 accumulate is exact for ≤8-bit codes with D < 2^17 (§Perf).
+        let narrow = self.bits <= 8 && d < (1 << 17);
+        let mut scores = vec![0i32; m * n];
+        for i in 0..m {
+            let qr = q.row(i);
+            for j in 0..n {
+                let kr = k.row(j);
+                scores[i * n + j] = if narrow {
+                    let mut acc = 0i32;
+                    for p in 0..d {
+                        acc += qr[p] * kr[p];
+                    }
+                    acc
+                } else {
+                    let mut acc = 0i64;
+                    for p in 0..d {
+                        acc += qr[p] as i64 * kr[p] as i64;
+                    }
+                    acc as i32
+                };
+            }
+        }
+        stats.mac_ops = (m * d * n) as u64;
+
+        // exp + Σ row + quantize.
+        let (lo, hi) = uint_range(attn_bits);
+        let mut codes = vec![0i32; m * n];
+        for i in 0..m {
+            let row = &scores[i * n..(i + 1) * n];
+            let zmax = row.iter().map(|&s| s as f32 * scale).fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            let mut exps = vec![0f32; n];
+            for (j, &s) in row.iter().enumerate() {
+                let z = s as f32 * scale - zmax;
+                let e = if shift { shift_exp(z) } else { z.exp() };
+                exps[j] = e;
+                sum += e; // systolic adder row
+            }
+            // quantizer: thresholds (k-½)Δ_attn scaled by the row sum;
+            // equivalent to round(e/sum/Δ) with round-half-even ties.
+            for (j, &e) in exps.iter().enumerate() {
+                let p = e / sum;
+                codes[i * n + j] = (round_half_even(p / step_attn) as i32).clamp(lo, hi);
+            }
+        }
+        stats.exp_ops = (m * n) as u64;
+        stats.fp_ops = (m * n) as u64 // scale mult per element
+            + (m * n) as u64 // Σ systolic adds
+            + (m as u64) * ((1u64 << attn_bits) - 1); // per-row threshold·sum mults
+        stats.cmp_ops = (m * n) as u64 * ((1u64 << attn_bits) - 1);
+        stats.cmp_bits = attn_bits;
+
+        // cycles: fill M+N+D-2, then exp (pipelined, 1/elem) + Σ propagation
+        // (N) + scan drain (N).
+        stats.cycles = (m + n + d).saturating_sub(2) as u64 + 2 * n as u64;
+        stats.idle_pe_cycles = (stats.pe_count * stats.cycles).saturating_sub(stats.mac_ops);
+        stats.reg_bit_writes = (m * n) as u64 * 24;
+
+        Ok(SoftmaxMatmulOutput {
+            codes: IntMat::new(m, n, codes),
+            scores: IntMat::new(m, n, scores),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::softmax::qk_attention;
+    use crate::util::proptest::{assert_eq_i32, prop_check};
+    use crate::util::XorShift;
+
+    #[test]
+    fn matches_quant_reference_exactly() {
+        prop_check("fig4-sim-vs-quant", 101, 80, |rng| {
+            let (m, d, n) = (
+                rng.int_in(1, 10) as usize,
+                rng.int_in(1, 16) as usize,
+                rng.int_in(2, 10) as usize,
+            );
+            let q = IntMat::new(m, d, rng.codes(m * d, -4, 3));
+            let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+            let scale = rng.uniform(0.005, 0.08) as f32;
+            let step = rng.uniform(0.05, 0.3) as f32;
+            let shift = rng.next_f64() < 0.5;
+            let sim = SoftmaxMatmulSim::new("qk", 3);
+            let got = sim.run(&q, &k, scale, step, 3, shift).map_err(|e| e.to_string())?;
+            let (want, want_scores) =
+                qk_attention(&q, &k, scale, step, 3, shift).map_err(|e| e.to_string())?;
+            assert_eq_i32(&got.scores.data, &want_scores.data)?;
+            assert_eq_i32(&got.codes.data, &want.data)
+        });
+    }
+
+    #[test]
+    fn paper_pe_and_mac_counts() {
+        // DeiT-S head: N=198 tokens, O=64 head dim → 39,204 PEs, 2.51M MACs.
+        let n = 198;
+        let d = 64;
+        let mut rng = XorShift::new(102);
+        let q = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+        let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+        let out = SoftmaxMatmulSim::new("qk", 3).run(&q, &k, 0.01, 0.14, 3, true).unwrap();
+        assert_eq!(out.stats.pe_count, 39_204);
+        assert_eq!(out.stats.mac_ops, 198 * 198 * 64); // 2.509M
+        assert_eq!(out.stats.exp_ops, 39_204);
+    }
+
+    #[test]
+    fn codes_are_valid_probability_codes() {
+        let mut rng = XorShift::new(103);
+        let q = IntMat::new(6, 8, rng.codes(48, -4, 3));
+        let k = IntMat::new(6, 8, rng.codes(48, -4, 3));
+        let step = 1.0 / 7.0;
+        let out = SoftmaxMatmulSim::new("qk", 3).run(&q, &k, 0.05, step, 3, true).unwrap();
+        assert!(out.codes.data.iter().all(|&c| (0..=7).contains(&c)));
+        // each row's codes·step should roughly sum to 1
+        for i in 0..6 {
+            let s: f32 = out.codes.row(i).iter().map(|&c| c as f32 * step).sum();
+            assert!((s - 1.0).abs() < 0.5, "row {i} sums to {s}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-block activity accounting — the rows of Table I.
+
+use super::energy::{EnergyModel, PeKind};
+
+/// Op-count and cycle statistics for one hardware block.
+#[derive(Debug, Clone, Default)]
+pub struct BlockStats {
+    pub name: String,
+    /// PE-grid description, e.g. "I x O" / "N x N" (Table I column 2).
+    pub grid: String,
+    /// Datapath class of this block's PEs (drives the sustained-power
+    /// columns; see [`PeKind`]).
+    pub kind: PeKind,
+    /// Number of processing elements instantiated.
+    pub pe_count: u64,
+    /// Low-bit multiply-accumulates actually executed (Table I "# of MAC").
+    pub mac_ops: u64,
+    /// Operand width of the MACs.
+    pub mac_bits: u32,
+    /// fp32 ops (LayerNorm stats, scaling, softmax normalisation).
+    pub fp_ops: u64,
+    /// Shift-exponential evaluations (Eq. 4 units).
+    pub exp_ops: u64,
+    /// Threshold comparisons (quantizers, Fig. 5 bank).
+    pub cmp_ops: u64,
+    /// Bits compared per comparison.
+    pub cmp_bits: u32,
+    /// Register writes (scan chains) × bits.
+    pub reg_bit_writes: u64,
+    /// Word-level reversing-module moves.
+    pub rev_moves: u64,
+    /// Word-level delay-line shifts.
+    pub delay_shifts: u64,
+    /// Pipeline occupancy in cycles for this block.
+    pub cycles: u64,
+    /// Idle PE-cycles (instantiated PEs waiting in the wavefront).
+    pub idle_pe_cycles: u64,
+}
+
+impl BlockStats {
+    pub fn new(name: impl Into<String>, grid: impl Into<String>, pe_count: u64) -> Self {
+        BlockStats { name: name.into(), grid: grid.into(), pe_count, ..Default::default() }
+    }
+
+    /// Total energy under the model, in pJ.
+    pub fn energy_pj(&self, m: &EnergyModel) -> f64 {
+        self.mac_ops as f64 * m.mac_pj(self.mac_bits)
+            + self.fp_ops as f64 * m.fp_pj()
+            + self.exp_ops as f64 * m.exp_pj()
+            + self.cmp_ops as f64 * m.cmp_pj(self.cmp_bits.max(1))
+            + self.reg_bit_writes as f64 * m.reg_pj(1)
+            + self.rev_moves as f64 * m.c_rev_pj
+            + self.delay_shifts as f64 * m.c_delay_pj
+            + self.idle_pe_cycles as f64 * m.idle_pj()
+    }
+
+    /// Per-PE sustained power in milliwatts (Table I "Per PE"): the
+    /// datapath cost of this block's PE class. Untyped blocks fall back
+    /// to activity energy amortised over the occupancy window.
+    pub fn per_pe_mw(&self, m: &EnergyModel) -> f64 {
+        match self.kind {
+            PeKind::Untyped => {
+                if self.pe_count == 0 || self.cycles == 0 {
+                    0.0
+                } else {
+                    m.power_w(self.energy_pj(m), self.cycles) * 1e3 / self.pe_count as f64
+                }
+            }
+            k => m.pe_power_mw(k),
+        }
+    }
+
+    /// Block power in watts (Table I "Total"): `#PE × per-PE` sustained.
+    pub fn power_w(&self, m: &EnergyModel) -> f64 {
+        self.per_pe_mw(m) * 1e-3 * self.pe_count as f64
+    }
+
+    /// Workload energy over the occupancy window (activity×op costs) —
+    /// the basis for the bit-width/efficiency comparisons, independent of
+    /// the sustained-power calibration.
+    pub fn workload_energy_pj(&self, m: &EnergyModel) -> f64 {
+        self.energy_pj(m)
+    }
+
+    /// Merge another block's counters into this one (for aggregate rows).
+    pub fn absorb(&mut self, other: &BlockStats) {
+        if self.kind == PeKind::Untyped {
+            self.kind = other.kind;
+        }
+        self.pe_count += other.pe_count;
+        self.mac_ops += other.mac_ops;
+        self.fp_ops += other.fp_ops;
+        self.exp_ops += other.exp_ops;
+        self.cmp_ops += other.cmp_ops;
+        self.reg_bit_writes += other.reg_bit_writes;
+        self.rev_moves += other.rev_moves;
+        self.delay_shifts += other.delay_shifts;
+        self.cycles = self.cycles.max(other.cycles);
+        self.idle_pe_cycles += other.idle_pe_cycles;
+        if self.mac_bits == 0 {
+            self.mac_bits = other.mac_bits;
+        }
+        if self.cmp_bits == 0 {
+            self.cmp_bits = other.cmp_bits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_accumulates_by_class() {
+        let m = EnergyModel::default();
+        let mut s = BlockStats::new("t", "1x1", 1);
+        s.mac_bits = 3;
+        s.mac_ops = 10;
+        assert!((s.energy_pj(&m) - 10.0 * m.mac_pj(3)).abs() < 1e-9);
+        s.fp_ops = 2;
+        assert!((s.energy_pj(&m) - (10.0 * m.mac_pj(3) + 2.0 * m.fp_pj())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_pe_power_divides() {
+        let m = EnergyModel::default();
+        let mut s = BlockStats::new("t", "2x2", 4);
+        s.mac_bits = 3;
+        s.mac_ops = 400;
+        s.cycles = 100;
+        let total = s.power_w(&m);
+        assert!((s.per_pe_mw(&m) - total * 1e3 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = BlockStats::new("a", "g", 2);
+        a.mac_ops = 5;
+        a.cycles = 10;
+        let mut b = BlockStats::new("b", "g", 3);
+        b.mac_ops = 7;
+        b.cycles = 20;
+        a.absorb(&b);
+        assert_eq!(a.pe_count, 5);
+        assert_eq!(a.mac_ops, 12);
+        assert_eq!(a.cycles, 20);
+    }
+}

