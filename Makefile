@@ -1,0 +1,23 @@
+# Convenience targets for the ivit reproduction.
+#
+#   make tier1      — the repo's tier-1 gate: release build + full test suite
+#   make fmt        — rustfmt check (no changes applied)
+#   make bench      — the artifact-free benches (table1, sim speed, ablations)
+#   make artifacts  — lower the JAX model to HLO + export eval set / attn_case
+#                     (needs the python toolchain; see python/compile/)
+
+RUST_DIR := rust
+
+.PHONY: tier1 fmt bench artifacts
+
+tier1:
+	cd $(RUST_DIR) && cargo build --release && cargo test -q
+
+fmt:
+	cd $(RUST_DIR) && cargo fmt --check
+
+bench:
+	cd $(RUST_DIR) && cargo bench --bench table1_power --bench sim_speed --bench ablation_scales --bench fig_softmax_error
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -1,15 +1,18 @@
 //! Bench P — simulator performance: PE-cycles/second of the systolic
 //! attention simulation at paper dimensions (the L3 perf target in
-//! DESIGN.md §8 is ≥ 10M PE-cycles/s), plus per-module throughput.
+//! DESIGN.md §8 is ≥ 10M PE-cycles/s), plus per-module throughput and a
+//! cross-backend comparison through the unified [`Backend`] registry.
 //!
 //! No artifacts required. `cargo bench --bench sim_speed`
 
 use std::time::Duration;
 
+use ivit::backend::{AttnModule, AttnRequest, BackendConfig, BackendRegistry};
 use ivit::bench::{bench_for, report};
 use ivit::quant::fold::{FoldedLinear, QuantParams};
 use ivit::quant::linear::IntMat;
-use ivit::sim::linear::{Epilogue, LinearArraySim};
+use ivit::quant::{QTensor, QuantSpec, ScaleChain, Step};
+use ivit::sim::linear::{Epilogue, LinearArraySim, PostScale};
 use ivit::sim::softmax_matmul::SoftmaxMatmulSim;
 use ivit::sim::AttentionSim;
 use ivit::util::XorShift;
@@ -41,20 +44,41 @@ fn main() {
     )
     .unwrap();
     let lin = LinearArraySim::new("lin", folded, 3);
-    let x = IntMat::new(198, 384, rng.codes(198 * 384, -4, 3));
+    let x = QTensor::new(
+        IntMat::new(198, 384, rng.codes(198 * 384, -4, 3)),
+        QuantSpec::signed(3, Step::new(0.1).unwrap()),
+    )
+    .unwrap();
     timings.push(bench_for("linear_array 198x384 -> 64", budget, || {
-        let o = lin.run(&x, Epilogue::Scale, true).unwrap();
+        let o = lin.run(&x, &Epilogue::Scale(PostScale::WeightOnly)).unwrap();
         std::hint::black_box(o.stats.mac_ops);
     }));
 
     // isolated QKᵀ+softmax array
-    let q = IntMat::new(198, 64, rng.codes(198 * 64, -4, 3));
-    let k = IntMat::new(198, 64, rng.codes(198 * 64, -4, 3));
+    let qk_spec = QuantSpec::signed(3, Step::new(0.4).unwrap());
+    let q = QTensor::new(IntMat::new(198, 64, rng.codes(198 * 64, -4, 3)), qk_spec).unwrap();
+    let k = QTensor::new(IntMat::new(198, 64, rng.codes(198 * 64, -4, 3)), qk_spec).unwrap();
     let qk = SoftmaxMatmulSim::new("qk", 3);
+    let score = ScaleChain::folded(0.01);
+    let attn_spec = QuantSpec::unsigned(3, Step::new(0.14).unwrap());
     timings.push(bench_for("softmax_matmul 198x198x64", budget, || {
-        let o = qk.run(&q, &k, 0.01, 0.14, 3, true).unwrap();
-        std::hint::black_box(o.codes.data.len());
+        let o = qk.run(&q, &k, &score, attn_spec, true).unwrap();
+        std::hint::black_box(o.codes.codes.data.len());
     }));
+
+    // the same full workload through each registry backend
+    let registry = BackendRegistry::with_defaults();
+    let mut cfg = BackendConfig::default();
+    let module: AttnModule = cfg.resolve_module().unwrap();
+    cfg.module = Some(module.clone()); // backends see the same module
+    let req = AttnRequest::new(module.random_input(198, 1).unwrap());
+    for name in ["ref", "sim"] {
+        let mut backend = registry.create(name, &cfg).unwrap();
+        timings.push(bench_for(&format!("backend::{name} N=198 I=384 O=64 3b"), budget, || {
+            let resp = backend.run_attention(&req).unwrap();
+            std::hint::black_box(resp.out_codes.map(|c| c.codes.data.len()));
+        }));
+    }
 
     report(&timings);
     println!("\nfull-module simulation: {pe_cycles} PE-cycles per run");

@@ -13,14 +13,66 @@
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use ivit::backend::{BackendConfig, BackendRegistry};
 use ivit::bench::TableWriter;
-use ivit::coordinator::{BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
+use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
 use ivit::util::XorShift;
 
+/// Attention serving through the backend registry — runs standalone, so
+/// the bench produces numbers even before `make artifacts`.
+fn backend_attention_throughput() -> anyhow::Result<()> {
+    println!("attention serving through the backend registry (no artifacts needed):\n");
+    let mut tbl =
+        TableWriter::new(&["backend", "tokens", "batch", "req/s", "p50 ms", "p99 ms", "mean batch"]);
+    let registry = BackendRegistry::with_defaults();
+    let n_requests: usize =
+        std::env::var("IVIT_BENCH_ATTN_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    for name in ["ref", "sim"] {
+        let mut cfg = BackendConfig { d_in: 96, d_head: 32, ..BackendConfig::default() };
+        let module = cfg.resolve_module()?;
+        cfg.module = Some(module.clone()); // backend sees the same module
+        let (tokens, batch) = (64usize, 4usize);
+        let backend = registry.create(name, &cfg)?;
+        let exec = AttnBatchExecutor::new(backend, &module, tokens, batch);
+        let elems = BatchExecutor::image_elems(&exec);
+        let coord = Coordinator::start(
+            exec,
+            BatcherConfig { queue_capacity: 128, max_wait: Duration::from_millis(2) },
+        );
+        let h = coord.handle();
+        let mut rng = XorShift::new(9);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let act: Vec<f32> = rng.normal_vec(elems);
+            pending.push(h.submit_blocking(act)?);
+        }
+        for rx in pending {
+            let r = rx.recv()?;
+            anyhow::ensure!(r.error.is_none(), "attention request failed: {:?}", r.error);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = coord.shutdown();
+        tbl.row(vec![
+            name.to_string(),
+            tokens.to_string(),
+            batch.to_string(),
+            format!("{:.1}", n_requests as f64 / wall),
+            format!("{:.2}", s.p50_us as f64 / 1e3),
+            format!("{:.2}", s.p99_us as f64 / 1e3),
+            format!("{:.2}", s.mean_batch),
+        ]);
+    }
+    print!("{}", tbl.render());
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    backend_attention_throughput()?;
     let Some(dir) = artifacts() else {
-        println!("SKIP: no artifacts directory (run `make artifacts`)");
+        println!("SKIP image-serving section: no artifacts directory (run `make artifacts`)");
         return Ok(());
     };
     let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?;
@@ -57,15 +109,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..n_requests {
             let idx = (rng.next_u64() as usize) % ev.n;
             let img = ev.image(idx)?.to_vec();
-            loop {
-                match h.submit(img.clone()) {
-                    Ok(rx) => {
-                        pending.push(rx);
-                        break;
-                    }
-                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
-                }
-            }
+            pending.push(h.submit_blocking(img)?);
         }
         for rx in pending {
             let r = rx.recv()?;
@@ -91,7 +135,7 @@ fn main() -> anyhow::Result<()> {
     let mut bare = Vec::new();
     for _ in 0..32 {
         let t0 = Instant::now();
-        let _ = exec.execute(&img)?;
+        let _ = exec.execute(&img, 1)?;
         bare.push(t0.elapsed());
     }
     bare.sort();

@@ -11,7 +11,7 @@
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use ivit::coordinator::{BatcherConfig, Coordinator, PjrtExecutor, SubmitError};
+use ivit::coordinator::{BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
 use ivit::util::XorShift;
 
@@ -41,16 +41,7 @@ fn main() -> Result<()> {
             let idx = (rng.next_u64() as usize) % ev.n;
             labels.push(ev.labels[idx]);
             let img = ev.image(idx)?.to_vec();
-            loop {
-                match h.submit(img.clone()) {
-                    Ok(rx) => {
-                        pending.push(rx);
-                        break;
-                    }
-                    Err(SubmitError::QueueFull) => std::thread::sleep(Duration::from_micros(100)),
-                    Err(SubmitError::Closed) => anyhow::bail!("coordinator closed"),
-                }
-            }
+            pending.push(h.submit_blocking(img)?);
             if rate > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
             }

@@ -1,0 +1,351 @@
+//! The unified execution API: one [`Backend`] trait over the three
+//! substrates that can run the paper's integerized attention —
+//!
+//! * [`ReferenceBackend`] — the bit-accurate [`crate::quant`] golden
+//!   reference (scalar loops, no hardware model);
+//! * [`SimBackend`] — the cycle-accounted systolic-array simulator
+//!   ([`crate::sim`]), surfacing per-block [`BlockStats`] and energy;
+//! * [`PjrtBackend`] — the AOT-compiled Pallas attention artifact
+//!   executed through the PJRT runtime ([`crate::runtime`]).
+//!
+//! All three consume the same [`AttnRequest`] and produce the same
+//! [`AttnResponse`]; the paper's central claim — one computation graph,
+//! bit-identical results on every substrate — becomes a trait-level
+//! contract that `rust/tests/backend_parity.rs` enforces at DeiT-S
+//! dimensions. Backends are looked up by name in a
+//! [`BackendRegistry`] (`ref` | `sim` | `pjrt`), which is what
+//! `ivit --backend`, the coordinator's [`crate::coordinator::AttnBatchExecutor`]
+//! and the benches dispatch through; future substrates (threaded sim
+//! shards, remote workers, GPU) plug into the same seam.
+//!
+//! ## The typed-operand contract (`QTensor` / `ScaleChain`)
+//!
+//! Requests and responses never carry bare code buffers or raw `f32`
+//! scales:
+//!
+//! * **[`QTensor`]** = integer codes + the [`QuantSpec`] (step Δ, bit
+//!   width, signedness) that produced them. Constructors validate that
+//!   every code lies in the spec's range; consumers (the linear arrays,
+//!   the matmul quantizers, the backends) validate the spec against
+//!   their folded constants instead of trusting the call site.
+//! * **[`ScaleChain`]** = the explicit Eq. 2 folding algebra: an
+//!   effective scale kept as `Π numerator / Π denominator` of named
+//!   steps (e.g. `Δ_A·Δ_B/Δ_out` for the attn·V requantizer,
+//!   `Δ_Q·Δ_K/√d` for the Eq. 3 score scale). `eff()` multiplies
+//!   numerator terms in insertion order and divides once, so a chain
+//!   built from the same steps is bit-identical to the hand-folded
+//!   expression — checkpoint-imported pre-folded factors use
+//!   [`ScaleChain::folded`].
+//!
+//! Every boundary that used to take `eff_scale: f32` or
+//! `use_w_scale_only: bool` now takes these types; folding a scale
+//! twice, skipping it, or dividing the wrong way no longer typechecks.
+
+pub mod pjrt;
+pub mod reference;
+pub mod registry;
+pub mod sim;
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::model::AttnCase;
+use crate::quant::fold::{FoldedLinear, QuantParams};
+use crate::quant::linear::IntMat;
+use crate::sim::attention::{AttentionSim, AttentionSteps};
+use crate::sim::layernorm::LayerNormSim;
+use crate::sim::linear::LinearArraySim;
+use crate::sim::AttentionReport;
+use crate::util::XorShift;
+
+pub use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
+pub use pjrt::PjrtBackend;
+pub use reference::ReferenceBackend;
+pub use registry::{BackendConfig, BackendRegistry};
+pub use sim::SimBackend;
+
+/// What a backend can produce / requires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Produces integer output codes bit-identical to the quant reference.
+    pub bit_exact_codes: bool,
+    /// Surfaces per-block hardware stats / energy in the response.
+    pub hardware_stats: bool,
+    /// Requires AOT artifacts on disk.
+    pub needs_artifacts: bool,
+}
+
+/// One attention inference over typed input codes.
+#[derive(Debug, Clone)]
+pub struct AttnRequest {
+    /// Input activation codes, N×D, spec validated by the backend.
+    pub x: QTensor,
+}
+
+impl AttnRequest {
+    pub fn new(x: QTensor) -> AttnRequest {
+        AttnRequest { x }
+    }
+}
+
+/// Intermediate stage codes for cross-backend parity checks.
+#[derive(Debug, Clone)]
+pub struct StageCodes {
+    pub q: QTensor,
+    pub k: QTensor,
+    pub v: QTensor,
+    /// Head-0 attention probability codes.
+    pub attn_head0: QTensor,
+}
+
+/// What a backend produced. Fields are optional per
+/// [`Capabilities`]: integer backends fill `out_codes` + `stages`,
+/// the PJRT artifact path fills `out_values`, the simulator adds
+/// `report`.
+#[derive(Debug)]
+pub struct AttnResponse {
+    /// Final attn·V output codes (N×D, step Δ_O).
+    pub out_codes: Option<QTensor>,
+    /// Fp output (backends whose artifact dequantizes at the boundary).
+    pub out_values: Option<Vec<f32>>,
+    /// Intermediate codes for parity checks.
+    pub stages: Option<StageCodes>,
+    /// Per-block hardware stats (Table I rows).
+    pub report: Option<AttentionReport>,
+    /// Wall-clock execution time.
+    pub elapsed: Duration,
+}
+
+/// The uniform execution interface over all substrates.
+///
+/// `Send` is required so a backend can be moved onto a coordinator
+/// worker thread (the PJRT implementation is move-only single-threaded,
+/// like [`crate::coordinator::PjrtExecutor`]).
+pub trait Backend: Send {
+    /// Registry name, e.g. `"ref"`.
+    fn name(&self) -> &str;
+
+    /// What this backend can produce / requires.
+    fn capabilities(&self) -> Capabilities;
+
+    /// One-line human description (dims, substrate, artifact source).
+    fn describe(&self) -> String;
+
+    /// Execute one attention inference.
+    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse>;
+}
+
+/// The integerized attention-module parameters every backend consumes:
+/// folded linears, LayerNorm constants, and the typed quantizer steps.
+#[derive(Debug, Clone)]
+pub struct AttnModule {
+    pub wq: FoldedLinear,
+    pub wk: FoldedLinear,
+    pub wv: FoldedLinear,
+    pub lnq_gamma: Vec<f32>,
+    pub lnq_beta: Vec<f32>,
+    pub lnk_gamma: Vec<f32>,
+    pub lnk_beta: Vec<f32>,
+    pub steps: AttentionSteps,
+    /// The module input step Δ̄_X (what the projections were folded with).
+    pub s_x: Step,
+    pub heads: usize,
+    pub bits: u32,
+    pub attn_bits: u32,
+    /// Eq. 4 shift exponential (false = exact-exp ablation).
+    pub shift: bool,
+}
+
+impl AttnModule {
+    /// Input dimension (K of the projections).
+    pub fn d_in(&self) -> usize {
+        self.wq.codes.cols
+    }
+
+    /// Projection output dimension (D = heads · head_dim).
+    pub fn d_out(&self) -> usize {
+        self.wq.codes.rows
+    }
+
+    /// The quantizer spec input activations must carry.
+    pub fn input_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.s_x)
+    }
+
+    /// Build the systolic simulator for this module.
+    pub fn to_sim(&self) -> AttentionSim {
+        AttentionSim {
+            wq: LinearArraySim::new("Q linear", self.wq.clone(), self.bits),
+            wk: LinearArraySim::new("K linear", self.wk.clone(), self.bits),
+            wv: LinearArraySim::new("V linear", self.wv.clone(), self.bits),
+            lnq: LayerNormSim::new(
+                "Q LayerNorm",
+                self.lnq_gamma.clone(),
+                self.lnq_beta.clone(),
+                self.steps.s_q.get(),
+                self.bits,
+            ),
+            lnk: LayerNormSim::new(
+                "K LayerNorm",
+                self.lnk_gamma.clone(),
+                self.lnk_beta.clone(),
+                self.steps.s_k.get(),
+                self.bits,
+            ),
+            steps: self.steps.clone(),
+            heads: self.heads,
+            bits: self.bits,
+            attn_bits: self.attn_bits,
+            shift: self.shift,
+        }
+    }
+
+    /// Load the module from an exported cross-language attention case.
+    pub fn from_case(case: &AttnCase, shift: bool) -> Result<AttnModule> {
+        let fold = |l: &crate::model::attn_case::CaseLinear| FoldedLinear {
+            codes: l.codes.clone(),
+            bias_folded: l.bias_folded.clone(),
+            w_scale: l.w_scale.clone(),
+            out_scale: l.out_scale.clone(),
+        };
+        Ok(AttnModule {
+            wq: fold(&case.wq),
+            wk: fold(&case.wk),
+            wv: fold(&case.wv),
+            lnq_gamma: case.lnq_g.clone(),
+            lnq_beta: case.lnq_b.clone(),
+            lnk_gamma: case.lnk_g.clone(),
+            lnk_beta: case.lnk_b.clone(),
+            steps: AttentionSteps {
+                s_q: Step::new(case.s_q)?,
+                s_k: Step::new(case.s_k)?,
+                s_v: Step::new(case.s_v)?,
+                s_attn: Step::new(case.s_attn)?,
+                s_o: Step::new(case.s_o)?,
+                // imported pre-folded for bit-exact replay of the export
+                score: ScaleChain::folded(case.score_scale),
+            },
+            s_x: Step::new(case.sx)?,
+            heads: case.heads,
+            bits: case.bits,
+            attn_bits: case.attn_bits,
+            shift,
+        })
+    }
+
+    /// Deterministic single-head module at the paper's Table I geometry
+    /// parameters (uniform steps, identity LayerNorm) — what
+    /// [`AttentionSim::paper_geometry`] instantiates.
+    pub fn paper_shape(d_in: usize, d_head: usize, bits: u32) -> Result<AttnModule> {
+        let mut rng = XorShift::new(1);
+        let mut mk = |_name: &str| -> Result<FoldedLinear> {
+            let w: Vec<f32> = rng.normal_vec(d_head * d_in).iter().map(|v| v * 0.1).collect();
+            let bias = vec![0.0f32; d_head];
+            let step_w = vec![0.05f32; d_head];
+            FoldedLinear::fold(&w, d_head, d_in, &bias, &QuantParams { bits, step_x: 0.1, step_w })
+        };
+        let (wq, wk, wv) = (mk("q")?, mk("k")?, mk("v")?);
+        let s_q = Step::new(0.4)?;
+        let s_k = Step::new(0.4)?;
+        Ok(AttnModule {
+            wq,
+            wk,
+            wv,
+            lnq_gamma: vec![1.0; d_head],
+            lnq_beta: vec![0.0; d_head],
+            lnk_gamma: vec![1.0; d_head],
+            lnk_beta: vec![0.0; d_head],
+            steps: AttentionSteps {
+                s_q,
+                s_k,
+                s_v: Step::new(0.1)?,
+                s_attn: Step::new(1.0 / ((1u32 << bits) - 1) as f32)?,
+                s_o: Step::new(0.1)?,
+                score: ScaleChain::scores(s_q, s_k, d_head),
+            },
+            s_x: Step::new(0.1)?,
+            heads: 1,
+            bits,
+            attn_bits: bits,
+            shift: true,
+        })
+    }
+
+    /// Randomised multi-head module for parity / stress testing: varied
+    /// weights, biases, per-channel steps and LayerNorm affines.
+    pub fn synthetic(d_in: usize, d_out: usize, heads: usize, bits: u32, seed: u64) -> Result<AttnModule> {
+        ensure!(heads > 0 && d_out % heads == 0, "d_out {d_out} must divide into {heads} heads");
+        let mut rng = XorShift::new(seed);
+        let step_x = 0.12f32;
+        let mut mk = |_name: &str| -> Result<FoldedLinear> {
+            let w: Vec<f32> = rng.normal_vec(d_out * d_in).iter().map(|v| v * 0.15).collect();
+            let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
+            let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
+            FoldedLinear::fold(&w, d_out, d_in, &bias, &QuantParams { bits, step_x, step_w })
+        };
+        let (wq, wk, wv) = (mk("q")?, mk("k")?, mk("v")?);
+        let gamma: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
+        let beta: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.2).collect();
+        let s_q = Step::new(0.5)?;
+        let s_k = Step::new(0.5)?;
+        Ok(AttnModule {
+            wq,
+            wk,
+            wv,
+            lnq_gamma: gamma.clone(),
+            lnq_beta: beta.clone(),
+            lnk_gamma: gamma,
+            lnk_beta: beta,
+            steps: AttentionSteps {
+                s_q,
+                s_k,
+                s_v: Step::new(0.1)?,
+                s_attn: Step::new(1.0 / ((1u32 << bits) - 1) as f32)?,
+                s_o: Step::new(0.1)?,
+                score: ScaleChain::scores(s_q, s_k, d_out / heads),
+            },
+            s_x: Step::new(step_x)?,
+            heads,
+            bits,
+            attn_bits: bits,
+            shift: true,
+        })
+    }
+
+    /// Random input codes (`tokens` × `d_in`) in this module's input spec.
+    pub fn random_input(&self, tokens: usize, seed: u64) -> Result<QTensor> {
+        let spec = self.input_spec();
+        let (qmin, qmax) = spec.range();
+        let mut rng = XorShift::new(seed);
+        QTensor::new(
+            IntMat::new(tokens, self.d_in(), rng.codes(tokens * self.d_in(), qmin, qmax)),
+            spec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_shapes_and_spec() {
+        let m = AttnModule::synthetic(16, 8, 2, 3, 9).unwrap();
+        assert_eq!(m.d_in(), 16);
+        assert_eq!(m.d_out(), 8);
+        assert_eq!(m.input_spec().bits, 3);
+        assert!(m.input_spec().signed);
+        let x = m.random_input(5, 1).unwrap();
+        assert_eq!((x.rows(), x.cols()), (5, 16));
+        assert!(AttnModule::synthetic(16, 9, 2, 3, 9).is_err());
+    }
+
+    #[test]
+    fn to_sim_runs() {
+        let m = AttnModule::synthetic(12, 6, 1, 3, 11).unwrap();
+        let x = m.random_input(4, 2).unwrap();
+        let out = m.to_sim().run(&x).unwrap();
+        assert_eq!((out.pv_codes.rows(), out.pv_codes.cols()), (4, 6));
+    }
+}

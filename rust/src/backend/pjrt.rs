@@ -1,0 +1,161 @@
+//! [`PjrtBackend`] — the AOT-compiled Pallas attention artifact executed
+//! through the PJRT runtime: the same integer codes in, the artifact's
+//! fp attention output out (the exported graph dequantizes at its output
+//! boundary, so this backend fills `out_values`, not `out_codes`).
+//!
+//! Requires `make artifacts`; construction fails with a clear message
+//! otherwise, and the registry surfaces that to the CLI.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::Engine;
+use crate::util::tensorio::{Data, Tensor};
+use crate::util::Json;
+
+use super::{AttnRequest, AttnResponse, Backend, Capabilities, QuantSpec, Step};
+
+/// The PJRT-executed Pallas-attention path.
+pub struct PjrtBackend {
+    engine: Engine,
+    exe_name: String,
+    artifacts: PathBuf,
+    /// Input shape the artifact was lowered with ([tokens, dim]).
+    input_shape: Vec<usize>,
+    /// The quantizer spec the artifact's input codes were produced with
+    /// (from the exported attn_case scalars, when present) — requests
+    /// are validated against it rather than trusted.
+    expected_spec: Option<QuantSpec>,
+}
+
+impl PjrtBackend {
+    /// Load + compile the `attn_pallas` artifact for `bits`.
+    pub fn load(artifacts: &Path, bits: u32) -> Result<PjrtBackend> {
+        let mut engine = Engine::new(artifacts)?;
+        let spec = engine
+            .manifest
+            .executables
+            .iter()
+            .find(|e| e.mode == "attn_pallas" && e.bits == bits)
+            .ok_or_else(|| anyhow!("no attn_pallas executable for bits={bits} in the manifest"))?
+            .clone();
+        let exe_name = spec.name.clone();
+        engine.load(&exe_name)?;
+        let input_shape = spec
+            .inputs
+            .first()
+            .map(|s| s.shape.clone())
+            .ok_or_else(|| anyhow!("{exe_name}: spec has no inputs"))?;
+        ensure!(input_shape.len() == 2, "{exe_name}: expected [tokens, dim] input, got {input_shape:?}");
+        let expected_spec = read_case_input_spec(artifacts)?;
+        Ok(PjrtBackend {
+            engine,
+            exe_name,
+            artifacts: artifacts.to_path_buf(),
+            input_shape,
+            expected_spec,
+        })
+    }
+}
+
+/// Read the exported Δ̄_X / bits from `attn_case/scalars.json` (cheap —
+/// no tensor payloads), if the case was exported alongside the HLO.
+fn read_case_input_spec(artifacts: &Path) -> Result<Option<QuantSpec>> {
+    let path = artifacts.join("attn_case").join("scalars.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return Ok(None);
+    };
+    let j = Json::parse(&text)?;
+    match (j.get("sx").and_then(Json::as_f64), j.get("bits").and_then(Json::as_f64)) {
+        (Some(sx), Some(bits)) => {
+            Ok(Some(QuantSpec::signed(bits as u32, Step::new(sx as f32)?)))
+        }
+        _ => Ok(None),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { bit_exact_codes: false, hardware_stats: false, needs_artifacts: true }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "PJRT ({}) executing {} from {:?}, input {:?}",
+            self.engine.platform(),
+            self.exe_name,
+            self.artifacts,
+            self.input_shape,
+        )
+    }
+
+    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
+        let t0 = Instant::now();
+        let (tokens, dim) = (self.input_shape[0], self.input_shape[1]);
+        ensure!(
+            req.x.rows() == tokens && req.x.cols() == dim,
+            "input {}×{} does not match the artifact's static shape {}×{}",
+            req.x.rows(),
+            req.x.cols(),
+            tokens,
+            dim
+        );
+        if let Some(exp) = &self.expected_spec {
+            ensure!(
+                req.x.spec.signed == exp.signed && req.x.spec.bits == exp.bits,
+                "input spec {:?} does not match the artifact's {:?}",
+                req.x.spec,
+                exp
+            );
+            let (got, want) = (req.x.spec.step.get(), exp.step.get());
+            ensure!(
+                (got - want).abs() <= 1e-3 * want.abs().max(got.abs()),
+                "input step {got} does not match the artifact's exported Δ̄_X {want}"
+            );
+        }
+        let exe = self
+            .engine
+            .get(&self.exe_name)
+            .ok_or_else(|| anyhow!("executable dropped"))?;
+        let t = Tensor {
+            shape: self.input_shape.clone(),
+            data: Data::I32(req.x.codes.data.clone()),
+        };
+        let out = exe.run(&[t])?;
+        let values = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output"))?
+            .as_f32()?
+            .to_vec();
+        Ok(AttnResponse {
+            out_codes: None,
+            out_values: Some(values),
+            stages: None,
+            report: None,
+            elapsed: t0.elapsed(),
+        })
+    }
+}
+
+// PjRtClient/LoadedExecutable wrap heap pointers used from a single
+// thread; callers move the whole backend onto one worker thread and
+// never share it (same contract as coordinator::PjrtExecutor).
+unsafe impl Send for PjrtBackend {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = PjrtBackend::load(Path::new("/nonexistent-artifacts"), 3).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    }
+}

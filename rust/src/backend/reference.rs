@@ -1,0 +1,221 @@
+//! [`ReferenceBackend`] — the bit-accurate golden reference: the
+//! attention pipeline composed from [`crate::quant`] primitives
+//! (`int_matmul`, `qlayernorm_comparator`, `qk_attention`) with scalar
+//! epilogue loops. No hardware model, no cycle accounting — this is the
+//! answer every other substrate must reproduce bit-for-bit.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::quant::layernorm::qlayernorm_comparator;
+use crate::quant::linear::{int_matmul, IntMat};
+use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
+use crate::quant::round_half_even;
+use crate::quant::softmax::qk_attention;
+
+use super::{AttnModule, AttnRequest, AttnResponse, Backend, Capabilities, StageCodes};
+
+/// The quant-composition reference execution path.
+#[derive(Debug)]
+pub struct ReferenceBackend {
+    module: AttnModule,
+}
+
+impl ReferenceBackend {
+    pub fn new(module: AttnModule) -> ReferenceBackend {
+        ReferenceBackend { module }
+    }
+
+    pub fn module(&self) -> &AttnModule {
+        &self.module
+    }
+
+    fn check_input(&self, x: &QTensor) -> Result<()> {
+        let want = self.module.input_spec();
+        ensure!(x.cols() == self.module.d_in(), "input D {} != module {}", x.cols(), self.module.d_in());
+        ensure!(
+            x.spec.signed == want.signed && x.spec.bits == want.bits,
+            "input spec {:?} does not match the module's {:?}",
+            x.spec,
+            want
+        );
+        let (got, exp) = (x.spec.step.get(), want.step.get());
+        ensure!(
+            (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
+            "input step {got} does not match the module Δ̄_X {exp}"
+        );
+        Ok(())
+    }
+
+    /// `(acc + b̃_j) · scale_j` over an integer matmul — the Eq. 2 linear.
+    fn linear_fp(
+        x: &IntMat,
+        folded: &crate::quant::fold::FoldedLinear,
+        weight_scale_only: bool,
+    ) -> Result<Vec<f32>> {
+        let acc = int_matmul(x, &folded.codes)?;
+        let n = folded.codes.rows;
+        let mut out = vec![0f32; acc.rows * n];
+        for j in 0..n {
+            let scale = if weight_scale_only { folded.w_scale[j] } else { folded.out_scale[j] };
+            for i in 0..acc.rows {
+                out[i * n + j] = (acc.at(i, j) as f32 + folded.bias_folded[j]) * scale;
+            }
+        }
+        Ok(out)
+    }
+
+    fn transpose(m: &IntMat) -> IntMat {
+        let mut data = vec![0i32; m.rows * m.cols];
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                data[c * m.rows + r] = m.at(r, c);
+            }
+        }
+        IntMat::new(m.cols, m.rows, data)
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &str {
+        "ref"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { bit_exact_codes: true, hardware_stats: false, needs_artifacts: false }
+    }
+
+    fn describe(&self) -> String {
+        let m = &self.module;
+        format!(
+            "quant golden reference: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {})",
+            m.d_in(),
+            m.d_out(),
+            m.heads,
+            m.bits,
+            m.attn_bits,
+            if m.shift { "shift-exp" } else { "exact-exp" },
+        )
+    }
+
+    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
+        let t0 = Instant::now();
+        self.check_input(&req.x)?;
+        let m = &self.module;
+        let (n, d) = (req.x.rows(), m.d_out());
+        let dh = d / m.heads;
+        let steps = &m.steps;
+
+        // Q/K linears post-scaled by diag(Δ_W) only; V through its quantizer.
+        let q_pre = Self::linear_fp(&req.x.codes, &m.wq, true)?;
+        let k_pre = Self::linear_fp(&req.x.codes, &m.wk, true)?;
+        let v_acc = int_matmul(&req.x.codes, &m.wv.codes)?;
+        let v_spec = QuantSpec::signed(m.bits, steps.s_v);
+        let (v_min, v_max) = v_spec.range();
+        let mut v_data = vec![0i32; n * d];
+        for j in 0..d {
+            // scales absorbed into the quantizer threshold (§IV-B)
+            let eff = m.wv.out_scale[j] / steps.s_v.get();
+            for i in 0..n {
+                let v = (v_acc.at(i, j) as f32 + m.wv.bias_folded[j]) * eff;
+                v_data[i * d + j] = (round_half_even(v) as i32).clamp(v_min, v_max);
+            }
+        }
+        let v_codes = QTensor::new(IntMat::new(n, d, v_data), v_spec)?;
+
+        // Quantizing LayerNorms (the Fig. 5 comparator identity).
+        let ln = |x: &[f32], gamma: &[f32], beta: &[f32], step: f32| -> Vec<i32> {
+            let mut out = vec![0i32; n * d];
+            for r in 0..n {
+                let c = qlayernorm_comparator(&x[r * d..(r + 1) * d], gamma, beta, step, m.bits, 1e-6);
+                out[r * d..(r + 1) * d].copy_from_slice(&c);
+            }
+            out
+        };
+        let q_codes = QTensor::new(
+            IntMat::new(n, d, ln(&q_pre, &m.lnq_gamma, &m.lnq_beta, steps.s_q.get())),
+            QuantSpec::signed(m.bits, steps.s_q),
+        )?;
+        let k_codes = QTensor::new(
+            IntMat::new(n, d, ln(&k_pre, &m.lnk_gamma, &m.lnk_beta, steps.s_k.get())),
+            QuantSpec::signed(m.bits, steps.s_k),
+        )?;
+
+        // Per-head QKᵀ→softmax→quantize and attn·V requantization.
+        let attn_spec = QuantSpec::unsigned(m.attn_bits, steps.s_attn);
+        let out_spec = QuantSpec::signed(m.bits, steps.s_o);
+        let (o_min, o_max) = out_spec.range();
+        let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
+        let mut pv = vec![0i32; n * d];
+        let mut attn_head0 = None;
+        for h in 0..m.heads {
+            let qh = q_codes.slice_cols(h * dh, dh);
+            let kh = k_codes.slice_cols(h * dh, dh);
+            let vh = v_codes.slice_cols(h * dh, dh);
+            let (attn, _scores) = qk_attention(
+                &qh.codes,
+                &kh.codes,
+                steps.score.eff(),
+                steps.s_attn.get(),
+                m.attn_bits,
+                m.shift,
+            )?;
+            let acc = int_matmul(&attn, &Self::transpose(&vh.codes))?;
+            for i in 0..n {
+                for j in 0..dh {
+                    pv[i * d + h * dh + j] =
+                        (round_half_even(acc.at(i, j) as f32 * eff_pv) as i32).clamp(o_min, o_max);
+                }
+            }
+            if h == 0 {
+                attn_head0 = Some(QTensor::new(attn, attn_spec)?);
+            }
+        }
+
+        Ok(AttnResponse {
+            out_codes: Some(QTensor::new(IntMat::new(n, d, pv), out_spec)?),
+            out_values: None,
+            stages: Some(StageCodes {
+                q: q_codes,
+                k: k_codes,
+                v: v_codes,
+                attn_head0: attn_head0.expect("at least one head"),
+            }),
+            report: None,
+            elapsed: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_runs_and_reports_shapes() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 5).unwrap();
+        let x = module.random_input(6, 3).unwrap();
+        let mut b = ReferenceBackend::new(module);
+        let resp = b.run_attention(&AttnRequest::new(x)).unwrap();
+        let out = resp.out_codes.unwrap();
+        assert_eq!((out.rows(), out.cols()), (6, 8));
+        let stages = resp.stages.unwrap();
+        assert_eq!(stages.attn_head0.rows(), 6);
+        assert!(resp.report.is_none());
+        assert!(b.capabilities().bit_exact_codes);
+        assert!(!b.capabilities().needs_artifacts);
+    }
+
+    #[test]
+    fn rejects_wrong_input_spec() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 5).unwrap();
+        let mut b = ReferenceBackend::new(module);
+        let bad = QTensor::new(
+            IntMat::new(2, 16, vec![0; 32]),
+            QuantSpec::signed(4, crate::quant::Step::new(0.12).unwrap()),
+        )
+        .unwrap();
+        assert!(b.run_attention(&AttnRequest::new(bad)).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! [`BackendRegistry`] — name-keyed construction of [`Backend`]s.
+//!
+//! The registry is the single dispatch seam: `ivit --backend ref|sim|pjrt`,
+//! the coordinator's attention executor, the examples and the benches all
+//! resolve backends here, and future substrates register under new names
+//! without touching any call site.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend};
+
+/// Everything a factory may need to build a backend.
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    /// An already-resolved module: when set, [`Self::resolve_module`]
+    /// returns it as-is. Callers that need the module themselves (e.g.
+    /// to size an executor) resolve once, seed this field, and then
+    /// create backends — guaranteeing both sides see the same module
+    /// and the attn_case tensors are read from disk only once.
+    pub module: Option<AttnModule>,
+    /// Artifacts directory; when it holds an exported `attn_case`, the
+    /// integer backends replay that exact module, and `pjrt` compiles
+    /// its executable from it.
+    pub artifacts: Option<PathBuf>,
+    /// Synthetic-module geometry used when no attn_case is available.
+    pub d_in: usize,
+    pub d_head: usize,
+    pub heads: usize,
+    pub bits: u32,
+    /// Eq. 4 shift exponential (false = exact-exp ablation).
+    pub shift: bool,
+    /// Seed for the synthetic module parameters.
+    pub seed: u64,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        // DeiT-S attention geometry (paper §V-B)
+        BackendConfig {
+            module: None,
+            artifacts: None,
+            d_in: 384,
+            d_head: 64,
+            heads: 1,
+            bits: 3,
+            shift: true,
+            seed: 7,
+        }
+    }
+}
+
+impl BackendConfig {
+    /// Resolve the attention module this config describes: the
+    /// pre-resolved [`Self::module`] when seeded, else the exported
+    /// attn_case when present, else a randomized synthetic module.
+    pub fn resolve_module(&self) -> Result<AttnModule> {
+        if let Some(m) = &self.module {
+            return Ok(m.clone());
+        }
+        if let Some(dir) = &self.artifacts {
+            let case_dir = dir.join("attn_case");
+            if case_dir.join("scalars.json").exists() {
+                let case = crate::model::AttnCase::load(&case_dir)?;
+                return AttnModule::from_case(&case, self.shift);
+            }
+        }
+        let mut m = AttnModule::synthetic(
+            self.d_in,
+            self.d_head * self.heads,
+            self.heads,
+            self.bits,
+            self.seed,
+        )?;
+        m.shift = self.shift;
+        Ok(m)
+    }
+}
+
+type Factory = Box<dyn Fn(&BackendConfig) -> Result<Box<dyn Backend>>>;
+
+/// Name-keyed backend construction.
+pub struct BackendRegistry {
+    factories: BTreeMap<String, Factory>,
+}
+
+impl BackendRegistry {
+    /// An empty registry.
+    pub fn new() -> BackendRegistry {
+        BackendRegistry { factories: BTreeMap::new() }
+    }
+
+    /// The built-in trio: `ref`, `sim`, `pjrt`.
+    pub fn with_defaults() -> BackendRegistry {
+        let mut r = BackendRegistry::new();
+        r.register("ref", |cfg| {
+            Ok(Box::new(ReferenceBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>)
+        });
+        r.register("sim", |cfg| {
+            Ok(Box::new(SimBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>)
+        });
+        r.register("pjrt", |cfg| {
+            let dir = cfg
+                .artifacts
+                .clone()
+                .ok_or_else(|| anyhow!("the pjrt backend needs --artifacts DIR"))?;
+            Ok(Box::new(PjrtBackend::load(&dir, cfg.bits)?) as Box<dyn Backend>)
+        });
+        r
+    }
+
+    /// Register (or replace) a factory under `name`.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn(&BackendConfig) -> Result<Box<dyn Backend>> + 'static,
+    ) {
+        self.factories.insert(name.into(), Box::new(factory));
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Build the backend registered under `name`.
+    pub fn create(&self, name: &str, cfg: &BackendConfig) -> Result<Box<dyn Backend>> {
+        match self.factories.get(name) {
+            Some(f) => f(cfg),
+            None => Err(anyhow!(
+                "unknown backend '{name}' — expected one of {:?}",
+                self.names()
+            )),
+        }
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        BackendRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AttnRequest;
+
+    fn small_cfg() -> BackendConfig {
+        BackendConfig { d_in: 12, d_head: 4, heads: 2, ..BackendConfig::default() }
+    }
+
+    #[test]
+    fn defaults_expose_the_trio() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["pjrt", "ref", "sim"]);
+    }
+
+    #[test]
+    fn unknown_name_lists_the_valid_set() {
+        let r = BackendRegistry::with_defaults();
+        let err = r.create("tpu", &BackendConfig::default()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown backend 'tpu'"), "{msg}");
+        assert!(msg.contains("ref") && msg.contains("sim") && msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn creates_integer_backends_and_runs_them() {
+        let r = BackendRegistry::with_defaults();
+        let cfg = small_cfg();
+        for name in ["ref", "sim"] {
+            let mut b = r.create(name, &cfg).unwrap();
+            assert_eq!(b.name(), name);
+            assert!(!b.describe().is_empty());
+            let module = cfg.resolve_module().unwrap();
+            let x = module.random_input(5, 2).unwrap();
+            let resp = b.run_attention(&AttnRequest::new(x)).unwrap();
+            assert!(resp.out_codes.is_some());
+        }
+    }
+
+    #[test]
+    fn pjrt_requires_artifacts() {
+        let r = BackendRegistry::with_defaults();
+        let err = r.create("pjrt", &BackendConfig::default()).unwrap_err();
+        assert!(format!("{err}").contains("--artifacts"));
+    }
+
+    #[test]
+    fn custom_registration_wins() {
+        let mut r = BackendRegistry::with_defaults();
+        r.register("ref", |cfg| {
+            Ok(Box::new(super::super::ReferenceBackend::new(cfg.resolve_module()?))
+                as Box<dyn Backend>)
+        });
+        assert_eq!(r.names().len(), 3);
+    }
+}

@@ -69,6 +69,18 @@ impl Args {
             None => bail!("missing required flag --{key}"),
         }
     }
+
+    /// Enum-valued flag: accepts only one of `allowed`, defaulting to
+    /// `default` when absent. An invalid value is an error listing the
+    /// valid set — never a silent fallback.
+    pub fn choice(&self, key: &str, allowed: &[&str], default: &str) -> Result<String> {
+        debug_assert!(allowed.contains(&default), "default '{default}' not in {allowed:?}");
+        match self.flags.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) if allowed.contains(&v.as_str()) => Ok(v.clone()),
+            Some(v) => bail!("--{key} must be one of {allowed:?}, got '{v}'"),
+        }
+    }
 }
 
 pub const USAGE: &str = "\
@@ -77,16 +89,19 @@ ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
 USAGE: ivit <command> [flags]
 
 COMMANDS:
-  serve       run the batching inference server over an AOT artifact
-              --artifacts DIR  --mode integerized|qvit|fp32  --bits N
-              --batch N  --requests N  --rate R (req/s, 0 = closed-loop)
+  serve       run the batching inference server
+              --backend pjrt|sim|ref (default pjrt)
+              pjrt: --artifacts DIR --mode integerized|qvit|fp32 --bits N
+              sim/ref (no artifacts needed): --tokens N --din D --dhead O
+              common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
   eval        Table II: accuracy of a model variant on the eval set
               --artifacts DIR  --mode ...  --bits N  [--limit N]
   power       Table I: per-block power of the systolic self-attention
               --tokens N --din D --dhead O --bits B [--freq-mhz F]
-  simulate    run the attention simulator on the exported attn_case and
-              verify bit-exactness against the JAX reference
-              --artifacts DIR [--exact-exp]
+  simulate    run the attention workload on a backend and verify
+              bit-exactness against the exported JAX attn_case
+              --backend sim|ref|pjrt  --artifacts DIR  [--exact-exp]
+              (--synthetic: run a random module instead — verifies nothing)
   info        print the artifact manifest summary  --artifacts DIR
   help        this text
 ";
@@ -125,5 +140,47 @@ mod tests {
         assert!(a.require("artifacts").is_err());
         let b = parse("eval --bits x");
         assert!(b.u32("bits", 0).is_err());
+    }
+
+    #[test]
+    fn choice_accepts_defaults_and_rejects_typos() {
+        let a = parse("serve --backend sim");
+        assert_eq!(a.choice("backend", &["ref", "sim", "pjrt"], "pjrt").unwrap(), "sim");
+        // absent flag → default
+        let b = parse("serve");
+        assert_eq!(b.choice("backend", &["ref", "sim", "pjrt"], "pjrt").unwrap(), "pjrt");
+        // invalid value → error naming the valid set, not a silent default
+        let c = parse("serve --backend simm");
+        let err = c.choice("backend", &["ref", "sim", "pjrt"], "pjrt").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("simm") && msg.contains("ref") && msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn equals_form_with_empty_and_spaced_values() {
+        let a = parse("eval --mode= --name=a=b");
+        assert_eq!(a.str("mode", "x"), "");
+        // only the first '=' splits key from value
+        assert_eq!(a.str("name", ""), "a=b");
+    }
+
+    #[test]
+    fn trailing_bare_flag_is_boolean_true() {
+        let a = parse("simulate --exact-exp");
+        assert!(a.bool("exact-exp"));
+        let b = parse("simulate --exact-exp --artifacts dir");
+        assert!(b.bool("exact-exp"));
+        assert_eq!(b.str("artifacts", ""), "dir");
+    }
+
+    #[test]
+    fn negative_number_values_are_flag_values() {
+        // `-3` does not start with `--`, so it is consumed as the value
+        let a = parse("power --offset -3 --rate -2.5");
+        assert_eq!(a.str("offset", ""), "-3");
+        assert!((a.f64("rate", 0.0).unwrap() + 2.5).abs() < 1e-12);
+        // and via the equals form
+        let b = parse("power --offset=-7");
+        assert_eq!(b.str("offset", ""), "-7");
     }
 }

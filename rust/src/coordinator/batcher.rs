@@ -100,6 +100,21 @@ impl Handle {
         Ok(rx.recv()?)
     }
 
+    /// Submit, backing off briefly while the bounded queue is full.
+    /// Errors if the coordinator has shut down — load generators share
+    /// this instead of hand-rolling the retry loop.
+    pub fn submit_blocking(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+        loop {
+            match self.submit(image.clone()) {
+                Ok(rx) => return Ok(rx),
+                Err(SubmitError::QueueFull) => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(SubmitError::Closed) => anyhow::bail!("coordinator closed"),
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         self.metrics.snapshot()
     }
@@ -200,7 +215,7 @@ fn worker_loop<E: BatchExecutor>(
         for (i, r) in batch.iter().enumerate() {
             payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
         }
-        let result = executor.execute(&payload);
+        let result = executor.execute(&payload, batch.len());
         metrics.record_batch(batch.len());
 
         let real = batch.len();

@@ -1,20 +1,27 @@
 //! Batch executors: the trait the batcher drives, its PJRT-backed
-//! implementation, and a deterministic mock for coordinator tests.
+//! implementation, a [`Backend`]-driven attention executor (the
+//! multi-backend serving seam), and a deterministic mock for
+//! coordinator tests.
 
 use anyhow::Result;
 
+use crate::backend::{AttnRequest, Backend, QTensor};
 use crate::runtime::Engine;
 use crate::util::tensorio::Tensor;
 
 /// Executes one padded batch of images → logits.
 ///
 /// `images` is row-major `[batch, h, w, c]` with exactly `batch_size()`
-/// rows (the batcher pads); returns `batch_size() × num_classes` logits.
+/// rows (the batcher pads); the first `real_rows` are real requests and
+/// the rest zero padding whose outputs are dropped. Returns
+/// `batch_size() × num_classes` logits. Executors with static shapes
+/// (PJRT) ignore `real_rows`; per-row executors use it to skip the
+/// padding work.
 pub trait BatchExecutor: Send {
     fn batch_size(&self) -> usize;
     fn image_elems(&self) -> usize;
     fn num_classes(&self) -> usize;
-    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>>;
+    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>>;
 }
 
 /// PJRT-backed executor over a loaded manifest executable.
@@ -57,7 +64,8 @@ impl BatchExecutor for PjrtExecutor {
         self.classes
     }
 
-    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+    fn execute(&mut self, images: &[f32], _real_rows: usize) -> Result<Vec<f32>> {
+        // AOT shapes are static — the padded batch executes as-is.
         anyhow::ensure!(images.len() == self.batch * self.image_elems, "batch payload size");
         let t = Tensor::f32(self.input_shape.clone(), images.to_vec());
         let exe = self
@@ -78,6 +86,84 @@ impl BatchExecutor for PjrtExecutor {
 // the coordinator moves the whole executor onto its one worker thread and
 // never shares it, so the move-only Send is sound.
 unsafe impl Send for PjrtExecutor {}
+
+/// Serves quantized-attention inference through any registered
+/// [`Backend`] — the coordinator's multi-backend seam. Each request
+/// payload is a flattened fp activation matrix (`tokens × d_in`); the
+/// executor quantizes it with the backend module's input spec, runs one
+/// `AttnRequest` per row of the batch, and returns the dequantized
+/// output activations as the response vector.
+///
+/// Unlike [`PjrtExecutor`] this needs no artifacts, so `ivit serve
+/// --backend sim|ref` exercises the full batching stack standalone.
+pub struct AttnBatchExecutor {
+    backend: Box<dyn Backend>,
+    tokens: usize,
+    d_in: usize,
+    d_out: usize,
+    spec: crate::backend::QuantSpec,
+    batch: usize,
+}
+
+impl AttnBatchExecutor {
+    /// Wrap a backend serving `tokens × d_in` activations, `batch`
+    /// requests per executor call.
+    pub fn new(
+        backend: Box<dyn Backend>,
+        module: &crate::backend::AttnModule,
+        tokens: usize,
+        batch: usize,
+    ) -> Self {
+        AttnBatchExecutor {
+            backend,
+            tokens,
+            d_in: module.d_in(),
+            d_out: module.d_out(),
+            spec: module.input_spec(),
+            batch,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        self.backend.describe()
+    }
+}
+
+impl BatchExecutor for AttnBatchExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.tokens * self.d_in
+    }
+
+    fn num_classes(&self) -> usize {
+        self.tokens * self.d_out
+    }
+
+    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
+        let elems = self.image_elems();
+        anyhow::ensure!(images.len() == self.batch * elems, "batch payload size");
+        anyhow::ensure!(real_rows <= self.batch, "real_rows {} > batch {}", real_rows, self.batch);
+        let out_elems = self.num_classes();
+        let mut out = vec![0f32; self.batch * out_elems];
+        // padding rows stay zero — one attention inference per REAL row only
+        for b in 0..real_rows {
+            let row = &images[b * elems..(b + 1) * elems];
+            let x = QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?;
+            let resp = self.backend.run_attention(&AttnRequest::new(x))?;
+            let vals = match (resp.out_codes, resp.out_values) {
+                (Some(codes), _) => codes.dequantize(),
+                (None, Some(v)) => v,
+                (None, None) => anyhow::bail!("backend produced neither codes nor values"),
+            };
+            anyhow::ensure!(vals.len() == out_elems, "backend output size {}", vals.len());
+            out[b * out_elems..(b + 1) * out_elems].copy_from_slice(&vals);
+        }
+        Ok(out)
+    }
+}
 
 /// Deterministic mock: logit k of image i = mean(image i) + k. Lets tests
 /// assert batching math end-to-end without artifacts; can inject failures
@@ -117,7 +203,7 @@ impl BatchExecutor for MockExecutor {
         self.classes
     }
 
-    fn execute(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+    fn execute(&mut self, images: &[f32], _real_rows: usize) -> Result<Vec<f32>> {
         self.calls += 1;
         if let Some(k) = self.fail_every {
             if self.calls % k == 0 {
@@ -147,16 +233,45 @@ mod tests {
     fn mock_is_deterministic() {
         let mut m = MockExecutor::new(2, 4, 3);
         let imgs = vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
-        let a = m.execute(&imgs).unwrap();
+        let a = m.execute(&imgs, 2).unwrap();
         assert_eq!(a, vec![1.0, 2.0, 3.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn attn_executor_serves_backends_end_to_end() {
+        use crate::backend::{AttnModule, ReferenceBackend, SimBackend};
+        let module = AttnModule::synthetic(12, 6, 1, 3, 21).unwrap();
+        let tokens = 4;
+        let mut rng = crate::util::XorShift::new(3);
+        let img: Vec<f32> = rng.normal_vec(tokens * 12);
+
+        let mut outs = Vec::new();
+        for backend in [
+            Box::new(ReferenceBackend::new(module.clone())) as Box<dyn crate::backend::Backend>,
+            Box::new(SimBackend::new(module.clone())) as Box<dyn crate::backend::Backend>,
+        ] {
+            let mut exec = AttnBatchExecutor::new(backend, &module, tokens, 2);
+            assert_eq!(exec.image_elems(), tokens * 12);
+            assert_eq!(exec.num_classes(), tokens * 6);
+            assert!(!exec.describe().is_empty());
+            let mut payload = img.clone();
+            payload.extend_from_slice(&img);
+            let out = exec.execute(&payload, 2).unwrap();
+            assert_eq!(out.len(), 2 * tokens * 6);
+            // both batch rows saw the same input → identical outputs
+            assert_eq!(&out[..tokens * 6], &out[tokens * 6..]);
+            outs.push(out);
+        }
+        // ref and sim backends dequantize to the same activations
+        assert_eq!(outs[0], outs[1]);
     }
 
     #[test]
     fn mock_fail_injection() {
         let mut m = MockExecutor::new(1, 1, 1);
         m.fail_every = Some(2);
-        assert!(m.execute(&[0.0]).is_ok());
-        assert!(m.execute(&[0.0]).is_err());
-        assert!(m.execute(&[0.0]).is_ok());
+        assert!(m.execute(&[0.0], 1).is_ok());
+        assert!(m.execute(&[0.0], 1).is_err());
+        assert!(m.execute(&[0.0], 1).is_ok());
     }
 }

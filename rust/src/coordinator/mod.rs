@@ -16,5 +16,5 @@ pub mod executor;
 pub mod metrics;
 
 pub use batcher::{BatcherConfig, Coordinator, Handle, Request, Response, SubmitError};
-pub use executor::{BatchExecutor, MockExecutor, PjrtExecutor};
+pub use executor::{AttnBatchExecutor, BatchExecutor, MockExecutor, PjrtExecutor};
 pub use metrics::{Histogram, Snapshot};

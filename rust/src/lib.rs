@@ -5,30 +5,58 @@
 //! (Lin & Shah, 2025) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the coordinator: an inference server (request
-//!   router + dynamic batcher over AOT-compiled PJRT executables), the
-//!   integerization toolchain, and the cycle-level **systolic-array
-//!   simulator** substrate that reproduces the paper's FPGA evaluation
-//!   (Table I).
+//!   router + dynamic batcher), the integerization toolchain, and the
+//!   cycle-level **systolic-array simulator** substrate that reproduces
+//!   the paper's FPGA evaluation (Table I).
 //! * **L2** — the JAX ViT in `python/compile/`, lowered once to HLO text
 //!   (`make artifacts`); never imported at runtime.
 //! * **L1** — Pallas kernels for the integerized attention hot path.
+//!
+//! ## The execution API
+//!
+//! The crate's central seam is [`backend`]: one `Backend` trait
+//! (`run_attention(&AttnRequest) -> AttnResponse`, plus `capabilities()`
+//! and `describe()`) over every substrate that can execute the paper's
+//! integerized attention —
+//!
+//! * `ref` ([`backend::ReferenceBackend`]) — the [`quant`] golden
+//!   reference, scalar loops, bit-accurate;
+//! * `sim` ([`backend::SimBackend`]) — the [`sim`] systolic-array model,
+//!   bit-identical to `ref` **and** cycle/energy-accounted;
+//! * `pjrt` ([`backend::PjrtBackend`]) — the AOT Pallas artifact through
+//!   the [`runtime`] PJRT engine.
+//!
+//! Backends are constructed by name through a
+//! [`backend::BackendRegistry`] (`ivit --backend ref|sim|pjrt`), and all
+//! operands are **typed**: [`quant::QTensor`] (codes + step + bits +
+//! signedness) and [`quant::ScaleChain`] (the explicit Eq. 2 scale
+//! foldings) replace the bare `f32` scales and `bool` flags that used to
+//! cross module boundaries. The cross-backend parity suite
+//! (`tests/backend_parity.rs`) pins `ref` ≡ `sim` bit-identity at DeiT-S
+//! dimensions for every supported bit width.
 //!
 //! Modules:
 //!
 //! * [`util`] — tensor I/O, mini-JSON, PRNG, property-testing harness.
 //! * [`quant`] — bit-accurate integer quantization math: Eq. 2 scale
 //!   folding, the Eq. 4 shift-exponential, the Fig. 5 sqrt/div-free
-//!   LayerNorm comparator.
+//!   LayerNorm comparator, and the typed operand model
+//!   ([`quant::QTensor`], [`quant::ScaleChain`]).
 //! * [`sim`] — the systolic-array hardware model: PE grids, scan chains,
 //!   cycle counts and the activity-based energy model behind Table I.
+//! * [`backend`] — the unified `Backend` trait, the three substrate
+//!   implementations and the name-keyed registry.
 //! * [`model`] — ViT configuration and integerized checkpoint loading.
-//! * [`runtime`] — PJRT engine wrapping the `xla` crate (HLO-text load,
-//!   compile cache, literal marshalling).
+//! * [`runtime`] — PJRT engine (HLO-text load, compile cache, literal
+//!   marshalling); builds against an in-tree stub unless the `xla-rs`
+//!   feature links the real bindings.
 //! * [`coordinator`] — request queue, dynamic batcher, worker pool,
-//!   latency/throughput metrics.
+//!   latency/throughput metrics; serves any [`backend`] via
+//!   [`coordinator::AttnBatchExecutor`].
 //! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
 //!   (criterion is not in this image's offline crate set).
 
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -1,14 +1,18 @@
 //! `ivit` — the L3 coordinator binary.
 //!
 //! Self-contained after `make artifacts`: loads AOT-compiled HLO via PJRT
-//! and never touches Python.
+//! and never touches Python. The `--backend` flag selects the execution
+//! substrate through the [`ivit::backend::BackendRegistry`]: `pjrt`
+//! (AOT artifacts), `sim` (systolic-array simulator) or `ref` (quant
+//! golden reference) — the latter two run without any artifacts.
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+use ivit::backend::{AttnRequest, BackendConfig, BackendRegistry};
 use ivit::cli::{Args, USAGE};
-use ivit::coordinator::{BatcherConfig, Coordinator, PjrtExecutor, SubmitError};
+use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::{AttnCase, EvalSet};
 use ivit::runtime::Engine;
 use ivit::sim::{AttentionSim, EnergyModel};
@@ -48,10 +52,32 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
 }
 
+fn backend_config(args: &Args) -> Result<BackendConfig> {
+    let defaults = BackendConfig::default();
+    Ok(BackendConfig {
+        module: None,
+        artifacts: Some(artifacts_dir(args)),
+        d_in: args.usize("din", defaults.d_in)?,
+        d_head: args.usize("dhead", defaults.d_head)?,
+        heads: args.usize("heads", defaults.heads)?,
+        bits: args.u32("bits", defaults.bits)?,
+        shift: !args.bool("exact-exp"),
+        seed: 7,
+    })
+}
+
 /// `ivit serve` — the end-to-end driver: batching server + synthetic load.
 fn cmd_serve(args: &Args) -> Result<()> {
+    match args.choice("backend", &["pjrt", "sim", "ref"], "pjrt")?.as_str() {
+        "pjrt" => cmd_serve_images(args),
+        other => cmd_serve_attention(args, other),
+    }
+}
+
+/// Image-classification serving over the AOT executables (PJRT backend).
+fn cmd_serve_images(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let mode = args.str("mode", "integerized");
+    let mode = args.choice("mode", &["integerized", "qvit", "fp32"], "integerized")?;
     let bits = args.u32("bits", 3)?;
     let batch = args.usize("batch", 8)?;
     let n_requests = args.usize("requests", 256)?;
@@ -82,16 +108,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let img = ev.image(idx)?.to_vec();
         assert_eq!(img.len(), image_elems);
         labels.push(ev.labels[idx]);
-        loop {
-            match h.submit(img.clone()) {
-                Ok(rx) => {
-                    receivers.push(rx);
-                    break;
-                }
-                Err(SubmitError::QueueFull) => std::thread::sleep(Duration::from_micros(200)),
-                Err(SubmitError::Closed) => anyhow::bail!("coordinator closed"),
-            }
-        }
+        receivers.push(h.submit_blocking(img)?);
         if rate > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
         }
@@ -117,7 +134,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .count();
     let s = coord.shutdown();
-    println!("\n== serve report ({mode}/{bits}b, batch {batch}) ==");
+    println!("\n== serve report (pjrt {mode}/{bits}b, batch {batch}) ==");
     println!("requests      : {n_requests} ({} rejected-retries recorded)", s.rejected);
     println!("wall time     : {:.3}s", wall.as_secs_f64());
     println!("throughput    : {:.1} img/s", n_requests as f64 / wall.as_secs_f64());
@@ -129,10 +146,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Attention serving through a registry backend (no artifacts needed).
+fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
+    let mut cfg = backend_config(args)?;
+    let tokens = args.usize("tokens", 198)?;
+    let batch = args.usize("batch", 4)?;
+    let n_requests = args.usize("requests", 32)?;
+    let rate = args.f64("rate", 0.0)?;
+    let max_wait_ms = args.f64("max-wait-ms", 2.0)?;
+
+    let registry = BackendRegistry::with_defaults();
+    let module = cfg.resolve_module()?;
+    cfg.module = Some(module.clone()); // backend sees the same module
+    let backend = registry.create(backend_name, &cfg)?;
+    println!("backend: {backend_name} — {}", backend.describe());
+    let exec = AttnBatchExecutor::new(backend, &module, tokens, batch);
+    let image_elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
+
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 512,
+            max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+        },
+    );
+    let h = coord.handle();
+    println!(
+        "serving {n_requests} attention requests ({tokens}×{} activations, rate = {}) ...",
+        module.d_in(),
+        if rate > 0.0 { format!("{rate} req/s") } else { "closed-loop".into() }
+    );
+    let mut rng = XorShift::new(11);
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let act: Vec<f32> = rng.normal_vec(image_elems);
+        receivers.push(h.submit_blocking(act)?);
+        if rate > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+        }
+    }
+    for rx in receivers {
+        let resp = rx.recv()?;
+        if let Some(e) = resp.error {
+            anyhow::bail!("request {} failed: {e}", resp.id);
+        }
+    }
+    let wall = t0.elapsed();
+    let s = coord.shutdown();
+    println!("\n== serve report ({backend_name} attention, batch {batch}) ==");
+    println!("requests      : {n_requests}");
+    println!("wall time     : {:.3}s", wall.as_secs_f64());
+    println!("throughput    : {:.2} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!("mean batch    : {:.2}", s.mean_batch);
+    println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
+    println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
+    Ok(())
+}
+
 /// `ivit eval` — Table II accuracy for one variant.
 fn cmd_eval(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let mode = args.str("mode", "integerized");
+    let mode = args.choice("mode", &["integerized", "qvit", "fp32"], "integerized")?;
     let bits = args.u32("bits", 3)?;
     let mut engine = Engine::new(&dir)?;
     // prefer the largest batch variant available
@@ -210,34 +285,84 @@ fn cmd_power(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ivit simulate` — replay the exported attention case bit-exactly.
+/// `ivit simulate` — run the attention workload on a registry backend;
+/// when the exported attn_case is present, verify bit-exactness against
+/// the JAX reference.
 fn cmd_simulate(args: &Args) -> Result<()> {
+    let backend_name = args.choice("backend", &["sim", "ref", "pjrt"], "sim")?;
+    let mut cfg = backend_config(args)?;
+    let shift = cfg.shift;
+
+    // Resolve the input before building the backend: when a case is
+    // exported, its own bit width (not the --bits default) must select
+    // the pjrt executable and size the comparison.
     let dir = artifacts_dir(args);
-    let case = AttnCase::load(&dir.join("attn_case"))?;
-    let shift = !args.bool("exact-exp");
-    let sim = case.build_sim(shift);
+    let case_dir = dir.join("attn_case");
+    let (x, case) = if case_dir.join("scalars.json").exists() {
+        let case = AttnCase::load(&case_dir)?;
+        cfg.bits = case.bits;
+        cfg.module = Some(case.to_module(shift)?); // don't re-read the case
+        (case.input()?, Some(case))
+    } else if args.bool("synthetic") {
+        // explicit opt-in only: a synthetic run verifies nothing, so it
+        // must never be a silent fallback a CI gate can mistake for PASS
+        println!("(--synthetic — random module, nothing to verify against)");
+        let module = cfg.resolve_module()?;
+        let x = module.random_input(args.usize("tokens", 198)?, 7)?;
+        cfg.module = Some(module);
+        (x, None)
+    } else {
+        anyhow::bail!(
+            "no exported attn_case under {case_dir:?} — run `make artifacts`, \
+             or pass --synthetic to run an unverified synthetic module"
+        );
+    };
+
+    let registry = BackendRegistry::with_defaults();
+    let mut backend = registry.create(&backend_name, &cfg)?;
+    println!("backend: {backend_name} — {}", backend.describe());
+
     let t0 = Instant::now();
-    let out = sim.run(&case.x_codes)?;
+    let resp = backend.run_attention(&AttnRequest::new(x.clone()))?;
     let dt = t0.elapsed();
-    let mut ok = true;
-    ok &= check("Q codes", &out.q_codes.data, &case.expect_q_codes.data);
-    ok &= check("K codes", &out.k_codes.data, &case.expect_k_codes.data);
-    ok &= check("V codes", &out.v_codes.data, &case.expect_v_codes.data);
-    if shift {
-        ok &= check("attn head0", &out.attn_codes[0].data, &case.expect_attn_head0.data);
-    }
     println!(
-        "simulated {} tokens × {} dim, {} heads in {:.1} ms — {}",
-        case.tokens,
-        case.dim,
-        case.heads,
-        dt.as_secs_f64() * 1e3,
-        if ok { "BIT-EXACT vs JAX" } else { "MISMATCH" }
+        "ran {} tokens × {} dim in {:.1} ms",
+        x.rows(),
+        x.cols(),
+        dt.as_secs_f64() * 1e3
     );
-    let m = EnergyModel::default();
-    print!("{}", out.report.render(&m));
+
+    let mut ok = true;
+    if let (Some(case), Some(st)) = (&case, &resp.stages) {
+        ok &= check("Q codes", &st.q.codes.data, &case.expect_q_codes.data);
+        ok &= check("K codes", &st.k.codes.data, &case.expect_k_codes.data);
+        ok &= check("V codes", &st.v.codes.data, &case.expect_v_codes.data);
+        if shift {
+            ok &= check("attn head0", &st.attn_head0.codes.data, &case.expect_attn_head0.data);
+        }
+        println!("integer stages: {}", if ok { "BIT-EXACT vs JAX" } else { "MISMATCH" });
+    }
+    if let (Some(case), Some(vals)) = (&case, &resp.out_values) {
+        anyhow::ensure!(
+            vals.len() == case.expect_out.len(),
+            "backend produced {} fp values, the JAX reference recorded {}",
+            vals.len(),
+            case.expect_out.len()
+        );
+        let max_diff = vals
+            .iter()
+            .zip(&case.expect_out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("fp output vs JAX reference: max |Δ| = {max_diff:.3e}");
+        ok &= max_diff < 1e-3;
+    }
+    if let Some(report) = &resp.report {
+        let m = EnergyModel::default();
+        print!("{}", report.render(&m));
+    }
     if !ok {
-        anyhow::bail!("simulation does not match the exported JAX reference");
+        anyhow::bail!("backend output does not match the exported JAX reference");
     }
     Ok(())
 }

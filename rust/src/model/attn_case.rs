@@ -8,11 +8,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::quant::fold::FoldedLinear;
 use crate::quant::linear::IntMat;
-use crate::sim::attention::{AttentionSim, AttentionSteps};
-use crate::sim::layernorm::LayerNormSim;
-use crate::sim::linear::LinearArraySim;
+use crate::quant::qtensor::QTensor;
+use crate::sim::attention::AttentionSim;
 use crate::util::json::Json;
 use crate::util::tensorio::Tensor;
 
@@ -109,45 +107,25 @@ impl AttnCase {
         })
     }
 
+    /// The typed attention-module parameters of this case.
+    pub fn to_module(&self, shift: bool) -> Result<crate::backend::AttnModule> {
+        crate::backend::AttnModule::from_case(self, shift)
+    }
+
     /// Build the systolic simulator for this case.
-    pub fn build_sim(&self, shift: bool) -> AttentionSim {
-        let fold = |l: &CaseLinear| FoldedLinear {
-            codes: l.codes.clone(),
-            bias_folded: l.bias_folded.clone(),
-            w_scale: l.w_scale.clone(),
-            out_scale: l.out_scale.clone(),
-        };
-        AttentionSim {
-            wq: LinearArraySim::new("Q linear", fold(&self.wq), self.bits),
-            wk: LinearArraySim::new("K linear", fold(&self.wk), self.bits),
-            wv: LinearArraySim::new("V linear", fold(&self.wv), self.bits),
-            lnq: LayerNormSim::new(
-                "Q LayerNorm",
-                self.lnq_g.clone(),
-                self.lnq_b.clone(),
-                self.s_q,
+    pub fn build_sim(&self, shift: bool) -> Result<AttentionSim> {
+        Ok(self.to_module(shift)?.to_sim())
+    }
+
+    /// The input codes typed with the exported Δ̄_X spec.
+    pub fn input(&self) -> Result<QTensor> {
+        QTensor::new(
+            self.x_codes.clone(),
+            crate::quant::qtensor::QuantSpec::signed(
                 self.bits,
+                crate::quant::qtensor::Step::new(self.sx)?,
             ),
-            lnk: LayerNormSim::new(
-                "K LayerNorm",
-                self.lnk_g.clone(),
-                self.lnk_b.clone(),
-                self.s_k,
-                self.bits,
-            ),
-            steps: AttentionSteps {
-                s_q: self.s_q,
-                s_k: self.s_k,
-                s_v: self.s_v,
-                s_attn: self.s_attn,
-                s_o: self.s_o,
-                score_scale: self.score_scale,
-            },
-            heads: self.heads,
-            bits: self.bits,
-            attn_bits: self.attn_bits,
-            shift,
-        }
+        )
     }
 }
 

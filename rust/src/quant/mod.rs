@@ -11,6 +11,7 @@ pub mod calibrate;
 pub mod fold;
 pub mod layernorm;
 pub mod linear;
+pub mod qtensor;
 pub mod shift_exp;
 pub mod softmax;
 
@@ -18,6 +19,7 @@ pub use calibrate::{calibrate_minmax, calibrate_mse, calibrate_percentile};
 pub use fold::{FoldedLinear, QuantParams};
 pub use layernorm::{qlayernorm_comparator, qlayernorm_reference, welford};
 pub use linear::{dequant_linear, int_linear, int_matmul};
+pub use qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 pub use shift_exp::{shift_exp, shift_exp_fixed, LOG2E};
 pub use softmax::{exact_softmax_row, qk_attention, shift_softmax_row};
 

@@ -1,0 +1,285 @@
+//! The typed quantized-operand model: [`Step`], [`QuantSpec`],
+//! [`QTensor`] and [`ScaleChain`].
+//!
+//! Before this module, module boundaries passed bare `f32` scales and
+//! `bool` flags (`eff_scale: f32`, `use_w_scale_only: bool`), so a folded
+//! scale could silently be applied twice, skipped, or divided the wrong
+//! way. The types here make those mistakes unrepresentable:
+//!
+//! * a [`QTensor`] is integer codes **plus** the quantizer that produced
+//!   them (step Δ, bit width, signedness) — consumers validate operands
+//!   instead of trusting call sites;
+//! * a [`ScaleChain`] is the explicit Eq. 2 algebra of folded steps
+//!   (`Π numerator / Π denominator`), with named constructors for the
+//!   paper's foldings (Δ_A·Δ_B/Δ_out requantization, Δ_Q·Δ_K/√d scores).
+//!
+//! The float arithmetic in [`ScaleChain::eff`] multiplies numerator terms
+//! in insertion order and divides once, which keeps the effective scale
+//! bit-identical to the hand-folded expressions the JAX export used.
+
+use anyhow::{ensure, Result};
+
+use super::linear::IntMat;
+use super::{int_range, round_half_even, uint_range};
+
+/// A positive, finite quantization step Δ.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step(f32);
+
+impl Step {
+    /// Validated constructor; steps must be positive and finite.
+    pub fn new(v: f32) -> Result<Step> {
+        ensure!(v.is_finite() && v > 0.0, "quantization step must be positive and finite, got {v}");
+        Ok(Step(v))
+    }
+
+    /// The raw Δ value.
+    pub fn get(self) -> f32 {
+        self.0
+    }
+}
+
+/// One quantizer: step + bit width + signedness. Pairs of
+/// ([`Step`], bits, signed) travel together so range checks and
+/// dequantization can never use mismatched parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    pub step: Step,
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl QuantSpec {
+    /// Signed `bits`-wide quantizer (activations, weights, outputs).
+    pub fn signed(bits: u32, step: Step) -> QuantSpec {
+        QuantSpec { step, bits, signed: true }
+    }
+
+    /// Unsigned `bits`-wide quantizer (attention probabilities).
+    pub fn unsigned(bits: u32, step: Step) -> QuantSpec {
+        QuantSpec { step, bits, signed: false }
+    }
+
+    /// Width of a *signed* container that holds this spec's worst-case
+    /// code magnitude: `bits` for signed codes (|q| ≤ 2^(b-1)), `bits+1`
+    /// for unsigned codes (q ≤ 2^b - 1). This is what overflow analyses
+    /// (the narrow-accumulator bound in [`crate::sim::accumulate`]) must
+    /// use, not the raw `bits`.
+    pub fn magnitude_bits(&self) -> u32 {
+        if self.signed {
+            self.bits
+        } else {
+            self.bits + 1
+        }
+    }
+
+    /// Code range `[qmin, qmax]` of this quantizer.
+    pub fn range(&self) -> (i32, i32) {
+        if self.signed {
+            int_range(self.bits)
+        } else {
+            uint_range(self.bits)
+        }
+    }
+
+    /// `clip(round_half_even(x / Δ))` — quantize one value.
+    pub fn quantize(&self, x: f32) -> i32 {
+        let (qmin, qmax) = self.range();
+        (round_half_even(x / self.step.get()) as i32).clamp(qmin, qmax)
+    }
+}
+
+/// Integer codes plus the [`QuantSpec`] that produced them — the typed
+/// operand every backend and simulator entry point consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub codes: IntMat,
+    pub spec: QuantSpec,
+}
+
+impl QTensor {
+    /// Wrap codes, validating every code lies in the spec's range.
+    pub fn new(codes: IntMat, spec: QuantSpec) -> Result<QTensor> {
+        let (qmin, qmax) = spec.range();
+        for (i, &c) in codes.data.iter().enumerate() {
+            ensure!(
+                (qmin..=qmax).contains(&c),
+                "code {c} at element {i} outside [{qmin}, {qmax}] for {}-bit {} quantizer",
+                spec.bits,
+                if spec.signed { "signed" } else { "unsigned" },
+            );
+        }
+        Ok(QTensor { codes, spec })
+    }
+
+    /// Quantize an fp row-major matrix into a `QTensor`.
+    pub fn quantize_f32(x: &[f32], rows: usize, cols: usize, spec: QuantSpec) -> Result<QTensor> {
+        ensure!(x.len() == rows * cols, "shape {}×{} does not hold {} values", rows, cols, x.len());
+        let codes: Vec<i32> = x.iter().map(|&v| spec.quantize(v)).collect();
+        Ok(QTensor { codes: IntMat::new(rows, cols, codes), spec })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.codes.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.codes.cols
+    }
+
+    /// `codes · Δ` — back to float.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let step = self.spec.step.get();
+        self.codes.data.iter().map(|&c| c as f32 * step).collect()
+    }
+
+    /// Column slice `[start, start+width)` with the same spec (head split).
+    pub fn slice_cols(&self, start: usize, width: usize) -> QTensor {
+        let m = &self.codes;
+        let mut data = Vec::with_capacity(m.rows * width);
+        for r in 0..m.rows {
+            data.extend_from_slice(&m.row(r)[start..start + width]);
+        }
+        QTensor { codes: IntMat::new(m.rows, width, data), spec: self.spec }
+    }
+}
+
+/// The explicit Eq. 2 scale algebra: an effective scale expressed as
+/// `Π numerator terms / Π denominator terms`, each term a named [`Step`]
+/// or a structural constant (√d, an imported pre-folded factor).
+///
+/// Backends and simulator blocks take a `ScaleChain` (or compute one from
+/// the operands' [`QuantSpec`]s) instead of a bare `f32`, so *which*
+/// steps fold into a boundary is visible — and auditable — at the type
+/// level.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScaleChain {
+    num: Vec<f32>,
+    den: Vec<f32>,
+}
+
+impl ScaleChain {
+    /// The empty chain (effective scale 1.0).
+    pub fn new() -> ScaleChain {
+        ScaleChain::default()
+    }
+
+    /// A chain holding one already-folded factor (e.g. a scale exported
+    /// by the Python toolchain that must be consumed bit-identically).
+    pub fn folded(value: f32) -> ScaleChain {
+        ScaleChain { num: vec![value], den: Vec::new() }
+    }
+
+    /// Multiply by a step.
+    pub fn times(mut self, s: Step) -> ScaleChain {
+        self.num.push(s.get());
+        self
+    }
+
+    /// Multiply by a structural constant.
+    pub fn times_const(mut self, c: f32) -> ScaleChain {
+        self.num.push(c);
+        self
+    }
+
+    /// Divide by a step.
+    pub fn over(mut self, s: Step) -> ScaleChain {
+        self.den.push(s.get());
+        self
+    }
+
+    /// Divide by a structural constant.
+    pub fn over_const(mut self, c: f32) -> ScaleChain {
+        self.den.push(c);
+        self
+    }
+
+    /// `Δ_A·Δ_B/Δ_out` — the §IV-B requantizer folding for an integer
+    /// matmul whose output is re-quantized to step `out`.
+    pub fn requant(a: Step, b: Step, out: Step) -> ScaleChain {
+        ScaleChain::new().times(a).times(b).over(out)
+    }
+
+    /// `Δ_Q·Δ_K/√d` — the Eq. 3 attention-score scale.
+    pub fn scores(q: Step, k: Step, head_dim: usize) -> ScaleChain {
+        ScaleChain::new().times(q).times(k).over_const((head_dim as f32).sqrt())
+    }
+
+    /// The effective scale: numerator terms multiplied in insertion
+    /// order, divided by the denominator product.
+    pub fn eff(&self) -> f32 {
+        let n: f32 = self.num.iter().product();
+        let d: f32 = self.den.iter().product();
+        n / d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_rejects_nonpositive() {
+        assert!(Step::new(0.1).is_ok());
+        assert!(Step::new(0.0).is_err());
+        assert!(Step::new(-1.0).is_err());
+        assert!(Step::new(f32::NAN).is_err());
+        assert!(Step::new(f32::INFINITY).is_err());
+    }
+
+    #[test]
+    fn spec_ranges_and_quantize() {
+        let s = QuantSpec::signed(3, Step::new(0.5).unwrap());
+        assert_eq!(s.range(), (-4, 3));
+        assert_eq!(s.quantize(100.0), 3);
+        assert_eq!(s.quantize(-100.0), -4);
+        let u = QuantSpec::unsigned(3, Step::new(0.125).unwrap());
+        assert_eq!(u.range(), (0, 7));
+        assert_eq!(u.quantize(0.25), 2);
+        assert_eq!(u.quantize(-1.0), 0);
+    }
+
+    #[test]
+    fn qtensor_validates_codes() {
+        let spec = QuantSpec::signed(3, Step::new(0.1).unwrap());
+        assert!(QTensor::new(IntMat::new(1, 3, vec![-4, 0, 3]), spec).is_ok());
+        assert!(QTensor::new(IntMat::new(1, 3, vec![-5, 0, 3]), spec).is_err());
+        assert!(QTensor::new(IntMat::new(1, 3, vec![0, 0, 4]), spec).is_err());
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let spec = QuantSpec::signed(4, Step::new(0.25).unwrap());
+        let x = vec![0.3, -0.6, 1.1, 0.0];
+        let q = QTensor::quantize_f32(&x, 2, 2, spec).unwrap();
+        let back = q.dequantize();
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.125 + 1e-6, "{a} vs {b}");
+        }
+        assert!(QTensor::quantize_f32(&x, 3, 2, spec).is_err());
+    }
+
+    #[test]
+    fn slice_cols_keeps_spec() {
+        let spec = QuantSpec::signed(3, Step::new(0.1).unwrap());
+        let q = QTensor::new(IntMat::new(2, 4, vec![0, 1, 2, 3, -1, -2, -3, -4]), spec).unwrap();
+        let s = q.slice_cols(1, 2);
+        assert_eq!(s.codes.data, vec![1, 2, -2, -3]);
+        assert_eq!(s.spec, spec);
+    }
+
+    #[test]
+    fn chain_matches_hand_folding() {
+        let (a, b, out) = (Step::new(1.0 / 7.0).unwrap(), Step::new(0.1).unwrap(), Step::new(0.1).unwrap());
+        // must be bit-identical to the legacy hand-folded expression
+        let legacy = a.get() * b.get() / out.get();
+        assert_eq!(ScaleChain::requant(a, b, out).eff(), legacy);
+
+        let (q, k) = (Step::new(0.5).unwrap(), Step::new(0.5).unwrap());
+        let legacy_scores = q.get() * k.get() / (64f32).sqrt();
+        assert_eq!(ScaleChain::scores(q, k, 64).eff(), legacy_scores);
+
+        assert_eq!(ScaleChain::folded(0.016).eff(), 0.016);
+        assert_eq!(ScaleChain::new().eff(), 1.0);
+    }
+}

@@ -13,6 +13,10 @@ use anyhow::{anyhow, Context, Result};
 use crate::util::tensorio::{Data, Tensor};
 
 use super::manifest::{ExecutableSpec, Manifest};
+// Default builds compile against the in-tree PJRT stub facade; the
+// `xla-rs` feature resolves `xla::` to the real crate instead.
+#[cfg(not(feature = "xla-rs"))]
+use super::xla_stub as xla;
 
 /// A compiled model variant plus its manifest spec.
 pub struct Executable {
@@ -117,12 +121,15 @@ impl Engine {
 
 fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    // Every dtype `literal_to_tensor` can produce is accepted here, so
+    // quantized (u8) outputs can be fed straight back in as inputs.
     let lit = match &t.data {
         Data::F32(v) => xla::Literal::vec1(v),
         Data::I32(v) => xla::Literal::vec1(v),
         Data::I64(v) => xla::Literal::vec1(v),
+        Data::U8(v) => xla::Literal::vec1(v),
         other => anyhow::bail!(
-            "unsupported input dtype {:?} — the AOT contract uses f32/i32",
+            "unsupported input dtype {:?} — the AOT contract uses f32/i32/i64/u8",
             Tensor { shape: t.shape.clone(), data: other.clone() }.dtype()
         ),
     };
@@ -146,4 +153,49 @@ fn literal_to_tensor(lit: &xla::Literal, shape_hint: Option<Vec<usize>>) -> Resu
         other => anyhow::bail!("unsupported output element type {other:?}"),
     };
     Ok(Tensor { shape, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(t: &Tensor) -> Tensor {
+        let lit = tensor_to_literal(t).expect("tensor -> literal");
+        literal_to_tensor(&lit, Some(t.shape.clone())).expect("literal -> tensor")
+    }
+
+    #[test]
+    fn u8_roundtrips_through_literals() {
+        // The dtype-asymmetry regression: `literal_to_tensor` produces U8
+        // (quantized outputs), so `tensor_to_literal` must accept it —
+        // otherwise quantized outputs can never be fed back as inputs.
+        let t = Tensor { shape: vec![2, 3], data: Data::U8(vec![0, 1, 7, 128, 200, 255]) };
+        assert_eq!(roundtrip(&t), t);
+    }
+
+    #[test]
+    fn f32_i32_i64_roundtrip_through_literals() {
+        let f = Tensor::f32(vec![2, 2], vec![1.0, -2.5, 0.0, 3.25]);
+        assert_eq!(roundtrip(&f), f);
+        let i = Tensor::i32(vec![4], vec![-4, 0, 3, i32::MAX]);
+        assert_eq!(roundtrip(&i), i);
+        let l = Tensor { shape: vec![2], data: Data::I64(vec![i64::MIN, i64::MAX]) };
+        assert_eq!(roundtrip(&l), l);
+    }
+
+    #[test]
+    fn i8_inputs_still_rejected_with_clear_message() {
+        let t = Tensor { shape: vec![2], data: Data::I8(vec![-1, 1]) };
+        let err = tensor_to_literal(&t).unwrap_err();
+        assert!(format!("{err}").contains("unsupported input dtype"), "{err}");
+    }
+
+    #[test]
+    fn shape_hint_must_match_element_count() {
+        let t = Tensor::f32(vec![4], vec![0.0; 4]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, Some(vec![3])).is_err());
+        let flat = literal_to_tensor(&lit, None).unwrap();
+        assert_eq!(flat.shape, vec![4]);
+    }
 }

@@ -6,8 +6,14 @@
 //! (jax ≥ 0.5 emits 64-bit instruction ids that 0.5.1's proto path
 //! rejects — see /opt/xla-example/README.md). Python never runs here.
 
+//! The default build links the in-tree [`xla_stub`] facade (literal
+//! marshalling works, compilation/execution reports a clear error);
+//! enable the `xla-rs` feature to link the real bindings.
+
 pub mod engine;
 pub mod manifest;
+#[cfg(not(feature = "xla-rs"))]
+pub(crate) mod xla_stub;
 
 pub use engine::{Engine, Executable};
 pub use manifest::{ExecutableSpec, Manifest, TensorSpec};

@@ -1,0 +1,223 @@
+//! In-tree stand-in for the `xla` crate's API surface.
+//!
+//! The image's offline crate set cannot ship the real PJRT bindings, so
+//! the default build compiles the engine against this facade instead
+//! (`--features xla-rs` swaps the real crate back in — see Cargo.toml).
+//!
+//! Literal construction/marshalling is **fully functional** in memory —
+//! the engine's dtype round-trip unit tests run against it — while
+//! anything that would need a real PJRT client (client creation, HLO
+//! parsing, compilation, execution) returns a clear runtime error.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what} is unavailable: ivit was built without the `xla-rs` feature \
+         (in-tree PJRT stub; see rust/Cargo.toml to enable the real bindings)"
+    )))
+}
+
+/// Element types the engine marshals (plus a few for realistic matches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+/// Typed literal payload (public only for the [`NativeType`] glue).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+/// Conversion glue between native element types and [`LitData`].
+pub trait NativeType: Copy {
+    fn wrap(v: &[Self]) -> LitData;
+    fn unwrap(d: &LitData) -> Option<Vec<Self>>;
+    fn ty() -> ElementType;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident, $ety:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: &[Self]) -> LitData {
+                LitData::$variant(v.to_vec())
+            }
+            fn unwrap(d: &LitData) -> Option<Vec<Self>> {
+                match d {
+                    LitData::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            fn ty() -> ElementType {
+                ElementType::$ety
+            }
+        }
+    };
+}
+
+native!(f32, F32, F32);
+native!(i32, I32, S32);
+native!(i64, I64, S64);
+native!(u8, U8, U8);
+
+/// An in-memory device literal: shape + typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LitData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} does not hold {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match &self.data {
+            LitData::F32(_) => ElementType::F32,
+            LitData::I32(_) => ElementType::S32,
+            LitData::I64(_) => ElementType::S64,
+            LitData::U8(_) => ElementType::U8,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::I32(v) => v.len(),
+            LitData::I64(v) => v.len(),
+            LitData::U8(v) => v.len(),
+        }
+    }
+
+    /// Copy the payload out as a native vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| XlaError(format!("literal is {:?}, not {:?}", self.ty(), T::ty())))
+    }
+
+    /// Unpack a tuple literal (the stub never produces tuples).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("tuple literal unpacking")
+    }
+}
+
+/// Placeholder for a device buffer (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+/// Placeholder for a compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executable execution")
+    }
+}
+
+/// Placeholder PJRT client; creation reports the missing feature.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT client creation")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("HLO compilation")
+    }
+}
+
+/// Placeholder HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// Placeholder computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_every_dtype() {
+        let f = Literal::vec1(&[1.0f32, -2.0]);
+        assert_eq!(f.ty().unwrap(), ElementType::F32);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0]);
+        assert!(f.to_vec::<i32>().is_err());
+
+        let u = Literal::vec1(&[7u8, 255]);
+        assert_eq!(u.ty().unwrap(), ElementType::U8);
+        assert_eq!(u.to_vec::<u8>().unwrap(), vec![7, 255]);
+
+        let r = u.reshape(&[2, 1]).unwrap();
+        assert_eq!(r.element_count(), 2);
+        assert!(u.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_missing_feature() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("xla-rs"), "{err}");
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Shared integer-accumulation core of the systolic arrays.
+//!
+//! Every MAC grid in the simulator accumulates low-bit products the same
+//! way; the narrow-i32 / wide-i64 split used to be copy-pasted into
+//! [`super::linear`], [`super::matmul`] and [`super::softmax_matmul`].
+//! It lives here once, with the overflow bound pinned by tests:
+//!
+//! With *signed* operand codes of ≤ [`NARROW_MAX_BITS`] bits, one
+//! product is at most `2^(b-1) · 2^(b-1) = 2^14` in magnitude (b = 8),
+//! so a reduction over `K < 2^17` terms is bounded by `2^31` and cannot
+//! overflow an i32 accumulator. The narrow loop auto-vectorizes where
+//! the i64 widening does not (§Perf log), so it is the hot path for
+//! every paper-shaped workload; anything wider or longer falls back to
+//! exact i64. Callers with **unsigned** operands (attention probability
+//! codes reach `2^b - 1`) must pass
+//! [`crate::quant::QuantSpec::magnitude_bits`], which charges them one
+//! extra bit so the same bound stays exact.
+
+use crate::quant::linear::IntMat;
+
+/// Widest operand code for which the narrow i32 accumulator is exact.
+pub const NARROW_MAX_BITS: u32 = 8;
+
+/// Reduction lengths must stay strictly below this for the narrow path.
+pub const NARROW_MAX_K: usize = 1 << 17;
+
+/// True when a `bits`-wide reduction of length `k` fits the narrow
+/// i32 accumulator exactly.
+pub fn narrow_ok(bits: u32, k: usize) -> bool {
+    bits <= NARROW_MAX_BITS && k < NARROW_MAX_K
+}
+
+/// `acc[i·n + j] = Σ_p a(i,p) · b_t(j,p)` — both operands row-major with
+/// the reduction axis contiguous (`b_t` holds one row per *output*
+/// column, i.e. B transposed). This is the weight-stationary layout of
+/// the linear arrays and the QKᵀ grid.
+pub fn matmul_bt(a: &IntMat, b_t: &IntMat, bits: u32) -> Vec<i64> {
+    debug_assert_eq!(a.cols, b_t.cols, "reduction axis mismatch");
+    let (m, k, n) = (a.rows, a.cols, b_t.rows);
+    let mut acc = vec![0i64; m * n];
+    if narrow_ok(bits, k) {
+        for i in 0..m {
+            let ar = a.row(i);
+            for j in 0..n {
+                let br = b_t.row(j);
+                let mut s = 0i32;
+                for p in 0..k {
+                    s += ar[p] * br[p];
+                }
+                acc[i * n + j] = s as i64;
+            }
+        }
+    } else {
+        for i in 0..m {
+            let ar = a.row(i);
+            for j in 0..n {
+                let br = b_t.row(j);
+                let mut s = 0i64;
+                for p in 0..k {
+                    s += ar[p] as i64 * br[p] as i64;
+                }
+                acc[i * n + j] = s;
+            }
+        }
+    }
+    acc
+}
+
+/// `acc[i·n + j] = Σ_p a(i,p) · b(p,j)` — B given row-major K×N and
+/// streamed row-wise (the output-stationary attn·V layout).
+pub fn matmul_kn(a: &IntMat, b: &IntMat, bits: u32) -> Vec<i64> {
+    debug_assert_eq!(a.cols, b.rows, "reduction axis mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut acc = vec![0i64; m * n];
+    if narrow_ok(bits, k) {
+        let mut acc32 = vec![0i32; m * n];
+        for i in 0..m {
+            let ar = a.row(i);
+            let out = &mut acc32[i * n..(i + 1) * n];
+            for p in 0..k {
+                let av = ar[p];
+                let br = b.row(p);
+                for j in 0..n {
+                    out[j] += av * br[j];
+                }
+            }
+        }
+        for (w, v) in acc.iter_mut().zip(&acc32) {
+            *w = *v as i64;
+        }
+    } else {
+        for i in 0..m {
+            let ar = a.row(i);
+            for p in 0..k {
+                let av = ar[p] as i64;
+                let br = b.row(p);
+                for j in 0..n {
+                    acc[i * n + j] += av * br[j] as i64;
+                }
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int_range;
+    use crate::util::proptest::prop_check;
+    use crate::util::XorShift;
+
+    fn reference(a: &IntMat, b_t: &IntMat) -> Vec<i64> {
+        let (m, k, n) = (a.rows, a.cols, b_t.rows);
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    out[i * n + j] += a.at(i, p) as i64 * b_t.at(j, p) as i64;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn narrow_bound_is_exactly_bits8_k_2pow17() {
+        assert!(narrow_ok(8, NARROW_MAX_K - 1));
+        assert!(!narrow_ok(8, NARROW_MAX_K));
+        assert!(!narrow_ok(9, 1));
+        assert!(narrow_ok(2, 1));
+    }
+
+    #[test]
+    fn narrow_i32_is_exact_at_the_worst_case_edge() {
+        // The pinned bound: 8-bit codes, K = 2^17 - 1, every product at the
+        // maximum magnitude 2^14. The sum is 16384·131071 = 2_147_467_264,
+        // which fits i32 (max 2_147_483_647) with no wraparound.
+        let k = NARROW_MAX_K - 1;
+        let a = IntMat::new(1, k, vec![-128; k]);
+        let b = IntMat::new(1, k, vec![-128; k]);
+        assert!(narrow_ok(8, k));
+        let acc = matmul_bt(&a, &b, 8);
+        assert_eq!(acc[0], 16384i64 * k as i64);
+        assert!(acc[0] <= i32::MAX as i64);
+    }
+
+    #[test]
+    fn wide_path_handles_k_beyond_the_bound() {
+        // K = 2^17 forces the i64 path; the all-max sum exceeds i32::MAX.
+        let k = NARROW_MAX_K;
+        let a = IntMat::new(1, k, vec![-128; k]);
+        let b = IntMat::new(1, k, vec![-128; k]);
+        assert!(!narrow_ok(8, k));
+        let acc = matmul_bt(&a, &b, 8);
+        assert_eq!(acc[0], 16384i64 * k as i64);
+        assert!(acc[0] > i32::MAX as i64);
+    }
+
+    #[test]
+    fn both_layouts_match_reference() {
+        prop_check("accumulate-layouts", 61, 60, |rng| {
+            let bits = rng.int_in(2, 8) as u32;
+            let (qmin, qmax) = int_range(bits);
+            let m = rng.int_in(1, 8) as usize;
+            let k = rng.int_in(1, 24) as usize;
+            let n = rng.int_in(1, 8) as usize;
+            let a = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
+            let b_t = IntMat::new(n, k, rng.codes(n * k, qmin, qmax));
+            let want = reference(&a, &b_t);
+            // bt layout, narrow and (forced) wide
+            if matmul_bt(&a, &b_t, bits) != want {
+                return Err("matmul_bt narrow mismatch".into());
+            }
+            if matmul_bt(&a, &b_t, 16) != want {
+                return Err("matmul_bt wide mismatch".into());
+            }
+            // kn layout: transpose b_t into K×N
+            let mut bk = vec![0i32; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    bk[p * n + j] = b_t.at(j, p);
+                }
+            }
+            let b_kn = IntMat::new(k, n, bk);
+            if matmul_kn(&a, &b_kn, bits) != want {
+                return Err("matmul_kn narrow mismatch".into());
+            }
+            if matmul_kn(&a, &b_kn, 16) != want {
+                return Err("matmul_kn wide mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -3,31 +3,37 @@
 //! measures; [`AttentionSim::run`] produces both the integer outputs
 //! (bit-identical to the [`crate::quant`] reference and to the exported
 //! JAX vectors) and the per-block [`BlockStats`] rows behind Table I.
+//!
+//! Every stage boundary is typed: activations travel as [`QTensor`]s and
+//! scale foldings as [`ScaleChain`]s, so the Δ̄_X / Δ_W / Δ_attn / Δ_V /
+//! Δ_O bookkeeping is validated at each hop instead of trusted.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::quant::fold::FoldedLinear;
 use crate::quant::linear::IntMat;
+use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 
 use super::delay::DelayLineSim;
 use super::energy::EnergyModel;
 use super::layernorm::LayerNormSim;
-use super::linear::{Epilogue, LinearArraySim};
+use super::linear::{Epilogue, LinearArraySim, PostScale};
 use super::matmul::MatmulArraySim;
 use super::reversing::ReversingSim;
 use super::softmax_matmul::SoftmaxMatmulSim;
 use super::stats::BlockStats;
 
-/// Scalar quantizer steps of the attention module (from the checkpoint).
+/// Typed quantizer steps of the attention module (from the checkpoint).
 #[derive(Debug, Clone)]
 pub struct AttentionSteps {
-    pub s_q: f32,
-    pub s_k: f32,
-    pub s_v: f32,
-    pub s_attn: f32,
-    pub s_o: f32,
-    /// Δ_Q·Δ_K/√d — the Eq. 3 softmax input scale.
-    pub score_scale: f32,
+    pub s_q: Step,
+    pub s_k: Step,
+    pub s_v: Step,
+    pub s_attn: Step,
+    pub s_o: Step,
+    /// The Eq. 3 softmax input scale Δ_Q·Δ_K/√d — kept as an explicit
+    /// [`ScaleChain`] (checkpoints import it pre-folded for bit-exact
+    /// replay; synthetic modules build it from the steps).
+    pub score: ScaleChain,
 }
 
 /// The simulated self-attention module (one encoder block's attention).
@@ -49,14 +55,14 @@ pub struct AttentionSim {
 /// Everything `run` produces.
 #[derive(Debug)]
 pub struct AttentionOutput {
-    /// Final attn·V codes, (N × D) merged over heads.
-    pub pv_codes: IntMat,
+    /// Final attn·V codes, (N × D) merged over heads, step Δ_O.
+    pub pv_codes: QTensor,
     /// Per-head attention probability codes.
-    pub attn_codes: Vec<IntMat>,
+    pub attn_codes: Vec<QTensor>,
     /// Q/K LayerNorm output codes (for cross-language checks).
-    pub q_codes: IntMat,
-    pub k_codes: IntMat,
-    pub v_codes: IntMat,
+    pub q_codes: QTensor,
+    pub k_codes: QTensor,
+    pub v_codes: QTensor,
     pub report: AttentionReport,
 }
 
@@ -125,22 +131,25 @@ impl AttentionReport {
 }
 
 impl AttentionSim {
-    /// Run the pipeline on input codes `x` (N×D).
-    pub fn run(&self, x: &IntMat) -> Result<AttentionOutput> {
+    /// Run the pipeline on typed input codes `x` (N×D).
+    pub fn run(&self, x: &QTensor) -> Result<AttentionOutput> {
+        ensure!(
+            x.spec.signed && x.spec.bits == self.bits,
+            "input codes must be signed {}-bit, got {:?}",
+            self.bits,
+            x.spec
+        );
         let mut report = AttentionReport::default();
-        let n = x.rows;
+        let n = x.rows();
         let d = self.wq.folded.codes.rows; // output dim of the projections
         let dh = d / self.heads;
 
         // --- Q/K linears: post-scale diag(Δ_W) only (Δ̄_X cancels in LN).
-        let q_pre = self.wq.run(x, Epilogue::Scale, true)?;
-        let k_pre = self.wk.run(x, Epilogue::Scale, true)?;
+        let q_pre = self.wq.run(x, &Epilogue::Scale(PostScale::WeightOnly))?;
+        let k_pre = self.wk.run(x, &Epilogue::Scale(PostScale::WeightOnly))?;
         // --- V linear: quantizer epilogue (scales absorbed, §IV-B).
-        let v_out = self.wv.run(
-            x,
-            Epilogue::Quantize { out_bits: self.bits, step_out: self.steps.s_v },
-            false,
-        )?;
+        let v_spec = QuantSpec::signed(self.bits, self.steps.s_v);
+        let v_out = self.wv.run(x, &Epilogue::Quantize(v_spec))?;
         report.blocks.push(q_pre.stats.clone());
         report.blocks.push(k_pre.stats.clone());
         report.blocks.push(v_out.stats.clone());
@@ -157,41 +166,38 @@ impl AttentionSim {
         report.blocks.push(DelayLineSim::new("K delay", self.bits).run(n, dh, hold));
 
         // --- reversing module on the V stream.
-        let v_mat = IntMat::new(n, d, v_out.codes.clone());
-        let (v_rev, rev_stats) = ReversingSim::new("reversing").run(&v_mat);
+        let v_codes = v_out.codes.expect("quantize epilogue yields codes");
+        let (v_rev, rev_stats) = ReversingSim::new("reversing").run(&v_codes.codes);
         report.blocks.push(rev_stats);
         // reverse back: the attn·V array consumes the stream in scan order;
         // numerically we keep the canonical layout.
-        let (v_canon, _) = ReversingSim::new("reversing-int").run(&v_rev);
-        debug_assert_eq!(v_canon.data, v_mat.data);
+        let (v_canon_mat, _) = ReversingSim::new("reversing-int").run(&v_rev);
+        debug_assert_eq!(v_canon_mat.data, v_codes.codes.data);
+        let v_canon = QTensor { codes: v_canon_mat, spec: v_spec };
 
         // --- per-head QKᵀ+softmax and attn·V.
         let mut qk_agg = BlockStats::new("QK^T matmul+softmax", "N x N", 0);
         let mut pv_agg = BlockStats::new("PV matmul", "N x O", 0);
         let mut attn_codes = Vec::with_capacity(self.heads);
         let mut pv = vec![0i32; n * d];
-        let eff_pv = self.steps.s_attn * self.steps.s_v / self.steps.s_o;
+        let attn_spec = QuantSpec::unsigned(self.attn_bits, self.steps.s_attn);
+        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
         for h in 0..self.heads {
-            let qh = slice_cols(&lnq_out.codes, h * dh, dh);
-            let kh = slice_cols(&lnk_out.codes, h * dh, dh);
-            let vh = slice_cols(&v_canon, h * dh, dh);
+            let qh = lnq_out.codes.slice_cols(h * dh, dh);
+            let kh = lnk_out.codes.slice_cols(h * dh, dh);
+            let vh = v_canon.slice_cols(h * dh, dh);
             let qk = SoftmaxMatmulSim::new("QK^T matmul+softmax", self.bits).run(
                 &qh,
                 &kh,
-                self.steps.score_scale,
-                self.steps.s_attn,
-                self.attn_bits,
+                &self.steps.score,
+                attn_spec,
                 self.shift,
             )?;
-            let pv_h = MatmulArraySim::new("PV matmul", self.attn_bits).run(
-                &qk.codes,
-                &vh,
-                eff_pv,
-                self.bits,
-            )?;
+            let pv_h =
+                MatmulArraySim::new("PV matmul", self.attn_bits).run(&qk.codes, &vh, out_spec)?;
             for i in 0..n {
                 for j in 0..dh {
-                    pv[i * d + h * dh + j] = pv_h.codes.at(i, j);
+                    pv[i * d + h * dh + j] = pv_h.codes.codes.at(i, j);
                 }
             }
             qk_agg.absorb(&qk.stats);
@@ -202,11 +208,11 @@ impl AttentionSim {
         report.blocks.push(pv_agg);
 
         Ok(AttentionOutput {
-            pv_codes: IntMat::new(n, d, pv),
+            pv_codes: QTensor { codes: IntMat::new(n, d, pv), spec: out_spec },
             attn_codes,
             q_codes: lnq_out.codes,
             k_codes: lnk_out.codes,
-            v_codes: v_mat,
+            v_codes: v_canon,
             report,
         })
     }
@@ -215,57 +221,18 @@ impl AttentionSim {
     /// module for (tokens N, model dim I, head dim O) and list the Table I
     /// #PE / #MAC facts plus modelled power, streaming one token batch.
     pub fn paper_geometry(n: usize, d_in: usize, d_head: usize, bits: u32) -> AttentionReport {
-        let mut rng = crate::util::XorShift::new(1);
-        let mut mk = |name: &str| {
-            let w: Vec<f32> = rng.normal_vec(d_head * d_in).iter().map(|v| v * 0.1).collect();
-            let bias = vec![0.0f32; d_head];
-            let step_w = vec![0.05f32; d_head];
-            let f = FoldedLinear::fold(
-                &w,
-                d_head,
-                d_in,
-                &bias,
-                &crate::quant::fold::QuantParams { bits, step_x: 0.1, step_w },
-            )
-            .unwrap();
-            LinearArraySim::new(name, f, bits)
-        };
-        let sim = AttentionSim {
-            wq: mk("Q linear"),
-            wk: mk("K linear"),
-            wv: mk("V linear"),
-            lnq: LayerNormSim::new("Q LayerNorm", vec![1.0; d_head], vec![0.0; d_head], 0.4, bits),
-            lnk: LayerNormSim::new("K LayerNorm", vec![1.0; d_head], vec![0.0; d_head], 0.4, bits),
-            steps: AttentionSteps {
-                s_q: 0.4,
-                s_k: 0.4,
-                s_v: 0.1,
-                s_attn: 1.0 / ((1 << bits) - 1) as f32,
-                s_o: 0.1,
-                score_scale: 0.16 / (d_head as f32).sqrt(),
-            },
-            heads: 1,
-            bits,
-            attn_bits: bits,
-            shift: true,
-        };
-        let (qmin, qmax) = crate::quant::int_range(bits);
-        let x = IntMat::new(n, d_in, rng.codes(n * d_in, qmin, qmax));
+        let module =
+            crate::backend::AttnModule::paper_shape(d_in, d_head, bits).expect("paper module");
+        let sim = module.to_sim();
+        let x = module.random_input(n, 1).expect("paper input");
         sim.run(&x).expect("paper geometry run").report
     }
-}
-
-fn slice_cols(m: &IntMat, start: usize, width: usize) -> IntMat {
-    let mut data = Vec::with_capacity(m.rows * width);
-    for r in 0..m.rows {
-        data.extend_from_slice(&m.row(r)[start..start + width]);
-    }
-    IntMat::new(m.rows, width, data)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::fold::FoldedLinear;
     use crate::quant::layernorm::qlayernorm_reference;
     use crate::quant::softmax::qk_attention;
 
@@ -276,6 +243,7 @@ mod tests {
         let mut rng = crate::util::XorShift::new(121);
         let (n, d, heads, bits) = (12, 16, 2, 3);
         let dh = d / heads;
+        let step_x = 0.12f32;
         let mk = |rng: &mut crate::util::XorShift, _name: &str| {
             let w: Vec<f32> = rng.normal_vec(d * d).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * 0.5).collect();
@@ -285,7 +253,7 @@ mod tests {
                 d,
                 d,
                 &bias,
-                &crate::quant::fold::QuantParams { bits, step_x: 0.12, step_w },
+                &crate::quant::fold::QuantParams { bits, step_x, step_w },
             )
             .unwrap()
         };
@@ -294,47 +262,59 @@ mod tests {
         let fv = mk(&mut rng, "v");
         let g: Vec<f32> = (0..d).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
         let b: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * 0.2).collect();
+        let s = |v: f32| Step::new(v).unwrap();
         let steps = AttentionSteps {
-            s_q: 0.5,
-            s_k: 0.5,
-            s_v: 0.1,
-            s_attn: 1.0 / 7.0,
-            s_o: 0.1,
-            score_scale: 0.5 * 0.5 / (dh as f32).sqrt(),
+            s_q: s(0.5),
+            s_k: s(0.5),
+            s_v: s(0.1),
+            s_attn: s(1.0 / 7.0),
+            s_o: s(0.1),
+            score: ScaleChain::folded(0.5 * 0.5 / (dh as f32).sqrt()),
         };
         let sim = AttentionSim {
             wq: LinearArraySim::new("Q linear", fq.clone(), bits),
             wk: LinearArraySim::new("K linear", fk.clone(), bits),
             wv: LinearArraySim::new("V linear", fv.clone(), bits),
-            lnq: LayerNormSim::new("Q LN", g.clone(), b.clone(), steps.s_q, bits),
-            lnk: LayerNormSim::new("K LN", g.clone(), b.clone(), steps.s_k, bits),
+            lnq: LayerNormSim::new("Q LN", g.clone(), b.clone(), 0.5, bits),
+            lnk: LayerNormSim::new("K LN", g.clone(), b.clone(), 0.5, bits),
             steps: steps.clone(),
             heads,
             bits,
             attn_bits: 3,
             shift: true,
         };
-        let x = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+        let x = QTensor::new(
+            IntMat::new(n, d, rng.codes(n * d, -4, 3)),
+            QuantSpec::signed(bits, s(step_x)),
+        )
+        .unwrap();
         let out = sim.run(&x).unwrap();
 
         // reference composition via quant::
         let q_pre_ref: Vec<f32> = {
-            let acc = crate::quant::linear::int_matmul(&x, &fq.codes).unwrap();
+            let acc = crate::quant::linear::int_matmul(&x.codes, &fq.codes).unwrap();
             (0..n * d)
                 .map(|i| (acc.data[i] as f32 + fq.bias_folded[i % d]) * fq.w_scale[i % d])
                 .collect()
         };
         for r in 0..n {
             let want =
-                qlayernorm_reference(&q_pre_ref[r * d..(r + 1) * d], &g, &b, steps.s_q, bits, 1e-6);
-            assert_eq!(out.q_codes.row(r), &want[..], "q row {r}");
+                qlayernorm_reference(&q_pre_ref[r * d..(r + 1) * d], &g, &b, 0.5, bits, 1e-6);
+            assert_eq!(out.q_codes.codes.row(r), &want[..], "q row {r}");
         }
         // head-0 attention codes
-        let qh = slice_cols(&out.q_codes, 0, dh);
-        let kh = slice_cols(&out.k_codes, 0, dh);
-        let (want_attn, _) =
-            qk_attention(&qh, &kh, steps.score_scale, steps.s_attn, 3, true).unwrap();
-        assert_eq!(out.attn_codes[0].data, want_attn.data);
+        let qh = out.q_codes.slice_cols(0, dh);
+        let kh = out.k_codes.slice_cols(0, dh);
+        let (want_attn, _) = qk_attention(
+            &qh.codes,
+            &kh.codes,
+            steps.score.eff(),
+            steps.s_attn.get(),
+            3,
+            true,
+        )
+        .unwrap();
+        assert_eq!(out.attn_codes[0].codes.data, want_attn.data);
     }
 
     #[test]

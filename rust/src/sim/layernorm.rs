@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::quant::layernorm::qlayernorm_comparator;
 use crate::quant::linear::IntMat;
+use crate::quant::qtensor::{QTensor, QuantSpec, Step};
 
 use super::stats::BlockStats;
 
@@ -25,7 +26,8 @@ pub struct LayerNormSim {
 
 #[derive(Debug)]
 pub struct LayerNormOutput {
-    pub codes: IntMat,
+    /// Output codes, typed with this LayerNorm's own quantizer spec.
+    pub codes: QTensor,
     pub stats: BlockStats,
 }
 
@@ -70,7 +72,13 @@ impl LayerNormSim {
         stats.idle_pe_cycles =
             (stats.pe_count * stats.cycles).saturating_sub((rows * d * 2) as u64);
 
-        Ok(LayerNormOutput { codes: IntMat::new(rows, d, codes), stats })
+        let spec = self.out_spec()?;
+        Ok(LayerNormOutput { codes: QTensor { codes: IntMat::new(rows, d, codes), spec }, stats })
+    }
+
+    /// The quantizer spec of this LayerNorm's output codes.
+    pub fn out_spec(&self) -> Result<QuantSpec> {
+        Ok(QuantSpec::signed(self.bits, Step::new(self.step)?))
     }
 }
 
@@ -92,7 +100,7 @@ mod tests {
             let out = sim.run(&x, rows).map_err(|e| e.to_string())?;
             for r in 0..rows {
                 let want = qlayernorm_reference(&x[r * d..(r + 1) * d], &g, &b, 0.4, 3, 1e-6);
-                assert_eq_i32(out.codes.row(r), &want)?;
+                assert_eq_i32(out.codes.codes.row(r), &want)?;
             }
             Ok(())
         });

@@ -9,24 +9,40 @@
 //!
 //! Functionally the array computes exactly [`crate::quant::int_linear`] —
 //! each output accumulates in ascending-k order — which the tests assert.
+//!
+//! The entry point is typed: the input is a [`QTensor`] whose spec is
+//! validated against the folded constants (the array refuses operands
+//! quantized with a different Δ̄_X than the one folded into its scales),
+//! and the epilogue choice is an enum — no bare scale floats or flag
+//! booleans cross this boundary.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::quant::fold::FoldedLinear;
-use crate::quant::linear::IntMat;
-use crate::quant::{int_range, round_half_even};
+use crate::quant::qtensor::{QTensor, QuantSpec};
+use crate::quant::round_half_even;
 
+use super::accumulate;
 use super::stats::BlockStats;
 
+/// Which Eq. 2 post-scale the Scale epilogue applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PostScale {
+    /// `diag(Δ_W)` only — the Q/K path, where the scalar Δ̄_X cancels
+    /// into the following LayerNorm (Eq. 2 / §IV-A).
+    WeightOnly,
+    /// The full `Δ̄_X·diag(Δ_W)` post-scale.
+    Full,
+}
+
 /// What happens at the array boundary after the MACs (paper §IV-A/B).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Epilogue {
-    /// Post-scale by Δ̄_X·diag(Δ_W) (or diag(Δ_W) when Δ̄_X cancels into a
-    /// following LayerNorm): fp output.
-    Scale,
-    /// Absorb the scales into an output quantizer of the given signed
-    /// width: integer output codes (the V path).
-    Quantize { out_bits: u32, step_out: f32 },
+    /// Post-scale to fp output.
+    Scale(PostScale),
+    /// Absorb the scales into an output quantizer: integer output codes
+    /// (the V path). The spec must be signed.
+    Quantize(QuantSpec),
 }
 
 /// Result of simulating one linear layer over a batch of rows.
@@ -34,8 +50,8 @@ pub enum Epilogue {
 pub struct LinearOutput {
     /// Fp output (Scale epilogue) — empty otherwise.
     pub values: Vec<f32>,
-    /// Code output (Quantize epilogue) — empty otherwise.
-    pub codes: Vec<i32>,
+    /// Typed code output (Quantize epilogue) — `None` otherwise.
+    pub codes: Option<QTensor>,
     pub rows: usize,
     pub cols: usize,
     pub stats: BlockStats,
@@ -58,44 +74,45 @@ impl LinearArraySim {
         (self.folded.codes.rows * self.folded.codes.cols) as u64
     }
 
-    /// Stream `x` (M×K codes) through the array.
-    ///
-    /// `use_w_scale_only`: post-scale by diag(Δ_W) instead of the full
-    /// Δ̄_X·diag(Δ_W) — the Q/K path where the scalar cancels into the
-    /// following LayerNorm (Eq. 2 / §IV-A).
-    pub fn run(&self, x: &IntMat, epilogue: Epilogue, use_w_scale_only: bool) -> Result<LinearOutput> {
+    /// The Δ̄_X this layer's scales were folded with (out_scale / w_scale).
+    fn folded_step_x(&self) -> Option<f32> {
+        self.folded
+            .w_scale
+            .first()
+            .zip(self.folded.out_scale.first())
+            .map(|(&w, &o)| o / w)
+    }
+
+    /// Stream the activation codes `x` through the array.
+    pub fn run(&self, x: &QTensor, epilogue: &Epilogue) -> Result<LinearOutput> {
         let w = &self.folded.codes;
-        anyhow::ensure!(x.cols == w.cols, "K mismatch {} vs {}", x.cols, w.cols);
-        let (m, k, n) = (x.rows, x.cols, w.rows);
+        ensure!(x.cols() == w.cols, "K mismatch {} vs {}", x.cols(), w.cols);
+        ensure!(x.spec.signed, "{}: activation codes must be signed", self.name);
+        ensure!(
+            x.spec.bits == self.bits,
+            "{}: operand is {}-bit but the array holds {}-bit weights",
+            self.name,
+            x.spec.bits,
+            self.bits
+        );
+        if let Some(sx) = self.folded_step_x() {
+            let got = x.spec.step.get();
+            ensure!(
+                (got - sx).abs() <= 1e-3 * sx.abs().max(got.abs()),
+                "{}: operand step {} does not match the folded Δ̄_X {}",
+                self.name,
+                got,
+                sx
+            );
+        }
+        let (m, k, n) = (x.rows(), x.cols(), w.rows);
         let mut stats = BlockStats::new(self.name.clone(), "I x O", (k * n) as u64);
         stats.kind = super::energy::PeKind::Mac { bits: self.bits, weight_stationary: true };
         stats.mac_bits = self.bits;
 
-        // --- MAC phase: identical accumulation order to quant::int_matmul.
-        // With ≤8-bit operand codes a product is ≤ 2^14, so K < 2^17 rows
-        // cannot overflow an i32 accumulator — the narrow accumulate
-        // auto-vectorizes where the i64 widening does not (§Perf log).
-        let narrow = self.bits <= 8 && k < (1 << 17);
-        let mut acc = vec![0i64; m * n];
-        for i in 0..m {
-            let xr = x.row(i);
-            for j in 0..n {
-                let wr = w.row(j);
-                acc[i * n + j] = if narrow {
-                    let mut a = 0i32;
-                    for p in 0..k {
-                        a += xr[p] * wr[p];
-                    }
-                    a as i64
-                } else {
-                    let mut a = 0i64;
-                    for p in 0..k {
-                        a += xr[p] as i64 * wr[p] as i64;
-                    }
-                    a
-                };
-            }
-        }
+        // --- MAC phase: identical accumulation order to quant::int_matmul
+        // (shared narrow/wide core, see [`super::accumulate`]).
+        let acc = accumulate::matmul_bt(&x.codes, w, self.bits);
         stats.mac_ops = (m * k * n) as u64;
 
         // --- cycle accounting (wavefront + scan drain).
@@ -110,19 +127,18 @@ impl LinearArraySim {
         // --- epilogue.
         let mut out = LinearOutput {
             values: Vec::new(),
-            codes: Vec::new(),
+            codes: None,
             rows: m,
             cols: n,
             stats,
         };
-        match epilogue {
-            Epilogue::Scale => {
+        match *epilogue {
+            Epilogue::Scale(post) => {
                 let mut vals = vec![0f32; m * n];
                 for j in 0..n {
-                    let scale = if use_w_scale_only {
-                        self.folded.w_scale[j]
-                    } else {
-                        self.folded.out_scale[j]
+                    let scale = match post {
+                        PostScale::WeightOnly => self.folded.w_scale[j],
+                        PostScale::Full => self.folded.out_scale[j],
                     };
                     for i in 0..m {
                         vals[i * n + j] =
@@ -133,8 +149,10 @@ impl LinearArraySim {
                 out.stats.fp_ops += 2 * (m * n) as u64;
                 out.values = vals;
             }
-            Epilogue::Quantize { out_bits, step_out } => {
-                let (qmin, qmax) = int_range(out_bits);
+            Epilogue::Quantize(spec) => {
+                ensure!(spec.signed, "{}: the V-path quantizer is signed", self.name);
+                let (qmin, qmax) = spec.range();
+                let step_out = spec.step.get();
                 let mut codes = vec![0i32; m * n];
                 for j in 0..n {
                     // scales absorbed into the quantizer threshold (§IV-B)
@@ -145,10 +163,13 @@ impl LinearArraySim {
                     }
                 }
                 // parallel comparator: 2^b - 1 boundary compares per element
-                out.stats.cmp_ops = (m * n) as u64 * ((1u64 << out_bits) - 1);
-                out.stats.cmp_bits = out_bits;
+                out.stats.cmp_ops = (m * n) as u64 * ((1u64 << spec.bits) - 1);
+                out.stats.cmp_bits = spec.bits;
                 out.stats.fp_ops += 2 * (m * n) as u64; // bias add + eff mult
-                out.codes = codes;
+                out.codes = Some(QTensor {
+                    codes: crate::quant::linear::IntMat::new(m, n, codes),
+                    spec,
+                });
             }
         }
         Ok(out)
@@ -159,15 +180,25 @@ impl LinearArraySim {
 mod tests {
     use super::*;
     use crate::quant::fold::QuantParams;
-    use crate::quant::linear::int_linear;
+    use crate::quant::linear::{int_linear, IntMat};
+    use crate::quant::qtensor::Step;
+    use crate::quant::{int_range, round_half_even};
     use crate::util::proptest::{assert_close, prop_check};
     use crate::util::XorShift;
+
+    const STEP_X: f32 = 0.1;
 
     fn folded(rng: &mut XorShift, n: usize, k: usize, bits: u32) -> FoldedLinear {
         let w: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 0.2) as f32).collect();
         let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
         let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.02, 0.2) as f32).collect();
-        FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x: 0.1, step_w }).unwrap()
+        FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x: STEP_X, step_w }).unwrap()
+    }
+
+    fn qinput(rng: &mut XorShift, m: usize, k: usize, bits: u32) -> QTensor {
+        let (qmin, qmax) = int_range(bits);
+        let spec = QuantSpec::signed(bits, Step::new(STEP_X).unwrap());
+        QTensor::new(IntMat::new(m, k, rng.codes(m * k, qmin, qmax)), spec).unwrap()
     }
 
     #[test]
@@ -181,9 +212,9 @@ mod tests {
             );
             let f = folded(rng, n, k, bits);
             let sim = LinearArraySim::new("lin", f, bits);
-            let (qmin, qmax) = int_range(bits);
-            let x = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
-            let got = sim.run(&x, Epilogue::Scale, false).map_err(|e| e.to_string())?;
+            let x = qinput(rng, m, k, bits);
+            let got =
+                sim.run(&x, &Epilogue::Scale(PostScale::Full)).map_err(|e| e.to_string())?;
             let bias: Vec<f32> = sim
                 .folded
                 .bias_folded
@@ -192,7 +223,7 @@ mod tests {
                 .map(|(&b, &s)| b * s)
                 .collect();
             let want = int_linear(
-                &x,
+                &x.codes,
                 &sim.folded.codes,
                 &bias,
                 1.0,
@@ -208,8 +239,8 @@ mod tests {
         let mut rng = XorShift::new(82);
         let f = folded(&mut rng, 6, 8, 3);
         let sim = LinearArraySim::new("lin", f, 3);
-        let x = IntMat::new(5, 8, rng.codes(40, -4, 3));
-        let out = sim.run(&x, Epilogue::Scale, false).unwrap();
+        let x = qinput(&mut rng, 5, 8, 3);
+        let out = sim.run(&x, &Epilogue::Scale(PostScale::Full)).unwrap();
         assert_eq!(out.stats.mac_ops, 5 * 8 * 6);
         assert_eq!(out.stats.pe_count, 48);
         assert_eq!(out.stats.cycles, (5 + 8 + 6 - 2 + 6) as u64);
@@ -220,13 +251,14 @@ mod tests {
         let mut rng = XorShift::new(83);
         let f = folded(&mut rng, 4, 8, 3);
         let sim = LinearArraySim::new("v", f, 3);
-        let x = IntMat::new(3, 8, rng.codes(24, -4, 3));
+        let x = qinput(&mut rng, 3, 8, 3);
         let step_out = 0.09;
-        let q = sim
-            .run(&x, Epilogue::Quantize { out_bits: 3, step_out }, false)
-            .unwrap();
-        let fp = sim.run(&x, Epilogue::Scale, false).unwrap();
-        for (c, v) in q.codes.iter().zip(&fp.values) {
+        let spec = QuantSpec::signed(3, Step::new(step_out).unwrap());
+        let q = sim.run(&x, &Epilogue::Quantize(spec)).unwrap();
+        let fp = sim.run(&x, &Epilogue::Scale(PostScale::Full)).unwrap();
+        let codes = q.codes.expect("quantize epilogue yields codes");
+        assert_eq!(codes.spec, spec);
+        for (c, v) in codes.codes.data.iter().zip(&fp.values) {
             let want = (round_half_even(v / step_out) as i32).clamp(-4, 3);
             assert_eq!(*c, want);
         }
@@ -238,13 +270,44 @@ mod tests {
         // Q/K path: output should be the full output divided by Δ̄_X.
         let mut rng = XorShift::new(84);
         let f = folded(&mut rng, 4, 6, 3);
-        let step_x = 0.1; // as set in folded()
         let sim = LinearArraySim::new("q", f, 3);
-        let x = IntMat::new(2, 6, rng.codes(12, -4, 3));
-        let full = sim.run(&x, Epilogue::Scale, false).unwrap();
-        let ln = sim.run(&x, Epilogue::Scale, true).unwrap();
+        let x = qinput(&mut rng, 2, 6, 3);
+        let full = sim.run(&x, &Epilogue::Scale(PostScale::Full)).unwrap();
+        let ln = sim.run(&x, &Epilogue::Scale(PostScale::WeightOnly)).unwrap();
         for (a, b) in full.values.iter().zip(&ln.values) {
-            assert!((a - b * step_x).abs() < 1e-5, "{a} vs {}", b * step_x);
+            assert!((a - b * STEP_X).abs() < 1e-5, "{a} vs {}", b * STEP_X);
         }
+    }
+
+    #[test]
+    fn rejects_mismatched_operand_spec() {
+        let mut rng = XorShift::new(85);
+        let f = folded(&mut rng, 4, 6, 3);
+        let sim = LinearArraySim::new("q", f, 3);
+        // wrong step: folded with Δ̄_X = 0.1, operand claims 0.2
+        let bad_step = QTensor::new(
+            IntMat::new(1, 6, vec![0; 6]),
+            QuantSpec::signed(3, Step::new(0.2).unwrap()),
+        )
+        .unwrap();
+        assert!(sim.run(&bad_step, &Epilogue::Scale(PostScale::Full)).is_err());
+        // wrong width
+        let bad_bits = QTensor::new(
+            IntMat::new(1, 6, vec![0; 6]),
+            QuantSpec::signed(4, Step::new(STEP_X).unwrap()),
+        )
+        .unwrap();
+        assert!(sim.run(&bad_bits, &Epilogue::Scale(PostScale::Full)).is_err());
+        // unsigned operand
+        let bad_sign = QTensor::new(
+            IntMat::new(1, 6, vec![0; 6]),
+            QuantSpec::unsigned(3, Step::new(STEP_X).unwrap()),
+        )
+        .unwrap();
+        assert!(sim.run(&bad_sign, &Epilogue::Scale(PostScale::Full)).is_err());
+        // unsigned quantize epilogue is rejected too
+        let x = qinput(&mut rng, 1, 6, 3);
+        let bad_epi = Epilogue::Quantize(QuantSpec::unsigned(3, Step::new(0.1).unwrap()));
+        assert!(sim.run(&x, &bad_epi).is_err());
     }
 }

@@ -7,12 +7,19 @@
 //! A(i,:)·B(:,j) over K cycles, then latches into its row scan chain. The
 //! quantizer at the chain end re-quantizes with (Δ_A·Δ_B)/Δ_out — a
 //! parallel comparator plus adder, never a dequantized matrix.
+//!
+//! The call is typed: both operands are [`QTensor`]s and the output is
+//! described by a [`QuantSpec`]; the effective requantizer scale is the
+//! [`ScaleChain`] `Δ_A·Δ_B/Δ_out` computed *here*, from the operands'
+//! own steps — call sites can no longer fold it wrong.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::quant::linear::IntMat;
-use crate::quant::{int_range, round_half_even};
+use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
+use crate::quant::round_half_even;
 
+use super::accumulate;
 use super::stats::BlockStats;
 
 /// Simulated attn·V matmul (integer in, integer out).
@@ -24,9 +31,12 @@ pub struct MatmulArraySim {
 
 #[derive(Debug)]
 pub struct MatmulOutput {
-    pub codes: IntMat,
+    /// Quantized output codes carrying the requested [`QuantSpec`].
+    pub codes: QTensor,
     /// Raw integer accumulators (pre-quantizer), for cross-checks.
     pub acc: Vec<i64>,
+    /// The Δ_A·Δ_B/Δ_out chain the quantizer applied.
+    pub chain: ScaleChain,
     pub stats: BlockStats,
 }
 
@@ -35,52 +45,27 @@ impl MatmulArraySim {
         MatmulArraySim { name: name.into(), bits }
     }
 
-    /// `a` (M×K codes) × `b` (K×N codes, given row-major K rows) →
-    /// quantized codes with effective scale `eff = Δ_A·Δ_B/Δ_out`.
-    pub fn run(
-        &self,
-        a: &IntMat,
-        b_rows: &IntMat, // K×N
-        eff_scale: f32,
-        out_bits: u32,
-    ) -> Result<MatmulOutput> {
-        anyhow::ensure!(a.cols == b_rows.rows, "K mismatch {} vs {}", a.cols, b_rows.rows);
-        let (m, k, n) = (a.rows, a.cols, b_rows.cols);
+    /// `a` (M×K codes) × `b_rows` (K×N codes, row-major K rows) →
+    /// codes quantized to `out`, with the effective scale
+    /// `Δ_A·Δ_B/Δ_out` derived from the operand specs.
+    pub fn run(&self, a: &QTensor, b_rows: &QTensor, out: QuantSpec) -> Result<MatmulOutput> {
+        ensure!(
+            a.cols() == b_rows.rows(),
+            "K mismatch {} vs {}",
+            a.cols(),
+            b_rows.rows()
+        );
+        let (m, k, n) = (a.rows(), a.cols(), b_rows.cols());
         let mut stats = BlockStats::new(self.name.clone(), "N x O", (m * n) as u64);
         stats.kind = super::energy::PeKind::Mac { bits: self.bits, weight_stationary: false };
         stats.mac_bits = self.bits;
 
-        // i,p,j order streams B rows contiguously; narrow i32 accumulate
-        // is exact for ≤8-bit codes with K < 2^17 (§Perf log).
-        let mut acc = vec![0i64; m * n];
-        if self.bits <= 8 && k < (1 << 17) {
-            let mut acc32 = vec![0i32; m * n];
-            for i in 0..m {
-                let ar = a.row(i);
-                let out = &mut acc32[i * n..(i + 1) * n];
-                for p in 0..k {
-                    let av = ar[p];
-                    let br = b_rows.row(p);
-                    for j in 0..n {
-                        out[j] += av * br[j];
-                    }
-                }
-            }
-            for (w, v) in acc.iter_mut().zip(&acc32) {
-                *w = *v as i64;
-            }
-        } else {
-            for i in 0..m {
-                let ar = a.row(i);
-                for p in 0..k {
-                    let av = ar[p] as i64;
-                    let br = b_rows.row(p);
-                    for j in 0..n {
-                        acc[i * n + j] += av * br[j] as i64;
-                    }
-                }
-            }
-        }
+        // Shared narrow/wide accumulation core; exactness is decided by
+        // the widest operand *magnitude* (unsigned attention codes reach
+        // 2^b - 1, one bit more than same-width signed codes), not by
+        // the PE label.
+        let op_bits = a.spec.magnitude_bits().max(b_rows.spec.magnitude_bits());
+        let acc = accumulate::matmul_kn(&a.codes, &b_rows.codes, op_bits);
         stats.mac_ops = (m * k * n) as u64;
 
         // output-stationary wavefront: fill M+N+K-2, drain N per row chain
@@ -88,25 +73,37 @@ impl MatmulArraySim {
         stats.idle_pe_cycles = stats.pe_count * stats.cycles - stats.mac_ops;
         stats.reg_bit_writes = (m * n) as u64 * 24; // scan-out words
 
-        let (qmin, qmax) = int_range(out_bits);
+        let chain = ScaleChain::requant(a.spec.step, b_rows.spec.step, out.step);
+        let eff = chain.eff();
+        let (qmin, qmax) = out.range();
         let mut codes = vec![0i32; m * n];
         for (idx, &v) in acc.iter().enumerate() {
-            codes[idx] = (round_half_even(v as f32 * eff_scale) as i32).clamp(qmin, qmax);
+            codes[idx] = (round_half_even(v as f32 * eff) as i32).clamp(qmin, qmax);
         }
-        stats.cmp_ops = (m * n) as u64 * ((1u64 << out_bits) - 1);
-        stats.cmp_bits = out_bits;
+        stats.cmp_ops = (m * n) as u64 * ((1u64 << out.bits) - 1);
+        stats.cmp_bits = out.bits;
         stats.fp_ops += (m * n) as u64; // eff-scale mult at the quantizer
 
-        Ok(MatmulOutput { codes: IntMat::new(m, n, codes), acc, stats })
+        Ok(MatmulOutput {
+            codes: QTensor { codes: IntMat::new(m, n, codes), spec: out },
+            acc,
+            chain,
+            stats,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::qtensor::Step;
     use crate::quant::softmax; // for attn-like inputs
     use crate::util::proptest::{assert_eq_i32, prop_check};
     use crate::util::XorShift;
+
+    fn qt(rows: usize, cols: usize, data: Vec<i32>, spec: QuantSpec) -> QTensor {
+        QTensor::new(IntMat::new(rows, cols, data), spec).unwrap()
+    }
 
     #[test]
     fn matches_quant_attn_value() {
@@ -117,33 +114,40 @@ mod tests {
                 rng.int_in(1, 12) as usize,
                 rng.int_in(1, 10) as usize,
             );
-            let a = IntMat::new(m, k, rng.codes(m * k, 0, 7));
-            let b = IntMat::new(k, n, rng.codes(k * n, -4, 3));
-            let eff = rng.uniform(0.001, 0.1) as f32;
+            let s_a = Step::new(rng.uniform(0.05, 0.3) as f32).unwrap();
+            let s_b = Step::new(rng.uniform(0.05, 0.3) as f32).unwrap();
+            let s_o = Step::new(rng.uniform(0.2, 2.0) as f32).unwrap();
+            let a = qt(m, k, rng.codes(m * k, 0, 7), QuantSpec::unsigned(3, s_a));
+            let b = qt(k, n, rng.codes(k * n, -4, 3), QuantSpec::signed(3, s_b));
+            let out_spec = QuantSpec::signed(3, s_o);
             let sim = MatmulArraySim::new("pv", 3);
-            let out = sim.run(&a, &b, eff, 3).map_err(|e| e.to_string())?;
-            // reference: direct i64 accumulate + round
+            let out = sim.run(&a, &b, out_spec).map_err(|e| e.to_string())?;
+            // reference: direct i64 accumulate + round with hand-folded eff
+            let eff = s_a.get() * s_b.get() / s_o.get();
             let mut want = vec![0i32; m * n];
             for i in 0..m {
                 for j in 0..n {
                     let mut s = 0i64;
                     for p in 0..k {
-                        s += a.at(i, p) as i64 * b.at(p, j) as i64;
+                        s += a.codes.at(i, p) as i64 * b.codes.at(p, j) as i64;
                     }
                     want[i * n + j] =
                         (round_half_even(s as f32 * eff) as i32).clamp(-4, 3);
                 }
             }
-            assert_eq_i32(&out.codes.data, &want)
+            assert_eq_i32(&out.codes.codes.data, &want)
         });
     }
 
     #[test]
     fn stats_counts() {
         let mut rng = XorShift::new(92);
-        let a = IntMat::new(4, 6, rng.codes(24, 0, 7));
-        let b = IntMat::new(6, 5, rng.codes(30, -4, 3));
-        let out = MatmulArraySim::new("pv", 3).run(&a, &b, 0.01, 3).unwrap();
+        let s = Step::new(0.1).unwrap();
+        let a = qt(4, 6, rng.codes(24, 0, 7), QuantSpec::unsigned(3, s));
+        let b = qt(6, 5, rng.codes(30, -4, 3), QuantSpec::signed(3, s));
+        let out = MatmulArraySim::new("pv", 3)
+            .run(&a, &b, QuantSpec::signed(3, Step::new(1.0).unwrap()))
+            .unwrap();
         assert_eq!(out.stats.pe_count, 20);
         assert_eq!(out.stats.mac_ops, 4 * 6 * 5);
         assert_eq!(out.stats.cycles, (4 + 5 + 6 - 2 + 5) as u64);
@@ -154,13 +158,21 @@ mod tests {
     fn attention_weighted_sum_sane() {
         // uniform attention codes → output ≈ scaled column means of V
         let n = 8;
-        let a = IntMat::new(1, n, vec![4; n]); // uniform weights
-        let v = IntMat::new(n, 2, (0..n as i32 * 2).map(|i| i % 5 - 2).collect());
-        let out = MatmulArraySim::new("pv", 3).run(&a, &v, 0.05, 8).unwrap();
+        let s = Step::new(0.125).unwrap();
+        let a = qt(1, n, vec![4; n], QuantSpec::unsigned(3, s));
+        let v = qt(
+            n,
+            2,
+            (0..n as i32 * 2).map(|i| i % 5 - 2).collect(),
+            QuantSpec::signed(3, Step::new(0.1).unwrap()),
+        );
+        let out = MatmulArraySim::new("pv", 3)
+            .run(&a, &v, QuantSpec::signed(8, Step::new(0.25).unwrap()))
+            .unwrap();
         // acc = 4·Σv per column; just check against direct dot
         let mut want0 = 0i64;
         for p in 0..n {
-            want0 += 4 * v.at(p, 0) as i64;
+            want0 += 4 * v.codes.at(p, 0) as i64;
         }
         assert_eq!(out.acc[0], want0);
         let _ = softmax::exact_softmax_row(&[0.0, 1.0]); // keep import used

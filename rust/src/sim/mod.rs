@@ -28,6 +28,13 @@
 //! [`reversing`] and [`delay`] (dataflow alignment), composed by
 //! [`attention`] into the full self-attention pipeline.
 
+//! All block entry points are **typed**: operands arrive as
+//! [`crate::quant::QTensor`]s and scale foldings as
+//! [`crate::quant::ScaleChain`]s — no public `sim` API takes a bare
+//! `eff_scale: f32` or a `use_w_scale_only: bool` flag. The shared
+//! narrow/wide accumulation core lives in [`accumulate`].
+
+pub mod accumulate;
 pub mod attention;
 pub mod delay;
 pub mod energy;
@@ -38,6 +45,7 @@ pub mod reversing;
 pub mod softmax_matmul;
 pub mod stats;
 
-pub use attention::{AttentionSim, AttentionReport};
+pub use attention::{AttentionReport, AttentionSim, AttentionSteps};
 pub use energy::EnergyModel;
+pub use linear::{Epilogue, LinearArraySim, PostScale};
 pub use stats::BlockStats;

@@ -9,13 +9,20 @@
 //!
 //! A numerically-stable max-subtraction pass precedes the exp (the same
 //! max the reference/Pallas softmax uses), modelled as part of the scan.
+//!
+//! Typed call: Q/K are [`QTensor`]s, the Eq. 3 score scale arrives as an
+//! explicit [`ScaleChain`] (usually `Δ_Q·Δ_K/√d`, possibly imported
+//! pre-folded from a checkpoint), and the probability quantizer is an
+//! unsigned [`QuantSpec`].
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::quant::linear::IntMat;
+use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
+use crate::quant::round_half_even;
 use crate::quant::shift_exp::shift_exp;
-use crate::quant::{round_half_even, uint_range};
 
+use super::accumulate;
 use super::stats::BlockStats;
 
 #[derive(Debug)]
@@ -26,8 +33,8 @@ pub struct SoftmaxMatmulSim {
 
 #[derive(Debug)]
 pub struct SoftmaxMatmulOutput {
-    /// Attention probability codes (M×N, unsigned `attn_bits`).
-    pub codes: IntMat,
+    /// Attention probability codes (M×N, unsigned `attn.bits`).
+    pub codes: QTensor,
     /// Raw integer scores (for cross-checking against quant/jax).
     pub scores: IntMat,
     pub stats: BlockStats,
@@ -38,52 +45,37 @@ impl SoftmaxMatmulSim {
         SoftmaxMatmulSim { name: name.into(), bits }
     }
 
-    /// q (M×D codes) × kᵀ (N×D codes) with exp scale `scale` = Δ_Q·Δ_K/√d,
-    /// quantizing probabilities to `attn_bits` codes with step `step_attn`.
+    /// q (M×D codes) × kᵀ (N×D codes), exp-scaled by `scores.eff()`
+    /// (Eq. 3, Δ_Q·Δ_K/√d), probabilities quantized per `attn`.
     ///
     /// `shift=false` swaps the Eq. 4 unit for exact exp (ablation).
     pub fn run(
         &self,
-        q: &IntMat,
-        k: &IntMat,
-        scale: f32,
-        step_attn: f32,
-        attn_bits: u32,
+        q: &QTensor,
+        k: &QTensor,
+        scores_chain: &ScaleChain,
+        attn: QuantSpec,
         shift: bool,
     ) -> Result<SoftmaxMatmulOutput> {
-        anyhow::ensure!(q.cols == k.cols, "D mismatch {} vs {}", q.cols, k.cols);
-        let (m, d, n) = (q.rows, q.cols, k.rows);
+        ensure!(q.cols() == k.cols(), "D mismatch {} vs {}", q.cols(), k.cols());
+        ensure!(q.spec.signed && k.spec.signed, "{}: Q/K codes are signed", self.name);
+        ensure!(!attn.signed, "{}: attention probabilities are unsigned codes", self.name);
+        let (m, d, n) = (q.rows(), q.cols(), k.rows());
         let mut stats = BlockStats::new(self.name.clone(), "N x N", (m * n) as u64);
         stats.kind = super::energy::PeKind::ExpMac { bits: self.bits };
         stats.mac_bits = self.bits;
 
-        // MAC phase (output-stationary, ascending-d accumulation). Narrow
-        // i32 accumulate is exact for ≤8-bit codes with D < 2^17 (§Perf).
-        let narrow = self.bits <= 8 && d < (1 << 17);
-        let mut scores = vec![0i32; m * n];
-        for i in 0..m {
-            let qr = q.row(i);
-            for j in 0..n {
-                let kr = k.row(j);
-                scores[i * n + j] = if narrow {
-                    let mut acc = 0i32;
-                    for p in 0..d {
-                        acc += qr[p] * kr[p];
-                    }
-                    acc
-                } else {
-                    let mut acc = 0i64;
-                    for p in 0..d {
-                        acc += qr[p] as i64 * kr[p] as i64;
-                    }
-                    acc as i32
-                };
-            }
-        }
+        // MAC phase (output-stationary, ascending-d accumulation) through
+        // the shared narrow/wide core.
+        let op_bits = q.spec.bits.max(k.spec.bits);
+        let acc = accumulate::matmul_bt(&q.codes, &k.codes, op_bits);
+        let scores: Vec<i32> = acc.iter().map(|&v| v as i32).collect();
         stats.mac_ops = (m * d * n) as u64;
 
         // exp + Σ row + quantize.
-        let (lo, hi) = uint_range(attn_bits);
+        let scale = scores_chain.eff();
+        let (lo, hi) = attn.range();
+        let step_attn = attn.step.get();
         let mut codes = vec![0i32; m * n];
         for i in 0..m {
             let row = &scores[i * n..(i + 1) * n];
@@ -106,9 +98,9 @@ impl SoftmaxMatmulSim {
         stats.exp_ops = (m * n) as u64;
         stats.fp_ops = (m * n) as u64 // scale mult per element
             + (m * n) as u64 // Σ systolic adds
-            + (m as u64) * ((1u64 << attn_bits) - 1); // per-row threshold·sum mults
-        stats.cmp_ops = (m * n) as u64 * ((1u64 << attn_bits) - 1);
-        stats.cmp_bits = attn_bits;
+            + (m as u64) * ((1u64 << attn.bits) - 1); // per-row threshold·sum mults
+        stats.cmp_ops = (m * n) as u64 * ((1u64 << attn.bits) - 1);
+        stats.cmp_bits = attn.bits;
 
         // cycles: fill M+N+D-2, then exp (pipelined, 1/elem) + Σ propagation
         // (N) + scan drain (N).
@@ -117,7 +109,7 @@ impl SoftmaxMatmulSim {
         stats.reg_bit_writes = (m * n) as u64 * 24;
 
         Ok(SoftmaxMatmulOutput {
-            codes: IntMat::new(m, n, codes),
+            codes: QTensor { codes: IntMat::new(m, n, codes), spec: attn },
             scores: IntMat::new(m, n, scores),
             stats,
         })
@@ -127,9 +119,17 @@ impl SoftmaxMatmulSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::qtensor::Step;
     use crate::quant::softmax::qk_attention;
     use crate::util::proptest::{assert_eq_i32, prop_check};
     use crate::util::XorShift;
+
+    fn qk_pair(rng: &mut XorShift, m: usize, d: usize, n: usize) -> (QTensor, QTensor) {
+        let spec = QuantSpec::signed(3, Step::new(0.5).unwrap());
+        let q = QTensor::new(IntMat::new(m, d, rng.codes(m * d, -4, 3)), spec).unwrap();
+        let k = QTensor::new(IntMat::new(n, d, rng.codes(n * d, -4, 3)), spec).unwrap();
+        (q, k)
+    }
 
     #[test]
     fn matches_quant_reference_exactly() {
@@ -139,17 +139,19 @@ mod tests {
                 rng.int_in(1, 16) as usize,
                 rng.int_in(2, 10) as usize,
             );
-            let q = IntMat::new(m, d, rng.codes(m * d, -4, 3));
-            let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
+            let (q, k) = qk_pair(rng, m, d, n);
             let scale = rng.uniform(0.005, 0.08) as f32;
             let step = rng.uniform(0.05, 0.3) as f32;
             let shift = rng.next_f64() < 0.5;
             let sim = SoftmaxMatmulSim::new("qk", 3);
-            let got = sim.run(&q, &k, scale, step, 3, shift).map_err(|e| e.to_string())?;
+            let chain = ScaleChain::folded(scale);
+            let attn = QuantSpec::unsigned(3, Step::new(step).unwrap());
+            let got = sim.run(&q, &k, &chain, attn, shift).map_err(|e| e.to_string())?;
             let (want, want_scores) =
-                qk_attention(&q, &k, scale, step, 3, shift).map_err(|e| e.to_string())?;
+                qk_attention(&q.codes, &k.codes, scale, step, 3, shift)
+                    .map_err(|e| e.to_string())?;
             assert_eq_i32(&got.scores.data, &want_scores.data)?;
-            assert_eq_i32(&got.codes.data, &want.data)
+            assert_eq_i32(&got.codes.codes.data, &want.data)
         });
     }
 
@@ -159,9 +161,16 @@ mod tests {
         let n = 198;
         let d = 64;
         let mut rng = XorShift::new(102);
-        let q = IntMat::new(n, d, rng.codes(n * d, -4, 3));
-        let k = IntMat::new(n, d, rng.codes(n * d, -4, 3));
-        let out = SoftmaxMatmulSim::new("qk", 3).run(&q, &k, 0.01, 0.14, 3, true).unwrap();
+        let (q, k) = qk_pair(&mut rng, n, d, n);
+        let out = SoftmaxMatmulSim::new("qk", 3)
+            .run(
+                &q,
+                &k,
+                &ScaleChain::folded(0.01),
+                QuantSpec::unsigned(3, Step::new(0.14).unwrap()),
+                true,
+            )
+            .unwrap();
         assert_eq!(out.stats.pe_count, 39_204);
         assert_eq!(out.stats.mac_ops, 198 * 198 * 64); // 2.509M
         assert_eq!(out.stats.exp_ops, 39_204);
@@ -170,15 +179,32 @@ mod tests {
     #[test]
     fn codes_are_valid_probability_codes() {
         let mut rng = XorShift::new(103);
-        let q = IntMat::new(6, 8, rng.codes(48, -4, 3));
-        let k = IntMat::new(6, 8, rng.codes(48, -4, 3));
+        let (q, k) = qk_pair(&mut rng, 6, 8, 6);
         let step = 1.0 / 7.0;
-        let out = SoftmaxMatmulSim::new("qk", 3).run(&q, &k, 0.05, step, 3, true).unwrap();
-        assert!(out.codes.data.iter().all(|&c| (0..=7).contains(&c)));
+        let out = SoftmaxMatmulSim::new("qk", 3)
+            .run(
+                &q,
+                &k,
+                &ScaleChain::folded(0.05),
+                QuantSpec::unsigned(3, Step::new(step).unwrap()),
+                true,
+            )
+            .unwrap();
+        assert!(out.codes.codes.data.iter().all(|&c| (0..=7).contains(&c)));
         // each row's codes·step should roughly sum to 1
         for i in 0..6 {
-            let s: f32 = out.codes.row(i).iter().map(|&c| c as f32 * step).sum();
+            let s: f32 = out.codes.codes.row(i).iter().map(|&c| c as f32 * step).sum();
             assert!((s - 1.0).abs() < 0.5, "row {i} sums to {s}");
         }
+    }
+
+    #[test]
+    fn rejects_signed_probability_spec() {
+        let mut rng = XorShift::new(104);
+        let (q, k) = qk_pair(&mut rng, 2, 4, 2);
+        let bad = QuantSpec::signed(3, Step::new(0.14).unwrap());
+        assert!(SoftmaxMatmulSim::new("qk", 3)
+            .run(&q, &k, &ScaleChain::folded(0.05), bad, true)
+            .is_err());
     }
 }

@@ -1,0 +1,95 @@
+//! Cross-backend parity: the paper's central claim — one integerized
+//! attention graph, bit-identical integer results on every substrate —
+//! stated as a test. The same [`AttnRequest`] goes through
+//! [`ReferenceBackend`] (quant golden composition) and [`SimBackend`]
+//! (systolic-array model) at DeiT-S attention dimensions (N=198 tokens,
+//! D=384 input dim, O=64 head dim) for every supported bit width, and
+//! every integer stage must agree code-for-code.
+
+use ivit::backend::{
+    AttnModule, AttnRequest, Backend, BackendConfig, BackendRegistry, ReferenceBackend, SimBackend,
+};
+
+const TOKENS: usize = 198;
+const D_IN: usize = 384;
+const D_HEAD: usize = 64;
+
+fn run_pair(module: &AttnModule, tokens: usize, seed: u64) -> (ivit::backend::AttnResponse, ivit::backend::AttnResponse) {
+    let x = module.random_input(tokens, seed).expect("input codes");
+    let req = AttnRequest::new(x);
+    let mut r = ReferenceBackend::new(module.clone());
+    let mut s = SimBackend::new(module.clone());
+    (
+        r.run_attention(&req).expect("reference run"),
+        s.run_attention(&req).expect("sim run"),
+    )
+}
+
+fn assert_bit_identical(a: &ivit::backend::AttnResponse, b: &ivit::backend::AttnResponse, label: &str) {
+    let (sa, sb) = (a.stages.as_ref().unwrap(), b.stages.as_ref().unwrap());
+    assert_eq!(sa.q.codes.data, sb.q.codes.data, "{label}: Q codes");
+    assert_eq!(sa.k.codes.data, sb.k.codes.data, "{label}: K codes");
+    assert_eq!(sa.v.codes.data, sb.v.codes.data, "{label}: V codes");
+    assert_eq!(
+        sa.attn_head0.codes.data, sb.attn_head0.codes.data,
+        "{label}: attention codes"
+    );
+    let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+    assert_eq!(oa.codes.data, ob.codes.data, "{label}: output codes");
+    assert_eq!(oa.spec, ob.spec, "{label}: output spec");
+}
+
+#[test]
+fn reference_and_sim_bit_identical_at_deit_s_dims() {
+    for bits in [2u32, 3, 4, 8] {
+        let module =
+            AttnModule::synthetic(D_IN, D_HEAD, 1, bits, 100 + bits as u64).expect("module");
+        let (a, b) = run_pair(&module, TOKENS, 7);
+        assert_bit_identical(&a, &b, &format!("{bits}-bit DeiT-S"));
+        // the simulator additionally surfaces the hardware report
+        assert!(a.report.is_none());
+        let report = b.report.as_ref().expect("sim surfaces BlockStats");
+        assert_eq!(
+            report.blocks.iter().find(|bl| bl.name == "Q linear").unwrap().mac_ops,
+            (TOKENS * D_IN * D_HEAD) as u64
+        );
+    }
+}
+
+#[test]
+fn parity_holds_multi_head_and_exact_exp() {
+    // smaller dims, but multi-head and both exponential modes
+    for shift in [true, false] {
+        let mut module = AttnModule::synthetic(48, 24, 3, 3, 55).expect("module");
+        module.shift = shift;
+        let (a, b) = run_pair(&module, 20, 13);
+        assert_bit_identical(&a, &b, &format!("multi-head shift={shift}"));
+    }
+}
+
+#[test]
+fn registry_built_backends_agree_too() {
+    // end-to-end through the name-keyed registry, as the CLI drives it
+    let cfg = BackendConfig { d_in: 32, d_head: 16, heads: 2, bits: 3, ..BackendConfig::default() };
+    let registry = BackendRegistry::with_defaults();
+    let module = cfg.resolve_module().expect("module");
+    let x = module.random_input(10, 3).expect("input");
+    let req = AttnRequest::new(x);
+    let mut outs = Vec::new();
+    for name in ["ref", "sim"] {
+        let mut b = registry.create(name, &cfg).expect("create");
+        let resp = b.run_attention(&req).expect("run");
+        outs.push(resp.out_codes.unwrap().codes.data);
+    }
+    assert_eq!(outs[0], outs[1], "registry ref vs sim output codes");
+}
+
+#[test]
+fn capabilities_reflect_the_contract() {
+    let module = AttnModule::synthetic(16, 8, 1, 3, 1).unwrap();
+    let r = ReferenceBackend::new(module.clone());
+    let s = SimBackend::new(module);
+    assert!(r.capabilities().bit_exact_codes && !r.capabilities().hardware_stats);
+    assert!(s.capabilities().bit_exact_codes && s.capabilities().hardware_stats);
+    assert!(!r.capabilities().needs_artifacts && !s.capabilities().needs_artifacts);
+}

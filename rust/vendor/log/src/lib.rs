@@ -1,0 +1,59 @@
+//! Vendored, API-compatible subset of the `log` crate: the five level
+//! macros, printing to stderr when `IVIT_LOG` is set (any non-empty
+//! value enables everything at `info` and above; `IVIT_LOG=debug` or
+//! `trace` widens it). No global logger plumbing — the workspace only
+//! ever logs a handful of lines from the runtime engine.
+
+use std::fmt::Arguments;
+
+/// Severity levels, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Emit one record if the `IVIT_LOG` environment variable enables it.
+pub fn __log(level: Level, args: Arguments<'_>) {
+    let setting = match std::env::var("IVIT_LOG") {
+        Ok(s) if !s.is_empty() => s,
+        _ => return,
+    };
+    let max = match setting.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    };
+    if level <= max {
+        eprintln!("[{level:?}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error { ($($arg:tt)*) => { $crate::__log($crate::Level::Error, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! warn { ($($arg:tt)*) => { $crate::__log($crate::Level::Warn, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! info { ($($arg:tt)*) => { $crate::__log($crate::Level::Info, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! debug { ($($arg:tt)*) => { $crate::__log($crate::Level::Debug, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! trace { ($($arg:tt)*) => { $crate::__log($crate::Level::Trace, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_compile_and_run() {
+        // disabled by default (no IVIT_LOG): must be a cheap no-op
+        info!("hello {}", 1);
+        warn!("warn {}", 2);
+        error!("err");
+        debug!("dbg");
+        trace!("trc");
+    }
+}
