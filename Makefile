@@ -1,14 +1,17 @@
 # Convenience targets for the ivit reproduction.
 #
-#   make tier1      — the repo's tier-1 gate: release build + full test suite
-#   make fmt        — rustfmt check (no changes applied)
-#   make bench      — the artifact-free benches (table1, sim speed, ablations)
-#   make artifacts  — lower the JAX model to HLO + export eval set / attn_case
-#                     (needs the python toolchain; see python/compile/)
+#   make tier1       — the repo's tier-1 gate: release build + full test suite
+#   make fmt         — rustfmt check (no changes applied)
+#   make clippy      — lint gate: cargo clippy with warnings denied
+#   make bench       — the artifact-free benches (table1, sim speed, ablations)
+#   make bench-smoke — CI smoke: one tiny batch through every backend plan
+#                      (asserts bit-identical outputs across dispatch modes)
+#   make artifacts   — lower the JAX model to HLO + export eval set / attn_case
+#                      (needs the python toolchain; see python/compile/)
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt bench artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -16,8 +19,14 @@ tier1:
 fmt:
 	cd $(RUST_DIR) && cargo fmt --check
 
+clippy:
+	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
+
 bench:
 	cd $(RUST_DIR) && cargo bench --bench table1_power --bench sim_speed --bench ablation_scales --bench fig_softmax_error
+
+bench-smoke:
+	cd $(RUST_DIR) && IVIT_BENCH_SMOKE=1 cargo bench --bench throughput
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

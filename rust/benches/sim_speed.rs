@@ -7,7 +7,7 @@
 
 use std::time::Duration;
 
-use ivit::backend::{AttnModule, AttnRequest, BackendConfig, BackendRegistry};
+use ivit::backend::{AttnModule, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
 use ivit::bench::{bench_for, report};
 use ivit::quant::fold::{FoldedLinear, QuantParams};
 use ivit::quant::linear::IntMat;
@@ -66,16 +66,18 @@ fn main() {
         std::hint::black_box(o.codes.codes.data.len());
     }));
 
-    // the same full workload through each registry backend
+    // the same full workload through each registry backend's plan —
+    // planned once, so the loop measures pure run_batch dispatch
     let registry = BackendRegistry::with_defaults();
-    let mut cfg = BackendConfig::default();
+    let mut cfg = BackendConfig { workers: 4, ..BackendConfig::default() };
     let module: AttnModule = cfg.resolve_module().unwrap();
     cfg.module = Some(module.clone()); // backends see the same module
     let req = AttnRequest::new(module.random_input(198, 1).unwrap());
-    for name in ["ref", "sim"] {
-        let mut backend = registry.create(name, &cfg).unwrap();
-        timings.push(bench_for(&format!("backend::{name} N=198 I=384 O=64 3b"), budget, || {
-            let resp = backend.run_attention(&req).unwrap();
+    for name in ["ref", "sim", "sim-mt"] {
+        let backend = registry.create(name, &cfg).unwrap();
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        timings.push(bench_for(&format!("plan::{name} N=198 I=384 O=64 3b"), budget, || {
+            let resp = plan.run_one(&req).unwrap();
             std::hint::black_box(resp.out_codes.map(|c| c.codes.data.len()));
         }));
     }

@@ -1,40 +1,159 @@
-//! Bench E2E — serving throughput/latency of the coordinator over the
-//! PJRT executables: integerized vs Q-ViT-style vs fp32, batch-1 vs
-//! batch-8, plus coordinator overhead vs bare `execute`.
+//! Bench E2E — serving throughput/latency of the coordinator, plus the
+//! batch-amortization measurement behind the plan/execute API:
 //!
-//! Requires `make artifacts`. `cargo bench --bench throughput`
+//! 1. `batch_vs_per_row` — the headline: rows/sec of `sim` dispatched
+//!    per-row (create + plan + run per request, i.e. every request pays
+//!    the scale folding and module→sim lowering — the pre-plan serving
+//!    model) vs **one plan executing the whole batch**, and vs the
+//!    sharded `sim-mt` plan. Prints the ratios and FAILS (non-zero
+//!    exit) if batched `sim` is not ≥ 1.5× per-row dispatch or if
+//!    `sim-mt` (4 workers) does not beat single-threaded `sim`.
+//! 2. attention serving through the coordinator for every integer
+//!    backend (no artifacts needed).
+//! 3. image-classification serving over the PJRT executables
+//!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
-//! NOTE on reading the numbers: on this CPU PJRT substrate the integerized
-//! path is *slower* than fp32 — XLA-CPU has no low-bit fast path, so the
-//! int graph pays conversion/round chains. The paper's efficiency claim
-//! lives in the systolic hardware model (bench table1_power); this bench
-//! demonstrates the serving stack and measures coordinator overhead.
+//! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
+//! CI smoke profile: one tiny batch per backend, correctness asserted
+//! (bit-identical rows across arms), timing thresholds skipped.
+//!
+//! NOTE on reading the PJRT numbers: on this CPU PJRT substrate the
+//! integerized path is *slower* than fp32 — XLA-CPU has no low-bit fast
+//! path, so the int graph pays conversion/round chains. The paper's
+//! efficiency claim lives in the systolic hardware model (bench
+//! table1_power); this bench demonstrates the serving stack.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use ivit::backend::{BackendConfig, BackendRegistry};
+use ivit::backend::{
+    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions,
+};
 use ivit::bench::TableWriter;
 use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
 use ivit::util::XorShift;
 
+fn smoke() -> bool {
+    std::env::var("IVIT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The tentpole measurement: per-row dispatch (per-request setup paid
+/// every time) vs one plan running the whole batch, at batch 32.
+fn batch_vs_per_row() -> anyhow::Result<()> {
+    let (rows, tokens) = if smoke() { (4usize, 16usize) } else { (32usize, 64usize) };
+    println!("batch-first dispatch vs per-row dispatch (sim backend, DeiT-S dims, batch {rows}):\n");
+    let registry = BackendRegistry::with_defaults();
+    let cfg = BackendConfig { workers: 4, ..BackendConfig::default() };
+    let module = cfg.resolve_module()?;
+    let reqs: Vec<AttnRequest> = (0..rows as u64)
+        .map(|i| Ok(AttnRequest::new(module.random_input(tokens, 100 + i)?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    // --- arm A: per-row dispatch. Every request re-creates the backend
+    // from config and re-plans — re-deriving the module (fold) and the
+    // module→sim lowering per request, exactly what AttnBatchExecutor's
+    // old per-row loop amortized nothing of.
+    let t0 = Instant::now();
+    let mut per_row_outs = Vec::with_capacity(rows);
+    for req in &reqs {
+        let backend = registry.create("sim", &cfg)?;
+        let mut plan = backend.plan(&PlanOptions::default())?;
+        per_row_outs.push(plan.run_one(req)?);
+    }
+    let per_row_wall = t0.elapsed().as_secs_f64();
+
+    // --- arm B: plan once, run the batch through it.
+    let backend = {
+        let mut c = cfg.clone();
+        c.module = Some(module.clone());
+        registry.create("sim", &c)?
+    };
+    let t0 = Instant::now();
+    let mut plan = backend.plan(&PlanOptions::default())?;
+    let batched = plan.run_batch(&AttnBatchRequest::new(reqs.clone()))?;
+    let batched_wall = t0.elapsed().as_secs_f64();
+
+    // --- arm C: the sharded sim-mt plan, 4 workers.
+    let backend_mt = {
+        let mut c = cfg.clone();
+        c.module = Some(module.clone());
+        registry.create("sim-mt", &c)?
+    };
+    let t0 = Instant::now();
+    let mut plan_mt = backend_mt.plan(&PlanOptions { workers: 4, ..PlanOptions::default() })?;
+    let sharded = plan_mt.run_batch(&AttnBatchRequest::new(reqs))?;
+    let sharded_wall = t0.elapsed().as_secs_f64();
+
+    // all three arms must agree bit-for-bit, row by row
+    for (i, (a, b)) in per_row_outs.iter().zip(&batched.items).enumerate() {
+        anyhow::ensure!(
+            a.out_codes.as_ref().unwrap().codes.data == b.out_codes.as_ref().unwrap().codes.data,
+            "row {i}: per-row vs batched output codes differ"
+        );
+    }
+    for (i, (a, c)) in batched.items.iter().zip(&sharded.items).enumerate() {
+        anyhow::ensure!(
+            a.out_codes.as_ref().unwrap().codes.data == c.out_codes.as_ref().unwrap().codes.data,
+            "row {i}: batched sim vs sim-mt output codes differ"
+        );
+    }
+
+    let mut tbl = TableWriter::new(&["dispatch", "rows", "wall ms", "rows/s"]);
+    for (name, wall) in [
+        ("per-row (plan per request)", per_row_wall),
+        ("batched plan (sim)", batched_wall),
+        ("batched plan (sim-mt x4)", sharded_wall),
+    ] {
+        tbl.row(vec![
+            name.to_string(),
+            rows.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", rows as f64 / wall),
+        ]);
+    }
+    print!("{}", tbl.render());
+    let batch_ratio = per_row_wall / batched_wall;
+    let mt_ratio = batched_wall / sharded_wall;
+    println!("\nbatched sim vs per-row dispatch : {batch_ratio:.2}x rows/sec (target >= 1.5x)");
+    println!("sim-mt (4 workers) vs sim       : {mt_ratio:.2}x rows/sec (target > 1x)");
+    if smoke() {
+        println!("smoke profile: outputs verified bit-identical across all dispatch arms ✓\n");
+        return Ok(());
+    }
+    anyhow::ensure!(
+        batch_ratio >= 1.5,
+        "REGRESSION: batched sim is only {batch_ratio:.2}x per-row dispatch (target >= 1.5x)"
+    );
+    anyhow::ensure!(
+        mt_ratio > 1.0,
+        "REGRESSION: sim-mt (4 workers) is {mt_ratio:.2}x single-threaded sim (target > 1x)"
+    );
+    println!();
+    Ok(())
+}
+
 /// Attention serving through the backend registry — runs standalone, so
 /// the bench produces numbers even before `make artifacts`.
 fn backend_attention_throughput() -> anyhow::Result<()> {
-    println!("attention serving through the backend registry (no artifacts needed):\n");
+    println!("attention serving through planned backends (no artifacts needed):\n");
     let mut tbl =
         TableWriter::new(&["backend", "tokens", "batch", "req/s", "p50 ms", "p99 ms", "mean batch"]);
     let registry = BackendRegistry::with_defaults();
-    let n_requests: usize =
-        std::env::var("IVIT_BENCH_ATTN_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
-    for name in ["ref", "sim"] {
-        let mut cfg = BackendConfig { d_in: 96, d_head: 32, ..BackendConfig::default() };
+    let n_requests: usize = if smoke() {
+        8
+    } else {
+        std::env::var("IVIT_BENCH_ATTN_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(32)
+    };
+    for name in ["ref", "sim", "sim-mt"] {
+        let mut cfg =
+            BackendConfig { d_in: 96, d_head: 32, workers: 4, ..BackendConfig::default() };
         let module = cfg.resolve_module()?;
         cfg.module = Some(module.clone()); // backend sees the same module
-        let (tokens, batch) = (64usize, 4usize);
+        let (tokens, batch) = if smoke() { (16usize, 2usize) } else { (64usize, 4usize) };
         let backend = registry.create(name, &cfg)?;
-        let exec = AttnBatchExecutor::new(backend, &module, tokens, batch);
+        let exec =
+            AttnBatchExecutor::new(&*backend, &module, tokens, batch, &PlanOptions::default())?;
         let elems = BatchExecutor::image_elems(&exec);
         let coord = Coordinator::start(
             exec,
@@ -70,7 +189,12 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    batch_vs_per_row()?;
     backend_attention_throughput()?;
+    if smoke() {
+        println!("bench smoke: one tiny batch per backend completed OK");
+        return Ok(());
+    }
     let Some(dir) = artifacts() else {
         println!("SKIP image-serving section: no artifacts directory (run `make artifacts`)");
         return Ok(());

@@ -1,15 +1,16 @@
-//! The unified execution API in one page: build the DeiT-S-shaped
-//! attention module, run the *same* `AttnRequest` through every
-//! registered backend, verify the integer substrates agree bit-for-bit,
-//! and print what each backend uniquely surfaces (the simulator's
-//! Table I hardware report).
+//! The plan/execute API in one page: build the DeiT-S-shaped attention
+//! module, **plan** every registered backend once (scale folding,
+//! module→sim lowering, worker-pool spawn), run the *same* batch of
+//! requests through each plan, verify the integer substrates agree
+//! bit-for-bit row by row, and print what each backend uniquely
+//! surfaces (the simulators' merged Table I hardware report).
 //!
 //! ```sh
 //! cargo run --release --example backends
 //! ```
 
 use anyhow::Result;
-use ivit::backend::{AttnRequest, BackendConfig, BackendRegistry};
+use ivit::backend::{AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
 use ivit::sim::EnergyModel;
 
 fn main() -> Result<()> {
@@ -18,14 +19,19 @@ fn main() -> Result<()> {
 
     let mut cfg = BackendConfig {
         artifacts: std::env::args().nth(1).map(Into::into),
+        workers: 4,
         ..BackendConfig::default()
     };
     let module = cfg.resolve_module()?;
     cfg.module = Some(module.clone()); // every backend sees the same module
-    let tokens = 198;
-    let req = AttnRequest::new(module.random_input(tokens, 7)?);
+    let (tokens, rows) = (198usize, 4u64);
+    let batch = AttnBatchRequest::new(
+        (0..rows)
+            .map(|i| Ok(AttnRequest::new(module.random_input(tokens, 7 + i)?)))
+            .collect::<Result<Vec<_>>>()?,
+    );
     println!(
-        "module: D_in={} D_out={} heads={} {}-bit — request: {tokens}×{} codes\n",
+        "module: D_in={} D_out={} heads={} {}-bit — batch: {rows} × ({tokens}×{} codes)\n",
         module.d_in(),
         module.d_out(),
         module.heads,
@@ -34,8 +40,8 @@ fn main() -> Result<()> {
     );
 
     let mut outputs = Vec::new();
-    for name in ["ref", "sim", "pjrt"] {
-        let mut backend = match registry.create(name, &cfg) {
+    for name in ["ref", "sim", "sim-mt", "pjrt"] {
+        let backend = match registry.create(name, &cfg) {
             Ok(b) => b,
             Err(e) => {
                 println!("[{name}] unavailable: {e:#}\n");
@@ -43,42 +49,56 @@ fn main() -> Result<()> {
             }
         };
         let caps = backend.capabilities();
-        println!("[{name}] {}", backend.describe());
         println!(
             "[{name}] capabilities: bit_exact_codes={} hardware_stats={} needs_artifacts={}",
             caps.bit_exact_codes, caps.hardware_stats, caps.needs_artifacts
         );
-        let resp = backend.run_attention(&req)?;
-        println!("[{name}] ran in {:.2} ms", resp.elapsed.as_secs_f64() * 1e3);
-        if let Some(out) = &resp.out_codes {
+        // phase 1: plan — all one-time setup happens here
+        let mut plan = match backend.plan(&PlanOptions::default()) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("[{name}] planning failed: {e:#}\n");
+                continue;
+            }
+        };
+        println!("[{name}] plan: {}", plan.describe());
+        // phase 2: execute the whole batch with no per-row setup
+        let resp = plan.run_batch(&batch)?;
+        println!(
+            "[{name}] ran {} rows in {:.2} ms ({:.1} rows/s)",
+            resp.items.len(),
+            resp.elapsed.as_secs_f64() * 1e3,
+            resp.items.len() as f64 / resp.elapsed.as_secs_f64(),
+        );
+        if let Some(out) = resp.items.first().and_then(|i| i.out_codes.as_ref()) {
             println!(
-                "[{name}] output: {}×{} codes at step {:.4}",
+                "[{name}] row output: {}×{} codes at step {:.4} (+ {} fp values with W_O)",
                 out.rows(),
                 out.cols(),
-                out.spec.step.get()
+                out.spec.step.get(),
+                resp.items[0].out_values.as_ref().map(Vec::len).unwrap_or(0),
             );
-            outputs.push((name, out.codes.data.clone()));
-        }
-        if let Some(vals) = &resp.out_values {
-            println!("[{name}] output: {} fp values (artifact dequantizes at its boundary)", vals.len());
+            let codes: Vec<Vec<i32>> =
+                resp.items.iter().map(|i| i.out_codes.as_ref().unwrap().codes.data.clone()).collect();
+            outputs.push((name, codes));
         }
         if let Some(report) = &resp.report {
             let m = EnergyModel::default();
             println!(
-                "[{name}] hardware: {} PEs, {:.2}M MACs, {:.2} W modelled",
-                report.total_pes(),
+                "[{name}] batch hardware: {:.2}M MACs total, {:.2} W modelled, {} blocks",
                 report.total_macs() as f64 / 1e6,
-                report.total_power_w(&m)
+                report.total_power_w(&m),
+                report.blocks.len(),
             );
         }
         println!();
     }
 
-    // the paper's claim, checked across whatever integer backends ran
+    // the paper's claim, checked per batch row across the integer backends
     for pair in outputs.windows(2) {
         let ((a_name, a), (b_name, b)) = (&pair[0], &pair[1]);
-        assert_eq!(a, b, "{a_name} and {b_name} must be bit-identical");
-        println!("{a_name} ≡ {b_name}: bit-identical output codes ✓");
+        assert_eq!(a, b, "{a_name} and {b_name} must be bit-identical on every row");
+        println!("{a_name} ≡ {b_name}: bit-identical output codes on all rows ✓");
     }
     Ok(())
 }

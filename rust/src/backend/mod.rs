@@ -1,22 +1,48 @@
-//! The unified execution API: one [`Backend`] trait over the three
-//! substrates that can run the paper's integerized attention —
+//! The unified execution API: one [`Backend`] trait over every
+//! substrate that can run the paper's integerized attention —
 //!
 //! * [`ReferenceBackend`] — the bit-accurate [`crate::quant`] golden
 //!   reference (scalar loops, no hardware model);
 //! * [`SimBackend`] — the cycle-accounted systolic-array simulator
 //!   ([`crate::sim`]), surfacing per-block [`BlockStats`] and energy;
+//! * [`SimMtBackend`] — the same systolic model sharded across a fixed
+//!   worker-thread pool (`sim-mt`): heads (and batch rows above a
+//!   threshold) execute concurrently, with shard stats merged exactly;
 //! * [`PjrtBackend`] — the AOT-compiled Pallas attention artifact
 //!   executed through the PJRT runtime ([`crate::runtime`]).
 //!
-//! All three consume the same [`AttnRequest`] and produce the same
+//! All backends consume the same [`AttnRequest`] and produce the same
 //! [`AttnResponse`]; the paper's central claim — one computation graph,
 //! bit-identical results on every substrate — becomes a trait-level
 //! contract that `rust/tests/backend_parity.rs` enforces at DeiT-S
 //! dimensions. Backends are looked up by name in a
-//! [`BackendRegistry`] (`ref` | `sim` | `pjrt`), which is what
-//! `ivit --backend`, the coordinator's [`crate::coordinator::AttnBatchExecutor`]
-//! and the benches dispatch through; future substrates (threaded sim
-//! shards, remote workers, GPU) plug into the same seam.
+//! [`BackendRegistry`] (`ref` | `sim` | `sim-mt` | `pjrt`), which is
+//! what `ivit --backend`, the coordinator's
+//! [`crate::coordinator::AttnBatchExecutor`] and the benches dispatch
+//! through; future substrates (remote workers, GPU) plug into the same
+//! seam.
+//!
+//! ## The plan/execute lifecycle
+//!
+//! Execution is two-phase. **Planning** performs every piece of
+//! per-module, per-deployment setup exactly once:
+//! [`Backend::plan`]`(&PlanOptions) -> Box<dyn ExecutionPlan>` folds the
+//! scale chains, lowers the module to its substrate (`to_sim` for the
+//! simulators, engine/artifact binding for PJRT), sizes output buffers
+//! and — for sharded plans — spawns the fixed worker pool. **Executing**
+//! is then per-batch only: [`ExecutionPlan::run_batch`] takes an
+//! [`AttnBatchRequest`] of N rows and returns an [`AttnBatchResponse`]
+//! with one [`AttnResponse`] per row plus the merged hardware report,
+//! touching no setup state. Single-request `run_attention` remains on
+//! the trait as a default adapter that plans and runs a batch of one, so
+//! callers that amortize nothing still work — but the serving stack
+//! ([`crate::coordinator::AttnBatchExecutor`], the CLI, the benches)
+//! plans once and dispatches batches.
+//!
+//! A new backend therefore registers **two** things through one
+//! [`BackendRegistry::register`] factory: the `Backend` (capabilities +
+//! description + planning) and its `ExecutionPlan` (the batch executor).
+//! See [`SimMtBackend`] for the canonical sharded example.
 //!
 //! ## The typed-operand contract (`QTensor` / `ScaleChain`)
 //!
@@ -45,10 +71,11 @@ pub mod pjrt;
 pub mod reference;
 pub mod registry;
 pub mod sim;
+pub mod sim_mt;
 
 use std::time::Duration;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::model::AttnCase;
 use crate::quant::fold::{FoldedLinear, QuantParams};
@@ -64,6 +91,7 @@ pub use pjrt::PjrtBackend;
 pub use reference::ReferenceBackend;
 pub use registry::{BackendConfig, BackendRegistry};
 pub use sim::SimBackend;
+pub use sim_mt::SimMtBackend;
 
 /// What a backend can produce / requires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -117,6 +145,85 @@ pub struct AttnResponse {
     pub elapsed: Duration,
 }
 
+/// One-time execution-setup knobs consumed by [`Backend::plan`].
+#[derive(Debug, Clone)]
+pub struct PlanOptions {
+    /// Worker threads for sharded plans (`sim-mt`). `0` = the backend's
+    /// own default (its configured count, else available parallelism).
+    pub workers: usize,
+    /// Batch size at or above which sharded plans also split the
+    /// per-row front stage across workers (heads always shard).
+    pub row_shard_threshold: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { workers: 0, row_shard_threshold: 2 }
+    }
+}
+
+/// A batch of attention inferences over one planned module.
+#[derive(Debug, Clone, Default)]
+pub struct AttnBatchRequest {
+    pub items: Vec<AttnRequest>,
+}
+
+impl AttnBatchRequest {
+    pub fn new(items: Vec<AttnRequest>) -> AttnBatchRequest {
+        AttnBatchRequest { items }
+    }
+
+    pub fn single(req: AttnRequest) -> AttnBatchRequest {
+        AttnBatchRequest { items: vec![req] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// What a plan produced for a batch: one [`AttnResponse`] per request
+/// row (same order), plus the batch-merged hardware report for plans
+/// whose substrate surfaces stats (shard counters add exactly, so
+/// `report.total_macs()` equals the sum over rows/shards).
+#[derive(Debug)]
+pub struct AttnBatchResponse {
+    pub items: Vec<AttnResponse>,
+    /// Merged per-block stats over every row and shard of the batch.
+    pub report: Option<AttentionReport>,
+    /// Wall-clock time of the whole batch. Per-item `elapsed` fields of
+    /// concurrent plans are this wall time amortized over the rows.
+    pub elapsed: Duration,
+}
+
+/// The per-batch execution half of the plan/execute API.
+///
+/// A plan owns everything `run_batch` needs — folded scales, lowered
+/// simulators, bound PJRT executables, worker pools — so executing a
+/// batch performs no per-request setup. Plans are `Send` (the
+/// coordinator moves them onto its worker thread) but single-owner:
+/// `run_batch` takes `&mut self`.
+pub trait ExecutionPlan: Send {
+    /// Registry name of the backend that planned this, e.g. `"sim-mt"`.
+    fn backend_name(&self) -> &str;
+
+    /// One-line human description (dims, substrate, shard layout).
+    fn describe(&self) -> String;
+
+    /// Execute N rows with no per-row setup work.
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse>;
+
+    /// Adapter: run a single request as a batch of one.
+    fn run_one(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
+        let mut resp = self.run_batch(&AttnBatchRequest::single(req.clone()))?;
+        resp.items.pop().ok_or_else(|| anyhow!("{}: empty batch response", self.backend_name()))
+    }
+}
+
 /// The uniform execution interface over all substrates.
 ///
 /// `Send` is required so a backend can be moved onto a coordinator
@@ -132,8 +239,19 @@ pub trait Backend: Send {
     /// One-line human description (dims, substrate, artifact source).
     fn describe(&self) -> String;
 
-    /// Execute one attention inference.
-    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse>;
+    /// Perform all one-time setup (scale folding, substrate lowering,
+    /// artifact/engine binding, buffer sizing, worker-pool spawn) and
+    /// return the batch executor.
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>>;
+
+    /// Execute one attention inference. Default adapter: plan, then run
+    /// a batch of one. The built-in backends override this with a
+    /// resident-plan path so repeated single requests stay amortized
+    /// (the adapter re-plans per call, which is correct but pays the
+    /// one-time setup every time).
+    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
+        self.plan(&PlanOptions::default())?.run_one(req)
+    }
 }
 
 /// The integerized attention-module parameters every backend consumes:
@@ -143,6 +261,11 @@ pub struct AttnModule {
     pub wq: FoldedLinear,
     pub wk: FoldedLinear,
     pub wv: FoldedLinear,
+    /// The attention output projection W_O, folded with Δ̄_X = Δ_O.
+    /// When present, integer backends emit the full fp attention output
+    /// (`out_values`) the pjrt artifact emits, alongside the PV codes.
+    /// `None` for paper-geometry modules (Table I stops at PV).
+    pub wo: Option<FoldedLinear>,
     pub lnq_gamma: Vec<f32>,
     pub lnq_beta: Vec<f32>,
     pub lnk_gamma: Vec<f32>,
@@ -179,6 +302,7 @@ impl AttnModule {
             wq: LinearArraySim::new("Q linear", self.wq.clone(), self.bits),
             wk: LinearArraySim::new("K linear", self.wk.clone(), self.bits),
             wv: LinearArraySim::new("V linear", self.wv.clone(), self.bits),
+            wo: self.wo.as_ref().map(|f| LinearArraySim::new("O linear", f.clone(), self.bits)),
             lnq: LayerNormSim::new(
                 "Q LayerNorm",
                 self.lnq_gamma.clone(),
@@ -213,6 +337,7 @@ impl AttnModule {
             wq: fold(&case.wq),
             wk: fold(&case.wk),
             wv: fold(&case.wv),
+            wo: Some(fold(&case.wo)),
             lnq_gamma: case.lnq_g.clone(),
             lnq_beta: case.lnq_b.clone(),
             lnk_gamma: case.lnk_g.clone(),
@@ -252,6 +377,8 @@ impl AttnModule {
             wq,
             wk,
             wv,
+            // Table I geometry stops at the PV matmul — no W_O row.
+            wo: None,
             lnq_gamma: vec![1.0; d_head],
             lnq_beta: vec![0.0; d_head],
             lnk_gamma: vec![1.0; d_head],
@@ -289,10 +416,20 @@ impl AttnModule {
         let beta: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.2).collect();
         let s_q = Step::new(0.5)?;
         let s_k = Step::new(0.5)?;
+        let s_o = 0.1f32;
+        // W_O: D→D projection folded with Δ̄_X = Δ_O (its operands are
+        // the PV output codes).
+        let wo = {
+            let w: Vec<f32> = rng.normal_vec(d_out * d_out).iter().map(|v| v * 0.15).collect();
+            let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
+            let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
+            FoldedLinear::fold(&w, d_out, d_out, &bias, &QuantParams { bits, step_x: s_o, step_w })?
+        };
         Ok(AttnModule {
             wq,
             wk,
             wv,
+            wo: Some(wo),
             lnq_gamma: gamma.clone(),
             lnq_beta: beta.clone(),
             lnk_gamma: gamma,
@@ -302,7 +439,7 @@ impl AttnModule {
                 s_k,
                 s_v: Step::new(0.1)?,
                 s_attn: Step::new(1.0 / ((1u32 << bits) - 1) as f32)?,
-                s_o: Step::new(0.1)?,
+                s_o: Step::new(s_o)?,
                 score: ScaleChain::scores(s_q, s_k, d_out / heads),
             },
             s_x: Step::new(step_x)?,

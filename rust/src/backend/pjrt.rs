@@ -15,13 +15,17 @@ use crate::runtime::Engine;
 use crate::util::tensorio::{Data, Tensor};
 use crate::util::Json;
 
-use super::{AttnRequest, AttnResponse, Backend, Capabilities, QuantSpec, Step};
+use super::{
+    AttnBatchRequest, AttnBatchResponse, AttnRequest, AttnResponse, Backend, Capabilities,
+    ExecutionPlan, PlanOptions, QuantSpec, Step,
+};
 
 /// The PJRT-executed Pallas-attention path.
 pub struct PjrtBackend {
     engine: Engine,
     exe_name: String,
     artifacts: PathBuf,
+    bits: u32,
     /// Input shape the artifact was lowered with ([tokens, dim]).
     input_shape: Vec<usize>,
     /// The quantizer spec the artifact's input codes were produced with
@@ -54,9 +58,38 @@ impl PjrtBackend {
             engine,
             exe_name,
             artifacts: artifacts.to_path_buf(),
+            bits,
             input_shape,
             expected_spec,
         })
+    }
+}
+
+/// The PJRT execution plan: a freshly bound engine + compiled
+/// executable, owned by the plan so batches run with no per-request
+/// artifact work. The artifact's lowered shape is per-request static,
+/// so a batch executes as N device calls over the one bound executable.
+pub struct PjrtPlan {
+    inner: PjrtBackend,
+}
+
+impl ExecutionPlan for PjrtPlan {
+    fn backend_name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn describe(&self) -> String {
+        self.inner.describe()
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| self.inner.run_attention(r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
     }
 }
 
@@ -95,6 +128,20 @@ impl Backend for PjrtBackend {
         )
     }
 
+    /// Plan-time work for PJRT is the artifact/engine binding: load and
+    /// compile a fresh executable that the plan owns outright. The
+    /// backend's engine is deliberately NOT shared into the plan: the
+    /// PJRT handles are raw pointers with a single-thread contract (see
+    /// the `unsafe impl Send` below), and a plan is routinely moved onto
+    /// a coordinator worker thread while the backend stays behind —
+    /// exclusive ownership is what keeps both sides sound, at the cost
+    /// of one extra artifact load per plan.
+    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        Ok(Box::new(PjrtPlan { inner: PjrtBackend::load(&self.artifacts, self.bits)? }))
+    }
+
+    /// Direct single-request path — overrides the default plan-per-call
+    /// adapter because planning compiles an engine.
     fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
         let t0 = Instant::now();
         let (tokens, dim) = (self.input_shape[0], self.input_shape[1]);

@@ -3,6 +3,9 @@
 //! (`int_matmul`, `qlayernorm_comparator`, `qk_attention`) with scalar
 //! epilogue loops. No hardware model, no cycle accounting — this is the
 //! answer every other substrate must reproduce bit-for-bit.
+//!
+//! Planning ([`RefPlan`]) snapshots the folded module once; each batch
+//! row then runs the same composition with no per-request setup.
 
 use std::time::Instant;
 
@@ -14,7 +17,10 @@ use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
 use crate::quant::round_half_even;
 use crate::quant::softmax::qk_attention;
 
-use super::{AttnModule, AttnRequest, AttnResponse, Backend, Capabilities, StageCodes};
+use super::{
+    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, AttnResponse, Backend,
+    Capabilities, ExecutionPlan, PlanOptions, StageCodes,
+};
 
 /// The quant-composition reference execution path.
 #[derive(Debug)]
@@ -30,50 +36,194 @@ impl ReferenceBackend {
     pub fn module(&self) -> &AttnModule {
         &self.module
     }
+}
 
-    fn check_input(&self, x: &QTensor) -> Result<()> {
-        let want = self.module.input_spec();
-        ensure!(x.cols() == self.module.d_in(), "input D {} != module {}", x.cols(), self.module.d_in());
-        ensure!(
-            x.spec.signed == want.signed && x.spec.bits == want.bits,
-            "input spec {:?} does not match the module's {:?}",
-            x.spec,
-            want
-        );
-        let (got, exp) = (x.spec.step.get(), want.step.get());
-        ensure!(
-            (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
-            "input step {got} does not match the module Δ̄_X {exp}"
-        );
-        Ok(())
+fn check_input(module: &AttnModule, x: &QTensor) -> Result<()> {
+    let want = module.input_spec();
+    ensure!(x.cols() == module.d_in(), "input D {} != module {}", x.cols(), module.d_in());
+    ensure!(
+        x.spec.signed == want.signed && x.spec.bits == want.bits,
+        "input spec {:?} does not match the module's {:?}",
+        x.spec,
+        want
+    );
+    let (got, exp) = (x.spec.step.get(), want.step.get());
+    ensure!(
+        (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
+        "input step {got} does not match the module Δ̄_X {exp}"
+    );
+    Ok(())
+}
+
+/// `(acc + b̃_j) · scale_j` over an integer matmul — the Eq. 2 linear.
+/// Loop shape (j outer, i inner) matches the simulator's post-scale
+/// epilogue so fp results stay bit-identical across substrates.
+fn linear_fp(
+    x: &IntMat,
+    folded: &crate::quant::fold::FoldedLinear,
+    weight_scale_only: bool,
+) -> Result<Vec<f32>> {
+    let acc = int_matmul(x, &folded.codes)?;
+    let n = folded.codes.rows;
+    let mut out = vec![0f32; acc.rows * n];
+    for j in 0..n {
+        let scale = if weight_scale_only { folded.w_scale[j] } else { folded.out_scale[j] };
+        for i in 0..acc.rows {
+            out[i * n + j] = (acc.at(i, j) as f32 + folded.bias_folded[j]) * scale;
+        }
     }
+    Ok(out)
+}
 
-    /// `(acc + b̃_j) · scale_j` over an integer matmul — the Eq. 2 linear.
-    fn linear_fp(
-        x: &IntMat,
-        folded: &crate::quant::fold::FoldedLinear,
-        weight_scale_only: bool,
-    ) -> Result<Vec<f32>> {
-        let acc = int_matmul(x, &folded.codes)?;
-        let n = folded.codes.rows;
-        let mut out = vec![0f32; acc.rows * n];
-        for j in 0..n {
-            let scale = if weight_scale_only { folded.w_scale[j] } else { folded.out_scale[j] };
-            for i in 0..acc.rows {
-                out[i * n + j] = (acc.at(i, j) as f32 + folded.bias_folded[j]) * scale;
+fn transpose(m: &IntMat) -> IntMat {
+    let mut data = vec![0i32; m.rows * m.cols];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            data[c * m.rows + r] = m.at(r, c);
+        }
+    }
+    IntMat::new(m.cols, m.rows, data)
+}
+
+/// One attention inference through the quant composition. Shared by the
+/// single-request adapter and [`RefPlan::run_batch`], so batch ≡ loop
+/// bit-for-bit by construction.
+fn run_row(module: &AttnModule, req: &AttnRequest) -> Result<AttnResponse> {
+    let t0 = Instant::now();
+    check_input(module, &req.x)?;
+    let m = module;
+    let (n, d) = (req.x.rows(), m.d_out());
+    let dh = d / m.heads;
+    let steps = &m.steps;
+
+    // Q/K linears post-scaled by diag(Δ_W) only; V through its quantizer.
+    let q_pre = linear_fp(&req.x.codes, &m.wq, true)?;
+    let k_pre = linear_fp(&req.x.codes, &m.wk, true)?;
+    let v_acc = int_matmul(&req.x.codes, &m.wv.codes)?;
+    let v_spec = QuantSpec::signed(m.bits, steps.s_v);
+    let (v_min, v_max) = v_spec.range();
+    let mut v_data = vec![0i32; n * d];
+    for j in 0..d {
+        // scales absorbed into the quantizer threshold (§IV-B)
+        let eff = m.wv.out_scale[j] / steps.s_v.get();
+        for i in 0..n {
+            let v = (v_acc.at(i, j) as f32 + m.wv.bias_folded[j]) * eff;
+            v_data[i * d + j] = (round_half_even(v) as i32).clamp(v_min, v_max);
+        }
+    }
+    let v_codes = QTensor::new(IntMat::new(n, d, v_data), v_spec)?;
+
+    // Quantizing LayerNorms (the Fig. 5 comparator identity).
+    let ln = |x: &[f32], gamma: &[f32], beta: &[f32], step: f32| -> Vec<i32> {
+        let mut out = vec![0i32; n * d];
+        for r in 0..n {
+            let c = qlayernorm_comparator(&x[r * d..(r + 1) * d], gamma, beta, step, m.bits, 1e-6);
+            out[r * d..(r + 1) * d].copy_from_slice(&c);
+        }
+        out
+    };
+    let q_codes = QTensor::new(
+        IntMat::new(n, d, ln(&q_pre, &m.lnq_gamma, &m.lnq_beta, steps.s_q.get())),
+        QuantSpec::signed(m.bits, steps.s_q),
+    )?;
+    let k_codes = QTensor::new(
+        IntMat::new(n, d, ln(&k_pre, &m.lnk_gamma, &m.lnk_beta, steps.s_k.get())),
+        QuantSpec::signed(m.bits, steps.s_k),
+    )?;
+
+    // Per-head QKᵀ→softmax→quantize and attn·V requantization.
+    let attn_spec = QuantSpec::unsigned(m.attn_bits, steps.s_attn);
+    let out_spec = QuantSpec::signed(m.bits, steps.s_o);
+    let (o_min, o_max) = out_spec.range();
+    let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
+    let mut pv = vec![0i32; n * d];
+    let mut attn_head0 = None;
+    for h in 0..m.heads {
+        let qh = q_codes.slice_cols(h * dh, dh);
+        let kh = k_codes.slice_cols(h * dh, dh);
+        let vh = v_codes.slice_cols(h * dh, dh);
+        let (attn, _scores) = qk_attention(
+            &qh.codes,
+            &kh.codes,
+            steps.score.eff(),
+            steps.s_attn.get(),
+            m.attn_bits,
+            m.shift,
+        )?;
+        let acc = int_matmul(&attn, &transpose(&vh.codes))?;
+        for i in 0..n {
+            for j in 0..dh {
+                pv[i * d + h * dh + j] =
+                    (round_half_even(acc.at(i, j) as f32 * eff_pv) as i32).clamp(o_min, o_max);
             }
         }
-        Ok(out)
+        if h == 0 {
+            attn_head0 = Some(QTensor::new(attn, attn_spec)?);
+        }
+    }
+    let pv_mat = IntMat::new(n, d, pv);
+
+    // W_O tail: full fp attention output (matches the pjrt artifact's
+    // output boundary), Eq. 2 with Δ̄_X = Δ_O.
+    let out_values = m.wo.as_ref().map(|wo| linear_fp(&pv_mat, wo, false)).transpose()?;
+
+    Ok(AttnResponse {
+        out_codes: Some(QTensor::new(pv_mat, out_spec)?),
+        out_values,
+        stages: Some(StageCodes {
+            q: q_codes,
+            k: k_codes,
+            v: v_codes,
+            attn_head0: attn_head0.expect("at least one head"),
+        }),
+        report: None,
+        elapsed: t0.elapsed(),
+    })
+}
+
+fn describe_module(m: &AttnModule) -> String {
+    format!(
+        "quant golden reference: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {}{})",
+        m.d_in(),
+        m.d_out(),
+        m.heads,
+        m.bits,
+        m.attn_bits,
+        if m.shift { "shift-exp" } else { "exact-exp" },
+        if m.wo.is_some() { ", W_O wired" } else { "" },
+    )
+}
+
+/// The reference backend's execution plan: the folded module, snapshot
+/// at plan time. Rows of a batch share it with no per-row rebinding.
+#[derive(Debug)]
+pub struct RefPlan {
+    module: AttnModule,
+}
+
+impl RefPlan {
+    pub fn new(module: AttnModule) -> RefPlan {
+        RefPlan { module }
+    }
+}
+
+impl ExecutionPlan for RefPlan {
+    fn backend_name(&self) -> &str {
+        "ref"
     }
 
-    fn transpose(m: &IntMat) -> IntMat {
-        let mut data = vec![0i32; m.rows * m.cols];
-        for r in 0..m.rows {
-            for c in 0..m.cols {
-                data[c * m.rows + r] = m.at(r, c);
-            }
-        }
-        IntMat::new(m.cols, m.rows, data)
+    fn describe(&self) -> String {
+        describe_module(&self.module)
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| run_row(&self.module, r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
     }
 }
 
@@ -87,104 +237,18 @@ impl Backend for ReferenceBackend {
     }
 
     fn describe(&self) -> String {
-        let m = &self.module;
-        format!(
-            "quant golden reference: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {})",
-            m.d_in(),
-            m.d_out(),
-            m.heads,
-            m.bits,
-            m.attn_bits,
-            if m.shift { "shift-exp" } else { "exact-exp" },
-        )
+        describe_module(&self.module)
     }
 
+    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        Ok(Box::new(RefPlan::new(self.module.clone())))
+    }
+
+    /// Direct batch-of-one over the backend's own module — identical to
+    /// `RefPlan::run_batch` row execution, without the per-call module
+    /// snapshot the default adapter would take.
     fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
-        let t0 = Instant::now();
-        self.check_input(&req.x)?;
-        let m = &self.module;
-        let (n, d) = (req.x.rows(), m.d_out());
-        let dh = d / m.heads;
-        let steps = &m.steps;
-
-        // Q/K linears post-scaled by diag(Δ_W) only; V through its quantizer.
-        let q_pre = Self::linear_fp(&req.x.codes, &m.wq, true)?;
-        let k_pre = Self::linear_fp(&req.x.codes, &m.wk, true)?;
-        let v_acc = int_matmul(&req.x.codes, &m.wv.codes)?;
-        let v_spec = QuantSpec::signed(m.bits, steps.s_v);
-        let (v_min, v_max) = v_spec.range();
-        let mut v_data = vec![0i32; n * d];
-        for j in 0..d {
-            // scales absorbed into the quantizer threshold (§IV-B)
-            let eff = m.wv.out_scale[j] / steps.s_v.get();
-            for i in 0..n {
-                let v = (v_acc.at(i, j) as f32 + m.wv.bias_folded[j]) * eff;
-                v_data[i * d + j] = (round_half_even(v) as i32).clamp(v_min, v_max);
-            }
-        }
-        let v_codes = QTensor::new(IntMat::new(n, d, v_data), v_spec)?;
-
-        // Quantizing LayerNorms (the Fig. 5 comparator identity).
-        let ln = |x: &[f32], gamma: &[f32], beta: &[f32], step: f32| -> Vec<i32> {
-            let mut out = vec![0i32; n * d];
-            for r in 0..n {
-                let c = qlayernorm_comparator(&x[r * d..(r + 1) * d], gamma, beta, step, m.bits, 1e-6);
-                out[r * d..(r + 1) * d].copy_from_slice(&c);
-            }
-            out
-        };
-        let q_codes = QTensor::new(
-            IntMat::new(n, d, ln(&q_pre, &m.lnq_gamma, &m.lnq_beta, steps.s_q.get())),
-            QuantSpec::signed(m.bits, steps.s_q),
-        )?;
-        let k_codes = QTensor::new(
-            IntMat::new(n, d, ln(&k_pre, &m.lnk_gamma, &m.lnk_beta, steps.s_k.get())),
-            QuantSpec::signed(m.bits, steps.s_k),
-        )?;
-
-        // Per-head QKᵀ→softmax→quantize and attn·V requantization.
-        let attn_spec = QuantSpec::unsigned(m.attn_bits, steps.s_attn);
-        let out_spec = QuantSpec::signed(m.bits, steps.s_o);
-        let (o_min, o_max) = out_spec.range();
-        let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
-        let mut pv = vec![0i32; n * d];
-        let mut attn_head0 = None;
-        for h in 0..m.heads {
-            let qh = q_codes.slice_cols(h * dh, dh);
-            let kh = k_codes.slice_cols(h * dh, dh);
-            let vh = v_codes.slice_cols(h * dh, dh);
-            let (attn, _scores) = qk_attention(
-                &qh.codes,
-                &kh.codes,
-                steps.score.eff(),
-                steps.s_attn.get(),
-                m.attn_bits,
-                m.shift,
-            )?;
-            let acc = int_matmul(&attn, &Self::transpose(&vh.codes))?;
-            for i in 0..n {
-                for j in 0..dh {
-                    pv[i * d + h * dh + j] =
-                        (round_half_even(acc.at(i, j) as f32 * eff_pv) as i32).clamp(o_min, o_max);
-                }
-            }
-            if h == 0 {
-                attn_head0 = Some(QTensor::new(attn, attn_spec)?);
-            }
-        }
-
-        Ok(AttnResponse {
-            out_codes: Some(QTensor::new(IntMat::new(n, d, pv), out_spec)?),
-            out_values: None,
-            stages: Some(StageCodes {
-                q: q_codes,
-                k: k_codes,
-                v: v_codes,
-                attn_head0: attn_head0.expect("at least one head"),
-            }),
-            report: None,
-            elapsed: t0.elapsed(),
-        })
+        run_row(&self.module, req)
     }
 }
 
@@ -200,6 +264,8 @@ mod tests {
         let resp = b.run_attention(&AttnRequest::new(x)).unwrap();
         let out = resp.out_codes.unwrap();
         assert_eq!((out.rows(), out.cols()), (6, 8));
+        // W_O wired: the full fp output is emitted alongside the codes
+        assert_eq!(resp.out_values.unwrap().len(), 6 * 8);
         let stages = resp.stages.unwrap();
         assert_eq!(stages.attn_head0.rows(), 6);
         assert!(resp.report.is_none());
@@ -217,5 +283,26 @@ mod tests {
         )
         .unwrap();
         assert!(b.run_attention(&AttnRequest::new(bad)).is_err());
+    }
+
+    #[test]
+    fn batch_of_three_equals_three_single_runs() {
+        let module = AttnModule::synthetic(12, 6, 2, 3, 17).unwrap();
+        let reqs: Vec<AttnRequest> = (0..3)
+            .map(|i| AttnRequest::new(module.random_input(4, 10 + i).unwrap()))
+            .collect();
+        let mut backend = ReferenceBackend::new(module.clone());
+        let singles: Vec<AttnResponse> =
+            reqs.iter().map(|r| backend.run_attention(r).unwrap()).collect();
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        let batch = plan.run_batch(&AttnBatchRequest::new(reqs)).unwrap();
+        assert_eq!(batch.items.len(), 3);
+        for (a, b) in batch.items.iter().zip(&singles) {
+            assert_eq!(
+                a.out_codes.as_ref().unwrap().codes.data,
+                b.out_codes.as_ref().unwrap().codes.data
+            );
+            assert_eq!(a.out_values, b.out_values);
+        }
     }
 }

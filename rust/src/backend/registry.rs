@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend};
+use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend, SimMtBackend};
 
 /// Everything a factory may need to build a backend.
 #[derive(Debug, Clone)]
@@ -34,6 +34,8 @@ pub struct BackendConfig {
     pub shift: bool,
     /// Seed for the synthetic module parameters.
     pub seed: u64,
+    /// Worker threads for sharded backends (`sim-mt`); 0 = auto.
+    pub workers: usize,
 }
 
 impl Default for BackendConfig {
@@ -48,6 +50,7 @@ impl Default for BackendConfig {
             bits: 3,
             shift: true,
             seed: 7,
+            workers: 0,
         }
     }
 }
@@ -92,7 +95,7 @@ impl BackendRegistry {
         BackendRegistry { factories: BTreeMap::new() }
     }
 
-    /// The built-in trio: `ref`, `sim`, `pjrt`.
+    /// The built-in set: `ref`, `sim`, `sim-mt`, `pjrt`.
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
         r.register("ref", |cfg| {
@@ -100,6 +103,9 @@ impl BackendRegistry {
         });
         r.register("sim", |cfg| {
             Ok(Box::new(SimBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>)
+        });
+        r.register("sim-mt", |cfg| {
+            Ok(Box::new(SimMtBackend::new(cfg.resolve_module()?, cfg.workers)) as Box<dyn Backend>)
         });
         r.register("pjrt", |cfg| {
             let dir = cfg
@@ -153,9 +159,9 @@ mod tests {
     }
 
     #[test]
-    fn defaults_expose_the_trio() {
+    fn defaults_expose_the_builtin_set() {
         let r = BackendRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["pjrt", "ref", "sim"]);
+        assert_eq!(r.names(), vec!["pjrt", "ref", "sim", "sim-mt"]);
     }
 
     #[test]
@@ -170,8 +176,8 @@ mod tests {
     #[test]
     fn creates_integer_backends_and_runs_them() {
         let r = BackendRegistry::with_defaults();
-        let cfg = small_cfg();
-        for name in ["ref", "sim"] {
+        let cfg = BackendConfig { workers: 2, ..small_cfg() };
+        for name in ["ref", "sim", "sim-mt"] {
             let mut b = r.create(name, &cfg).unwrap();
             assert_eq!(b.name(), name);
             assert!(!b.describe().is_empty());
@@ -179,6 +185,24 @@ mod tests {
             let x = module.random_input(5, 2).unwrap();
             let resp = b.run_attention(&AttnRequest::new(x)).unwrap();
             assert!(resp.out_codes.is_some());
+        }
+    }
+
+    #[test]
+    fn plans_execute_batches_for_every_integer_backend() {
+        use crate::backend::{AttnBatchRequest, PlanOptions};
+        let r = BackendRegistry::with_defaults();
+        let cfg = BackendConfig { workers: 2, ..small_cfg() };
+        let module = cfg.resolve_module().unwrap();
+        let reqs: Vec<AttnRequest> = (0..3u64)
+            .map(|i| AttnRequest::new(module.random_input(5, i).unwrap()))
+            .collect();
+        for name in ["ref", "sim", "sim-mt"] {
+            let b = r.create(name, &cfg).unwrap();
+            let mut plan = b.plan(&PlanOptions::default()).unwrap();
+            assert_eq!(plan.backend_name(), name);
+            let resp = plan.run_batch(&AttnBatchRequest::new(reqs.clone())).unwrap();
+            assert_eq!(resp.items.len(), 3, "{name}");
         }
     }
 
@@ -196,6 +220,6 @@ mod tests {
             Ok(Box::new(super::super::ReferenceBackend::new(cfg.resolve_module()?))
                 as Box<dyn Backend>)
         });
-        assert_eq!(r.names().len(), 3);
+        assert_eq!(r.names().len(), 4);
     }
 }

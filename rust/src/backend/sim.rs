@@ -4,27 +4,37 @@
 //! every response. Integer outputs are bit-identical to
 //! [`super::ReferenceBackend`] (enforced by the cross-backend parity
 //! suite).
+//!
+//! Planning ([`SimPlan`]) performs the module→simulator lowering
+//! (`to_sim`: folded-constant binding, per-block array construction)
+//! once; `run_batch` then streams rows through the pre-built arrays and
+//! merges the per-row reports.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::{AttnModule, AttnRequest, AttnResponse, Backend, Capabilities, StageCodes};
-use crate::sim::attention::AttentionSim;
-use crate::sim::EnergyModel;
+use super::{
+    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
+    ExecutionPlan, PlanOptions, StageCodes,
+};
+use crate::sim::attention::{AttentionOutput, AttentionSim};
+use crate::sim::{AttentionReport, EnergyModel};
 
 /// The systolic-array simulator execution path.
 #[derive(Debug)]
 pub struct SimBackend {
     module: AttnModule,
-    sim: AttentionSim,
+    /// The backend's own resident plan, built once at construction so
+    /// direct `run_attention` calls stay amortized (no re-lowering).
+    resident: SimPlan,
     energy: EnergyModel,
 }
 
 impl SimBackend {
     pub fn new(module: AttnModule) -> SimBackend {
-        let sim = module.to_sim();
-        SimBackend { module, sim, energy: EnergyModel::default() }
+        let resident = SimPlan::new(&module);
+        SimBackend { module, resident, energy: EnergyModel::default() }
     }
 
     pub fn module(&self) -> &AttnModule {
@@ -34,6 +44,83 @@ impl SimBackend {
     /// The energy model used for power summaries in [`Self::describe`].
     pub fn energy_model(&self) -> &EnergyModel {
         &self.energy
+    }
+}
+
+fn describe_module(m: &AttnModule) -> String {
+    format!(
+        "systolic-array simulator: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {}{}), activity-based energy model",
+        m.d_in(),
+        m.d_out(),
+        m.heads,
+        m.bits,
+        m.attn_bits,
+        if m.shift { "shift-exp" } else { "exact-exp" },
+        if m.wo.is_some() { ", W_O wired" } else { "" },
+    )
+}
+
+/// Convert one simulator output into the uniform response shape.
+pub(crate) fn response_from_output(out: AttentionOutput, elapsed: Duration) -> AttnResponse {
+    AttnResponse {
+        out_codes: Some(out.pv_codes),
+        out_values: out.out_values,
+        stages: Some(StageCodes {
+            q: out.q_codes,
+            k: out.k_codes,
+            v: out.v_codes,
+            attn_head0: out.attn_codes.into_iter().next().expect("at least one head"),
+        }),
+        report: Some(out.report),
+        elapsed,
+    }
+}
+
+/// Merge the per-item reports of a batch into one aggregate.
+pub(crate) fn merge_batch_report(items: &[AttnResponse]) -> Option<AttentionReport> {
+    let mut agg: Option<AttentionReport> = None;
+    for item in items {
+        if let Some(r) = &item.report {
+            match &mut agg {
+                None => agg = Some(r.clone()),
+                Some(a) => a.absorb(r),
+            }
+        }
+    }
+    agg
+}
+
+/// Single-threaded simulator plan: the lowered [`AttentionSim`].
+#[derive(Debug)]
+pub struct SimPlan {
+    sim: AttentionSim,
+    desc: String,
+}
+
+impl SimPlan {
+    pub fn new(module: &AttnModule) -> SimPlan {
+        SimPlan { sim: module.to_sim(), desc: describe_module(module) }
+    }
+}
+
+impl ExecutionPlan for SimPlan {
+    fn backend_name(&self) -> &str {
+        "sim"
+    }
+
+    fn describe(&self) -> String {
+        self.desc.clone()
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let mut items = Vec::with_capacity(req.items.len());
+        for r in &req.items {
+            let row_t0 = Instant::now();
+            let out = self.sim.run(&r.x)?;
+            items.push(response_from_output(out, row_t0.elapsed()));
+        }
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
     }
 }
 
@@ -47,33 +134,17 @@ impl Backend for SimBackend {
     }
 
     fn describe(&self) -> String {
-        let m = &self.module;
-        format!(
-            "systolic-array simulator: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {}), activity-based energy model",
-            m.d_in(),
-            m.d_out(),
-            m.heads,
-            m.bits,
-            m.attn_bits,
-            if m.shift { "shift-exp" } else { "exact-exp" },
-        )
+        describe_module(&self.module)
     }
 
-    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
-        let t0 = Instant::now();
-        let out = self.sim.run(&req.x)?;
-        Ok(AttnResponse {
-            out_codes: Some(out.pv_codes),
-            out_values: None,
-            stages: Some(StageCodes {
-                q: out.q_codes,
-                k: out.k_codes,
-                v: out.v_codes,
-                attn_head0: out.attn_codes.into_iter().next().expect("at least one head"),
-            }),
-            report: Some(out.report),
-            elapsed: t0.elapsed(),
-        })
+    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        Ok(Box::new(SimPlan::new(&self.module)))
+    }
+
+    /// Batch-of-one through the resident plan — same code path as
+    /// `run_batch`, without re-lowering the module per call.
+    fn run_attention(&mut self, req: &super::AttnRequest) -> Result<AttnResponse> {
+        self.resident.run_one(req)
     }
 }
 
@@ -93,5 +164,32 @@ mod tests {
         assert!(report.total_macs() > 0);
         assert!(report.total_power_w(b.energy_model()) > 0.0);
         assert!(resp.out_codes.is_some());
+        // W_O wired: the simulator also emits the full fp output and
+        // accounts the O-linear block.
+        assert_eq!(resp.out_values.unwrap().len(), 6 * 8);
+        assert!(report.blocks.iter().any(|bl| bl.name == "O linear"));
+    }
+
+    #[test]
+    fn batch_report_merges_row_stats() {
+        let module = AttnModule::synthetic(12, 6, 2, 3, 9).unwrap();
+        let single_macs = {
+            let mut plan = SimPlan::new(&module);
+            let req = AttnRequest::new(module.random_input(4, 1).unwrap());
+            plan.run_batch(&AttnBatchRequest::single(req))
+                .unwrap()
+                .report
+                .unwrap()
+                .total_macs()
+        };
+        let mut plan = SimPlan::new(&module);
+        let reqs: Vec<AttnRequest> = (0..3)
+            .map(|i| AttnRequest::new(module.random_input(4, 1 + i).unwrap()))
+            .collect();
+        let resp = plan.run_batch(&AttnBatchRequest::new(reqs)).unwrap();
+        // merged batch MACs = Σ per-row MACs = rows × single-run MACs
+        assert_eq!(resp.report.unwrap().total_macs(), 3 * single_macs);
+        let per_item: u64 = resp.items.iter().map(|i| i.report.as_ref().unwrap().total_macs()).sum();
+        assert_eq!(per_item, 3 * single_macs);
     }
 }

@@ -1,0 +1,367 @@
+//! [`SimMtBackend`] (`sim-mt`) — the sharded systolic-simulator
+//! substrate: the same [`crate::sim::AttentionSim`] numerics as `sim`,
+//! executed across a fixed worker-thread pool that the plan spawns once.
+//!
+//! Shard layout:
+//!
+//! * the per-request **front** stage (Q/K/V linears, LayerNorms, delay,
+//!   reversing) shards across batch **rows** when the batch is at least
+//!   [`super::PlanOptions::row_shard_threshold`] rows;
+//! * the **head** stage (QKᵀ+softmax, attn·V) always shards across
+//!   `rows × heads` work items;
+//! * the W_O tail and stats merge run on the caller thread, in row
+//!   order.
+//!
+//! Every shard is a pure function of `(module, row, head)` and results
+//! are merged by index, so outputs are **bit-identical for any worker
+//! count** — including the single-threaded `sim` backend, which runs
+//! the exact same three stages inline. Shard [`BlockStats`] counters
+//! partition the work, so the merged report's MAC/op totals equal the
+//! unsharded totals exactly.
+//!
+//! [`BlockStats`]: crate::sim::BlockStats
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::sim::{merge_batch_report, response_from_output};
+use super::{
+    AttnBatchRequest, AttnBatchResponse, AttnModule, Backend, Capabilities, ExecutionPlan,
+    PlanOptions, QTensor,
+};
+use crate::sim::attention::{AttentionSim, FrontOutput, HeadOutput};
+
+/// The sharded simulator backend. `workers == 0` means "pick at plan
+/// time": available parallelism, capped at 8.
+pub struct SimMtBackend {
+    module: AttnModule,
+    workers: usize,
+    /// Lazily built resident plan so direct `run_attention` calls reuse
+    /// one worker pool instead of spawning and joining a pool per call.
+    resident: Option<SimMtPlan>,
+}
+
+impl SimMtBackend {
+    pub fn new(module: AttnModule, workers: usize) -> SimMtBackend {
+        SimMtBackend { module, workers, resident: None }
+    }
+
+    pub fn module(&self) -> &AttnModule {
+        &self.module
+    }
+
+    fn resolve_workers(&self, opts: &PlanOptions) -> usize {
+        let w = if opts.workers > 0 {
+            opts.workers
+        } else if self.workers > 0 {
+            self.workers
+        } else {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        };
+        w.max(1)
+    }
+}
+
+impl Backend for SimMtBackend {
+    fn name(&self) -> &str {
+        "sim-mt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { bit_exact_codes: true, hardware_stats: true, needs_artifacts: false }
+    }
+
+    fn describe(&self) -> String {
+        let m = &self.module;
+        format!(
+            "sharded systolic simulator: D_in={} D_out={} heads={} {}-bit, workers={}",
+            m.d_in(),
+            m.d_out(),
+            m.heads,
+            m.bits,
+            if self.workers > 0 { self.workers.to_string() } else { "auto".into() },
+        )
+    }
+
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        Ok(Box::new(SimMtPlan::new(
+            self.module.to_sim(),
+            self.resolve_workers(opts),
+            opts.row_shard_threshold,
+        )))
+    }
+
+    /// Batch-of-one through a resident plan (pool spawned on first use,
+    /// reused afterwards).
+    fn run_attention(&mut self, req: &super::AttnRequest) -> Result<super::AttnResponse> {
+        if self.resident.is_none() {
+            let opts = PlanOptions::default();
+            self.resident = Some(SimMtPlan::new(
+                self.module.to_sim(),
+                self.resolve_workers(&opts),
+                opts.row_shard_threshold,
+            ));
+        }
+        self.resident.as_mut().expect("resident plan just built").run_one(req)
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads fed through one shared job channel.
+/// Spawned once at plan time; joined on drop.
+struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("sim-mt-{i}"))
+                    .spawn(move || loop {
+                        // the guard is held only while waiting for a job;
+                        // jobs themselves run outside the lock
+                        let job = rx.lock().expect("job queue poisoned").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // plan dropped
+                        }
+                    })
+                    .expect("spawn sim-mt worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles }
+    }
+
+    fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool running")
+            .send(job)
+            .map_err(|_| anyhow!("sim-mt worker pool is gone"))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue → workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Collect `n` index-tagged shard results, failing deterministically on
+/// the lowest-index error regardless of completion order.
+fn collect_indexed<T>(rx: mpsc::Receiver<(usize, Result<T>)>, n: usize, what: &str) -> Result<Vec<T>> {
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    for _ in 0..n {
+        match rx.recv() {
+            Ok((i, Ok(v))) => slots[i] = Some(v),
+            Ok((i, Err(e))) => {
+                if first_err.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                    first_err = Some((i, e));
+                }
+            }
+            Err(_) => return Err(anyhow!("sim-mt worker died mid-batch ({what})")),
+        }
+    }
+    if let Some((i, e)) = first_err {
+        return Err(e).with_context(|| format!("sim-mt {what} shard {i}"));
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("{what} shard {i} produced no result")))
+        .collect()
+}
+
+/// The sharded execution plan: one lowered simulator shared by a fixed
+/// worker pool.
+pub struct SimMtPlan {
+    sim: Arc<AttentionSim>,
+    pool: WorkerPool,
+    workers: usize,
+    row_threshold: usize,
+}
+
+impl SimMtPlan {
+    pub fn new(sim: AttentionSim, workers: usize, row_threshold: usize) -> SimMtPlan {
+        SimMtPlan { sim: Arc::new(sim), pool: WorkerPool::new(workers), workers, row_threshold }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Front stage over all rows — sharded by row above the threshold.
+    fn run_fronts(&self, xs: &Arc<Vec<QTensor>>) -> Result<Vec<FrontOutput>> {
+        let b = xs.len();
+        if b < self.row_threshold || self.workers < 2 {
+            return xs.iter().map(|x| self.sim.run_front(x)).collect();
+        }
+        let (tx, rx) = mpsc::channel();
+        for i in 0..b {
+            let (sim, xs, tx) = (Arc::clone(&self.sim), Arc::clone(xs), tx.clone());
+            self.pool.submit(Box::new(move || {
+                // catch panics so a poisoned shard surfaces as an error
+                // instead of killing the worker (which would strand the
+                // queued jobs' result senders and hang the collector)
+                let r = catch_unwind(AssertUnwindSafe(|| sim.run_front(&xs[i])))
+                    .unwrap_or_else(|_| Err(anyhow!("front shard {i} panicked")));
+                let _ = tx.send((i, r));
+            }))?;
+        }
+        drop(tx);
+        collect_indexed(rx, b, "front")
+    }
+
+    /// Head stage — always sharded across `rows × heads` items.
+    fn run_heads(&self, fronts: &Arc<Vec<FrontOutput>>) -> Result<Vec<Vec<HeadOutput>>> {
+        let (b, heads) = (fronts.len(), self.sim.heads);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..b {
+            for h in 0..heads {
+                let (sim, fronts, tx) = (Arc::clone(&self.sim), Arc::clone(fronts), tx.clone());
+                self.pool.submit(Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| sim.run_head(&fronts[i], h)))
+                        .unwrap_or_else(|_| Err(anyhow!("head shard ({i}, {h}) panicked")));
+                    let _ = tx.send((i * heads + h, r));
+                }))?;
+            }
+        }
+        drop(tx);
+        let flat = collect_indexed(rx, b * heads, "head")?;
+        let mut per_row: Vec<Vec<HeadOutput>> = (0..b).map(|_| Vec::with_capacity(heads)).collect();
+        for (idx, out) in flat.into_iter().enumerate() {
+            per_row[idx / heads].push(out);
+        }
+        Ok(per_row)
+    }
+}
+
+impl ExecutionPlan for SimMtPlan {
+    fn backend_name(&self) -> &str {
+        "sim-mt"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded systolic simulator: D_in={} D_out={} heads={} {}-bit, {} workers (row shard ≥ {})",
+            self.sim.wq.folded.codes.cols,
+            self.sim.d_out(),
+            self.sim.heads,
+            self.sim.bits,
+            self.workers,
+            self.row_threshold,
+        )
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let b = req.items.len();
+        if b == 0 {
+            return Ok(AttnBatchResponse {
+                items: Vec::new(),
+                report: None,
+                elapsed: t0.elapsed(),
+            });
+        }
+        let xs: Arc<Vec<QTensor>> = Arc::new(req.items.iter().map(|r| r.x.clone()).collect());
+        let fronts = Arc::new(self.run_fronts(&xs)?);
+        let head_outs = self.run_heads(&fronts)?;
+        // reclaim the fronts so assemble can move the tensors out; a
+        // worker may still be dropping its Arc clone right after sending
+        // its last result, in which case fall back to one clone
+        let fronts = Arc::try_unwrap(fronts).unwrap_or_else(|arc| (*arc).clone());
+
+        // merge + W_O tail on the caller thread, in row order
+        let mut items = Vec::with_capacity(b);
+        for (front, heads) in fronts.into_iter().zip(head_outs) {
+            let out = self.sim.assemble(front, heads)?;
+            items.push(response_from_output(out, t0.elapsed() / b as u32));
+        }
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{AttnRequest, SimBackend};
+
+    fn batch(module: &AttnModule, rows: usize) -> AttnBatchRequest {
+        AttnBatchRequest::new(
+            (0..rows as u64)
+                .map(|i| AttnRequest::new(module.random_input(6, 40 + i).unwrap()))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn matches_single_threaded_sim_for_any_worker_count() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 23).unwrap();
+        let req = batch(&module, 3);
+        let mut st = SimBackend::new(module.clone())
+            .plan(&PlanOptions::default())
+            .unwrap();
+        let want = st.run_batch(&req).unwrap();
+        for workers in [1usize, 2, 4] {
+            let mut plan = SimMtPlan::new(module.to_sim(), workers, 2);
+            let got = plan.run_batch(&req).unwrap();
+            assert_eq!(got.items.len(), want.items.len());
+            for (g, w) in got.items.iter().zip(&want.items) {
+                assert_eq!(
+                    g.out_codes.as_ref().unwrap().codes.data,
+                    w.out_codes.as_ref().unwrap().codes.data,
+                    "{workers} workers"
+                );
+                assert_eq!(g.out_values, w.out_values, "{workers} workers");
+            }
+            assert_eq!(
+                got.report.unwrap().total_macs(),
+                want.report.as_ref().unwrap().total_macs(),
+                "{workers} workers: merged MAC totals"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_errors_surface_deterministically() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 23).unwrap();
+        let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
+        // row 1 carries a wrong-spec tensor → the batch fails, naming it
+        let good = AttnRequest::new(module.random_input(4, 1).unwrap());
+        let bad = AttnRequest::new(
+            QTensor::new(
+                crate::quant::linear::IntMat::new(4, 16, vec![0; 64]),
+                crate::quant::QuantSpec::signed(5, crate::quant::Step::new(0.12).unwrap()),
+            )
+            .unwrap(),
+        );
+        let err = plan
+            .run_batch(&AttnBatchRequest::new(vec![good, bad]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("shard 1"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let module = AttnModule::synthetic(12, 6, 1, 3, 2).unwrap();
+        let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
+        let resp = plan.run_batch(&AttnBatchRequest::default()).unwrap();
+        assert!(resp.items.is_empty() && resp.report.is_none());
+    }
+}

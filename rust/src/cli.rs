@@ -89,10 +89,12 @@ ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
 USAGE: ivit <command> [flags]
 
 COMMANDS:
-  serve       run the batching inference server
-              --backend pjrt|sim|ref (default pjrt)
+  serve       run the batching inference server (plans the backend once,
+              then dispatches whole batches through its ExecutionPlan)
+              --backend pjrt|sim|sim-mt|ref (default pjrt)
               pjrt: --artifacts DIR --mode integerized|qvit|fp32 --bits N
-              sim/ref (no artifacts needed): --tokens N --din D --dhead O
+              sim/sim-mt/ref (no artifacts needed): --tokens N --din D --dhead O
+              sim-mt: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
   eval        Table II: accuracy of a model variant on the eval set
               --artifacts DIR  --mode ...  --bits N  [--limit N]
@@ -100,7 +102,8 @@ COMMANDS:
               --tokens N --din D --dhead O --bits B [--freq-mhz F]
   simulate    run the attention workload on a backend and verify
               bit-exactness against the exported JAX attn_case
-              --backend sim|ref|pjrt  --artifacts DIR  [--exact-exp]
+              --backend sim|sim-mt|ref|pjrt  --artifacts DIR  [--exact-exp]
+              [--workers N]
               (--synthetic: run a random module instead — verifies nothing)
   info        print the artifact manifest summary  --artifacts DIR
   help        this text

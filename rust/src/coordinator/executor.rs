@@ -5,7 +5,9 @@
 
 use anyhow::Result;
 
-use crate::backend::{AttnRequest, Backend, QTensor};
+use crate::backend::{
+    AttnBatchRequest, AttnRequest, Backend, ExecutionPlan, PlanOptions, QTensor,
+};
 use crate::runtime::Engine;
 use crate::util::tensorio::Tensor;
 
@@ -14,9 +16,10 @@ use crate::util::tensorio::Tensor;
 /// `images` is row-major `[batch, h, w, c]` with exactly `batch_size()`
 /// rows (the batcher pads); the first `real_rows` are real requests and
 /// the rest zero padding whose outputs are dropped. Returns
-/// `batch_size() × num_classes` logits. Executors with static shapes
-/// (PJRT) ignore `real_rows`; per-row executors use it to skip the
-/// padding work.
+/// `batch_size() × num_classes` logits (the batcher drops the padding
+/// rows). Executors with static shapes (PJRT) still run the padded
+/// batch but skip decode/copy-out for padding rows; per-row executors
+/// skip the padding work entirely and leave those rows zero.
 pub trait BatchExecutor: Send {
     fn batch_size(&self) -> usize;
     fn image_elems(&self) -> usize;
@@ -64,21 +67,26 @@ impl BatchExecutor for PjrtExecutor {
         self.classes
     }
 
-    fn execute(&mut self, images: &[f32], _real_rows: usize) -> Result<Vec<f32>> {
-        // AOT shapes are static — the padded batch executes as-is.
+    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
+        // AOT shapes are static — the padded batch executes as-is — but
+        // decode/copy-out is per-row work: only the `real_rows` leading
+        // rows are copied out of the device literal; padding rows stay
+        // zero (matching AttnBatchExecutor's contract).
         anyhow::ensure!(images.len() == self.batch * self.image_elems, "batch payload size");
+        anyhow::ensure!(real_rows <= self.batch, "real_rows {} > batch {}", real_rows, self.batch);
         let t = Tensor::f32(self.input_shape.clone(), images.to_vec());
         let exe = self
             .engine
             .get(&self.exe_name)
             .ok_or_else(|| anyhow::anyhow!("executable dropped"))?;
         let out = exe.run(&[t])?;
-        Ok(out
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("no output"))?
-            .as_f32()?
-            .to_vec())
+        let tensor = out.into_iter().next().ok_or_else(|| anyhow::anyhow!("no output"))?;
+        let full = tensor.as_f32()?;
+        anyhow::ensure!(full.len() == self.batch * self.classes, "logit payload size");
+        let mut logits = vec![0f32; self.batch * self.classes];
+        let real = real_rows * self.classes;
+        logits[..real].copy_from_slice(&full[..real]);
+        Ok(logits)
     }
 }
 
@@ -88,16 +96,19 @@ impl BatchExecutor for PjrtExecutor {
 unsafe impl Send for PjrtExecutor {}
 
 /// Serves quantized-attention inference through any registered
-/// [`Backend`] — the coordinator's multi-backend seam. Each request
-/// payload is a flattened fp activation matrix (`tokens × d_in`); the
-/// executor quantizes it with the backend module's input spec, runs one
-/// `AttnRequest` per row of the batch, and returns the dequantized
-/// output activations as the response vector.
+/// [`Backend`]'s [`ExecutionPlan`] — the coordinator's multi-backend
+/// seam. Each request payload is a flattened fp activation matrix
+/// (`tokens × d_in`); the executor quantizes the real rows with the
+/// module's input spec, dispatches them as **one** `AttnBatchRequest`
+/// (batching is the backend's capability, not a coordinator-side loop),
+/// and returns the fp output activations — the full W_O-projected
+/// output when the plan emits it, else the dequantized PV codes.
 ///
 /// Unlike [`PjrtExecutor`] this needs no artifacts, so `ivit serve
-/// --backend sim|ref` exercises the full batching stack standalone.
+/// --backend sim|sim-mt|ref` exercises the full batching stack
+/// standalone.
 pub struct AttnBatchExecutor {
-    backend: Box<dyn Backend>,
+    plan: Box<dyn ExecutionPlan>,
     tokens: usize,
     d_in: usize,
     d_out: usize,
@@ -106,16 +117,27 @@ pub struct AttnBatchExecutor {
 }
 
 impl AttnBatchExecutor {
-    /// Wrap a backend serving `tokens × d_in` activations, `batch`
-    /// requests per executor call.
+    /// Plan `backend` once and serve `tokens × d_in` activations,
+    /// `batch` requests per executor call.
     pub fn new(
-        backend: Box<dyn Backend>,
+        backend: &dyn Backend,
+        module: &crate::backend::AttnModule,
+        tokens: usize,
+        batch: usize,
+        opts: &PlanOptions,
+    ) -> Result<Self> {
+        Ok(Self::from_plan(backend.plan(opts)?, module, tokens, batch))
+    }
+
+    /// Wrap an already-built plan.
+    pub fn from_plan(
+        plan: Box<dyn ExecutionPlan>,
         module: &crate::backend::AttnModule,
         tokens: usize,
         batch: usize,
     ) -> Self {
         AttnBatchExecutor {
-            backend,
+            plan,
             tokens,
             d_in: module.d_in(),
             d_out: module.d_out(),
@@ -125,7 +147,7 @@ impl AttnBatchExecutor {
     }
 
     pub fn describe(&self) -> String {
-        self.backend.describe()
+        self.plan.describe()
     }
 }
 
@@ -148,17 +170,22 @@ impl BatchExecutor for AttnBatchExecutor {
         anyhow::ensure!(real_rows <= self.batch, "real_rows {} > batch {}", real_rows, self.batch);
         let out_elems = self.num_classes();
         let mut out = vec![0f32; self.batch * out_elems];
-        // padding rows stay zero — one attention inference per REAL row only
-        for b in 0..real_rows {
-            let row = &images[b * elems..(b + 1) * elems];
-            let x = QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?;
-            let resp = self.backend.run_attention(&AttnRequest::new(x))?;
-            let vals = match (resp.out_codes, resp.out_values) {
-                (Some(codes), _) => codes.dequantize(),
-                (None, Some(v)) => v,
-                (None, None) => anyhow::bail!("backend produced neither codes nor values"),
+        // padding rows stay zero — only REAL rows are quantized and batched
+        let items = (0..real_rows)
+            .map(|b| {
+                let row = &images[b * elems..(b + 1) * elems];
+                Ok(AttnRequest::new(QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let resp = self.plan.run_batch(&AttnBatchRequest::new(items))?;
+        anyhow::ensure!(resp.items.len() == real_rows, "plan returned {} rows", resp.items.len());
+        for (b, item) in resp.items.into_iter().enumerate() {
+            let vals = match (item.out_values, item.out_codes) {
+                (Some(v), _) => v,
+                (None, Some(codes)) => codes.dequantize(),
+                (None, None) => anyhow::bail!("plan produced neither codes nor values"),
             };
-            anyhow::ensure!(vals.len() == out_elems, "backend output size {}", vals.len());
+            anyhow::ensure!(vals.len() == out_elems, "plan output size {}", vals.len());
             out[b * out_elems..(b + 1) * out_elems].copy_from_slice(&vals);
         }
         Ok(out)
@@ -239,7 +266,7 @@ mod tests {
 
     #[test]
     fn attn_executor_serves_backends_end_to_end() {
-        use crate::backend::{AttnModule, ReferenceBackend, SimBackend};
+        use crate::backend::{AttnModule, ReferenceBackend, SimBackend, SimMtBackend};
         let module = AttnModule::synthetic(12, 6, 1, 3, 21).unwrap();
         let tokens = 4;
         let mut rng = crate::util::XorShift::new(3);
@@ -249,8 +276,11 @@ mod tests {
         for backend in [
             Box::new(ReferenceBackend::new(module.clone())) as Box<dyn crate::backend::Backend>,
             Box::new(SimBackend::new(module.clone())) as Box<dyn crate::backend::Backend>,
+            Box::new(SimMtBackend::new(module.clone(), 2)) as Box<dyn crate::backend::Backend>,
         ] {
-            let mut exec = AttnBatchExecutor::new(backend, &module, tokens, 2);
+            let mut exec =
+                AttnBatchExecutor::new(&*backend, &module, tokens, 2, &PlanOptions::default())
+                    .unwrap();
             assert_eq!(exec.image_elems(), tokens * 12);
             assert_eq!(exec.num_classes(), tokens * 6);
             assert!(!exec.describe().is_empty());
@@ -262,8 +292,25 @@ mod tests {
             assert_eq!(&out[..tokens * 6], &out[tokens * 6..]);
             outs.push(out);
         }
-        // ref and sim backends dequantize to the same activations
+        // every backend produces the same fp output activations
         assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn attn_executor_zeroes_padding_rows() {
+        use crate::backend::{AttnModule, SimBackend};
+        let module = AttnModule::synthetic(12, 6, 1, 3, 21).unwrap();
+        let tokens = 4;
+        let backend = SimBackend::new(module.clone());
+        let mut exec =
+            AttnBatchExecutor::new(&backend, &module, tokens, 3, &PlanOptions::default()).unwrap();
+        let mut rng = crate::util::XorShift::new(5);
+        let payload: Vec<f32> = rng.normal_vec(3 * tokens * 12);
+        let out = exec.execute(&payload, 1).unwrap();
+        let per = tokens * 6;
+        assert!(out[..per].iter().any(|&v| v != 0.0));
+        assert!(out[per..].iter().all(|&v| v == 0.0), "padding rows must stay zero");
     }
 
     #[test]

@@ -14,26 +14,33 @@
 //!
 //! ## The execution API
 //!
-//! The crate's central seam is [`backend`]: one `Backend` trait
-//! (`run_attention(&AttnRequest) -> AttnResponse`, plus `capabilities()`
-//! and `describe()`) over every substrate that can execute the paper's
-//! integerized attention —
+//! The crate's central seam is [`backend`], a two-phase **plan/execute**
+//! model: `Backend::plan(&PlanOptions)` performs all one-time setup
+//! (scale folding, module→substrate lowering, artifact/engine binding,
+//! worker-pool spawn) and returns an `ExecutionPlan` whose
+//! `run_batch(&AttnBatchRequest)` executes N rows with no per-request
+//! work; single-request `run_attention` is a default adapter over a
+//! batch of one. Substrates:
 //!
 //! * `ref` ([`backend::ReferenceBackend`]) — the [`quant`] golden
 //!   reference, scalar loops, bit-accurate;
 //! * `sim` ([`backend::SimBackend`]) — the [`sim`] systolic-array model,
 //!   bit-identical to `ref` **and** cycle/energy-accounted;
+//! * `sim-mt` ([`backend::SimMtBackend`]) — the same systolic model
+//!   sharded across a fixed worker pool (heads × batch rows),
+//!   bit-identical for any worker count;
 //! * `pjrt` ([`backend::PjrtBackend`]) — the AOT Pallas artifact through
 //!   the [`runtime`] PJRT engine.
 //!
 //! Backends are constructed by name through a
-//! [`backend::BackendRegistry`] (`ivit --backend ref|sim|pjrt`), and all
-//! operands are **typed**: [`quant::QTensor`] (codes + step + bits +
-//! signedness) and [`quant::ScaleChain`] (the explicit Eq. 2 scale
-//! foldings) replace the bare `f32` scales and `bool` flags that used to
-//! cross module boundaries. The cross-backend parity suite
+//! [`backend::BackendRegistry`] (`ivit --backend ref|sim|sim-mt|pjrt`),
+//! and all operands are **typed**: [`quant::QTensor`] (codes + step +
+//! bits + signedness) and [`quant::ScaleChain`] (the explicit Eq. 2
+//! scale foldings) replace the bare `f32` scales and `bool` flags that
+//! used to cross module boundaries. The cross-backend parity suite
 //! (`tests/backend_parity.rs`) pins `ref` ≡ `sim` bit-identity at DeiT-S
-//! dimensions for every supported bit width.
+//! dimensions for every supported bit width, and `tests/plan_batch.rs`
+//! pins batch ≡ loop and `sim-mt` worker-count determinism.
 //!
 //! Modules:
 //!
@@ -55,6 +62,13 @@
 //!   [`coordinator::AttnBatchExecutor`].
 //! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
 //!   (criterion is not in this image's offline crate set).
+
+// Index-window loops (`for i in 0..n` with computed strides) are the
+// deliberate idiom of the quant/simulator kernels — they mirror the
+// systolic wavefront order — so the style lint is silenced crate-wide
+// rather than contorting the hot loops. CI denies all other warnings
+// (`make clippy`).
+#![allow(clippy::needless_range_loop)]
 
 pub mod backend;
 pub mod bench;

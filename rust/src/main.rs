@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use ivit::backend::{AttnRequest, BackendConfig, BackendRegistry};
+use ivit::backend::{AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
 use ivit::cli::{Args, USAGE};
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::{AttnCase, EvalSet};
@@ -63,12 +63,17 @@ fn backend_config(args: &Args) -> Result<BackendConfig> {
         bits: args.u32("bits", defaults.bits)?,
         shift: !args.bool("exact-exp"),
         seed: 7,
+        workers: args.usize("workers", 0)?,
     })
+}
+
+fn plan_options(args: &Args) -> Result<PlanOptions> {
+    Ok(PlanOptions { workers: args.usize("workers", 0)?, ..PlanOptions::default() })
 }
 
 /// `ivit serve` — the end-to-end driver: batching server + synthetic load.
 fn cmd_serve(args: &Args) -> Result<()> {
-    match args.choice("backend", &["pjrt", "sim", "ref"], "pjrt")?.as_str() {
+    match args.choice("backend", &["pjrt", "sim", "sim-mt", "ref"], "pjrt")?.as_str() {
         "pjrt" => cmd_serve_images(args),
         other => cmd_serve_attention(args, other),
     }
@@ -159,8 +164,9 @@ fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
     let module = cfg.resolve_module()?;
     cfg.module = Some(module.clone()); // backend sees the same module
     let backend = registry.create(backend_name, &cfg)?;
-    println!("backend: {backend_name} — {}", backend.describe());
-    let exec = AttnBatchExecutor::new(backend, &module, tokens, batch);
+    // plan once — all per-request setup is amortized across every batch
+    let exec = AttnBatchExecutor::new(&*backend, &module, tokens, batch, &plan_options(args)?)?;
+    println!("backend: {backend_name} — {}", exec.describe());
     let image_elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
 
     let coord = Coordinator::start(
@@ -289,7 +295,7 @@ fn cmd_power(args: &Args) -> Result<()> {
 /// when the exported attn_case is present, verify bit-exactness against
 /// the JAX reference.
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let backend_name = args.choice("backend", &["sim", "ref", "pjrt"], "sim")?;
+    let backend_name = args.choice("backend", &["sim", "sim-mt", "ref", "pjrt"], "sim")?;
     let mut cfg = backend_config(args)?;
     let shift = cfg.shift;
 
@@ -319,11 +325,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
 
     let registry = BackendRegistry::with_defaults();
-    let mut backend = registry.create(&backend_name, &cfg)?;
-    println!("backend: {backend_name} — {}", backend.describe());
+    let backend = registry.create(&backend_name, &cfg)?;
+    // plan/execute: one-time setup first, then the batch (of one here)
+    let mut plan = backend.plan(&plan_options(args)?)?;
+    println!("backend: {backend_name} — {}", plan.describe());
 
     let t0 = Instant::now();
-    let resp = backend.run_attention(&AttnRequest::new(x.clone()))?;
+    let mut batch = plan.run_batch(&AttnBatchRequest::single(AttnRequest::new(x.clone())))?;
+    let resp = batch.items.pop().expect("one response for a batch of one");
     let dt = t0.elapsed();
     println!(
         "ran {} tokens × {} dim in {:.1} ms",

@@ -42,6 +42,9 @@ pub struct AttentionSim {
     pub wq: LinearArraySim,
     pub wk: LinearArraySim,
     pub wv: LinearArraySim,
+    /// The attention output projection W_O (absent in paper-geometry
+    /// modules, whose Table I stops at the PV matmul).
+    pub wo: Option<LinearArraySim>,
     pub lnq: LayerNormSim,
     pub lnk: LayerNormSim,
     pub steps: AttentionSteps,
@@ -57,6 +60,9 @@ pub struct AttentionSim {
 pub struct AttentionOutput {
     /// Final attn·V codes, (N × D) merged over heads, step Δ_O.
     pub pv_codes: QTensor,
+    /// Full fp attention output `(PV·W_Oᵀ + b̃)·Δ_O·diag(Δ_W)` — present
+    /// when the module carries its `wo` projection.
+    pub out_values: Option<Vec<f32>>,
     /// Per-head attention probability codes.
     pub attn_codes: Vec<QTensor>,
     /// Q/K LayerNorm output codes (for cross-language checks).
@@ -66,8 +72,36 @@ pub struct AttentionOutput {
     pub report: AttentionReport,
 }
 
+/// Output of the pre-head pipeline stages (Q/K/V linears, LayerNorms,
+/// delay lines, reversing) — everything that spans all heads. Produced
+/// once per request by [`AttentionSim::run_front`]; the per-head stage
+/// ([`AttentionSim::run_head`]) only reads it, so head shards can run
+/// concurrently over one shared `FrontOutput`.
+#[derive(Debug, Clone)]
+pub struct FrontOutput {
+    pub q_codes: QTensor,
+    pub k_codes: QTensor,
+    /// V codes in canonical layout (reversing round-trip applied).
+    pub v_codes: QTensor,
+    /// The front blocks' Table I rows, in canonical order.
+    pub blocks: Vec<BlockStats>,
+}
+
+/// One head's QKᵀ+softmax and attn·V results — the shard unit of the
+/// multi-threaded simulator backend.
+#[derive(Debug)]
+pub struct HeadOutput {
+    pub head: usize,
+    /// Attention probability codes (N×N, unsigned attn spec).
+    pub attn: QTensor,
+    /// This head's PV output codes (N × head_dim).
+    pub pv: IntMat,
+    pub qk_stats: BlockStats,
+    pub pv_stats: BlockStats,
+}
+
 /// The Table I rows.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct AttentionReport {
     pub blocks: Vec<BlockStats>,
 }
@@ -105,6 +139,18 @@ impl AttentionReport {
         self.blocks.iter().map(|b| b.mac_ops).sum()
     }
 
+    /// Merge another report's rows into this one, matching blocks by
+    /// name (shards and batch rows have identical block sequences, so
+    /// counters add exactly; unmatched rows are appended).
+    pub fn absorb(&mut self, other: &AttentionReport) {
+        for b in &other.blocks {
+            match self.blocks.iter_mut().find(|mine| mine.name == b.name) {
+                Some(mine) => mine.absorb(b),
+                None => self.blocks.push(b.clone()),
+            }
+        }
+    }
+
     pub fn total_pes(&self) -> u64 {
         self.blocks.iter().map(|b| b.pe_count).sum()
     }
@@ -131,18 +177,41 @@ impl AttentionReport {
 }
 
 impl AttentionSim {
+    /// Projection output dimension D = heads · head_dim.
+    pub fn d_out(&self) -> usize {
+        self.wq.folded.codes.rows
+    }
+
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_out() / self.heads
+    }
+
     /// Run the pipeline on typed input codes `x` (N×D).
+    ///
+    /// Exactly `run_front` → `run_head` per head → [`Self::assemble`];
+    /// the sharded `sim-mt` plan runs the same three stages across a
+    /// worker pool, so its outputs are bit-identical by construction.
     pub fn run(&self, x: &QTensor) -> Result<AttentionOutput> {
+        let front = self.run_front(x)?;
+        let heads = (0..self.heads)
+            .map(|h| self.run_head(&front, h))
+            .collect::<Result<Vec<_>>>()?;
+        self.assemble(front, heads)
+    }
+
+    /// Stage 1 — everything before the per-head split: Q/K/V linears,
+    /// quantizing LayerNorms, delay lines and the reversing module.
+    pub fn run_front(&self, x: &QTensor) -> Result<FrontOutput> {
         ensure!(
             x.spec.signed && x.spec.bits == self.bits,
             "input codes must be signed {}-bit, got {:?}",
             self.bits,
             x.spec
         );
-        let mut report = AttentionReport::default();
+        let mut blocks = Vec::with_capacity(8);
         let n = x.rows();
-        let d = self.wq.folded.codes.rows; // output dim of the projections
-        let dh = d / self.heads;
+        let dh = self.head_dim();
 
         // --- Q/K linears: post-scale diag(Δ_W) only (Δ̄_X cancels in LN).
         let q_pre = self.wq.run(x, &Epilogue::Scale(PostScale::WeightOnly))?;
@@ -150,69 +219,114 @@ impl AttentionSim {
         // --- V linear: quantizer epilogue (scales absorbed, §IV-B).
         let v_spec = QuantSpec::signed(self.bits, self.steps.s_v);
         let v_out = self.wv.run(x, &Epilogue::Quantize(v_spec))?;
-        report.blocks.push(q_pre.stats.clone());
-        report.blocks.push(k_pre.stats.clone());
-        report.blocks.push(v_out.stats.clone());
+        blocks.push(q_pre.stats.clone());
+        blocks.push(k_pre.stats.clone());
+        blocks.push(v_out.stats.clone());
 
         // --- quantizing LayerNorms on Q and K.
         let lnq_out = self.lnq.run(&q_pre.values, n)?;
         let lnk_out = self.lnk.run(&k_pre.values, n)?;
-        report.blocks.push(lnq_out.stats.clone());
-        report.blocks.push(lnk_out.stats.clone());
+        blocks.push(lnq_out.stats.clone());
+        blocks.push(lnk_out.stats.clone());
 
         // --- delay lines holding Q/K while the opposite path fills.
         let hold = q_pre.stats.cycles + lnq_out.stats.cycles;
-        report.blocks.push(DelayLineSim::new("Q delay", self.bits).run(n, dh, hold));
-        report.blocks.push(DelayLineSim::new("K delay", self.bits).run(n, dh, hold));
+        blocks.push(DelayLineSim::new("Q delay", self.bits).run(n, dh, hold));
+        blocks.push(DelayLineSim::new("K delay", self.bits).run(n, dh, hold));
 
         // --- reversing module on the V stream.
         let v_codes = v_out.codes.expect("quantize epilogue yields codes");
         let (v_rev, rev_stats) = ReversingSim::new("reversing").run(&v_codes.codes);
-        report.blocks.push(rev_stats);
+        blocks.push(rev_stats);
         // reverse back: the attn·V array consumes the stream in scan order;
         // numerically we keep the canonical layout.
         let (v_canon_mat, _) = ReversingSim::new("reversing-int").run(&v_rev);
         debug_assert_eq!(v_canon_mat.data, v_codes.codes.data);
         let v_canon = QTensor { codes: v_canon_mat, spec: v_spec };
 
-        // --- per-head QKᵀ+softmax and attn·V.
+        Ok(FrontOutput {
+            q_codes: lnq_out.codes,
+            k_codes: lnk_out.codes,
+            v_codes: v_canon,
+            blocks,
+        })
+    }
+
+    /// Stage 2 — one head's QKᵀ+softmax and attn·V over a shared front.
+    /// Pure function of `(front, h)`: shards run it concurrently.
+    pub fn run_head(&self, front: &FrontOutput, h: usize) -> Result<HeadOutput> {
+        ensure!(h < self.heads, "head {h} out of range (heads = {})", self.heads);
+        let dh = self.head_dim();
+        let attn_spec = QuantSpec::unsigned(self.attn_bits, self.steps.s_attn);
+        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
+        let qh = front.q_codes.slice_cols(h * dh, dh);
+        let kh = front.k_codes.slice_cols(h * dh, dh);
+        let vh = front.v_codes.slice_cols(h * dh, dh);
+        let qk = SoftmaxMatmulSim::new("QK^T matmul+softmax", self.bits).run(
+            &qh,
+            &kh,
+            &self.steps.score,
+            attn_spec,
+            self.shift,
+        )?;
+        let pv_h = MatmulArraySim::new("PV matmul", self.attn_bits).run(&qk.codes, &vh, out_spec)?;
+        Ok(HeadOutput {
+            head: h,
+            attn: qk.codes,
+            pv: pv_h.codes.codes,
+            qk_stats: qk.stats,
+            pv_stats: pv_h.stats,
+        })
+    }
+
+    /// Stage 3 — merge head shards (in head order) into the module
+    /// output, aggregate the Table I rows, and run the optional W_O
+    /// projection tail. Takes the front by value: its tensors move into
+    /// the output without copies.
+    pub fn assemble(&self, front: FrontOutput, mut heads: Vec<HeadOutput>) -> Result<AttentionOutput> {
+        ensure!(heads.len() == self.heads, "{} head shards for {} heads", heads.len(), self.heads);
+        heads.sort_by_key(|h| h.head);
+        let n = front.q_codes.rows();
+        let d = self.d_out();
+        let dh = self.head_dim();
+        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
+
+        let mut report = AttentionReport { blocks: front.blocks };
         let mut qk_agg = BlockStats::new("QK^T matmul+softmax", "N x N", 0);
         let mut pv_agg = BlockStats::new("PV matmul", "N x O", 0);
         let mut attn_codes = Vec::with_capacity(self.heads);
         let mut pv = vec![0i32; n * d];
-        let attn_spec = QuantSpec::unsigned(self.attn_bits, self.steps.s_attn);
-        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
-        for h in 0..self.heads {
-            let qh = lnq_out.codes.slice_cols(h * dh, dh);
-            let kh = lnk_out.codes.slice_cols(h * dh, dh);
-            let vh = v_canon.slice_cols(h * dh, dh);
-            let qk = SoftmaxMatmulSim::new("QK^T matmul+softmax", self.bits).run(
-                &qh,
-                &kh,
-                &self.steps.score,
-                attn_spec,
-                self.shift,
-            )?;
-            let pv_h =
-                MatmulArraySim::new("PV matmul", self.attn_bits).run(&qk.codes, &vh, out_spec)?;
+        for ho in heads {
+            let h = ho.head;
             for i in 0..n {
                 for j in 0..dh {
-                    pv[i * d + h * dh + j] = pv_h.codes.codes.at(i, j);
+                    pv[i * d + h * dh + j] = ho.pv.at(i, j);
                 }
             }
-            qk_agg.absorb(&qk.stats);
-            pv_agg.absorb(&pv_h.stats);
-            attn_codes.push(qk.codes);
+            qk_agg.absorb(&ho.qk_stats);
+            pv_agg.absorb(&ho.pv_stats);
+            attn_codes.push(ho.attn);
         }
         report.blocks.push(qk_agg);
         report.blocks.push(pv_agg);
 
+        let pv_codes = QTensor { codes: IntMat::new(n, d, pv), spec: out_spec };
+        // --- W_O tail: Eq. 2 with Δ̄_X = Δ_O (full post-scale — no
+        // LayerNorm follows the projection).
+        let mut out_values = None;
+        if let Some(wo) = &self.wo {
+            let o = wo.run(&pv_codes, &Epilogue::Scale(PostScale::Full))?;
+            report.blocks.push(o.stats);
+            out_values = Some(o.values);
+        }
+
         Ok(AttentionOutput {
-            pv_codes: QTensor { codes: IntMat::new(n, d, pv), spec: out_spec },
+            pv_codes,
+            out_values,
             attn_codes,
-            q_codes: lnq_out.codes,
-            k_codes: lnk_out.codes,
-            v_codes: v_canon,
+            q_codes: front.q_codes,
+            k_codes: front.k_codes,
+            v_codes: front.v_codes,
             report,
         })
     }
@@ -275,6 +389,7 @@ mod tests {
             wq: LinearArraySim::new("Q linear", fq.clone(), bits),
             wk: LinearArraySim::new("K linear", fk.clone(), bits),
             wv: LinearArraySim::new("V linear", fv.clone(), bits),
+            wo: None,
             lnq: LayerNormSim::new("Q LN", g.clone(), b.clone(), 0.5, bits),
             lnk: LayerNormSim::new("K LN", g.clone(), b.clone(), 0.5, bits),
             steps: steps.clone(),

@@ -37,6 +37,9 @@ fn assert_bit_identical(a: &ivit::backend::AttnResponse, b: &ivit::backend::Attn
     let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
     assert_eq!(oa.codes.data, ob.codes.data, "{label}: output codes");
     assert_eq!(oa.spec, ob.spec, "{label}: output spec");
+    // W_O wired: both integer backends emit the identical full fp output
+    assert_eq!(a.out_values, b.out_values, "{label}: W_O fp output");
+    assert!(a.out_values.is_some(), "{label}: W_O output present");
 }
 
 #[test]

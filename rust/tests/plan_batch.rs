@@ -1,0 +1,125 @@
+//! The plan/execute API contract, stated as tests:
+//!
+//! * **batch ≡ loop** — `ExecutionPlan::run_batch` over N rows is
+//!   bit-identical to N single `run_attention` calls, for `ref` and
+//!   `sim` at DeiT-S attention dimensions across every supported bit
+//!   width;
+//! * **sim-mt determinism** — the sharded plan's outputs are
+//!   bit-identical for 1/2/4 workers and equal to single-threaded
+//!   `sim`, and its merged stats obey the partition invariant (the sum
+//!   of shard MAC counts equals the unsharded total);
+//! * **W_O parity** — with the output projection wired, `ref` and `sim`
+//!   emit the same full fp attention output.
+
+use ivit::backend::{
+    AttnBatchRequest, AttnModule, AttnRequest, AttnResponse, Backend, PlanOptions,
+    ReferenceBackend, SimBackend, SimMtBackend,
+};
+
+const D_IN: usize = 384;
+const D_HEAD: usize = 64;
+
+fn batch(module: &AttnModule, tokens: usize, rows: u64) -> Vec<AttnRequest> {
+    (0..rows)
+        .map(|i| AttnRequest::new(module.random_input(tokens, 70 + i).expect("input")))
+        .collect()
+}
+
+fn assert_rows_identical(a: &AttnResponse, b: &AttnResponse, label: &str) {
+    let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+    assert_eq!(oa.codes.data, ob.codes.data, "{label}: output codes");
+    assert_eq!(oa.spec, ob.spec, "{label}: output spec");
+    assert_eq!(a.out_values, b.out_values, "{label}: fp output values");
+    let (sa, sb) = (a.stages.as_ref().unwrap(), b.stages.as_ref().unwrap());
+    assert_eq!(sa.q.codes.data, sb.q.codes.data, "{label}: Q codes");
+    assert_eq!(sa.k.codes.data, sb.k.codes.data, "{label}: K codes");
+    assert_eq!(sa.v.codes.data, sb.v.codes.data, "{label}: V codes");
+    assert_eq!(sa.attn_head0.codes.data, sb.attn_head0.codes.data, "{label}: attn codes");
+}
+
+#[test]
+fn batch_equals_loop_for_ref_and_sim_at_deit_s_dims() {
+    // DeiT-S attention dims (D_in=384, head dim 64); 2 rows per batch.
+    let tokens = 48;
+    for bits in [2u32, 3, 4, 8] {
+        let module = AttnModule::synthetic(D_IN, D_HEAD, 1, bits, 300 + bits as u64).unwrap();
+        let reqs = batch(&module, tokens, 2);
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(ReferenceBackend::new(module.clone())),
+            Box::new(SimBackend::new(module.clone())),
+        ];
+        for mut backend in backends {
+            let name = backend.name().to_string();
+            let label = format!("{bits}-bit {name}");
+            let singles: Vec<AttnResponse> =
+                reqs.iter().map(|r| backend.run_attention(r).expect("single run")).collect();
+            let mut plan = backend.plan(&PlanOptions::default()).expect("plan");
+            let batched =
+                plan.run_batch(&AttnBatchRequest::new(reqs.clone())).expect("batched run");
+            assert_eq!(batched.items.len(), singles.len(), "{label}: row count");
+            for (i, (a, b)) in batched.items.iter().zip(&singles).enumerate() {
+                assert_rows_identical(a, b, &format!("{label} row {i}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_mt_is_deterministic_across_worker_counts() {
+    let module = AttnModule::synthetic(48, 24, 3, 3, 91).unwrap();
+    let reqs = batch(&module, 20, 5);
+    let req = AttnBatchRequest::new(reqs);
+
+    // single-threaded sim is the oracle
+    let mut st_plan = SimBackend::new(module.clone()).plan(&PlanOptions::default()).unwrap();
+    let want = st_plan.run_batch(&req).unwrap();
+    let want_macs = want.report.as_ref().unwrap().total_macs();
+
+    for workers in [1usize, 2, 4] {
+        let backend = SimMtBackend::new(module.clone(), workers);
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        let got = plan.run_batch(&req).unwrap();
+        assert_eq!(got.items.len(), want.items.len());
+        for (i, (a, b)) in got.items.iter().zip(&want.items).enumerate() {
+            assert_rows_identical(a, b, &format!("sim-mt w={workers} row {i}"));
+        }
+        // merged-stats invariant: shard counters partition the work, so
+        // the batch MAC total equals the unsharded total for any worker
+        // count, and equals the sum over per-row reports.
+        let report = got.report.as_ref().unwrap();
+        assert_eq!(report.total_macs(), want_macs, "w={workers}: merged MAC total");
+        let per_row: u64 =
+            got.items.iter().map(|i| i.report.as_ref().unwrap().total_macs()).sum();
+        assert_eq!(report.total_macs(), per_row, "w={workers}: Σ row MACs");
+    }
+}
+
+#[test]
+fn wo_projection_gives_full_fp_output_on_both_integer_backends() {
+    let module = AttnModule::synthetic(32, 16, 2, 3, 11).unwrap();
+    assert!(module.wo.is_some(), "synthetic modules carry W_O");
+    let tokens = 9;
+    let req = AttnRequest::new(module.random_input(tokens, 5).unwrap());
+    let mut r = ReferenceBackend::new(module.clone());
+    let mut s = SimBackend::new(module.clone());
+    let (ra, sa) = (r.run_attention(&req).unwrap(), s.run_attention(&req).unwrap());
+    let (rv, sv) = (ra.out_values.as_ref().unwrap(), sa.out_values.as_ref().unwrap());
+    assert_eq!(rv.len(), tokens * module.d_out(), "full output is tokens × D");
+    // identical integer PV codes + identical fp epilogue → bit-identical
+    assert_eq!(rv, sv, "ref and sim W_O outputs");
+    // and the simulator accounts the O-linear block in its report
+    let report = sa.report.as_ref().unwrap();
+    let o = report.blocks.iter().find(|b| b.name == "O linear").expect("O linear block");
+    assert_eq!(o.mac_ops, (tokens * module.d_out() * module.d_out()) as u64);
+}
+
+#[test]
+fn run_one_adapter_matches_run_batch_of_one() {
+    let module = AttnModule::synthetic(24, 12, 2, 4, 33).unwrap();
+    let req = AttnRequest::new(module.random_input(7, 3).unwrap());
+    let backend = SimBackend::new(module);
+    let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+    let single = plan.run_one(&req).unwrap();
+    let batch = plan.run_batch(&AttnBatchRequest::single(req)).unwrap();
+    assert_rows_identical(&single, &batch.items[0], "run_one adapter");
+}
