@@ -6,12 +6,15 @@
 #   make bench       — the artifact-free benches (table1, sim speed, ablations)
 #   make bench-smoke — CI smoke: one tiny batch through every backend plan
 #                      (asserts bit-identical outputs across dispatch modes)
+#   make eval-smoke  — CI smoke: artifact-free `ivit eval --backend ref` on a
+#                      tiny synthetic checkpoint (8 images through the
+#                      integerized encoder-block stack, no PJRT needed)
 #   make artifacts   — lower the JAX model to HLO + export eval set / attn_case
 #                      (needs the python toolchain; see python/compile/)
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -27,6 +30,9 @@ bench:
 
 bench-smoke:
 	cd $(RUST_DIR) && IVIT_BENCH_SMOKE=1 cargo bench --bench throughput
+
+eval-smoke:
+	cd $(RUST_DIR) && cargo run --release -q -- eval --backend ref --limit 8 --images 8
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

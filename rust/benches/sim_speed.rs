@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use ivit::backend::{AttnModule, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
-use ivit::bench::{bench_for, report};
+use ivit::bench::{bench_for, report, BenchRecord};
 use ivit::quant::fold::{FoldedLinear, QuantParams};
 use ivit::quant::linear::IntMat;
 use ivit::quant::{QTensor, QuantSpec, ScaleChain, Step};
@@ -83,6 +83,18 @@ fn main() {
     }
 
     report(&timings);
+    // machine-readable trajectory (IVIT_BENCH_JSON, JSON Lines)
+    for t in &timings {
+        BenchRecord::new("sim_speed")
+            .str_field("bench", &t.name)
+            .num("mean_s", t.mean.as_secs_f64())
+            .num("per_s", t.per_sec())
+            .emit();
+    }
+    BenchRecord::new("sim_speed.pe_cycles")
+        .num("pe_cycles_per_run", pe_cycles as f64)
+        .num("pe_cycles_per_s", rate)
+        .emit();
     println!("\nfull-module simulation: {pe_cycles} PE-cycles per run");
     println!("simulator rate: {:.1}M PE-cycles/s (target ≥ 10M)", rate / 1e6);
     println!(

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use ivit::backend::{
     AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions,
 };
-use ivit::bench::TableWriter;
+use ivit::bench::{BenchRecord, TableWriter};
 use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
 use ivit::util::XorShift;
@@ -115,6 +115,20 @@ fn batch_vs_per_row() -> anyhow::Result<()> {
     print!("{}", tbl.render());
     let batch_ratio = per_row_wall / batched_wall;
     let mt_ratio = batched_wall / sharded_wall;
+    // machine-readable trajectory (IVIT_BENCH_JSON, JSON Lines)
+    for (dispatch, backend, wall) in [
+        ("per-row", "sim", per_row_wall),
+        ("batched", "sim", batched_wall),
+        ("batched", "sim-mt", sharded_wall),
+    ] {
+        BenchRecord::new("throughput.batch_vs_per_row")
+            .str_field("dispatch", dispatch)
+            .str_field("backend", backend)
+            .num("rows", rows as f64)
+            .num("rows_per_s", rows as f64 / wall)
+            .num("ratio_vs_per_row", per_row_wall / wall)
+            .emit();
+    }
     println!("\nbatched sim vs per-row dispatch : {batch_ratio:.2}x rows/sec (target >= 1.5x)");
     println!("sim-mt (4 workers) vs sim       : {mt_ratio:.2}x rows/sec (target > 1x)");
     if smoke() {
@@ -173,6 +187,14 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
         }
         let wall = t0.elapsed().as_secs_f64();
         let s = coord.shutdown();
+        BenchRecord::new("throughput.attention_serving")
+            .str_field("backend", name)
+            .num("tokens", tokens as f64)
+            .num("batch", batch as f64)
+            .num("req_per_s", n_requests as f64 / wall)
+            .num("p50_ms", s.p50_us as f64 / 1e3)
+            .num("p99_ms", s.p99_us as f64 / 1e3)
+            .emit();
         tbl.row(vec![
             name.to_string(),
             tokens.to_string(),

@@ -100,5 +100,33 @@ fn main() -> Result<()> {
         assert_eq!(a, b, "{a_name} and {b_name} must be bit-identical on every row");
         println!("{a_name} ≡ {b_name}: bit-identical output codes on all rows ✓");
     }
+
+    // --- block scope: the same plan API runs a whole encoder block
+    // (LN → attention → +residual → LN → MLP → +residual)
+    use ivit::backend::{Backend, PlanScope, ReferenceBackend, SimBackend};
+    use ivit::block::EncoderBlock;
+    println!("\nencoder-block scope (MLP + residual path included):");
+    let block = EncoderBlock::synthetic(64, 256, 2, 3, 5)?;
+    let bx = AttnRequest::new(block.random_input(16, 3)?);
+    let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+    let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts)?;
+    let mut sim_plan = SimBackend::for_block(block).plan(&opts)?;
+    let a = ref_plan.run_one(&bx)?;
+    let b = sim_plan.run_one(&bx)?;
+    assert_eq!(
+        a.out_codes.as_ref().unwrap().codes.data,
+        b.out_codes.as_ref().unwrap().codes.data,
+        "block ref ≡ sim"
+    );
+    println!("ref ≡ sim on the full block ✓");
+    if let Some(report) = &b.report {
+        let m = EnergyModel::default();
+        println!(
+            "block hardware: {:.2}M MACs across {} rows (incl. FC1/FC2/GELU LUT), {:.2} W modelled",
+            report.total_macs() as f64 / 1e6,
+            report.blocks.len(),
+            report.total_power_w(&m),
+        );
+    }
     Ok(())
 }

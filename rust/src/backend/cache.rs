@@ -1,0 +1,173 @@
+//! [`PlanCache`] — plan-level memoization (the ROADMAP follow-up to the
+//! plan/execute redesign).
+//!
+//! `Backend::plan` performs all one-time work (scale folding, `to_sim`
+//! lowering, engine binding, worker-pool spawn). Repeated
+//! `serve`/`simulate` invocations in one process used to rebuild that
+//! plan every time; the cache keys plans by **backend name +
+//! description + [`PlanOptions`]** and hands back the resident plan on
+//! a hit, so cold and warm calls execute the *same* plan object (and
+//! are therefore trivially bit-identical — pinned by tests).
+//!
+//! ### Key semantics (and their limit)
+//!
+//! The key is textual: `name | describe() | workers | row-shard |
+//! scope`. Backend `describe()` strings carry the module geometry, bit
+//! width and (for block backends) the block label, so distinct
+//! configurations and distinct stacked blocks get distinct entries.
+//! Two backends with the *same* description but different weights would
+//! collide — callers juggling same-shaped, differently-weighted modules
+//! in one process must label them (see
+//! [`crate::block::EncoderBlock::label`]) or use separate caches.
+//!
+//! A process-wide instance is available through [`PlanCache::global`]
+//! (what `ivit simulate` routes through).
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use super::{Backend, ExecutionPlan, PlanOptions};
+
+/// Name-keyed memoization of [`ExecutionPlan`]s.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: BTreeMap<String, Box<dyn ExecutionPlan>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The cache key for planning `backend` with `opts`.
+    pub fn key(backend: &dyn Backend, opts: &PlanOptions) -> String {
+        format!(
+            "{}|{}|workers={}|rowshard={}|scope={:?}",
+            backend.name(),
+            backend.describe(),
+            opts.workers,
+            opts.row_shard_threshold,
+            opts.scope,
+        )
+    }
+
+    /// Return the resident plan for `(backend, opts)`, planning it on
+    /// first use. The returned borrow is the cached instance itself, so
+    /// warm callers reuse folded scales, lowered simulators and worker
+    /// pools without paying plan-time work again.
+    pub fn get_or_plan(
+        &mut self,
+        backend: &dyn Backend,
+        opts: &PlanOptions,
+    ) -> Result<&mut dyn ExecutionPlan> {
+        let key = Self::key(backend, opts);
+        match self.plans.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits += 1;
+                Ok(e.into_mut().as_mut())
+            }
+            Entry::Vacant(v) => {
+                self.misses += 1;
+                Ok(v.insert(backend.plan(opts)?).as_mut())
+            }
+        }
+    }
+
+    /// Plans served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Plans built (first use of a key).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Resident plan count.
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Drop every resident plan (worker pools join on drop).
+    pub fn clear(&mut self) {
+        self.plans.clear();
+    }
+
+    /// The process-wide cache (plans survive across command invocations
+    /// inside one process).
+    pub fn global() -> &'static Mutex<PlanCache> {
+        static GLOBAL: OnceLock<Mutex<PlanCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Mutex::new(PlanCache::new()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{
+        AttnBatchRequest, AttnModule, AttnRequest, PlanScope, ReferenceBackend, SimBackend,
+    };
+    use crate::block::EncoderBlock;
+
+    #[test]
+    fn cache_hit_returns_the_resident_plan_and_outputs_stay_bit_identical() {
+        let module = AttnModule::synthetic(12, 6, 2, 3, 5).unwrap();
+        let backend = ReferenceBackend::new(module.clone());
+        let mut cache = PlanCache::new();
+        let opts = PlanOptions::default();
+        let req = AttnBatchRequest::single(AttnRequest::new(module.random_input(4, 1).unwrap()));
+
+        let cold = cache.get_or_plan(&backend, &opts).unwrap().run_batch(&req).unwrap();
+        assert_eq!((cache.misses(), cache.hits(), cache.len()), (1, 0, 1));
+        let warm = cache.get_or_plan(&backend, &opts).unwrap().run_batch(&req).unwrap();
+        // the second lookup did NOT build a plan — it reused the resident one
+        assert_eq!((cache.misses(), cache.hits(), cache.len()), (1, 1, 1));
+        assert_eq!(
+            cold.items[0].out_codes.as_ref().unwrap().codes.data,
+            warm.items[0].out_codes.as_ref().unwrap().codes.data,
+            "cold and warm outputs must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn distinct_options_and_backends_get_distinct_entries() {
+        let module = AttnModule::synthetic(12, 6, 2, 3, 5).unwrap();
+        let r = ReferenceBackend::new(module.clone());
+        let s = SimBackend::new(module);
+        let mut cache = PlanCache::new();
+        cache.get_or_plan(&r, &PlanOptions::default()).unwrap();
+        cache.get_or_plan(&s, &PlanOptions::default()).unwrap();
+        cache
+            .get_or_plan(&r, &PlanOptions { workers: 3, ..PlanOptions::default() })
+            .unwrap();
+        assert_eq!((cache.misses(), cache.hits(), cache.len()), (3, 0, 3));
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn stacked_blocks_key_apart_by_label() {
+        let mut a = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
+        let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 8).unwrap();
+        a.label = "block0".into();
+        b.label = "block1".into();
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let ka = PlanCache::key(&ReferenceBackend::for_block(a), &opts);
+        let kb = PlanCache::key(&ReferenceBackend::for_block(b), &opts);
+        assert_ne!(ka, kb, "same-geometry blocks must not collide: {ka}");
+        // and scope is part of the key too
+        let a2 = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
+        let k_attn =
+            PlanCache::key(&ReferenceBackend::for_block(a2), &PlanOptions::default());
+        assert_ne!(ka, k_attn);
+    }
+}

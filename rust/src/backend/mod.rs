@@ -44,6 +44,26 @@
 //! description + planning) and its `ExecutionPlan` (the batch executor).
 //! See [`SimMtBackend`] for the canonical sharded example.
 //!
+//! ## Plan scope: attention vs whole encoder block
+//!
+//! [`PlanOptions::scope`] selects what each request row executes:
+//! [`PlanScope::Attention`] (the paper's synthesized Fig. 2 module, the
+//! default) or [`PlanScope::Block`] — one full
+//! [`crate::block::EncoderBlock`] (LN → attention → +residual → LN →
+//! MLP → +residual). Block plans consume the same [`AttnRequest`] /
+//! [`AttnBatchRequest`] shapes (input codes in the *block's* input
+//! spec) and return the block's output codes in `out_codes`; the
+//! simulator plans merge MLP/residual/LN rows into the same
+//! [`AttentionReport`]. Backends are given their block through
+//! [`BackendConfig::block`] or the `for_block` constructors; planning
+//! at block scope without one is an error, never a silent fallback.
+//! Bit-identity across `ref`/`sim`/`sim-mt` extends to the whole block
+//! (`tests/block_parity.rs`, DeiT-S dims, bits 2/3/4/8).
+//!
+//! Re-planning the same backend repeatedly (serve/simulate loops in one
+//! process) can route through [`PlanCache`], which memoizes plans by
+//! backend name + description + [`PlanOptions`] key.
+//!
 //! ## The typed-operand contract (`QTensor` / `ScaleChain`)
 //!
 //! Requests and responses never carry bare code buffers or raw `f32`
@@ -67,6 +87,7 @@
 //! `use_w_scale_only: bool` now takes these types; folding a scale
 //! twice, skipping it, or dividing the wrong way no longer typechecks.
 
+pub mod cache;
 pub mod pjrt;
 pub mod reference;
 pub mod registry;
@@ -87,6 +108,7 @@ use crate::sim::AttentionReport;
 use crate::util::XorShift;
 
 pub use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
+pub use cache::PlanCache;
 pub use pjrt::PjrtBackend;
 pub use reference::ReferenceBackend;
 pub use registry::{BackendConfig, BackendRegistry};
@@ -145,6 +167,21 @@ pub struct AttnResponse {
     pub elapsed: Duration,
 }
 
+/// What a plan executes per request row: the self-attention module
+/// alone (the paper's synthesized unit) or a whole encoder block
+/// (LN → attention → +residual → LN → MLP → +residual, the
+/// [`crate::block::EncoderBlock`] composition). Block-scope planning
+/// requires the backend to have been built with a block (see
+/// [`BackendConfig::block`] / the `for_block` constructors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanScope {
+    /// Attention-only (Fig. 2): the original request unit.
+    #[default]
+    Attention,
+    /// Full encoder block: MLP and residual requantization included.
+    Block,
+}
+
 /// One-time execution-setup knobs consumed by [`Backend::plan`].
 #[derive(Debug, Clone)]
 pub struct PlanOptions {
@@ -154,11 +191,14 @@ pub struct PlanOptions {
     /// Batch size at or above which sharded plans also split the
     /// per-row front stage across workers (heads always shard).
     pub row_shard_threshold: usize,
+    /// What each request row executes: attention only, or the whole
+    /// encoder block.
+    pub scope: PlanScope,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { workers: 0, row_shard_threshold: 2 }
+        PlanOptions { workers: 0, row_shard_threshold: 2, scope: PlanScope::Attention }
     }
 }
 

@@ -136,7 +136,11 @@ impl Backend for PjrtBackend {
     /// a coordinator worker thread while the backend stays behind —
     /// exclusive ownership is what keeps both sides sound, at the cost
     /// of one extra artifact load per plan.
-    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        ensure!(
+            opts.scope == super::PlanScope::Attention,
+            "the pjrt backend has no encoder-block artifact — block scope runs on ref/sim/sim-mt"
+        );
         Ok(Box::new(PjrtPlan { inner: PjrtBackend::load(&self.artifacts, self.bits)? }))
     }
 

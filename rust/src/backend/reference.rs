@@ -17,24 +17,39 @@ use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
 use crate::quant::round_half_even;
 use crate::quant::softmax::qk_attention;
 
+use crate::block::EncoderBlock;
+
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, AttnResponse, Backend,
-    Capabilities, ExecutionPlan, PlanOptions, StageCodes,
+    Capabilities, ExecutionPlan, PlanOptions, PlanScope, StageCodes,
 };
 
 /// The quant-composition reference execution path.
 #[derive(Debug)]
 pub struct ReferenceBackend {
     module: AttnModule,
+    /// The encoder block this backend plans at [`PlanScope::Block`];
+    /// `None` for attention-only backends.
+    block: Option<EncoderBlock>,
 }
 
 impl ReferenceBackend {
     pub fn new(module: AttnModule) -> ReferenceBackend {
-        ReferenceBackend { module }
+        ReferenceBackend { module, block: None }
+    }
+
+    /// A backend that can plan the whole encoder block (its attention
+    /// half also serves [`PlanScope::Attention`] plans).
+    pub fn for_block(block: EncoderBlock) -> ReferenceBackend {
+        ReferenceBackend { module: block.attn.clone(), block: Some(block) }
     }
 
     pub fn module(&self) -> &AttnModule {
         &self.module
+    }
+
+    pub fn block(&self) -> Option<&EncoderBlock> {
+        self.block.as_ref()
     }
 }
 
@@ -85,21 +100,23 @@ fn transpose(m: &IntMat) -> IntMat {
     IntMat::new(m.cols, m.rows, data)
 }
 
-/// One attention inference through the quant composition. Shared by the
-/// single-request adapter and [`RefPlan::run_batch`], so batch ≡ loop
-/// bit-for-bit by construction.
-fn run_row(module: &AttnModule, req: &AttnRequest) -> Result<AttnResponse> {
+/// One attention inference through the quant composition — the golden
+/// reference every substrate must reproduce. Shared by the
+/// single-request adapter, [`RefPlan::run_batch`] (so batch ≡ loop
+/// bit-for-bit by construction) and the encoder-block composition
+/// ([`crate::block::EncoderBlock::run_reference`]).
+pub fn reference_attention(module: &AttnModule, x: &QTensor) -> Result<AttnResponse> {
     let t0 = Instant::now();
-    check_input(module, &req.x)?;
+    check_input(module, x)?;
     let m = module;
-    let (n, d) = (req.x.rows(), m.d_out());
+    let (n, d) = (x.rows(), m.d_out());
     let dh = d / m.heads;
     let steps = &m.steps;
 
     // Q/K linears post-scaled by diag(Δ_W) only; V through its quantizer.
-    let q_pre = linear_fp(&req.x.codes, &m.wq, true)?;
-    let k_pre = linear_fp(&req.x.codes, &m.wk, true)?;
-    let v_acc = int_matmul(&req.x.codes, &m.wv.codes)?;
+    let q_pre = linear_fp(&x.codes, &m.wq, true)?;
+    let k_pre = linear_fp(&x.codes, &m.wk, true)?;
+    let v_acc = int_matmul(&x.codes, &m.wv.codes)?;
     let v_spec = QuantSpec::signed(m.bits, steps.s_v);
     let (v_min, v_max) = v_spec.range();
     let mut v_data = vec![0i32; n * d];
@@ -221,7 +238,51 @@ impl ExecutionPlan for RefPlan {
         let items = req
             .items
             .iter()
-            .map(|r| run_row(&self.module, r))
+            .map(|r| reference_attention(&self.module, &r.x))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    }
+}
+
+/// The reference backend's whole-block plan: each batch row runs the
+/// encoder-block quant composition (LN → attention → +residual → LN →
+/// MLP → +residual) and returns the block's output codes.
+#[derive(Debug)]
+pub struct RefBlockPlan {
+    block: EncoderBlock,
+}
+
+impl RefBlockPlan {
+    pub fn new(block: EncoderBlock) -> RefBlockPlan {
+        RefBlockPlan { block }
+    }
+}
+
+impl ExecutionPlan for RefBlockPlan {
+    fn backend_name(&self) -> &str {
+        "ref"
+    }
+
+    fn describe(&self) -> String {
+        format!("quant golden reference, {}", self.block.describe())
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| {
+                let row_t0 = Instant::now();
+                let out = self.block.run_reference(&r.x)?;
+                Ok(AttnResponse {
+                    out_codes: Some(out),
+                    out_values: None,
+                    stages: None,
+                    report: None,
+                    elapsed: row_t0.elapsed(),
+                })
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
     }
@@ -237,18 +298,29 @@ impl Backend for ReferenceBackend {
     }
 
     fn describe(&self) -> String {
-        describe_module(&self.module)
+        match &self.block {
+            Some(b) => format!("{} + {}", describe_module(&self.module), b.describe()),
+            None => describe_module(&self.module),
+        }
     }
 
-    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
-        Ok(Box::new(RefPlan::new(self.module.clone())))
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        match opts.scope {
+            PlanScope::Attention => Ok(Box::new(RefPlan::new(self.module.clone()))),
+            PlanScope::Block => {
+                let block = self.block.clone().ok_or_else(|| {
+                    anyhow::anyhow!("ref backend was built without an encoder block (scope=Block)")
+                })?;
+                Ok(Box::new(RefBlockPlan::new(block)))
+            }
+        }
     }
 
     /// Direct batch-of-one over the backend's own module — identical to
     /// `RefPlan::run_batch` row execution, without the per-call module
     /// snapshot the default adapter would take.
     fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
-        run_row(&self.module, req)
+        reference_attention(&self.module, &req.x)
     }
 }
 
@@ -283,6 +355,26 @@ mod tests {
         )
         .unwrap();
         assert!(b.run_attention(&AttnRequest::new(bad)).is_err());
+    }
+
+    #[test]
+    fn block_scope_plans_run_the_whole_block() {
+        use crate::backend::PlanScope;
+        use crate::block::EncoderBlock;
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 31).unwrap();
+        let x = block.random_input(4, 1).unwrap();
+        let want = block.run_reference(&x).unwrap();
+        let backend = ReferenceBackend::for_block(block);
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let mut plan = backend.plan(&opts).unwrap();
+        assert!(plan.describe().contains("encoder block"));
+        let resp = plan.run_one(&AttnRequest::new(x)).unwrap();
+        assert_eq!(resp.out_codes.unwrap().codes.data, want.codes.data);
+        // a block backend still plans plain attention
+        assert!(backend.plan(&PlanOptions::default()).is_ok());
+        // attention-only backends refuse block scope — never a fallback
+        let plain = ReferenceBackend::new(AttnModule::synthetic(12, 6, 2, 3, 1).unwrap());
+        assert!(plain.plan(&opts).is_err());
     }
 
     #[test]

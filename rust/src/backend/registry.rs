@@ -10,6 +10,8 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
+use crate::block::EncoderBlock;
+
 use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend, SimMtBackend};
 
 /// Everything a factory may need to build a backend.
@@ -21,6 +23,12 @@ pub struct BackendConfig {
     /// create backends — guaranteeing both sides see the same module
     /// and the attn_case tensors are read from disk only once.
     pub module: Option<AttnModule>,
+    /// An encoder block to plan at [`super::PlanScope::Block`]. When
+    /// set, the integer-backend factories build `for_block` backends
+    /// (whose attention half is the block's own attention module);
+    /// when `None`, backends are attention-only and block-scope
+    /// planning errors out.
+    pub block: Option<EncoderBlock>,
     /// Artifacts directory; when it holds an exported `attn_case`, the
     /// integer backends replay that exact module, and `pjrt` compiles
     /// its executable from it.
@@ -43,6 +51,7 @@ impl Default for BackendConfig {
         // DeiT-S attention geometry (paper §V-B)
         BackendConfig {
             module: None,
+            block: None,
             artifacts: None,
             d_in: 384,
             d_head: 64,
@@ -99,13 +108,25 @@ impl BackendRegistry {
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
         r.register("ref", |cfg| {
-            Ok(Box::new(ReferenceBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>)
+            Ok(match &cfg.block {
+                Some(b) => Box::new(ReferenceBackend::for_block(b.clone())) as Box<dyn Backend>,
+                None => Box::new(ReferenceBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>,
+            })
         });
         r.register("sim", |cfg| {
-            Ok(Box::new(SimBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>)
+            Ok(match &cfg.block {
+                Some(b) => Box::new(SimBackend::for_block(b.clone())) as Box<dyn Backend>,
+                None => Box::new(SimBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>,
+            })
         });
         r.register("sim-mt", |cfg| {
-            Ok(Box::new(SimMtBackend::new(cfg.resolve_module()?, cfg.workers)) as Box<dyn Backend>)
+            Ok(match &cfg.block {
+                Some(b) => {
+                    Box::new(SimMtBackend::for_block(b.clone(), cfg.workers)) as Box<dyn Backend>
+                }
+                None => Box::new(SimMtBackend::new(cfg.resolve_module()?, cfg.workers))
+                    as Box<dyn Backend>,
+            })
         });
         r.register("pjrt", |cfg| {
             let dir = cfg
@@ -204,6 +225,28 @@ mod tests {
             let resp = plan.run_batch(&AttnBatchRequest::new(reqs.clone())).unwrap();
             assert_eq!(resp.items.len(), 3, "{name}");
         }
+    }
+
+    #[test]
+    fn block_seeded_config_builds_block_capable_backends() {
+        use crate::backend::{AttnBatchRequest, PlanOptions, PlanScope};
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 61).unwrap();
+        let cfg =
+            BackendConfig { block: Some(block.clone()), workers: 2, ..BackendConfig::default() };
+        let r = BackendRegistry::with_defaults();
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let x = block.random_input(4, 1).unwrap();
+        let want = block.run_reference(&x).unwrap().codes.data;
+        for name in ["ref", "sim", "sim-mt"] {
+            let b = r.create(name, &cfg).unwrap();
+            let mut plan = b.plan(&opts).unwrap();
+            let req = AttnBatchRequest::single(AttnRequest::new(x.clone()));
+            let resp = plan.run_batch(&req).unwrap();
+            assert_eq!(resp.items[0].out_codes.as_ref().unwrap().codes.data, want, "{name}");
+        }
+        // without a block, block-scope planning is an explicit error
+        let plain = r.create("ref", &small_cfg()).unwrap();
+        assert!(plain.plan(&opts).is_err());
     }
 
     #[test]

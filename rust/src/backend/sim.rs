@@ -14,17 +14,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::block::EncoderBlock;
+
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, PlanOptions, StageCodes,
+    ExecutionPlan, PlanOptions, PlanScope, StageCodes,
 };
 use crate::sim::attention::{AttentionOutput, AttentionSim};
+use crate::sim::block::BlockSim;
 use crate::sim::{AttentionReport, EnergyModel};
 
 /// The systolic-array simulator execution path.
 #[derive(Debug)]
 pub struct SimBackend {
     module: AttnModule,
+    /// The encoder block this backend plans at [`PlanScope::Block`].
+    block: Option<EncoderBlock>,
     /// The backend's own resident plan, built once at construction so
     /// direct `run_attention` calls stay amortized (no re-lowering).
     resident: SimPlan,
@@ -34,11 +39,23 @@ pub struct SimBackend {
 impl SimBackend {
     pub fn new(module: AttnModule) -> SimBackend {
         let resident = SimPlan::new(&module);
-        SimBackend { module, resident, energy: EnergyModel::default() }
+        SimBackend { module, block: None, resident, energy: EnergyModel::default() }
+    }
+
+    /// A backend that can plan the whole encoder block (its attention
+    /// half also serves [`PlanScope::Attention`] plans).
+    pub fn for_block(block: EncoderBlock) -> SimBackend {
+        let module = block.attn.clone();
+        let resident = SimPlan::new(&module);
+        SimBackend { module, block: Some(block), resident, energy: EnergyModel::default() }
     }
 
     pub fn module(&self) -> &AttnModule {
         &self.module
+    }
+
+    pub fn block(&self) -> Option<&EncoderBlock> {
+        self.block.as_ref()
     }
 
     /// The energy model used for power summaries in [`Self::describe`].
@@ -124,6 +141,47 @@ impl ExecutionPlan for SimPlan {
     }
 }
 
+/// Whole-block simulator plan: the lowered [`BlockSim`] (pre-LN banks,
+/// attention arrays, residual requantizers, FC1/GELU-LUT/FC2). Every
+/// row's merged hardware rows land in the response report.
+#[derive(Debug)]
+pub struct SimBlockPlan {
+    sim: BlockSim,
+}
+
+impl SimBlockPlan {
+    pub fn new(block: &EncoderBlock) -> SimBlockPlan {
+        SimBlockPlan { sim: block.to_sim() }
+    }
+}
+
+impl ExecutionPlan for SimBlockPlan {
+    fn backend_name(&self) -> &str {
+        "sim"
+    }
+
+    fn describe(&self) -> String {
+        format!("systolic-array simulator, encoder block '{}' (D={})", self.sim.label, self.sim.d())
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let mut items = Vec::with_capacity(req.items.len());
+        for r in &req.items {
+            let row_t0 = Instant::now();
+            let out = self.sim.run(&r.x)?;
+            items.push(AttnResponse {
+                out_codes: Some(out.out_codes),
+                out_values: None,
+                stages: None,
+                report: Some(out.report),
+                elapsed: row_t0.elapsed(),
+            });
+        }
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+    }
+}
+
 impl Backend for SimBackend {
     fn name(&self) -> &str {
         "sim"
@@ -134,11 +192,22 @@ impl Backend for SimBackend {
     }
 
     fn describe(&self) -> String {
-        describe_module(&self.module)
+        match &self.block {
+            Some(b) => format!("{} + {}", describe_module(&self.module), b.describe()),
+            None => describe_module(&self.module),
+        }
     }
 
-    fn plan(&self, _opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
-        Ok(Box::new(SimPlan::new(&self.module)))
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        match opts.scope {
+            PlanScope::Attention => Ok(Box::new(SimPlan::new(&self.module))),
+            PlanScope::Block => {
+                let block = self.block.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("sim backend was built without an encoder block (scope=Block)")
+                })?;
+                Ok(Box::new(SimBlockPlan::new(block)))
+            }
+        }
     }
 
     /// Batch-of-one through the resident plan — same code path as
@@ -168,6 +237,23 @@ mod tests {
         // accounts the O-linear block.
         assert_eq!(resp.out_values.unwrap().len(), 6 * 8);
         assert!(report.blocks.iter().any(|bl| bl.name == "O linear"));
+    }
+
+    #[test]
+    fn block_scope_surfaces_the_merged_block_report() {
+        use crate::backend::{AttnRequest, PlanScope};
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 41).unwrap();
+        let x = block.random_input(4, 2).unwrap();
+        let want = block.run_reference(&x).unwrap();
+        let backend = SimBackend::for_block(block);
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let mut plan = backend.plan(&opts).unwrap();
+        let resp = plan.run_one(&AttnRequest::new(x)).unwrap();
+        assert_eq!(resp.out_codes.unwrap().codes.data, want.codes.data);
+        let report = resp.report.expect("block sim surfaces stats");
+        for row in ["FC1 linear", "GELU LUT", "residual add 2"] {
+            assert!(report.blocks.iter().any(|b| b.name == row), "missing {row}");
+        }
     }
 
     #[test]

@@ -31,15 +31,19 @@ use anyhow::{anyhow, Context, Result};
 
 use super::sim::{merge_batch_report, response_from_output};
 use super::{
-    AttnBatchRequest, AttnBatchResponse, AttnModule, Backend, Capabilities, ExecutionPlan,
-    PlanOptions, QTensor,
+    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
+    ExecutionPlan, PlanOptions, PlanScope, QTensor,
 };
+use crate::block::EncoderBlock;
 use crate::sim::attention::{AttentionSim, FrontOutput, HeadOutput};
+use crate::sim::block::BlockSim;
 
 /// The sharded simulator backend. `workers == 0` means "pick at plan
 /// time": available parallelism, capped at 8.
 pub struct SimMtBackend {
     module: AttnModule,
+    /// The encoder block this backend plans at [`PlanScope::Block`].
+    block: Option<EncoderBlock>,
     workers: usize,
     /// Lazily built resident plan so direct `run_attention` calls reuse
     /// one worker pool instead of spawning and joining a pool per call.
@@ -48,7 +52,14 @@ pub struct SimMtBackend {
 
 impl SimMtBackend {
     pub fn new(module: AttnModule, workers: usize) -> SimMtBackend {
-        SimMtBackend { module, workers, resident: None }
+        SimMtBackend { module, block: None, workers, resident: None }
+    }
+
+    /// A backend that can plan the whole encoder block (its attention
+    /// half also serves [`PlanScope::Attention`] plans).
+    pub fn for_block(block: EncoderBlock, workers: usize) -> SimMtBackend {
+        let module = block.attn.clone();
+        SimMtBackend { module, block: Some(block), workers, resident: None }
     }
 
     pub fn module(&self) -> &AttnModule {
@@ -89,11 +100,23 @@ impl Backend for SimMtBackend {
     }
 
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
-        Ok(Box::new(SimMtPlan::new(
-            self.module.to_sim(),
-            self.resolve_workers(opts),
-            opts.row_shard_threshold,
-        )))
+        match opts.scope {
+            PlanScope::Attention => Ok(Box::new(SimMtPlan::new(
+                self.module.to_sim(),
+                self.resolve_workers(opts),
+                opts.row_shard_threshold,
+            ))),
+            PlanScope::Block => {
+                let block = self.block.as_ref().ok_or_else(|| {
+                    anyhow!("sim-mt backend was built without an encoder block (scope=Block)")
+                })?;
+                Ok(Box::new(SimMtBlockPlan::new(
+                    block,
+                    self.resolve_workers(opts),
+                    opts.row_shard_threshold,
+                )))
+            }
+        }
     }
 
     /// Batch-of-one through a resident plan (pool spawned on first use,
@@ -297,6 +320,81 @@ impl ExecutionPlan for SimMtPlan {
     }
 }
 
+/// The sharded whole-block plan: one lowered [`BlockSim`] shared by the
+/// worker pool, batch **rows** as the shard unit (every shard runs the
+/// full LN/attention/residual/MLP pipeline for its row). Shards are
+/// pure functions of `(block, row)` merged by index, so outputs are
+/// bit-identical for any worker count — including the single-threaded
+/// `sim` block plan.
+pub struct SimMtBlockPlan {
+    sim: Arc<BlockSim>,
+    pool: WorkerPool,
+    workers: usize,
+    row_threshold: usize,
+}
+
+impl SimMtBlockPlan {
+    pub fn new(block: &EncoderBlock, workers: usize, row_threshold: usize) -> SimMtBlockPlan {
+        SimMtBlockPlan {
+            sim: Arc::new(block.to_sim()),
+            pool: WorkerPool::new(workers),
+            workers,
+            row_threshold,
+        }
+    }
+}
+
+impl ExecutionPlan for SimMtBlockPlan {
+    fn backend_name(&self) -> &str {
+        "sim-mt"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded systolic simulator, encoder block '{}' (D={}), {} workers (row shard ≥ {})",
+            self.sim.label,
+            self.sim.d(),
+            self.workers,
+            self.row_threshold,
+        )
+    }
+
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let b = req.items.len();
+        if b == 0 {
+            return Ok(AttnBatchResponse { items: Vec::new(), report: None, elapsed: t0.elapsed() });
+        }
+        let outs = if b < self.row_threshold || self.workers < 2 {
+            req.items.iter().map(|r| self.sim.run(&r.x)).collect::<Result<Vec<_>>>()?
+        } else {
+            let xs: Arc<Vec<QTensor>> = Arc::new(req.items.iter().map(|r| r.x.clone()).collect());
+            let (tx, rx) = mpsc::channel();
+            for i in 0..b {
+                let (sim, xs, tx) = (Arc::clone(&self.sim), Arc::clone(&xs), tx.clone());
+                self.pool.submit(Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| sim.run(&xs[i])))
+                        .unwrap_or_else(|_| Err(anyhow!("block shard {i} panicked")));
+                    let _ = tx.send((i, r));
+                }))?;
+            }
+            drop(tx);
+            collect_indexed(rx, b, "block")?
+        };
+        let items: Vec<AttnResponse> = outs
+            .into_iter()
+            .map(|out| AttnResponse {
+                out_codes: Some(out.out_codes),
+                out_values: None,
+                stages: None,
+                report: Some(out.report),
+                elapsed: t0.elapsed() / b as u32,
+            })
+            .collect();
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,5 +461,31 @@ mod tests {
         let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
         let resp = plan.run_batch(&AttnBatchRequest::default()).unwrap();
         assert!(resp.items.is_empty() && resp.report.is_none());
+    }
+
+    #[test]
+    fn block_plan_is_bit_identical_across_worker_counts() {
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 51).unwrap();
+        let reqs: Vec<AttnRequest> = (0..4u64)
+            .map(|i| AttnRequest::new(block.random_input(5, 80 + i).unwrap()))
+            .collect();
+        let req = AttnBatchRequest::new(reqs);
+        let want: Vec<Vec<i32>> = req
+            .items
+            .iter()
+            .map(|r| block.run_reference(&r.x).unwrap().codes.data)
+            .collect();
+        for workers in [1usize, 2, 4] {
+            let mut plan = SimMtBlockPlan::new(&block, workers, 2);
+            let got = plan.run_batch(&req).unwrap();
+            assert_eq!(got.items.len(), want.len());
+            for (g, w) in got.items.iter().zip(&want) {
+                assert_eq!(&g.out_codes.as_ref().unwrap().codes.data, w, "{workers} workers");
+            }
+            assert!(got.report.unwrap().total_macs() > 0, "{workers} workers");
+        }
+        // empty batch through the block plan is fine too
+        let mut plan = SimMtBlockPlan::new(&block, 2, 2);
+        assert!(plan.run_batch(&AttnBatchRequest::default()).unwrap().items.is_empty());
     }
 }

@@ -1,7 +1,11 @@
 //! Hand-rolled benchmark harness (criterion is not in the offline crate
-//! set). Provides warmup + timed iterations with mean/σ/min reporting and
-//! simple table formatting shared by all `cargo bench` targets.
+//! set). Provides warmup + timed iterations with mean/σ/min reporting,
+//! simple table formatting shared by all `cargo bench` targets, and the
+//! [`BenchRecord`] JSON-Lines emitter behind `IVIT_BENCH_JSON` (the
+//! machine-readable perf trajectory).
 
+use std::io::Write as _;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Timing summary of one benchmark case.
@@ -103,6 +107,83 @@ pub fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// One machine-readable benchmark result, emitted as a JSON-Lines row.
+///
+/// When the environment variable `IVIT_BENCH_JSON=<path>` is set,
+/// [`BenchRecord::emit`] **appends** one `{"name":...,...}` object per
+/// line to that file, so successive bench runs accumulate a perf
+/// trajectory (`BENCH_*.json`) instead of overwriting it. Without the
+/// variable, `emit` is a no-op — the human tables stay the primary
+/// output.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    fields: Vec<(String, String)>,
+}
+
+impl BenchRecord {
+    /// Start a record with its `name` field.
+    pub fn new(name: &str) -> BenchRecord {
+        BenchRecord { fields: vec![("name".into(), json_escape(name))] }
+    }
+
+    /// Add a numeric field (non-finite values serialize as `null`).
+    pub fn num(mut self, key: &str, v: f64) -> BenchRecord {
+        let rendered = if v.is_finite() { format!("{v}") } else { "null".into() };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    /// Add a string field.
+    pub fn str_field(mut self, key: &str, v: &str) -> BenchRecord {
+        self.fields.push((key.to_string(), json_escape(v)));
+        self
+    }
+
+    /// Render the record as one JSON object.
+    pub fn render(&self) -> String {
+        let body: Vec<String> =
+            self.fields.iter().map(|(k, v)| format!("{}:{v}", json_escape(k))).collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    /// Append `render() + "\n"` to `path` (creating the file if needed).
+    pub fn append_to(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", self.render())
+    }
+
+    /// Append to `$IVIT_BENCH_JSON` when set; otherwise do nothing.
+    /// I/O failures are reported to stderr, never panic a bench.
+    pub fn emit(&self) {
+        if let Ok(path) = std::env::var("IVIT_BENCH_JSON") {
+            if !path.is_empty() {
+                if let Err(e) = self.append_to(Path::new(&path)) {
+                    eprintln!("IVIT_BENCH_JSON: failed to append to {path}: {e}");
+                }
+            }
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Markdown-style table writer used by the table benches.
 pub struct TableWriter {
     pub header: Vec<String>,
@@ -169,6 +250,36 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| a | block  |") || s.contains("| a"), "{s}");
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn bench_record_renders_valid_json_lines() {
+        let r = BenchRecord::new("throughput.batch_vs_per_row")
+            .str_field("backend", "sim-mt")
+            .num("rows_per_s", 123.5)
+            .num("ratio", f64::NAN);
+        let s = r.render();
+        assert_eq!(
+            s,
+            r#"{"name":"throughput.batch_vs_per_row","backend":"sim-mt","rows_per_s":123.5,"ratio":null}"#
+        );
+        // escaping
+        let esc = BenchRecord::new("a\"b\\c\nd").render();
+        assert!(esc.contains(r#"a\"b\\c\nd"#), "{esc}");
+    }
+
+    #[test]
+    fn bench_record_appends_lines() {
+        let path = std::env::temp_dir().join("ivit_bench_json_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        BenchRecord::new("one").num("v", 1.0).append_to(&path).unwrap();
+        BenchRecord::new("two").num("v", 2.0).append_to(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains(r#""name":"one""#));
+        assert!(lines[1].contains(r#""v":2"#));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

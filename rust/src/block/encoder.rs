@@ -1,0 +1,295 @@
+//! [`EncoderBlock`] — one full integerized ViT encoder block:
+//!
+//! ```text
+//! x ──► LN1 ──► attention (Fig. 2, incl. W_O) ──► quantize ──►(+)──► r1
+//!  └───────────────────────────────────────────────────────────┘
+//! r1 ──► LN2 ──► MLP (fc1 → shift-GELU → fc2) ──►(+)──► out
+//!  └─────────────────────────────────────────────────┘
+//! ```
+//!
+//! Every arrow carries integer codes with a typed
+//! [`crate::quant::QuantSpec`]; the two `(+)` nodes are
+//! [`super::residual_requant`] dual-operand requantizers and the LNs are
+//! the Fig. 5 comparator banks quantizing straight to the next stage's
+//! step. The attention half is the existing [`AttnModule`] (whose
+//! ref ≡ sim ≡ pjrt parity is already pinned); this type owns the
+//! composition and the block-level steps.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::backend::reference::reference_attention;
+use crate::backend::AttnModule;
+use crate::quant::qtensor::{QTensor, QuantSpec, Step};
+use crate::util::XorShift;
+
+use super::{quantize_ln, residual_requant, MlpModule};
+
+/// The two pre-LN affines of one block.
+#[derive(Debug, Clone)]
+pub struct BlockNorms {
+    pub ln1_gamma: Vec<f32>,
+    pub ln1_beta: Vec<f32>,
+    pub ln2_gamma: Vec<f32>,
+    pub ln2_beta: Vec<f32>,
+}
+
+/// The block-level quantizer steps (the attention- and MLP-internal
+/// steps live on their own modules).
+#[derive(Debug, Clone)]
+pub struct BlockSteps {
+    /// Block input step Δ_x (= the previous block's Δ_out).
+    pub s_x: Step,
+    /// Attention-output quantizer step Δ_ao (W_O fp output → codes).
+    pub s_attn_out: Step,
+    /// First-residual output step Δ_r1.
+    pub s_res1: Step,
+    /// Block output step Δ_out.
+    pub s_out: Step,
+}
+
+/// One integerized encoder block (attention + MLP + residual path).
+#[derive(Debug, Clone)]
+pub struct EncoderBlock {
+    /// Display / cache-key label (e.g. `"block3"`).
+    pub label: String,
+    pub norms: BlockNorms,
+    pub attn: AttnModule,
+    pub mlp: MlpModule,
+    pub steps: BlockSteps,
+    pub bits: u32,
+}
+
+impl EncoderBlock {
+    /// Assemble and validate a block.
+    pub fn new(
+        label: impl Into<String>,
+        norms: BlockNorms,
+        attn: AttnModule,
+        mlp: MlpModule,
+        steps: BlockSteps,
+        bits: u32,
+    ) -> Result<EncoderBlock> {
+        let d = attn.d_in();
+        ensure!(
+            attn.d_out() == d,
+            "block attention must be square (D→D), got {}→{}",
+            d,
+            attn.d_out()
+        );
+        ensure!(attn.wo.is_some(), "block attention needs its W_O projection");
+        ensure!(mlp.d_model() == d, "MLP D {} != attention D {d}", mlp.d_model());
+        ensure!(
+            attn.bits == bits && mlp.bits == bits,
+            "bit widths disagree: block {bits}, attention {}, MLP {}",
+            attn.bits,
+            mlp.bits
+        );
+        for (name, v) in [
+            ("ln1_gamma", &norms.ln1_gamma),
+            ("ln1_beta", &norms.ln1_beta),
+            ("ln2_gamma", &norms.ln2_gamma),
+            ("ln2_beta", &norms.ln2_beta),
+        ] {
+            ensure!(v.len() == d, "{name} length {} != D {d}", v.len());
+        }
+        Ok(EncoderBlock { label: label.into(), norms, attn, mlp, steps, bits })
+    }
+
+    /// Model dimension D.
+    pub fn d(&self) -> usize {
+        self.attn.d_in()
+    }
+
+    /// The spec block-input activations must carry.
+    pub fn input_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.steps.s_x)
+    }
+
+    /// The spec of the block's output codes (= the next block's input).
+    pub fn out_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.steps.s_out)
+    }
+
+    /// Quantizer applied to the attention W_O fp output.
+    pub fn attn_out_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.steps.s_attn_out)
+    }
+
+    /// Spec of the first-residual output codes.
+    pub fn res1_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.steps.s_res1)
+    }
+
+    /// One-line human description (used by backend describes and the
+    /// plan-cache key, so it carries the label).
+    pub fn describe(&self) -> String {
+        format!(
+            "encoder block '{}': D={} heads={} MLP hidden={} {}-bit",
+            self.label,
+            self.d(),
+            self.attn.heads,
+            self.mlp.d_hidden(),
+            self.bits,
+        )
+    }
+
+    pub fn check_input(&self, x: &QTensor) -> Result<()> {
+        let want = self.input_spec();
+        ensure!(x.cols() == self.d(), "input D {} != block {}", x.cols(), self.d());
+        ensure!(
+            x.spec.signed == want.signed && x.spec.bits == want.bits,
+            "input spec {:?} does not match the block's {:?}",
+            x.spec,
+            want
+        );
+        let (got, exp) = (x.spec.step.get(), want.step.get());
+        ensure!(
+            (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
+            "input step {got} does not match the block Δ_x {exp}"
+        );
+        Ok(())
+    }
+
+    /// The quant golden reference for the whole block. Every fp
+    /// expression shared with the simulator path lives in one place
+    /// ([`quantize_ln`], [`residual_requant`], the MLP's requant
+    /// epilogue), so [`crate::sim::BlockSim`] is bit-identical by
+    /// construction plus the already-pinned attention parity.
+    pub fn run_reference(&self, x: &QTensor) -> Result<QTensor> {
+        self.check_input(x)?;
+        let (n, d) = (x.rows(), self.d());
+
+        // pre-LN 1 quantizes straight to the attention input step Δ̄_X
+        let xf = x.dequantize();
+        let norms = &self.norms;
+        let attn_in =
+            quantize_ln(&xf, n, &norms.ln1_gamma, &norms.ln1_beta, self.attn.input_spec())?;
+
+        // attention (bit-identical on every substrate) → W_O fp output
+        let resp = reference_attention(&self.attn, &attn_in)?;
+        let vals = resp
+            .out_values
+            .ok_or_else(|| anyhow!("block attention produced no W_O output"))?;
+        let attn_q = QTensor::quantize_f32(&vals, n, d, self.attn_out_spec())?;
+
+        // residual 1: attention path + skip path, requantized to Δ_r1
+        let r1 = residual_requant(&attn_q, x, self.res1_spec())?;
+
+        // pre-LN 2 quantizes to the MLP input step Δ_in
+        let r1f = r1.dequantize();
+        let mlp_in =
+            quantize_ln(&r1f, n, &norms.ln2_gamma, &norms.ln2_beta, self.mlp.input_spec())?;
+        let mlp_out = self.mlp.run_reference(&mlp_in)?;
+
+        // residual 2 → block output codes at Δ_out
+        residual_requant(&mlp_out, &r1, self.out_spec())
+    }
+
+    /// Lower to the cycle-accounted systolic realization.
+    pub fn to_sim(&self) -> crate::sim::BlockSim {
+        crate::sim::BlockSim::new(self)
+    }
+
+    /// Randomised block for parity / stress testing. Δ_x = Δ_out, so
+    /// identically-built blocks chain into a [`super::BlockStack`].
+    pub fn synthetic(
+        d: usize,
+        hidden: usize,
+        heads: usize,
+        bits: u32,
+        seed: u64,
+    ) -> Result<EncoderBlock> {
+        let attn = AttnModule::synthetic(d, d, heads, bits, seed)?;
+        let mlp = MlpModule::synthetic(d, hidden, bits, seed ^ 0x51f0_beef)?;
+        let mut rng = XorShift::new(seed ^ 0xb10c);
+        let mut affine = |_tag: &str| -> (Vec<f32>, Vec<f32>) {
+            let gamma: Vec<f32> = (0..d).map(|_| rng.uniform(0.6, 1.4) as f32).collect();
+            let beta: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * 0.15).collect();
+            (gamma, beta)
+        };
+        let (ln1_gamma, ln1_beta) = affine("ln1");
+        let (ln2_gamma, ln2_beta) = affine("ln2");
+        EncoderBlock::new(
+            format!("blk{seed}"),
+            BlockNorms { ln1_gamma, ln1_beta, ln2_gamma, ln2_beta },
+            attn,
+            mlp,
+            BlockSteps {
+                s_x: Step::new(0.15)?,
+                s_attn_out: Step::new(0.1)?,
+                s_res1: Step::new(0.15)?,
+                s_out: Step::new(0.15)?,
+            },
+            bits,
+        )
+    }
+
+    /// Random input codes (`tokens` × D) in this block's input spec.
+    pub fn random_input(&self, tokens: usize, seed: u64) -> Result<QTensor> {
+        let spec = self.input_spec();
+        let (qmin, qmax) = spec.range();
+        let mut rng = XorShift::new(seed);
+        let codes = rng.codes(tokens * self.d(), qmin, qmax);
+        QTensor::new(crate::quant::linear::IntMat::new(tokens, self.d(), codes), spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_runs_end_to_end() {
+        let b = EncoderBlock::synthetic(16, 32, 2, 3, 5).unwrap();
+        let x = b.random_input(6, 1).unwrap();
+        let y = b.run_reference(&x).unwrap();
+        assert_eq!((y.rows(), y.cols()), (6, 16));
+        assert_eq!(y.spec, b.out_spec());
+    }
+
+    #[test]
+    fn synthetic_blocks_are_chainable() {
+        let a = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
+        let b = EncoderBlock::synthetic(12, 24, 3, 3, 8).unwrap();
+        let x = a.random_input(4, 2).unwrap();
+        let mid = a.run_reference(&x).unwrap();
+        // a's Δ_out equals b's Δ_x, so the output feeds straight in
+        let y = b.run_reference(&mid).unwrap();
+        assert_eq!((y.rows(), y.cols()), (4, 12));
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let b = EncoderBlock::synthetic(16, 32, 2, 3, 5).unwrap();
+        // wrong input step
+        let bad = QTensor::new(
+            crate::quant::linear::IntMat::new(2, 16, vec![0; 32]),
+            QuantSpec::signed(3, Step::new(0.3).unwrap()),
+        )
+        .unwrap();
+        assert!(b.run_reference(&bad).is_err());
+        // non-square attention is rejected at construction
+        let attn = AttnModule::synthetic(16, 8, 2, 3, 1).unwrap();
+        let mlp = MlpModule::synthetic(16, 32, 3, 1).unwrap();
+        let err = EncoderBlock::new(
+            "bad",
+            b.norms.clone(),
+            attn,
+            mlp,
+            b.steps.clone(),
+            3,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let a = EncoderBlock::synthetic(12, 24, 2, 3, 9).unwrap();
+        let b = EncoderBlock::synthetic(12, 24, 2, 3, 9).unwrap();
+        let x = a.random_input(3, 4).unwrap();
+        assert_eq!(
+            a.run_reference(&x).unwrap().codes.data,
+            b.run_reference(&x).unwrap().codes.data
+        );
+    }
+}

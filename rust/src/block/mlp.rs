@@ -1,0 +1,230 @@
+//! [`MlpModule`] — the integerized transformer FFN:
+//! `fc1 (D→H) → integer shift-GELU → fc2 (H→D)`, all boundaries integer.
+//!
+//! Both linears are Eq. 2 [`FoldedLinear`]s: fc1 is folded with the MLP
+//! input step Δ_in and its output is requantized by absorbing the
+//! folded scales into the quantizer threshold (§IV-B, the same move the
+//! attention V path makes), producing `bits`-wide codes at Δ_h. The
+//! GELU is then a pure code→code [`GeluLut`] lookup (no multiplier, no
+//! exp unit), and fc2 — folded with the GELU output step Δ_g —
+//! requantizes to the MLP output step Δ_out. The epilogue expression
+//! `(acc + b̃_j)·(out_scale_j/Δ)` is written with the same operation
+//! order as the simulator's Quantize epilogue, so the reference and
+//! [`crate::sim::MlpSim`] agree bit-for-bit.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::fold::{FoldedLinear, QuantParams};
+use crate::quant::gelu::GeluLut;
+use crate::quant::linear::{int_matmul, IntMat};
+use crate::quant::qtensor::{QTensor, QuantSpec, Step};
+use crate::quant::round_half_even;
+use crate::util::XorShift;
+
+/// The integerized MLP parameters (one encoder block's FFN).
+#[derive(Debug, Clone)]
+pub struct MlpModule {
+    /// fc1: H×D codes, folded with Δ̄_X = `s_in`.
+    pub fc1: FoldedLinear,
+    /// fc2: D×H codes, folded with Δ̄_X = `s_g`.
+    pub fc2: FoldedLinear,
+    /// Input code step Δ_in (what fc1 was folded with).
+    pub s_in: Step,
+    /// fc1-output / GELU-input code step Δ_h.
+    pub s_h: Step,
+    /// GELU-output / fc2-input code step Δ_g.
+    pub s_g: Step,
+    /// fc2-output code step Δ_out.
+    pub s_out: Step,
+    pub bits: u32,
+    /// The tabulated integer GELU (derived from Δ_h → Δ_g at `bits`).
+    lut: GeluLut,
+}
+
+impl MlpModule {
+    /// Assemble and validate an MLP from folded constants and steps.
+    pub fn new(
+        fc1: FoldedLinear,
+        fc2: FoldedLinear,
+        s_in: Step,
+        s_h: Step,
+        s_g: Step,
+        s_out: Step,
+        bits: u32,
+    ) -> Result<MlpModule> {
+        ensure!(
+            fc1.codes.rows == fc2.codes.cols && fc1.codes.cols == fc2.codes.rows,
+            "fc1 {}×{} does not compose with fc2 {}×{}",
+            fc1.codes.rows,
+            fc1.codes.cols,
+            fc2.codes.rows,
+            fc2.codes.cols
+        );
+        let lut = GeluLut::new(QuantSpec::signed(bits, s_h), QuantSpec::signed(bits, s_g))?;
+        Ok(MlpModule { fc1, fc2, s_in, s_h, s_g, s_out, bits, lut })
+    }
+
+    /// Model (token) dimension D.
+    pub fn d_model(&self) -> usize {
+        self.fc1.codes.cols
+    }
+
+    /// Hidden (expansion) dimension H.
+    pub fn d_hidden(&self) -> usize {
+        self.fc1.codes.rows
+    }
+
+    /// The quantizer spec input activations must carry.
+    pub fn input_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.s_in)
+    }
+
+    /// The spec of the MLP's output codes.
+    pub fn out_spec(&self) -> QuantSpec {
+        QuantSpec::signed(self.bits, self.s_out)
+    }
+
+    /// The integer GELU table shared with the simulator.
+    pub fn gelu_lut(&self) -> &GeluLut {
+        &self.lut
+    }
+
+    fn check_input(&self, x: &QTensor) -> Result<()> {
+        let want = self.input_spec();
+        ensure!(x.cols() == self.d_model(), "input D {} != MLP {}", x.cols(), self.d_model());
+        ensure!(
+            x.spec.signed == want.signed && x.spec.bits == want.bits,
+            "input spec {:?} does not match the MLP's {:?}",
+            x.spec,
+            want
+        );
+        let (got, exp) = (x.spec.step.get(), want.step.get());
+        ensure!(
+            (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
+            "input step {got} does not match the MLP Δ_in {exp}"
+        );
+        Ok(())
+    }
+
+    /// One folded linear + absorbed-scale requantizer (the fc1/fc2
+    /// epilogue). The loop shape (j outer, i inner) and the effective
+    /// scale `out_scale_j / Δ_out` match the simulator's Quantize
+    /// epilogue exactly — fp expression order is part of the contract.
+    fn linear_requant(x: &IntMat, folded: &FoldedLinear, out: QuantSpec) -> Result<QTensor> {
+        let acc = int_matmul(x, &folded.codes)?;
+        let (m, n) = (acc.rows, acc.cols);
+        let (qmin, qmax) = out.range();
+        let step_out = out.step.get();
+        let mut codes = vec![0i32; m * n];
+        for j in 0..n {
+            let eff = folded.out_scale[j] / step_out;
+            for i in 0..m {
+                let v = (acc.at(i, j) as f32 + folded.bias_folded[j]) * eff;
+                codes[i * n + j] = (round_half_even(v) as i32).clamp(qmin, qmax);
+            }
+        }
+        Ok(QTensor { codes: IntMat::new(m, n, codes), spec: out })
+    }
+
+    /// The quant golden reference: fc1 → LUT GELU → fc2, integer end to
+    /// end. Output codes carry [`Self::out_spec`].
+    pub fn run_reference(&self, x: &QTensor) -> Result<QTensor> {
+        self.check_input(x)?;
+        let h = Self::linear_requant(&x.codes, &self.fc1, QuantSpec::signed(self.bits, self.s_h))?;
+        let g = self.lut.apply(&h)?;
+        Self::linear_requant(&g.codes, &self.fc2, self.out_spec())
+    }
+
+    /// Lower to the cycle-accounted systolic realization.
+    pub fn to_sim(&self) -> crate::sim::MlpSim {
+        crate::sim::MlpSim::new(self)
+    }
+
+    /// Randomised MLP for parity / stress testing.
+    pub fn synthetic(d: usize, hidden: usize, bits: u32, seed: u64) -> Result<MlpModule> {
+        ensure!(d > 0 && hidden > 0, "degenerate MLP {d}×{hidden}");
+        let mut rng = XorShift::new(seed);
+        let s_in = Step::new(0.5)?;
+        let s_h = Step::new(0.25)?;
+        let s_g = Step::new(0.25)?;
+        let s_out = Step::new(0.1)?;
+        let mut mk = |n: usize, k: usize, step_x: f32| -> Result<FoldedLinear> {
+            let w: Vec<f32> = rng.normal_vec(n * k).iter().map(|v| v * 0.15).collect();
+            let bias: Vec<f32> = rng.normal_vec(n).iter().map(|v| v * 0.3).collect();
+            let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
+            FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x, step_w })
+        };
+        let fc1 = mk(hidden, d, s_in.get())?;
+        let fc2 = mk(d, hidden, s_g.get())?;
+        MlpModule::new(fc1, fc2, s_in, s_h, s_g, s_out, bits)
+    }
+
+    /// Random input codes (`tokens` × D) in this MLP's input spec.
+    pub fn random_input(&self, tokens: usize, seed: u64) -> Result<QTensor> {
+        let spec = self.input_spec();
+        let (qmin, qmax) = spec.range();
+        let mut rng = XorShift::new(seed);
+        QTensor::new(
+            IntMat::new(tokens, self.d_model(), rng.codes(tokens * self.d_model(), qmin, qmax)),
+            spec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_specs() {
+        let m = MlpModule::synthetic(12, 24, 3, 7).unwrap();
+        assert_eq!(m.d_model(), 12);
+        assert_eq!(m.d_hidden(), 24);
+        assert!(m.input_spec().signed && m.input_spec().bits == 3);
+        let x = m.random_input(5, 1).unwrap();
+        let y = m.run_reference(&x).unwrap();
+        assert_eq!((y.rows(), y.cols()), (5, 12));
+        assert_eq!(y.spec, m.out_spec());
+    }
+
+    #[test]
+    fn rejects_wrong_input_spec() {
+        let m = MlpModule::synthetic(8, 16, 3, 9).unwrap();
+        let bad = QTensor::new(
+            IntMat::new(1, 8, vec![0; 8]),
+            QuantSpec::signed(4, Step::new(0.5).unwrap()),
+        )
+        .unwrap();
+        assert!(m.run_reference(&bad).is_err());
+        let bad_step = QTensor::new(
+            IntMat::new(1, 8, vec![0; 8]),
+            QuantSpec::signed(3, Step::new(0.3).unwrap()),
+        )
+        .unwrap();
+        assert!(m.run_reference(&bad_step).is_err());
+    }
+
+    #[test]
+    fn rejects_non_composing_linears() {
+        let a = MlpModule::synthetic(8, 16, 3, 1).unwrap();
+        let b = MlpModule::synthetic(8, 12, 3, 2).unwrap();
+        // fc1 of one with fc2 of the other: 16 hidden vs 12 hidden
+        let s = Step::new(0.1).unwrap();
+        assert!(MlpModule::new(a.fc1, b.fc2, s, s, s, s, 3).is_err());
+    }
+
+    #[test]
+    fn zero_input_gives_gelu_of_bias() {
+        // all-zero codes → fc1 output is the folded bias alone; still a
+        // valid integer pipeline end to end.
+        let m = MlpModule::synthetic(6, 10, 3, 3).unwrap();
+        let x = QTensor::new(
+            IntMat::new(2, 6, vec![0; 12]),
+            m.input_spec(),
+        )
+        .unwrap();
+        let y = m.run_reference(&x).unwrap();
+        // both rows identical (same input row)
+        assert_eq!(y.codes.row(0), y.codes.row(1));
+    }
+}

@@ -1,0 +1,190 @@
+//! The integerized encoder-block subsystem — the paper's operand
+//! reordering applied to the **whole** ViT block, not just the
+//! self-attention half.
+//!
+//! [`crate::backend::AttnModule`] realizes Fig. 2 (Q/K/V linears,
+//! quantizing LayerNorms, QKᵀ+softmax, attn·V, W_O). This module adds
+//! everything an encoder block needs beyond it:
+//!
+//! * [`MlpModule`] — the integerized FFN `fc1 → integer shift-GELU →
+//!   fc2`, both linears carried as [`crate::quant::FoldedLinear`]s with
+//!   the Eq. 2 reordered scale folding, and the GELU collapsed to a
+//!   [`crate::quant::GeluLut`] code→code table (I-ViT's shift-sigmoid
+//!   form tabulated over the input code range);
+//! * [`residual_requant`] — the dual-operand residual requantizer:
+//!   `clip(round(q_a·Δ_a/Δ_out + q_b·Δ_b/Δ_out))` with both foldings
+//!   kept as explicit [`crate::quant::ScaleChain`]s;
+//! * [`EncoderBlock`] — `LN → attention → +residual → LN → MLP →
+//!   +residual`, every boundary a typed [`crate::quant::QTensor`];
+//! * [`BlockStack`] — a depth-wise chain of blocks whose quantizer
+//!   steps are validated to line up (block *i*'s Δ_out is block
+//!   *i+1*'s Δ_x).
+//!
+//! The quant reference lives here (`run_reference` on each type); the
+//! cycle-accounted systolic realization is [`crate::sim::MlpSim`] /
+//! [`crate::sim::BlockSim`], which reuse the *same* LUT and residual
+//! helpers so ref ≡ sim bit-identity holds by construction wherever it
+//! cannot be inherited from the already-pinned attention parity.
+
+pub mod encoder;
+pub mod mlp;
+pub mod stack;
+
+use anyhow::{ensure, Result};
+
+use crate::quant::layernorm::qlayernorm_comparator;
+use crate::quant::linear::IntMat;
+use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain};
+use crate::quant::round_half_even;
+
+pub use encoder::{BlockNorms, BlockSteps, EncoderBlock};
+pub use mlp::MlpModule;
+pub use stack::BlockStack;
+
+/// Epsilon shared by every quantizing LayerNorm in the block (the same
+/// value [`crate::sim::layernorm::LayerNormSim`] is constructed with).
+pub const LN_EPS: f32 = 1e-6;
+
+/// Quantizing pre-LN: normalise each row of `x` (rows × |gamma| fp
+/// values) with the Fig. 5 comparator identity and emit codes in `spec`.
+/// This is the exact per-row computation `LayerNormSim::run` performs,
+/// factored out so the block reference and the simulator share it.
+pub fn quantize_ln(
+    x: &[f32],
+    rows: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    spec: QuantSpec,
+) -> Result<QTensor> {
+    let d = gamma.len();
+    ensure!(beta.len() == d, "gamma/beta length mismatch: {} vs {}", d, beta.len());
+    ensure!(x.len() == rows * d, "shape {} vs {rows}×{d}", x.len());
+    ensure!(spec.signed, "LayerNorm output codes are signed");
+    let mut codes = vec![0i32; rows * d];
+    for r in 0..rows {
+        let c = qlayernorm_comparator(
+            &x[r * d..(r + 1) * d],
+            gamma,
+            beta,
+            spec.step.get(),
+            spec.bits,
+            LN_EPS,
+        );
+        codes[r * d..(r + 1) * d].copy_from_slice(&c);
+    }
+    QTensor::new(IntMat::new(rows, d, codes), spec)
+}
+
+/// Residual add with requantization: `out = clip(round(main·Δ_main/Δ_out
+/// + skip·Δ_skip/Δ_out))` — the §IV-B quantizer-absorption idea applied
+/// to a two-operand add. Both scale foldings are built as explicit
+/// [`ScaleChain`]s; the operand order (`main` first) is part of the
+/// fixed-point contract, so reference and simulator call this one
+/// function and can never drift.
+pub fn residual_requant(main: &QTensor, skip: &QTensor, out: QuantSpec) -> Result<QTensor> {
+    ensure!(
+        main.rows() == skip.rows() && main.cols() == skip.cols(),
+        "residual shape mismatch: {}×{} vs {}×{}",
+        main.rows(),
+        main.cols(),
+        skip.rows(),
+        skip.cols()
+    );
+    ensure!(out.signed, "the residual requantizer emits signed codes");
+    let eff_main = ScaleChain::new().times(main.spec.step).over(out.step).eff();
+    let eff_skip = ScaleChain::new().times(skip.spec.step).over(out.step).eff();
+    let (qmin, qmax) = out.range();
+    let codes: Vec<i32> = main
+        .codes
+        .data
+        .iter()
+        .zip(&skip.codes.data)
+        .map(|(&a, &b)| {
+            let v = a as f32 * eff_main + b as f32 * eff_skip;
+            (round_half_even(v) as i32).clamp(qmin, qmax)
+        })
+        .collect();
+    Ok(QTensor {
+        codes: IntMat::new(main.rows(), main.cols(), codes),
+        spec: out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::layernorm::qlayernorm_reference;
+    use crate::quant::qtensor::Step;
+    use crate::quant::{int_range, quantize};
+    use crate::util::proptest::prop_check;
+
+    fn spec(bits: u32, step: f32) -> QuantSpec {
+        QuantSpec::signed(bits, Step::new(step).unwrap())
+    }
+
+    #[test]
+    fn quantize_ln_matches_reference_rows() {
+        prop_check("block-ln-vs-ref", 151, 60, |rng| {
+            let d = rng.int_in(4, 32) as usize;
+            let rows = rng.int_in(1, 5) as usize;
+            let g: Vec<f32> = (0..d).map(|_| rng.uniform(0.4, 1.6) as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| (rng.normal() * 0.2) as f32).collect();
+            let x: Vec<f32> = (0..rows * d).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let out = quantize_ln(&x, rows, &g, &b, spec(3, 0.4)).map_err(|e| e.to_string())?;
+            for r in 0..rows {
+                let want = qlayernorm_reference(&x[r * d..(r + 1) * d], &g, &b, 0.4, 3, LN_EPS);
+                if out.codes.row(r) != &want[..] {
+                    return Err(format!("row {r} differs"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_matches_scalar_requantization() {
+        prop_check("residual-requant", 152, 120, |rng| {
+            let bits = rng.int_in(2, 8) as u32;
+            let (qmin, qmax) = int_range(bits);
+            let n = rng.int_in(1, 24) as usize;
+            let sa = rng.uniform(0.05, 0.4) as f32;
+            let sb = rng.uniform(0.05, 0.4) as f32;
+            let so = rng.uniform(0.05, 0.4) as f32;
+            let a = QTensor::new(IntMat::new(1, n, rng.codes(n, qmin, qmax)), spec(bits, sa))
+                .map_err(|e| e.to_string())?;
+            let b = QTensor::new(IntMat::new(1, n, rng.codes(n, qmin, qmax)), spec(bits, sb))
+                .map_err(|e| e.to_string())?;
+            let got = residual_requant(&a, &b, spec(bits, so)).map_err(|e| e.to_string())?;
+            for ((&qa, &qb), &q) in
+                a.codes.data.iter().zip(&b.codes.data).zip(&got.codes.data)
+            {
+                // same expression, scalar form
+                let v = qa as f32 * (sa / so) + qb as f32 * (sb / so);
+                let want = quantize(v, 1.0, bits, true);
+                if q != want {
+                    return Err(format!("codes {qa},{qb}: {q} vs {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_rejects_bad_shapes_and_specs() {
+        let a = QTensor::new(IntMat::new(1, 2, vec![0, 1]), spec(3, 0.1)).unwrap();
+        let b = QTensor::new(IntMat::new(2, 1, vec![0, 1]), spec(3, 0.1)).unwrap();
+        assert!(residual_requant(&a, &b, spec(3, 0.1)).is_err());
+        let c = QTensor::new(IntMat::new(1, 2, vec![0, 1]), spec(3, 0.1)).unwrap();
+        let unsigned = QuantSpec::unsigned(3, Step::new(0.1).unwrap());
+        assert!(residual_requant(&a, &c, unsigned).is_err());
+    }
+
+    #[test]
+    fn residual_identity_when_steps_match() {
+        // Δ_a = Δ_b = Δ_out and zero skip → codes pass through.
+        let a = QTensor::new(IntMat::new(1, 3, vec![-2, 0, 3]), spec(3, 0.2)).unwrap();
+        let z = QTensor::new(IntMat::new(1, 3, vec![0, 0, 0]), spec(3, 0.2)).unwrap();
+        let out = residual_requant(&a, &z, spec(3, 0.2)).unwrap();
+        assert_eq!(out.codes.data, vec![-2, 0, 3]);
+    }
+}

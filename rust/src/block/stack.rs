@@ -1,0 +1,119 @@
+//! [`BlockStack`] — a depth-wise chain of [`EncoderBlock`]s with the
+//! quantizer-step chaining validated once at construction: block *i*'s
+//! output step Δ_out must equal block *i+1*'s input step Δ_x, so codes
+//! flow between blocks with **no** dequantize/requantize hop. This is
+//! the encoder trunk the [`crate::model::VitModel`] wrapper drives.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::qtensor::{QTensor, QuantSpec};
+
+use super::EncoderBlock;
+
+/// A validated sequence of encoder blocks.
+#[derive(Debug, Clone)]
+pub struct BlockStack {
+    pub blocks: Vec<EncoderBlock>,
+}
+
+impl BlockStack {
+    /// Validate dimensional and step chaining across the sequence.
+    pub fn new(blocks: Vec<EncoderBlock>) -> Result<BlockStack> {
+        ensure!(!blocks.is_empty(), "a block stack needs at least one block");
+        for w in blocks.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            ensure!(
+                a.d() == b.d(),
+                "blocks '{}' (D={}) and '{}' (D={}) disagree on the model dim",
+                a.label,
+                a.d(),
+                b.label,
+                b.d()
+            );
+            ensure!(a.bits == b.bits, "bit widths differ between '{}' and '{}'", a.label, b.label);
+            let (out, inp) = (a.steps.s_out.get(), b.steps.s_x.get());
+            ensure!(
+                (out - inp).abs() <= 1e-6 * out.abs().max(inp.abs()),
+                "step chain broken: '{}' emits Δ_out={out} but '{}' expects Δ_x={inp}",
+                a.label,
+                b.label
+            );
+        }
+        Ok(BlockStack { blocks })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Model dimension D (uniform across the stack).
+    pub fn d(&self) -> usize {
+        self.blocks[0].d()
+    }
+
+    /// The spec stack-input activations must carry.
+    pub fn input_spec(&self) -> QuantSpec {
+        self.blocks[0].input_spec()
+    }
+
+    /// The spec of the final block's output codes.
+    pub fn out_spec(&self) -> QuantSpec {
+        self.blocks.last().expect("non-empty stack").out_spec()
+    }
+
+    /// Fold input codes through every block's quant reference.
+    pub fn run_reference(&self, x: &QTensor) -> Result<QTensor> {
+        let mut cur = x.clone();
+        for b in &self.blocks {
+            cur = b.run_reference(&cur)?;
+        }
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qtensor::Step;
+
+    fn stack(depth: usize) -> BlockStack {
+        let blocks: Vec<EncoderBlock> = (0..depth)
+            .map(|i| {
+                let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 40 + i as u64).unwrap();
+                b.label = format!("block{i}");
+                b
+            })
+            .collect();
+        BlockStack::new(blocks).unwrap()
+    }
+
+    #[test]
+    fn chains_codes_through_depth() {
+        let s = stack(3);
+        assert_eq!(s.depth(), 3);
+        let x = s.blocks[0].random_input(5, 1).unwrap();
+        let y = s.run_reference(&x).unwrap();
+        assert_eq!((y.rows(), y.cols()), (5, 12));
+        assert_eq!(y.spec, s.out_spec());
+        // depth-1 prefix agrees with running the first block alone
+        let one = s.blocks[0].run_reference(&x).unwrap();
+        let prefix = BlockStack::new(vec![s.blocks[0].clone()]).unwrap();
+        assert_eq!(prefix.run_reference(&x).unwrap().codes.data, one.codes.data);
+    }
+
+    #[test]
+    fn rejects_broken_step_chain() {
+        let a = EncoderBlock::synthetic(12, 24, 2, 3, 1).unwrap();
+        let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 2).unwrap();
+        b.steps.s_x = Step::new(0.33).unwrap();
+        assert!(BlockStack::new(vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn rejects_dim_mismatch_and_empty() {
+        let a = EncoderBlock::synthetic(12, 24, 2, 3, 1).unwrap();
+        let b = EncoderBlock::synthetic(16, 32, 2, 3, 2).unwrap();
+        assert!(BlockStack::new(vec![a, b]).is_err());
+        assert!(BlockStack::new(Vec::new()).is_err());
+    }
+}

@@ -97,7 +97,14 @@ COMMANDS:
               sim-mt: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
   eval        Table II: accuracy of a model variant on the eval set
-              --artifacts DIR  --mode ...  --bits N  [--limit N]
+              --backend pjrt|ref|sim|sim-mt (default pjrt)
+              pjrt: --artifacts DIR  --mode ...  --bits N  [--limit N]
+              ref/sim/sim-mt (NO artifacts needed): the integerized
+              encoder-block stack on a synthetic checkpoint —
+              --dim D --hidden H --heads N --depth L --patch P
+              --classes C --bits B [--limit N] [--images N] [--seed S]
+              [--workers N]; uses the exported eval set when the
+              artifacts dir holds one, else a synthetic split
   power       Table I: per-block power of the systolic self-attention
               --tokens N --din D --dhead O --bits B [--freq-mhz F]
   simulate    run the attention workload on a backend and verify

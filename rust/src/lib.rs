@@ -47,10 +47,16 @@
 //! * [`util`] — tensor I/O, mini-JSON, PRNG, property-testing harness.
 //! * [`quant`] — bit-accurate integer quantization math: Eq. 2 scale
 //!   folding, the Eq. 4 shift-exponential, the Fig. 5 sqrt/div-free
-//!   LayerNorm comparator, and the typed operand model
+//!   LayerNorm comparator, the integer shift-GELU lookup table
+//!   ([`quant::GeluLut`]), and the typed operand model
 //!   ([`quant::QTensor`], [`quant::ScaleChain`]).
+//! * [`block`] — the integerized encoder-block subsystem: the MLP
+//!   (`fc1 → shift-GELU → fc2`), dual-operand residual requantizers,
+//!   [`block::EncoderBlock`] (LN → attention → +residual → LN → MLP →
+//!   +residual) and the depth-wise [`block::BlockStack`].
 //! * [`sim`] — the systolic-array hardware model: PE grids, scan chains,
-//!   cycle counts and the activity-based energy model behind Table I.
+//!   cycle counts and the activity-based energy model behind Table I;
+//!   [`sim::BlockSim`]/[`sim::MlpSim`] extend it to the whole block.
 //! * [`backend`] — the unified `Backend` trait, the three substrate
 //!   implementations and the name-keyed registry.
 //! * [`model`] — ViT configuration and integerized checkpoint loading.
@@ -72,6 +78,7 @@
 
 pub mod backend;
 pub mod bench;
+pub mod block;
 pub mod cli;
 pub mod coordinator;
 pub mod model;

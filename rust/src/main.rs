@@ -10,10 +10,13 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use ivit::backend::{AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
+use ivit::backend::{
+    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, ExecutionPlan, PlanCache,
+    PlanOptions, PlanScope,
+};
 use ivit::cli::{Args, USAGE};
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
-use ivit::model::{AttnCase, EvalSet};
+use ivit::model::{AttnCase, EvalSet, VitConfig, VitModel};
 use ivit::runtime::Engine;
 use ivit::sim::{AttentionSim, EnergyModel};
 use ivit::util::tensorio::Tensor;
@@ -56,6 +59,7 @@ fn backend_config(args: &Args) -> Result<BackendConfig> {
     let defaults = BackendConfig::default();
     Ok(BackendConfig {
         module: None,
+        block: None,
         artifacts: Some(artifacts_dir(args)),
         d_in: args.usize("din", defaults.d_in)?,
         d_head: args.usize("dhead", defaults.d_head)?,
@@ -210,8 +214,122 @@ fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
     Ok(())
 }
 
-/// `ivit eval` — Table II accuracy for one variant.
+/// `ivit eval` — Table II accuracy for one variant. `--backend pjrt`
+/// (the default) measures the AOT artifacts; `ref`/`sim`/`sim-mt` run
+/// the integerized encoder-block stack with **no** PJRT artifacts.
 fn cmd_eval(args: &Args) -> Result<()> {
+    match args.choice("backend", &["pjrt", "ref", "sim", "sim-mt"], "pjrt")?.as_str() {
+        "pjrt" => cmd_eval_pjrt(args),
+        other => cmd_eval_blocks(args, other),
+    }
+}
+
+/// The artifact-free Table II path: synthetic integerized checkpoint,
+/// per-block backend plans (scope = Block) chained depth-wise, logits
+/// through the fp head, accuracy via [`EvalSet::accuracy`].
+fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
+    let bits = args.u32("bits", 3)?;
+    let dim = args.usize("dim", 64)?;
+    let cfg_seed = args.usize("seed", 7)? as u64;
+
+    // eval split: the exported one when present, else synthetic
+    let dir = artifacts_dir(args);
+    let classes = args.usize("classes", 10)?;
+    let (ev, split) = if dir.join("eval_images.bin").exists() {
+        (EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin"))?, "exported")
+    } else {
+        let n = args.usize("images", 64)?;
+        (EvalSet::synthetic(n, 32, 32, 3, classes, cfg_seed), "synthetic")
+    };
+    anyhow::ensure!(ev.images.shape.len() == 4, "eval images must be [n,h,w,c]");
+    // an exported split may carry more classes than the synthetic head:
+    // labels the head can never predict must be a loud error, not a
+    // silently deflated accuracy
+    let max_label = ev.labels.iter().copied().max().unwrap_or(0);
+    anyhow::ensure!(
+        max_label >= 0 && (max_label as usize) < classes,
+        "eval labels reach {max_label} but the synthetic head has only {classes} classes — \
+         pass --classes {}",
+        max_label + 1
+    );
+    let (h, w, c) = (ev.images.shape[1], ev.images.shape[2], ev.images.shape[3]);
+
+    let cfg = VitConfig {
+        image_h: h,
+        image_w: w,
+        image_c: c,
+        patch: args.usize("patch", 8)?,
+        dim,
+        hidden: args.usize("hidden", dim * 4)?,
+        heads: args.usize("heads", 2)?,
+        depth: args.usize("depth", 2)?,
+        classes,
+        bits,
+        seed: cfg_seed,
+    };
+    let model = VitModel::synthetic(cfg.clone())?;
+    println!(
+        "eval ({backend_name}, no PJRT artifacts): {split} split, {} images, \
+         D={} H={} heads={} depth={} patch={} {bits}-bit",
+        ev.n, cfg.dim, cfg.hidden, cfg.heads, cfg.depth, cfg.patch
+    );
+
+    // plan each encoder block exactly once (scope = Block); every batch
+    // then reuses the resident plans through the one depth-chaining
+    // implementation, VitModel::logits_batch_with_plans
+    let registry = BackendRegistry::with_defaults();
+    let opts = PlanOptions {
+        workers: args.usize("workers", 0)?,
+        scope: PlanScope::Block,
+        ..PlanOptions::default()
+    };
+    let mut plans: Vec<Box<dyn ExecutionPlan>> = model
+        .stack
+        .blocks
+        .iter()
+        .map(|b| {
+            let cfg_b =
+                BackendConfig { block: Some(b.clone()), bits, ..BackendConfig::default() };
+            registry.create(backend_name, &cfg_b)?.plan(&opts)
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let limit = args.usize("limit", ev.n)?.min(ev.n);
+    let batch = args.usize("batch", 8)?.max(1);
+    let t0 = Instant::now();
+    let mut logits: Vec<Vec<f32>> = Vec::with_capacity(limit);
+    let mut report = None;
+    let mut i = 0usize;
+    while i < limit {
+        let take = batch.min(limit - i);
+        let mut images = Vec::with_capacity(take);
+        for b in 0..take {
+            images.push(ev.image(i + b)?);
+        }
+        logits.extend(model.logits_batch_with_plans(&images, &mut plans, &mut report)?);
+        i += take;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let acc = ev.accuracy(&logits);
+    println!(
+        "backend={backend_name} bits={bits} eval_acc={acc:.4} over {limit} images in {wall:.2}s \
+         ({} block plans built once)",
+        plans.len()
+    );
+    if let Some(r) = &report {
+        let m = EnergyModel::default();
+        println!(
+            "hardware (merged over {} blocks × {limit} images): {:.1}M MACs, {:.2} µJ modelled",
+            model.stack.depth(),
+            r.total_macs() as f64 / 1e6,
+            r.workload_energy_uj(&m),
+        );
+    }
+    Ok(())
+}
+
+/// The original PJRT Table II path over the AOT artifacts.
+fn cmd_eval_pjrt(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mode = args.choice("mode", &["integerized", "qvit", "fp32"], "integerized")?;
     let bits = args.u32("bits", 3)?;
@@ -326,8 +444,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let registry = BackendRegistry::with_defaults();
     let backend = registry.create(&backend_name, &cfg)?;
-    // plan/execute: one-time setup first, then the batch (of one here)
-    let mut plan = backend.plan(&plan_options(args)?)?;
+    // plan/execute through the process-wide plan cache. The standalone
+    // CLI runs one command per process, so this call is always a cold
+    // miss (cost: one map insert); the payoff is for embedded callers
+    // that drive cmd_simulate repeatedly in one process — their repeat
+    // invocations reuse the one-time folding / lowering work.
+    let mut cache = PlanCache::global().lock().expect("plan cache poisoned");
+    let plan = cache.get_or_plan(&*backend, &plan_options(args)?)?;
     println!("backend: {backend_name} — {}", plan.describe());
 
     let t0 = Instant::now();

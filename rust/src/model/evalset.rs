@@ -5,6 +5,7 @@ use std::path::Path;
 use anyhow::{ensure, Result};
 
 use crate::util::tensorio::Tensor;
+use crate::util::XorShift;
 
 /// Images `[n, h, w, c]` f32 and labels `[n]` i32.
 #[derive(Debug)]
@@ -27,6 +28,18 @@ impl EvalSet {
         Ok(EvalSet { images, labels, n, image_elems })
     }
 
+    /// A deterministic synthetic split (normal-noise images, uniform
+    /// labels) for artifact-free eval runs and tests: `ivit eval
+    /// --backend ref|sim` falls back to this when no exported
+    /// `eval_images.bin` is present.
+    pub fn synthetic(n: usize, h: usize, w: usize, c: usize, classes: usize, seed: u64) -> EvalSet {
+        assert!(n > 0 && classes > 0, "degenerate synthetic eval set");
+        let mut rng = XorShift::new(seed);
+        let images = Tensor::f32(vec![n, h, w, c], rng.normal_vec(n * h * w * c));
+        let labels: Vec<i32> = (0..n).map(|_| rng.int_in(0, classes as i64 - 1) as i32).collect();
+        EvalSet { images, labels, n, image_elems: h * w * c }
+    }
+
     /// Borrow image `i` as a flat f32 slice.
     pub fn image(&self, i: usize) -> Result<&[f32]> {
         let all = self.images.as_f32()?;
@@ -34,23 +47,38 @@ impl EvalSet {
     }
 
     /// Top-1 accuracy of per-image logits.
+    ///
+    /// **Contract:** `logits[i]` scores image `i`; every row counts in
+    /// the denominator. A row with **empty** logits is an explicit
+    /// **miss** — a prediction that produced no scores can never be
+    /// correct — exactly as the batched `eval_accuracy` loop treats a
+    /// row it could not score. (Rows used to be skipped silently, which
+    /// produced the same ratio but hid the failure mode; now the miss
+    /// is deliberate and documented.) At most `labels.len()` rows are
+    /// accepted.
     pub fn accuracy(&self, logits: &[Vec<f32>]) -> f64 {
+        assert!(
+            logits.len() <= self.labels.len(),
+            "{} logit rows for {} labels",
+            logits.len(),
+            self.labels.len()
+        );
+        if logits.is_empty() {
+            return 0.0;
+        }
         let mut correct = 0usize;
         for (i, l) in logits.iter().enumerate() {
-            if l.is_empty() {
-                continue;
-            }
+            // empty row → pred = None → counted as a miss, not dropped
             let pred = l
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(k, _)| k as i32)
-                .unwrap_or(-1);
-            if pred == self.labels[i] {
+                .map(|(k, _)| k as i32);
+            if pred == Some(self.labels[i]) {
                 correct += 1;
             }
         }
-        correct as f64 / logits.len().max(1) as f64
+        correct as f64 / logits.len() as f64
     }
 }
 
@@ -87,5 +115,41 @@ mod tests {
         assert!((acc - 0.5).abs() < 1e-9);
         let acc2 = ev.accuracy(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
         assert!((acc2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_logit_rows_are_explicit_misses() {
+        let dir = std::env::temp_dir().join("ivit_evalset3");
+        let (ip, lp) = fixture(&dir);
+        let ev = EvalSet::load(&ip, &lp).unwrap();
+        // labels are [1, 0]: row 0 correct, row 1 empty → exactly one miss,
+        // denominator still 2
+        let acc = ev.accuracy(&[vec![0.0, 1.0], Vec::new()]);
+        assert!((acc - 0.5).abs() < 1e-9, "{acc}");
+        // all-empty → 0.0, not NaN and not an inflated ratio
+        let zero = ev.accuracy(&[Vec::new(), Vec::new()]);
+        assert_eq!(zero, 0.0);
+        // no rows at all → 0.0 by definition
+        assert_eq!(ev.accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "logit rows")]
+    fn more_logit_rows_than_labels_is_a_bug() {
+        let dir = std::env::temp_dir().join("ivit_evalset4");
+        let (ip, lp) = fixture(&dir);
+        let ev = EvalSet::load(&ip, &lp).unwrap();
+        let _ = ev.accuracy(&[vec![0.0], vec![0.0], vec![0.0]]);
+    }
+
+    #[test]
+    fn synthetic_set_is_deterministic_and_in_range() {
+        let a = EvalSet::synthetic(6, 4, 4, 3, 5, 9);
+        let b = EvalSet::synthetic(6, 4, 4, 3, 5, 9);
+        assert_eq!(a.n, 6);
+        assert_eq!(a.image_elems, 48);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.image(2).unwrap(), b.image(2).unwrap());
+        assert!(a.labels.iter().all(|&l| (0..5).contains(&l)));
     }
 }

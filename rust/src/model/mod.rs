@@ -1,8 +1,12 @@
 //! Model-side loading: the eval set, cross-language attention test case,
-//! and integerized-checkpoint representation consumed by quant/sim.
+//! the integerized-checkpoint representation consumed by quant/sim, and
+//! the [`VitModel`] wrapper (patch embed → encoder-block stack →
+//! classifier head) behind the artifact-free `ivit eval` path.
 
 pub mod attn_case;
 pub mod evalset;
+pub mod vit;
 
 pub use attn_case::AttnCase;
 pub use evalset::EvalSet;
+pub use vit::{VitConfig, VitModel};

@@ -1,0 +1,306 @@
+//! [`VitModel`] — the end-to-end model wrapper around the integerized
+//! encoder trunk: fp patch embedding → quantize → [`BlockStack`] →
+//! mean-pool → fp linear classifier head.
+//!
+//! The stem and head stay in f32 (standard practice in low-bit ViT
+//! work — I-ViT and Q-ViT keep first/last layers full precision); every
+//! encoder block in between runs the integer datapath, either through
+//! the quant reference ([`VitModel::logits_ref`]) or through per-block
+//! backend plans at [`crate::backend::PlanScope::Block`] — which is how
+//! `ivit eval --backend ref|sim|sim-mt` measures Table II accuracy with
+//! **no PJRT artifacts**.
+
+use anyhow::{ensure, Result};
+
+use crate::backend::{AttnBatchRequest, AttnRequest, ExecutionPlan};
+use crate::block::{BlockStack, EncoderBlock};
+use crate::quant::qtensor::QTensor;
+use crate::sim::AttentionReport;
+use crate::util::XorShift;
+
+/// Geometry + quantization hyper-parameters of a synthetic checkpoint.
+#[derive(Debug, Clone)]
+pub struct VitConfig {
+    pub image_h: usize,
+    pub image_w: usize,
+    pub image_c: usize,
+    /// Square patch edge; must divide both image dims.
+    pub patch: usize,
+    /// Model (token) dimension D.
+    pub dim: usize,
+    /// MLP hidden dimension H.
+    pub hidden: usize,
+    pub heads: usize,
+    /// Encoder depth (number of blocks).
+    pub depth: usize,
+    pub classes: usize,
+    pub bits: u32,
+    pub seed: u64,
+}
+
+impl VitConfig {
+    /// Token count = (H/p)·(W/p).
+    pub fn tokens(&self) -> usize {
+        (self.image_h / self.patch) * (self.image_w / self.patch)
+    }
+
+    /// Flattened patch length p·p·c.
+    pub fn patch_elems(&self) -> usize {
+        self.patch * self.patch * self.image_c
+    }
+}
+
+/// The model wrapper: fp stem/head around the integer encoder trunk.
+#[derive(Debug, Clone)]
+pub struct VitModel {
+    pub cfg: VitConfig,
+    /// Patch embedding, `dim × patch_elems` row-major, fp.
+    pub embed_w: Vec<f32>,
+    pub embed_b: Vec<f32>,
+    pub stack: BlockStack,
+    /// Classifier head, `classes × dim` row-major, fp.
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl VitModel {
+    /// A deterministic random checkpoint at the given geometry — the
+    /// "synthetic checkpoint" the artifact-free eval path runs on.
+    pub fn synthetic(cfg: VitConfig) -> Result<VitModel> {
+        ensure!(
+            cfg.patch > 0 && cfg.image_h % cfg.patch == 0 && cfg.image_w % cfg.patch == 0,
+            "patch {} must divide the image {}×{}",
+            cfg.patch,
+            cfg.image_h,
+            cfg.image_w
+        );
+        ensure!(cfg.depth >= 1, "depth must be ≥ 1");
+        ensure!(cfg.classes >= 2, "need at least two classes");
+        ensure!(cfg.heads > 0 && cfg.dim % cfg.heads == 0, "heads must divide dim");
+        let mut rng = XorShift::new(cfg.seed);
+        let pe = cfg.patch_elems();
+        let es = 1.0 / (pe as f32).sqrt();
+        let embed_w: Vec<f32> = rng.normal_vec(cfg.dim * pe).iter().map(|v| v * es).collect();
+        let embed_b: Vec<f32> = rng.normal_vec(cfg.dim).iter().map(|v| v * 0.1).collect();
+        let blocks = (0..cfg.depth)
+            .map(|i| {
+                let mut b = EncoderBlock::synthetic(
+                    cfg.dim,
+                    cfg.hidden,
+                    cfg.heads,
+                    cfg.bits,
+                    cfg.seed + 1 + i as u64,
+                )?;
+                b.label = format!("block{i}");
+                Ok(b)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let stack = BlockStack::new(blocks)?;
+        let hs = 1.0 / (cfg.dim as f32).sqrt();
+        let head_w: Vec<f32> =
+            rng.normal_vec(cfg.classes * cfg.dim).iter().map(|v| v * hs).collect();
+        let head_b = vec![0.0f32; cfg.classes];
+        Ok(VitModel { cfg, embed_w, embed_b, stack, head_w, head_b })
+    }
+
+    /// Patchify one image ([h, w, c] row-major), embed each patch in fp
+    /// and quantize the token matrix into the first block's input spec.
+    pub fn tokens(&self, image: &[f32]) -> Result<QTensor> {
+        let c = &self.cfg;
+        ensure!(
+            image.len() == c.image_h * c.image_w * c.image_c,
+            "image length {} != {}×{}×{}",
+            image.len(),
+            c.image_h,
+            c.image_w,
+            c.image_c
+        );
+        let (p, pe, dim) = (c.patch, c.patch_elems(), c.dim);
+        let (ph, pw) = (c.image_h / p, c.image_w / p);
+        let tokens = ph * pw;
+        let mut patch = vec![0f32; pe];
+        let mut toks = vec![0f32; tokens * dim];
+        for ty in 0..ph {
+            for tx in 0..pw {
+                let mut k = 0usize;
+                for dy in 0..p {
+                    let row0 = ((ty * p + dy) * c.image_w + tx * p) * c.image_c;
+                    patch[k..k + p * c.image_c].copy_from_slice(&image[row0..row0 + p * c.image_c]);
+                    k += p * c.image_c;
+                }
+                let t = ty * pw + tx;
+                for (o, out) in toks[t * dim..(t + 1) * dim].iter_mut().enumerate() {
+                    let w = &self.embed_w[o * pe..(o + 1) * pe];
+                    let dot: f32 = w.iter().zip(&patch).map(|(a, b)| a * b).sum();
+                    *out = dot + self.embed_b[o];
+                }
+            }
+        }
+        QTensor::quantize_f32(&toks, tokens, dim, self.stack.input_spec())
+    }
+
+    /// Mean-pool the trunk's output codes and apply the fp head.
+    pub fn logits_from_codes(&self, out: &QTensor) -> Vec<f32> {
+        let (n, d) = (out.rows(), out.cols());
+        let vals = out.dequantize();
+        let mut pooled = vec![0f32; d];
+        for r in 0..n {
+            for (p, v) in pooled.iter_mut().zip(&vals[r * d..(r + 1) * d]) {
+                *p += v;
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= n as f32;
+        }
+        self.head_w
+            .chunks(d)
+            .zip(&self.head_b)
+            .map(|(w, &b)| b + w.iter().zip(&pooled).map(|(a, x)| a * x).sum::<f32>())
+            .collect()
+    }
+
+    /// Image → logits through the quant golden reference.
+    pub fn logits_ref(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let out = self.stack.run_reference(&self.tokens(image)?)?;
+        Ok(self.logits_from_codes(&out))
+    }
+
+    /// Image batch → logits through per-block backend plans (one plan
+    /// per [`EncoderBlock`], in stack order). Block *i*'s output codes
+    /// become block *i+1*'s request rows; simulator plans' merged
+    /// hardware reports are absorbed into `report` when provided.
+    pub fn logits_batch_with_plans(
+        &self,
+        images: &[&[f32]],
+        plans: &mut [Box<dyn ExecutionPlan>],
+        report: &mut Option<AttentionReport>,
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            plans.len() == self.stack.depth(),
+            "{} plans for a depth-{} stack",
+            plans.len(),
+            self.stack.depth()
+        );
+        let mut batch = AttnBatchRequest::new(
+            images
+                .iter()
+                .map(|img| Ok(AttnRequest::new(self.tokens(img)?)))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        for plan in plans.iter_mut() {
+            let resp = plan.run_batch(&batch)?;
+            if let Some(r) = &resp.report {
+                *report = match report.take() {
+                    Some(mut acc) => {
+                        acc.absorb(r);
+                        Some(acc)
+                    }
+                    None => Some(r.clone()),
+                };
+            }
+            batch = AttnBatchRequest::new(
+                resp.items
+                    .into_iter()
+                    .map(|item| {
+                        let codes = item
+                            .out_codes
+                            .ok_or_else(|| anyhow::anyhow!("block plan produced no codes"))?;
+                        Ok(AttnRequest::new(codes))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        Ok(batch.items.iter().map(|r| self.logits_from_codes(&r.x)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{
+        Backend, PlanOptions, PlanScope, ReferenceBackend, SimBackend,
+    };
+    use crate::model::EvalSet;
+
+    fn tiny_cfg() -> VitConfig {
+        VitConfig {
+            image_h: 16,
+            image_w: 16,
+            image_c: 3,
+            patch: 8,
+            dim: 16,
+            hidden: 32,
+            heads: 2,
+            depth: 2,
+            classes: 4,
+            bits: 3,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn reference_logits_have_the_right_shape() {
+        let model = VitModel::synthetic(tiny_cfg()).unwrap();
+        let ev = EvalSet::synthetic(3, 16, 16, 3, 4, 2);
+        let logits = model.logits_ref(ev.image(0).unwrap()).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // deterministic
+        let again = model.logits_ref(ev.image(0).unwrap()).unwrap();
+        assert_eq!(logits, again);
+    }
+
+    #[test]
+    fn plan_chain_matches_the_reference_and_sim_matches_ref() {
+        let model = VitModel::synthetic(tiny_cfg()).unwrap();
+        let ev = EvalSet::synthetic(4, 16, 16, 3, 4, 3);
+        let images: Vec<&[f32]> = (0..ev.n).map(|i| ev.image(i).unwrap()).collect();
+        let want: Vec<Vec<f32>> =
+            images.iter().map(|img| model.logits_ref(img).unwrap()).collect();
+
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        for sim in [false, true] {
+            let mut plans: Vec<Box<dyn ExecutionPlan>> = model
+                .stack
+                .blocks
+                .iter()
+                .map(|b| {
+                    let backend: Box<dyn Backend> = if sim {
+                        Box::new(SimBackend::for_block(b.clone()))
+                    } else {
+                        Box::new(ReferenceBackend::for_block(b.clone()))
+                    };
+                    backend.plan(&opts).unwrap()
+                })
+                .collect();
+            let mut report = None;
+            let got = model
+                .logits_batch_with_plans(&images, &mut plans, &mut report)
+                .unwrap();
+            assert_eq!(got, want, "sim={sim}: plan chain vs reference logits");
+            assert_eq!(report.is_some(), sim, "only the simulator surfaces a report");
+        }
+    }
+
+    #[test]
+    fn accuracy_via_the_eval_set_is_in_range() {
+        let model = VitModel::synthetic(tiny_cfg()).unwrap();
+        let ev = EvalSet::synthetic(8, 16, 16, 3, 4, 5);
+        let logits: Vec<Vec<f32>> =
+            (0..ev.n).map(|i| model.logits_ref(ev.image(i).unwrap()).unwrap()).collect();
+        let acc = ev.accuracy(&logits);
+        assert!((0.0..=1.0).contains(&acc), "{acc}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometry() {
+        let mut cfg = tiny_cfg();
+        cfg.patch = 5; // does not divide 16
+        assert!(VitModel::synthetic(cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.heads = 3; // does not divide dim 16
+        assert!(VitModel::synthetic(cfg).is_err());
+        let model = VitModel::synthetic(tiny_cfg()).unwrap();
+        assert!(model.tokens(&[0.0; 7]).is_err());
+    }
+}

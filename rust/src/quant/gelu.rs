@@ -1,0 +1,219 @@
+//! Integer shift-GELU — the FFN nonlinearity of the encoder block.
+//!
+//! I-ViT (arXiv:2207.01405) shows the GELU admits a shift-based
+//! integer-only approximation through its sigmoid form
+//! `GELU(x) ≈ x · σ(1.702·x)`, with the exponentials inside σ evaluated
+//! by the same Eq. 4 base-2 shift machinery the attention softmax uses
+//! ([`crate::quant::shift_exp`]). This module provides:
+//!
+//! * [`gelu_ref`] — the f32 reference (tanh form, the standard
+//!   "approximate GELU" every framework ships);
+//! * [`shift_gelu`] — the shift-exponential sigmoid form the hardware
+//!   evaluates;
+//! * [`GeluLut`] — the code→code lookup table the datapath actually
+//!   holds: because the GELU input is an already-requantized `bits`-wide
+//!   code vector, the whole nonlinearity collapses to a `2^bits`-entry
+//!   table indexed by the input code — no multiplier, no exp unit in the
+//!   MLP path at inference time. Both the quant reference and the
+//!   systolic simulator apply the *same* table, so MLP outputs are
+//!   bit-identical across substrates by construction.
+//!
+//! The approximation error is pinned by tests over the **full input code
+//! range** at bits 2/3/4/8: quantization contributes at most Δ_out/2 and
+//! the shift-sigmoid + sigmoid-vs-tanh forms contribute a small flat
+//! term (see `lut_error_pinned_across_bit_widths`).
+
+use anyhow::{ensure, Result};
+
+use super::linear::IntMat;
+use super::qtensor::{QTensor, QuantSpec};
+use super::shift_exp::shift_exp;
+
+/// f32 reference GELU (tanh form): `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub fn gelu_ref(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Sigmoid built on the Eq. 4 shift exponential, evaluated on the
+/// numerically safe side so no `exp` of a large positive argument is
+/// ever taken: `σ(z) = 1/(1+e^{-z})` for z ≥ 0, `e^{z}/(1+e^{z})` below.
+pub fn shift_sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + shift_exp(-z))
+    } else {
+        let e = shift_exp(z);
+        e / (1.0 + e)
+    }
+}
+
+/// Shift-based GELU: `x · σ_shift(1.702·x)` (the I-ViT sigmoid form with
+/// the shift exponential inside).
+pub fn shift_gelu(x: f32) -> f32 {
+    x * shift_sigmoid(1.702 * x)
+}
+
+/// The integer GELU as the hardware holds it: one output code per input
+/// code, `table[q - qmin] = quantize(shift_gelu(q·Δ_in), Δ_out)`.
+///
+/// Building the table is plan-time work (it touches the fp `shift_gelu`
+/// once per code level); applying it is a pure integer lookup, which is
+/// why the MLP datapath needs no exp/multiplier unit between its two
+/// linear arrays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeluLut {
+    pub in_spec: QuantSpec,
+    pub out_spec: QuantSpec,
+    table: Vec<i32>,
+}
+
+impl GeluLut {
+    /// Tabulate the nonlinearity over the full input code range.
+    pub fn new(in_spec: QuantSpec, out_spec: QuantSpec) -> Result<GeluLut> {
+        ensure!(in_spec.signed && out_spec.signed, "GELU codes are signed on both sides");
+        let (lo, hi) = in_spec.range();
+        let step_in = in_spec.step.get();
+        let table: Vec<i32> =
+            (lo..=hi).map(|q| out_spec.quantize(shift_gelu(q as f32 * step_in))).collect();
+        Ok(GeluLut { in_spec, out_spec, table })
+    }
+
+    /// Number of table entries (= the input code range).
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Look one code up. Panics on a code outside the input range (a
+    /// [`QTensor`] constructed through validation can never hold one).
+    pub fn lookup(&self, code: i32) -> i32 {
+        let (lo, _) = self.in_spec.range();
+        self.table[(code - lo) as usize]
+    }
+
+    /// Apply the table elementwise to a validated code tensor.
+    pub fn apply(&self, x: &QTensor) -> Result<QTensor> {
+        ensure!(
+            x.spec == self.in_spec,
+            "GELU operand spec {:?} does not match the table's input spec {:?}",
+            x.spec,
+            self.in_spec
+        );
+        let codes: Vec<i32> = x.codes.data.iter().map(|&c| self.lookup(c)).collect();
+        Ok(QTensor {
+            codes: IntMat::new(x.rows(), x.cols(), codes),
+            spec: self.out_spec,
+        })
+    }
+
+    /// Max |dequant(table[q]) − gelu_ref(q·Δ_in)| over the full input
+    /// code range — the number the pinned-error tests assert on.
+    pub fn max_abs_error(&self) -> f32 {
+        let (lo, _) = self.in_spec.range();
+        let step_in = self.in_spec.step.get();
+        let step_out = self.out_spec.step.get();
+        self.table
+            .iter()
+            .enumerate()
+            .map(|(i, &q_out)| {
+                let x = (lo + i as i32) as f32 * step_in;
+                (q_out as f32 * step_out - gelu_ref(x)).abs()
+            })
+            .fold(0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qtensor::Step;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn gelu_ref_known_values() {
+        assert!(gelu_ref(0.0).abs() < 1e-7);
+        assert!((gelu_ref(3.0) - 3.0).abs() < 2e-2, "{}", gelu_ref(3.0));
+        assert!(gelu_ref(-3.0).abs() < 2e-2, "{}", gelu_ref(-3.0));
+        // the characteristic dip: GELU(-0.75) ≈ -0.17
+        assert!((gelu_ref(-0.75) + 0.17).abs() < 0.02, "{}", gelu_ref(-0.75));
+    }
+
+    #[test]
+    fn shift_sigmoid_bounded_and_monotone() {
+        let mut prev = 0.0f32;
+        for i in 0..200 {
+            let z = -10.0 + i as f32 * 0.1;
+            let s = shift_sigmoid(z);
+            assert!((0.0..=1.0).contains(&s), "σ({z}) = {s}");
+            assert!(s + 5e-3 >= prev, "σ not (nearly) monotone at z={z}: {s} < {prev}");
+            prev = prev.max(s);
+        }
+        assert!((shift_sigmoid(0.0) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn shift_gelu_close_to_reference() {
+        prop_check("shift-gelu-vs-ref", 141, 300, |rng| {
+            let x = rng.uniform(-5.0, 5.0) as f32;
+            let d = (shift_gelu(x) - gelu_ref(x)).abs();
+            // sigmoid-form vs tanh-form ≤ ~0.02, shift-exp σ error ≤ ~0.01
+            if d > 0.04 {
+                return Err(format!("x={x}: |Δ| = {d}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The satellite's pinned bound: across the FULL input code range at
+    /// every supported bit width, the integer LUT is within half an
+    /// output step plus the flat approximation term of the f32 GELU.
+    #[test]
+    fn lut_error_pinned_across_bit_widths() {
+        for bits in [2u32, 3, 4, 8] {
+            // cover x ∈ [−4, 4): the range beyond which GELU(x) ≈ x or 0
+            let levels = 1u32 << (bits - 1);
+            let step_in = 4.0 / levels as f32;
+            let step_out = 4.0 / levels as f32;
+            let lut = GeluLut::new(
+                QuantSpec::signed(bits, Step::new(step_in).unwrap()),
+                QuantSpec::signed(bits, Step::new(step_out).unwrap()),
+            )
+            .unwrap();
+            assert_eq!(lut.entries(), 1 << bits);
+            let err = lut.max_abs_error();
+            let bound = 0.5 * step_out + 0.05;
+            assert!(err <= bound, "{bits}-bit: LUT error {err} exceeds pinned bound {bound}");
+        }
+    }
+
+    #[test]
+    fn lut_endpoints_behave_like_gelu() {
+        let spec = |s: f32| QuantSpec::signed(8, Step::new(s).unwrap());
+        let lut = GeluLut::new(spec(4.0 / 128.0), spec(4.0 / 128.0)).unwrap();
+        // far negative → 0; far positive → identity-ish (positive, large)
+        assert_eq!(lut.lookup(-128), 0);
+        assert!(lut.lookup(127) > 100, "{}", lut.lookup(127));
+    }
+
+    #[test]
+    fn apply_validates_spec_and_maps_codes() {
+        let in_spec = QuantSpec::signed(3, Step::new(0.5).unwrap());
+        let out_spec = QuantSpec::signed(3, Step::new(0.25).unwrap());
+        let lut = GeluLut::new(in_spec, out_spec).unwrap();
+        let x = QTensor::new(IntMat::new(1, 3, vec![-4, 0, 3]), in_spec).unwrap();
+        let y = lut.apply(&x).unwrap();
+        assert_eq!(y.spec, out_spec);
+        assert_eq!(y.codes.data.len(), 3);
+        // GELU(0) = 0, GELU(1.5) ≈ 1.4 → code ≈ 6 clipped to 3
+        assert_eq!(y.codes.data[1], 0);
+        assert_eq!(y.codes.data[2], 3);
+        // mismatched operand spec is rejected
+        let bad = QTensor::new(
+            IntMat::new(1, 1, vec![0]),
+            QuantSpec::signed(3, Step::new(0.4).unwrap()),
+        )
+        .unwrap();
+        assert!(lut.apply(&bad).is_err());
+        // unsigned specs are rejected at construction
+        assert!(GeluLut::new(QuantSpec::unsigned(3, Step::new(0.5).unwrap()), out_spec).is_err());
+    }
+}

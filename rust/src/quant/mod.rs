@@ -9,6 +9,7 @@
 
 pub mod calibrate;
 pub mod fold;
+pub mod gelu;
 pub mod layernorm;
 pub mod linear;
 pub mod qtensor;
@@ -17,6 +18,7 @@ pub mod softmax;
 
 pub use calibrate::{calibrate_minmax, calibrate_mse, calibrate_percentile};
 pub use fold::{FoldedLinear, QuantParams};
+pub use gelu::{gelu_ref, shift_gelu, shift_sigmoid, GeluLut};
 pub use layernorm::{qlayernorm_comparator, qlayernorm_reference, welford};
 pub use linear::{dequant_linear, int_linear, int_matmul};
 pub use qtensor::{QTensor, QuantSpec, ScaleChain, Step};
@@ -110,6 +112,37 @@ mod tests {
         assert_eq!(quantize(-0.9, 0.5, 3, true), -2);
         assert_eq!(quantize(0.9, 0.25, 3, false), 4);
         assert_eq!(quantize(-0.3, 0.25, 3, false), 0);
+    }
+
+    #[test]
+    fn quantize_round_half_even_at_range_boundaries() {
+        // Exact half-step ties — x = (k + ½)·Δ with Δ a power of two so
+        // the division x/Δ reproduces k + ½ exactly in f32 — must resolve
+        // to the EVEN neighbour of {k, k+1}, clipped into range. This
+        // pins the jnp.round contract at the clip edges, where a
+        // round-half-away implementation would silently disagree.
+        const POW2_STEPS: [f32; 5] = [0.0625, 0.125, 0.25, 0.5, 1.0];
+        prop_check("quantize-boundary-ties", 17, 400, |rng| {
+            let bits = rng.int_in(2, 8) as u32;
+            let step = POW2_STEPS[rng.int_in(0, POW2_STEPS.len() as i64 - 1) as usize];
+            let (qmin, qmax) = int_range(bits);
+            // draw k across the whole range INCLUDING the clip edges
+            let k = rng.int_in(qmin as i64 - 1, qmax as i64) as i32;
+            let x = (k as f32 + 0.5) * step;
+            let got = quantize(x, step, bits, true);
+            let even = if k % 2 == 0 { k } else { k + 1 };
+            let want = even.clamp(qmin, qmax);
+            if got != want {
+                return Err(format!(
+                    "bits={bits} step={step} k={k}: tie at {x} → {got}, want even neighbour {want}"
+                ));
+            }
+            Ok(())
+        });
+        // the clip edges themselves, spelled out
+        assert_eq!(quantize((3.0 + 0.5) * 0.25, 0.25, 3, true), 3); // beyond qmax clamps
+        assert_eq!(quantize((-4.0 - 0.5) * 0.25, 0.25, 3, true), -4); // beyond qmin clamps
+        assert_eq!(quantize(2.5 * 0.25, 0.25, 3, true), 2); // interior tie → even
     }
 
     #[test]

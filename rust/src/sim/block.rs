@@ -1,0 +1,213 @@
+//! [`BlockSim`] — the full encoder block on the systolic substrate:
+//! pre-LN comparator banks, the Fig. 2 attention pipeline, the residual
+//! requantizers and the [`super::MlpSim`] FFN, each contributing
+//! Table-I-style [`BlockStats`] rows to one merged per-block report.
+//!
+//! Numerics are shared with the quant reference
+//! ([`crate::block::EncoderBlock::run_reference`]): the LN comparator,
+//! the GELU LUT and [`crate::block::residual_requant`] are the *same*
+//! functions, and the attention half inherits the already-pinned
+//! ref ≡ sim parity — so block outputs are bit-identical across
+//! substrates by construction, which `tests/block_parity.rs` pins at
+//! DeiT-S dimensions for every supported bit width.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::block::{residual_requant, EncoderBlock};
+use crate::quant::qtensor::{QTensor, QuantSpec};
+
+use super::attention::{AttentionReport, AttentionSim};
+use super::layernorm::LayerNormSim;
+use super::mlp::MlpSim;
+use super::stats::BlockStats;
+
+/// The simulated encoder block.
+#[derive(Debug)]
+pub struct BlockSim {
+    pub label: String,
+    pub ln1: LayerNormSim,
+    pub ln2: LayerNormSim,
+    pub attn: AttentionSim,
+    pub mlp: MlpSim,
+    in_spec: QuantSpec,
+    attn_out_spec: QuantSpec,
+    res1_spec: QuantSpec,
+    out_spec: QuantSpec,
+    bits: u32,
+}
+
+/// Everything [`BlockSim::run`] produces.
+#[derive(Debug)]
+pub struct BlockSimOutput {
+    /// Block output codes (N × D, step Δ_out).
+    pub out_codes: QTensor,
+    /// The merged hardware rows of every stage (attention + MLP +
+    /// residual path) — a superset of the attention-only Table I.
+    pub report: AttentionReport,
+}
+
+/// Stats row for a standalone requantizer bank (the attention-output
+/// quantizer): one comparator lane per channel.
+fn quantizer_stats(name: &str, rows: usize, d: usize, bits: u32) -> BlockStats {
+    let mut s = BlockStats::new(name, "1 x D", d as u64);
+    s.cmp_ops = (rows * d) as u64 * ((1u64 << bits) - 1);
+    s.cmp_bits = bits;
+    s.fp_ops = (rows * d) as u64; // the eff-scale multiply
+    s.cycles = (rows + d) as u64;
+    s.idle_pe_cycles = (s.pe_count * s.cycles).saturating_sub((rows * d) as u64);
+    s
+}
+
+/// Stats row for a dual-operand residual requantizer: two folded-scale
+/// multiplies + one add per element, then the comparator bank.
+fn residual_stats(name: &str, rows: usize, d: usize, bits: u32) -> BlockStats {
+    let mut s = quantizer_stats(name, rows, d, bits);
+    s.fp_ops = 3 * (rows * d) as u64;
+    s
+}
+
+impl BlockSim {
+    /// Lower a validated [`EncoderBlock`] onto the systolic substrate.
+    pub fn new(block: &EncoderBlock) -> BlockSim {
+        BlockSim {
+            label: block.label.clone(),
+            ln1: LayerNormSim::new(
+                "Block LN1",
+                block.norms.ln1_gamma.clone(),
+                block.norms.ln1_beta.clone(),
+                block.attn.s_x.get(),
+                block.bits,
+            ),
+            ln2: LayerNormSim::new(
+                "Block LN2",
+                block.norms.ln2_gamma.clone(),
+                block.norms.ln2_beta.clone(),
+                block.mlp.s_in.get(),
+                block.bits,
+            ),
+            attn: block.attn.to_sim(),
+            mlp: block.mlp.to_sim(),
+            in_spec: block.input_spec(),
+            attn_out_spec: block.attn_out_spec(),
+            res1_spec: block.res1_spec(),
+            out_spec: block.out_spec(),
+            bits: block.bits,
+        }
+    }
+
+    /// Model dimension D.
+    pub fn d(&self) -> usize {
+        self.attn.d_out()
+    }
+
+    /// Run the whole block on typed input codes `x` (N × D).
+    pub fn run(&self, x: &QTensor) -> Result<BlockSimOutput> {
+        ensure!(
+            x.spec.signed == self.in_spec.signed && x.spec.bits == self.in_spec.bits,
+            "block input spec {:?} does not match {:?}",
+            x.spec,
+            self.in_spec
+        );
+        let (got, exp) = (x.spec.step.get(), self.in_spec.step.get());
+        ensure!(
+            (got - exp).abs() <= 1e-3 * exp.abs().max(got.abs()),
+            "block input step {got} does not match Δ_x {exp}"
+        );
+        let (n, d) = (x.rows(), self.d());
+
+        // pre-LN 1 → attention input codes
+        let xf = x.dequantize();
+        let ln1_out = self.ln1.run(&xf, n)?;
+        let mut blocks = vec![ln1_out.stats];
+
+        // the Fig. 2 attention pipeline (incl. W_O fp tail)
+        let attn_out = self.attn.run(&ln1_out.codes)?;
+        blocks.extend(attn_out.report.blocks);
+        let vals = attn_out
+            .out_values
+            .ok_or_else(|| anyhow!("block attention sim produced no W_O output"))?;
+        let attn_q = QTensor::quantize_f32(&vals, n, d, self.attn_out_spec)?;
+        blocks.push(quantizer_stats("attn-out quantizer", n, d, self.bits));
+
+        // residual 1
+        let r1 = residual_requant(&attn_q, x, self.res1_spec)?;
+        blocks.push(residual_stats("residual add 1", n, d, self.bits));
+
+        // pre-LN 2 → MLP input codes
+        let r1f = r1.dequantize();
+        let ln2_out = self.ln2.run(&r1f, n)?;
+        blocks.push(ln2_out.stats);
+
+        // the FFN
+        let mlp_out = self.mlp.run(&ln2_out.codes)?;
+        blocks.extend(mlp_out.blocks);
+
+        // residual 2 → block output codes
+        let out = residual_requant(&mlp_out.codes, &r1, self.out_spec)?;
+        blocks.push(residual_stats("residual add 2", n, d, self.bits));
+
+        Ok(BlockSimOutput { out_codes: out, report: AttentionReport { blocks } })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_block_reference_bit_for_bit() {
+        for bits in [2u32, 3, 4, 8] {
+            let block = EncoderBlock::synthetic(16, 32, 2, bits, 70 + bits as u64).unwrap();
+            let sim = block.to_sim();
+            let x = block.random_input(6, 2).unwrap();
+            let want = block.run_reference(&x).unwrap();
+            let got = sim.run(&x).unwrap();
+            assert_eq!(got.out_codes.codes.data, want.codes.data, "{bits}-bit block codes");
+            assert_eq!(got.out_codes.spec, want.spec, "{bits}-bit block spec");
+        }
+    }
+
+    #[test]
+    fn report_covers_the_whole_datapath() {
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 77).unwrap();
+        let sim = block.to_sim();
+        let x = block.random_input(5, 1).unwrap();
+        let out = sim.run(&x).unwrap();
+        let names: Vec<&str> = out.report.blocks.iter().map(|b| b.name.as_str()).collect();
+        for want in [
+            "Block LN1",
+            "Q linear",
+            "QK^T matmul+softmax",
+            "PV matmul",
+            "O linear",
+            "attn-out quantizer",
+            "residual add 1",
+            "Block LN2",
+            "FC1 linear",
+            "GELU LUT",
+            "FC2 linear",
+            "residual add 2",
+        ] {
+            assert!(names.contains(&want), "missing report row '{want}' in {names:?}");
+        }
+        // the FFN roughly doubles the modeled MAC datapath vs attention
+        let mac = |name: &str| {
+            out.report.blocks.iter().find(|b| b.name == name).unwrap().mac_ops
+        };
+        assert_eq!(mac("FC1 linear"), 5 * 12 * 24);
+        assert_eq!(mac("FC2 linear"), 5 * 24 * 12);
+        assert!(out.report.total_macs() > 0);
+    }
+
+    #[test]
+    fn rejects_wrong_input_spec() {
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 78).unwrap();
+        let sim = block.to_sim();
+        let bad = QTensor::new(
+            crate::quant::linear::IntMat::new(2, 12, vec![0; 24]),
+            QuantSpec::signed(4, crate::quant::Step::new(0.15).unwrap()),
+        )
+        .unwrap();
+        assert!(sim.run(&bad).is_err());
+    }
+}

@@ -33,6 +33,10 @@ pub enum PeKind {
     ExpMac { bits: u32 },
     /// Welford μ/σ² station: fused fp datapath (Fig. 5, 4.67 mW).
     LnStats,
+    /// `2^bits`-entry code→code lookup lane (the integer shift-GELU of
+    /// the MLP path): a mux tree the size of a `bits`-wide comparator
+    /// plus an output latch — no multiplier, no exp unit.
+    Lut { bits: u32 },
     /// Delay-line register (0.068 mW).
     Delay,
     /// Reversing-crossbar register/mux (0.369 mW).
@@ -154,6 +158,7 @@ impl EnergyModel {
             }
             PeKind::ExpMac { bits } => self.mac_pj(bits) + self.c_exp_pj + self.c_sys_add_pj,
             PeKind::LnStats => 2.0 * self.c_fp_pj + self.c_ln_overhead_pj,
+            PeKind::Lut { bits } => self.cmp_pj(bits) + self.c_os_overhead_pj,
             PeKind::Delay => self.c_delay_pj,
             PeKind::Reversing => self.c_rev_pj,
             PeKind::Untyped => 0.0,
@@ -218,6 +223,19 @@ mod tests {
     #[test]
     fn untyped_has_no_sustained_cost() {
         assert_eq!(EnergyModel::default().pe_cycle_pj(PeKind::Untyped), 0.0);
+    }
+
+    #[test]
+    fn lut_pe_is_cheap_and_grows_with_bits() {
+        // The MLP's GELU LUT lane must stay far below the fp LayerNorm
+        // PEs (that is why the FFN integerizes well) and scale with the
+        // mux-tree width.
+        let m = EnergyModel::default();
+        let lut3 = m.pe_cycle_pj(PeKind::Lut { bits: 3 });
+        let lut8 = m.pe_cycle_pj(PeKind::Lut { bits: 8 });
+        assert!(lut3 > 0.0);
+        assert!(lut3 < lut8);
+        assert!(lut8 < m.pe_cycle_pj(PeKind::LnStats));
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! The systolic MLP — fc1 / GELU-LUT / fc2 as hardware blocks, extending
+//! the Table I machinery to the FFN half of the encoder block.
+//!
+//! Both linears are the Fig. 3 weight-stationary [`LinearArraySim`] with
+//! the §IV-B Quantize epilogue (scales absorbed into the quantizer
+//! threshold), so the MLP's MAC counts land in Table-I-style rows
+//! ("FC1 linear", "FC2 linear") with the same wavefront cycle
+//! accounting. Between them sits the "GELU LUT" bank: one `2^bits`-entry
+//! lookup lane per hidden channel — no multiplier, no exp unit — whose
+//! table is *shared* with the quant reference
+//! ([`crate::block::MlpModule::gelu_lut`]), making ref ≡ sim on the MLP
+//! bit-identical by construction.
+
+use anyhow::Result;
+
+use crate::block::MlpModule;
+use crate::quant::gelu::GeluLut;
+use crate::quant::qtensor::{QTensor, QuantSpec};
+
+use super::energy::PeKind;
+use super::linear::{Epilogue, LinearArraySim};
+use super::stats::BlockStats;
+
+/// The simulated FFN of one encoder block.
+#[derive(Debug)]
+pub struct MlpSim {
+    pub fc1: LinearArraySim,
+    pub fc2: LinearArraySim,
+    pub lut: GeluLut,
+    h_spec: QuantSpec,
+    out_spec: QuantSpec,
+    bits: u32,
+}
+
+/// Everything [`MlpSim::run`] produces.
+#[derive(Debug)]
+pub struct MlpSimOutput {
+    /// MLP output codes (N × D, step Δ_out).
+    pub codes: QTensor,
+    /// The three hardware rows: FC1, GELU LUT, FC2.
+    pub blocks: Vec<BlockStats>,
+}
+
+impl MlpSim {
+    /// Lower a folded [`MlpModule`] onto the systolic substrate.
+    pub fn new(module: &MlpModule) -> MlpSim {
+        MlpSim {
+            fc1: LinearArraySim::new("FC1 linear", module.fc1.clone(), module.bits),
+            fc2: LinearArraySim::new("FC2 linear", module.fc2.clone(), module.bits),
+            lut: module.gelu_lut().clone(),
+            h_spec: QuantSpec::signed(module.bits, module.s_h),
+            out_spec: module.out_spec(),
+            bits: module.bits,
+        }
+    }
+
+    /// Hidden dimension H.
+    pub fn d_hidden(&self) -> usize {
+        self.fc1.folded.codes.rows
+    }
+
+    /// Stream `x` (N × D input codes) through fc1 → LUT → fc2.
+    pub fn run(&self, x: &QTensor) -> Result<MlpSimOutput> {
+        let n = x.rows();
+        let hdim = self.d_hidden();
+
+        let fc1_out = self.fc1.run(x, &Epilogue::Quantize(self.h_spec))?;
+        let h = fc1_out.codes.expect("quantize epilogue yields codes");
+
+        let g = self.lut.apply(&h)?;
+        let mut lut_stats = BlockStats::new("GELU LUT", "1 x H", hdim as u64);
+        lut_stats.kind = PeKind::Lut { bits: self.bits };
+        lut_stats.cmp_ops = (n * hdim) as u64; // one 2^b-way lookup per element
+        lut_stats.cmp_bits = self.bits;
+        lut_stats.reg_bit_writes = (n * hdim) as u64 * self.bits as u64;
+        lut_stats.cycles = (n + hdim) as u64;
+        lut_stats.idle_pe_cycles =
+            (lut_stats.pe_count * lut_stats.cycles).saturating_sub((n * hdim) as u64);
+
+        let fc2_out = self.fc2.run(&g, &Epilogue::Quantize(self.out_spec))?;
+        let codes = fc2_out.codes.expect("quantize epilogue yields codes");
+
+        Ok(MlpSimOutput {
+            codes,
+            blocks: vec![fc1_out.stats, lut_stats, fc2_out.stats],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_quant_reference_bit_for_bit() {
+        for bits in [2u32, 3, 4, 8] {
+            let module = MlpModule::synthetic(12, 24, bits, 60 + bits as u64).unwrap();
+            let sim = module.to_sim();
+            let x = module.random_input(7, 3).unwrap();
+            let want = module.run_reference(&x).unwrap();
+            let got = sim.run(&x).unwrap();
+            assert_eq!(got.codes.codes.data, want.codes.data, "{bits}-bit MLP codes");
+            assert_eq!(got.codes.spec, want.spec, "{bits}-bit MLP spec");
+        }
+    }
+
+    #[test]
+    fn accounts_fc_macs_and_the_lut_row() {
+        let module = MlpModule::synthetic(8, 20, 3, 9).unwrap();
+        let sim = module.to_sim();
+        let x = module.random_input(5, 1).unwrap();
+        let out = sim.run(&x).unwrap();
+        let find = |name: &str| {
+            out.blocks
+                .iter()
+                .find(|b| b.name == name)
+                .unwrap_or_else(|| panic!("missing block {name}"))
+        };
+        assert_eq!(find("FC1 linear").mac_ops, 5 * 8 * 20);
+        assert_eq!(find("FC2 linear").mac_ops, 5 * 20 * 8);
+        let lut = find("GELU LUT");
+        assert_eq!(lut.pe_count, 20);
+        assert_eq!(lut.cmp_ops, 5 * 20);
+        assert_eq!(lut.kind, PeKind::Lut { bits: 3 });
+        // the LUT bank burns no MACs — that is the point
+        assert_eq!(lut.mac_ops, 0);
+    }
+}

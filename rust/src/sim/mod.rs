@@ -26,7 +26,12 @@
 //! (μ/σ² PE rows + comparator bank), [`softmax_matmul`] (QKᵀ with on-PE
 //! exp and systolic Σ row), [`matmul`] (attn·V with output quantizer),
 //! [`reversing`] and [`delay`] (dataflow alignment), composed by
-//! [`attention`] into the full self-attention pipeline.
+//! [`attention`] into the full self-attention pipeline. Beyond the
+//! paper's synthesized module, [`mlp`] extends the same machinery to
+//! the FFN (FC1/FC2 weight-stationary arrays around a GELU-LUT bank)
+//! and [`block`] composes pre-LN comparator banks, attention, residual
+//! requantizers and the MLP into one [`BlockSim`] encoder block whose
+//! merged report roughly doubles the modeled datapath.
 
 //! All block entry points are **typed**: operands arrive as
 //! [`crate::quant::QTensor`]s and scale foldings as
@@ -36,16 +41,20 @@
 
 pub mod accumulate;
 pub mod attention;
+pub mod block;
 pub mod delay;
 pub mod energy;
 pub mod layernorm;
 pub mod linear;
 pub mod matmul;
+pub mod mlp;
 pub mod reversing;
 pub mod softmax_matmul;
 pub mod stats;
 
 pub use attention::{AttentionReport, AttentionSim, AttentionSteps};
+pub use block::{BlockSim, BlockSimOutput};
 pub use energy::EnergyModel;
 pub use linear::{Epilogue, LinearArraySim, PostScale};
+pub use mlp::{MlpSim, MlpSimOutput};
 pub use stats::BlockStats;

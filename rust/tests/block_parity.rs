@@ -1,0 +1,116 @@
+//! Full encoder-block cross-backend parity — the acceptance gate of the
+//! block subsystem: one integerized encoder block (LN → attention →
+//! +residual → LN → MLP → +residual), bit-identical output codes on the
+//! quant reference and the systolic simulator at **DeiT-S dimensions**
+//! (N=198 tokens, D=384, 6 heads × head-dim 64, MLP hidden 1536) for
+//! every supported bit width — MLP and residual requantization stages
+//! included. Also pins `sim-mt` worker-count determinism for block
+//! plans, and the plan-cache warm path at block scope.
+
+use ivit::backend::{
+    AttnBatchRequest, AttnRequest, Backend, PlanCache, PlanOptions, PlanScope, ReferenceBackend,
+    SimBackend, SimMtBackend,
+};
+use ivit::block::EncoderBlock;
+
+const TOKENS: usize = 198;
+const DIM: usize = 384;
+const HIDDEN: usize = 1536;
+const HEADS: usize = 6;
+
+fn block_opts() -> PlanOptions {
+    PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() }
+}
+
+#[test]
+fn full_block_ref_and_sim_bit_identical_at_deit_s_dims() {
+    for bits in [2u32, 3, 4, 8] {
+        let block =
+            EncoderBlock::synthetic(DIM, HIDDEN, HEADS, bits, 500 + bits as u64).expect("block");
+        let x = block.random_input(TOKENS, 9).expect("input");
+        let req = AttnRequest::new(x);
+
+        let mut ref_plan =
+            ReferenceBackend::for_block(block.clone()).plan(&block_opts()).expect("ref plan");
+        let mut sim_plan =
+            SimBackend::for_block(block.clone()).plan(&block_opts()).expect("sim plan");
+        let a = ref_plan.run_one(&req).expect("ref run");
+        let b = sim_plan.run_one(&req).expect("sim run");
+
+        let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+        assert_eq!(oa.codes.data, ob.codes.data, "{bits}-bit DeiT-S block: output codes");
+        assert_eq!(oa.spec, ob.spec, "{bits}-bit DeiT-S block: output spec");
+        assert_eq!((oa.rows(), oa.cols()), (TOKENS, DIM), "{bits}-bit: output shape");
+
+        // the simulator's merged report covers the MLP and residual
+        // stages with the right MAC facts (N·D·H per FC)
+        let report = b.report.as_ref().expect("block sim surfaces stats");
+        let mac = |name: &str| {
+            report
+                .blocks
+                .iter()
+                .find(|bl| bl.name == name)
+                .unwrap_or_else(|| panic!("{bits}-bit: missing report row '{name}'"))
+                .mac_ops
+        };
+        assert_eq!(mac("FC1 linear"), (TOKENS * DIM * HIDDEN) as u64, "{bits}-bit FC1 MACs");
+        assert_eq!(mac("FC2 linear"), (TOKENS * HIDDEN * DIM) as u64, "{bits}-bit FC2 MACs");
+        for row in ["residual add 1", "residual add 2", "GELU LUT", "attn-out quantizer"] {
+            assert!(
+                report.blocks.iter().any(|bl| bl.name == row),
+                "{bits}-bit: missing report row '{row}'"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_mt_block_plans_are_deterministic_across_worker_counts() {
+    // smaller dims (worker determinism is dimension-independent), batch
+    // of 4 so rows actually shard
+    let block = EncoderBlock::synthetic(48, 96, 3, 3, 91).expect("block");
+    let reqs: Vec<AttnRequest> = (0..4u64)
+        .map(|i| AttnRequest::new(block.random_input(20, 700 + i).expect("input")))
+        .collect();
+    let req = AttnBatchRequest::new(reqs);
+
+    let mut st = SimBackend::for_block(block.clone()).plan(&block_opts()).expect("sim plan");
+    let want = st.run_batch(&req).expect("sim batch");
+    let want_macs = want.report.as_ref().expect("report").total_macs();
+
+    for workers in [1usize, 2, 4] {
+        let backend = SimMtBackend::for_block(block.clone(), workers);
+        let mut plan = backend.plan(&block_opts()).expect("sim-mt plan");
+        let got = plan.run_batch(&req).expect("sim-mt batch");
+        assert_eq!(got.items.len(), want.items.len());
+        for (i, (g, w)) in got.items.iter().zip(&want.items).enumerate() {
+            assert_eq!(
+                g.out_codes.as_ref().unwrap().codes.data,
+                w.out_codes.as_ref().unwrap().codes.data,
+                "w={workers} row {i}: block output codes"
+            );
+        }
+        // merged-stats partition invariant holds for block plans too
+        assert_eq!(
+            got.report.as_ref().unwrap().total_macs(),
+            want_macs,
+            "w={workers}: merged MAC total"
+        );
+    }
+}
+
+#[test]
+fn plan_cache_serves_block_plans_warm_and_bit_identical() {
+    let block = EncoderBlock::synthetic(32, 64, 2, 3, 77).expect("block");
+    let backend = ReferenceBackend::for_block(block.clone());
+    let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(6, 5).expect("input")));
+    let mut cache = PlanCache::new();
+    let cold = cache.get_or_plan(&backend, &block_opts()).unwrap().run_batch(&req).unwrap();
+    let warm = cache.get_or_plan(&backend, &block_opts()).unwrap().run_batch(&req).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 1));
+    assert_eq!(
+        cold.items[0].out_codes.as_ref().unwrap().codes.data,
+        warm.items[0].out_codes.as_ref().unwrap().codes.data,
+        "cold vs warm block outputs"
+    );
+}
