@@ -9,12 +9,15 @@
 #   make eval-smoke  — CI smoke: artifact-free `ivit eval --backend ref` on a
 #                      tiny synthetic checkpoint (8 images through the
 #                      integerized encoder-block stack, no PJRT needed)
+#   make serve-smoke — CI smoke: artifact-free block-scope `ivit serve` (a
+#                      fixed request count through the pipelined coordinator
+#                      and a whole encoder block on the ref backend)
 #   make artifacts   — lower the JAX model to HLO + export eval set / attn_case
 #                      (needs the python toolchain; see python/compile/)
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -33,6 +36,10 @@ bench-smoke:
 
 eval-smoke:
 	cd $(RUST_DIR) && cargo run --release -q -- eval --backend ref --limit 8 --images 8
+
+serve-smoke:
+	cd $(RUST_DIR) && cargo run --release -q -- serve --backend ref --scope block \
+		--tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -8,9 +8,12 @@
 //!    sharded `sim-mt` plan. Prints the ratios and FAILS (non-zero
 //!    exit) if batched `sim` is not ≥ 1.5× per-row dispatch or if
 //!    `sim-mt` (4 workers) does not beat single-threaded `sim`.
-//! 2. attention serving through the coordinator for every integer
+//! 2. `pipelined_vs_drain` — the submit/poll pipeline gate: K sim-mt
+//!    batches drained one at a time vs all K overlapped in flight;
+//!    FAILS if pipelined dispatch does not beat drain-per-batch.
+//! 3. attention serving through the coordinator for every integer
 //!    backend (no artifacts needed).
-//! 3. image-classification serving over the PJRT executables
+//! 4. image-classification serving over the PJRT executables
 //!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
 //! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
@@ -27,7 +30,8 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use ivit::backend::{
-    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions,
+    AttnBatchRequest, AttnBatchResponse, AttnRequest, BackendConfig, BackendRegistry, JobState,
+    PlanOptions,
 };
 use ivit::bench::{BenchRecord, TableWriter};
 use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
@@ -147,6 +151,103 @@ fn batch_vs_per_row() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The submit/poll pipeline measurement: K batches through the sim-mt
+/// plan, **drained one at a time** (submit → drain → submit …, the
+/// pre-pipeline serving model) vs **all K overlapped** (submitted up
+/// front, polled to completion in order — what the pipelined
+/// coordinator does). While batch i's W_O tail and stats merge run on
+/// the caller thread, batch i+1's shards execute on the pool, so
+/// pipelined dispatch must beat drain-per-batch. Outputs are asserted
+/// bit-identical between the arms; the timing gate is skipped in the
+/// smoke profile.
+fn pipelined_vs_drain() -> anyhow::Result<()> {
+    let (n_batches, rows, tokens) = if smoke() { (3usize, 2usize, 16usize) } else { (8, 4, 48) };
+    println!(
+        "pipelined submit/poll vs drain-per-batch (sim-mt x4, DeiT-S dims, {n_batches} batches × {rows} rows):\n"
+    );
+    let registry = BackendRegistry::with_defaults();
+    // DeiT-S encoder geometry (D=384, 6 heads): the W_O tail gives the
+    // caller thread real per-batch work to overlap with the pool.
+    let mut cfg = BackendConfig { heads: 6, workers: 4, ..BackendConfig::default() };
+    let module = cfg.resolve_module()?;
+    cfg.module = Some(module.clone());
+    let batches: Vec<AttnBatchRequest> = (0..n_batches as u64)
+        .map(|j| {
+            Ok(AttnBatchRequest::new(
+                (0..rows as u64)
+                    .map(|i| Ok(AttnRequest::new(module.random_input(tokens, 500 + 10 * j + i)?)))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let opts = PlanOptions { workers: 4, ..PlanOptions::default() };
+
+    // --- arm A: drain each batch to completion before the next submit.
+    let backend = registry.create("sim-mt", &cfg)?;
+    let mut plan = backend.plan(&opts)?;
+    let t0 = Instant::now();
+    let drained: Vec<AttnBatchResponse> =
+        batches.iter().map(|b| plan.run_batch(b)).collect::<anyhow::Result<Vec<_>>>()?;
+    let drain_wall = t0.elapsed().as_secs_f64();
+
+    // --- arm B: submit everything, then poll in submission order.
+    let mut plan = backend.plan(&opts)?;
+    let t0 = Instant::now();
+    let jobs = batches.iter().map(|b| plan.submit(b)).collect::<anyhow::Result<Vec<_>>>()?;
+    let mut pipelined = Vec::with_capacity(n_batches);
+    for job in jobs {
+        pipelined.push(loop {
+            match plan.poll(job)? {
+                JobState::Done(resp) => break resp,
+                JobState::Pending => std::thread::sleep(Duration::from_micros(20)),
+            }
+        });
+    }
+    let pipe_wall = t0.elapsed().as_secs_f64();
+
+    // both arms must agree bit-for-bit, batch by batch, row by row
+    for (j, (a, b)) in drained.iter().zip(&pipelined).enumerate() {
+        anyhow::ensure!(a.items.len() == b.items.len(), "batch {j}: row count");
+        for (i, (ra, rb)) in a.items.iter().zip(&b.items).enumerate() {
+            anyhow::ensure!(
+                ra.out_codes.as_ref().unwrap().codes.data
+                    == rb.out_codes.as_ref().unwrap().codes.data,
+                "batch {j} row {i}: drained vs pipelined output codes differ"
+            );
+        }
+    }
+
+    let total_rows = (n_batches * rows) as f64;
+    let mut tbl = TableWriter::new(&["dispatch", "batches", "wall ms", "rows/s"]);
+    for (name, wall) in [("drain-per-batch", drain_wall), ("pipelined submit/poll", pipe_wall)] {
+        tbl.row(vec![
+            name.to_string(),
+            n_batches.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", total_rows / wall),
+        ]);
+        BenchRecord::new("throughput.pipelined_vs_drain")
+            .str_field("dispatch", name)
+            .num("batches", n_batches as f64)
+            .num("rows_per_s", total_rows / wall)
+            .num("ratio_vs_drain", drain_wall / wall)
+            .emit();
+    }
+    print!("{}", tbl.render());
+    let ratio = drain_wall / pipe_wall;
+    println!("\npipelined vs drain-per-batch : {ratio:.2}x rows/sec (target > 1x)");
+    if smoke() {
+        println!("smoke profile: outputs verified bit-identical across both dispatch arms ✓\n");
+        return Ok(());
+    }
+    anyhow::ensure!(
+        ratio > 1.0,
+        "REGRESSION: pipelined sim-mt dispatch is only {ratio:.2}x drain-per-batch (target > 1x)"
+    );
+    println!();
+    Ok(())
+}
+
 /// Attention serving through the backend registry — runs standalone, so
 /// the bench produces numbers even before `make artifacts`.
 fn backend_attention_throughput() -> anyhow::Result<()> {
@@ -171,7 +272,11 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
         let elems = BatchExecutor::image_elems(&exec);
         let coord = Coordinator::start(
             exec,
-            BatcherConfig { queue_capacity: 128, max_wait: Duration::from_millis(2) },
+            BatcherConfig {
+                queue_capacity: 128,
+                max_wait: Duration::from_millis(2),
+                ..BatcherConfig::default()
+            },
         );
         let h = coord.handle();
         let mut rng = XorShift::new(9);
@@ -212,6 +317,7 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     batch_vs_per_row()?;
+    pipelined_vs_drain()?;
     backend_attention_throughput()?;
     if smoke() {
         println!("bench smoke: one tiny batch per backend completed OK");
@@ -246,7 +352,11 @@ fn main() -> anyhow::Result<()> {
         };
         let coord = Coordinator::start(
             exec,
-            BatcherConfig { queue_capacity: 256, max_wait: Duration::from_millis(2) },
+            BatcherConfig {
+                queue_capacity: 256,
+                max_wait: Duration::from_millis(2),
+                ..BatcherConfig::default()
+            },
         );
         let h = coord.handle();
         let mut rng = XorShift::new(3);
@@ -288,7 +398,7 @@ fn main() -> anyhow::Result<()> {
     let bare_p50 = bare[bare.len() / 2];
     let coord = Coordinator::start(
         exec,
-        BatcherConfig { queue_capacity: 32, max_wait: Duration::ZERO },
+        BatcherConfig { queue_capacity: 32, max_wait: Duration::ZERO, ..BatcherConfig::default() },
     );
     let h = coord.handle();
     let mut through = Vec::new();

@@ -29,7 +29,11 @@ fn main() -> Result<()> {
         let exec = PjrtExecutor::load(&dir, "integerized", 3, 8)?;
         let coord = Coordinator::start(
             exec,
-            BatcherConfig { queue_capacity: 512, max_wait: Duration::from_millis(2) },
+            BatcherConfig {
+                queue_capacity: 512,
+                max_wait: Duration::from_millis(2),
+                ..BatcherConfig::default()
+            },
         );
         let h = coord.handle();
         let n_requests = 512usize;

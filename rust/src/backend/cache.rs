@@ -22,22 +22,193 @@
 //!
 //! A process-wide instance is available through [`PlanCache::global`]
 //! (what `ivit simulate` routes through).
+//!
+//! ### Persistence across coordinator restarts
+//!
+//! Plans themselves hold live state (worker pools, bound engines) and
+//! cannot be serialized — but everything needed to **rebuild** them
+//! can. A [`PlanSeed`] is the JSON-serializable rebuild recipe (registry
+//! name + [`PlanOptions`] + the synthetic/attn_case geometry the
+//! [`BackendRegistry`] consumes); callers that plan through
+//! [`PlanCache::get_or_plan_seeded`] / [`PlanCache::take_or_plan_seeded`]
+//! record the seed alongside the resident plan, [`PlanCache::persist`]
+//! writes the `(key, seed)` index to a `plan_cache.json` sidecar under a
+//! cache dir, and [`PlanCache::warm_start`] rebuilds every entry on the
+//! next startup — so a restarted `ivit serve --cache-dir DIR` begins
+//! with its plans resident and cold ≡ warm outputs stay bit-identical
+//! (synthetic modules are deterministic functions of their geometry +
+//! seed; pinned by tests).
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Context, Result};
 
-use super::{Backend, ExecutionPlan, PlanOptions};
+use crate::block::EncoderBlock;
+use crate::util::Json;
 
-/// Name-keyed memoization of [`ExecutionPlan`]s.
+use super::registry::{BackendConfig, BackendRegistry};
+use super::{Backend, ExecutionPlan, PlanOptions, PlanScope};
+
+/// Name-keyed memoization of [`ExecutionPlan`]s, with an optional
+/// [`PlanSeed`] index for the entries that can be rebuilt across
+/// process restarts.
 #[derive(Default)]
 pub struct PlanCache {
     plans: BTreeMap<String, Box<dyn ExecutionPlan>>,
+    seeds: BTreeMap<String, PlanSeed>,
     hits: u64,
     misses: u64,
 }
+
+/// The JSON-serializable recipe for rebuilding one cached plan after a
+/// coordinator restart: the registry name, the [`PlanOptions`], and the
+/// scalar config the [`BackendRegistry`] factory consumes. Synthetic
+/// modules/blocks are deterministic functions of `(geometry, seed)` and
+/// attn_case replays are deterministic functions of the artifacts dir,
+/// so a rebuilt plan is bit-identical to the one that was persisted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSeed {
+    /// Registry name, e.g. `"sim-mt"`.
+    pub backend: String,
+    /// [`PlanOptions::workers`] (also seeds [`BackendConfig::workers`]).
+    pub workers: usize,
+    /// [`PlanOptions::row_shard_threshold`].
+    pub row_shard_threshold: usize,
+    /// [`PlanOptions::scope`].
+    pub scope: PlanScope,
+    /// Module / block model dimension (blocks are D→D square).
+    pub d_in: usize,
+    /// Attention head dim (attention scope).
+    pub d_head: usize,
+    pub heads: usize,
+    /// MLP hidden width (block scope only; ignored at attention scope).
+    pub hidden: usize,
+    pub bits: u32,
+    /// Eq. 4 shift exponential (attention scope; synthetic blocks always
+    /// use it).
+    pub shift: bool,
+    /// Synthetic parameter seed.
+    pub seed: u64,
+    /// Artifacts dir whose exported attn_case overrides the synthetic
+    /// module (attention scope only).
+    pub artifacts: Option<String>,
+}
+
+impl PlanSeed {
+    /// The plan options this seed rebuilds with.
+    pub fn options(&self) -> PlanOptions {
+        PlanOptions {
+            workers: self.workers,
+            row_shard_threshold: self.row_shard_threshold,
+            scope: self.scope,
+        }
+    }
+
+    /// The backend config this seed rebuilds with. Block-scope seeds
+    /// regenerate their synthetic [`EncoderBlock`]; attention-scope
+    /// seeds resolve through the usual module path (attn_case when the
+    /// artifacts dir holds one, else the synthetic geometry).
+    pub fn to_config(&self) -> Result<BackendConfig> {
+        let block = match self.scope {
+            PlanScope::Attention => None,
+            PlanScope::Block => Some(EncoderBlock::synthetic(
+                self.d_in,
+                self.hidden,
+                self.heads,
+                self.bits,
+                self.seed,
+            )?),
+        };
+        Ok(BackendConfig {
+            module: None,
+            block,
+            artifacts: self.artifacts.as_ref().map(PathBuf::from),
+            d_in: self.d_in,
+            d_head: self.d_head,
+            heads: self.heads,
+            bits: self.bits,
+            shift: self.shift,
+            seed: self.seed,
+            workers: self.workers,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("backend".into(), Json::Str(self.backend.clone()));
+        obj.insert("workers".into(), Json::Num(self.workers as f64));
+        obj.insert("row_shard_threshold".into(), Json::Num(self.row_shard_threshold as f64));
+        obj.insert(
+            "scope".into(),
+            Json::Str(
+                match self.scope {
+                    PlanScope::Attention => "attention",
+                    PlanScope::Block => "block",
+                }
+                .into(),
+            ),
+        );
+        obj.insert("d_in".into(), Json::Num(self.d_in as f64));
+        obj.insert("d_head".into(), Json::Num(self.d_head as f64));
+        obj.insert("heads".into(), Json::Num(self.heads as f64));
+        obj.insert("hidden".into(), Json::Num(self.hidden as f64));
+        obj.insert("bits".into(), Json::Num(self.bits as f64));
+        obj.insert("shift".into(), Json::Bool(self.shift));
+        // u64 seeds don't survive the f64 JSON number path above 2^53,
+        // and a rounded seed would silently regenerate different
+        // synthetic weights — keep the full precision in a string
+        obj.insert("seed".into(), Json::Str(self.seed.to_string()));
+        obj.insert(
+            "artifacts".into(),
+            match &self.artifacts {
+                Some(p) => Json::Str(p.clone()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(obj)
+    }
+
+    fn from_json(j: &Json) -> Result<PlanSeed> {
+        let str_field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("plan seed: missing string field '{k}'"))
+        };
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("plan seed: missing numeric field '{k}'"))
+        };
+        let scope = match str_field("scope")?.as_str() {
+            "attention" => PlanScope::Attention,
+            "block" => PlanScope::Block,
+            other => return Err(anyhow!("plan seed: unknown scope '{other}'")),
+        };
+        Ok(PlanSeed {
+            backend: str_field("backend")?,
+            workers: num("workers")? as usize,
+            row_shard_threshold: num("row_shard_threshold")? as usize,
+            scope,
+            d_in: num("d_in")? as usize,
+            d_head: num("d_head")? as usize,
+            heads: num("heads")? as usize,
+            hidden: num("hidden")? as usize,
+            bits: num("bits")? as u32,
+            shift: matches!(j.get("shift"), Some(Json::Bool(true))),
+            seed: str_field("seed")?
+                .parse::<u64>()
+                .map_err(|_| anyhow!("plan seed: 'seed' is not a u64"))?,
+            artifacts: j.get("artifacts").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// File name of the persisted index inside a cache dir.
+pub const PLAN_CACHE_FILE: &str = "plan_cache.json";
 
 impl PlanCache {
     pub fn new() -> PlanCache {
@@ -78,6 +249,157 @@ impl PlanCache {
         }
     }
 
+    /// Like [`Self::get_or_plan`], but through a rebuildable
+    /// [`PlanSeed`]: the backend is constructed from the seed's config,
+    /// the seed is recorded in the persistence index, and the resident
+    /// plan is returned (built on first use). Computing the textual key
+    /// requires building the backend even on a hit — plan-time work is
+    /// still saved, construction-time work is not.
+    pub fn get_or_plan_seeded(
+        &mut self,
+        registry: &BackendRegistry,
+        seed: &PlanSeed,
+    ) -> Result<&mut dyn ExecutionPlan> {
+        let (key, backend) = self.seed_backend(registry, seed)?;
+        self.seeds.insert(key.clone(), seed.clone());
+        match self.plans.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits += 1;
+                Ok(e.into_mut().as_mut())
+            }
+            Entry::Vacant(v) => {
+                self.misses += 1;
+                Ok(v.insert(backend.plan(&seed.options())?).as_mut())
+            }
+        }
+    }
+
+    /// Like [`Self::get_or_plan_seeded`], but hands the plan out by
+    /// value (removed from the cache) — what `ivit serve` needs, since
+    /// the executor moves the plan onto the coordinator worker thread.
+    /// The seed stays recorded, so [`Self::persist`] still writes the
+    /// entry and the *next* process warm-loads it.
+    pub fn take_or_plan_seeded(
+        &mut self,
+        registry: &BackendRegistry,
+        seed: &PlanSeed,
+    ) -> Result<Box<dyn ExecutionPlan>> {
+        let (key, backend) = self.seed_backend(registry, seed)?;
+        self.seeds.insert(key.clone(), seed.clone());
+        match self.plans.remove(&key) {
+            Some(plan) => {
+                self.hits += 1;
+                Ok(plan)
+            }
+            None => {
+                self.misses += 1;
+                backend.plan(&seed.options())
+            }
+        }
+    }
+
+    fn seed_backend(
+        &self,
+        registry: &BackendRegistry,
+        seed: &PlanSeed,
+    ) -> Result<(String, Box<dyn Backend>)> {
+        let cfg = seed.to_config()?;
+        let backend = registry.create(&seed.backend, &cfg)?;
+        let key = Self::key(&*backend, &seed.options());
+        Ok((key, backend))
+    }
+
+    /// Write the `(key, seed)` index of every seeded entry to
+    /// `<dir>/plan_cache.json`, creating the dir if needed. Returns the
+    /// sidecar path. Unseeded entries (plans built through the plain
+    /// [`Self::get_or_plan`]) have no rebuild recipe and are skipped.
+    pub fn persist(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+        let entries: Vec<Json> = self
+            .seeds
+            .iter()
+            .map(|(key, seed)| {
+                let mut obj = BTreeMap::new();
+                obj.insert("key".to_string(), Json::Str(key.clone()));
+                obj.insert("seed".to_string(), seed.to_json());
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("entries".to_string(), Json::Arr(entries));
+        let path = dir.join(PLAN_CACHE_FILE);
+        std::fs::write(&path, format!("{}\n", Json::Obj(root)))
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+
+    /// Rebuild a cache from `<dir>/plan_cache.json`: every persisted
+    /// seed is re-planned (backend construction + `Backend::plan`), so
+    /// the returned cache starts with all plans resident — the next
+    /// seeded lookup is a hit. A missing sidecar yields an empty cache;
+    /// a corrupted one (unreadable, unparseable, or a stored key that
+    /// no longer matches its rebuilt backend) is a loud error, never a
+    /// silent partial load.
+    pub fn warm_start(dir: &Path, registry: &BackendRegistry) -> Result<PlanCache> {
+        Self::warm_start_filtered(dir, registry, |_| true)
+    }
+
+    /// Like [`Self::warm_start`], but only re-plans the entries `want`
+    /// accepts (skipped entries pay no backend construction or
+    /// plan-time cost). The **full** seed index is always loaded, so a
+    /// later [`Self::persist`] keeps every persisted entry; skipped
+    /// entries keep their stored key unvalidated.
+    pub fn warm_start_filtered(
+        dir: &Path,
+        registry: &BackendRegistry,
+        want: impl Fn(&PlanSeed) -> bool,
+    ) -> Result<PlanCache> {
+        let path = dir.join(PLAN_CACHE_FILE);
+        let mut cache = PlanCache::new();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            // only a MISSING sidecar is a cold start; an unreadable one
+            // must fail loud, not silently discard the persisted index
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(cache),
+            Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+        };
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let version = root.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        ensure!(version == 1.0, "{path:?}: unsupported plan-cache version {version}");
+        let entries = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{path:?}: missing 'entries' array"))?;
+        for (i, entry) in entries.iter().enumerate() {
+            let stored_key = entry
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{path:?}: entry {i} has no key"))?;
+            let seed = PlanSeed::from_json(
+                entry.get("seed").ok_or_else(|| anyhow!("{path:?}: entry {i} has no seed"))?,
+            )
+            .with_context(|| format!("{path:?}: entry {i}"))?;
+            if !want(&seed) {
+                cache.seeds.insert(stored_key.to_string(), seed);
+                continue;
+            }
+            let (key, backend) = cache.seed_backend(registry, &seed)?;
+            ensure!(
+                key == stored_key,
+                "{path:?}: entry {i} key mismatch — persisted for a different build?\n  \
+                 stored : {stored_key}\n  rebuilt: {key}"
+            );
+            let plan = backend
+                .plan(&seed.options())
+                .with_context(|| format!("{path:?}: rebuilding plan for entry {i}"))?;
+            cache.plans.insert(key.clone(), plan);
+            cache.seeds.insert(key, seed);
+        }
+        Ok(cache)
+    }
+
     /// Plans served from the cache.
     pub fn hits(&self) -> u64 {
         self.hits
@@ -97,9 +419,11 @@ impl PlanCache {
         self.plans.is_empty()
     }
 
-    /// Drop every resident plan (worker pools join on drop).
+    /// Drop every resident plan (worker pools join on drop) and the
+    /// seed index.
     pub fn clear(&mut self) {
         self.plans.clear();
+        self.seeds.clear();
     }
 
     /// The process-wide cache (plans survive across command invocations
@@ -152,6 +476,148 @@ mod tests {
         assert_eq!((cache.misses(), cache.hits(), cache.len()), (3, 0, 3));
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ivit_plan_cache_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn block_seed() -> PlanSeed {
+        PlanSeed {
+            backend: "sim".into(),
+            workers: 0,
+            row_shard_threshold: 2,
+            scope: PlanScope::Block,
+            d_in: 12,
+            d_head: 6,
+            heads: 2,
+            hidden: 24,
+            bits: 3,
+            shift: true,
+            seed: 19,
+            artifacts: None,
+        }
+    }
+
+    #[test]
+    fn seed_json_roundtrips() {
+        let seed = block_seed();
+        let j = seed.to_json();
+        let text = format!("{j}");
+        let back = PlanSeed::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, seed);
+        // attention-scope seed with artifacts path survives too
+        let attn = PlanSeed {
+            scope: PlanScope::Attention,
+            artifacts: Some("some/dir".into()),
+            shift: false,
+            ..seed
+        };
+        let back = PlanSeed::from_json(&Json::parse(&format!("{}", attn.to_json())).unwrap())
+            .unwrap();
+        assert_eq!(back, attn);
+    }
+
+    #[test]
+    fn persisted_cache_warm_starts_with_bit_identical_outputs() {
+        let registry = BackendRegistry::with_defaults();
+        let seed = block_seed();
+        let dir = temp_cache_dir("warm");
+
+        // cold process: plan through the seeded path, run a batch, persist
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 19).unwrap();
+        let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(4, 3).unwrap()));
+        let mut cold_cache = PlanCache::new();
+        let cold = cold_cache
+            .get_or_plan_seeded(&registry, &seed)
+            .unwrap()
+            .run_batch(&req)
+            .unwrap();
+        assert_eq!((cold_cache.misses(), cold_cache.hits()), (1, 0));
+        let sidecar = cold_cache.persist(&dir).unwrap();
+        assert!(sidecar.exists());
+
+        // restarted process: warm-load → the plan is already resident,
+        // the seeded lookup is a HIT, outputs are bit-identical
+        let mut warm_cache = PlanCache::warm_start(&dir, &registry).unwrap();
+        assert_eq!(warm_cache.len(), 1, "warm start rebuilds the persisted plan");
+        let warm = warm_cache
+            .get_or_plan_seeded(&registry, &seed)
+            .unwrap()
+            .run_batch(&req)
+            .unwrap();
+        assert_eq!((warm_cache.misses(), warm_cache.hits()), (0, 1), "warm lookup must hit");
+        assert_eq!(
+            cold.items[0].out_codes.as_ref().unwrap().codes.data,
+            warm.items[0].out_codes.as_ref().unwrap().codes.data,
+            "cold and warm outputs must be bit-identical across the restart"
+        );
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn take_keeps_the_seed_for_persistence_and_corruption_is_loud() {
+        let registry = BackendRegistry::with_defaults();
+        let seed = block_seed();
+        let dir = temp_cache_dir("take");
+
+        let mut cache = PlanCache::new();
+        let plan = cache.take_or_plan_seeded(&registry, &seed).unwrap();
+        assert!(!plan.describe().is_empty());
+        assert_eq!(cache.len(), 0, "taken plan leaves the cache");
+        cache.persist(&dir).unwrap();
+        // the seed was still persisted — the next process warm-loads it
+        let warm = PlanCache::warm_start(&dir, &registry).unwrap();
+        assert_eq!(warm.len(), 1);
+
+        // a corrupted sidecar is an error, not a silent cold start
+        std::fs::write(dir.join(PLAN_CACHE_FILE), "{not json").unwrap();
+        assert!(PlanCache::warm_start(&dir, &registry).is_err());
+        // ... and so is a stored key that no longer matches its seed
+        let mut cache = PlanCache::new();
+        cache.seeds.insert("stale|key".into(), seed);
+        cache.persist(&dir).unwrap();
+        let err = PlanCache::warm_start(&dir, &registry).unwrap_err();
+        assert!(format!("{err:#}").contains("key mismatch"), "{err:#}");
+
+        // missing sidecar → empty cache (cold start)
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(PlanCache::warm_start(&dir, &registry).unwrap().is_empty());
+    }
+
+    #[test]
+    fn filtered_warm_start_skips_planning_but_keeps_the_whole_index() {
+        let registry = BackendRegistry::with_defaults();
+        let dir = temp_cache_dir("filter");
+        let a = block_seed();
+        let b = PlanSeed { seed: 21, ..block_seed() };
+        let mut cache = PlanCache::new();
+        cache.get_or_plan_seeded(&registry, &a).unwrap();
+        cache.get_or_plan_seeded(&registry, &b).unwrap();
+        cache.persist(&dir).unwrap();
+
+        // only `a` is re-planned; `b` loads index-only
+        let warm = PlanCache::warm_start_filtered(&dir, &registry, |s| s == &a).unwrap();
+        assert_eq!(warm.len(), 1, "one plan resident");
+        assert_eq!(warm.seeds.len(), 2, "both seeds in the index");
+        // a re-persist of the filtered cache keeps BOTH entries
+        warm.persist(&dir).unwrap();
+        let full = PlanCache::warm_start(&dir, &registry).unwrap();
+        assert_eq!(full.len(), 2, "nothing was dropped from the sidecar");
+
+        // a u64 seed above 2^53 survives the JSON round trip exactly
+        let big = PlanSeed { seed: (1u64 << 53) + 1, ..block_seed() };
+        let back =
+            PlanSeed::from_json(&Json::parse(&format!("{}", big.to_json())).unwrap()).unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

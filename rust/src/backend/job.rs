@@ -1,0 +1,172 @@
+//! Job types for the two-phase **submit/poll** execution pipeline.
+//!
+//! [`super::ExecutionPlan::submit`] hands a batch to the plan and
+//! returns a [`JobId`] immediately; [`super::ExecutionPlan::poll`]
+//! observes the job until it is [`JobState::Done`]. Trivially
+//! synchronous plans (`ref`, `sim`, `pjrt`) execute the batch inside
+//! `submit` and park the finished response in a [`SyncJobs`] ledger;
+//! genuinely concurrent plans (`sim-mt`) dispatch shards onto their
+//! worker pool and let `poll` drain completions without blocking — so a
+//! caller can stage and submit batch N+1 while batch N's shards are
+//! still in flight.
+//!
+//! ## The job contract
+//!
+//! * A `JobId` is **per-plan**: ids from one plan mean nothing to
+//!   another.
+//! * Execution failures surface at `poll`, never at `submit` — `submit`
+//!   only errors when the job cannot be accepted at all (e.g. the
+//!   worker pool is gone). The coordinator therefore handles every
+//!   execution error in one place.
+//! * `poll` returning `Done` (or an execution error) **consumes** the
+//!   job: polling the same id again — or an id the plan never issued —
+//!   is an error, not `Pending`. This makes double-drain bugs loud.
+//! * Dropping a plan with unfinished jobs is safe: in-flight shard
+//!   results are discarded and the worker pool joins cleanly (pinned by
+//!   `tests/async_pipeline.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Opaque handle to one batch submitted to an [`super::ExecutionPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(u64);
+
+impl JobId {
+    /// Construct from a raw counter value (plan implementations only).
+    pub fn from_raw(raw: u64) -> JobId {
+        JobId(raw)
+    }
+
+    /// The raw counter value (stable within one plan's lifetime).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job#{}", self.0)
+    }
+}
+
+/// What one `poll` observed about a submitted job.
+#[derive(Debug)]
+pub enum JobState<T> {
+    /// Still executing — poll again.
+    Pending,
+    /// Finished; the result is handed over exactly once.
+    Done(T),
+}
+
+impl<T> JobState<T> {
+    pub fn is_pending(&self) -> bool {
+        matches!(self, JobState::Pending)
+    }
+
+    /// The finished payload, if this observation completed the job.
+    pub fn into_done(self) -> Option<T> {
+        match self {
+            JobState::Pending => None,
+            JobState::Done(v) => Some(v),
+        }
+    }
+}
+
+/// Job ledger for trivially synchronous executors: `submit` runs the
+/// batch inline and [`SyncJobs::push`]es the finished result; `poll`
+/// hands it back (once) through [`SyncJobs::poll`]. Parking errors here
+/// instead of returning them from `submit` keeps the submit/poll error
+/// contract uniform across synchronous and concurrent plans.
+#[derive(Debug)]
+pub struct SyncJobs<T> {
+    next: u64,
+    done: BTreeMap<u64, Result<T>>,
+}
+
+// manual impl: a derived Default would needlessly require `T: Default`
+impl<T> Default for SyncJobs<T> {
+    fn default() -> Self {
+        SyncJobs { next: 0, done: BTreeMap::new() }
+    }
+}
+
+impl<T> SyncJobs<T> {
+    pub fn new() -> SyncJobs<T> {
+        SyncJobs::default()
+    }
+
+    /// Park a finished result and mint its job id.
+    pub fn push(&mut self, result: Result<T>) -> JobId {
+        let id = JobId(self.next);
+        self.next += 1;
+        self.done.insert(id.0, result);
+        id
+    }
+
+    /// Mint the next job id without parking a result (concurrent
+    /// executors that keep their own in-flight state).
+    pub fn next_id(&mut self) -> JobId {
+        let id = JobId(self.next);
+        self.next += 1;
+        id
+    }
+
+    /// Drain `job`: `Done` for a parked success, the parked error for a
+    /// failure, and an explicit error for unknown / already-drained ids.
+    pub fn poll(&mut self, job: JobId, who: &str) -> Result<JobState<T>> {
+        match self.done.remove(&job.0) {
+            Some(Ok(v)) => Ok(JobState::Done(v)),
+            Some(Err(e)) => Err(e),
+            None => Err(anyhow!("{who}: unknown or already-drained {job}")),
+        }
+    }
+
+    /// Parked (submitted, not yet polled) job count.
+    pub fn parked(&self) -> usize {
+        self.done.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_jobs_hand_results_over_exactly_once() {
+        let mut jobs: SyncJobs<u32> = SyncJobs::new();
+        let a = jobs.push(Ok(7));
+        let b = jobs.push(Err(anyhow!("boom")));
+        assert_ne!(a, b);
+        assert_eq!(jobs.parked(), 2);
+        // out-of-order drain is fine
+        let err = jobs.poll(b, "test").unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+        match jobs.poll(a, "test").unwrap() {
+            JobState::Done(v) => assert_eq!(v, 7),
+            JobState::Pending => panic!("parked job must be done"),
+        }
+        // done consumes: a second poll is an error naming the job
+        let err = jobs.poll(a, "test").unwrap_err();
+        assert!(format!("{err}").contains("job#0"), "{err}");
+    }
+
+    #[test]
+    fn job_ids_are_monotonic_and_display() {
+        let mut jobs: SyncJobs<()> = SyncJobs::new();
+        let a = jobs.next_id();
+        let b = jobs.next_id();
+        assert!(b > a);
+        assert_eq!(format!("{a}"), "job#0");
+        assert_eq!(JobId::from_raw(5).raw(), 5);
+    }
+
+    #[test]
+    fn job_state_accessors() {
+        let p: JobState<u8> = JobState::Pending;
+        assert!(p.is_pending());
+        assert!(p.into_done().is_none());
+        assert_eq!(JobState::Done(3u8).into_done(), Some(3));
+    }
+}

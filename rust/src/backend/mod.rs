@@ -22,7 +22,7 @@
 //! through; future substrates (remote workers, GPU) plug into the same
 //! seam.
 //!
-//! ## The plan/execute lifecycle
+//! ## The plan/submit/poll lifecycle
 //!
 //! Execution is two-phase. **Planning** performs every piece of
 //! per-module, per-deployment setup exactly once:
@@ -30,14 +30,25 @@
 //! scale chains, lowers the module to its substrate (`to_sim` for the
 //! simulators, engine/artifact binding for PJRT), sizes output buffers
 //! and — for sharded plans — spawns the fixed worker pool. **Executing**
-//! is then per-batch only: [`ExecutionPlan::run_batch`] takes an
-//! [`AttnBatchRequest`] of N rows and returns an [`AttnBatchResponse`]
-//! with one [`AttnResponse`] per row plus the merged hardware report,
-//! touching no setup state. Single-request `run_attention` remains on
-//! the trait as a default adapter that plans and runs a batch of one, so
-//! callers that amortize nothing still work — but the serving stack
-//! ([`crate::coordinator::AttnBatchExecutor`], the CLI, the benches)
-//! plans once and dispatches batches.
+//! is a two-step job pipeline: [`ExecutionPlan::submit`] hands an
+//! [`AttnBatchRequest`] of N rows to the plan and returns a [`JobId`]
+//! immediately; [`ExecutionPlan::poll`] observes the job until it is
+//! [`JobState::Done`] with the [`AttnBatchResponse`] (one
+//! [`AttnResponse`] per row plus the merged hardware report). `ref`,
+//! `sim` and `pjrt` are trivially synchronous — `submit` executes
+//! inline and parks the response — while `sim-mt` is genuinely
+//! overlapped: `submit` dispatches the batch's shards onto the worker
+//! pool and returns while they run, so the coordinator can quantize and
+//! submit batch N+1 while batch N is still in flight. Execution errors
+//! surface at `poll`, never at `submit`, and a completed (or failed)
+//! poll **consumes** the job — see [`job`] for the full contract.
+//!
+//! [`ExecutionPlan::run_batch`] remains as a submit-then-drain adapter
+//! (blocking until the one job completes), so callers that want the
+//! synchronous shape keep working unchanged; single-request
+//! `run_attention` stays a batch-of-one adapter over it. The serving
+//! stack ([`crate::coordinator::AttnBatchExecutor`], the CLI, the
+//! benches) plans once and pipelines batches through submit/poll.
 //!
 //! A new backend therefore registers **two** things through one
 //! [`BackendRegistry::register`] factory: the `Backend` (capabilities +
@@ -88,6 +99,7 @@
 //! twice, skipping it, or dividing the wrong way no longer typechecks.
 
 pub mod cache;
+pub mod job;
 pub mod pjrt;
 pub mod reference;
 pub mod registry;
@@ -108,7 +120,8 @@ use crate::sim::AttentionReport;
 use crate::util::XorShift;
 
 pub use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
-pub use cache::PlanCache;
+pub use cache::{PlanCache, PlanSeed};
+pub use job::{JobId, JobState, SyncJobs};
 pub use pjrt::PjrtBackend;
 pub use reference::ReferenceBackend;
 pub use registry::{BackendConfig, BackendRegistry};
@@ -240,13 +253,21 @@ pub struct AttnBatchResponse {
     pub elapsed: Duration,
 }
 
-/// The per-batch execution half of the plan/execute API.
+/// The per-batch execution half of the plan/submit/poll API.
 ///
-/// A plan owns everything `run_batch` needs — folded scales, lowered
+/// A plan owns everything execution needs — folded scales, lowered
 /// simulators, bound PJRT executables, worker pools — so executing a
 /// batch performs no per-request setup. Plans are `Send` (the
 /// coordinator moves them onto its worker thread) but single-owner:
-/// `run_batch` takes `&mut self`.
+/// every execution method takes `&mut self`.
+///
+/// Execution is a job pipeline: [`Self::submit`] accepts a batch and
+/// returns a [`JobId`] without waiting for the result; [`Self::poll`]
+/// observes it until [`JobState::Done`]. Synchronous substrates run the
+/// batch inside `submit`; `sim-mt` dispatches shards and keeps
+/// accepting new submissions while earlier jobs are in flight. The
+/// blocking [`Self::run_batch`] adapter (submit, then drain one job)
+/// serves callers that don't pipeline.
 pub trait ExecutionPlan: Send {
     /// Registry name of the backend that planned this, e.g. `"sim-mt"`.
     fn backend_name(&self) -> &str;
@@ -254,8 +275,28 @@ pub trait ExecutionPlan: Send {
     /// One-line human description (dims, substrate, shard layout).
     fn describe(&self) -> String;
 
-    /// Execute N rows with no per-row setup work.
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse>;
+    /// Accept N rows for execution and return a job handle immediately.
+    /// Errors only when the job cannot be accepted (e.g. the worker
+    /// pool is gone) — execution failures surface at [`Self::poll`].
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId>;
+
+    /// Observe a submitted job. `Done` (and any execution error)
+    /// consumes the job: polling the same id again, or an id this plan
+    /// never issued, is an error — never `Pending`.
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>>;
+
+    /// Adapter: submit one batch and drain it to completion.
+    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let job = self.submit(req)?;
+        loop {
+            match self.poll(job)? {
+                JobState::Done(resp) => return Ok(resp),
+                // concurrent plans finish on their own workers; yield
+                // the caller thread briefly instead of spinning hot
+                JobState::Pending => std::thread::sleep(Duration::from_micros(50)),
+            }
+        }
+    }
 
     /// Adapter: run a single request as a batch of one.
     fn run_one(&mut self, req: &AttnRequest) -> Result<AttnResponse> {

@@ -17,7 +17,7 @@ use crate::util::Json;
 
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnRequest, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, PlanOptions, QuantSpec, Step,
+    ExecutionPlan, JobId, JobState, PlanOptions, QuantSpec, Step, SyncJobs,
 };
 
 /// The PJRT-executed Pallas-attention path.
@@ -69,8 +69,23 @@ impl PjrtBackend {
 /// executable, owned by the plan so batches run with no per-request
 /// artifact work. The artifact's lowered shape is per-request static,
 /// so a batch executes as N device calls over the one bound executable.
+/// Trivially synchronous: `submit` runs the device calls inline and
+/// parks the response for `poll`.
 pub struct PjrtPlan {
     inner: PjrtBackend,
+    jobs: SyncJobs<AttnBatchResponse>,
+}
+
+impl PjrtPlan {
+    fn execute(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| self.inner.run_attention(r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    }
 }
 
 impl ExecutionPlan for PjrtPlan {
@@ -82,14 +97,13 @@ impl ExecutionPlan for PjrtPlan {
         self.inner.describe()
     }
 
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
-        let t0 = Instant::now();
-        let items = req
-            .items
-            .iter()
-            .map(|r| self.inner.run_attention(r))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "pjrt plan")
     }
 }
 
@@ -141,7 +155,10 @@ impl Backend for PjrtBackend {
             opts.scope == super::PlanScope::Attention,
             "the pjrt backend has no encoder-block artifact — block scope runs on ref/sim/sim-mt"
         );
-        Ok(Box::new(PjrtPlan { inner: PjrtBackend::load(&self.artifacts, self.bits)? }))
+        Ok(Box::new(PjrtPlan {
+            inner: PjrtBackend::load(&self.artifacts, self.bits)?,
+            jobs: SyncJobs::new(),
+        }))
     }
 
     /// Direct single-request path — overrides the default plan-per-call

@@ -21,7 +21,7 @@ use crate::block::EncoderBlock;
 
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, AttnResponse, Backend,
-    Capabilities, ExecutionPlan, PlanOptions, PlanScope, StageCodes,
+    Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, StageCodes, SyncJobs,
 };
 
 /// The quant-composition reference execution path.
@@ -213,14 +213,27 @@ fn describe_module(m: &AttnModule) -> String {
 
 /// The reference backend's execution plan: the folded module, snapshot
 /// at plan time. Rows of a batch share it with no per-row rebinding.
+/// Trivially synchronous: `submit` executes the batch inline and parks
+/// the response for `poll`.
 #[derive(Debug)]
 pub struct RefPlan {
     module: AttnModule,
+    jobs: SyncJobs<AttnBatchResponse>,
 }
 
 impl RefPlan {
     pub fn new(module: AttnModule) -> RefPlan {
-        RefPlan { module }
+        RefPlan { module, jobs: SyncJobs::new() }
+    }
+
+    fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| reference_attention(&self.module, &r.x))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
     }
 }
 
@@ -233,14 +246,13 @@ impl ExecutionPlan for RefPlan {
         describe_module(&self.module)
     }
 
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
-        let t0 = Instant::now();
-        let items = req
-            .items
-            .iter()
-            .map(|r| reference_attention(&self.module, &r.x))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "ref plan")
     }
 }
 
@@ -250,24 +262,15 @@ impl ExecutionPlan for RefPlan {
 #[derive(Debug)]
 pub struct RefBlockPlan {
     block: EncoderBlock,
+    jobs: SyncJobs<AttnBatchResponse>,
 }
 
 impl RefBlockPlan {
     pub fn new(block: EncoderBlock) -> RefBlockPlan {
-        RefBlockPlan { block }
-    }
-}
-
-impl ExecutionPlan for RefBlockPlan {
-    fn backend_name(&self) -> &str {
-        "ref"
+        RefBlockPlan { block, jobs: SyncJobs::new() }
     }
 
-    fn describe(&self) -> String {
-        format!("quant golden reference, {}", self.block.describe())
-    }
-
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+    fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
         let t0 = Instant::now();
         let items = req
             .items
@@ -285,6 +288,25 @@ impl ExecutionPlan for RefBlockPlan {
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    }
+}
+
+impl ExecutionPlan for RefBlockPlan {
+    fn backend_name(&self) -> &str {
+        "ref"
+    }
+
+    fn describe(&self) -> String {
+        format!("quant golden reference, {}", self.block.describe())
+    }
+
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "ref block plan")
     }
 }
 

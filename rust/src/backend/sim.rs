@@ -18,7 +18,7 @@ use crate::block::EncoderBlock;
 
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, PlanOptions, PlanScope, StageCodes,
+    ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, StageCodes, SyncJobs,
 };
 use crate::sim::attention::{AttentionOutput, AttentionSim};
 use crate::sim::block::BlockSim;
@@ -108,15 +108,28 @@ pub(crate) fn merge_batch_report(items: &[AttnResponse]) -> Option<AttentionRepo
 }
 
 /// Single-threaded simulator plan: the lowered [`AttentionSim`].
+/// Trivially synchronous: `submit` executes inline, `poll` drains.
 #[derive(Debug)]
 pub struct SimPlan {
     sim: AttentionSim,
     desc: String,
+    jobs: SyncJobs<AttnBatchResponse>,
 }
 
 impl SimPlan {
     pub fn new(module: &AttnModule) -> SimPlan {
-        SimPlan { sim: module.to_sim(), desc: describe_module(module) }
+        SimPlan { sim: module.to_sim(), desc: describe_module(module), jobs: SyncJobs::new() }
+    }
+
+    fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let mut items = Vec::with_capacity(req.items.len());
+        for r in &req.items {
+            let row_t0 = Instant::now();
+            let out = self.sim.run(&r.x)?;
+            items.push(response_from_output(out, row_t0.elapsed()));
+        }
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
     }
 }
 
@@ -129,15 +142,13 @@ impl ExecutionPlan for SimPlan {
         self.desc.clone()
     }
 
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
-        let t0 = Instant::now();
-        let mut items = Vec::with_capacity(req.items.len());
-        for r in &req.items {
-            let row_t0 = Instant::now();
-            let out = self.sim.run(&r.x)?;
-            items.push(response_from_output(out, row_t0.elapsed()));
-        }
-        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "sim plan")
     }
 }
 
@@ -147,24 +158,15 @@ impl ExecutionPlan for SimPlan {
 #[derive(Debug)]
 pub struct SimBlockPlan {
     sim: BlockSim,
+    jobs: SyncJobs<AttnBatchResponse>,
 }
 
 impl SimBlockPlan {
     pub fn new(block: &EncoderBlock) -> SimBlockPlan {
-        SimBlockPlan { sim: block.to_sim() }
-    }
-}
-
-impl ExecutionPlan for SimBlockPlan {
-    fn backend_name(&self) -> &str {
-        "sim"
+        SimBlockPlan { sim: block.to_sim(), jobs: SyncJobs::new() }
     }
 
-    fn describe(&self) -> String {
-        format!("systolic-array simulator, encoder block '{}' (D={})", self.sim.label, self.sim.d())
-    }
-
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+    fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
         let t0 = Instant::now();
         let mut items = Vec::with_capacity(req.items.len());
         for r in &req.items {
@@ -179,6 +181,25 @@ impl ExecutionPlan for SimBlockPlan {
             });
         }
         Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+    }
+}
+
+impl ExecutionPlan for SimBlockPlan {
+    fn backend_name(&self) -> &str {
+        "sim"
+    }
+
+    fn describe(&self) -> String {
+        format!("systolic-array simulator, encoder block '{}' (D={})", self.sim.label, self.sim.d())
+    }
+
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "sim block plan")
     }
 }
 

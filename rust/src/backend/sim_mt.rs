@@ -19,10 +19,27 @@
 //! partition the work, so the merged report's MAC/op totals equal the
 //! unsharded totals exactly.
 //!
+//! ## The overlapped submit/poll pipeline
+//!
+//! Unlike the synchronous backends, `sim-mt` implements
+//! [`ExecutionPlan::submit`] by **dispatching** shard jobs onto the
+//! pool and returning while they run: each in-flight job is a small
+//! state machine (front shards → head shards → assemble) advanced by
+//! non-blocking [`ExecutionPlan::poll`] calls. The pool's shared queue
+//! accepts the next batch's shards while the previous batch's rows are
+//! still executing, which is what lets the coordinator overlap input
+//! quantization and staging of batch N+1 with batch N's integer
+//! matmuls. Completion order is caller-controlled (poll any job id);
+//! results are still merged by index, so out-of-order polling is
+//! bit-identical to the synchronous `run_batch` adapter
+//! (`tests/async_pipeline.rs`). Dropping a plan with unfinished jobs
+//! discards their results and joins the pool cleanly.
+//!
 //! [`BlockStats`]: crate::sim::BlockStats
 
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
+use std::sync::mpsc::{self, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
@@ -32,11 +49,11 @@ use anyhow::{anyhow, Context, Result};
 use super::sim::{merge_batch_report, response_from_output};
 use super::{
     AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, PlanOptions, PlanScope, QTensor,
+    ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, QTensor,
 };
 use crate::block::EncoderBlock;
 use crate::sim::attention::{AttentionSim, FrontOutput, HeadOutput};
-use crate::sim::block::BlockSim;
+use crate::sim::block::{BlockSim, BlockSimOutput};
 
 /// The sharded simulator backend. `workers == 0` means "pick at plan
 /// time": available parallelism, capped at 8.
@@ -137,7 +154,9 @@ impl Backend for SimMtBackend {
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed pool of worker threads fed through one shared job channel.
-/// Spawned once at plan time; joined on drop.
+/// Spawned once at plan time; joined on drop. Jobs never block on their
+/// result sends (`let _ = tx.send(..)`), so dropping a plan — and with
+/// it the receivers of any unfinished jobs — can never wedge a worker.
 struct WorkerPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
@@ -185,56 +204,119 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Collect `n` index-tagged shard results, failing deterministically on
-/// the lowest-index error regardless of completion order.
-fn collect_indexed<T>(rx: mpsc::Receiver<(usize, Result<T>)>, n: usize, what: &str) -> Result<Vec<T>> {
-    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let mut first_err: Option<(usize, anyhow::Error)> = None;
-    for _ in 0..n {
-        match rx.recv() {
-            Ok((i, Ok(v))) => slots[i] = Some(v),
-            Ok((i, Err(e))) => {
-                if first_err.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
-                    first_err = Some((i, e));
-                }
-            }
-            Err(_) => return Err(anyhow!("sim-mt worker died mid-batch ({what})")),
+/// Non-blocking collector of `n` index-tagged shard results. Results
+/// (successes *and* errors) are counted until all `n` arrived;
+/// [`Self::finish`] then fails deterministically on the lowest-index
+/// error regardless of completion order — the same contract the old
+/// blocking collector had, advanced one `try_recv` drain at a time so
+/// `poll` never blocks the caller.
+struct ShardCollector<T> {
+    rx: mpsc::Receiver<(usize, Result<T>)>,
+    slots: Vec<Option<T>>,
+    remaining: usize,
+    first_err: Option<(usize, anyhow::Error)>,
+    what: &'static str,
+}
+
+impl<T> ShardCollector<T> {
+    fn new(rx: mpsc::Receiver<(usize, Result<T>)>, n: usize, what: &'static str) -> Self {
+        ShardCollector {
+            rx,
+            slots: (0..n).map(|_| None).collect(),
+            remaining: n,
+            first_err: None,
+            what,
         }
     }
-    if let Some((i, e)) = first_err {
-        return Err(e).with_context(|| format!("sim-mt {what} shard {i}"));
+
+    /// Drain whatever has completed; `Ok(true)` once every shard
+    /// reported. Never blocks.
+    fn drain(&mut self) -> Result<bool> {
+        while self.remaining > 0 {
+            match self.rx.try_recv() {
+                Ok((i, Ok(v))) => {
+                    self.slots[i] = Some(v);
+                    self.remaining -= 1;
+                }
+                Ok((i, Err(e))) => {
+                    if self.first_err.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                        self.first_err = Some((i, e));
+                    }
+                    self.remaining -= 1;
+                }
+                Err(TryRecvError::Empty) => return Ok(false),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(anyhow!("sim-mt worker died mid-batch ({})", self.what))
+                }
+            }
+        }
+        Ok(true)
     }
-    slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| s.ok_or_else(|| anyhow!("{what} shard {i} produced no result")))
-        .collect()
+
+    /// Hand over the ordered results (call once `drain` returned true).
+    fn finish(self) -> Result<Vec<T>> {
+        if let Some((i, e)) = self.first_err {
+            return Err(e).with_context(|| format!("sim-mt {} shard {i}", self.what));
+        }
+        let what = self.what;
+        self.slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| anyhow!("{what} shard {i} produced no result")))
+            .collect()
+    }
+}
+
+/// One in-flight attention job's pipeline position.
+enum MtStage {
+    /// Front shards on the pool.
+    Fronts(ShardCollector<FrontOutput>),
+    /// Head shards on the pool (fronts collected).
+    Heads { fronts: Arc<Vec<FrontOutput>>, collector: ShardCollector<HeadOutput> },
+    /// Finished at submit time (empty batch, or an inline-front error).
+    Done(Result<AttnBatchResponse>),
+}
+
+struct MtJob {
+    t0: Instant,
+    b: usize,
+    stage: MtStage,
 }
 
 /// The sharded execution plan: one lowered simulator shared by a fixed
-/// worker pool.
+/// worker pool, with in-flight jobs tracked as per-job state machines.
 pub struct SimMtPlan {
     sim: Arc<AttentionSim>,
     pool: WorkerPool,
     workers: usize,
     row_threshold: usize,
+    next_job: u64,
+    inflight: BTreeMap<u64, MtJob>,
 }
 
 impl SimMtPlan {
     pub fn new(sim: AttentionSim, workers: usize, row_threshold: usize) -> SimMtPlan {
-        SimMtPlan { sim: Arc::new(sim), pool: WorkerPool::new(workers), workers, row_threshold }
+        SimMtPlan {
+            sim: Arc::new(sim),
+            pool: WorkerPool::new(workers),
+            workers,
+            row_threshold,
+            next_job: 0,
+            inflight: BTreeMap::new(),
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Front stage over all rows — sharded by row above the threshold.
-    fn run_fronts(&self, xs: &Arc<Vec<QTensor>>) -> Result<Vec<FrontOutput>> {
+    /// Jobs submitted but not yet drained by `poll`.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn dispatch_front_shards(&self, xs: &Arc<Vec<QTensor>>) -> Result<ShardCollector<FrontOutput>> {
         let b = xs.len();
-        if b < self.row_threshold || self.workers < 2 {
-            return xs.iter().map(|x| self.sim.run_front(x)).collect();
-        }
         let (tx, rx) = mpsc::channel();
         for i in 0..b {
             let (sim, xs, tx) = (Arc::clone(&self.sim), Arc::clone(xs), tx.clone());
@@ -247,12 +329,13 @@ impl SimMtPlan {
                 let _ = tx.send((i, r));
             }))?;
         }
-        drop(tx);
-        collect_indexed(rx, b, "front")
+        Ok(ShardCollector::new(rx, b, "front"))
     }
 
-    /// Head stage — always sharded across `rows × heads` items.
-    fn run_heads(&self, fronts: &Arc<Vec<FrontOutput>>) -> Result<Vec<Vec<HeadOutput>>> {
+    fn dispatch_head_shards(
+        &self,
+        fronts: &Arc<Vec<FrontOutput>>,
+    ) -> Result<ShardCollector<HeadOutput>> {
         let (b, heads) = (fronts.len(), self.sim.heads);
         let (tx, rx) = mpsc::channel();
         for i in 0..b {
@@ -265,13 +348,32 @@ impl SimMtPlan {
                 }))?;
             }
         }
-        drop(tx);
-        let flat = collect_indexed(rx, b * heads, "head")?;
+        Ok(ShardCollector::new(rx, b * heads, "head"))
+    }
+
+    /// Merge + W_O tail on the caller thread, in row order.
+    fn assemble_batch(
+        &self,
+        fronts: Arc<Vec<FrontOutput>>,
+        flat_heads: Vec<HeadOutput>,
+        b: usize,
+        t0: Instant,
+    ) -> Result<AttnBatchResponse> {
+        let heads = self.sim.heads;
         let mut per_row: Vec<Vec<HeadOutput>> = (0..b).map(|_| Vec::with_capacity(heads)).collect();
-        for (idx, out) in flat.into_iter().enumerate() {
+        for (idx, out) in flat_heads.into_iter().enumerate() {
             per_row[idx / heads].push(out);
         }
-        Ok(per_row)
+        // reclaim the fronts so assemble can move the tensors out; a
+        // worker may still be dropping its Arc clone right after sending
+        // its last result, in which case fall back to one clone
+        let fronts = Arc::try_unwrap(fronts).unwrap_or_else(|arc| (*arc).clone());
+        let mut items = Vec::with_capacity(b);
+        for (front, head_outs) in fronts.into_iter().zip(per_row) {
+            let out = self.sim.assemble(front, head_outs)?;
+            items.push(response_from_output(out, t0.elapsed() / b as u32));
+        }
+        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
     }
 }
 
@@ -292,32 +394,85 @@ impl ExecutionPlan for SimMtPlan {
         )
     }
 
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
         let t0 = Instant::now();
         let b = req.items.len();
-        if b == 0 {
-            return Ok(AttnBatchResponse {
+        let stage = if b == 0 {
+            MtStage::Done(Ok(AttnBatchResponse {
                 items: Vec::new(),
                 report: None,
                 elapsed: t0.elapsed(),
-            });
-        }
-        let xs: Arc<Vec<QTensor>> = Arc::new(req.items.iter().map(|r| r.x.clone()).collect());
-        let fronts = Arc::new(self.run_fronts(&xs)?);
-        let head_outs = self.run_heads(&fronts)?;
-        // reclaim the fronts so assemble can move the tensors out; a
-        // worker may still be dropping its Arc clone right after sending
-        // its last result, in which case fall back to one clone
-        let fronts = Arc::try_unwrap(fronts).unwrap_or_else(|arc| (*arc).clone());
-
-        // merge + W_O tail on the caller thread, in row order
-        let mut items = Vec::with_capacity(b);
-        for (front, heads) in fronts.into_iter().zip(head_outs) {
-            let out = self.sim.assemble(front, heads)?;
-            items.push(response_from_output(out, t0.elapsed() / b as u32));
-        }
-        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+            }))
+        } else {
+            let xs: Arc<Vec<QTensor>> = Arc::new(req.items.iter().map(|r| r.x.clone()).collect());
+            if b < self.row_threshold || self.workers < 2 {
+                // small batch: fronts run inline (cheap), heads still
+                // shard so the pool overlaps them with other jobs
+                match xs.iter().map(|x| self.sim.run_front(x)).collect::<Result<Vec<_>>>() {
+                    Ok(fronts) => {
+                        let fronts = Arc::new(fronts);
+                        MtStage::Heads {
+                            collector: self.dispatch_head_shards(&fronts)?,
+                            fronts,
+                        }
+                    }
+                    // execution failures surface at poll, per contract
+                    Err(e) => MtStage::Done(Err(e)),
+                }
+            } else {
+                MtStage::Fronts(self.dispatch_front_shards(&xs)?)
+            }
+        };
+        let id = JobId::from_raw(self.next_job);
+        self.next_job += 1;
+        self.inflight.insert(id.raw(), MtJob { t0, b, stage });
+        Ok(id)
     }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        let Some(mut entry) = self.inflight.remove(&job.raw()) else {
+            return Err(anyhow!("sim-mt plan: unknown or already-drained {job}"));
+        };
+        // advance the state machine as far as completed shards allow;
+        // an error return consumes the job (the entry is already out of
+        // the map and gets dropped)
+        loop {
+            match entry.stage {
+                MtStage::Fronts(mut c) => {
+                    if !c.drain()? {
+                        entry.stage = MtStage::Fronts(c);
+                        self.inflight.insert(job.raw(), entry);
+                        return Ok(JobState::Pending);
+                    }
+                    let fronts = Arc::new(c.finish()?);
+                    entry.stage =
+                        MtStage::Heads { collector: self.dispatch_head_shards(&fronts)?, fronts };
+                }
+                MtStage::Heads { fronts, mut collector } => {
+                    if !collector.drain()? {
+                        entry.stage = MtStage::Heads { fronts, collector };
+                        self.inflight.insert(job.raw(), entry);
+                        return Ok(JobState::Pending);
+                    }
+                    let flat = collector.finish()?;
+                    let resp = self.assemble_batch(fronts, flat, entry.b, entry.t0)?;
+                    return Ok(JobState::Done(resp));
+                }
+                MtStage::Done(result) => return result.map(JobState::Done),
+            }
+        }
+    }
+}
+
+/// One in-flight block job: row shards on the pool, or finished.
+enum MtBlockStage {
+    Rows(ShardCollector<BlockSimOutput>),
+    Done(Result<AttnBatchResponse>),
+}
+
+struct MtBlockJob {
+    t0: Instant,
+    stage: MtBlockStage,
 }
 
 /// The sharded whole-block plan: one lowered [`BlockSim`] shared by the
@@ -325,12 +480,16 @@ impl ExecutionPlan for SimMtPlan {
 /// full LN/attention/residual/MLP pipeline for its row). Shards are
 /// pure functions of `(block, row)` merged by index, so outputs are
 /// bit-identical for any worker count — including the single-threaded
-/// `sim` block plan.
+/// `sim` block plan. Submit/poll follow the same overlapped pipeline as
+/// [`SimMtPlan`]: the pool accepts the next batch's rows while earlier
+/// batches are still in flight.
 pub struct SimMtBlockPlan {
     sim: Arc<BlockSim>,
     pool: WorkerPool,
     workers: usize,
     row_threshold: usize,
+    next_job: u64,
+    inflight: BTreeMap<u64, MtBlockJob>,
 }
 
 impl SimMtBlockPlan {
@@ -340,7 +499,29 @@ impl SimMtBlockPlan {
             pool: WorkerPool::new(workers),
             workers,
             row_threshold,
+            next_job: 0,
+            inflight: BTreeMap::new(),
         }
+    }
+
+    /// Jobs submitted but not yet drained by `poll`.
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn block_response(outs: Vec<BlockSimOutput>, t0: Instant) -> AttnBatchResponse {
+        let b = outs.len().max(1);
+        let items: Vec<AttnResponse> = outs
+            .into_iter()
+            .map(|out| AttnResponse {
+                out_codes: Some(out.out_codes),
+                out_values: None,
+                stages: None,
+                report: Some(out.report),
+                elapsed: t0.elapsed() / b as u32,
+            })
+            .collect();
+        AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() }
     }
 }
 
@@ -359,14 +540,24 @@ impl ExecutionPlan for SimMtBlockPlan {
         )
     }
 
-    fn run_batch(&mut self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
         let t0 = Instant::now();
         let b = req.items.len();
-        if b == 0 {
-            return Ok(AttnBatchResponse { items: Vec::new(), report: None, elapsed: t0.elapsed() });
-        }
-        let outs = if b < self.row_threshold || self.workers < 2 {
-            req.items.iter().map(|r| self.sim.run(&r.x)).collect::<Result<Vec<_>>>()?
+        let stage = if b == 0 {
+            MtBlockStage::Done(Ok(AttnBatchResponse {
+                items: Vec::new(),
+                report: None,
+                elapsed: t0.elapsed(),
+            }))
+        } else if b < self.row_threshold || self.workers < 2 {
+            // small batch: run inline; the result (or error) parks for poll
+            let result = req
+                .items
+                .iter()
+                .map(|r| self.sim.run(&r.x))
+                .collect::<Result<Vec<_>>>()
+                .map(|outs| Self::block_response(outs, t0));
+            MtBlockStage::Done(result)
         } else {
             let xs: Arc<Vec<QTensor>> = Arc::new(req.items.iter().map(|r| r.x.clone()).collect());
             let (tx, rx) = mpsc::channel();
@@ -378,20 +569,30 @@ impl ExecutionPlan for SimMtBlockPlan {
                     let _ = tx.send((i, r));
                 }))?;
             }
-            drop(tx);
-            collect_indexed(rx, b, "block")?
+            MtBlockStage::Rows(ShardCollector::new(rx, b, "block"))
         };
-        let items: Vec<AttnResponse> = outs
-            .into_iter()
-            .map(|out| AttnResponse {
-                out_codes: Some(out.out_codes),
-                out_values: None,
-                stages: None,
-                report: Some(out.report),
-                elapsed: t0.elapsed() / b as u32,
-            })
-            .collect();
-        Ok(AttnBatchResponse { report: merge_batch_report(&items), items, elapsed: t0.elapsed() })
+        let id = JobId::from_raw(self.next_job);
+        self.next_job += 1;
+        self.inflight.insert(id.raw(), MtBlockJob { t0, stage });
+        Ok(id)
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        let Some(mut entry) = self.inflight.remove(&job.raw()) else {
+            return Err(anyhow!("sim-mt block plan: unknown or already-drained {job}"));
+        };
+        match entry.stage {
+            MtBlockStage::Rows(mut c) => {
+                if !c.drain()? {
+                    entry.stage = MtBlockStage::Rows(c);
+                    self.inflight.insert(job.raw(), entry);
+                    return Ok(JobState::Pending);
+                }
+                let outs = c.finish()?;
+                Ok(JobState::Done(Self::block_response(outs, entry.t0)))
+            }
+            MtBlockStage::Done(result) => result.map(JobState::Done),
+        }
     }
 }
 
@@ -464,6 +665,55 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_jobs_poll_out_of_order() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 29).unwrap();
+        // oracle: synchronous batches through a fresh plan
+        let want: Vec<Vec<i32>> = (0..3)
+            .map(|j| {
+                let mut p = SimMtPlan::new(module.to_sim(), 2, 2);
+                let req = batch(&module, 2 + j);
+                p.run_batch(&req).unwrap().items[0].out_codes.as_ref().unwrap().codes.data.clone()
+            })
+            .collect();
+        // three jobs in flight on ONE plan, drained in reverse order
+        let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
+        let ids: Vec<JobId> =
+            (0..3).map(|j| plan.submit(&batch(&module, 2 + j)).unwrap()).collect();
+        assert_eq!(plan.inflight(), 3);
+        for (j, id) in ids.iter().enumerate().rev() {
+            let resp = loop {
+                match plan.poll(*id).unwrap() {
+                    JobState::Done(r) => break r,
+                    JobState::Pending => std::thread::yield_now(),
+                }
+            };
+            assert_eq!(
+                resp.items[0].out_codes.as_ref().unwrap().codes.data,
+                want[j],
+                "job {j} drained out of order"
+            );
+        }
+        assert_eq!(plan.inflight(), 0);
+        // a drained id no longer resolves
+        assert!(plan.poll(ids[0]).is_err());
+    }
+
+    #[test]
+    fn dropping_unfinished_jobs_neither_wedges_nor_leaks_the_pool() {
+        let module = AttnModule::synthetic(16, 8, 2, 3, 31).unwrap();
+        let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
+        // submit and never poll — the pool must keep serving other jobs
+        let _abandoned = plan.submit(&batch(&module, 4)).unwrap();
+        let req = batch(&module, 3);
+        let got = plan.run_batch(&req).unwrap();
+        assert_eq!(got.items.len(), 3);
+        assert_eq!(plan.inflight(), 1, "abandoned job still parked");
+        // dropping the plan with the job unfinished joins the pool
+        // cleanly (a wedge here hangs the test harness)
+        drop(plan);
+    }
+
+    #[test]
     fn block_plan_is_bit_identical_across_worker_counts() {
         let block = EncoderBlock::synthetic(12, 24, 2, 3, 51).unwrap();
         let reqs: Vec<AttnRequest> = (0..4u64)
@@ -487,5 +737,42 @@ mod tests {
         // empty batch through the block plan is fine too
         let mut plan = SimMtBlockPlan::new(&block, 2, 2);
         assert!(plan.run_batch(&AttnBatchRequest::default()).unwrap().items.is_empty());
+    }
+
+    #[test]
+    fn block_plan_overlaps_submissions() {
+        let block = EncoderBlock::synthetic(12, 24, 2, 3, 53).unwrap();
+        let mk_req = |seed: u64| {
+            AttnBatchRequest::new(
+                (0..3u64)
+                    .map(|i| AttnRequest::new(block.random_input(5, seed + i).unwrap()))
+                    .collect(),
+            )
+        };
+        let want: Vec<Vec<Vec<i32>>> = [100u64, 200]
+            .iter()
+            .map(|&s| {
+                mk_req(s)
+                    .items
+                    .iter()
+                    .map(|r| block.run_reference(&r.x).unwrap().codes.data)
+                    .collect()
+            })
+            .collect();
+        let mut plan = SimMtBlockPlan::new(&block, 2, 2);
+        let a = plan.submit(&mk_req(100)).unwrap();
+        let b = plan.submit(&mk_req(200)).unwrap();
+        assert_eq!(plan.inflight(), 2);
+        for (id, rows) in [(b, &want[1]), (a, &want[0])] {
+            let resp = loop {
+                match plan.poll(id).unwrap() {
+                    JobState::Done(r) => break r,
+                    JobState::Pending => std::thread::yield_now(),
+                }
+            };
+            for (g, w) in resp.items.iter().zip(rows) {
+                assert_eq!(&g.out_codes.as_ref().unwrap().codes.data, w);
+            }
+        }
     }
 }

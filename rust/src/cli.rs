@@ -83,6 +83,21 @@ impl Args {
     }
 }
 
+/// Arg-validation for `ivit serve`: the pjrt backend has no
+/// encoder-block artifact, so `--backend pjrt --scope block` must fail
+/// fast here — with the fix spelled out — instead of deep inside
+/// planning after the engine loaded.
+pub fn validate_serve_scope(backend: &str, scope: &str) -> Result<()> {
+    if backend == "pjrt" && scope == "block" {
+        bail!(
+            "--scope block is not available on the pjrt backend (no encoder-block \
+             artifact is exported) — use --backend ref|sim|sim-mt for block-scope \
+             serving, or drop --scope to serve the pjrt image path"
+        );
+    }
+    Ok(())
+}
+
 pub const USAGE: &str = "\
 ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
 
@@ -90,12 +105,21 @@ USAGE: ivit <command> [flags]
 
 COMMANDS:
   serve       run the batching inference server (plans the backend once,
-              then dispatches whole batches through its ExecutionPlan)
+              then pipelines batches through its submit/poll ExecutionPlan —
+              up to --pipeline-depth batches in flight at once)
               --backend pjrt|sim|sim-mt|ref (default pjrt)
               pjrt: --artifacts DIR --mode integerized|qvit|fp32 --bits N
-              sim/sim-mt/ref (no artifacts needed): --tokens N --din D --dhead O
+              sim/sim-mt/ref (no artifacts needed):
+                --scope attention|block (default attention; block serves the
+                whole encoder block — pjrt rejects block scope at parse time)
+                attention: --tokens N --din D --dhead O
+                block:     --tokens N --dim D --hidden H
+                --cache-dir DIR (persist the plan cache across restarts:
+                warm-loads on startup, writes plan_cache.json once the
+                plan is built)
               sim-mt: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
+                      --pipeline-depth N (in-flight batches, default 2)
   eval        Table II: accuracy of a model variant on the eval set
               --backend pjrt|ref|sim|sim-mt (default pjrt)
               pjrt: --artifacts DIR  --mode ...  --bits N  [--limit N]
@@ -181,6 +205,21 @@ mod tests {
         let b = parse("simulate --exact-exp --artifacts dir");
         assert!(b.bool("exact-exp"));
         assert_eq!(b.str("artifacts", ""), "dir");
+    }
+
+    #[test]
+    fn serve_scope_validation_fails_fast_for_pjrt_block() {
+        // the unsupported combination errors with the fix spelled out
+        let err = validate_serve_scope("pjrt", "block").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt") && msg.contains("block"), "{msg}");
+        assert!(msg.contains("ref|sim|sim-mt"), "actionable: {msg}");
+        // every supported combination passes
+        for backend in ["ref", "sim", "sim-mt"] {
+            validate_serve_scope(backend, "block").unwrap();
+            validate_serve_scope(backend, "attention").unwrap();
+        }
+        validate_serve_scope("pjrt", "attention").unwrap();
     }
 
     #[test]

@@ -1,18 +1,35 @@
 //! The dynamic batcher: bounded queue → deadline-or-full batches → one
-//! worker thread owning the executor.
+//! worker thread that **pipelines** batches through the executor's
+//! submit/poll API.
 //!
-//! Policy (vLLM-router-style, scaled to this substrate): the worker blocks
-//! for the first request, then keeps admitting until either the batch is
-//! full or `max_wait` has elapsed since the first admit. Short batches are
-//! padded to the executable's static batch size (AOT shapes are fixed);
-//! padding rows are zero images whose outputs are dropped.
+//! Admission policy (vLLM-router-style, scaled to this substrate): the
+//! worker blocks for the first request, then keeps admitting until
+//! either the batch is full or `max_wait` has elapsed since the first
+//! admit. Short batches are padded to the executable's static batch
+//! size (AOT shapes are fixed); padding rows are zero images whose
+//! outputs are dropped.
+//!
+//! Execution is pipelined: up to [`BatcherConfig::pipeline_depth`]
+//! batches are in flight at once — the worker stages (pads, quantizes)
+//! and submits batch N+1 while batch N executes, then polls the oldest
+//! job and replies in submission order. With an overlapped executor
+//! (`sim-mt` plans) the staging work genuinely runs concurrently with
+//! the in-flight integer batches; synchronous executors (`ref`, `sim`,
+//! `pjrt`, the mock) execute inside `submit` and degrade gracefully to
+//! the old drain-per-batch behaviour. Queue depth and in-flight jobs
+//! are tracked in [`Metrics`] (gauges + high-water marks).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+use crate::backend::{JobId, JobState};
 
 use super::executor::BatchExecutor;
 use super::metrics::{Metrics, Snapshot};
@@ -54,11 +71,20 @@ pub struct BatcherConfig {
     pub queue_capacity: usize,
     /// Max time the first request in a batch waits for company.
     pub max_wait: Duration,
+    /// Max batches in flight at once (clamped to ≥ 1). Depth 2 lets the
+    /// worker stage and submit batch N+1 while batch N executes on an
+    /// overlapped executor; synchronous executors run inside `submit`
+    /// and effectively behave as depth 1.
+    pub pipeline_depth: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { queue_capacity: 256, max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            queue_capacity: 256,
+            max_wait: Duration::from_millis(2),
+            pipeline_depth: 2,
+        }
     }
 }
 
@@ -82,13 +108,22 @@ impl Handle {
             enqueued: Instant::now(),
             reply: reply_tx,
         };
+        // count BEFORE the send: once the request is in the channel the
+        // worker may pop it (and decrement) at any moment, so a
+        // post-send increment could land after its own decrement and
+        // drift the gauge upward permanently
+        self.metrics.enqueued();
         match self.tx.try_send(req) {
             Ok(()) => Ok(reply_rx),
             Err(TrySendError::Full(_)) => {
+                self.metrics.dequeued(); // cancel: never entered the queue
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.dequeued(); // cancel: never entered the queue
+                Err(SubmitError::Closed)
+            }
         }
     }
 
@@ -175,6 +210,79 @@ impl Drop for Coordinator {
     }
 }
 
+/// What one admission attempt produced.
+enum Gather {
+    Batch(Vec<Request>),
+    Empty,
+    Disconnected,
+}
+
+/// Admit one deadline-or-full batch. When `block_for_first` (nothing in
+/// flight to poll), the head-of-line wait blocks up to 20 ms like the
+/// pre-pipeline loop; otherwise the attempt is non-blocking so the
+/// worker stays responsive to in-flight completions.
+fn gather_batch(
+    rx: &Receiver<Request>,
+    bsz: usize,
+    max_wait: Duration,
+    block_for_first: bool,
+    metrics: &Metrics,
+) -> Gather {
+    let first = if block_for_first {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(req) => req,
+            Err(RecvTimeoutError::Timeout) => return Gather::Empty,
+            Err(RecvTimeoutError::Disconnected) => return Gather::Disconnected,
+        }
+    } else {
+        match rx.try_recv() {
+            Ok(req) => req,
+            Err(TryRecvError::Empty) => return Gather::Empty,
+            Err(TryRecvError::Disconnected) => return Gather::Disconnected,
+        }
+    };
+    metrics.dequeued();
+    let mut batch = Vec::with_capacity(bsz);
+    batch.push(first);
+    // admit until full or the deadline passes
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < bsz {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => {
+                metrics.dequeued();
+                batch.push(req);
+            }
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Gather::Batch(batch)
+}
+
+/// Fail every request of a batch with one error message.
+fn fail_batch(batch: Vec<Request>, msg: &str, metrics: &Metrics) {
+    for req in batch {
+        let latency = req.enqueued.elapsed();
+        metrics.latency.record(latency);
+        let _ = req.reply.send(Response {
+            id: req.id,
+            logits: Vec::new(),
+            latency,
+            batch_size: 0,
+            error: Some(msg.to_string()),
+        });
+    }
+}
+
+/// The pipelined worker loop: admit → stage → submit while there is
+/// pipeline room, poll the oldest in-flight job, reply in submission
+/// order. On shutdown the in-flight jobs drain before the loop exits;
+/// requests still waiting in the queue are dropped (their reply channel
+/// disconnects), exactly as before.
 fn worker_loop<E: BatchExecutor>(
     mut executor: E,
     rx: Receiver<Request>,
@@ -185,67 +293,81 @@ fn worker_loop<E: BatchExecutor>(
     let bsz = executor.batch_size();
     let elems = executor.image_elems();
     let classes = executor.num_classes();
-    let mut batch: Vec<Request> = Vec::with_capacity(bsz);
+    let depth = config.pipeline_depth.max(1);
     let mut payload = vec![0f32; bsz * elems];
 
-    while !stop.load(Ordering::Relaxed) {
-        batch.clear();
-        // block for the head-of-line request
-        match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(req) => batch.push(req),
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-        // admit until full or the deadline passes
-        let deadline = Instant::now() + config.max_wait;
-        while batch.len() < bsz {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+    struct InFlight {
+        job: JobId,
+        reqs: Vec<Request>,
+    }
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    let mut disconnected = false;
+
+    loop {
+        let stopping = stop.load(Ordering::Relaxed) || disconnected;
+        if stopping && inflight.is_empty() {
+            break;
         }
 
-        // pad + execute
-        payload.iter_mut().for_each(|v| *v = 0.0);
-        for (i, r) in batch.iter().enumerate() {
-            payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
-        }
-        let result = executor.execute(&payload, batch.len());
-        metrics.record_batch(batch.len());
-
-        let real = batch.len();
-        match result {
-            Ok(logits) => {
-                for (i, req) in batch.drain(..).enumerate() {
-                    let latency = req.enqueued.elapsed();
-                    metrics.latency.record(latency);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                        latency,
-                        batch_size: real,
-                        error: None,
-                    });
+        // 1. admit + stage + submit while there's pipeline room
+        let mut progressed = false;
+        if !stopping && inflight.len() < depth {
+            match gather_batch(&rx, bsz, config.max_wait, inflight.is_empty(), &metrics) {
+                Gather::Disconnected => disconnected = true,
+                Gather::Empty => {}
+                Gather::Batch(batch) => {
+                    progressed = true;
+                    // stage: zero the padding, copy the real rows
+                    payload.iter_mut().for_each(|v| *v = 0.0);
+                    for (i, r) in batch.iter().enumerate() {
+                        payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+                    }
+                    metrics.record_batch(batch.len());
+                    match executor.submit(&payload, batch.len()) {
+                        Ok(job) => {
+                            metrics.job_started();
+                            inflight.push_back(InFlight { job, reqs: batch });
+                        }
+                        // submit refused the job (bad payload, dead
+                        // pool): fail the batch immediately
+                        Err(e) => fail_batch(batch, &format!("{e:#}"), &metrics),
+                    }
                 }
             }
-            Err(e) => {
-                // fail the whole batch; callers decide on retry
-                let msg = format!("{e:#}");
-                for req in batch.drain(..) {
-                    let latency = req.enqueued.elapsed();
-                    metrics.latency.record(latency);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        logits: Vec::new(),
-                        latency,
-                        batch_size: 0,
-                        error: Some(msg.clone()),
-                    });
+        }
+
+        // 2. poll the oldest in-flight job; reply on completion
+        let head_job = inflight.front().map(|f| f.job);
+        if let Some(job) = head_job {
+            match executor.poll(job) {
+                Ok(JobState::Pending) => {
+                    if !progressed {
+                        // nothing admitted and the head still runs —
+                        // yield instead of spinning hot
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+                Ok(JobState::Done(logits)) => {
+                    let done = inflight.pop_front().expect("head exists");
+                    metrics.job_finished();
+                    let real = done.reqs.len();
+                    for (i, req) in done.reqs.into_iter().enumerate() {
+                        let latency = req.enqueued.elapsed();
+                        metrics.latency.record(latency);
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            latency,
+                            batch_size: real,
+                            error: None,
+                        });
+                    }
+                }
+                Err(e) => {
+                    // fail the whole batch; callers decide on retry
+                    let done = inflight.pop_front().expect("head exists");
+                    metrics.job_finished();
+                    fail_batch(done.reqs, &format!("{e:#}"), &metrics);
                 }
             }
         }
@@ -280,7 +402,11 @@ mod tests {
         exec.delay = Duration::from_millis(1);
         let c = Coordinator::start(
             exec,
-            BatcherConfig { queue_capacity: 64, max_wait: Duration::from_millis(50) },
+            BatcherConfig {
+                queue_capacity: 64,
+                max_wait: Duration::from_millis(50),
+                ..BatcherConfig::default()
+            },
         );
         let h = c.handle();
         let rxs: Vec<_> = (0..16).map(|i| h.submit(image(i as f32, 2)).unwrap()).collect();
@@ -298,7 +424,11 @@ mod tests {
     fn deadline_fires_for_lone_request() {
         let c = Coordinator::start(
             MockExecutor::new(8, 2, 2),
-            BatcherConfig { queue_capacity: 8, max_wait: Duration::from_millis(5) },
+            BatcherConfig {
+                queue_capacity: 8,
+                max_wait: Duration::from_millis(5),
+                ..BatcherConfig::default()
+            },
         );
         let h = c.handle();
         let t0 = Instant::now();
@@ -315,7 +445,11 @@ mod tests {
         exec.delay = Duration::from_millis(50);
         let c = Coordinator::start(
             exec,
-            BatcherConfig { queue_capacity: 2, max_wait: Duration::ZERO },
+            BatcherConfig {
+                queue_capacity: 2,
+                max_wait: Duration::ZERO,
+                ..BatcherConfig::default()
+            },
         );
         let h = c.handle();
         let mut rejected = 0;

@@ -1,33 +1,68 @@
-//! Batch executors: the trait the batcher drives, its PJRT-backed
-//! implementation, a [`Backend`]-driven attention executor (the
-//! multi-backend serving seam), and a deterministic mock for
-//! coordinator tests.
+//! Batch executors: the submit/poll trait the pipelined batcher drives,
+//! its PJRT-backed implementation, a [`Backend`]-driven attention/block
+//! executor (the multi-backend serving seam), and a deterministic mock
+//! for coordinator tests.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::backend::{
-    AttnBatchRequest, AttnRequest, Backend, ExecutionPlan, PlanOptions, QTensor,
+    AttnBatchRequest, AttnRequest, Backend, ExecutionPlan, JobId, JobState, PlanOptions, QTensor,
+    SyncJobs,
 };
+use crate::block::EncoderBlock;
 use crate::runtime::Engine;
+use crate::sim::AttentionReport;
 use crate::util::tensorio::Tensor;
 
-/// Executes one padded batch of images → logits.
+/// Executes padded batches of images → logits through a two-phase
+/// **submit/poll** pipeline, so the batcher can stage batch N+1 while
+/// batch N is in flight.
 ///
 /// `images` is row-major `[batch, h, w, c]` with exactly `batch_size()`
 /// rows (the batcher pads); the first `real_rows` are real requests and
-/// the rest zero padding whose outputs are dropped. Returns
-/// `batch_size() × num_classes` logits (the batcher drops the padding
-/// rows). Executors with static shapes (PJRT) still run the padded
-/// batch but skip decode/copy-out for padding rows; per-row executors
-/// skip the padding work entirely and leave those rows zero.
+/// the rest zero padding whose outputs are dropped. A completed job
+/// yields `batch_size() × num_classes` logits (the batcher drops the
+/// padding rows). Executors with static shapes (PJRT) still run the
+/// padded batch but skip decode/copy-out for padding rows; per-row
+/// executors skip the padding work entirely and leave those rows zero.
+///
+/// The job contract mirrors [`ExecutionPlan`]: `submit` returns a
+/// [`JobId`] immediately (synchronous executors run the batch inline
+/// and park the result), execution failures surface at `poll`, and a
+/// completed or failed poll consumes the job. The blocking
+/// [`BatchExecutor::execute`] adapter submits then drains one job.
 pub trait BatchExecutor: Send {
     fn batch_size(&self) -> usize;
     fn image_elems(&self) -> usize;
     fn num_classes(&self) -> usize;
-    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>>;
+
+    /// Stage + submit one padded batch; returns its job handle without
+    /// waiting for completion.
+    fn submit(&mut self, images: &[f32], real_rows: usize) -> Result<JobId>;
+
+    /// Observe a submitted batch. `Done` carries the padded logits and
+    /// consumes the job; so does an execution error.
+    fn poll(&mut self, job: JobId) -> Result<JobState<Vec<f32>>>;
+
+    /// Adapter: submit one batch and drain it to completion.
+    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
+        let job = self.submit(images, real_rows)?;
+        loop {
+            match self.poll(job)? {
+                JobState::Done(logits) => return Ok(logits),
+                JobState::Pending => std::thread::sleep(Duration::from_micros(50)),
+            }
+        }
+    }
 }
 
-/// PJRT-backed executor over a loaded manifest executable.
+/// PJRT-backed executor over a loaded manifest executable. Trivially
+/// synchronous: the AOT artifact runs on the caller thread, so `submit`
+/// executes inline and parks the logits.
 pub struct PjrtExecutor {
     engine: Engine,
     exe_name: String,
@@ -35,6 +70,7 @@ pub struct PjrtExecutor {
     image_elems: usize,
     classes: usize,
     input_shape: Vec<usize>,
+    jobs: SyncJobs<Vec<f32>>,
 }
 
 impl PjrtExecutor {
@@ -46,28 +82,22 @@ impl PjrtExecutor {
         let input_shape = spec.inputs[0].shape.clone();
         let image_elems: usize = input_shape[1..].iter().product();
         let classes = *spec.outputs[0].shape.last().unwrap_or(&0);
-        Ok(PjrtExecutor { engine, exe_name, batch, image_elems, classes, input_shape })
+        Ok(PjrtExecutor {
+            engine,
+            exe_name,
+            batch,
+            image_elems,
+            classes,
+            input_shape,
+            jobs: SyncJobs::new(),
+        })
     }
 
     pub fn engine(&mut self) -> &mut Engine {
         &mut self.engine
     }
-}
 
-impl BatchExecutor for PjrtExecutor {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn image_elems(&self) -> usize {
-        self.image_elems
-    }
-
-    fn num_classes(&self) -> usize {
-        self.classes
-    }
-
-    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
+    fn execute_now(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
         // AOT shapes are static — the padded batch executes as-is — but
         // decode/copy-out is per-row work: only the `real_rows` leading
         // rows are copied out of the device literal; padding rows stay
@@ -90,23 +120,52 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+impl BatchExecutor for PjrtExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn submit(&mut self, images: &[f32], real_rows: usize) -> Result<JobId> {
+        let result = self.execute_now(images, real_rows);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<Vec<f32>>> {
+        self.jobs.poll(job, "pjrt executor")
+    }
+}
+
 // PjRtClient/LoadedExecutable wrap heap pointers used from a single thread;
 // the coordinator moves the whole executor onto its one worker thread and
 // never shares it, so the move-only Send is sound.
 unsafe impl Send for PjrtExecutor {}
 
-/// Serves quantized-attention inference through any registered
-/// [`Backend`]'s [`ExecutionPlan`] — the coordinator's multi-backend
-/// seam. Each request payload is a flattened fp activation matrix
-/// (`tokens × d_in`); the executor quantizes the real rows with the
-/// module's input spec, dispatches them as **one** `AttnBatchRequest`
-/// (batching is the backend's capability, not a coordinator-side loop),
-/// and returns the fp output activations — the full W_O-projected
-/// output when the plan emits it, else the dequantized PV codes.
+/// Serves quantized attention — or whole-encoder-block — inference
+/// through any registered [`Backend`]'s [`ExecutionPlan`]: the
+/// coordinator's multi-backend seam. Each request payload is a
+/// flattened fp activation matrix (`tokens × d_in`); `submit` quantizes
+/// the real rows with the planned module's input spec (the staging work
+/// the pipelined batcher overlaps with in-flight batches), dispatches
+/// them as **one** plan job, and `poll` passes the plan's completion
+/// through, returning the fp output activations — the full
+/// W_O-projected output when the plan emits it, else the dequantized
+/// output codes. Hardware reports of completed batches are absorbed
+/// into the shared [`Self::report_sink`], so `ivit serve` can print the
+/// merged [`AttentionReport`] (block rows included) after shutdown.
 ///
 /// Unlike [`PjrtExecutor`] this needs no artifacts, so `ivit serve
-/// --backend sim|sim-mt|ref` exercises the full batching stack
-/// standalone.
+/// --backend sim|sim-mt|ref` exercises the full pipelined batching
+/// stack standalone — and with a block plan (`--scope block`) each
+/// request row runs the entire LN → attention → +res → LN → MLP → +res
+/// composition.
 pub struct AttnBatchExecutor {
     plan: Box<dyn ExecutionPlan>,
     tokens: usize,
@@ -114,11 +173,15 @@ pub struct AttnBatchExecutor {
     d_out: usize,
     spec: crate::backend::QuantSpec,
     batch: usize,
+    /// Plan job → the real-row count needed to de-pad its response.
+    inflight: BTreeMap<u64, usize>,
+    /// Merged hardware report over every completed batch.
+    report: Arc<Mutex<Option<AttentionReport>>>,
 }
 
 impl AttnBatchExecutor {
-    /// Plan `backend` once and serve `tokens × d_in` activations,
-    /// `batch` requests per executor call.
+    /// Plan `backend` once and serve `tokens × d_in` attention
+    /// activations, `batch` requests per executor call.
     pub fn new(
         backend: &dyn Backend,
         module: &crate::backend::AttnModule,
@@ -129,25 +192,58 @@ impl AttnBatchExecutor {
         Ok(Self::from_plan(backend.plan(opts)?, module, tokens, batch))
     }
 
-    /// Wrap an already-built plan.
+    /// Wrap an already-built attention-scope plan.
     pub fn from_plan(
         plan: Box<dyn ExecutionPlan>,
         module: &crate::backend::AttnModule,
         tokens: usize,
         batch: usize,
     ) -> Self {
+        Self::with_dims(plan, module.d_in(), module.d_out(), module.input_spec(), tokens, batch)
+    }
+
+    /// Wrap an already-built block-scope plan: rows are `tokens × D`
+    /// activations in the block's input spec, outputs are the block's
+    /// `tokens × D` output activations.
+    pub fn for_block(
+        plan: Box<dyn ExecutionPlan>,
+        block: &EncoderBlock,
+        tokens: usize,
+        batch: usize,
+    ) -> Self {
+        Self::with_dims(plan, block.d(), block.d(), block.input_spec(), tokens, batch)
+    }
+
+    fn with_dims(
+        plan: Box<dyn ExecutionPlan>,
+        d_in: usize,
+        d_out: usize,
+        spec: crate::backend::QuantSpec,
+        tokens: usize,
+        batch: usize,
+    ) -> Self {
         AttnBatchExecutor {
             plan,
             tokens,
-            d_in: module.d_in(),
-            d_out: module.d_out(),
-            spec: module.input_spec(),
+            d_in,
+            d_out,
+            spec,
             batch,
+            inflight: BTreeMap::new(),
+            report: Arc::new(Mutex::new(None)),
         }
     }
 
     pub fn describe(&self) -> String {
         self.plan.describe()
+    }
+
+    /// Shared handle to the merged hardware report. Clone it before
+    /// moving the executor into a [`super::Coordinator`]; after
+    /// shutdown it holds the batch-merged [`AttentionReport`] (when the
+    /// backend surfaces stats).
+    pub fn report_sink(&self) -> Arc<Mutex<Option<AttentionReport>>> {
+        Arc::clone(&self.report)
     }
 }
 
@@ -164,21 +260,46 @@ impl BatchExecutor for AttnBatchExecutor {
         self.tokens * self.d_out
     }
 
-    fn execute(&mut self, images: &[f32], real_rows: usize) -> Result<Vec<f32>> {
+    fn submit(&mut self, images: &[f32], real_rows: usize) -> Result<JobId> {
         let elems = self.image_elems();
         anyhow::ensure!(images.len() == self.batch * elems, "batch payload size");
         anyhow::ensure!(real_rows <= self.batch, "real_rows {} > batch {}", real_rows, self.batch);
-        let out_elems = self.num_classes();
-        let mut out = vec![0f32; self.batch * out_elems];
-        // padding rows stay zero — only REAL rows are quantized and batched
+        // staging: only REAL rows are quantized and submitted
         let items = (0..real_rows)
             .map(|b| {
                 let row = &images[b * elems..(b + 1) * elems];
                 Ok(AttnRequest::new(QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?))
             })
             .collect::<Result<Vec<_>>>()?;
-        let resp = self.plan.run_batch(&AttnBatchRequest::new(items))?;
+        let job = self.plan.submit(&AttnBatchRequest::new(items))?;
+        self.inflight.insert(job.raw(), real_rows);
+        Ok(job)
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<Vec<f32>>> {
+        let resp = match self.plan.poll(job) {
+            Ok(JobState::Pending) => return Ok(JobState::Pending),
+            Ok(JobState::Done(resp)) => resp,
+            Err(e) => {
+                self.inflight.remove(&job.raw());
+                return Err(e);
+            }
+        };
+        let real_rows = self
+            .inflight
+            .remove(&job.raw())
+            .ok_or_else(|| anyhow::anyhow!("attn executor: untracked {job}"))?;
         anyhow::ensure!(resp.items.len() == real_rows, "plan returned {} rows", resp.items.len());
+        if let Some(r) = &resp.report {
+            let mut sink = self.report.lock().expect("report sink poisoned");
+            match sink.as_mut() {
+                Some(agg) => agg.absorb(r),
+                None => *sink = Some(r.clone()),
+            }
+        }
+        let out_elems = self.num_classes();
+        // padding rows stay zero
+        let mut out = vec![0f32; self.batch * out_elems];
         for (b, item) in resp.items.into_iter().enumerate() {
             let vals = match (item.out_values, item.out_codes) {
                 (Some(v), _) => v,
@@ -188,7 +309,7 @@ impl BatchExecutor for AttnBatchExecutor {
             anyhow::ensure!(vals.len() == out_elems, "plan output size {}", vals.len());
             out[b * out_elems..(b + 1) * out_elems].copy_from_slice(&vals);
         }
-        Ok(out)
+        Ok(JobState::Done(out))
     }
 }
 
@@ -202,6 +323,7 @@ pub struct MockExecutor {
     pub delay: std::time::Duration,
     pub fail_every: Option<u64>,
     pub calls: u64,
+    jobs: SyncJobs<Vec<f32>>,
 }
 
 impl MockExecutor {
@@ -213,24 +335,11 @@ impl MockExecutor {
             delay: std::time::Duration::ZERO,
             fail_every: None,
             calls: 0,
+            jobs: SyncJobs::new(),
         }
     }
-}
 
-impl BatchExecutor for MockExecutor {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn image_elems(&self) -> usize {
-        self.image_elems
-    }
-
-    fn num_classes(&self) -> usize {
-        self.classes
-    }
-
-    fn execute(&mut self, images: &[f32], _real_rows: usize) -> Result<Vec<f32>> {
+    fn execute_now(&mut self, images: &[f32]) -> Result<Vec<f32>> {
         self.calls += 1;
         if let Some(k) = self.fail_every {
             if self.calls % k == 0 {
@@ -249,6 +358,29 @@ impl BatchExecutor for MockExecutor {
             }
         }
         Ok(out)
+    }
+}
+
+impl BatchExecutor for MockExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn submit(&mut self, images: &[f32], _real_rows: usize) -> Result<JobId> {
+        let result = self.execute_now(images);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<Vec<f32>>> {
+        self.jobs.poll(job, "mock executor")
     }
 }
 
@@ -311,6 +443,60 @@ mod tests {
         let per = tokens * 6;
         assert!(out[..per].iter().any(|&v| v != 0.0));
         assert!(out[per..].iter().all(|&v| v == 0.0), "padding rows must stay zero");
+    }
+
+    #[test]
+    fn attn_executor_pipelines_two_batches_through_submit_poll() {
+        use crate::backend::{AttnModule, SimMtBackend};
+        let module = AttnModule::synthetic(12, 6, 2, 3, 27).unwrap();
+        let tokens = 4;
+        let backend = SimMtBackend::new(module.clone(), 2);
+        let mut exec =
+            AttnBatchExecutor::new(&backend, &module, tokens, 2, &PlanOptions::default()).unwrap();
+        let mut rng = crate::util::XorShift::new(8);
+        let p1: Vec<f32> = rng.normal_vec(2 * tokens * 12);
+        let p2: Vec<f32> = rng.normal_vec(2 * tokens * 12);
+        // oracle: drain each batch synchronously on a fresh executor
+        let mut oracle =
+            AttnBatchExecutor::new(&backend, &module, tokens, 2, &PlanOptions::default()).unwrap();
+        let (w1, w2) = (oracle.execute(&p1, 2).unwrap(), oracle.execute(&p2, 2).unwrap());
+        // pipelined: both in flight, drained out of order
+        let j1 = exec.submit(&p1, 2).unwrap();
+        let j2 = exec.submit(&p2, 2).unwrap();
+        let drain = |e: &mut AttnBatchExecutor, j| loop {
+            match e.poll(j).unwrap() {
+                JobState::Done(v) => return v,
+                JobState::Pending => std::thread::yield_now(),
+            }
+        };
+        let g2 = drain(&mut exec, j2);
+        let g1 = drain(&mut exec, j1);
+        assert_eq!(g1, w1);
+        assert_eq!(g2, w2);
+        // polling a drained job is an error, not Pending
+        assert!(exec.poll(j1).is_err());
+    }
+
+    #[test]
+    fn attn_executor_merges_block_reports_into_the_sink() {
+        use crate::backend::{PlanScope, SimBackend};
+        let block = crate::block::EncoderBlock::synthetic(12, 24, 2, 3, 77).unwrap();
+        let backend = SimBackend::for_block(block.clone());
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let plan = backend.plan(&opts).unwrap();
+        let tokens = 4;
+        let mut exec = AttnBatchExecutor::for_block(plan, &block, tokens, 2);
+        assert_eq!(exec.image_elems(), tokens * 12);
+        assert_eq!(exec.num_classes(), tokens * 12);
+        let sink = exec.report_sink();
+        let mut rng = crate::util::XorShift::new(6);
+        let payload: Vec<f32> = rng.normal_vec(2 * tokens * 12);
+        let out = exec.execute(&payload, 2).unwrap();
+        assert_eq!(out.len(), 2 * tokens * 12);
+        let report = sink.lock().unwrap();
+        let report = report.as_ref().expect("block sim surfaces stats");
+        assert!(report.total_macs() > 0);
+        assert!(report.blocks.iter().any(|b| b.name == "FC1 linear"), "block rows merged");
     }
 
     #[test]

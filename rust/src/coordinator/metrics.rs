@@ -83,9 +83,20 @@ pub struct Snapshot {
     pub mean_us: f64,
     pub max_us: u64,
     pub rejected: u64,
+    /// Requests currently waiting in the bounded queue.
+    pub queue_depth: u64,
+    /// Deepest the queue ever got.
+    pub queue_peak: u64,
+    /// Batches submitted to the executor and not yet completed.
+    pub inflight: u64,
+    /// Most batches ever in flight at once (> 1 ⇔ the pipelined loop
+    /// actually overlapped staging with execution).
+    pub inflight_peak: u64,
 }
 
-/// Shared metrics for one coordinator.
+/// Shared metrics for one coordinator: counters, the latency histogram,
+/// and the pipeline gauges (queue depth, in-flight batches) with their
+/// high-water marks.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub latency: Histogram,
@@ -93,6 +104,10 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub rejected: AtomicU64,
     pub batch_sizes: Mutex<Vec<u32>>,
+    queue_depth: AtomicU64,
+    queue_peak: AtomicU64,
+    inflight: AtomicU64,
+    inflight_peak: AtomicU64,
 }
 
 impl Metrics {
@@ -104,6 +119,33 @@ impl Metrics {
                 v.push(n as u32);
             }
         }
+    }
+
+    /// A request entered the bounded queue.
+    pub fn enqueued(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// The batcher popped a request off the queue.
+    pub fn dequeued(&self) {
+        // saturating: a racing snapshot may observe 0 briefly, never wrap
+        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    /// A batch was submitted to the executor.
+    pub fn job_started(&self) {
+        let inflight = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inflight_peak.fetch_max(inflight, Ordering::Relaxed);
+    }
+
+    /// A submitted batch completed (or failed).
+    pub fn job_finished(&self) {
+        let _ = self.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -119,6 +161,10 @@ impl Metrics {
             mean_us: self.latency.mean_us(),
             max_us: self.latency.max_us(),
             rejected: self.rejected.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
         }
     }
 }
@@ -158,5 +204,27 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
         assert_eq!(s.requests, 1);
+    }
+
+    #[test]
+    fn gauges_track_depth_and_peaks() {
+        let m = Metrics::default();
+        m.enqueued();
+        m.enqueued();
+        m.dequeued();
+        m.job_started();
+        m.job_started();
+        m.job_finished();
+        let s = m.snapshot();
+        assert_eq!((s.queue_depth, s.queue_peak), (1, 2));
+        assert_eq!((s.inflight, s.inflight_peak), (1, 2));
+        // gauges saturate at zero instead of wrapping
+        m.dequeued();
+        m.dequeued();
+        m.job_finished();
+        m.job_finished();
+        let s = m.snapshot();
+        assert_eq!((s.queue_depth, s.inflight), (0, 0));
+        assert_eq!((s.queue_peak, s.inflight_peak), (2, 2));
     }
 }

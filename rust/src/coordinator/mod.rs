@@ -1,11 +1,21 @@
-//! L3 coordinator — the serving layer over the PJRT executables.
+//! L3 coordinator — the serving layer over the execution backends.
 //!
 //! The paper's contribution is the integerized *datapath*; the coordinator
 //! is the thin-but-real serving harness around it (DESIGN.md maps this to
 //! the "thin driver + request loop" case): a bounded request queue with
 //! backpressure, a dynamic batcher (max-batch + deadline), a worker thread
-//! that owns the PJRT engine (the `xla` handles hold raw pointers and stay
-//! on one thread), and latency/throughput metrics.
+//! that owns the executor (the PJRT `xla` handles hold raw pointers and
+//! stay on one thread), and latency/throughput metrics.
+//!
+//! The worker runs a **pipelined submit/poll loop**: up to
+//! [`BatcherConfig::pipeline_depth`] batches are in flight at once, so
+//! input staging/quantization of batch N+1 overlaps batch N's execution
+//! whenever the executor's backend genuinely overlaps (`sim-mt` plans);
+//! queue depth and in-flight jobs are tracked in metrics. Through
+//! [`AttnBatchExecutor`] the coordinator serves any registered
+//! [`crate::backend::Backend`] at attention **or whole-encoder-block**
+//! scope without artifacts, merging the hardware reports of every
+//! completed batch into a shared sink for the serve report.
 //!
 //! The executor is a trait so every coordinator test runs against a mock;
 //! the PJRT-backed implementation lives in [`executor`] and is exercised

@@ -14,13 +14,18 @@
 //!
 //! ## The execution API
 //!
-//! The crate's central seam is [`backend`], a two-phase **plan/execute**
+//! The crate's central seam is [`backend`], a **plan → submit/poll**
 //! model: `Backend::plan(&PlanOptions)` performs all one-time setup
 //! (scale folding, module→substrate lowering, artifact/engine binding,
-//! worker-pool spawn) and returns an `ExecutionPlan` whose
-//! `run_batch(&AttnBatchRequest)` executes N rows with no per-request
-//! work; single-request `run_attention` is a default adapter over a
-//! batch of one. Substrates:
+//! worker-pool spawn) and returns an `ExecutionPlan`; execution is a
+//! job pipeline — `submit(&AttnBatchRequest)` hands a batch over and
+//! returns a `JobId` immediately, `poll(JobId)` observes it to
+//! completion, and the blocking `run_batch` adapter (submit then
+//! drain) serves callers that don't pipeline. `sim-mt` genuinely
+//! overlaps: its worker pool accepts the next batch's shards while the
+//! previous batch's rows are in flight. `PlanOptions::scope` selects
+//! the unit each request row executes (attention only, or a whole
+//! [`block::EncoderBlock`]). Substrates:
 //!
 //! * `ref` ([`backend::ReferenceBackend`]) — the [`quant`] golden
 //!   reference, scalar loops, bit-accurate;
@@ -39,8 +44,10 @@
 //! scale foldings) replace the bare `f32` scales and `bool` flags that
 //! used to cross module boundaries. The cross-backend parity suite
 //! (`tests/backend_parity.rs`) pins `ref` ≡ `sim` bit-identity at DeiT-S
-//! dimensions for every supported bit width, and `tests/plan_batch.rs`
-//! pins batch ≡ loop and `sim-mt` worker-count determinism.
+//! dimensions for every supported bit width, `tests/plan_batch.rs`
+//! pins batch ≡ loop and `sim-mt` worker-count determinism, and
+//! `tests/async_pipeline.rs` pins out-of-order submit/poll ≡
+//! `run_batch` plus pipelined-serve determinism.
 //!
 //! Modules:
 //!
@@ -57,14 +64,19 @@
 //! * [`sim`] — the systolic-array hardware model: PE grids, scan chains,
 //!   cycle counts and the activity-based energy model behind Table I;
 //!   [`sim::BlockSim`]/[`sim::MlpSim`] extend it to the whole block.
-//! * [`backend`] — the unified `Backend` trait, the three substrate
-//!   implementations and the name-keyed registry.
+//! * [`backend`] — the unified `Backend` trait, the substrate
+//!   implementations, the submit/poll job types ([`backend::job`]) and
+//!   the name-keyed registry; [`backend::PlanCache`] memoizes plans and
+//!   persists its rebuild index across restarts
+//!   ([`backend::PlanSeed`]).
 //! * [`model`] — ViT configuration and integerized checkpoint loading.
 //! * [`runtime`] — PJRT engine (HLO-text load, compile cache, literal
 //!   marshalling); builds against an in-tree stub unless the `xla-rs`
 //!   feature links the real bindings.
-//! * [`coordinator`] — request queue, dynamic batcher, worker pool,
-//!   latency/throughput metrics; serves any [`backend`] via
+//! * [`coordinator`] — request queue, dynamic batcher, pipelined
+//!   submit/poll worker loop (batch N+1 stages while batch N executes),
+//!   latency/throughput/queue-depth metrics; serves any [`backend`] at
+//!   attention or encoder-block scope via
 //!   [`coordinator::AttnBatchExecutor`].
 //! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
 //!   (criterion is not in this image's offline crate set).

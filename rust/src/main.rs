@@ -12,10 +12,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use ivit::backend::{
     AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, ExecutionPlan, PlanCache,
-    PlanOptions, PlanScope,
+    PlanOptions, PlanScope, PlanSeed,
 };
-use ivit::cli::{Args, USAGE};
-use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
+use ivit::bench::BenchRecord;
+use ivit::block::EncoderBlock;
+use ivit::cli::{validate_serve_scope, Args, USAGE};
+use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor, Snapshot};
 use ivit::model::{AttnCase, EvalSet, VitConfig, VitModel};
 use ivit::runtime::Engine;
 use ivit::sim::{AttentionSim, EnergyModel};
@@ -76,11 +78,34 @@ fn plan_options(args: &Args) -> Result<PlanOptions> {
 }
 
 /// `ivit serve` — the end-to-end driver: batching server + synthetic load.
+/// `--scope block` serves whole encoder blocks on the integer backends;
+/// the unsupported pjrt/block combination fails at arg validation, not
+/// deep inside planning.
 fn cmd_serve(args: &Args) -> Result<()> {
-    match args.choice("backend", &["pjrt", "sim", "sim-mt", "ref"], "pjrt")?.as_str() {
+    let backend = args.choice("backend", &["pjrt", "sim", "sim-mt", "ref"], "pjrt")?;
+    let scope = args.choice("scope", &["attention", "block"], "attention")?;
+    validate_serve_scope(&backend, &scope)?;
+    match backend.as_str() {
         "pjrt" => cmd_serve_images(args),
-        other => cmd_serve_attention(args, other),
+        other => cmd_serve_attention(args, other, &scope),
     }
+}
+
+/// Append the serve report to the `IVIT_BENCH_JSON` perf trajectory, so
+/// serve runs accumulate next to the bench records.
+fn emit_serve_record(backend: &str, scope: &str, n_requests: usize, wall_s: f64, s: &Snapshot) {
+    BenchRecord::new("serve.report")
+        .str_field("backend", backend)
+        .str_field("scope", scope)
+        .num("requests", n_requests as f64)
+        .num("req_per_s", n_requests as f64 / wall_s)
+        .num("p50_ms", s.p50_us as f64 / 1e3)
+        .num("p95_ms", s.p95_us as f64 / 1e3)
+        .num("p99_ms", s.p99_us as f64 / 1e3)
+        .num("mean_batch", s.mean_batch)
+        .num("queue_peak", s.queue_peak as f64)
+        .num("inflight_peak", s.inflight_peak as f64)
+        .emit();
 }
 
 /// Image-classification serving over the AOT executables (PJRT backend).
@@ -103,6 +128,7 @@ fn cmd_serve_images(args: &Args) -> Result<()> {
         BatcherConfig {
             queue_capacity: 512,
             max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+            pipeline_depth: args.usize("pipeline-depth", 2)?,
         },
     );
     let h = coord.handle();
@@ -151,26 +177,87 @@ fn cmd_serve_images(args: &Args) -> Result<()> {
     println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
     println!("latency p95   : {:.2} ms", s.p95_us as f64 / 1e3);
     println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
+    println!("queue peak    : {} (in-flight peak {})", s.queue_peak, s.inflight_peak);
     println!("accuracy      : {:.4}", correct as f64 / n_requests as f64);
+    emit_serve_record("pjrt", "image", n_requests, wall.as_secs_f64(), &s);
     Ok(())
 }
 
-/// Attention serving through a registry backend (no artifacts needed).
-fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
-    let mut cfg = backend_config(args)?;
+/// Attention- or block-scope serving through a registry backend (no
+/// artifacts needed): builds the [`PlanSeed`] for this configuration,
+/// takes the plan through the persistent [`PlanCache`] when
+/// `--cache-dir` is set (warm-loading any previous run's plans), and
+/// pipelines batches through the coordinator.
+fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<()> {
     let tokens = args.usize("tokens", 198)?;
     let batch = args.usize("batch", 4)?;
     let n_requests = args.usize("requests", 32)?;
     let rate = args.f64("rate", 0.0)?;
     let max_wait_ms = args.f64("max-wait-ms", 2.0)?;
-
+    let cache_dir = args.flags.get("cache-dir").map(PathBuf::from);
     let registry = BackendRegistry::with_defaults();
-    let module = cfg.resolve_module()?;
-    cfg.module = Some(module.clone()); // backend sees the same module
-    let backend = registry.create(backend_name, &cfg)?;
-    // plan once — all per-request setup is amortized across every batch
-    let exec = AttnBatchExecutor::new(&*backend, &module, tokens, batch, &plan_options(args)?)?;
-    println!("backend: {backend_name} — {}", exec.describe());
+
+    // the rebuildable recipe for this serve configuration
+    let defaults = BackendConfig::default();
+    let cfg_seed = args.usize("seed", 7)? as u64;
+    let bits = args.u32("bits", defaults.bits)?;
+    let dim = args.usize("dim", 64)?;
+    let heads = args.usize("heads", if scope == "block" { 2 } else { defaults.heads })?;
+    let seed = PlanSeed {
+        backend: backend_name.to_string(),
+        workers: args.usize("workers", 0)?,
+        row_shard_threshold: PlanOptions::default().row_shard_threshold,
+        scope: if scope == "block" { PlanScope::Block } else { PlanScope::Attention },
+        d_in: if scope == "block" { dim } else { args.usize("din", defaults.d_in)? },
+        d_head: args.usize("dhead", defaults.d_head)?,
+        heads,
+        hidden: args.usize("hidden", dim * 4)?,
+        bits,
+        shift: !args.bool("exact-exp"),
+        seed: cfg_seed,
+        artifacts: match scope {
+            // attn_case replay only exists for the attention module
+            "block" => None,
+            _ => Some(artifacts_dir(args).to_string_lossy().into_owned()),
+        },
+    };
+
+    // plan: through the persistent cache when --cache-dir is set. Only
+    // this configuration's entry is re-planned; other persisted seeds
+    // load index-only (and survive the persist below untouched).
+    let plan: Box<dyn ExecutionPlan> = match &cache_dir {
+        Some(dir) => {
+            let mut cache = PlanCache::warm_start_filtered(dir, &registry, |s| s == &seed)?;
+            let warm_loaded = cache.len();
+            let plan = cache.take_or_plan_seeded(&registry, &seed)?;
+            let outcome = if cache.hits() > 0 {
+                "HIT — reusing the persisted plan"
+            } else {
+                "MISS — planned fresh"
+            };
+            println!("plan cache: {outcome} ({warm_loaded} plan(s) warm-loaded from {dir:?})");
+            // write the index now: the recipe is final, the process may
+            // not shut down cleanly
+            cache.persist(dir)?;
+            plan
+        }
+        None => registry.create(backend_name, &seed.to_config()?)?.plan(&seed.options())?,
+    };
+
+    // executor dims/spec come from the same deterministic rebuild
+    // inputs the plan was created from
+    let (exec, d_in) = if seed.scope == PlanScope::Block {
+        let block = EncoderBlock::synthetic(seed.d_in, seed.hidden, seed.heads, bits, cfg_seed)?;
+        let d = block.d();
+        (AttnBatchExecutor::for_block(plan, &block, tokens, batch), d)
+    } else {
+        // the resolved module (attn_case dims may override the flags)
+        let module = seed.to_config()?.resolve_module()?;
+        let d = module.d_in();
+        (AttnBatchExecutor::from_plan(plan, &module, tokens, batch), d)
+    };
+    println!("backend: {backend_name} ({scope} scope) — {}", exec.describe());
+    let report_sink = exec.report_sink();
     let image_elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
 
     let coord = Coordinator::start(
@@ -178,12 +265,12 @@ fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
         BatcherConfig {
             queue_capacity: 512,
             max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+            pipeline_depth: args.usize("pipeline-depth", 2)?,
         },
     );
     let h = coord.handle();
     println!(
-        "serving {n_requests} attention requests ({tokens}×{} activations, rate = {}) ...",
-        module.d_in(),
+        "serving {n_requests} {scope} requests ({tokens}×{d_in} activations, rate = {}) ...",
         if rate > 0.0 { format!("{rate} req/s") } else { "closed-loop".into() }
     );
     let mut rng = XorShift::new(11);
@@ -204,13 +291,25 @@ fn cmd_serve_attention(args: &Args, backend_name: &str) -> Result<()> {
     }
     let wall = t0.elapsed();
     let s = coord.shutdown();
-    println!("\n== serve report ({backend_name} attention, batch {batch}) ==");
+    println!("\n== serve report ({backend_name} {scope}, batch {batch}) ==");
     println!("requests      : {n_requests}");
     println!("wall time     : {:.3}s", wall.as_secs_f64());
     println!("throughput    : {:.2} req/s", n_requests as f64 / wall.as_secs_f64());
     println!("mean batch    : {:.2}", s.mean_batch);
     println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
+    println!("latency p95   : {:.2} ms", s.p95_us as f64 / 1e3);
     println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
+    println!("queue peak    : {} (in-flight peak {})", s.queue_peak, s.inflight_peak);
+    if let Some(r) = report_sink.lock().expect("report sink").as_ref() {
+        let m = EnergyModel::default();
+        println!(
+            "hardware      : {:.1}M MACs merged over all batches, {:.2} µJ modelled ({} stat rows)",
+            r.total_macs() as f64 / 1e6,
+            r.workload_energy_uj(&m),
+            r.blocks.len(),
+        );
+    }
+    emit_serve_record(backend_name, scope, n_requests, wall.as_secs_f64(), &s);
     Ok(())
 }
 

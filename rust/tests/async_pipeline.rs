@@ -1,0 +1,240 @@
+//! The submit/poll job pipeline contract, stated as tests:
+//!
+//! * **out-of-order poll ≡ run_batch** — draining overlapped jobs in
+//!   any order is bit-identical to the synchronous `run_batch` adapter,
+//!   at DeiT-S dims (D=384, 6 heads) for bits 2/3/4/8;
+//! * **pipelined serve determinism** — the full coordinator stack
+//!   (pipelined batcher + `AttnBatchExecutor` + sim-mt block plans)
+//!   returns identical logits for 1/2/4 workers;
+//! * **job lifecycle** — execution errors surface at `poll`, a drained
+//!   id no longer resolves, and dropping unfinished jobs (or whole
+//!   plans with jobs in flight) neither wedges nor leaks the worker
+//!   pool.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use ivit::backend::{
+    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, Backend, ExecutionPlan, JobId,
+    JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend, SimMtBackend,
+};
+use ivit::block::EncoderBlock;
+use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, Response};
+use ivit::util::XorShift;
+
+fn drain(plan: &mut dyn ExecutionPlan, job: JobId) -> AttnBatchResponse {
+    loop {
+        match plan.poll(job).expect("poll") {
+            JobState::Done(resp) => return resp,
+            JobState::Pending => std::thread::yield_now(),
+        }
+    }
+}
+
+fn out_codes(resp: &AttnBatchResponse, row: usize) -> &Vec<i32> {
+    &resp.items[row].out_codes.as_ref().expect("codes").codes.data
+}
+
+#[test]
+fn out_of_order_poll_is_bit_identical_to_run_batch_at_deit_s_dims() {
+    // DeiT-S encoder dims: D=384, 6 heads of 64.
+    let tokens = 24;
+    for bits in [2u32, 3, 4, 8] {
+        let module = AttnModule::synthetic(384, 384, 6, bits, 500 + bits as u64).unwrap();
+        let mk_batch = |rows: u64, salt: u64| {
+            AttnBatchRequest::new(
+                (0..rows)
+                    .map(|i| AttnRequest::new(module.random_input(tokens, salt + i).unwrap()))
+                    .collect(),
+            )
+        };
+        let batches: Vec<AttnBatchRequest> =
+            (0..3u64).map(|j| mk_batch(2 + j, 900 + 10 * j)).collect();
+
+        // oracle: each batch through the synchronous run_batch adapter
+        let backend = SimMtBackend::new(module.clone(), 4);
+        let mut sync_plan = backend.plan(&PlanOptions::default()).unwrap();
+        let want: Vec<AttnBatchResponse> =
+            batches.iter().map(|b| sync_plan.run_batch(b).unwrap()).collect();
+
+        // overlapped: all three jobs in flight at once, drained in
+        // REVERSE submission order
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        let jobs: Vec<JobId> = batches.iter().map(|b| plan.submit(b).unwrap()).collect();
+        for (j, job) in jobs.iter().enumerate().rev() {
+            let got = drain(plan.as_mut(), *job);
+            assert_eq!(got.items.len(), want[j].items.len(), "{bits}-bit job {j}");
+            for row in 0..got.items.len() {
+                assert_eq!(
+                    out_codes(&got, row),
+                    out_codes(&want[j], row),
+                    "{bits}-bit job {j} row {row}: out-of-order poll must be bit-identical"
+                );
+                assert_eq!(
+                    got.items[row].out_values, want[j].items[row].out_values,
+                    "{bits}-bit job {j} row {row}: fp W_O outputs"
+                );
+            }
+            // merged stats partition identically too
+            assert_eq!(
+                got.report.as_ref().unwrap().total_macs(),
+                want[j].report.as_ref().unwrap().total_macs(),
+                "{bits}-bit job {j}: merged MAC totals"
+            );
+        }
+    }
+}
+
+#[test]
+fn submit_poll_matches_run_batch_on_synchronous_backends() {
+    let module = AttnModule::synthetic(24, 12, 2, 3, 61).unwrap();
+    let req_a = AttnBatchRequest::new(
+        (0..2u64).map(|i| AttnRequest::new(module.random_input(6, 20 + i).unwrap())).collect(),
+    );
+    let req_b = AttnBatchRequest::new(
+        (0..3u64).map(|i| AttnRequest::new(module.random_input(6, 30 + i).unwrap())).collect(),
+    );
+    for backend in [
+        Box::new(ReferenceBackend::new(module.clone())) as Box<dyn Backend>,
+        Box::new(SimBackend::new(module.clone())) as Box<dyn Backend>,
+    ] {
+        let name = backend.name().to_string();
+        let mut oracle = backend.plan(&PlanOptions::default()).unwrap();
+        let (want_a, want_b) =
+            (oracle.run_batch(&req_a).unwrap(), oracle.run_batch(&req_b).unwrap());
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        let ja = plan.submit(&req_a).unwrap();
+        let jb = plan.submit(&req_b).unwrap();
+        // reverse-order drain
+        let got_b = drain(plan.as_mut(), jb);
+        let got_a = drain(plan.as_mut(), ja);
+        for (got, want) in [(&got_a, &want_a), (&got_b, &want_b)] {
+            assert_eq!(got.items.len(), want.items.len(), "{name}");
+            for row in 0..got.items.len() {
+                assert_eq!(out_codes(got, row), out_codes(want, row), "{name} row {row}");
+            }
+        }
+        // a drained job no longer resolves — loud, not Pending
+        assert!(plan.poll(ja).is_err(), "{name}: double-drain must error");
+        // an id the plan never issued is equally loud
+        assert!(plan.poll(JobId::from_raw(10_000)).is_err(), "{name}: unknown id must error");
+    }
+}
+
+#[test]
+fn execution_errors_surface_at_poll_not_submit() {
+    let module = AttnModule::synthetic(16, 8, 2, 3, 71).unwrap();
+    let bad_row = AttnRequest::new(
+        ivit::backend::QTensor::new(
+            ivit::quant::linear::IntMat::new(4, 16, vec![0; 64]),
+            ivit::quant::QuantSpec::signed(5, ivit::quant::Step::new(0.12).unwrap()),
+        )
+        .unwrap(),
+    );
+    let req = AttnBatchRequest::new(vec![
+        AttnRequest::new(module.random_input(4, 1).unwrap()),
+        bad_row,
+    ]);
+    for backend in [
+        Box::new(ReferenceBackend::new(module.clone())) as Box<dyn Backend>,
+        Box::new(SimBackend::new(module.clone())) as Box<dyn Backend>,
+        Box::new(SimMtBackend::new(module.clone(), 2)) as Box<dyn Backend>,
+    ] {
+        let name = backend.name().to_string();
+        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        // submit accepts the job; the failure is parked for poll
+        let job = plan.submit(&req).expect("submit must accept the job");
+        let err = loop {
+            match plan.poll(job) {
+                Ok(JobState::Pending) => std::thread::yield_now(),
+                Ok(JobState::Done(_)) => panic!("{name}: bad batch must fail"),
+                Err(e) => break e,
+            }
+        };
+        assert!(!format!("{err:#}").is_empty(), "{name}");
+        // the failed job is consumed
+        assert!(plan.poll(job).is_err(), "{name}: failed job must be drained");
+        // ... and the plan still serves good batches afterwards
+        let good = AttnBatchRequest::single(AttnRequest::new(module.random_input(4, 2).unwrap()));
+        assert_eq!(plan.run_batch(&good).unwrap().items.len(), 1, "{name}");
+    }
+}
+
+#[test]
+fn dropping_unfinished_jobs_does_not_wedge_or_leak_the_pool() {
+    // attention plan: abandon a job mid-flight, keep serving, then drop
+    let module = AttnModule::synthetic(24, 12, 2, 3, 81).unwrap();
+    let backend = SimMtBackend::new(module.clone(), 2);
+    let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+    let _abandoned = plan
+        .submit(&AttnBatchRequest::new(
+            (0..4u64).map(|i| AttnRequest::new(module.random_input(8, i).unwrap())).collect(),
+        ))
+        .unwrap();
+    let good = AttnBatchRequest::single(AttnRequest::new(module.random_input(8, 9).unwrap()));
+    assert_eq!(plan.run_batch(&good).unwrap().items.len(), 1, "pool still serves");
+    drop(plan); // joins the pool with the abandoned job still parked
+
+    // block plan: same contract
+    let block = EncoderBlock::synthetic(12, 24, 2, 3, 83).unwrap();
+    let backend = SimMtBackend::for_block(block.clone(), 2);
+    let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+    let mut plan = backend.plan(&opts).unwrap();
+    let _abandoned = plan
+        .submit(&AttnBatchRequest::new(
+            (0..3u64).map(|i| AttnRequest::new(block.random_input(5, i).unwrap())).collect(),
+        ))
+        .unwrap();
+    drop(plan);
+}
+
+/// Serve a fixed request set through the full pipelined coordinator
+/// stack at block scope and return the logits in submission order.
+fn pipelined_block_serve(block: &EncoderBlock, workers: usize, n_requests: usize) -> Vec<Vec<f32>> {
+    let tokens = 5;
+    let backend = SimMtBackend::for_block(block.clone(), workers);
+    let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+    let plan = backend.plan(&opts).unwrap();
+    let exec = AttnBatchExecutor::for_block(plan, block, tokens, 2);
+    let elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 64,
+            max_wait: Duration::from_millis(1),
+            pipeline_depth: 2,
+        },
+    );
+    let h = coord.handle();
+    // identical request payloads for every worker count
+    let mut rng = XorShift::new(4242);
+    let receivers: Vec<Receiver<Response>> = (0..n_requests)
+        .map(|_| h.submit_blocking(rng.normal_vec(elems)).unwrap())
+        .collect();
+    let logits: Vec<Vec<f32>> = receivers
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+            r.logits
+        })
+        .collect();
+    let s = coord.shutdown();
+    assert_eq!(s.requests as usize, n_requests, "{workers} workers: all requests served");
+    assert!(s.inflight_peak >= 1, "{workers} workers: jobs were tracked in flight");
+    logits
+}
+
+#[test]
+fn pipelined_block_serve_is_deterministic_across_worker_counts() {
+    let block = EncoderBlock::synthetic(16, 32, 2, 3, 97).unwrap();
+    let n = 8;
+    let want = pipelined_block_serve(&block, 1, n);
+    for workers in [2usize, 4] {
+        let got = pipelined_block_serve(&block, workers, n);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "request {i}: {workers}-worker serve differs from 1-worker");
+        }
+    }
+}

@@ -202,7 +202,11 @@ fn coordinator_serves_correct_results_under_batching() {
     let ev = EvalSet::load(&dir.join("eval_images.bin"), &dir.join("eval_labels.bin")).unwrap();
     let coord = Coordinator::start(
         exec,
-        BatcherConfig { queue_capacity: 128, max_wait: Duration::from_millis(5) },
+        BatcherConfig {
+            queue_capacity: 128,
+            max_wait: Duration::from_millis(5),
+            ..BatcherConfig::default()
+        },
     );
     let h = coord.handle();
     // submit 32 requests concurrently; verify each response individually
