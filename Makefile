@@ -12,12 +12,16 @@
 #   make serve-smoke — CI smoke: artifact-free block-scope `ivit serve` (a
 #                      fixed request count through the pipelined coordinator
 #                      and a whole encoder block on the ref backend)
+#   make profile-smoke — CI smoke for per-module mixed precision: one batch
+#                      through an attn:4,mlp:8 encoder block with ref ≡ sim
+#                      bit-identity asserted (examples/profile_smoke.rs) plus
+#                      a tiny mixed-profile `ivit eval --backend ref`
 #   make artifacts   — lower the JAX model to HLO + export eval set / attn_case
 #                      (needs the python toolchain; see python/compile/)
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -40,6 +44,12 @@ eval-smoke:
 serve-smoke:
 	cd $(RUST_DIR) && cargo run --release -q -- serve --backend ref --scope block \
 		--tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8
+
+profile-smoke:
+	cd $(RUST_DIR) && cargo run --release -q --example profile_smoke
+	cd $(RUST_DIR) && cargo run --release -q -- eval --backend ref \
+		--bits-profile "attn:4,mlp:8" --dim 16 --hidden 32 --patch 8 \
+		--limit 4 --images 4
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -83,15 +83,20 @@ fn main() {
     }
 
     report(&timings);
-    // machine-readable trajectory (IVIT_BENCH_JSON, JSON Lines)
+    // machine-readable trajectory (IVIT_BENCH_JSON, JSON Lines); every
+    // record names its precision profile so trajectories distinguish
+    // precision configs
+    let profile_key = cfg.profile.key();
     for t in &timings {
         BenchRecord::new("sim_speed")
             .str_field("bench", &t.name)
+            .str_field("profile", &profile_key)
             .num("mean_s", t.mean.as_secs_f64())
             .num("per_s", t.per_sec())
             .emit();
     }
     BenchRecord::new("sim_speed.pe_cycles")
+        .str_field("profile", &profile_key)
         .num("pe_cycles_per_run", pe_cycles as f64)
         .num("pe_cycles_per_s", rate)
         .emit();

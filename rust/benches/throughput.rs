@@ -30,12 +30,14 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use ivit::backend::{
-    AttnBatchRequest, AttnBatchResponse, AttnRequest, BackendConfig, BackendRegistry, JobState,
-    PlanOptions,
+    AttnBatchRequest, AttnBatchResponse, AttnRequest, Backend, BackendConfig, BackendRegistry,
+    BitProfile, JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend,
 };
 use ivit::bench::{BenchRecord, TableWriter};
+use ivit::block::EncoderBlock;
 use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
+use ivit::sim::EnergyModel;
 use ivit::util::XorShift;
 
 fn smoke() -> bool {
@@ -128,6 +130,7 @@ fn batch_vs_per_row() -> anyhow::Result<()> {
         BenchRecord::new("throughput.batch_vs_per_row")
             .str_field("dispatch", dispatch)
             .str_field("backend", backend)
+            .str_field("profile", &cfg.profile.key())
             .num("rows", rows as f64)
             .num("rows_per_s", rows as f64 / wall)
             .num("ratio_vs_per_row", per_row_wall / wall)
@@ -228,6 +231,7 @@ fn pipelined_vs_drain() -> anyhow::Result<()> {
         ]);
         BenchRecord::new("throughput.pipelined_vs_drain")
             .str_field("dispatch", name)
+            .str_field("profile", &cfg.profile.key())
             .num("batches", n_batches as f64)
             .num("rows_per_s", total_rows / wall)
             .num("ratio_vs_drain", drain_wall / wall)
@@ -245,6 +249,65 @@ fn pipelined_vs_drain() -> anyhow::Result<()> {
         "REGRESSION: pipelined sim-mt dispatch is only {ratio:.2}x drain-per-batch (target > 1x)"
     );
     println!();
+    Ok(())
+}
+
+/// The mixed-precision comparison point: one encoder block at
+/// `uniform:4` vs the `attn:4,mlp:8` mixed profile, block-scope batches
+/// through the sim plan. Emits one `throughput.uniform_vs_mixed` record
+/// per profile (rows/s, MAC and modelled-energy totals) so the
+/// `IVIT_BENCH_JSON` trajectory distinguishes precision configs, and
+/// asserts ref ≡ sim bit-identity on the mixed arm (the numerics gate —
+/// timing is incidental here).
+fn uniform_vs_mixed() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows) =
+        if smoke() { (16usize, 32usize, 2usize, 8usize, 2usize) } else { (64, 256, 2, 32, 8) };
+    println!("uniform vs mixed precision (block scope, D={dim} H={hidden}, batch {rows}):\n");
+    let energy = EnergyModel::default();
+    let mut tbl = TableWriter::new(&["profile", "rows/s", "# MAC (M)", "energy (µJ)"]);
+    for spec in ["uniform:4", "attn:4,mlp:8"] {
+        let profile = BitProfile::parse(spec)?;
+        let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 41)?;
+        let reqs: Vec<AttnRequest> = (0..rows as u64)
+            .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 900 + i)?)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let req = AttnBatchRequest::new(reqs);
+        let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+        let mut sim_plan = SimBackend::for_block(block.clone()).plan(&opts)?;
+        let t0 = Instant::now();
+        let got = sim_plan.run_batch(&req)?;
+        let wall = t0.elapsed().as_secs_f64();
+        // numerics gate: the sim output must match the quant reference
+        // row for row (mixed profiles included)
+        let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts)?;
+        let want = ref_plan.run_batch(&req)?;
+        for (i, (g, w)) in got.items.iter().zip(&want.items).enumerate() {
+            anyhow::ensure!(
+                g.out_codes.as_ref().unwrap().codes.data
+                    == w.out_codes.as_ref().unwrap().codes.data,
+                "{spec} row {i}: sim vs ref output codes differ"
+            );
+        }
+        let report = got.report.as_ref().expect("sim surfaces stats");
+        let (macs, uj) =
+            (report.total_macs() as f64 / 1e6, report.workload_energy_uj(&energy));
+        tbl.row(vec![
+            spec.to_string(),
+            format!("{:.1}", rows as f64 / wall),
+            format!("{macs:.1}"),
+            format!("{uj:.2}"),
+        ]);
+        BenchRecord::new("throughput.uniform_vs_mixed")
+            .str_field("profile", &profile.key())
+            .num("rows", rows as f64)
+            .num("rows_per_s", rows as f64 / wall)
+            .num("macs_m", macs)
+            .num("energy_uj", uj)
+            .emit();
+        println!("  {spec}: per-width split — {}", report.render_width_split(&energy));
+    }
+    print!("{}", tbl.render());
+    println!("\nuniform-vs-mixed: sim ≡ ref verified bit-identical on both arms ✓\n");
     Ok(())
 }
 
@@ -294,6 +357,7 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
         let s = coord.shutdown();
         BenchRecord::new("throughput.attention_serving")
             .str_field("backend", name)
+            .str_field("profile", &cfg.profile.key())
             .num("tokens", tokens as f64)
             .num("batch", batch as f64)
             .num("req_per_s", n_requests as f64 / wall)
@@ -318,6 +382,7 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     batch_vs_per_row()?;
     pipelined_vs_drain()?;
+    uniform_vs_mixed()?;
     backend_attention_throughput()?;
     if smoke() {
         println!("bench smoke: one tiny batch per backend completed OK");

@@ -10,7 +10,9 @@
 //! ```
 
 use anyhow::Result;
-use ivit::backend::{AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, PlanOptions};
+use ivit::backend::{
+    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, BitProfile, PlanOptions,
+};
 use ivit::sim::EnergyModel;
 
 fn main() -> Result<()> {
@@ -31,11 +33,11 @@ fn main() -> Result<()> {
             .collect::<Result<Vec<_>>>()?,
     );
     println!(
-        "module: D_in={} D_out={} heads={} {}-bit — batch: {rows} × ({tokens}×{} codes)\n",
+        "module: D_in={} D_out={} heads={} bits[{}] — batch: {rows} × ({tokens}×{} codes)\n",
         module.d_in(),
         module.d_out(),
         module.heads,
-        module.bits,
+        module.profile.key(),
         module.d_in(),
     );
 
@@ -106,7 +108,7 @@ fn main() -> Result<()> {
     use ivit::backend::{Backend, PlanScope, ReferenceBackend, SimBackend};
     use ivit::block::EncoderBlock;
     println!("\nencoder-block scope (MLP + residual path included):");
-    let block = EncoderBlock::synthetic(64, 256, 2, 3, 5)?;
+    let block = EncoderBlock::synthetic(64, 256, 2, BitProfile::uniform(3), 5)?;
     let bx = AttnRequest::new(block.random_input(16, 3)?);
     let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
     let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts)?;

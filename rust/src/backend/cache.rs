@@ -11,13 +11,17 @@
 //!
 //! ### Key semantics (and their limit)
 //!
-//! The key is textual: `name | describe() | workers | row-shard |
-//! scope`. Backend `describe()` strings carry the module geometry, bit
-//! width and (for block backends) the block label, so distinct
-//! configurations and distinct stacked blocks get distinct entries.
-//! Two backends with the *same* description but different weights would
-//! collide — callers juggling same-shaped, differently-weighted modules
-//! in one process must label them (see
+//! The key is textual: `name | describe() | <full serialized
+//! PlanOptions>` — the options half is [`PlanOptions::key`], the
+//! canonical JSON rendering of *every* options field (workers,
+//! row-shard threshold, scope, and the complete per-site bit profile),
+//! never a hand-picked subset, so two configurations differing only in
+//! precision can never alias. Backend `describe()` strings carry the
+//! module geometry, bit profile and (for block backends) the block
+//! label, so distinct configurations and distinct stacked blocks get
+//! distinct entries. Two backends with the *same* description but
+//! different weights would collide — callers juggling same-shaped,
+//! differently-weighted modules in one process must label them (see
 //! [`crate::block::EncoderBlock::label`]) or use separate caches.
 //!
 //! A process-wide instance is available through [`PlanCache::global`]
@@ -64,21 +68,21 @@ pub struct PlanCache {
 }
 
 /// The JSON-serializable recipe for rebuilding one cached plan after a
-/// coordinator restart: the registry name, the [`PlanOptions`], and the
-/// scalar config the [`BackendRegistry`] factory consumes. Synthetic
-/// modules/blocks are deterministic functions of `(geometry, seed)` and
-/// attn_case replays are deterministic functions of the artifacts dir,
-/// so a rebuilt plan is bit-identical to the one that was persisted.
+/// coordinator restart: the registry name, the **full** [`PlanOptions`]
+/// (bit profile included), and the scalar config the
+/// [`BackendRegistry`] factory consumes. Synthetic modules/blocks are
+/// deterministic functions of `(geometry, profile, seed)` and attn_case
+/// replays are deterministic functions of the artifacts dir, so a
+/// rebuilt plan is bit-identical to the one that was persisted — and
+/// because the profile rides inside the options, two persisted entries
+/// differing only in precision can never alias.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanSeed {
     /// Registry name, e.g. `"sim-mt"`.
     pub backend: String,
-    /// [`PlanOptions::workers`] (also seeds [`BackendConfig::workers`]).
-    pub workers: usize,
-    /// [`PlanOptions::row_shard_threshold`].
-    pub row_shard_threshold: usize,
-    /// [`PlanOptions::scope`].
-    pub scope: PlanScope,
+    /// The complete plan options — workers, row-shard threshold, scope
+    /// and the per-site [`crate::quant::BitProfile`].
+    pub options: PlanOptions,
     /// Module / block model dimension (blocks are D→D square).
     pub d_in: usize,
     /// Attention head dim (attention scope).
@@ -86,7 +90,6 @@ pub struct PlanSeed {
     pub heads: usize,
     /// MLP hidden width (block scope only; ignored at attention scope).
     pub hidden: usize,
-    pub bits: u32,
     /// Eq. 4 shift exponential (attention scope; synthetic blocks always
     /// use it).
     pub shift: bool,
@@ -100,11 +103,7 @@ pub struct PlanSeed {
 impl PlanSeed {
     /// The plan options this seed rebuilds with.
     pub fn options(&self) -> PlanOptions {
-        PlanOptions {
-            workers: self.workers,
-            row_shard_threshold: self.row_shard_threshold,
-            scope: self.scope,
-        }
+        self.options.clone()
     }
 
     /// The backend config this seed rebuilds with. Block-scope seeds
@@ -112,13 +111,13 @@ impl PlanSeed {
     /// seeds resolve through the usual module path (attn_case when the
     /// artifacts dir holds one, else the synthetic geometry).
     pub fn to_config(&self) -> Result<BackendConfig> {
-        let block = match self.scope {
+        let block = match self.options.scope {
             PlanScope::Attention => None,
             PlanScope::Block => Some(EncoderBlock::synthetic(
                 self.d_in,
                 self.hidden,
                 self.heads,
-                self.bits,
+                self.options.profile,
                 self.seed,
             )?),
         };
@@ -129,33 +128,22 @@ impl PlanSeed {
             d_in: self.d_in,
             d_head: self.d_head,
             heads: self.heads,
-            bits: self.bits,
+            profile: self.options.profile,
             shift: self.shift,
             seed: self.seed,
-            workers: self.workers,
+            workers: self.options.workers,
         })
     }
 
     fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert("backend".into(), Json::Str(self.backend.clone()));
-        obj.insert("workers".into(), Json::Num(self.workers as f64));
-        obj.insert("row_shard_threshold".into(), Json::Num(self.row_shard_threshold as f64));
-        obj.insert(
-            "scope".into(),
-            Json::Str(
-                match self.scope {
-                    PlanScope::Attention => "attention",
-                    PlanScope::Block => "block",
-                }
-                .into(),
-            ),
-        );
+        // the FULL serialized options — not hand-picked fields
+        obj.insert("options".into(), self.options.to_json());
         obj.insert("d_in".into(), Json::Num(self.d_in as f64));
         obj.insert("d_head".into(), Json::Num(self.d_head as f64));
         obj.insert("heads".into(), Json::Num(self.heads as f64));
         obj.insert("hidden".into(), Json::Num(self.hidden as f64));
-        obj.insert("bits".into(), Json::Num(self.bits as f64));
         obj.insert("shift".into(), Json::Bool(self.shift));
         // u64 seeds don't survive the f64 JSON number path above 2^53,
         // and a rounded seed would silently regenerate different
@@ -183,21 +171,15 @@ impl PlanSeed {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("plan seed: missing numeric field '{k}'"))
         };
-        let scope = match str_field("scope")?.as_str() {
-            "attention" => PlanScope::Attention,
-            "block" => PlanScope::Block,
-            other => return Err(anyhow!("plan seed: unknown scope '{other}'")),
-        };
         Ok(PlanSeed {
             backend: str_field("backend")?,
-            workers: num("workers")? as usize,
-            row_shard_threshold: num("row_shard_threshold")? as usize,
-            scope,
+            options: PlanOptions::from_json(
+                j.get("options").ok_or_else(|| anyhow!("plan seed: missing 'options'"))?,
+            )?,
             d_in: num("d_in")? as usize,
             d_head: num("d_head")? as usize,
             heads: num("heads")? as usize,
             hidden: num("hidden")? as usize,
-            bits: num("bits")? as u32,
             shift: matches!(j.get("shift"), Some(Json::Bool(true))),
             seed: str_field("seed")?
                 .parse::<u64>()
@@ -210,21 +192,24 @@ impl PlanSeed {
 /// File name of the persisted index inside a cache dir.
 pub const PLAN_CACHE_FILE: &str = "plan_cache.json";
 
+/// Sidecar schema version. v2 embeds the full [`PlanOptions`] — bit
+/// profile included — per entry; v1 sidecars (pre-profile) are rejected
+/// loudly rather than silently rebuilt at a guessed precision.
+pub const PLAN_CACHE_VERSION: f64 = 2.0;
+
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
     }
 
-    /// The cache key for planning `backend` with `opts`.
+    /// The cache key for planning `backend` with `opts`: backend name,
+    /// backend description, and the **full serialized** [`PlanOptions`]
+    /// ([`PlanOptions::key`]) — every options field, bit profile
+    /// included, keys plans apart. Hand-picked fields are exactly the
+    /// bug this replaces: an option added later (like the profile)
+    /// could silently alias two different plans.
     pub fn key(backend: &dyn Backend, opts: &PlanOptions) -> String {
-        format!(
-            "{}|{}|workers={}|rowshard={}|scope={:?}",
-            backend.name(),
-            backend.describe(),
-            opts.workers,
-            opts.row_shard_threshold,
-            opts.scope,
-        )
+        format!("{}|{}|{}", backend.name(), backend.describe(), opts.key())
     }
 
     /// Return the resident plan for `(backend, opts)`, planning it on
@@ -327,7 +312,7 @@ impl PlanCache {
             })
             .collect();
         let mut root = BTreeMap::new();
-        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("version".to_string(), Json::Num(PLAN_CACHE_VERSION));
         root.insert("entries".to_string(), Json::Arr(entries));
         let path = dir.join(PLAN_CACHE_FILE);
         std::fs::write(&path, format!("{}\n", Json::Obj(root)))
@@ -367,7 +352,11 @@ impl PlanCache {
         };
         let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
         let version = root.get("version").and_then(Json::as_f64).unwrap_or(0.0);
-        ensure!(version == 1.0, "{path:?}: unsupported plan-cache version {version}");
+        ensure!(
+            version == PLAN_CACHE_VERSION,
+            "{path:?}: unsupported plan-cache version {version} (this build writes \
+             {PLAN_CACHE_VERSION}; delete the sidecar to start cold)"
+        );
         let entries = root
             .get("entries")
             .and_then(Json::as_arr)
@@ -437,6 +426,7 @@ impl PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::BitProfile;
     use crate::backend::{
         AttnBatchRequest, AttnModule, AttnRequest, PlanScope, ReferenceBackend, SimBackend,
     };
@@ -444,7 +434,7 @@ mod tests {
 
     #[test]
     fn cache_hit_returns_the_resident_plan_and_outputs_stay_bit_identical() {
-        let module = AttnModule::synthetic(12, 6, 2, 3, 5).unwrap();
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 5).unwrap();
         let backend = ReferenceBackend::new(module.clone());
         let mut cache = PlanCache::new();
         let opts = PlanOptions::default();
@@ -464,7 +454,7 @@ mod tests {
 
     #[test]
     fn distinct_options_and_backends_get_distinct_entries() {
-        let module = AttnModule::synthetic(12, 6, 2, 3, 5).unwrap();
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 5).unwrap();
         let r = ReferenceBackend::new(module.clone());
         let s = SimBackend::new(module);
         let mut cache = PlanCache::new();
@@ -490,14 +480,14 @@ mod tests {
     fn block_seed() -> PlanSeed {
         PlanSeed {
             backend: "sim".into(),
-            workers: 0,
-            row_shard_threshold: 2,
-            scope: PlanScope::Block,
+            options: PlanOptions {
+                scope: PlanScope::Block,
+                ..PlanOptions::default()
+            },
             d_in: 12,
             d_head: 6,
             heads: 2,
             hidden: 24,
-            bits: 3,
             shift: true,
             seed: 19,
             artifacts: None,
@@ -511,9 +501,13 @@ mod tests {
         let text = format!("{j}");
         let back = PlanSeed::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, seed);
-        // attention-scope seed with artifacts path survives too
+        // attention-scope seed with artifacts path and a mixed profile
+        // survives too
         let attn = PlanSeed {
-            scope: PlanScope::Attention,
+            options: PlanOptions {
+                profile: BitProfile::parse("attn:4,mlp:8").unwrap(),
+                ..PlanOptions::default()
+            },
             artifacts: Some("some/dir".into()),
             shift: false,
             ..seed
@@ -524,13 +518,61 @@ mod tests {
     }
 
     #[test]
+    fn profile_only_differences_never_collide() {
+        // the keying regression the refactor pins: options that differ
+        // ONLY in bit profile must produce different cache entries, on
+        // both the textual key and the live cache
+        let u4 = BitProfile::uniform(4);
+        let mixed = BitProfile::parse("attn:4,mlp:8").unwrap();
+        let ba = ReferenceBackend::for_block(
+            EncoderBlock::synthetic(12, 24, 2, u4, 7).unwrap(),
+        );
+        let bb = ReferenceBackend::for_block(
+            EncoderBlock::synthetic(12, 24, 2, mixed, 7).unwrap(),
+        );
+        let oa = PlanOptions { scope: PlanScope::Block, profile: u4, ..PlanOptions::default() };
+        let ob = PlanOptions { scope: PlanScope::Block, profile: mixed, ..PlanOptions::default() };
+        assert_ne!(PlanCache::key(&ba, &oa), PlanCache::key(&bb, &ob));
+        // even with an identical describe() the serialized options keep
+        // the entries apart — same backend, two profiles in the options
+        assert_ne!(PlanCache::key(&ba, &oa), PlanCache::key(&ba, &ob));
+        let mut cache = PlanCache::new();
+        cache.get_or_plan(&ba, &oa).unwrap();
+        assert!(cache.get_or_plan(&ba, &ob).is_err(), "profile mismatch is loud, not a hit");
+        assert_eq!(cache.len(), 1);
+        cache.get_or_plan(&bb, &ob).unwrap();
+        assert_eq!((cache.misses(), cache.hits(), cache.len()), (3, 0, 2));
+    }
+
+    #[test]
+    fn corrupt_profile_entries_are_rejected_loudly() {
+        let registry = BackendRegistry::with_defaults();
+        let dir = temp_cache_dir("corrupt_profile");
+        let mut cache = PlanCache::new();
+        cache.get_or_plan_seeded(&registry, &block_seed()).unwrap();
+        let sidecar = cache.persist(&dir).unwrap();
+        // sabotage one profile site inside the persisted options
+        let text = std::fs::read_to_string(&sidecar).unwrap();
+        assert!(text.contains("\"gelu_in\""), "sidecar carries the full profile: {text}");
+        std::fs::write(&sidecar, text.replace("\"gelu_in\":3", "\"gelu_in\":99")).unwrap();
+        let err = PlanCache::warm_start(&dir, &registry).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gelu_in") || msg.contains("bit width"), "{msg}");
+        // ... and a dropped profile site is equally loud
+        let text = std::fs::read_to_string(&sidecar).unwrap();
+        std::fs::write(&sidecar, text.replace("\"gelu_in\":99,", "")).unwrap();
+        assert!(PlanCache::warm_start(&dir, &registry).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn persisted_cache_warm_starts_with_bit_identical_outputs() {
         let registry = BackendRegistry::with_defaults();
         let seed = block_seed();
         let dir = temp_cache_dir("warm");
 
         // cold process: plan through the seeded path, run a batch, persist
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 19).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 19).unwrap();
         let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(4, 3).unwrap()));
         let mut cold_cache = PlanCache::new();
         let cold = cold_cache
@@ -622,8 +664,8 @@ mod tests {
 
     #[test]
     fn stacked_blocks_key_apart_by_label() {
-        let mut a = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
-        let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 8).unwrap();
+        let mut a = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 7).unwrap();
+        let mut b = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 8).unwrap();
         a.label = "block0".into();
         b.label = "block1".into();
         let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
@@ -631,7 +673,7 @@ mod tests {
         let kb = PlanCache::key(&ReferenceBackend::for_block(b), &opts);
         assert_ne!(ka, kb, "same-geometry blocks must not collide: {ka}");
         // and scope is part of the key too
-        let a2 = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
+        let a2 = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 7).unwrap();
         let k_attn =
             PlanCache::key(&ReferenceBackend::for_block(a2), &PlanOptions::default());
         assert_ne!(ka, k_attn);

@@ -73,7 +73,23 @@
 //!
 //! Re-planning the same backend repeatedly (serve/simulate loops in one
 //! process) can route through [`PlanCache`], which memoizes plans by
-//! backend name + description + [`PlanOptions`] key.
+//! backend name + description + the **fully serialized** [`PlanOptions`].
+//!
+//! ## Per-module mixed precision ([`BitProfile`])
+//!
+//! Precision is not a scalar: every module carries a
+//! [`crate::quant::BitProfile`] naming the width of each quantization
+//! site (Q/K/V/O projections, the QKᵀ operands, the softmax·V operands,
+//! FC1/FC2, the GELU-LUT boundary, the residual path).
+//! [`PlanOptions::profile`] states the precision a plan must execute
+//! at; integer backends validate it against their module/block at plan
+//! time and the `pjrt` backend rejects non-uniform profiles (its AOT
+//! artifact is lowered at one width). `BitProfile::uniform(b)` is the
+//! legacy single-knob configuration and is pinned bit-identical to the
+//! pre-profile stack; genuinely mixed profiles (e.g. `attn:4,mlp:8`)
+//! run on `ref`/`sim`/`sim-mt` with ref ≡ sim parity and per-bit-width
+//! energy/MAC splits in the merged report
+//! ([`crate::sim::AttentionReport::macs_by_width`]).
 //!
 //! ## The typed-operand contract (`QTensor` / `ScaleChain`)
 //!
@@ -106,6 +122,7 @@ pub mod registry;
 pub mod sim;
 pub mod sim_mt;
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
@@ -117,8 +134,9 @@ use crate::sim::attention::{AttentionSim, AttentionSteps};
 use crate::sim::layernorm::LayerNormSim;
 use crate::sim::linear::LinearArraySim;
 use crate::sim::AttentionReport;
-use crate::util::XorShift;
+use crate::util::{Json, XorShift};
 
+pub use crate::quant::profile::BitProfile;
 pub use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 pub use cache::{PlanCache, PlanSeed};
 pub use job::{JobId, JobState, SyncJobs};
@@ -195,8 +213,35 @@ pub enum PlanScope {
     Block,
 }
 
+impl PlanScope {
+    /// Stable serialized name (`plan_cache.json`, options keys).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanScope::Attention => "attention",
+            PlanScope::Block => "block",
+        }
+    }
+
+    /// Parse a serialized scope name.
+    pub fn parse(s: &str) -> Result<PlanScope> {
+        match s {
+            "attention" => Ok(PlanScope::Attention),
+            "block" => Ok(PlanScope::Block),
+            other => Err(anyhow!("unknown plan scope '{other}'")),
+        }
+    }
+}
+
 /// One-time execution-setup knobs consumed by [`Backend::plan`].
-#[derive(Debug, Clone)]
+///
+/// Precision is a first-class option: [`Self::profile`] names the
+/// per-site [`BitProfile`] the plan must execute at. Backends validate
+/// it against the module/block they were built from (a mismatch is a
+/// loud planning error, never a silent re-quantization), and the
+/// serialized form of the *whole* options struct — profile included —
+/// is what [`PlanCache`] keys plans by, so two deployments differing
+/// only in precision can never alias.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlanOptions {
     /// Worker threads for sharded plans (`sim-mt`). `0` = the backend's
     /// own default (its configured count, else available parallelism).
@@ -207,12 +252,85 @@ pub struct PlanOptions {
     /// What each request row executes: attention only, or the whole
     /// encoder block.
     pub scope: PlanScope,
+    /// The per-site precision the plan executes at.
+    pub profile: BitProfile,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { workers: 0, row_shard_threshold: 2, scope: PlanScope::Attention }
+        PlanOptions {
+            workers: 0,
+            row_shard_threshold: 2,
+            scope: PlanScope::Attention,
+            profile: BitProfile::uniform(3),
+        }
     }
+}
+
+impl PlanOptions {
+    /// Default options at a given precision profile.
+    pub fn for_profile(profile: BitProfile) -> PlanOptions {
+        PlanOptions { profile, ..PlanOptions::default() }
+    }
+
+    /// The full serialized form — every field, nothing hand-picked.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("workers".to_string(), Json::Num(self.workers as f64));
+        obj.insert(
+            "row_shard_threshold".to_string(),
+            Json::Num(self.row_shard_threshold as f64),
+        );
+        obj.insert("scope".to_string(), Json::Str(self.scope.as_str().to_string()));
+        obj.insert("profile".to_string(), self.profile.to_json());
+        Json::Obj(obj)
+    }
+
+    /// Parse the serialized form; missing or corrupt fields (including
+    /// a truncated profile) are loud errors.
+    pub fn from_json(j: &Json) -> Result<PlanOptions> {
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("plan options: missing numeric field '{k}'"))
+        };
+        Ok(PlanOptions {
+            workers: num("workers")? as usize,
+            row_shard_threshold: num("row_shard_threshold")? as usize,
+            scope: PlanScope::parse(
+                j.get("scope")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("plan options: missing 'scope'"))?,
+            )?,
+            profile: BitProfile::from_json(
+                j.get("profile").ok_or_else(|| anyhow!("plan options: missing 'profile'"))?,
+            )?,
+        })
+    }
+
+    /// Canonical cache-key fragment: the deterministic rendering of the
+    /// FULL serialized options (BTreeMap ordering), so every field —
+    /// profile included — keys plans apart.
+    pub fn key(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Validate that the profile a caller planned with matches the profile
+/// the backend's module/block actually carries.
+pub(crate) fn ensure_plan_profile(
+    requested: &BitProfile,
+    actual: &BitProfile,
+    what: &str,
+) -> Result<()> {
+    ensure!(
+        requested == actual,
+        "plan options request bit profile [{}] but the {what} was built at [{}] — \
+         construct the backend and the plan options from the same profile",
+        requested.key(),
+        actual.key()
+    );
+    Ok(())
 }
 
 /// A batch of attention inferences over one planned module.
@@ -325,11 +443,13 @@ pub trait Backend: Send {
     /// return the batch executor.
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>>;
 
-    /// Execute one attention inference. Default adapter: plan, then run
-    /// a batch of one. The built-in backends override this with a
-    /// resident-plan path so repeated single requests stay amortized
-    /// (the adapter re-plans per call, which is correct but pays the
-    /// one-time setup every time).
+    /// Execute one attention inference. Default adapter: plan with
+    /// `PlanOptions::default()` — which carries the default
+    /// `BitProfile::uniform(3)` — then run a batch of one. Backends
+    /// whose module is at any other profile MUST override this (all
+    /// built-ins do, with resident-plan paths that also keep repeated
+    /// single requests amortized); otherwise the adapter's plan-time
+    /// profile validation rejects the mismatch.
     fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
         self.plan(&PlanOptions::default())?.run_one(req)
     }
@@ -337,6 +457,10 @@ pub trait Backend: Send {
 
 /// The integerized attention-module parameters every backend consumes:
 /// folded linears, LayerNorm constants, and the typed quantizer steps.
+/// Precision is carried by the [`BitProfile`]'s attention sites:
+/// `attn_x` (input codes), `q_proj`/`k_proj`/`v_proj`/`o_proj`
+/// (projection weights + their output code streams) and `attn_probs`
+/// (the unsigned softmax codes).
 #[derive(Debug, Clone)]
 pub struct AttnModule {
     pub wq: FoldedLinear,
@@ -355,8 +479,8 @@ pub struct AttnModule {
     /// The module input step Δ̄_X (what the projections were folded with).
     pub s_x: Step,
     pub heads: usize,
-    pub bits: u32,
-    pub attn_bits: u32,
+    /// Per-site precision assignment.
+    pub profile: BitProfile,
     /// Eq. 4 shift exponential (false = exact-exp ablation).
     pub shift: bool,
 }
@@ -374,39 +498,46 @@ impl AttnModule {
 
     /// The quantizer spec input activations must carry.
     pub fn input_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.s_x)
+        QuantSpec::signed(self.profile.attn_x, self.s_x)
     }
 
-    /// Build the systolic simulator for this module.
+    /// Build the systolic simulator for this module. Each projection
+    /// array streams `attn_x`-wide activations over its own site's
+    /// weight width; W_O streams the `o_proj` PV codes.
     pub fn to_sim(&self) -> AttentionSim {
+        let p = &self.profile;
         AttentionSim {
-            wq: LinearArraySim::new("Q linear", self.wq.clone(), self.bits),
-            wk: LinearArraySim::new("K linear", self.wk.clone(), self.bits),
-            wv: LinearArraySim::new("V linear", self.wv.clone(), self.bits),
-            wo: self.wo.as_ref().map(|f| LinearArraySim::new("O linear", f.clone(), self.bits)),
+            wq: LinearArraySim::new_split("Q linear", self.wq.clone(), p.attn_x, p.q_proj),
+            wk: LinearArraySim::new_split("K linear", self.wk.clone(), p.attn_x, p.k_proj),
+            wv: LinearArraySim::new_split("V linear", self.wv.clone(), p.attn_x, p.v_proj),
+            wo: self
+                .wo
+                .as_ref()
+                .map(|f| LinearArraySim::new_split("O linear", f.clone(), p.o_proj, p.o_proj)),
             lnq: LayerNormSim::new(
                 "Q LayerNorm",
                 self.lnq_gamma.clone(),
                 self.lnq_beta.clone(),
                 self.steps.s_q.get(),
-                self.bits,
+                p.q_proj,
             ),
             lnk: LayerNormSim::new(
                 "K LayerNorm",
                 self.lnk_gamma.clone(),
                 self.lnk_beta.clone(),
                 self.steps.s_k.get(),
-                self.bits,
+                p.k_proj,
             ),
             steps: self.steps.clone(),
             heads: self.heads,
-            bits: self.bits,
-            attn_bits: self.attn_bits,
+            profile: self.profile,
             shift: self.shift,
         }
     }
 
-    /// Load the module from an exported cross-language attention case.
+    /// Load the module from an exported cross-language attention case
+    /// (uniform per-site widths, with the exported probability width on
+    /// the `attn_probs` site).
     pub fn from_case(case: &AttnCase, shift: bool) -> Result<AttnModule> {
         let fold = |l: &crate::model::attn_case::CaseLinear| FoldedLinear {
             codes: l.codes.clone(),
@@ -414,6 +545,8 @@ impl AttnModule {
             w_scale: l.w_scale.clone(),
             out_scale: l.out_scale.clone(),
         };
+        let mut profile = BitProfile::uniform_checked(case.bits)?;
+        profile.set_site("attn_probs", case.attn_bits)?;
         Ok(AttnModule {
             wq: fold(&case.wq),
             wk: fold(&case.wk),
@@ -434,16 +567,17 @@ impl AttnModule {
             },
             s_x: Step::new(case.sx)?,
             heads: case.heads,
-            bits: case.bits,
-            attn_bits: case.attn_bits,
+            profile,
             shift,
         })
     }
 
     /// Deterministic single-head module at the paper's Table I geometry
     /// parameters (uniform steps, identity LayerNorm) — what
-    /// [`AttentionSim::paper_geometry`] instantiates.
+    /// [`AttentionSim::paper_geometry`] instantiates. Table I is a
+    /// uniform-precision artifact, so this takes plain `bits`.
     pub fn paper_shape(d_in: usize, d_head: usize, bits: u32) -> Result<AttnModule> {
+        let profile = BitProfile::uniform_checked(bits)?;
         let mut rng = XorShift::new(1);
         let mut mk = |_name: &str| -> Result<FoldedLinear> {
             let w: Vec<f32> = rng.normal_vec(d_head * d_in).iter().map(|v| v * 0.1).collect();
@@ -468,31 +602,38 @@ impl AttnModule {
                 s_q,
                 s_k,
                 s_v: Step::new(0.1)?,
-                s_attn: Step::new(1.0 / ((1u32 << bits) - 1) as f32)?,
+                s_attn: Step::new(1.0 / ((1u32 << profile.attn_probs) - 1) as f32)?,
                 s_o: Step::new(0.1)?,
                 score: ScaleChain::scores(s_q, s_k, d_head),
             },
             s_x: Step::new(0.1)?,
             heads: 1,
-            bits,
-            attn_bits: bits,
+            profile,
             shift: true,
         })
     }
 
     /// Randomised multi-head module for parity / stress testing: varied
-    /// weights, biases, per-channel steps and LayerNorm affines.
-    pub fn synthetic(d_in: usize, d_out: usize, heads: usize, bits: u32, seed: u64) -> Result<AttnModule> {
+    /// weights, biases, per-channel steps and LayerNorm affines. Each
+    /// projection folds its weights at its own profile site.
+    pub fn synthetic(
+        d_in: usize,
+        d_out: usize,
+        heads: usize,
+        profile: BitProfile,
+        seed: u64,
+    ) -> Result<AttnModule> {
         ensure!(heads > 0 && d_out % heads == 0, "d_out {d_out} must divide into {heads} heads");
+        profile.validate()?;
         let mut rng = XorShift::new(seed);
         let step_x = 0.12f32;
-        let mut mk = |_name: &str| -> Result<FoldedLinear> {
+        let mut mk = |bits: u32| -> Result<FoldedLinear> {
             let w: Vec<f32> = rng.normal_vec(d_out * d_in).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
             let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
             FoldedLinear::fold(&w, d_out, d_in, &bias, &QuantParams { bits, step_x, step_w })
         };
-        let (wq, wk, wv) = (mk("q")?, mk("k")?, mk("v")?);
+        let (wq, wk, wv) = (mk(profile.q_proj)?, mk(profile.k_proj)?, mk(profile.v_proj)?);
         let gamma: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
         let beta: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.2).collect();
         let s_q = Step::new(0.5)?;
@@ -504,7 +645,13 @@ impl AttnModule {
             let w: Vec<f32> = rng.normal_vec(d_out * d_out).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
             let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
-            FoldedLinear::fold(&w, d_out, d_out, &bias, &QuantParams { bits, step_x: s_o, step_w })?
+            FoldedLinear::fold(
+                &w,
+                d_out,
+                d_out,
+                &bias,
+                &QuantParams { bits: profile.o_proj, step_x: s_o, step_w },
+            )?
         };
         Ok(AttnModule {
             wq,
@@ -519,14 +666,13 @@ impl AttnModule {
                 s_q,
                 s_k,
                 s_v: Step::new(0.1)?,
-                s_attn: Step::new(1.0 / ((1u32 << bits) - 1) as f32)?,
+                s_attn: Step::new(1.0 / ((1u32 << profile.attn_probs) - 1) as f32)?,
                 s_o: Step::new(s_o)?,
                 score: ScaleChain::scores(s_q, s_k, d_out / heads),
             },
             s_x: Step::new(step_x)?,
             heads,
-            bits,
-            attn_bits: bits,
+            profile,
             shift: true,
         })
     }
@@ -549,21 +695,65 @@ mod tests {
 
     #[test]
     fn module_shapes_and_spec() {
-        let m = AttnModule::synthetic(16, 8, 2, 3, 9).unwrap();
+        let m = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 9).unwrap();
         assert_eq!(m.d_in(), 16);
         assert_eq!(m.d_out(), 8);
         assert_eq!(m.input_spec().bits, 3);
         assert!(m.input_spec().signed);
         let x = m.random_input(5, 1).unwrap();
         assert_eq!((x.rows(), x.cols()), (5, 16));
-        assert!(AttnModule::synthetic(16, 9, 2, 3, 9).is_err());
+        assert!(AttnModule::synthetic(16, 9, 2, BitProfile::uniform(3), 9).is_err());
     }
 
     #[test]
     fn to_sim_runs() {
-        let m = AttnModule::synthetic(12, 6, 1, 3, 11).unwrap();
+        let m = AttnModule::synthetic(12, 6, 1, BitProfile::uniform(3), 11).unwrap();
         let x = m.random_input(4, 2).unwrap();
         let out = m.to_sim().run(&x).unwrap();
         assert_eq!((out.pv_codes.rows(), out.pv_codes.cols()), (4, 6));
+    }
+
+    #[test]
+    fn plan_options_serde_round_trips_and_keys_profiles_apart() {
+        let mixed = PlanOptions {
+            workers: 4,
+            row_shard_threshold: 3,
+            scope: PlanScope::Block,
+            profile: BitProfile::parse("attn:4,mlp:8").unwrap(),
+        };
+        for opts in [PlanOptions::default(), mixed.clone()] {
+            let text = format!("{}", opts.to_json());
+            let back = PlanOptions::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, opts, "round trip through {text}");
+        }
+        // the serialized key separates options differing ONLY in profile
+        let a = PlanOptions::for_profile(BitProfile::uniform(4));
+        let b = PlanOptions::for_profile(BitProfile::parse("attn:4,mlp:8").unwrap());
+        assert_ne!(a.key(), b.key());
+        // a corrupt profile inside serialized options is a loud error
+        let mut obj = match mixed.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.insert("profile".into(), Json::Str("not a profile".into()));
+        assert!(PlanOptions::from_json(&Json::Obj(obj)).is_err());
+    }
+
+    #[test]
+    fn mixed_profile_module_folds_per_site() {
+        let profile = BitProfile::parse("attn_x:8,q_proj:2,k_proj:3,v_proj:4,o_proj:8,attn_probs:4")
+            .unwrap();
+        let m = AttnModule::synthetic(12, 6, 2, profile, 13).unwrap();
+        assert_eq!(m.input_spec().bits, 8);
+        // each projection's weight codes live in its own site range
+        let max_code = |f: &FoldedLinear| f.codes.data.iter().map(|c| c.abs()).max().unwrap();
+        assert!(max_code(&m.wq) <= 2, "2-bit Q weights");
+        assert!(max_code(&m.wk) <= 4, "3-bit K weights");
+        assert!(max_code(&m.wv) <= 8, "4-bit V weights");
+        // and the sim runs end to end at the mixed widths
+        let x = m.random_input(4, 2).unwrap();
+        let out = m.to_sim().run(&x).unwrap();
+        assert_eq!(out.pv_codes.spec.bits, 8);
+        assert_eq!(out.attn_codes[0].spec.bits, 4);
     }
 }

@@ -26,6 +26,11 @@ pub struct PjrtBackend {
     exe_name: String,
     artifacts: PathBuf,
     bits: u32,
+    /// Attention-probability width the exported case declares
+    /// (`attn_bits` in `attn_case/scalars.json`), when present — the
+    /// one site of a plan profile allowed to differ from `bits`, and
+    /// validated rather than trusted.
+    case_attn_bits: Option<u32>,
     /// Input shape the artifact was lowered with ([tokens, dim]).
     input_shape: Vec<usize>,
     /// The quantizer spec the artifact's input codes were produced with
@@ -53,12 +58,13 @@ impl PjrtBackend {
             .map(|s| s.shape.clone())
             .ok_or_else(|| anyhow!("{exe_name}: spec has no inputs"))?;
         ensure!(input_shape.len() == 2, "{exe_name}: expected [tokens, dim] input, got {input_shape:?}");
-        let expected_spec = read_case_input_spec(artifacts)?;
+        let (expected_spec, case_attn_bits) = read_case_scalars(artifacts)?;
         Ok(PjrtBackend {
             engine,
             exe_name,
             artifacts: artifacts.to_path_buf(),
             bits,
+            case_attn_bits,
             input_shape,
             expected_spec,
         })
@@ -107,19 +113,21 @@ impl ExecutionPlan for PjrtPlan {
     }
 }
 
-/// Read the exported Δ̄_X / bits from `attn_case/scalars.json` (cheap —
-/// no tensor payloads), if the case was exported alongside the HLO.
-fn read_case_input_spec(artifacts: &Path) -> Result<Option<QuantSpec>> {
+/// Read the exported Δ̄_X / bits / attn_bits from
+/// `attn_case/scalars.json` (cheap — no tensor payloads), if the case
+/// was exported alongside the HLO.
+fn read_case_scalars(artifacts: &Path) -> Result<(Option<QuantSpec>, Option<u32>)> {
     let path = artifacts.join("attn_case").join("scalars.json");
     let Ok(text) = std::fs::read_to_string(&path) else {
-        return Ok(None);
+        return Ok((None, None));
     };
     let j = Json::parse(&text)?;
+    let attn_bits = j.get("attn_bits").and_then(Json::as_f64).map(|b| b as u32);
     match (j.get("sx").and_then(Json::as_f64), j.get("bits").and_then(Json::as_f64)) {
         (Some(sx), Some(bits)) => {
-            Ok(Some(QuantSpec::signed(bits as u32, Step::new(sx as f32)?)))
+            Ok((Some(QuantSpec::signed(bits as u32, Step::new(sx as f32)?)), attn_bits))
         }
-        _ => Ok(None),
+        _ => Ok((None, attn_bits)),
     }
 }
 
@@ -154,6 +162,27 @@ impl Backend for PjrtBackend {
         ensure!(
             opts.scope == super::PlanScope::Attention,
             "the pjrt backend has no encoder-block artifact — block scope runs on ref/sim/sim-mt"
+        );
+        // The AOT artifact is lowered at ONE width; mixed per-site
+        // profiles only exist on ref/sim/sim-mt. The exported case may
+        // declare its own probability width, so `attn_probs` is the one
+        // site allowed to differ — and it is validated against the
+        // case's `attn_bits`, never silently overridden.
+        let want_attn = self.case_attn_bits.unwrap_or(self.bits);
+        ensure!(
+            opts.profile.attn_probs == want_attn,
+            "plan options request attn_probs:{} but the artifact's exported case runs \
+             {want_attn}-bit attention probabilities",
+            opts.profile.attn_probs
+        );
+        let mut base = opts.profile;
+        base.attn_probs = self.bits;
+        ensure!(
+            base == super::BitProfile::uniform_checked(self.bits)?,
+            "the pjrt backend supports only uniform bit profiles (artifact lowered at {} bits), \
+             got [{}] — run mixed profiles on ref/sim/sim-mt",
+            self.bits,
+            opts.profile.key()
         );
         Ok(Box::new(PjrtPlan {
             inner: PjrtBackend::load(&self.artifacts, self.bits)?,

@@ -20,8 +20,9 @@ use crate::quant::softmax::qk_attention;
 use crate::block::EncoderBlock;
 
 use super::{
-    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, AttnResponse, Backend,
-    Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, StageCodes, SyncJobs,
+    ensure_plan_profile, AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest,
+    AttnResponse, Backend, Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope,
+    StageCodes, SyncJobs,
 };
 
 /// The quant-composition reference execution path.
@@ -117,7 +118,7 @@ pub fn reference_attention(module: &AttnModule, x: &QTensor) -> Result<AttnRespo
     let q_pre = linear_fp(&x.codes, &m.wq, true)?;
     let k_pre = linear_fp(&x.codes, &m.wk, true)?;
     let v_acc = int_matmul(&x.codes, &m.wv.codes)?;
-    let v_spec = QuantSpec::signed(m.bits, steps.s_v);
+    let v_spec = QuantSpec::signed(m.profile.v_proj, steps.s_v);
     let (v_min, v_max) = v_spec.range();
     let mut v_data = vec![0i32; n * d];
     for j in 0..d {
@@ -130,27 +131,36 @@ pub fn reference_attention(module: &AttnModule, x: &QTensor) -> Result<AttnRespo
     }
     let v_codes = QTensor::new(IntMat::new(n, d, v_data), v_spec)?;
 
-    // Quantizing LayerNorms (the Fig. 5 comparator identity).
-    let ln = |x: &[f32], gamma: &[f32], beta: &[f32], step: f32| -> Vec<i32> {
+    // Quantizing LayerNorms (the Fig. 5 comparator identity), each
+    // emitting codes at its own profile site.
+    let ln = |x: &[f32], gamma: &[f32], beta: &[f32], step: f32, bits: u32| -> Vec<i32> {
         let mut out = vec![0i32; n * d];
         for r in 0..n {
-            let c = qlayernorm_comparator(&x[r * d..(r + 1) * d], gamma, beta, step, m.bits, 1e-6);
+            let c = qlayernorm_comparator(&x[r * d..(r + 1) * d], gamma, beta, step, bits, 1e-6);
             out[r * d..(r + 1) * d].copy_from_slice(&c);
         }
         out
     };
     let q_codes = QTensor::new(
-        IntMat::new(n, d, ln(&q_pre, &m.lnq_gamma, &m.lnq_beta, steps.s_q.get())),
-        QuantSpec::signed(m.bits, steps.s_q),
+        IntMat::new(
+            n,
+            d,
+            ln(&q_pre, &m.lnq_gamma, &m.lnq_beta, steps.s_q.get(), m.profile.q_proj),
+        ),
+        QuantSpec::signed(m.profile.q_proj, steps.s_q),
     )?;
     let k_codes = QTensor::new(
-        IntMat::new(n, d, ln(&k_pre, &m.lnk_gamma, &m.lnk_beta, steps.s_k.get())),
-        QuantSpec::signed(m.bits, steps.s_k),
+        IntMat::new(
+            n,
+            d,
+            ln(&k_pre, &m.lnk_gamma, &m.lnk_beta, steps.s_k.get(), m.profile.k_proj),
+        ),
+        QuantSpec::signed(m.profile.k_proj, steps.s_k),
     )?;
 
     // Per-head QKᵀ→softmax→quantize and attn·V requantization.
-    let attn_spec = QuantSpec::unsigned(m.attn_bits, steps.s_attn);
-    let out_spec = QuantSpec::signed(m.bits, steps.s_o);
+    let attn_spec = QuantSpec::unsigned(m.profile.attn_probs, steps.s_attn);
+    let out_spec = QuantSpec::signed(m.profile.o_proj, steps.s_o);
     let (o_min, o_max) = out_spec.range();
     let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
     let mut pv = vec![0i32; n * d];
@@ -164,7 +174,7 @@ pub fn reference_attention(module: &AttnModule, x: &QTensor) -> Result<AttnRespo
             &kh.codes,
             steps.score.eff(),
             steps.s_attn.get(),
-            m.attn_bits,
+            m.profile.attn_probs,
             m.shift,
         )?;
         let acc = int_matmul(&attn, &transpose(&vh.codes))?;
@@ -200,12 +210,11 @@ pub fn reference_attention(module: &AttnModule, x: &QTensor) -> Result<AttnRespo
 
 fn describe_module(m: &AttnModule) -> String {
     format!(
-        "quant golden reference: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {}{})",
+        "quant golden reference: D_in={} D_out={} heads={} bits[{}] ({}{})",
         m.d_in(),
         m.d_out(),
         m.heads,
-        m.bits,
-        m.attn_bits,
+        m.profile.key(),
         if m.shift { "shift-exp" } else { "exact-exp" },
         if m.wo.is_some() { ", W_O wired" } else { "" },
     )
@@ -328,11 +337,15 @@ impl Backend for ReferenceBackend {
 
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
         match opts.scope {
-            PlanScope::Attention => Ok(Box::new(RefPlan::new(self.module.clone()))),
+            PlanScope::Attention => {
+                ensure_plan_profile(&opts.profile, &self.module.profile, "ref attention module")?;
+                Ok(Box::new(RefPlan::new(self.module.clone())))
+            }
             PlanScope::Block => {
                 let block = self.block.clone().ok_or_else(|| {
                     anyhow::anyhow!("ref backend was built without an encoder block (scope=Block)")
                 })?;
+                ensure_plan_profile(&opts.profile, &block.profile, "ref encoder block")?;
                 Ok(Box::new(RefBlockPlan::new(block)))
             }
         }
@@ -349,10 +362,11 @@ impl Backend for ReferenceBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::BitProfile;
 
     #[test]
     fn reference_runs_and_reports_shapes() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 5).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 5).unwrap();
         let x = module.random_input(6, 3).unwrap();
         let mut b = ReferenceBackend::new(module);
         let resp = b.run_attention(&AttnRequest::new(x)).unwrap();
@@ -369,7 +383,7 @@ mod tests {
 
     #[test]
     fn rejects_wrong_input_spec() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 5).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 5).unwrap();
         let mut b = ReferenceBackend::new(module);
         let bad = QTensor::new(
             IntMat::new(2, 16, vec![0; 32]),
@@ -383,7 +397,7 @@ mod tests {
     fn block_scope_plans_run_the_whole_block() {
         use crate::backend::PlanScope;
         use crate::block::EncoderBlock;
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 31).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 31).unwrap();
         let x = block.random_input(4, 1).unwrap();
         let want = block.run_reference(&x).unwrap();
         let backend = ReferenceBackend::for_block(block);
@@ -395,13 +409,15 @@ mod tests {
         // a block backend still plans plain attention
         assert!(backend.plan(&PlanOptions::default()).is_ok());
         // attention-only backends refuse block scope — never a fallback
-        let plain = ReferenceBackend::new(AttnModule::synthetic(12, 6, 2, 3, 1).unwrap());
+        let plain = ReferenceBackend::new(
+            AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 1).unwrap(),
+        );
         assert!(plain.plan(&opts).is_err());
     }
 
     #[test]
     fn batch_of_three_equals_three_single_runs() {
-        let module = AttnModule::synthetic(12, 6, 2, 3, 17).unwrap();
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 17).unwrap();
         let reqs: Vec<AttnRequest> = (0..3)
             .map(|i| AttnRequest::new(module.random_input(4, 10 + i).unwrap()))
             .collect();

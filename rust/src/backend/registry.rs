@@ -11,6 +11,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::block::EncoderBlock;
+use crate::quant::profile::BitProfile;
 
 use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend, SimMtBackend};
 
@@ -37,7 +38,10 @@ pub struct BackendConfig {
     pub d_in: usize,
     pub d_head: usize,
     pub heads: usize,
-    pub bits: u32,
+    /// Per-site precision of the synthetic module/block. The `pjrt`
+    /// factory requires a uniform profile (the artifact is lowered at
+    /// one width); integer backends accept any profile.
+    pub profile: BitProfile,
     /// Eq. 4 shift exponential (false = exact-exp ablation).
     pub shift: bool,
     /// Seed for the synthetic module parameters.
@@ -56,7 +60,7 @@ impl Default for BackendConfig {
             d_in: 384,
             d_head: 64,
             heads: 1,
-            bits: 3,
+            profile: BitProfile::uniform(3),
             shift: true,
             seed: 7,
             workers: 0,
@@ -83,7 +87,7 @@ impl BackendConfig {
             self.d_in,
             self.d_head * self.heads,
             self.heads,
-            self.bits,
+            self.profile,
             self.seed,
         )?;
         m.shift = self.shift;
@@ -133,7 +137,14 @@ impl BackendRegistry {
                 .artifacts
                 .clone()
                 .ok_or_else(|| anyhow!("the pjrt backend needs --artifacts DIR"))?;
-            Ok(Box::new(PjrtBackend::load(&dir, cfg.bits)?) as Box<dyn Backend>)
+            let bits = cfg.profile.as_uniform().ok_or_else(|| {
+                anyhow!(
+                    "the pjrt backend supports only uniform bit profiles, got [{}] — \
+                     use --backend ref|sim|sim-mt for mixed precision",
+                    cfg.profile.key()
+                )
+            })?;
+            Ok(Box::new(PjrtBackend::load(&dir, bits)?) as Box<dyn Backend>)
         });
         r
     }
@@ -173,6 +184,7 @@ impl Default for BackendRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::BitProfile;
     use crate::backend::AttnRequest;
 
     fn small_cfg() -> BackendConfig {
@@ -230,7 +242,7 @@ mod tests {
     #[test]
     fn block_seeded_config_builds_block_capable_backends() {
         use crate::backend::{AttnBatchRequest, PlanOptions, PlanScope};
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 61).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 61).unwrap();
         let cfg =
             BackendConfig { block: Some(block.clone()), workers: 2, ..BackendConfig::default() };
         let r = BackendRegistry::with_defaults();

@@ -17,8 +17,8 @@ use anyhow::Result;
 use crate::block::EncoderBlock;
 
 use super::{
-    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, StageCodes, SyncJobs,
+    ensure_plan_profile, AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend,
+    Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, StageCodes, SyncJobs,
 };
 use crate::sim::attention::{AttentionOutput, AttentionSim};
 use crate::sim::block::BlockSim;
@@ -66,12 +66,11 @@ impl SimBackend {
 
 fn describe_module(m: &AttnModule) -> String {
     format!(
-        "systolic-array simulator: D_in={} D_out={} heads={} {}-bit (attn {}-bit, {}{}), activity-based energy model",
+        "systolic-array simulator: D_in={} D_out={} heads={} bits[{}] ({}{}), activity-based energy model",
         m.d_in(),
         m.d_out(),
         m.heads,
-        m.bits,
-        m.attn_bits,
+        m.profile.key(),
         if m.shift { "shift-exp" } else { "exact-exp" },
         if m.wo.is_some() { ", W_O wired" } else { "" },
     )
@@ -221,11 +220,15 @@ impl Backend for SimBackend {
 
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
         match opts.scope {
-            PlanScope::Attention => Ok(Box::new(SimPlan::new(&self.module))),
+            PlanScope::Attention => {
+                ensure_plan_profile(&opts.profile, &self.module.profile, "sim attention module")?;
+                Ok(Box::new(SimPlan::new(&self.module)))
+            }
             PlanScope::Block => {
                 let block = self.block.as_ref().ok_or_else(|| {
                     anyhow::anyhow!("sim backend was built without an encoder block (scope=Block)")
                 })?;
+                ensure_plan_profile(&opts.profile, &block.profile, "sim encoder block")?;
                 Ok(Box::new(SimBlockPlan::new(block)))
             }
         }
@@ -241,11 +244,12 @@ impl Backend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::BitProfile;
     use crate::backend::AttnRequest;
 
     #[test]
     fn sim_backend_surfaces_hardware_stats() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 5).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 5).unwrap();
         let x = module.random_input(6, 3).unwrap();
         let mut b = SimBackend::new(module);
         assert!(b.capabilities().hardware_stats);
@@ -263,7 +267,7 @@ mod tests {
     #[test]
     fn block_scope_surfaces_the_merged_block_report() {
         use crate::backend::{AttnRequest, PlanScope};
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 41).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 41).unwrap();
         let x = block.random_input(4, 2).unwrap();
         let want = block.run_reference(&x).unwrap();
         let backend = SimBackend::for_block(block);
@@ -279,7 +283,7 @@ mod tests {
 
     #[test]
     fn batch_report_merges_row_stats() {
-        let module = AttnModule::synthetic(12, 6, 2, 3, 9).unwrap();
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 9).unwrap();
         let single_macs = {
             let mut plan = SimPlan::new(&module);
             let req = AttnRequest::new(module.random_input(4, 1).unwrap());

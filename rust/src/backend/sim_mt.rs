@@ -48,8 +48,8 @@ use anyhow::{anyhow, Context, Result};
 
 use super::sim::{merge_batch_report, response_from_output};
 use super::{
-    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend, Capabilities,
-    ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, QTensor,
+    ensure_plan_profile, AttnBatchRequest, AttnBatchResponse, AttnModule, AttnResponse, Backend,
+    Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, QTensor,
 };
 use crate::block::EncoderBlock;
 use crate::sim::attention::{AttentionSim, FrontOutput, HeadOutput};
@@ -107,26 +107,34 @@ impl Backend for SimMtBackend {
     fn describe(&self) -> String {
         let m = &self.module;
         format!(
-            "sharded systolic simulator: D_in={} D_out={} heads={} {}-bit, workers={}",
+            "sharded systolic simulator: D_in={} D_out={} heads={} bits[{}], workers={}",
             m.d_in(),
             m.d_out(),
             m.heads,
-            m.bits,
+            m.profile.key(),
             if self.workers > 0 { self.workers.to_string() } else { "auto".into() },
         )
     }
 
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
         match opts.scope {
-            PlanScope::Attention => Ok(Box::new(SimMtPlan::new(
-                self.module.to_sim(),
-                self.resolve_workers(opts),
-                opts.row_shard_threshold,
-            ))),
+            PlanScope::Attention => {
+                ensure_plan_profile(
+                    &opts.profile,
+                    &self.module.profile,
+                    "sim-mt attention module",
+                )?;
+                Ok(Box::new(SimMtPlan::new(
+                    self.module.to_sim(),
+                    self.resolve_workers(opts),
+                    opts.row_shard_threshold,
+                )))
+            }
             PlanScope::Block => {
                 let block = self.block.as_ref().ok_or_else(|| {
                     anyhow!("sim-mt backend was built without an encoder block (scope=Block)")
                 })?;
+                ensure_plan_profile(&opts.profile, &block.profile, "sim-mt encoder block")?;
                 Ok(Box::new(SimMtBlockPlan::new(
                     block,
                     self.resolve_workers(opts),
@@ -384,11 +392,11 @@ impl ExecutionPlan for SimMtPlan {
 
     fn describe(&self) -> String {
         format!(
-            "sharded systolic simulator: D_in={} D_out={} heads={} {}-bit, {} workers (row shard ≥ {})",
+            "sharded systolic simulator: D_in={} D_out={} heads={} bits[{}], {} workers (row shard ≥ {})",
             self.sim.wq.folded.codes.cols,
             self.sim.d_out(),
             self.sim.heads,
-            self.sim.bits,
+            self.sim.profile.key(),
             self.workers,
             self.row_threshold,
         )
@@ -599,6 +607,7 @@ impl ExecutionPlan for SimMtBlockPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::BitProfile;
     use crate::backend::{AttnRequest, SimBackend};
 
     fn batch(module: &AttnModule, rows: usize) -> AttnBatchRequest {
@@ -611,7 +620,7 @@ mod tests {
 
     #[test]
     fn matches_single_threaded_sim_for_any_worker_count() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 23).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 23).unwrap();
         let req = batch(&module, 3);
         let mut st = SimBackend::new(module.clone())
             .plan(&PlanOptions::default())
@@ -639,7 +648,7 @@ mod tests {
 
     #[test]
     fn shard_errors_surface_deterministically() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 23).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 23).unwrap();
         let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
         // row 1 carries a wrong-spec tensor → the batch fails, naming it
         let good = AttnRequest::new(module.random_input(4, 1).unwrap());
@@ -658,7 +667,7 @@ mod tests {
 
     #[test]
     fn empty_batch_is_ok() {
-        let module = AttnModule::synthetic(12, 6, 1, 3, 2).unwrap();
+        let module = AttnModule::synthetic(12, 6, 1, BitProfile::uniform(3), 2).unwrap();
         let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
         let resp = plan.run_batch(&AttnBatchRequest::default()).unwrap();
         assert!(resp.items.is_empty() && resp.report.is_none());
@@ -666,7 +675,7 @@ mod tests {
 
     #[test]
     fn overlapped_jobs_poll_out_of_order() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 29).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 29).unwrap();
         // oracle: synchronous batches through a fresh plan
         let want: Vec<Vec<i32>> = (0..3)
             .map(|j| {
@@ -700,7 +709,7 @@ mod tests {
 
     #[test]
     fn dropping_unfinished_jobs_neither_wedges_nor_leaks_the_pool() {
-        let module = AttnModule::synthetic(16, 8, 2, 3, 31).unwrap();
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 31).unwrap();
         let mut plan = SimMtPlan::new(module.to_sim(), 2, 2);
         // submit and never poll — the pool must keep serving other jobs
         let _abandoned = plan.submit(&batch(&module, 4)).unwrap();
@@ -715,7 +724,7 @@ mod tests {
 
     #[test]
     fn block_plan_is_bit_identical_across_worker_counts() {
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 51).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 51).unwrap();
         let reqs: Vec<AttnRequest> = (0..4u64)
             .map(|i| AttnRequest::new(block.random_input(5, 80 + i).unwrap()))
             .collect();
@@ -741,7 +750,7 @@ mod tests {
 
     #[test]
     fn block_plan_overlaps_submissions() {
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 53).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 53).unwrap();
         let mk_req = |seed: u64| {
             AttnBatchRequest::new(
                 (0..3u64)

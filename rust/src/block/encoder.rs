@@ -19,6 +19,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::backend::reference::reference_attention;
 use crate::backend::AttnModule;
+use crate::quant::profile::BitProfile;
 use crate::quant::qtensor::{QTensor, QuantSpec, Step};
 use crate::util::XorShift;
 
@@ -48,6 +49,9 @@ pub struct BlockSteps {
 }
 
 /// One integerized encoder block (attention + MLP + residual path).
+/// Precision is carried by one [`BitProfile`] shared by the attention
+/// half, the MLP half and the residual-path quantizers (the `residual`
+/// site widths Δ_x, the attn-out quantizer, r1 and Δ_out).
 #[derive(Debug, Clone)]
 pub struct EncoderBlock {
     /// Display / cache-key label (e.g. `"block3"`).
@@ -56,7 +60,7 @@ pub struct EncoderBlock {
     pub attn: AttnModule,
     pub mlp: MlpModule,
     pub steps: BlockSteps,
-    pub bits: u32,
+    pub profile: BitProfile,
 }
 
 impl EncoderBlock {
@@ -67,7 +71,7 @@ impl EncoderBlock {
         attn: AttnModule,
         mlp: MlpModule,
         steps: BlockSteps,
-        bits: u32,
+        profile: BitProfile,
     ) -> Result<EncoderBlock> {
         let d = attn.d_in();
         ensure!(
@@ -78,11 +82,13 @@ impl EncoderBlock {
         );
         ensure!(attn.wo.is_some(), "block attention needs its W_O projection");
         ensure!(mlp.d_model() == d, "MLP D {} != attention D {d}", mlp.d_model());
+        profile.validate()?;
         ensure!(
-            attn.bits == bits && mlp.bits == bits,
-            "bit widths disagree: block {bits}, attention {}, MLP {}",
-            attn.bits,
-            mlp.bits
+            attn.profile == profile && mlp.profile == profile,
+            "bit profiles disagree: block '{}', attention '{}', MLP '{}'",
+            profile.key(),
+            attn.profile.key(),
+            mlp.profile.key()
         );
         for (name, v) in [
             ("ln1_gamma", &norms.ln1_gamma),
@@ -92,7 +98,7 @@ impl EncoderBlock {
         ] {
             ensure!(v.len() == d, "{name} length {} != D {d}", v.len());
         }
-        Ok(EncoderBlock { label: label.into(), norms, attn, mlp, steps, bits })
+        Ok(EncoderBlock { label: label.into(), norms, attn, mlp, steps, profile })
     }
 
     /// Model dimension D.
@@ -100,36 +106,38 @@ impl EncoderBlock {
         self.attn.d_in()
     }
 
-    /// The spec block-input activations must carry.
+    /// The spec block-input activations must carry (the residual-path
+    /// site width).
     pub fn input_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.steps.s_x)
+        QuantSpec::signed(self.profile.residual, self.steps.s_x)
     }
 
     /// The spec of the block's output codes (= the next block's input).
     pub fn out_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.steps.s_out)
+        QuantSpec::signed(self.profile.residual, self.steps.s_out)
     }
 
     /// Quantizer applied to the attention W_O fp output.
     pub fn attn_out_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.steps.s_attn_out)
+        QuantSpec::signed(self.profile.residual, self.steps.s_attn_out)
     }
 
     /// Spec of the first-residual output codes.
     pub fn res1_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.steps.s_res1)
+        QuantSpec::signed(self.profile.residual, self.steps.s_res1)
     }
 
     /// One-line human description (used by backend describes and the
-    /// plan-cache key, so it carries the label).
+    /// plan-cache key, so it carries the label AND the full profile —
+    /// two same-geometry blocks at different precisions never alias).
     pub fn describe(&self) -> String {
         format!(
-            "encoder block '{}': D={} heads={} MLP hidden={} {}-bit",
+            "encoder block '{}': D={} heads={} MLP hidden={} bits[{}]",
             self.label,
             self.d(),
             self.attn.heads,
             self.mlp.d_hidden(),
-            self.bits,
+            self.profile.key(),
         )
     }
 
@@ -196,11 +204,11 @@ impl EncoderBlock {
         d: usize,
         hidden: usize,
         heads: usize,
-        bits: u32,
+        profile: BitProfile,
         seed: u64,
     ) -> Result<EncoderBlock> {
-        let attn = AttnModule::synthetic(d, d, heads, bits, seed)?;
-        let mlp = MlpModule::synthetic(d, hidden, bits, seed ^ 0x51f0_beef)?;
+        let attn = AttnModule::synthetic(d, d, heads, profile, seed)?;
+        let mlp = MlpModule::synthetic(d, hidden, profile, seed ^ 0x51f0_beef)?;
         let mut rng = XorShift::new(seed ^ 0xb10c);
         let mut affine = |_tag: &str| -> (Vec<f32>, Vec<f32>) {
             let gamma: Vec<f32> = (0..d).map(|_| rng.uniform(0.6, 1.4) as f32).collect();
@@ -220,7 +228,7 @@ impl EncoderBlock {
                 s_res1: Step::new(0.15)?,
                 s_out: Step::new(0.15)?,
             },
-            bits,
+            profile,
         )
     }
 
@@ -240,7 +248,7 @@ mod tests {
 
     #[test]
     fn block_runs_end_to_end() {
-        let b = EncoderBlock::synthetic(16, 32, 2, 3, 5).unwrap();
+        let b = EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(3), 5).unwrap();
         let x = b.random_input(6, 1).unwrap();
         let y = b.run_reference(&x).unwrap();
         assert_eq!((y.rows(), y.cols()), (6, 16));
@@ -249,8 +257,8 @@ mod tests {
 
     #[test]
     fn synthetic_blocks_are_chainable() {
-        let a = EncoderBlock::synthetic(12, 24, 2, 3, 7).unwrap();
-        let b = EncoderBlock::synthetic(12, 24, 3, 3, 8).unwrap();
+        let a = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 7).unwrap();
+        let b = EncoderBlock::synthetic(12, 24, 3, BitProfile::uniform(3), 8).unwrap();
         let x = a.random_input(4, 2).unwrap();
         let mid = a.run_reference(&x).unwrap();
         // a's Δ_out equals b's Δ_x, so the output feeds straight in
@@ -260,7 +268,7 @@ mod tests {
 
     #[test]
     fn validation_catches_mismatches() {
-        let b = EncoderBlock::synthetic(16, 32, 2, 3, 5).unwrap();
+        let b = EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(3), 5).unwrap();
         // wrong input step
         let bad = QTensor::new(
             crate::quant::linear::IntMat::new(2, 16, vec![0; 32]),
@@ -269,23 +277,51 @@ mod tests {
         .unwrap();
         assert!(b.run_reference(&bad).is_err());
         // non-square attention is rejected at construction
-        let attn = AttnModule::synthetic(16, 8, 2, 3, 1).unwrap();
-        let mlp = MlpModule::synthetic(16, 32, 3, 1).unwrap();
+        let attn = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 1).unwrap();
+        let mlp = MlpModule::synthetic(16, 32, BitProfile::uniform(3), 1).unwrap();
         let err = EncoderBlock::new(
             "bad",
             b.norms.clone(),
             attn,
             mlp,
             b.steps.clone(),
-            3,
+            BitProfile::uniform(3),
+        );
+        assert!(err.is_err());
+        // a block profile that disagrees with its halves is rejected
+        let attn4 = AttnModule::synthetic(16, 16, 2, BitProfile::uniform(3), 1).unwrap();
+        let mlp4 = MlpModule::synthetic(16, 32, BitProfile::uniform(3), 1).unwrap();
+        let err = EncoderBlock::new(
+            "mismatch",
+            b.norms.clone(),
+            attn4,
+            mlp4,
+            b.steps.clone(),
+            BitProfile::uniform(4),
         );
         assert!(err.is_err());
     }
 
     #[test]
+    fn mixed_profile_block_runs_and_chains() {
+        // the ISSUE's flagship operating point: 4-bit attention, 8-bit
+        // MLP; the residual path defaults to the widest assigned width
+        let profile = BitProfile::parse("attn:4,mlp:8").unwrap();
+        let a = EncoderBlock::synthetic(16, 32, 2, profile, 21).unwrap();
+        assert_eq!(a.input_spec().bits, 8, "residual site widths the block boundary");
+        let x = a.random_input(5, 3).unwrap();
+        let y = a.run_reference(&x).unwrap();
+        assert_eq!(y.spec, a.out_spec());
+        // same-profile blocks still chain
+        let b = EncoderBlock::synthetic(16, 32, 2, profile, 22).unwrap();
+        let z = b.run_reference(&y).unwrap();
+        assert_eq!((z.rows(), z.cols()), (5, 16));
+    }
+
+    #[test]
     fn deterministic_for_a_seed() {
-        let a = EncoderBlock::synthetic(12, 24, 2, 3, 9).unwrap();
-        let b = EncoderBlock::synthetic(12, 24, 2, 3, 9).unwrap();
+        let a = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 9).unwrap();
+        let b = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 9).unwrap();
         let x = a.random_input(3, 4).unwrap();
         assert_eq!(
             a.run_reference(&x).unwrap().codes.data,

@@ -17,11 +17,15 @@ use anyhow::{ensure, Result};
 use crate::quant::fold::{FoldedLinear, QuantParams};
 use crate::quant::gelu::GeluLut;
 use crate::quant::linear::{int_matmul, IntMat};
+use crate::quant::profile::BitProfile;
 use crate::quant::qtensor::{QTensor, QuantSpec, Step};
 use crate::quant::round_half_even;
 use crate::util::XorShift;
 
-/// The integerized MLP parameters (one encoder block's FFN).
+/// The integerized MLP parameters (one encoder block's FFN). Precision
+/// is carried by the [`BitProfile`]'s MLP sites: `mlp_x` (input codes),
+/// `fc1`/`fc2` (weight codes), `gelu_in`/`gelu_out` (the LUT boundary)
+/// and `mlp_out` (output codes).
 #[derive(Debug, Clone)]
 pub struct MlpModule {
     /// fc1: H×D codes, folded with Δ̄_X = `s_in`.
@@ -36,8 +40,9 @@ pub struct MlpModule {
     pub s_g: Step,
     /// fc2-output code step Δ_out.
     pub s_out: Step,
-    pub bits: u32,
-    /// The tabulated integer GELU (derived from Δ_h → Δ_g at `bits`).
+    /// Per-site precision of the whole block this FFN belongs to.
+    pub profile: BitProfile,
+    /// The tabulated integer GELU (Δ_h@gelu_in → Δ_g@gelu_out).
     lut: GeluLut,
 }
 
@@ -50,7 +55,7 @@ impl MlpModule {
         s_h: Step,
         s_g: Step,
         s_out: Step,
-        bits: u32,
+        profile: BitProfile,
     ) -> Result<MlpModule> {
         ensure!(
             fc1.codes.rows == fc2.codes.cols && fc1.codes.cols == fc2.codes.rows,
@@ -60,8 +65,12 @@ impl MlpModule {
             fc2.codes.rows,
             fc2.codes.cols
         );
-        let lut = GeluLut::new(QuantSpec::signed(bits, s_h), QuantSpec::signed(bits, s_g))?;
-        Ok(MlpModule { fc1, fc2, s_in, s_h, s_g, s_out, bits, lut })
+        profile.validate()?;
+        let lut = GeluLut::new(
+            QuantSpec::signed(profile.gelu_in, s_h),
+            QuantSpec::signed(profile.gelu_out, s_g),
+        )?;
+        Ok(MlpModule { fc1, fc2, s_in, s_h, s_g, s_out, profile, lut })
     }
 
     /// Model (token) dimension D.
@@ -76,12 +85,12 @@ impl MlpModule {
 
     /// The quantizer spec input activations must carry.
     pub fn input_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.s_in)
+        QuantSpec::signed(self.profile.mlp_x, self.s_in)
     }
 
     /// The spec of the MLP's output codes.
     pub fn out_spec(&self) -> QuantSpec {
-        QuantSpec::signed(self.bits, self.s_out)
+        QuantSpec::signed(self.profile.mlp_out, self.s_out)
     }
 
     /// The integer GELU table shared with the simulator.
@@ -130,7 +139,11 @@ impl MlpModule {
     /// end. Output codes carry [`Self::out_spec`].
     pub fn run_reference(&self, x: &QTensor) -> Result<QTensor> {
         self.check_input(x)?;
-        let h = Self::linear_requant(&x.codes, &self.fc1, QuantSpec::signed(self.bits, self.s_h))?;
+        let h = Self::linear_requant(
+            &x.codes,
+            &self.fc1,
+            QuantSpec::signed(self.profile.gelu_in, self.s_h),
+        )?;
         let g = self.lut.apply(&h)?;
         Self::linear_requant(&g.codes, &self.fc2, self.out_spec())
     }
@@ -141,22 +154,22 @@ impl MlpModule {
     }
 
     /// Randomised MLP for parity / stress testing.
-    pub fn synthetic(d: usize, hidden: usize, bits: u32, seed: u64) -> Result<MlpModule> {
+    pub fn synthetic(d: usize, hidden: usize, profile: BitProfile, seed: u64) -> Result<MlpModule> {
         ensure!(d > 0 && hidden > 0, "degenerate MLP {d}×{hidden}");
         let mut rng = XorShift::new(seed);
         let s_in = Step::new(0.5)?;
         let s_h = Step::new(0.25)?;
         let s_g = Step::new(0.25)?;
         let s_out = Step::new(0.1)?;
-        let mut mk = |n: usize, k: usize, step_x: f32| -> Result<FoldedLinear> {
+        let mut mk = |n: usize, k: usize, step_x: f32, bits: u32| -> Result<FoldedLinear> {
             let w: Vec<f32> = rng.normal_vec(n * k).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(n).iter().map(|v| v * 0.3).collect();
             let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
             FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x, step_w })
         };
-        let fc1 = mk(hidden, d, s_in.get())?;
-        let fc2 = mk(d, hidden, s_g.get())?;
-        MlpModule::new(fc1, fc2, s_in, s_h, s_g, s_out, bits)
+        let fc1 = mk(hidden, d, s_in.get(), profile.fc1)?;
+        let fc2 = mk(d, hidden, s_g.get(), profile.fc2)?;
+        MlpModule::new(fc1, fc2, s_in, s_h, s_g, s_out, profile)
     }
 
     /// Random input codes (`tokens` × D) in this MLP's input spec.
@@ -177,7 +190,7 @@ mod tests {
 
     #[test]
     fn shapes_and_specs() {
-        let m = MlpModule::synthetic(12, 24, 3, 7).unwrap();
+        let m = MlpModule::synthetic(12, 24, BitProfile::uniform(3), 7).unwrap();
         assert_eq!(m.d_model(), 12);
         assert_eq!(m.d_hidden(), 24);
         assert!(m.input_spec().signed && m.input_spec().bits == 3);
@@ -189,7 +202,7 @@ mod tests {
 
     #[test]
     fn rejects_wrong_input_spec() {
-        let m = MlpModule::synthetic(8, 16, 3, 9).unwrap();
+        let m = MlpModule::synthetic(8, 16, BitProfile::uniform(3), 9).unwrap();
         let bad = QTensor::new(
             IntMat::new(1, 8, vec![0; 8]),
             QuantSpec::signed(4, Step::new(0.5).unwrap()),
@@ -206,18 +219,18 @@ mod tests {
 
     #[test]
     fn rejects_non_composing_linears() {
-        let a = MlpModule::synthetic(8, 16, 3, 1).unwrap();
-        let b = MlpModule::synthetic(8, 12, 3, 2).unwrap();
+        let a = MlpModule::synthetic(8, 16, BitProfile::uniform(3), 1).unwrap();
+        let b = MlpModule::synthetic(8, 12, BitProfile::uniform(3), 2).unwrap();
         // fc1 of one with fc2 of the other: 16 hidden vs 12 hidden
         let s = Step::new(0.1).unwrap();
-        assert!(MlpModule::new(a.fc1, b.fc2, s, s, s, s, 3).is_err());
+        assert!(MlpModule::new(a.fc1, b.fc2, s, s, s, s, BitProfile::uniform(3)).is_err());
     }
 
     #[test]
     fn zero_input_gives_gelu_of_bias() {
         // all-zero codes → fc1 output is the folded bias alone; still a
         // valid integer pipeline end to end.
-        let m = MlpModule::synthetic(6, 10, 3, 3).unwrap();
+        let m = MlpModule::synthetic(6, 10, BitProfile::uniform(3), 3).unwrap();
         let x = QTensor::new(
             IntMat::new(2, 6, vec![0; 12]),
             m.input_spec(),

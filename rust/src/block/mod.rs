@@ -25,6 +25,12 @@
 //! [`crate::sim::BlockSim`], which reuse the *same* LUT and residual
 //! helpers so ref ≡ sim bit-identity holds by construction wherever it
 //! cannot be inherited from the already-pinned attention parity.
+//!
+//! Precision is per-site: every block type carries one
+//! [`crate::quant::BitProfile`] (shared by its attention half, MLP half
+//! and residual-path quantizers; [`BlockStack`] validates the profile
+//! chains unchanged through the depth), so mixed operating points like
+//! `attn:4,mlp:8` are first-class rather than a fork of the code.
 
 pub mod encoder;
 pub mod mlp;

@@ -30,7 +30,14 @@ impl BlockStack {
                 b.label,
                 b.d()
             );
-            ensure!(a.bits == b.bits, "bit widths differ between '{}' and '{}'", a.label, b.label);
+            ensure!(
+                a.profile == b.profile,
+                "bit profiles differ between '{}' ({}) and '{}' ({})",
+                a.label,
+                a.profile.key(),
+                b.label,
+                b.profile.key()
+            );
             let (out, inp) = (a.steps.s_out.get(), b.steps.s_x.get());
             ensure!(
                 (out - inp).abs() <= 1e-6 * out.abs().max(inp.abs()),
@@ -74,12 +81,15 @@ impl BlockStack {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::profile::BitProfile;
     use crate::quant::qtensor::Step;
 
     fn stack(depth: usize) -> BlockStack {
         let blocks: Vec<EncoderBlock> = (0..depth)
             .map(|i| {
-                let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 40 + i as u64).unwrap();
+                let mut b =
+                    EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 40 + i as u64)
+                        .unwrap();
                 b.label = format!("block{i}");
                 b
             })
@@ -103,17 +113,20 @@ mod tests {
 
     #[test]
     fn rejects_broken_step_chain() {
-        let a = EncoderBlock::synthetic(12, 24, 2, 3, 1).unwrap();
-        let mut b = EncoderBlock::synthetic(12, 24, 2, 3, 2).unwrap();
+        let a = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 1).unwrap();
+        let mut b = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 2).unwrap();
         b.steps.s_x = Step::new(0.33).unwrap();
         assert!(BlockStack::new(vec![a, b]).is_err());
     }
 
     #[test]
-    fn rejects_dim_mismatch_and_empty() {
-        let a = EncoderBlock::synthetic(12, 24, 2, 3, 1).unwrap();
-        let b = EncoderBlock::synthetic(16, 32, 2, 3, 2).unwrap();
-        assert!(BlockStack::new(vec![a, b]).is_err());
+    fn rejects_dim_mismatch_empty_and_profile_drift() {
+        let a = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 1).unwrap();
+        let b = EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(3), 2).unwrap();
+        assert!(BlockStack::new(vec![a.clone(), b]).is_err());
         assert!(BlockStack::new(Vec::new()).is_err());
+        // blocks at different profiles do not chain
+        let c = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(4), 2).unwrap();
+        assert!(BlockStack::new(vec![a, c]).is_err());
     }
 }

@@ -6,6 +6,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::quant::BitProfile;
+
 /// Parsed command line: subcommand + `--key value` flags.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -98,10 +100,41 @@ pub fn validate_serve_scope(backend: &str, scope: &str) -> Result<()> {
     Ok(())
 }
 
+/// Arg-validation for `--bits-profile`: the pjrt backend executes an
+/// AOT artifact lowered at ONE width, so a mixed per-site profile must
+/// fail fast at argument validation — with the fix spelled out —
+/// instead of deep inside artifact loading.
+pub fn validate_backend_profile(backend: &str, profile: &BitProfile) -> Result<()> {
+    if backend == "pjrt" && profile.as_uniform().is_none() {
+        bail!(
+            "--bits-profile [{}] is mixed, but the pjrt backend executes a single-width \
+             AOT artifact — use --bits-profile uniform:N with pjrt, or run the mixed \
+             profile on --backend ref|sim|sim-mt",
+            profile.key()
+        );
+    }
+    Ok(())
+}
+
 pub const USAGE: &str = "\
 ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
 
 USAGE: ivit <command> [flags]
+
+PRECISION (--bits-profile, on serve/simulate/eval):
+  Per-module mixed precision. Accepts:
+    uniform:N              every site at N bits (what plain --bits N means)
+    attn:4,mlp:8           group assignments; groups are attn | mlp | residual,
+                           applied in order; unassigned sites default to the
+                           widest assigned value
+    uniform:4,gelu_out:8   a uniform base with per-site overrides; site names:
+                           attn_x q_proj k_proj v_proj attn_probs o_proj mlp_x
+                           fc1 gelu_in gelu_out fc2 mlp_out residual
+    <path.json>            a JSON object mapping every site name to its width
+  Widths must lie in 2..=8; unknown keys and out-of-range widths fail loudly.
+  The pjrt backend accepts only uniform profiles (its artifact is lowered at
+  one width); mixed profiles run on ref/sim/sim-mt. `ivit eval` accepts a
+  ';'-separated LIST of profiles and prints one Table-II row per profile.
 
 COMMANDS:
   serve       run the batching inference server (plans the backend once,
@@ -205,6 +238,21 @@ mod tests {
         let b = parse("simulate --exact-exp --artifacts dir");
         assert!(b.bool("exact-exp"));
         assert_eq!(b.str("artifacts", ""), "dir");
+    }
+
+    #[test]
+    fn backend_profile_validation_rejects_mixed_pjrt() {
+        let mixed = BitProfile::parse("attn:4,mlp:8").unwrap();
+        let err = validate_backend_profile("pjrt", &mixed).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt") && msg.contains("ref|sim|sim-mt"), "actionable: {msg}");
+        // uniform profiles pass on every backend; mixed pass off-pjrt
+        for backend in ["ref", "sim", "sim-mt", "pjrt"] {
+            validate_backend_profile(backend, &BitProfile::uniform(4)).unwrap();
+        }
+        for backend in ["ref", "sim", "sim-mt"] {
+            validate_backend_profile(backend, &mixed).unwrap();
+        }
     }
 
     #[test]

@@ -387,6 +387,7 @@ impl BatchExecutor for MockExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::BitProfile;
 
     #[test]
     fn mock_is_deterministic() {
@@ -399,7 +400,7 @@ mod tests {
     #[test]
     fn attn_executor_serves_backends_end_to_end() {
         use crate::backend::{AttnModule, ReferenceBackend, SimBackend, SimMtBackend};
-        let module = AttnModule::synthetic(12, 6, 1, 3, 21).unwrap();
+        let module = AttnModule::synthetic(12, 6, 1, BitProfile::uniform(3), 21).unwrap();
         let tokens = 4;
         let mut rng = crate::util::XorShift::new(3);
         let img: Vec<f32> = rng.normal_vec(tokens * 12);
@@ -432,7 +433,7 @@ mod tests {
     #[test]
     fn attn_executor_zeroes_padding_rows() {
         use crate::backend::{AttnModule, SimBackend};
-        let module = AttnModule::synthetic(12, 6, 1, 3, 21).unwrap();
+        let module = AttnModule::synthetic(12, 6, 1, BitProfile::uniform(3), 21).unwrap();
         let tokens = 4;
         let backend = SimBackend::new(module.clone());
         let mut exec =
@@ -448,7 +449,7 @@ mod tests {
     #[test]
     fn attn_executor_pipelines_two_batches_through_submit_poll() {
         use crate::backend::{AttnModule, SimMtBackend};
-        let module = AttnModule::synthetic(12, 6, 2, 3, 27).unwrap();
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 27).unwrap();
         let tokens = 4;
         let backend = SimMtBackend::new(module.clone(), 2);
         let mut exec =
@@ -480,7 +481,8 @@ mod tests {
     #[test]
     fn attn_executor_merges_block_reports_into_the_sink() {
         use crate::backend::{PlanScope, SimBackend};
-        let block = crate::block::EncoderBlock::synthetic(12, 24, 2, 3, 77).unwrap();
+        let block =
+            crate::block::EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 77).unwrap();
         let backend = SimBackend::for_block(block.clone());
         let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
         let plan = backend.plan(&opts).unwrap();

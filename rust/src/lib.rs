@@ -42,7 +42,14 @@
 //! and all operands are **typed**: [`quant::QTensor`] (codes + step +
 //! bits + signedness) and [`quant::ScaleChain`] (the explicit Eq. 2
 //! scale foldings) replace the bare `f32` scales and `bool` flags that
-//! used to cross module boundaries. The cross-backend parity suite
+//! used to cross module boundaries. Precision itself is typed too:
+//! [`quant::BitProfile`] assigns a width to every quantization site of
+//! the encoder block (projections, QKᵀ/softmax·V operands, FC1/FC2, the
+//! GELU-LUT boundary, the residual path), is threaded quant → block →
+//! sim → backend → serve/eval in place of the old global `bits` knob
+//! (`--bits-profile uniform:4|attn:4,mlp:8|<json>` on the CLI), and
+//! keys every plan-cache entry so two precision configs can never
+//! alias. The cross-backend parity suite
 //! (`tests/backend_parity.rs`) pins `ref` ≡ `sim` bit-identity at DeiT-S
 //! dimensions for every supported bit width, `tests/plan_batch.rs`
 //! pins batch ≡ loop and `sim-mt` worker-count determinism, and

@@ -6,17 +6,18 @@
 //! (AOT artifacts), `sim` (systolic-array simulator) or `ref` (quant
 //! golden reference) — the latter two run without any artifacts.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use ivit::backend::{
-    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, ExecutionPlan, PlanCache,
-    PlanOptions, PlanScope, PlanSeed,
+    AttnBatchRequest, AttnRequest, BackendConfig, BackendRegistry, BitProfile, ExecutionPlan,
+    PlanCache, PlanOptions, PlanScope, PlanSeed,
 };
 use ivit::bench::BenchRecord;
 use ivit::block::EncoderBlock;
-use ivit::cli::{validate_serve_scope, Args, USAGE};
+use ivit::cli::{validate_backend_profile, validate_serve_scope, Args, USAGE};
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor, Snapshot};
 use ivit::model::{AttnCase, EvalSet, VitConfig, VitModel};
 use ivit::runtime::Engine;
@@ -57,6 +58,60 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
 }
 
+/// One `--bits-profile` value: the inline grammar (`uniform:4`,
+/// `attn:4,mlp:8`, site assignments) or a path to a JSON site map.
+fn parse_profile_spec(spec: &str) -> Result<BitProfile> {
+    let path = Path::new(spec);
+    if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bit-profile file {path:?}"))?;
+        let json = ivit::util::Json::parse(&text)
+            .with_context(|| format!("parsing bit-profile file {path:?}"))?;
+        return BitProfile::from_json(&json)
+            .with_context(|| format!("bit-profile file {path:?}"));
+    }
+    BitProfile::parse(spec)
+}
+
+/// Resolve `--bits-profile` / `--bits` into one profile. Plain
+/// `--bits N` stays as shorthand for `uniform:N`; passing both flags is
+/// ambiguous and fails loudly.
+fn bits_profile(args: &Args, default_bits: u32) -> Result<BitProfile> {
+    match args.flags.get("bits-profile") {
+        Some(spec) => {
+            anyhow::ensure!(
+                !args.flags.contains_key("bits"),
+                "--bits and --bits-profile are mutually exclusive — fold the uniform \
+                 width into the profile (uniform:N)"
+            );
+            anyhow::ensure!(
+                !spec.contains(';'),
+                "--bits-profile takes ONE profile here — the ';'-separated list form \
+                 is only for `ivit eval`"
+            );
+            parse_profile_spec(spec)
+        }
+        None => BitProfile::uniform_checked(args.u32("bits", default_bits)?),
+    }
+}
+
+/// The `ivit eval` form of the flag: a ';'-separated list of profiles
+/// (each in the single-profile grammar), one Table-II row each.
+fn bits_profile_list(args: &Args, default_bits: u32) -> Result<Vec<BitProfile>> {
+    match args.flags.get("bits-profile") {
+        Some(spec) => {
+            anyhow::ensure!(
+                !args.flags.contains_key("bits"),
+                "--bits and --bits-profile are mutually exclusive"
+            );
+            spec.split(';')
+                .map(|s| parse_profile_spec(s.trim()))
+                .collect::<Result<Vec<_>>>()
+        }
+        None => Ok(vec![BitProfile::uniform_checked(args.u32("bits", default_bits)?)?]),
+    }
+}
+
 fn backend_config(args: &Args) -> Result<BackendConfig> {
     let defaults = BackendConfig::default();
     Ok(BackendConfig {
@@ -66,15 +121,11 @@ fn backend_config(args: &Args) -> Result<BackendConfig> {
         d_in: args.usize("din", defaults.d_in)?,
         d_head: args.usize("dhead", defaults.d_head)?,
         heads: args.usize("heads", defaults.heads)?,
-        bits: args.u32("bits", defaults.bits)?,
+        profile: bits_profile(args, 3)?,
         shift: !args.bool("exact-exp"),
         seed: 7,
         workers: args.usize("workers", 0)?,
     })
-}
-
-fn plan_options(args: &Args) -> Result<PlanOptions> {
-    Ok(PlanOptions { workers: args.usize("workers", 0)?, ..PlanOptions::default() })
 }
 
 /// `ivit serve` — the end-to-end driver: batching server + synthetic load.
@@ -85,6 +136,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.choice("backend", &["pjrt", "sim", "sim-mt", "ref"], "pjrt")?;
     let scope = args.choice("scope", &["attention", "block"], "attention")?;
     validate_serve_scope(&backend, &scope)?;
+    // plain --bits stays free-form for the pjrt image path (fp32 = 32);
+    // --bits-profile routes through the per-site model and validation
+    if args.flags.contains_key("bits-profile") {
+        validate_backend_profile(&backend, &bits_profile(args, 3)?)?;
+    }
     match backend.as_str() {
         "pjrt" => cmd_serve_images(args),
         other => cmd_serve_attention(args, other, &scope),
@@ -112,7 +168,10 @@ fn emit_serve_record(backend: &str, scope: &str, n_requests: usize, wall_s: f64,
 fn cmd_serve_images(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mode = args.choice("mode", &["integerized", "qvit", "fp32"], "integerized")?;
-    let bits = args.u32("bits", 3)?;
+    let bits = match args.flags.get("bits-profile") {
+        Some(_) => bits_profile(args, 3)?.as_uniform().expect("validated uniform for pjrt"),
+        None => args.u32("bits", 3)?,
+    };
     let batch = args.usize("batch", 8)?;
     let n_requests = args.usize("requests", 256)?;
     let rate = args.f64("rate", 0.0)?;
@@ -200,19 +259,21 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
     // the rebuildable recipe for this serve configuration
     let defaults = BackendConfig::default();
     let cfg_seed = args.usize("seed", 7)? as u64;
-    let bits = args.u32("bits", defaults.bits)?;
+    let profile = bits_profile(args, 3)?;
     let dim = args.usize("dim", 64)?;
     let heads = args.usize("heads", if scope == "block" { 2 } else { defaults.heads })?;
-    let seed = PlanSeed {
+    let mut seed = PlanSeed {
         backend: backend_name.to_string(),
-        workers: args.usize("workers", 0)?,
-        row_shard_threshold: PlanOptions::default().row_shard_threshold,
-        scope: if scope == "block" { PlanScope::Block } else { PlanScope::Attention },
+        options: PlanOptions {
+            workers: args.usize("workers", 0)?,
+            scope: if scope == "block" { PlanScope::Block } else { PlanScope::Attention },
+            profile,
+            ..PlanOptions::default()
+        },
         d_in: if scope == "block" { dim } else { args.usize("din", defaults.d_in)? },
         d_head: args.usize("dhead", defaults.d_head)?,
         heads,
         hidden: args.usize("hidden", dim * 4)?,
-        bits,
         shift: !args.bool("exact-exp"),
         seed: cfg_seed,
         artifacts: match scope {
@@ -220,6 +281,21 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
             "block" => None,
             _ => Some(artifacts_dir(args).to_string_lossy().into_owned()),
         },
+    };
+    // At attention scope an exported attn_case overrides the CLI
+    // precision (exactly as cmd_simulate does): the seed must carry the
+    // profile of the module that will actually be planned, or the
+    // plan-time profile validation rejects the mismatch. For synthetic
+    // modules this resolves to the CLI profile and is a no-op. The
+    // resolved module is kept for the executor below, so the attn_case
+    // tensors are not folded a second time.
+    let attn_module = match seed.options.scope {
+        PlanScope::Block => None,
+        PlanScope::Attention => {
+            let module = seed.to_config()?.resolve_module()?;
+            seed.options.profile = module.profile;
+            Some(module)
+        }
     };
 
     // plan: through the persistent cache when --cache-dir is set. Only
@@ -246,13 +322,14 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
 
     // executor dims/spec come from the same deterministic rebuild
     // inputs the plan was created from
-    let (exec, d_in) = if seed.scope == PlanScope::Block {
-        let block = EncoderBlock::synthetic(seed.d_in, seed.hidden, seed.heads, bits, cfg_seed)?;
+    let (exec, d_in) = if seed.options.scope == PlanScope::Block {
+        let block =
+            EncoderBlock::synthetic(seed.d_in, seed.hidden, seed.heads, profile, cfg_seed)?;
         let d = block.d();
         (AttnBatchExecutor::for_block(plan, &block, tokens, batch), d)
     } else {
-        // the resolved module (attn_case dims may override the flags)
-        let module = seed.to_config()?.resolve_module()?;
+        // the module resolved above (attn_case dims may override flags)
+        let module = attn_module.expect("resolved for attention scope");
         let d = module.d_in();
         (AttnBatchExecutor::from_plan(plan, &module, tokens, batch), d)
     };
@@ -313,21 +390,34 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
     Ok(())
 }
 
-/// `ivit eval` — Table II accuracy for one variant. `--backend pjrt`
-/// (the default) measures the AOT artifacts; `ref`/`sim`/`sim-mt` run
-/// the integerized encoder-block stack with **no** PJRT artifacts.
+/// `ivit eval` — Table II accuracy. `--backend pjrt` (the default)
+/// measures the AOT artifacts; `ref`/`sim`/`sim-mt` run the integerized
+/// encoder-block stack with **no** PJRT artifacts and accept a
+/// ';'-separated `--bits-profile` LIST, printing one accuracy/energy
+/// row per profile.
 fn cmd_eval(args: &Args) -> Result<()> {
-    match args.choice("backend", &["pjrt", "ref", "sim", "sim-mt"], "pjrt")?.as_str() {
+    let backend = args.choice("backend", &["pjrt", "ref", "sim", "sim-mt"], "pjrt")?;
+    // plain --bits stays free-form for the pjrt artifact path (fp32 =
+    // 32); --bits-profile routes through the per-site model
+    if args.flags.contains_key("bits-profile") {
+        for profile in bits_profile_list(args, 3)? {
+            validate_backend_profile(&backend, &profile)?;
+        }
+    }
+    match backend.as_str() {
         "pjrt" => cmd_eval_pjrt(args),
         other => cmd_eval_blocks(args, other),
     }
 }
 
-/// The artifact-free Table II path: synthetic integerized checkpoint,
-/// per-block backend plans (scope = Block) chained depth-wise, logits
-/// through the fp head, accuracy via [`EvalSet::accuracy`].
+/// The artifact-free Table II path: synthetic integerized checkpoint
+/// per profile, per-block backend plans (scope = Block) chained
+/// depth-wise, logits through the fp head, accuracy via
+/// [`EvalSet::accuracy`]. Plans are cached by profile key across the
+/// list, so a repeated profile (or a re-run inside one process) reuses
+/// its resident plans instead of re-folding the stack.
 fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
-    let bits = args.u32("bits", 3)?;
+    let profiles = bits_profile_list(args, 3)?;
     let dim = args.usize("dim", 64)?;
     let cfg_seed = args.usize("seed", 7)? as u64;
 
@@ -353,7 +443,7 @@ fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
     );
     let (h, w, c) = (ev.images.shape[1], ev.images.shape[2], ev.images.shape[3]);
 
-    let cfg = VitConfig {
+    let base_cfg = VitConfig {
         image_h: h,
         image_w: w,
         image_c: c,
@@ -363,65 +453,94 @@ fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
         heads: args.usize("heads", 2)?,
         depth: args.usize("depth", 2)?,
         classes,
-        bits,
+        profile: profiles[0],
         seed: cfg_seed,
     };
-    let model = VitModel::synthetic(cfg.clone())?;
     println!(
         "eval ({backend_name}, no PJRT artifacts): {split} split, {} images, \
-         D={} H={} heads={} depth={} patch={} {bits}-bit",
-        ev.n, cfg.dim, cfg.hidden, cfg.heads, cfg.depth, cfg.patch
+         D={} H={} heads={} depth={} patch={} — {} profile(s)",
+        ev.n,
+        base_cfg.dim,
+        base_cfg.hidden,
+        base_cfg.heads,
+        base_cfg.depth,
+        base_cfg.patch,
+        profiles.len()
     );
 
-    // plan each encoder block exactly once (scope = Block); every batch
-    // then reuses the resident plans through the one depth-chaining
-    // implementation, VitModel::logits_batch_with_plans
     let registry = BackendRegistry::with_defaults();
-    let opts = PlanOptions {
-        workers: args.usize("workers", 0)?,
-        scope: PlanScope::Block,
-        ..PlanOptions::default()
-    };
-    let mut plans: Vec<Box<dyn ExecutionPlan>> = model
-        .stack
-        .blocks
-        .iter()
-        .map(|b| {
-            let cfg_b =
-                BackendConfig { block: Some(b.clone()), bits, ..BackendConfig::default() };
-            registry.create(backend_name, &cfg_b)?.plan(&opts)
-        })
-        .collect::<Result<Vec<_>>>()?;
-
     let limit = args.usize("limit", ev.n)?.min(ev.n);
     let batch = args.usize("batch", 8)?.max(1);
-    let t0 = Instant::now();
-    let mut logits: Vec<Vec<f32>> = Vec::with_capacity(limit);
-    let mut report = None;
-    let mut i = 0usize;
-    while i < limit {
-        let take = batch.min(limit - i);
-        let mut images = Vec::with_capacity(take);
-        for b in 0..take {
-            images.push(ev.image(i + b)?);
-        }
-        logits.extend(model.logits_batch_with_plans(&images, &mut plans, &mut report)?);
-        i += take;
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let acc = ev.accuracy(&logits);
+    let energy = EnergyModel::default();
+
+    // resident (model, block plans) per profile key: a profile repeated
+    // in the list — or identical geometry re-evaluated — reuses its
+    // folded stack and lowered plans instead of re-planning
+    let mut resident: BTreeMap<String, (VitModel, Vec<Box<dyn ExecutionPlan>>)> = BTreeMap::new();
+
     println!(
-        "backend={backend_name} bits={bits} eval_acc={acc:.4} over {limit} images in {wall:.2}s \
-         ({} block plans built once)",
-        plans.len()
+        "{:<28} {:>9} {:>12} {:>12}  per-width split",
+        "profile", "acc", "# MAC (M)", "energy (µJ)"
     );
-    if let Some(r) = &report {
-        let m = EnergyModel::default();
+    for profile in &profiles {
+        let key = profile.key();
+        if !resident.contains_key(&key) {
+            let cfg = VitConfig { profile: *profile, ..base_cfg.clone() };
+            let model = VitModel::synthetic(cfg)?;
+            // plan each encoder block exactly once (scope = Block);
+            // every batch reuses the resident plans
+            let opts = PlanOptions {
+                workers: args.usize("workers", 0)?,
+                scope: PlanScope::Block,
+                profile: *profile,
+                ..PlanOptions::default()
+            };
+            let plans: Vec<Box<dyn ExecutionPlan>> = model
+                .stack
+                .blocks
+                .iter()
+                .map(|b| {
+                    let cfg_b = BackendConfig {
+                        block: Some(b.clone()),
+                        profile: *profile,
+                        ..BackendConfig::default()
+                    };
+                    registry.create(backend_name, &cfg_b)?.plan(&opts)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            resident.insert(key.clone(), (model, plans));
+        }
+        let (model, plans) = resident.get_mut(&key).expect("resident entry just inserted");
+
+        let t0 = Instant::now();
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(limit);
+        let mut report = None;
+        let mut i = 0usize;
+        while i < limit {
+            let take = batch.min(limit - i);
+            let mut images = Vec::with_capacity(take);
+            for b in 0..take {
+                images.push(ev.image(i + b)?);
+            }
+            logits.extend(model.logits_batch_with_plans(&images, plans, &mut report)?);
+            i += take;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let acc = ev.accuracy(&logits);
+        match &report {
+            Some(r) => println!(
+                "{key:<28} {acc:>9.4} {:>12.1} {:>12.2}  {}",
+                r.total_macs() as f64 / 1e6,
+                r.workload_energy_uj(&energy),
+                r.render_width_split(&energy),
+            ),
+            None => {
+                println!("{key:<28} {acc:>9.4} {:>12} {:>12}  (ref backend: no stats)", "-", "-")
+            }
+        }
         println!(
-            "hardware (merged over {} blocks × {limit} images): {:.1}M MACs, {:.2} µJ modelled",
-            model.stack.depth(),
-            r.total_macs() as f64 / 1e6,
-            r.workload_energy_uj(&m),
+            "  └ {limit} images in {wall:.2}s, {} block plan(s) resident",
+            plans.len()
         );
     }
     Ok(())
@@ -431,7 +550,20 @@ fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
 fn cmd_eval_pjrt(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mode = args.choice("mode", &["integerized", "qvit", "fp32"], "integerized")?;
-    let bits = args.u32("bits", 3)?;
+    // fp32 executables sit outside the 2..=8 profile range, so resolve
+    // the raw --bits flag first and only route --bits-profile (already
+    // validated uniform for pjrt) through the profile model
+    let bits = match args.flags.get("bits-profile") {
+        Some(_) => {
+            let profiles = bits_profile_list(args, 3)?;
+            anyhow::ensure!(
+                profiles.len() == 1,
+                "--backend pjrt evaluates one executable per run — pass a single profile"
+            );
+            profiles[0].as_uniform().expect("validated uniform for pjrt")
+        }
+        None => args.u32("bits", 3)?,
+    };
     let mut engine = Engine::new(&dir)?;
     // prefer the largest batch variant available
     let spec = engine
@@ -514,17 +646,19 @@ fn cmd_power(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let backend_name = args.choice("backend", &["sim", "sim-mt", "ref", "pjrt"], "sim")?;
     let mut cfg = backend_config(args)?;
+    validate_backend_profile(&backend_name, &cfg.profile)?;
     let shift = cfg.shift;
 
     // Resolve the input before building the backend: when a case is
-    // exported, its own bit width (not the --bits default) must select
-    // the pjrt executable and size the comparison.
+    // exported, its own bit profile (not the --bits/--bits-profile
+    // default) must select the pjrt executable and size the comparison.
     let dir = artifacts_dir(args);
     let case_dir = dir.join("attn_case");
     let (x, case) = if case_dir.join("scalars.json").exists() {
         let case = AttnCase::load(&case_dir)?;
-        cfg.bits = case.bits;
-        cfg.module = Some(case.to_module(shift)?); // don't re-read the case
+        let module = case.to_module(shift)?;
+        cfg.profile = BitProfile::uniform_checked(case.bits)?;
+        cfg.module = Some(module); // don't re-read the case
         (case.input()?, Some(case))
     } else if args.bool("synthetic") {
         // explicit opt-in only: a synthetic run verifies nothing, so it
@@ -543,13 +677,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let registry = BackendRegistry::with_defaults();
     let backend = registry.create(&backend_name, &cfg)?;
+    // the plan's precision comes from the module actually being run
+    // (the exported case's profile when present, else the CLI profile)
+    let opts = PlanOptions {
+        workers: args.usize("workers", 0)?,
+        profile: cfg
+            .module
+            .as_ref()
+            .map(|m| m.profile)
+            .unwrap_or(cfg.profile),
+        ..PlanOptions::default()
+    };
     // plan/execute through the process-wide plan cache. The standalone
     // CLI runs one command per process, so this call is always a cold
     // miss (cost: one map insert); the payoff is for embedded callers
     // that drive cmd_simulate repeatedly in one process — their repeat
     // invocations reuse the one-time folding / lowering work.
     let mut cache = PlanCache::global().lock().expect("plan cache poisoned");
-    let plan = cache.get_or_plan(&*backend, &plan_options(args)?)?;
+    let plan = cache.get_or_plan(&*backend, &opts)?;
     println!("backend: {backend_name} — {}", plan.describe());
 
     let t0 = Instant::now();
@@ -643,5 +788,3 @@ fn cmd_info(args: &Args) -> Result<()> {
     }
     Ok(())
 }
-
-fn _unused(_: &Path) {}

@@ -14,6 +14,7 @@ use anyhow::{ensure, Result};
 
 use crate::backend::{AttnBatchRequest, AttnRequest, ExecutionPlan};
 use crate::block::{BlockStack, EncoderBlock};
+use crate::quant::profile::BitProfile;
 use crate::quant::qtensor::QTensor;
 use crate::sim::AttentionReport;
 use crate::util::XorShift;
@@ -34,7 +35,8 @@ pub struct VitConfig {
     /// Encoder depth (number of blocks).
     pub depth: usize,
     pub classes: usize,
-    pub bits: u32,
+    /// Per-site precision shared by every block in the trunk.
+    pub profile: BitProfile,
     pub seed: u64,
 }
 
@@ -88,7 +90,7 @@ impl VitModel {
                     cfg.dim,
                     cfg.hidden,
                     cfg.heads,
-                    cfg.bits,
+                    cfg.profile,
                     cfg.seed + 1 + i as u64,
                 )?;
                 b.label = format!("block{i}");
@@ -233,7 +235,7 @@ mod tests {
             heads: 2,
             depth: 2,
             classes: 4,
-            bits: 3,
+            profile: BitProfile::uniform(3),
             seed: 11,
         }
     }

@@ -185,6 +185,62 @@ mod tests {
         }
     }
 
+    /// Mixed-profile generalization of the pinned bound: every
+    /// (in_bits, out_bits) pair in {2,3,4,8}² — the GELU boundary's two
+    /// profile sites vary independently — stays within half an output
+    /// step of the quantized ideal plus the flat shift/tanh term, and
+    /// the table itself is exactly the per-code quantized shift-GELU
+    /// (property-checked over random step pairs).
+    #[test]
+    fn lut_error_pinned_across_all_in_out_width_pairs() {
+        for in_bits in [2u32, 3, 4, 8] {
+            for out_bits in [2u32, 3, 4, 8] {
+                let in_levels = 1u32 << (in_bits - 1);
+                let out_levels = 1u32 << (out_bits - 1);
+                let step_in = 4.0 / in_levels as f32;
+                let step_out = 4.0 / out_levels as f32;
+                let in_spec = QuantSpec::signed(in_bits, Step::new(step_in).unwrap());
+                let out_spec = QuantSpec::signed(out_bits, Step::new(step_out).unwrap());
+                let lut = GeluLut::new(in_spec, out_spec).unwrap();
+                assert_eq!(lut.entries(), 1 << in_bits, "{in_bits}→{out_bits}");
+                // three error sources, charged separately: output
+                // rounding/clipping (a narrow output clips the top of
+                // GELU's range by up to one output step), the flat
+                // shift-sigmoid vs tanh term, and input-grid coarseness
+                // (GELU's slope tops out near 1.1)
+                let err = lut.max_abs_error();
+                let bound = step_out + 0.06 + 0.6 * step_in;
+                assert!(
+                    err <= bound,
+                    "({in_bits}→{out_bits})-bit LUT error {err} exceeds pinned bound {bound}"
+                );
+            }
+        }
+        // property: table[q] is exactly quantize(shift_gelu(q·Δ_in), Δ_out)
+        // for random step pairs and every code level, at every width pair
+        prop_check("gelu-lut-exact-table", 171, 120, |rng| {
+            const WIDTHS: [u32; 4] = [2, 3, 4, 8];
+            let in_bits = WIDTHS[rng.int_in(0, 3) as usize];
+            let out_bits = WIDTHS[rng.int_in(0, 3) as usize];
+            let step_in = rng.uniform(0.05, 2.0) as f32;
+            let step_out = rng.uniform(0.05, 2.0) as f32;
+            let in_spec = QuantSpec::signed(in_bits, Step::new(step_in).unwrap());
+            let out_spec = QuantSpec::signed(out_bits, Step::new(step_out).unwrap());
+            let lut = GeluLut::new(in_spec, out_spec).map_err(|e| e.to_string())?;
+            let (lo, hi) = in_spec.range();
+            for q in lo..=hi {
+                let want = out_spec.quantize(shift_gelu(q as f32 * step_in));
+                if lut.lookup(q) != want {
+                    return Err(format!(
+                        "({in_bits}→{out_bits}) step {step_in}/{step_out}: code {q} → {} vs {want}",
+                        lut.lookup(q)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn lut_endpoints_behave_like_gelu() {
         let spec = |s: f32| QuantSpec::signed(8, Step::new(s).unwrap());

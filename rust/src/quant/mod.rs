@@ -12,6 +12,7 @@ pub mod fold;
 pub mod gelu;
 pub mod layernorm;
 pub mod linear;
+pub mod profile;
 pub mod qtensor;
 pub mod shift_exp;
 pub mod softmax;
@@ -21,6 +22,7 @@ pub use fold::{FoldedLinear, QuantParams};
 pub use gelu::{gelu_ref, shift_gelu, shift_sigmoid, GeluLut};
 pub use layernorm::{qlayernorm_comparator, qlayernorm_reference, welford};
 pub use linear::{dequant_linear, int_linear, int_matmul};
+pub use profile::BitProfile;
 pub use qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 pub use shift_exp::{shift_exp, shift_exp_fixed, LOG2E};
 pub use softmax::{exact_softmax_row, qk_attention, shift_softmax_row};

@@ -1,0 +1,443 @@
+//! [`BitProfile`] — per-module mixed precision as a first-class value.
+//!
+//! The paper's operand-reordering integerization is bit-width-agnostic:
+//! the Eq. 2 folding and the delayed dequantization work at any
+//! precision, and related PTQ work (PTQ4ViT's per-layer search,
+//! P²-ViT's split attention/MLP datapath widths) shows the interesting
+//! operating points are *mixed*. This module replaces the global
+//! `bits: u32` knob with a profile of named **sites** — one entry per
+//! place the encoder block quantizes codes or holds low-bit weights —
+//! so every layer of the stack (quant → block → sim → backend →
+//! serve/eval) carries the full precision assignment instead of a
+//! single scalar.
+//!
+//! ## Sites
+//!
+//! | site         | what it widths                                             |
+//! |--------------|------------------------------------------------------------|
+//! | `attn_x`     | attention input codes (the Q/K/V projection operand)       |
+//! | `q_proj`     | Q projection weights + Q LayerNorm output codes (QKᵀ operand) |
+//! | `k_proj`     | K projection weights + K LayerNorm output codes (QKᵀ operand) |
+//! | `v_proj`     | V projection weights + V quantizer codes (softmax·V operand) |
+//! | `attn_probs` | softmax probability codes, unsigned (softmax·V operand)    |
+//! | `o_proj`     | PV output codes + W_O projection weights                   |
+//! | `mlp_x`      | MLP input codes (the fc1 operand)                          |
+//! | `fc1`        | fc1 weights                                                |
+//! | `gelu_in`    | fc1 requantized output / GELU-LUT input codes              |
+//! | `gelu_out`   | GELU-LUT output codes / the fc2 operand                    |
+//! | `fc2`        | fc2 weights                                                |
+//! | `mlp_out`    | fc2 requantized output codes                               |
+//! | `residual`   | block-boundary codes: Δ_x, attn-out, r1 and Δ_out          |
+//!
+//! [`BitProfile::uniform`] maps every legacy `bits` call site cleanly
+//! (all sites equal), and is pinned bit-identical to the pre-profile
+//! stack by the parity suites.
+//!
+//! ## CLI grammar
+//!
+//! `--bits-profile` accepts `uniform:N`, comma-separated group/site
+//! assignments (`attn:4,mlp:8`, `attn:4,mlp:8,residual:4`,
+//! `uniform:4,gelu_out:8`, any site name from the table), or a path to
+//! a JSON file holding the full site map. Assignments apply in order;
+//! when no `uniform:` base is given, unassigned sites default to the
+//! **widest** assigned value (the safe choice for the shared residual
+//! path). Unknown keys and out-of-range widths fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::util::Json;
+
+/// Narrowest supported site width.
+pub const MIN_BITS: u32 = 2;
+/// Widest supported site width (the narrow-accumulator regime of
+/// [`crate::sim::accumulate`]).
+pub const MAX_BITS: u32 = 8;
+
+/// The per-site precision assignment of one encoder block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitProfile {
+    pub attn_x: u32,
+    pub q_proj: u32,
+    pub k_proj: u32,
+    pub v_proj: u32,
+    pub attn_probs: u32,
+    pub o_proj: u32,
+    pub mlp_x: u32,
+    pub fc1: u32,
+    pub gelu_in: u32,
+    pub gelu_out: u32,
+    pub fc2: u32,
+    pub mlp_out: u32,
+    pub residual: u32,
+}
+
+/// Site names in canonical order (the order [`BitProfile::sites`],
+/// [`BitProfile::key`] and the JSON form use).
+pub const SITE_NAMES: [&str; 13] = [
+    "attn_x",
+    "q_proj",
+    "k_proj",
+    "v_proj",
+    "attn_probs",
+    "o_proj",
+    "mlp_x",
+    "fc1",
+    "gelu_in",
+    "gelu_out",
+    "fc2",
+    "mlp_out",
+    "residual",
+];
+
+/// Sites the `attn:` group key assigns.
+const ATTN_GROUP: [&str; 6] = ["attn_x", "q_proj", "k_proj", "v_proj", "attn_probs", "o_proj"];
+/// Sites the `mlp:` group key assigns.
+const MLP_GROUP: [&str; 6] = ["mlp_x", "fc1", "gelu_in", "gelu_out", "fc2", "mlp_out"];
+
+fn check_bits(what: &str, bits: u32) -> Result<()> {
+    ensure!(
+        (MIN_BITS..=MAX_BITS).contains(&bits),
+        "{what}: bit width {bits} outside the supported {MIN_BITS}..={MAX_BITS}"
+    );
+    Ok(())
+}
+
+impl BitProfile {
+    /// Every site at `bits` — the legacy single-knob configuration.
+    /// Panics on an out-of-range width (like [`crate::quant::int_range`]);
+    /// use [`Self::uniform_checked`] on untrusted input.
+    pub fn uniform(bits: u32) -> BitProfile {
+        assert!(
+            (MIN_BITS..=MAX_BITS).contains(&bits),
+            "unsupported uniform bit width {bits} (supported: {MIN_BITS}..={MAX_BITS})"
+        );
+        BitProfile {
+            attn_x: bits,
+            q_proj: bits,
+            k_proj: bits,
+            v_proj: bits,
+            attn_probs: bits,
+            o_proj: bits,
+            mlp_x: bits,
+            fc1: bits,
+            gelu_in: bits,
+            gelu_out: bits,
+            fc2: bits,
+            mlp_out: bits,
+            residual: bits,
+        }
+    }
+
+    /// Fallible [`Self::uniform`] for CLI/checkpoint input.
+    pub fn uniform_checked(bits: u32) -> Result<BitProfile> {
+        check_bits("uniform profile", bits)?;
+        Ok(BitProfile::uniform(bits))
+    }
+
+    /// `(site name, width)` pairs in canonical order.
+    pub fn sites(&self) -> [(&'static str, u32); 13] {
+        [
+            ("attn_x", self.attn_x),
+            ("q_proj", self.q_proj),
+            ("k_proj", self.k_proj),
+            ("v_proj", self.v_proj),
+            ("attn_probs", self.attn_probs),
+            ("o_proj", self.o_proj),
+            ("mlp_x", self.mlp_x),
+            ("fc1", self.fc1),
+            ("gelu_in", self.gelu_in),
+            ("gelu_out", self.gelu_out),
+            ("fc2", self.fc2),
+            ("mlp_out", self.mlp_out),
+            ("residual", self.residual),
+        ]
+    }
+
+    /// The width of a named site.
+    pub fn site(&self, name: &str) -> Result<u32> {
+        self.sites()
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, b)| *b)
+            .ok_or_else(|| anyhow!("unknown bit-profile site '{name}' — expected one of {SITE_NAMES:?}"))
+    }
+
+    /// Assign a named site, validating the width.
+    pub fn set_site(&mut self, name: &str, bits: u32) -> Result<()> {
+        check_bits(&format!("site '{name}'"), bits)?;
+        let slot = match name {
+            "attn_x" => &mut self.attn_x,
+            "q_proj" => &mut self.q_proj,
+            "k_proj" => &mut self.k_proj,
+            "v_proj" => &mut self.v_proj,
+            "attn_probs" => &mut self.attn_probs,
+            "o_proj" => &mut self.o_proj,
+            "mlp_x" => &mut self.mlp_x,
+            "fc1" => &mut self.fc1,
+            "gelu_in" => &mut self.gelu_in,
+            "gelu_out" => &mut self.gelu_out,
+            "fc2" => &mut self.fc2,
+            "mlp_out" => &mut self.mlp_out,
+            "residual" => &mut self.residual,
+            _ => bail!("unknown bit-profile site '{name}' — expected one of {SITE_NAMES:?}"),
+        };
+        *slot = bits;
+        Ok(())
+    }
+
+    /// `Some(bits)` when every site shares one width.
+    pub fn as_uniform(&self) -> Option<u32> {
+        let b = self.attn_x;
+        self.sites().iter().all(|(_, s)| *s == b).then_some(b)
+    }
+
+    /// Widest site in the profile.
+    pub fn max_bits(&self) -> u32 {
+        self.sites().iter().map(|(_, b)| *b).max().unwrap_or(0)
+    }
+
+    /// Every site in the supported range? (Profiles built through the
+    /// constructors always are; this guards hand-assembled structs.)
+    pub fn validate(&self) -> Result<()> {
+        for (name, bits) in self.sites() {
+            check_bits(&format!("site '{name}'"), bits)?;
+        }
+        Ok(())
+    }
+
+    /// Canonical compact form: `uniform:N` when uniform, else the full
+    /// `site:bits` list in canonical order. Always re-parseable by
+    /// [`Self::parse`] (round-trip pinned by tests), and what describe
+    /// strings and cache keys embed.
+    pub fn key(&self) -> String {
+        if let Some(b) = self.as_uniform() {
+            return format!("uniform:{b}");
+        }
+        self.sites()
+            .iter()
+            .map(|(n, b)| format!("{n}:{b}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Parse the CLI grammar (see the module docs): comma-separated
+    /// `key:bits` entries where `key` is `uniform`, a group (`attn`,
+    /// `mlp`, `residual`) or a site name. Entries apply in order; with
+    /// no leading `uniform:` base, unassigned sites default to the
+    /// widest assigned value.
+    pub fn parse(spec: &str) -> Result<BitProfile> {
+        let spec = spec.trim();
+        ensure!(!spec.is_empty(), "empty bit-profile spec");
+        let mut entries: Vec<(&str, u32)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, val) = part.split_once(':').ok_or_else(|| {
+                anyhow!("bit-profile entry '{part}' is not of the form key:bits")
+            })?;
+            let bits: u32 = val
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bit-profile entry '{part}': '{val}' is not an integer"))?;
+            check_bits(&format!("entry '{part}'"), bits)?;
+            entries.push((key.trim(), bits));
+        }
+        let base = match entries.first() {
+            Some(("uniform", b)) => *b,
+            _ => entries.iter().map(|(_, b)| *b).max().expect("at least one entry"),
+        };
+        let mut profile = BitProfile::uniform(base);
+        for (key, bits) in entries {
+            match key {
+                "uniform" => profile = BitProfile::uniform(bits),
+                "attn" => {
+                    for site in ATTN_GROUP {
+                        profile.set_site(site, bits)?;
+                    }
+                }
+                "mlp" => {
+                    for site in MLP_GROUP {
+                        profile.set_site(site, bits)?;
+                    }
+                }
+                _ => profile.set_site(key, bits).map_err(|_| {
+                    anyhow!(
+                        "unknown bit-profile key '{key}' — expected 'uniform', 'attn', 'mlp', \
+                         or a site name from {SITE_NAMES:?}"
+                    )
+                })?,
+            }
+        }
+        Ok(profile)
+    }
+
+    /// JSON object with every site name mapped to its width.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, bits) in self.sites() {
+            obj.insert(name.to_string(), Json::Num(bits as f64));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse the full-site JSON form. Every site must be present and in
+    /// range, and no extra keys are tolerated — a truncated,
+    /// out-of-range or misspelled profile (e.g. a corrupt
+    /// `plan_cache.json` entry, or a group key that only the inline
+    /// grammar understands) is a loud error, never a default.
+    pub fn from_json(j: &Json) -> Result<BitProfile> {
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                ensure!(
+                    SITE_NAMES.contains(&key.as_str()),
+                    "bit profile: unknown key '{key}' — the JSON form takes exactly the site \
+                     names {SITE_NAMES:?} (group keys like 'attn' exist only in the inline \
+                     grammar)"
+                );
+            }
+        }
+        let mut profile = BitProfile::uniform(MIN_BITS);
+        for name in SITE_NAMES {
+            let bits = j
+                .get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("bit profile: missing or non-numeric site '{name}'"))?;
+            ensure!(
+                bits.fract() == 0.0 && bits >= 0.0,
+                "bit profile: site '{name}' is not an integer ({bits})"
+            );
+            profile.set_site(name, bits as u32)?;
+        }
+        Ok(profile)
+    }
+}
+
+impl fmt::Display for BitProfile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_sets_every_site() {
+        for bits in [2u32, 3, 4, 8] {
+            let p = BitProfile::uniform(bits);
+            assert_eq!(p.as_uniform(), Some(bits));
+            assert!(p.sites().iter().all(|(_, b)| *b == bits));
+            assert_eq!(p.max_bits(), bits);
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_panics_out_of_range() {
+        BitProfile::uniform(9);
+    }
+
+    #[test]
+    fn uniform_checked_is_loud() {
+        assert!(BitProfile::uniform_checked(1).is_err());
+        assert!(BitProfile::uniform_checked(16).is_err());
+        assert_eq!(BitProfile::uniform_checked(4).unwrap(), BitProfile::uniform(4));
+    }
+
+    #[test]
+    fn parse_grammar_groups_and_sites() {
+        // the ISSUE's three grammar shapes
+        assert_eq!(BitProfile::parse("uniform:4").unwrap(), BitProfile::uniform(4));
+        let p = BitProfile::parse("attn:4,mlp:8").unwrap();
+        assert_eq!(p.attn_x, 4);
+        assert_eq!(p.q_proj, 4);
+        assert_eq!(p.attn_probs, 4);
+        assert_eq!(p.o_proj, 4);
+        assert_eq!(p.mlp_x, 8);
+        assert_eq!(p.fc2, 8);
+        // unassigned residual defaults to the widest assigned value
+        assert_eq!(p.residual, 8);
+        assert_eq!(p.as_uniform(), None);
+        // explicit residual override
+        assert_eq!(BitProfile::parse("attn:4,mlp:8,residual:3").unwrap().residual, 3);
+        // a uniform base with a single-site override, applied in order
+        let q = BitProfile::parse("uniform:4,gelu_out:8").unwrap();
+        assert_eq!(q.gelu_out, 8);
+        assert_eq!(q.gelu_in, 4);
+        // whitespace tolerated
+        assert_eq!(BitProfile::parse(" attn:4 , mlp:8 ").unwrap(), p);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input_loudly() {
+        for bad in [
+            "",
+            "4",
+            "uniform",
+            "uniform:x",
+            "uniform:1",   // below MIN_BITS
+            "uniform:9",   // above MAX_BITS
+            "attn:4,mlp:99",
+            "attnx:4",     // unknown key
+            "qproj:4",     // unknown site spelling
+            "attn:4;mlp:8", // wrong separator
+        ] {
+            let err = BitProfile::parse(bad);
+            assert!(err.is_err(), "'{bad}' should fail");
+        }
+        // unknown keys name the valid set
+        let msg = format!("{:#}", BitProfile::parse("attnx:4").unwrap_err());
+        assert!(msg.contains("attnx") && msg.contains("attn_x"), "{msg}");
+    }
+
+    #[test]
+    fn key_round_trips_through_parse() {
+        let mixed = BitProfile::parse("attn:4,mlp:8,residual:3").unwrap();
+        for p in [BitProfile::uniform(3), mixed] {
+            let back = BitProfile::parse(&p.key()).unwrap();
+            assert_eq!(back, p, "key '{}' must re-parse to the same profile", p.key());
+        }
+        assert_eq!(BitProfile::uniform(4).key(), "uniform:4");
+        assert_eq!(format!("{}", BitProfile::uniform(4)), "uniform:4");
+    }
+
+    #[test]
+    fn json_round_trips_and_corruption_is_loud() {
+        let p = BitProfile::parse("attn:4,mlp:8").unwrap();
+        let text = format!("{}", p.to_json());
+        let back = BitProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // a dropped site is a loud error
+        let mut obj = match p.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("gelu_in");
+        let err = BitProfile::from_json(&Json::Obj(obj.clone())).unwrap_err();
+        assert!(format!("{err:#}").contains("gelu_in"), "{err:#}");
+        // an out-of-range site is a loud error too
+        obj.insert("gelu_in".into(), Json::Num(99.0));
+        assert!(BitProfile::from_json(&Json::Obj(obj.clone())).is_err());
+        // ... as is an extra/unknown key (the inline-grammar group keys
+        // are NOT valid in the JSON form)
+        obj.insert("gelu_in".into(), Json::Num(4.0));
+        obj.insert("attn".into(), Json::Num(4.0));
+        let err = BitProfile::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key 'attn'"), "{err:#}");
+    }
+
+    #[test]
+    fn site_accessors_reject_unknown_names() {
+        let mut p = BitProfile::uniform(3);
+        assert_eq!(p.site("fc1").unwrap(), 3);
+        assert!(p.site("nope").is_err());
+        assert!(p.set_site("nope", 4).is_err());
+        p.set_site("fc1", 8).unwrap();
+        assert_eq!(p.fc1, 8);
+        assert!(p.set_site("fc1", 1).is_err(), "out-of-range width fails loudly");
+    }
+}

@@ -5,14 +5,18 @@
 //! [`super::linear`], [`super::matmul`] and [`super::softmax_matmul`].
 //! It lives here once, with the overflow bound pinned by tests:
 //!
-//! With *signed* operand codes of ≤ [`NARROW_MAX_BITS`] bits, one
-//! product is at most `2^(b-1) · 2^(b-1) = 2^14` in magnitude (b = 8),
-//! so a reduction over `K < 2^17` terms is bounded by `2^31` and cannot
-//! overflow an i32 accumulator. The narrow loop auto-vectorizes where
-//! the i64 widening does not (§Perf log), so it is the hot path for
-//! every paper-shaped workload; anything wider or longer falls back to
-//! exact i64. Callers with **unsigned** operands (attention probability
-//! codes reach `2^b - 1`) must pass
+//! The overflow bound is derived **per site** from both operands'
+//! magnitude widths (mixed [`crate::quant::BitProfile`]s give the two
+//! sides of one grid different widths): signed codes of `a` and `b`
+//! magnitude bits multiply to at most `2^(a-1) · 2^(b-1) = 2^(a+b-2)`,
+//! so a reduction over `K < 2^(33-a-b)` terms is bounded by `2^31` and
+//! cannot overflow an i32 accumulator. At the legacy uniform 8-bit
+//! worst case that is exactly `K < 2^17` ([`NARROW_MAX_K`]); narrower
+//! sites earn exponentially longer narrow reductions. The narrow loop
+//! auto-vectorizes where the i64 widening does not (§Perf log), so it
+//! is the hot path for every paper-shaped workload; anything wider or
+//! longer falls back to exact i64. Callers with **unsigned** operands
+//! (attention probability codes reach `2^b - 1`) must pass
 //! [`crate::quant::QuantSpec::magnitude_bits`], which charges them one
 //! extra bit so the same bound stays exact.
 
@@ -21,24 +25,43 @@ use crate::quant::linear::IntMat;
 /// Widest operand code for which the narrow i32 accumulator is exact.
 pub const NARROW_MAX_BITS: u32 = 8;
 
-/// Reduction lengths must stay strictly below this for the narrow path.
+/// Reduction lengths must stay strictly below this for the narrow path
+/// at the uniform worst case (both operands [`NARROW_MAX_BITS`] wide).
 pub const NARROW_MAX_K: usize = 1 << 17;
 
-/// True when a `bits`-wide reduction of length `k` fits the narrow
-/// i32 accumulator exactly.
+/// Exclusive reduction-length bound of the narrow i32 path for operand
+/// magnitudes `a_bits` × `b_bits`: `2^(33 - a - b)` (0 when either
+/// operand exceeds [`NARROW_MAX_BITS`]). `narrow_max_k(8, 8)` is the
+/// legacy [`NARROW_MAX_K`] — pinned by tests.
+pub fn narrow_max_k(a_bits: u32, b_bits: u32) -> usize {
+    if a_bits == 0 || b_bits == 0 || a_bits > NARROW_MAX_BITS || b_bits > NARROW_MAX_BITS {
+        return 0;
+    }
+    1usize << (33 - a_bits - b_bits).min(31)
+}
+
+/// True when a reduction of length `k` over operands of `a_bits` ×
+/// `b_bits` magnitude fits the narrow i32 accumulator exactly.
+pub fn narrow_ok_for(a_bits: u32, b_bits: u32, k: usize) -> bool {
+    k < narrow_max_k(a_bits, b_bits)
+}
+
+/// Uniform-width convenience: both operands `bits` wide.
 pub fn narrow_ok(bits: u32, k: usize) -> bool {
-    bits <= NARROW_MAX_BITS && k < NARROW_MAX_K
+    narrow_ok_for(bits, bits, k)
 }
 
 /// `acc[i·n + j] = Σ_p a(i,p) · b_t(j,p)` — both operands row-major with
 /// the reduction axis contiguous (`b_t` holds one row per *output*
 /// column, i.e. B transposed). This is the weight-stationary layout of
-/// the linear arrays and the QKᵀ grid.
-pub fn matmul_bt(a: &IntMat, b_t: &IntMat, bits: u32) -> Vec<i64> {
+/// the linear arrays and the QKᵀ grid. `a_bits`/`b_bits` are the two
+/// operands' magnitude widths (they select the exact narrow/wide path,
+/// never the numerics).
+pub fn matmul_bt(a: &IntMat, b_t: &IntMat, a_bits: u32, b_bits: u32) -> Vec<i64> {
     debug_assert_eq!(a.cols, b_t.cols, "reduction axis mismatch");
     let (m, k, n) = (a.rows, a.cols, b_t.rows);
     let mut acc = vec![0i64; m * n];
-    if narrow_ok(bits, k) {
+    if narrow_ok_for(a_bits, b_bits, k) {
         for i in 0..m {
             let ar = a.row(i);
             for j in 0..n {
@@ -68,11 +91,11 @@ pub fn matmul_bt(a: &IntMat, b_t: &IntMat, bits: u32) -> Vec<i64> {
 
 /// `acc[i·n + j] = Σ_p a(i,p) · b(p,j)` — B given row-major K×N and
 /// streamed row-wise (the output-stationary attn·V layout).
-pub fn matmul_kn(a: &IntMat, b: &IntMat, bits: u32) -> Vec<i64> {
+pub fn matmul_kn(a: &IntMat, b: &IntMat, a_bits: u32, b_bits: u32) -> Vec<i64> {
     debug_assert_eq!(a.cols, b.rows, "reduction axis mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut acc = vec![0i64; m * n];
-    if narrow_ok(bits, k) {
+    if narrow_ok_for(a_bits, b_bits, k) {
         let mut acc32 = vec![0i32; m * n];
         for i in 0..m {
             let ar = a.row(i);
@@ -129,6 +152,31 @@ mod tests {
         assert!(!narrow_ok(8, NARROW_MAX_K));
         assert!(!narrow_ok(9, 1));
         assert!(narrow_ok(2, 1));
+        assert_eq!(narrow_max_k(8, 8), NARROW_MAX_K);
+    }
+
+    #[test]
+    fn per_site_bound_rederives_from_both_operand_widths() {
+        // mixed-profile sites: a 4-bit × 8-bit grid sums products of at
+        // most 2^10, so K < 2^21 stays exact in i32
+        assert_eq!(narrow_max_k(4, 8), 1 << 21);
+        assert!(narrow_ok_for(4, 8, (1 << 21) - 1));
+        assert!(!narrow_ok_for(4, 8, 1 << 21));
+        // symmetric in the operand order
+        assert_eq!(narrow_max_k(8, 4), narrow_max_k(4, 8));
+        // narrower sites earn longer narrow reductions than 8×8
+        assert!(narrow_max_k(2, 2) > narrow_max_k(8, 8));
+        // anything beyond the narrow regime falls to the wide path
+        assert_eq!(narrow_max_k(9, 2), 0);
+        assert_eq!(narrow_max_k(0, 4), 0);
+        // worst case at the asymmetric edge is exact: products of
+        // magnitude 2^10 summed K = 2^21 - 1 times stays within i32
+        let k = (1 << 21) - 1;
+        let a = IntMat::new(1, k, vec![-8; k]); // 4-bit signed min
+        let b = IntMat::new(1, k, vec![-128; k]); // 8-bit signed min
+        let acc = matmul_bt(&a, &b, 4, 8);
+        assert_eq!(acc[0], 1024i64 * k as i64);
+        assert!(acc[0] <= i32::MAX as i64);
     }
 
     #[test]
@@ -140,7 +188,7 @@ mod tests {
         let a = IntMat::new(1, k, vec![-128; k]);
         let b = IntMat::new(1, k, vec![-128; k]);
         assert!(narrow_ok(8, k));
-        let acc = matmul_bt(&a, &b, 8);
+        let acc = matmul_bt(&a, &b, 8, 8);
         assert_eq!(acc[0], 16384i64 * k as i64);
         assert!(acc[0] <= i32::MAX as i64);
     }
@@ -152,7 +200,7 @@ mod tests {
         let a = IntMat::new(1, k, vec![-128; k]);
         let b = IntMat::new(1, k, vec![-128; k]);
         assert!(!narrow_ok(8, k));
-        let acc = matmul_bt(&a, &b, 8);
+        let acc = matmul_bt(&a, &b, 8, 8);
         assert_eq!(acc[0], 16384i64 * k as i64);
         assert!(acc[0] > i32::MAX as i64);
     }
@@ -168,11 +216,14 @@ mod tests {
             let a = IntMat::new(m, k, rng.codes(m * k, qmin, qmax));
             let b_t = IntMat::new(n, k, rng.codes(n * k, qmin, qmax));
             let want = reference(&a, &b_t);
-            // bt layout, narrow and (forced) wide
-            if matmul_bt(&a, &b_t, bits) != want {
+            // bt layout: narrow, asymmetric-width narrow, and forced wide
+            if matmul_bt(&a, &b_t, bits, bits) != want {
                 return Err("matmul_bt narrow mismatch".into());
             }
-            if matmul_bt(&a, &b_t, 16) != want {
+            if matmul_bt(&a, &b_t, bits, 8) != want {
+                return Err("matmul_bt asymmetric mismatch".into());
+            }
+            if matmul_bt(&a, &b_t, 16, 16) != want {
                 return Err("matmul_bt wide mismatch".into());
             }
             // kn layout: transpose b_t into K×N
@@ -183,10 +234,10 @@ mod tests {
                 }
             }
             let b_kn = IntMat::new(k, n, bk);
-            if matmul_kn(&a, &b_kn, bits) != want {
+            if matmul_kn(&a, &b_kn, bits, bits) != want {
                 return Err("matmul_kn narrow mismatch".into());
             }
-            if matmul_kn(&a, &b_kn, 16) != want {
+            if matmul_kn(&a, &b_kn, 16, 16) != want {
                 return Err("matmul_kn wide mismatch".into());
             }
             Ok(())

@@ -8,9 +8,12 @@
 //! scale foldings as [`ScaleChain`]s, so the Δ̄_X / Δ_W / Δ_attn / Δ_V /
 //! Δ_O bookkeeping is validated at each hop instead of trusted.
 
+use std::collections::BTreeMap;
+
 use anyhow::{ensure, Result};
 
 use crate::quant::linear::IntMat;
+use crate::quant::profile::BitProfile;
 use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 
 use super::delay::DelayLineSim;
@@ -37,6 +40,10 @@ pub struct AttentionSteps {
 }
 
 /// The simulated self-attention module (one encoder block's attention).
+/// Per-site widths come from the [`BitProfile`]: the projection arrays
+/// are sized by their own sites, the probability quantizer by
+/// `attn_probs`, and the PV grid's multiplier by the wider of its two
+/// operands.
 #[derive(Debug)]
 pub struct AttentionSim {
     pub wq: LinearArraySim,
@@ -49,8 +56,7 @@ pub struct AttentionSim {
     pub lnk: LayerNormSim,
     pub steps: AttentionSteps,
     pub heads: usize,
-    pub bits: u32,
-    pub attn_bits: u32,
+    pub profile: BitProfile,
     /// Use the Eq. 4 shift exponential (false = exact exp ablation).
     pub shift: bool,
 }
@@ -155,6 +161,52 @@ impl AttentionReport {
         self.blocks.iter().map(|b| b.pe_count).sum()
     }
 
+    /// MAC totals split by multiplier width (the bit-width classes of a
+    /// mixed [`BitProfile`]). Values sum to [`Self::total_macs`] exactly
+    /// — pinned by tests.
+    pub fn macs_by_width(&self) -> BTreeMap<u32, u64> {
+        let mut out = BTreeMap::new();
+        for b in &self.blocks {
+            if b.mac_ops > 0 {
+                *out.entry(b.mac_bits).or_insert(0u64) += b.mac_ops;
+            }
+        }
+        out
+    }
+
+    /// Workload energy (pJ) split by bit-width class: rows that burn
+    /// MACs group under their `mac_bits`; MAC-free rows (LayerNorms,
+    /// quantizers, LUTs, delay/reversing) group under width 0. Values
+    /// sum to the merged `Σ workload_energy_pj` exactly.
+    pub fn energy_by_width_pj(&self, m: &EnergyModel) -> BTreeMap<u32, f64> {
+        let mut out = BTreeMap::new();
+        for b in &self.blocks {
+            let class = if b.mac_ops > 0 { b.mac_bits } else { 0 };
+            *out.entry(class).or_insert(0f64) += b.workload_energy_pj(m);
+        }
+        out
+    }
+
+    /// One-line rendering of the per-width split, e.g.
+    /// `4b: 12.3M MACs / 1.20 µJ | 8b: 24.5M MACs / 4.10 µJ | other: 0.35 µJ`.
+    pub fn render_width_split(&self, m: &EnergyModel) -> String {
+        let macs = self.macs_by_width();
+        let energy = self.energy_by_width_pj(m);
+        let mut parts = Vec::new();
+        for (width, pj) in &energy {
+            if *width == 0 {
+                parts.push(format!("other: {:.2} µJ", pj / 1e6));
+            } else {
+                parts.push(format!(
+                    "{width}b: {:.1}M MACs / {:.2} µJ",
+                    macs.get(width).copied().unwrap_or(0) as f64 / 1e6,
+                    pj / 1e6,
+                ));
+            }
+        }
+        parts.join(" | ")
+    }
+
     /// Render the Table I layout.
     pub fn render(&self, m: &EnergyModel) -> String {
         let mut s = String::new();
@@ -204,9 +256,9 @@ impl AttentionSim {
     /// quantizing LayerNorms, delay lines and the reversing module.
     pub fn run_front(&self, x: &QTensor) -> Result<FrontOutput> {
         ensure!(
-            x.spec.signed && x.spec.bits == self.bits,
+            x.spec.signed && x.spec.bits == self.profile.attn_x,
             "input codes must be signed {}-bit, got {:?}",
-            self.bits,
+            self.profile.attn_x,
             x.spec
         );
         let mut blocks = Vec::with_capacity(8);
@@ -217,7 +269,7 @@ impl AttentionSim {
         let q_pre = self.wq.run(x, &Epilogue::Scale(PostScale::WeightOnly))?;
         let k_pre = self.wk.run(x, &Epilogue::Scale(PostScale::WeightOnly))?;
         // --- V linear: quantizer epilogue (scales absorbed, §IV-B).
-        let v_spec = QuantSpec::signed(self.bits, self.steps.s_v);
+        let v_spec = QuantSpec::signed(self.profile.v_proj, self.steps.s_v);
         let v_out = self.wv.run(x, &Epilogue::Quantize(v_spec))?;
         blocks.push(q_pre.stats.clone());
         blocks.push(k_pre.stats.clone());
@@ -229,10 +281,10 @@ impl AttentionSim {
         blocks.push(lnq_out.stats.clone());
         blocks.push(lnk_out.stats.clone());
 
-        // --- delay lines holding Q/K while the opposite path fills.
+        // --- delay lines holding the LN-quantized Q/K code streams.
         let hold = q_pre.stats.cycles + lnq_out.stats.cycles;
-        blocks.push(DelayLineSim::new("Q delay", self.bits).run(n, dh, hold));
-        blocks.push(DelayLineSim::new("K delay", self.bits).run(n, dh, hold));
+        blocks.push(DelayLineSim::new("Q delay", self.profile.q_proj).run(n, dh, hold));
+        blocks.push(DelayLineSim::new("K delay", self.profile.k_proj).run(n, dh, hold));
 
         // --- reversing module on the V stream.
         let v_codes = v_out.codes.expect("quantize epilogue yields codes");
@@ -257,19 +309,23 @@ impl AttentionSim {
     pub fn run_head(&self, front: &FrontOutput, h: usize) -> Result<HeadOutput> {
         ensure!(h < self.heads, "head {h} out of range (heads = {})", self.heads);
         let dh = self.head_dim();
-        let attn_spec = QuantSpec::unsigned(self.attn_bits, self.steps.s_attn);
-        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
+        let p = &self.profile;
+        let attn_spec = QuantSpec::unsigned(p.attn_probs, self.steps.s_attn);
+        let out_spec = QuantSpec::signed(p.o_proj, self.steps.s_o);
         let qh = front.q_codes.slice_cols(h * dh, dh);
         let kh = front.k_codes.slice_cols(h * dh, dh);
         let vh = front.v_codes.slice_cols(h * dh, dh);
-        let qk = SoftmaxMatmulSim::new("QK^T matmul+softmax", self.bits).run(
+        // PE multiplier widths: the QKᵀ grid multiplies the two LN-code
+        // streams, the PV grid the probability codes against V codes.
+        let qk = SoftmaxMatmulSim::new("QK^T matmul+softmax", p.q_proj.max(p.k_proj)).run(
             &qh,
             &kh,
             &self.steps.score,
             attn_spec,
             self.shift,
         )?;
-        let pv_h = MatmulArraySim::new("PV matmul", self.attn_bits).run(&qk.codes, &vh, out_spec)?;
+        let pv_h = MatmulArraySim::new("PV matmul", p.attn_probs.max(p.v_proj))
+            .run(&qk.codes, &vh, out_spec)?;
         Ok(HeadOutput {
             head: h,
             attn: qk.codes,
@@ -289,7 +345,7 @@ impl AttentionSim {
         let n = front.q_codes.rows();
         let d = self.d_out();
         let dh = self.head_dim();
-        let out_spec = QuantSpec::signed(self.bits, self.steps.s_o);
+        let out_spec = QuantSpec::signed(self.profile.o_proj, self.steps.s_o);
 
         let mut report = AttentionReport { blocks: front.blocks };
         let mut qk_agg = BlockStats::new("QK^T matmul+softmax", "N x N", 0);
@@ -394,8 +450,7 @@ mod tests {
             lnk: LayerNormSim::new("K LN", g.clone(), b.clone(), 0.5, bits),
             steps: steps.clone(),
             heads,
-            bits,
-            attn_bits: 3,
+            profile: BitProfile::uniform(bits),
             shift: true,
         };
         let x = QTensor::new(

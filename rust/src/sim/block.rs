@@ -21,7 +21,10 @@ use super::layernorm::LayerNormSim;
 use super::mlp::MlpSim;
 use super::stats::BlockStats;
 
-/// The simulated encoder block.
+/// The simulated encoder block. The residual path's quantizer banks
+/// (block input, attn-out, r1, block out) all run at the profile's
+/// `residual` site width; the attention and MLP halves carry their own
+/// per-site widths.
 #[derive(Debug)]
 pub struct BlockSim {
     pub label: String,
@@ -33,7 +36,7 @@ pub struct BlockSim {
     attn_out_spec: QuantSpec,
     res1_spec: QuantSpec,
     out_spec: QuantSpec,
-    bits: u32,
+    residual_bits: u32,
 }
 
 /// Everything [`BlockSim::run`] produces.
@@ -71,19 +74,21 @@ impl BlockSim {
     pub fn new(block: &EncoderBlock) -> BlockSim {
         BlockSim {
             label: block.label.clone(),
+            // LN1 quantizes straight to the attention input site; LN2 to
+            // the MLP input site
             ln1: LayerNormSim::new(
                 "Block LN1",
                 block.norms.ln1_gamma.clone(),
                 block.norms.ln1_beta.clone(),
                 block.attn.s_x.get(),
-                block.bits,
+                block.profile.attn_x,
             ),
             ln2: LayerNormSim::new(
                 "Block LN2",
                 block.norms.ln2_gamma.clone(),
                 block.norms.ln2_beta.clone(),
                 block.mlp.s_in.get(),
-                block.bits,
+                block.profile.mlp_x,
             ),
             attn: block.attn.to_sim(),
             mlp: block.mlp.to_sim(),
@@ -91,7 +96,7 @@ impl BlockSim {
             attn_out_spec: block.attn_out_spec(),
             res1_spec: block.res1_spec(),
             out_spec: block.out_spec(),
-            bits: block.bits,
+            residual_bits: block.profile.residual,
         }
     }
 
@@ -127,11 +132,11 @@ impl BlockSim {
             .out_values
             .ok_or_else(|| anyhow!("block attention sim produced no W_O output"))?;
         let attn_q = QTensor::quantize_f32(&vals, n, d, self.attn_out_spec)?;
-        blocks.push(quantizer_stats("attn-out quantizer", n, d, self.bits));
+        blocks.push(quantizer_stats("attn-out quantizer", n, d, self.residual_bits));
 
         // residual 1
         let r1 = residual_requant(&attn_q, x, self.res1_spec)?;
-        blocks.push(residual_stats("residual add 1", n, d, self.bits));
+        blocks.push(residual_stats("residual add 1", n, d, self.residual_bits));
 
         // pre-LN 2 → MLP input codes
         let r1f = r1.dequantize();
@@ -144,7 +149,7 @@ impl BlockSim {
 
         // residual 2 → block output codes
         let out = residual_requant(&mlp_out.codes, &r1, self.out_spec)?;
-        blocks.push(residual_stats("residual add 2", n, d, self.bits));
+        blocks.push(residual_stats("residual add 2", n, d, self.residual_bits));
 
         Ok(BlockSimOutput { out_codes: out, report: AttentionReport { blocks } })
     }
@@ -153,11 +158,14 @@ impl BlockSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::profile::BitProfile;
 
     #[test]
     fn matches_the_block_reference_bit_for_bit() {
         for bits in [2u32, 3, 4, 8] {
-            let block = EncoderBlock::synthetic(16, 32, 2, bits, 70 + bits as u64).unwrap();
+            let block =
+                EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(bits), 70 + bits as u64)
+                    .unwrap();
             let sim = block.to_sim();
             let x = block.random_input(6, 2).unwrap();
             let want = block.run_reference(&x).unwrap();
@@ -169,7 +177,7 @@ mod tests {
 
     #[test]
     fn report_covers_the_whole_datapath() {
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 77).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 77).unwrap();
         let sim = block.to_sim();
         let x = block.random_input(5, 1).unwrap();
         let out = sim.run(&x).unwrap();
@@ -201,7 +209,7 @@ mod tests {
 
     #[test]
     fn rejects_wrong_input_spec() {
-        let block = EncoderBlock::synthetic(12, 24, 2, 3, 78).unwrap();
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 78).unwrap();
         let sim = block.to_sim();
         let bad = QTensor::new(
             crate::quant::linear::IntMat::new(2, 12, vec![0; 24]),

@@ -57,17 +57,40 @@ pub struct LinearOutput {
     pub stats: BlockStats,
 }
 
-/// Weight-stationary systolic linear layer.
+/// Weight-stationary systolic linear layer. Operand and weight widths
+/// are carried separately so a mixed [`crate::quant::BitProfile`] can
+/// stream (say) 8-bit activations through a 4-bit weight grid; the MAC
+/// multiplier is sized by the wider side ([`Self::mac_bits`]).
 #[derive(Debug)]
 pub struct LinearArraySim {
     pub folded: FoldedLinear,
-    pub bits: u32,
+    /// Activation (streaming operand) code width the array accepts.
+    pub x_bits: u32,
+    /// Stationary weight code width.
+    pub w_bits: u32,
     pub name: String,
 }
 
 impl LinearArraySim {
+    /// Uniform-width array (operand width = weight width = `bits`).
     pub fn new(name: impl Into<String>, folded: FoldedLinear, bits: u32) -> Self {
-        LinearArraySim { folded, bits, name: name.into() }
+        Self::new_split(name, folded, bits, bits)
+    }
+
+    /// Mixed-width array: `x_bits`-wide operands over `w_bits`-wide
+    /// stationary weights.
+    pub fn new_split(
+        name: impl Into<String>,
+        folded: FoldedLinear,
+        x_bits: u32,
+        w_bits: u32,
+    ) -> Self {
+        LinearArraySim { folded, x_bits, w_bits, name: name.into() }
+    }
+
+    /// Multiplier width of this array's PEs (the wider operand).
+    pub fn mac_bits(&self) -> u32 {
+        self.x_bits.max(self.w_bits)
     }
 
     pub fn pe_count(&self) -> u64 {
@@ -89,11 +112,11 @@ impl LinearArraySim {
         ensure!(x.cols() == w.cols, "K mismatch {} vs {}", x.cols(), w.cols);
         ensure!(x.spec.signed, "{}: activation codes must be signed", self.name);
         ensure!(
-            x.spec.bits == self.bits,
-            "{}: operand is {}-bit but the array holds {}-bit weights",
+            x.spec.bits == self.x_bits,
+            "{}: operand is {}-bit but the array streams {}-bit activations",
             self.name,
             x.spec.bits,
-            self.bits
+            self.x_bits
         );
         if let Some(sx) = self.folded_step_x() {
             let got = x.spec.step.get();
@@ -107,12 +130,14 @@ impl LinearArraySim {
         }
         let (m, k, n) = (x.rows(), x.cols(), w.rows);
         let mut stats = BlockStats::new(self.name.clone(), "I x O", (k * n) as u64);
-        stats.kind = super::energy::PeKind::Mac { bits: self.bits, weight_stationary: true };
-        stats.mac_bits = self.bits;
+        stats.kind =
+            super::energy::PeKind::Mac { bits: self.mac_bits(), weight_stationary: true };
+        stats.mac_bits = self.mac_bits();
 
         // --- MAC phase: identical accumulation order to quant::int_matmul
-        // (shared narrow/wide core, see [`super::accumulate`]).
-        let acc = accumulate::matmul_bt(&x.codes, w, self.bits);
+        // (shared narrow/wide core; the exactness bound is re-derived
+        // from BOTH operand widths, see [`super::accumulate`]).
+        let acc = accumulate::matmul_bt(&x.codes, w, x.spec.magnitude_bits(), self.w_bits);
         stats.mac_ops = (m * k * n) as u64;
 
         // --- cycle accounting (wavefront + scan drain).
@@ -121,7 +146,7 @@ impl LinearArraySim {
         stats.cycles = fill + drain;
         stats.idle_pe_cycles = stats.pe_count * stats.cycles - stats.mac_ops;
         // input-skew and scan-chain registers
-        stats.reg_bit_writes = (m * k) as u64 * self.bits as u64 // operand skew
+        stats.reg_bit_writes = (m * k) as u64 * self.x_bits as u64 // operand skew
             + (m * n) as u64 * 24; // accumulator scan-out words
 
         // --- epilogue.
@@ -277,6 +302,32 @@ mod tests {
         for (a, b) in full.values.iter().zip(&ln.values) {
             assert!((a - b * STEP_X).abs() < 1e-5, "{a} vs {}", b * STEP_X);
         }
+    }
+
+    #[test]
+    fn split_widths_stream_wide_operands_over_narrow_weights() {
+        // mixed-profile site: 8-bit activations over 4-bit stationary
+        // weights; the MAC multiplier is sized by the wider side
+        let mut rng = XorShift::new(86);
+        let f = folded(&mut rng, 4, 6, 4);
+        let sim = LinearArraySim::new_split("mixed", f, 8, 4);
+        assert_eq!(sim.mac_bits(), 8);
+        let x = qinput(&mut rng, 3, 6, 8);
+        let got = sim.run(&x, &Epilogue::Scale(PostScale::Full)).unwrap();
+        assert_eq!(got.stats.mac_bits, 8);
+        let bias: Vec<f32> = sim
+            .folded
+            .bias_folded
+            .iter()
+            .zip(&sim.folded.out_scale)
+            .map(|(&b, &s)| b * s)
+            .collect();
+        let want =
+            int_linear(&x.codes, &sim.folded.codes, &bias, 1.0, &sim.folded.out_scale).unwrap();
+        assert_close(&got.values, &want, 1e-5, 1e-5).unwrap();
+        // the 8-bit-operand array refuses narrower operand codes
+        let bad = qinput(&mut rng, 1, 6, 4);
+        assert!(sim.run(&bad, &Epilogue::Scale(PostScale::Full)).is_err());
     }
 
     #[test]

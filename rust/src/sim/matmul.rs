@@ -61,11 +61,15 @@ impl MatmulArraySim {
         stats.mac_bits = self.bits;
 
         // Shared narrow/wide accumulation core; exactness is decided by
-        // the widest operand *magnitude* (unsigned attention codes reach
+        // both operands' *magnitudes* (unsigned attention codes reach
         // 2^b - 1, one bit more than same-width signed codes), not by
-        // the PE label.
-        let op_bits = a.spec.magnitude_bits().max(b_rows.spec.magnitude_bits());
-        let acc = accumulate::matmul_kn(&a.codes, &b_rows.codes, op_bits);
+        // the PE label — the bound is re-derived per site.
+        let acc = accumulate::matmul_kn(
+            &a.codes,
+            &b_rows.codes,
+            a.spec.magnitude_bits(),
+            b_rows.spec.magnitude_bits(),
+        );
         stats.mac_ops = (m * k * n) as u64;
 
         // output-stationary wavefront: fill M+N+K-2, drain N per row chain

@@ -21,7 +21,11 @@ use super::energy::PeKind;
 use super::linear::{Epilogue, LinearArraySim};
 use super::stats::BlockStats;
 
-/// The simulated FFN of one encoder block.
+/// The simulated FFN of one encoder block. Per-site widths come from
+/// the module's [`crate::quant::BitProfile`]: fc1 streams `mlp_x`-wide
+/// operands over `fc1`-wide weights, the LUT bank is indexed at
+/// `gelu_in` and latches `gelu_out`, and fc2 streams `gelu_out` over
+/// `fc2`-wide weights.
 #[derive(Debug)]
 pub struct MlpSim {
     pub fc1: LinearArraySim,
@@ -29,7 +33,6 @@ pub struct MlpSim {
     pub lut: GeluLut,
     h_spec: QuantSpec,
     out_spec: QuantSpec,
-    bits: u32,
 }
 
 /// Everything [`MlpSim::run`] produces.
@@ -44,13 +47,13 @@ pub struct MlpSimOutput {
 impl MlpSim {
     /// Lower a folded [`MlpModule`] onto the systolic substrate.
     pub fn new(module: &MlpModule) -> MlpSim {
+        let p = &module.profile;
         MlpSim {
-            fc1: LinearArraySim::new("FC1 linear", module.fc1.clone(), module.bits),
-            fc2: LinearArraySim::new("FC2 linear", module.fc2.clone(), module.bits),
+            fc1: LinearArraySim::new_split("FC1 linear", module.fc1.clone(), p.mlp_x, p.fc1),
+            fc2: LinearArraySim::new_split("FC2 linear", module.fc2.clone(), p.gelu_out, p.fc2),
             lut: module.gelu_lut().clone(),
-            h_spec: QuantSpec::signed(module.bits, module.s_h),
+            h_spec: QuantSpec::signed(p.gelu_in, module.s_h),
             out_spec: module.out_spec(),
-            bits: module.bits,
         }
     }
 
@@ -68,11 +71,14 @@ impl MlpSim {
         let h = fc1_out.codes.expect("quantize epilogue yields codes");
 
         let g = self.lut.apply(&h)?;
+        // the LUT lane's mux tree is indexed by the input code width;
+        // its output latch is the output code width
+        let (in_bits, out_bits) = (self.lut.in_spec.bits, self.lut.out_spec.bits);
         let mut lut_stats = BlockStats::new("GELU LUT", "1 x H", hdim as u64);
-        lut_stats.kind = PeKind::Lut { bits: self.bits };
+        lut_stats.kind = PeKind::Lut { bits: in_bits };
         lut_stats.cmp_ops = (n * hdim) as u64; // one 2^b-way lookup per element
-        lut_stats.cmp_bits = self.bits;
-        lut_stats.reg_bit_writes = (n * hdim) as u64 * self.bits as u64;
+        lut_stats.cmp_bits = in_bits;
+        lut_stats.reg_bit_writes = (n * hdim) as u64 * out_bits as u64;
         lut_stats.cycles = (n + hdim) as u64;
         lut_stats.idle_pe_cycles =
             (lut_stats.pe_count * lut_stats.cycles).saturating_sub((n * hdim) as u64);
@@ -90,11 +96,13 @@ impl MlpSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::profile::BitProfile;
 
     #[test]
     fn matches_the_quant_reference_bit_for_bit() {
         for bits in [2u32, 3, 4, 8] {
-            let module = MlpModule::synthetic(12, 24, bits, 60 + bits as u64).unwrap();
+            let module =
+                MlpModule::synthetic(12, 24, BitProfile::uniform(bits), 60 + bits as u64).unwrap();
             let sim = module.to_sim();
             let x = module.random_input(7, 3).unwrap();
             let want = module.run_reference(&x).unwrap();
@@ -105,8 +113,27 @@ mod tests {
     }
 
     #[test]
+    fn mixed_profile_mlp_matches_the_reference_too() {
+        // per-site widths through the FFN: wide GELU boundary, narrow
+        // weights — sim ≡ ref must hold for any profile, not just
+        // uniform ones
+        let profile = BitProfile::parse("mlp_x:4,fc1:3,gelu_in:8,gelu_out:8,fc2:3,mlp_out:4")
+            .unwrap();
+        let module = MlpModule::synthetic(10, 20, profile, 91).unwrap();
+        let sim = module.to_sim();
+        let x = module.random_input(6, 2).unwrap();
+        let want = module.run_reference(&x).unwrap();
+        let got = sim.run(&x).unwrap();
+        assert_eq!(got.codes.codes.data, want.codes.data, "mixed-profile MLP codes");
+        assert_eq!(got.codes.spec.bits, 4);
+        // the LUT row is indexed at gelu_in width
+        let lut = got.blocks.iter().find(|b| b.name == "GELU LUT").unwrap();
+        assert_eq!(lut.kind, PeKind::Lut { bits: 8 });
+    }
+
+    #[test]
     fn accounts_fc_macs_and_the_lut_row() {
-        let module = MlpModule::synthetic(8, 20, 3, 9).unwrap();
+        let module = MlpModule::synthetic(8, 20, BitProfile::uniform(3), 9).unwrap();
         let sim = module.to_sim();
         let x = module.random_input(5, 1).unwrap();
         let out = sim.run(&x).unwrap();

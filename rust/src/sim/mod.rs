@@ -38,6 +38,16 @@
 //! [`crate::quant::ScaleChain`]s — no public `sim` API takes a bare
 //! `eff_scale: f32` or a `use_w_scale_only: bool` flag. The shared
 //! narrow/wide accumulation core lives in [`accumulate`].
+//!
+//! Precision is **per-site**: the simulators size their arrays,
+//! comparator banks, GELU-LUT lanes and per-PE energy classes from the
+//! module's [`crate::quant::BitProfile`] (operand and weight widths are
+//! carried separately by [`LinearArraySim`], the accumulate core
+//! re-derives its i32-overflow bound from both operand magnitudes, and
+//! [`AttentionReport::macs_by_width`] /
+//! [`AttentionReport::energy_by_width_pj`] split the merged Table-I
+//! report by bit-width class so mixed profiles report their energy
+//! split, summing exactly to the merged totals).
 
 pub mod accumulate;
 pub mod attention;

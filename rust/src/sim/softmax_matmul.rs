@@ -66,9 +66,15 @@ impl SoftmaxMatmulSim {
         stats.mac_bits = self.bits;
 
         // MAC phase (output-stationary, ascending-d accumulation) through
-        // the shared narrow/wide core.
-        let op_bits = q.spec.bits.max(k.spec.bits);
-        let acc = accumulate::matmul_bt(&q.codes, &k.codes, op_bits);
+        // the shared narrow/wide core; the exactness bound is re-derived
+        // from both operands' widths (mixed profiles give Q and K
+        // independent site widths).
+        let acc = accumulate::matmul_bt(
+            &q.codes,
+            &k.codes,
+            q.spec.magnitude_bits(),
+            k.spec.magnitude_bits(),
+        );
         let scores: Vec<i32> = acc.iter().map(|&v| v as i32).collect();
         stats.mac_ops = (m * d * n) as u64;
 

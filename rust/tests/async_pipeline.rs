@@ -15,8 +15,9 @@ use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
 use ivit::backend::{
-    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, Backend, ExecutionPlan, JobId,
-    JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend, SimMtBackend,
+    AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest, Backend, BitProfile,
+    ExecutionPlan, JobId, JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend,
+    SimMtBackend,
 };
 use ivit::block::EncoderBlock;
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, Response};
@@ -40,7 +41,9 @@ fn out_of_order_poll_is_bit_identical_to_run_batch_at_deit_s_dims() {
     // DeiT-S encoder dims: D=384, 6 heads of 64.
     let tokens = 24;
     for bits in [2u32, 3, 4, 8] {
-        let module = AttnModule::synthetic(384, 384, 6, bits, 500 + bits as u64).unwrap();
+        let module =
+            AttnModule::synthetic(384, 384, 6, BitProfile::uniform(bits), 500 + bits as u64)
+                .unwrap();
         let mk_batch = |rows: u64, salt: u64| {
             AttnBatchRequest::new(
                 (0..rows)
@@ -53,13 +56,14 @@ fn out_of_order_poll_is_bit_identical_to_run_batch_at_deit_s_dims() {
 
         // oracle: each batch through the synchronous run_batch adapter
         let backend = SimMtBackend::new(module.clone(), 4);
-        let mut sync_plan = backend.plan(&PlanOptions::default()).unwrap();
+        let opts = PlanOptions::for_profile(BitProfile::uniform(bits));
+        let mut sync_plan = backend.plan(&opts).unwrap();
         let want: Vec<AttnBatchResponse> =
             batches.iter().map(|b| sync_plan.run_batch(b).unwrap()).collect();
 
         // overlapped: all three jobs in flight at once, drained in
         // REVERSE submission order
-        let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+        let mut plan = backend.plan(&opts).unwrap();
         let jobs: Vec<JobId> = batches.iter().map(|b| plan.submit(b).unwrap()).collect();
         for (j, job) in jobs.iter().enumerate().rev() {
             let got = drain(plan.as_mut(), *job);
@@ -87,7 +91,7 @@ fn out_of_order_poll_is_bit_identical_to_run_batch_at_deit_s_dims() {
 
 #[test]
 fn submit_poll_matches_run_batch_on_synchronous_backends() {
-    let module = AttnModule::synthetic(24, 12, 2, 3, 61).unwrap();
+    let module = AttnModule::synthetic(24, 12, 2, BitProfile::uniform(3), 61).unwrap();
     let req_a = AttnBatchRequest::new(
         (0..2u64).map(|i| AttnRequest::new(module.random_input(6, 20 + i).unwrap())).collect(),
     );
@@ -123,7 +127,7 @@ fn submit_poll_matches_run_batch_on_synchronous_backends() {
 
 #[test]
 fn execution_errors_surface_at_poll_not_submit() {
-    let module = AttnModule::synthetic(16, 8, 2, 3, 71).unwrap();
+    let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 71).unwrap();
     let bad_row = AttnRequest::new(
         ivit::backend::QTensor::new(
             ivit::quant::linear::IntMat::new(4, 16, vec![0; 64]),
@@ -163,7 +167,7 @@ fn execution_errors_surface_at_poll_not_submit() {
 #[test]
 fn dropping_unfinished_jobs_does_not_wedge_or_leak_the_pool() {
     // attention plan: abandon a job mid-flight, keep serving, then drop
-    let module = AttnModule::synthetic(24, 12, 2, 3, 81).unwrap();
+    let module = AttnModule::synthetic(24, 12, 2, BitProfile::uniform(3), 81).unwrap();
     let backend = SimMtBackend::new(module.clone(), 2);
     let mut plan = backend.plan(&PlanOptions::default()).unwrap();
     let _abandoned = plan
@@ -176,7 +180,7 @@ fn dropping_unfinished_jobs_does_not_wedge_or_leak_the_pool() {
     drop(plan); // joins the pool with the abandoned job still parked
 
     // block plan: same contract
-    let block = EncoderBlock::synthetic(12, 24, 2, 3, 83).unwrap();
+    let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 83).unwrap();
     let backend = SimMtBackend::for_block(block.clone(), 2);
     let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
     let mut plan = backend.plan(&opts).unwrap();
@@ -227,7 +231,7 @@ fn pipelined_block_serve(block: &EncoderBlock, workers: usize, n_requests: usize
 
 #[test]
 fn pipelined_block_serve_is_deterministic_across_worker_counts() {
-    let block = EncoderBlock::synthetic(16, 32, 2, 3, 97).unwrap();
+    let block = EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(3), 97).unwrap();
     let n = 8;
     let want = pipelined_block_serve(&block, 1, n);
     for workers in [2usize, 4] {

@@ -7,7 +7,8 @@
 //! every integer stage must agree code-for-code.
 
 use ivit::backend::{
-    AttnModule, AttnRequest, Backend, BackendConfig, BackendRegistry, ReferenceBackend, SimBackend,
+    AttnModule, AttnRequest, Backend, BackendConfig, BackendRegistry, BitProfile,
+    ReferenceBackend, SimBackend,
 };
 
 const TOKENS: usize = 198;
@@ -46,7 +47,8 @@ fn assert_bit_identical(a: &ivit::backend::AttnResponse, b: &ivit::backend::Attn
 fn reference_and_sim_bit_identical_at_deit_s_dims() {
     for bits in [2u32, 3, 4, 8] {
         let module =
-            AttnModule::synthetic(D_IN, D_HEAD, 1, bits, 100 + bits as u64).expect("module");
+            AttnModule::synthetic(D_IN, D_HEAD, 1, BitProfile::uniform(bits), 100 + bits as u64)
+                .expect("module");
         let (a, b) = run_pair(&module, TOKENS, 7);
         assert_bit_identical(&a, &b, &format!("{bits}-bit DeiT-S"));
         // the simulator additionally surfaces the hardware report
@@ -63,7 +65,8 @@ fn reference_and_sim_bit_identical_at_deit_s_dims() {
 fn parity_holds_multi_head_and_exact_exp() {
     // smaller dims, but multi-head and both exponential modes
     for shift in [true, false] {
-        let mut module = AttnModule::synthetic(48, 24, 3, 3, 55).expect("module");
+        let mut module =
+            AttnModule::synthetic(48, 24, 3, BitProfile::uniform(3), 55).expect("module");
         module.shift = shift;
         let (a, b) = run_pair(&module, 20, 13);
         assert_bit_identical(&a, &b, &format!("multi-head shift={shift}"));
@@ -73,7 +76,13 @@ fn parity_holds_multi_head_and_exact_exp() {
 #[test]
 fn registry_built_backends_agree_too() {
     // end-to-end through the name-keyed registry, as the CLI drives it
-    let cfg = BackendConfig { d_in: 32, d_head: 16, heads: 2, bits: 3, ..BackendConfig::default() };
+    let cfg = BackendConfig {
+        d_in: 32,
+        d_head: 16,
+        heads: 2,
+        profile: BitProfile::uniform(3),
+        ..BackendConfig::default()
+    };
     let registry = BackendRegistry::with_defaults();
     let module = cfg.resolve_module().expect("module");
     let x = module.random_input(10, 3).expect("input");
@@ -89,7 +98,7 @@ fn registry_built_backends_agree_too() {
 
 #[test]
 fn capabilities_reflect_the_contract() {
-    let module = AttnModule::synthetic(16, 8, 1, 3, 1).unwrap();
+    let module = AttnModule::synthetic(16, 8, 1, BitProfile::uniform(3), 1).unwrap();
     let r = ReferenceBackend::new(module.clone());
     let s = SimBackend::new(module);
     assert!(r.capabilities().bit_exact_codes && !r.capabilities().hardware_stats);

@@ -8,8 +8,8 @@
 //! plans, and the plan-cache warm path at block scope.
 
 use ivit::backend::{
-    AttnBatchRequest, AttnRequest, Backend, PlanCache, PlanOptions, PlanScope, ReferenceBackend,
-    SimBackend, SimMtBackend,
+    AttnBatchRequest, AttnRequest, Backend, BitProfile, PlanCache, PlanOptions, PlanScope,
+    ReferenceBackend, SimBackend, SimMtBackend,
 };
 use ivit::block::EncoderBlock;
 
@@ -25,15 +25,26 @@ fn block_opts() -> PlanOptions {
 #[test]
 fn full_block_ref_and_sim_bit_identical_at_deit_s_dims() {
     for bits in [2u32, 3, 4, 8] {
-        let block =
-            EncoderBlock::synthetic(DIM, HIDDEN, HEADS, bits, 500 + bits as u64).expect("block");
+        let block = EncoderBlock::synthetic(
+            DIM,
+            HIDDEN,
+            HEADS,
+            BitProfile::uniform(bits),
+            500 + bits as u64,
+        )
+        .expect("block");
         let x = block.random_input(TOKENS, 9).expect("input");
         let req = AttnRequest::new(x);
+        let opts = PlanOptions {
+            scope: PlanScope::Block,
+            profile: BitProfile::uniform(bits),
+            ..PlanOptions::default()
+        };
 
         let mut ref_plan =
-            ReferenceBackend::for_block(block.clone()).plan(&block_opts()).expect("ref plan");
+            ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
         let mut sim_plan =
-            SimBackend::for_block(block.clone()).plan(&block_opts()).expect("sim plan");
+            SimBackend::for_block(block.clone()).plan(&opts).expect("sim plan");
         let a = ref_plan.run_one(&req).expect("ref run");
         let b = sim_plan.run_one(&req).expect("sim run");
 
@@ -65,10 +76,68 @@ fn full_block_ref_and_sim_bit_identical_at_deit_s_dims() {
 }
 
 #[test]
+fn mixed_profile_block_ref_and_sim_bit_identical_at_deit_s_dims() {
+    // the genuinely mixed operating point the refactor exists for:
+    // 4-bit attention datapath, 8-bit MLP datapath (the P²-ViT-style
+    // split), residual path at the widest assigned width
+    let profile = BitProfile::parse("attn:4,mlp:8").expect("profile");
+    assert!(profile.as_uniform().is_none(), "must be genuinely mixed");
+    let block = EncoderBlock::synthetic(DIM, HIDDEN, HEADS, profile, 900).expect("block");
+    let x = block.random_input(TOKENS, 13).expect("input");
+    let req = AttnRequest::new(x);
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+
+    let mut ref_plan =
+        ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
+    let mut sim_plan = SimBackend::for_block(block.clone()).plan(&opts).expect("sim plan");
+    let a = ref_plan.run_one(&req).expect("ref run");
+    let b = sim_plan.run_one(&req).expect("sim run");
+    let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+    assert_eq!(oa.codes.data, ob.codes.data, "mixed-profile block: ref ≡ sim output codes");
+    assert_eq!(oa.spec.bits, 8, "residual site widths the block output");
+
+    // sim-mt agrees too, at any worker count
+    for workers in [1usize, 3] {
+        let mut mt_plan =
+            SimMtBackend::for_block(block.clone(), workers).plan(&opts).expect("sim-mt plan");
+        let c = mt_plan.run_one(&req).expect("sim-mt run");
+        assert_eq!(
+            c.out_codes.as_ref().unwrap().codes.data,
+            oa.codes.data,
+            "mixed-profile block: sim-mt({workers}) ≡ ref"
+        );
+    }
+
+    // the per-bit-width-split stats: the report must carry BOTH width
+    // classes, and the split totals must sum exactly to the merged
+    // report (MACs) / the merged energy (pJ)
+    let report = b.report.as_ref().expect("block sim surfaces stats");
+    let macs = report.macs_by_width();
+    assert!(macs.contains_key(&4), "4-bit MAC class present: {macs:?}");
+    assert!(macs.contains_key(&8), "8-bit MAC class present: {macs:?}");
+    assert_eq!(
+        macs.values().sum::<u64>(),
+        report.total_macs(),
+        "per-width MAC split must sum to the merged total"
+    );
+    // the FC arrays run at the MLP's 8-bit class, attention MACs at 4
+    assert_eq!(macs[&8] % ((TOKENS * DIM * HIDDEN) as u64), 0, "FC MACs in the 8-bit class");
+    let energy = ivit::sim::EnergyModel::default();
+    let split = report.energy_by_width_pj(&energy);
+    let merged: f64 = report.blocks.iter().map(|bl| bl.workload_energy_pj(&energy)).sum();
+    let split_sum: f64 = split.values().sum();
+    assert!(
+        (split_sum - merged).abs() <= 1e-6 * merged.abs().max(1.0),
+        "per-width energy split {split_sum} must sum to the merged report {merged}"
+    );
+    assert!(!report.render_width_split(&energy).is_empty());
+}
+
+#[test]
 fn sim_mt_block_plans_are_deterministic_across_worker_counts() {
     // smaller dims (worker determinism is dimension-independent), batch
     // of 4 so rows actually shard
-    let block = EncoderBlock::synthetic(48, 96, 3, 3, 91).expect("block");
+    let block = EncoderBlock::synthetic(48, 96, 3, BitProfile::uniform(3), 91).expect("block");
     let reqs: Vec<AttnRequest> = (0..4u64)
         .map(|i| AttnRequest::new(block.random_input(20, 700 + i).expect("input")))
         .collect();
@@ -101,7 +170,7 @@ fn sim_mt_block_plans_are_deterministic_across_worker_counts() {
 
 #[test]
 fn plan_cache_serves_block_plans_warm_and_bit_identical() {
-    let block = EncoderBlock::synthetic(32, 64, 2, 3, 77).expect("block");
+    let block = EncoderBlock::synthetic(32, 64, 2, BitProfile::uniform(3), 77).expect("block");
     let backend = ReferenceBackend::for_block(block.clone());
     let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(6, 5).expect("input")));
     let mut cache = PlanCache::new();

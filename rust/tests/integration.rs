@@ -141,7 +141,11 @@ fn backend_trio_replays_the_export_through_one_request() {
     let case = AttnCase::load(&dir.join("attn_case")).unwrap();
     let req = AttnRequest::new(case.input().unwrap());
     let registry = BackendRegistry::with_defaults();
-    let cfg = BackendConfig { artifacts: Some(dir), bits: case.bits, ..BackendConfig::default() };
+    let cfg = BackendConfig {
+        artifacts: Some(dir),
+        profile: ivit::quant::BitProfile::uniform_checked(case.bits).unwrap(),
+        ..BackendConfig::default()
+    };
     for name in ["ref", "sim"] {
         let mut b = registry.create(name, &cfg).unwrap();
         let resp = b.run_attention(&req).unwrap();

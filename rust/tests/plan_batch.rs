@@ -12,7 +12,7 @@
 //!   emit the same full fp attention output.
 
 use ivit::backend::{
-    AttnBatchRequest, AttnModule, AttnRequest, AttnResponse, Backend, PlanOptions,
+    AttnBatchRequest, AttnModule, AttnRequest, AttnResponse, Backend, BitProfile, PlanOptions,
     ReferenceBackend, SimBackend, SimMtBackend,
 };
 
@@ -42,7 +42,9 @@ fn batch_equals_loop_for_ref_and_sim_at_deit_s_dims() {
     // DeiT-S attention dims (D_in=384, head dim 64); 2 rows per batch.
     let tokens = 48;
     for bits in [2u32, 3, 4, 8] {
-        let module = AttnModule::synthetic(D_IN, D_HEAD, 1, bits, 300 + bits as u64).unwrap();
+        let module =
+            AttnModule::synthetic(D_IN, D_HEAD, 1, BitProfile::uniform(bits), 300 + bits as u64)
+                .unwrap();
         let reqs = batch(&module, tokens, 2);
         let backends: Vec<Box<dyn Backend>> = vec![
             Box::new(ReferenceBackend::new(module.clone())),
@@ -53,7 +55,8 @@ fn batch_equals_loop_for_ref_and_sim_at_deit_s_dims() {
             let label = format!("{bits}-bit {name}");
             let singles: Vec<AttnResponse> =
                 reqs.iter().map(|r| backend.run_attention(r).expect("single run")).collect();
-            let mut plan = backend.plan(&PlanOptions::default()).expect("plan");
+            let mut plan =
+                backend.plan(&PlanOptions::for_profile(BitProfile::uniform(bits))).expect("plan");
             let batched =
                 plan.run_batch(&AttnBatchRequest::new(reqs.clone())).expect("batched run");
             assert_eq!(batched.items.len(), singles.len(), "{label}: row count");
@@ -66,7 +69,7 @@ fn batch_equals_loop_for_ref_and_sim_at_deit_s_dims() {
 
 #[test]
 fn sim_mt_is_deterministic_across_worker_counts() {
-    let module = AttnModule::synthetic(48, 24, 3, 3, 91).unwrap();
+    let module = AttnModule::synthetic(48, 24, 3, BitProfile::uniform(3), 91).unwrap();
     let reqs = batch(&module, 20, 5);
     let req = AttnBatchRequest::new(reqs);
 
@@ -96,7 +99,7 @@ fn sim_mt_is_deterministic_across_worker_counts() {
 
 #[test]
 fn wo_projection_gives_full_fp_output_on_both_integer_backends() {
-    let module = AttnModule::synthetic(32, 16, 2, 3, 11).unwrap();
+    let module = AttnModule::synthetic(32, 16, 2, BitProfile::uniform(3), 11).unwrap();
     assert!(module.wo.is_some(), "synthetic modules carry W_O");
     let tokens = 9;
     let req = AttnRequest::new(module.random_input(tokens, 5).unwrap());
@@ -115,10 +118,10 @@ fn wo_projection_gives_full_fp_output_on_both_integer_backends() {
 
 #[test]
 fn run_one_adapter_matches_run_batch_of_one() {
-    let module = AttnModule::synthetic(24, 12, 2, 4, 33).unwrap();
+    let module = AttnModule::synthetic(24, 12, 2, BitProfile::uniform(4), 33).unwrap();
     let req = AttnRequest::new(module.random_input(7, 3).unwrap());
     let backend = SimBackend::new(module);
-    let mut plan = backend.plan(&PlanOptions::default()).unwrap();
+    let mut plan = backend.plan(&PlanOptions::for_profile(BitProfile::uniform(4))).unwrap();
     let single = plan.run_one(&req).unwrap();
     let batch = plan.run_batch(&AttnBatchRequest::single(req)).unwrap();
     assert_rows_identical(&single, &batch.items[0], "run_one adapter");
