@@ -16,12 +16,16 @@
 #                      through an attn:4,mlp:8 encoder block with ref ≡ sim
 #                      bit-identity asserted (examples/profile_smoke.rs) plus
 #                      a tiny mixed-profile `ivit eval --backend ref`
+#   make serve-net-smoke — CI smoke for the wire protocol: a loopback-UDS
+#                      `ivit serve --listen` server plus an `ivit request`
+#                      client, with every reply asserted bit-identical to a
+#                      local reference run of the same block (--verify-local)
 #   make artifacts   — lower the JAX model to HLO + export eval set / attn_case
 #                      (needs the python toolchain; see python/compile/)
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke serve-net-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -50,6 +54,22 @@ profile-smoke:
 	cd $(RUST_DIR) && cargo run --release -q -- eval --backend ref \
 		--bits-profile "attn:4,mlp:8" --dim 16 --hidden 32 --patch 8 \
 		--limit 4 --images 4
+
+serve-net-smoke:
+	cd $(RUST_DIR) && cargo build --release -q
+	@set -e; \
+	sock=/tmp/ivit_net_smoke_$$$$.sock; \
+	rm -f $$sock; \
+	$(RUST_DIR)/target/release/ivit serve --backend ref --scope block \
+	  --listen uds:$$sock --serve-timeout-s 120 \
+	  --tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8 & \
+	server=$$!; \
+	for i in $$(seq 1 200); do [ -S $$sock ] && break; sleep 0.05; done; \
+	[ -S $$sock ] || { echo "serve-net-smoke: server socket never appeared" >&2; kill $$server 2>/dev/null; exit 1; }; \
+	$(RUST_DIR)/target/release/ivit request --connect uds:$$sock --tenant smoke \
+	  --count 8 --tokens 16 --dim 32 --hidden 64 --heads 2 --verify-local \
+	  || { kill $$server 2>/dev/null; exit 1; }; \
+	wait $$server
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(RUST_DIR)/artifacts

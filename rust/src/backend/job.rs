@@ -163,6 +163,37 @@ mod tests {
     }
 
     #[test]
+    fn unknown_and_never_parked_ids_poll_as_errors_not_pending() {
+        let mut jobs: SyncJobs<u32> = SyncJobs::new();
+        // an id the ledger never issued at all
+        let err = jobs.poll(JobId::from_raw(999), "wire").unwrap_err();
+        assert!(format!("{err}").contains("job#999"), "{err}");
+        assert!(format!("{err}").contains("wire"), "names the caller: {err}");
+        // an id minted via next_id but never parked (the concurrent-plan
+        // path) is indistinguishable from drained — an error, not Pending
+        let minted = jobs.next_id();
+        let err = jobs.poll(minted, "wire").unwrap_err();
+        assert!(format!("{err}").contains("unknown or already-drained"), "{err}");
+        assert_eq!(jobs.parked(), 0);
+    }
+
+    #[test]
+    fn error_state_poll_consumes_the_job() {
+        let mut jobs: SyncJobs<u32> = SyncJobs::new();
+        let bad = jobs.push(Err(anyhow!("quant spec mismatch")));
+        assert_eq!(jobs.parked(), 1);
+        // the first poll surfaces the execution error...
+        let err = jobs.poll(bad, "wire").unwrap_err();
+        assert!(format!("{err}").contains("quant spec mismatch"), "{err}");
+        // ...and consumes the job: the ledger is empty and a re-poll is
+        // the loud unknown-id error naming the job, not the stale error
+        assert_eq!(jobs.parked(), 0);
+        let err = jobs.poll(bad, "wire").unwrap_err();
+        assert!(format!("{err}").contains("unknown or already-drained"), "{err}");
+        assert!(format!("{err}").contains("job#0"), "{err}");
+    }
+
+    #[test]
     fn job_state_accessors() {
         let p: JobState<u8> = JobState::Pending;
         assert!(p.is_pending());

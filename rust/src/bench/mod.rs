@@ -120,10 +120,19 @@ pub struct BenchRecord {
     fields: Vec<(String, String)>,
 }
 
+/// Version of the BENCH_*.json record layout. Bump when a field is
+/// renamed or its meaning changes, so trajectory consumers can branch.
+pub const SCHEMA_VERSION: u32 = 2;
+
 impl BenchRecord {
-    /// Start a record with its `name` field.
+    /// Start a record with its `name` and `schema_version` fields.
     pub fn new(name: &str) -> BenchRecord {
-        BenchRecord { fields: vec![("name".into(), json_escape(name))] }
+        BenchRecord {
+            fields: vec![
+                ("name".into(), json_escape(name)),
+                ("schema_version".into(), SCHEMA_VERSION.to_string()),
+            ],
+        }
     }
 
     /// Add a numeric field (non-finite values serialize as `null`).
@@ -261,7 +270,7 @@ mod tests {
         let s = r.render();
         assert_eq!(
             s,
-            r#"{"name":"throughput.batch_vs_per_row","backend":"sim-mt","rows_per_s":123.5,"ratio":null}"#
+            r#"{"name":"throughput.batch_vs_per_row","schema_version":2,"backend":"sim-mt","rows_per_s":123.5,"ratio":null}"#
         );
         // escaping
         let esc = BenchRecord::new("a\"b\\c\nd").render();

@@ -116,6 +116,39 @@ pub fn validate_backend_profile(backend: &str, profile: &BitProfile) -> Result<(
     Ok(())
 }
 
+/// Arg-validation for networked serving (`ivit serve --listen ...`):
+/// structural listen-spec errors, zero/inverted admission bounds, and
+/// the unwired pjrt combination all fail here, before any socket is
+/// bound or plan built.
+pub fn validate_serve_net(
+    backend: &str,
+    listen: &str,
+    tenants: usize,
+    queue_bound: usize,
+) -> Result<()> {
+    if backend == "pjrt" {
+        bail!(
+            "--listen serving is not wired to the pjrt backend (the networked front \
+             end serves the attention/block activation path) — use --backend \
+             ref|sim|sim-mt with --listen, or drop --listen for the in-process loop"
+        );
+    }
+    crate::net::Listen::parse(listen)?;
+    if tenants == 0 {
+        bail!("--tenants must be ≥ 1 (it is the per-tenant in-flight cap)");
+    }
+    if queue_bound == 0 {
+        bail!("--queue-bound must be ≥ 1 (it is the global in-flight cap)");
+    }
+    if queue_bound < tenants {
+        bail!(
+            "--queue-bound {queue_bound} is below --tenants {tenants} — the global \
+             cap must admit at least one tenant's full allowance"
+        );
+    }
+    Ok(())
+}
+
 pub const USAGE: &str = "\
 ivit — Low-Bit Integerization of Vision Transformers (operand reordering)
 
@@ -153,6 +186,29 @@ COMMANDS:
               sim-mt: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
                       --pipeline-depth N (in-flight batches, default 2)
+              networked serving (ref/sim/sim-mt only):
+                --listen tcp:<host:port>|uds:<path> (serve the framed wire
+                protocol instead of the in-process synthetic load loop;
+                --requests N then means 'stop after N served replies',
+                0 = serve until killed)
+                --metrics-listen tcp:...|uds:... (plaintext metrics dump
+                per connection: coordinator snapshot + per-tenant lines)
+                --tenants N (per-tenant in-flight cap, default 64)
+                --queue-bound N (global in-flight cap, default 256; must
+                be >= --tenants)
+                --retry-after-ms MS (back-off carried in shed replies,
+                default 25)
+                --serve-timeout-s S (wall-clock backstop, 0 = none)
+  request     send activation batches to a `serve --listen` server
+              --connect tcp:<host:port>|uds:<path> (required)
+              --tenant NAME (default cli)  --count N (requests, default 1)
+              --tokens N --dim D (request shape; must match the server)
+              --input-seed S (activation PRNG seed, default 11)
+              --pipelined (submit all, then collect out of order)
+              --verify-local: rebuild the server's synthetic block
+              locally (--scope block --hidden H --heads N --bits-profile P
+              --seed S, defaults matching serve) and assert the wire
+              responses are BIT-IDENTICAL to in-process execution
   eval        Table II: accuracy of a model variant on the eval set
               --backend pjrt|ref|sim|sim-mt (default pjrt)
               pjrt: --artifacts DIR  --mode ...  --bits N  [--limit N]
@@ -171,6 +227,28 @@ COMMANDS:
               (--synthetic: run a random module instead — verifies nothing)
   info        print the artifact manifest summary  --artifacts DIR
   help        this text
+
+WIRE PROTOCOL (serve --listen / request --connect):
+  Framed, length-prefixed, over TCP or UDS. Every frame is a fixed
+  16-byte header + payload; integers are little-endian:
+    [0..2)  magic 0x69 0x56 ('iV')     [2]     version (1)
+    [3]     type: 1 request, 2 response, 3 error, 4 keepalive (echoed)
+    [4..12) stream id u64 (client-chosen, echoed on the reply)
+    [12..16) payload length u32 (cap 16 MiB)
+  One connection multiplexes many in-flight stream ids. Request payload:
+  u16 tenant len, tenant, u32 rows, u32 cols, rows*cols f32 activations
+  as raw LE bit patterns — responses are bit-identical to in-process
+  execution. Error payload: u16 code, u32 retry-after ms, u32 detail
+  len, detail. Error codes:
+    1 bad-magic (fatal: connection closes)   2 unsupported-version
+    3 bad-frame-type   4 frame-too-large     5 bad-payload
+    6 shed             7 internal
+  Codes 2-5 are recoverable: the offending frame is consumed, an error
+  frame is returned, the connection keeps serving. A shed reply (code 6:
+  per-tenant cap, global cap, or full batcher queue) carries
+  retry-after-ms > 0 — back off that long and resubmit (the client
+  library's request_with_retry does). retry-after-ms = 0 on any other
+  code means retrying will not help.
 ";
 
 #[cfg(test)]
@@ -268,6 +346,25 @@ mod tests {
             validate_serve_scope(backend, "attention").unwrap();
         }
         validate_serve_scope("pjrt", "attention").unwrap();
+    }
+
+    #[test]
+    fn serve_net_validation_is_fail_fast() {
+        validate_serve_net("ref", "tcp:127.0.0.1:0", 4, 16).unwrap();
+        validate_serve_net("sim-mt", "uds:/tmp/ivit.sock", 1, 1).unwrap();
+        // pjrt is not wired to the networked front end — actionable error
+        let err = validate_serve_net("pjrt", "tcp:127.0.0.1:0", 4, 16).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt") && msg.contains("ref|sim|sim-mt"), "{msg}");
+        // structural listen errors surface here, before any socket I/O
+        assert!(validate_serve_net("ref", "127.0.0.1:80", 4, 16).is_err(), "missing scheme");
+        assert!(validate_serve_net("ref", "tcp:host:notaport", 4, 16).is_err(), "bad port");
+        assert!(validate_serve_net("ref", "uds:", 4, 16).is_err(), "empty path");
+        // zero and inverted bounds are rejected
+        assert!(validate_serve_net("ref", "tcp:127.0.0.1:0", 0, 16).is_err());
+        assert!(validate_serve_net("ref", "tcp:127.0.0.1:0", 4, 0).is_err());
+        let err = validate_serve_net("ref", "tcp:127.0.0.1:0", 8, 4).unwrap_err();
+        assert!(format!("{err}").contains("queue-bound"), "{err}");
     }
 
     #[test]

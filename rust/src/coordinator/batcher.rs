@@ -98,6 +98,18 @@ pub struct Handle {
 }
 
 impl Handle {
+    /// The coordinator's shared metrics (the serving front end both
+    /// bumps its shed counter and snapshots it for the endpoint).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Exact number of f32 elements [`Handle::submit`] requires per
+    /// image — callers validating external payloads check this first.
+    pub fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
     /// Submit an image; returns a receiver for the response.
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>, SubmitError> {
         assert_eq!(image.len(), self.image_elems, "image payload size");

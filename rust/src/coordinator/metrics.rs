@@ -83,6 +83,9 @@ pub struct Snapshot {
     pub mean_us: f64,
     pub max_us: u64,
     pub rejected: u64,
+    /// Requests refused with a retry-able shed response (admission caps
+    /// or a full batcher queue seen from the wire).
+    pub shed: u64,
     /// Requests currently waiting in the bounded queue.
     pub queue_depth: u64,
     /// Deepest the queue ever got.
@@ -94,6 +97,29 @@ pub struct Snapshot {
     pub inflight_peak: u64,
 }
 
+impl Snapshot {
+    /// Plaintext metrics lines (`name value`), shared verbatim by the
+    /// serve shutdown report and the networked metrics endpoint.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("requests_total {}\n", self.requests));
+        out.push_str(&format!("batches_total {}\n", self.batches));
+        out.push_str(&format!("batch_mean {:.2}\n", self.mean_batch));
+        for (q, v) in [("p50", self.p50_us), ("p95", self.p95_us), ("p99", self.p99_us)] {
+            out.push_str(&format!("latency_us{{q=\"{q}\"}} {v}\n"));
+        }
+        out.push_str(&format!("latency_mean_us {:.1}\n", self.mean_us));
+        out.push_str(&format!("latency_max_us {}\n", self.max_us));
+        out.push_str(&format!("queue_depth {}\n", self.queue_depth));
+        out.push_str(&format!("queue_peak {}\n", self.queue_peak));
+        out.push_str(&format!("inflight {}\n", self.inflight));
+        out.push_str(&format!("inflight_peak {}\n", self.inflight_peak));
+        out.push_str(&format!("rejected_total {}\n", self.rejected));
+        out.push_str(&format!("shed_total {}\n", self.shed));
+        out
+    }
+}
+
 /// Shared metrics for one coordinator: counters, the latency histogram,
 /// and the pipeline gauges (queue depth, in-flight batches) with their
 /// high-water marks.
@@ -103,6 +129,8 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests shed with a retry-after by the serving front end.
+    pub shed: AtomicU64,
     pub batch_sizes: Mutex<Vec<u32>>,
     queue_depth: AtomicU64,
     queue_peak: AtomicU64,
@@ -161,6 +189,7 @@ impl Metrics {
             mean_us: self.latency.mean_us(),
             max_us: self.latency.max_us(),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
@@ -204,6 +233,27 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
         assert_eq!(s.requests, 1);
+    }
+
+    #[test]
+    fn snapshot_renders_every_gauge() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.latency.record(Duration::from_micros(100));
+        m.rejected.fetch_add(2, Ordering::Relaxed);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        let text = m.snapshot().render();
+        for needle in [
+            "requests_total 1",
+            "batches_total 1",
+            "latency_us{q=\"p95\"}",
+            "rejected_total 2",
+            "shed_total 3",
+            "queue_peak 0",
+            "inflight_peak 0",
+        ] {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod metrics;
 
 pub use batcher::{BatcherConfig, Coordinator, Handle, Request, Response, SubmitError};
 pub use executor::{AttnBatchExecutor, BatchExecutor, MockExecutor, PjrtExecutor};
-pub use metrics::{Histogram, Snapshot};
+pub use metrics::{Histogram, Metrics, Snapshot};

@@ -85,6 +85,12 @@
 //!   latency/throughput/queue-depth metrics; serves any [`backend`] at
 //!   attention or encoder-block scope via
 //!   [`coordinator::AttnBatchExecutor`].
+//! * [`net`] — the networked serving front end: the framed wire
+//!   protocol (versioned header, request/response/error/keepalive
+//!   frames) over TCP/UDS, per-connection stream multiplexing onto the
+//!   coordinator, per-tenant admission control with overload shedding,
+//!   the plaintext metrics endpoint, and the client library behind
+//!   `ivit request`.
 //! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
 //!   (criterion is not in this image's offline crate set).
 
@@ -101,6 +107,7 @@ pub mod block;
 pub mod cli;
 pub mod coordinator;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -17,9 +17,11 @@ use ivit::backend::{
 };
 use ivit::bench::BenchRecord;
 use ivit::block::EncoderBlock;
-use ivit::cli::{validate_backend_profile, validate_serve_scope, Args, USAGE};
+use ivit::cli::{validate_backend_profile, validate_serve_net, validate_serve_scope, Args, USAGE};
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor, Snapshot};
 use ivit::model::{AttnCase, EvalSet, VitConfig, VitModel};
+use ivit::net::{AdmissionConfig, Client, Listen, NetReply, NetResponse, Server, ServerConfig};
+use ivit::quant::QTensor;
 use ivit::runtime::Engine;
 use ivit::sim::{AttentionSim, EnergyModel};
 use ivit::util::tensorio::Tensor;
@@ -35,6 +37,7 @@ fn main() {
     };
     let r = match args.command.as_str() {
         "serve" => cmd_serve(&args),
+        "request" => cmd_request(&args),
         "eval" => cmd_eval(&args),
         "power" => cmd_power(&args),
         "simulate" => cmd_simulate(&args),
@@ -141,6 +144,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flags.contains_key("bits-profile") {
         validate_backend_profile(&backend, &bits_profile(args, 3)?)?;
     }
+    // networked serving flags fail fast, before any planning work
+    if let Some(listen) = args.flags.get("listen") {
+        validate_serve_net(
+            &backend,
+            listen,
+            args.usize("tenants", 64)?,
+            args.usize("queue-bound", 256)?,
+        )?;
+    }
     match backend.as_str() {
         "pjrt" => cmd_serve_images(args),
         other => cmd_serve_attention(args, other, &scope),
@@ -229,15 +241,10 @@ fn cmd_serve_images(args: &Args) -> Result<()> {
         .count();
     let s = coord.shutdown();
     println!("\n== serve report (pjrt {mode}/{bits}b, batch {batch}) ==");
-    println!("requests      : {n_requests} ({} rejected-retries recorded)", s.rejected);
     println!("wall time     : {:.3}s", wall.as_secs_f64());
     println!("throughput    : {:.1} img/s", n_requests as f64 / wall.as_secs_f64());
-    println!("mean batch    : {:.2}", s.mean_batch);
-    println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
-    println!("latency p95   : {:.2} ms", s.p95_us as f64 / 1e3);
-    println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
-    println!("queue peak    : {} (in-flight peak {})", s.queue_peak, s.inflight_peak);
     println!("accuracy      : {:.4}", correct as f64 / n_requests as f64);
+    print!("{}", s.render());
     emit_serve_record("pjrt", "image", n_requests, wall.as_secs_f64(), &s);
     Ok(())
 }
@@ -336,6 +343,7 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
     println!("backend: {backend_name} ({scope} scope) — {}", exec.describe());
     let report_sink = exec.report_sink();
     let image_elems = ivit::coordinator::BatchExecutor::image_elems(&exec);
+    let out_elems = ivit::coordinator::BatchExecutor::num_classes(&exec);
 
     let coord = Coordinator::start(
         exec,
@@ -346,6 +354,50 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
         },
     );
     let h = coord.handle();
+
+    // --listen: hand the coordinator to the wire front end and let
+    // remote clients drive it instead of the synthetic loop below
+    if let Some(spec) = args.flags.get("listen") {
+        let timeout_s = args.f64("serve-timeout-s", 0.0)?;
+        let cfg = ServerConfig {
+            listen: Listen::parse(spec)?,
+            metrics_listen: match args.flags.get("metrics-listen") {
+                Some(m) => Some(Listen::parse(m)?),
+                None => None,
+            },
+            admission: AdmissionConfig {
+                per_tenant: args.usize("tenants", 64)?,
+                global: args.usize("queue-bound", 256)?,
+                retry_after_ms: args.u32("retry-after-ms", 25)?,
+            },
+            request_limit: n_requests as u64,
+            in_shape: (tokens, d_in),
+            out_shape: (tokens, out_elems / tokens),
+            timeout: (timeout_s > 0.0).then(|| Duration::from_secs_f64(timeout_s)),
+        };
+        let server = Server::start(h, cfg)?;
+        println!(
+            "listening on {} — {tokens}×{d_in} activations in, {tokens}×{} out; \
+             stopping after {n_requests} served replies (0 = run until killed)",
+            server.listen(),
+            out_elems / tokens
+        );
+        let t0 = Instant::now();
+        let report = server.wait()?;
+        let wall = t0.elapsed();
+        let s = coord.shutdown();
+        println!("\n== net serve report ({backend_name} {scope}, batch {batch}) ==");
+        if report.timed_out {
+            println!("(stopped by the --serve-timeout-s backstop)");
+        }
+        println!("served        : {} replies ({} shed)", report.served, report.shed);
+        println!("wall time     : {:.3}s", wall.as_secs_f64());
+        print!("{}", s.render());
+        print!("{}", report.tenants);
+        emit_serve_record(backend_name, scope, report.served as usize, wall.as_secs_f64(), &s);
+        return Ok(());
+    }
+
     println!(
         "serving {n_requests} {scope} requests ({tokens}×{d_in} activations, rate = {}) ...",
         if rate > 0.0 { format!("{rate} req/s") } else { "closed-loop".into() }
@@ -369,14 +421,9 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
     let wall = t0.elapsed();
     let s = coord.shutdown();
     println!("\n== serve report ({backend_name} {scope}, batch {batch}) ==");
-    println!("requests      : {n_requests}");
     println!("wall time     : {:.3}s", wall.as_secs_f64());
     println!("throughput    : {:.2} req/s", n_requests as f64 / wall.as_secs_f64());
-    println!("mean batch    : {:.2}", s.mean_batch);
-    println!("latency p50   : {:.2} ms", s.p50_us as f64 / 1e3);
-    println!("latency p95   : {:.2} ms", s.p95_us as f64 / 1e3);
-    println!("latency p99   : {:.2} ms", s.p99_us as f64 / 1e3);
-    println!("queue peak    : {} (in-flight peak {})", s.queue_peak, s.inflight_peak);
+    print!("{}", s.render());
     if let Some(r) = report_sink.lock().expect("report sink").as_ref() {
         let m = EnergyModel::default();
         println!(
@@ -387,6 +434,107 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
         );
     }
     emit_serve_record(backend_name, scope, n_requests, wall.as_secs_f64(), &s);
+    Ok(())
+}
+
+/// `ivit request` — the wire-protocol client for `serve --listen`
+/// servers: deterministic synthetic activations out, fp activations
+/// back, with optional bit-identity verification against a local
+/// rebuild of the server's synthetic encoder block.
+fn cmd_request(args: &Args) -> Result<()> {
+    let connect = Listen::parse(args.require("connect")?)?;
+    let tenant = args.str("tenant", "cli");
+    let tokens = args.usize("tokens", 198)?;
+    let dim = args.usize("dim", 64)?;
+    let count = args.usize("count", 1)?;
+    let input_seed = args.usize("input-seed", 11)? as u64;
+
+    let mut client = Client::connect(&connect)?;
+    client.ping().context("keepalive handshake")?;
+
+    // the same PRNG stream the in-process serve loop draws from, so a
+    // request served here is comparable to one served locally
+    let mut rng = XorShift::new(input_seed);
+    let inputs: Vec<Vec<f32>> = (0..count).map(|_| rng.normal_vec(tokens * dim)).collect();
+
+    let t0 = Instant::now();
+    let mut responses = Vec::with_capacity(count);
+    let mut sheds = 0u32;
+    if args.bool("pipelined") {
+        // many in-flight streams on one connection; replies may land in
+        // any order — Client::wait parks the out-of-order ones
+        let mut streams = Vec::with_capacity(count);
+        for x in &inputs {
+            streams.push(client.submit(&tenant, tokens, dim, x.clone())?);
+        }
+        for stream in streams {
+            match client.wait(stream)? {
+                NetReply::Response(r) => responses.push(r),
+                NetReply::Error(e) => anyhow::bail!("stream {stream} failed: {e}"),
+                NetReply::Keepalive => anyhow::bail!("keepalive echo on a request stream"),
+            }
+        }
+    } else {
+        for x in &inputs {
+            let (r, retried) = client.request_with_retry(&tenant, tokens, dim, x, 32)?;
+            sheds += retried;
+            responses.push(r);
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{count} request(s) of {tokens}×{dim} served in {:.1} ms ({sheds} shed retries)",
+        wall.as_secs_f64() * 1e3
+    );
+
+    if args.bool("verify-local") {
+        verify_local(args, tokens, dim, &inputs, &responses)?;
+    }
+    Ok(())
+}
+
+/// Rebuild the server's synthetic block from the shared flag recipe
+/// (`--dim/--hidden/--heads/--bits-profile/--seed`) and check that every
+/// wire response is bit-identical to a local reference run.
+fn verify_local(
+    args: &Args,
+    tokens: usize,
+    dim: usize,
+    inputs: &[Vec<f32>],
+    responses: &[NetResponse],
+) -> Result<()> {
+    let scope = args.choice("scope", &["attention", "block"], "block")?;
+    anyhow::ensure!(
+        scope == "block",
+        "--verify-local rebuilds the server's synthetic encoder block from flags \
+         alone, which only exists at --scope block"
+    );
+    let profile = bits_profile(args, 3)?;
+    let hidden = args.usize("hidden", dim * 4)?;
+    let heads = args.usize("heads", 2)?;
+    let seed = args.usize("seed", 7)? as u64;
+    let block = EncoderBlock::synthetic(dim, hidden, heads, profile, seed)?;
+    let spec = block.input_spec();
+    for (i, (x, resp)) in inputs.iter().zip(responses).enumerate() {
+        let qx = QTensor::quantize_f32(x, tokens, dim, spec)?;
+        let local = block.run_reference(&qx)?.dequantize();
+        anyhow::ensure!(
+            resp.data.len() == local.len(),
+            "request {i}: wire reply holds {} values, the local block computed {}",
+            resp.data.len(),
+            local.len()
+        );
+        let same = local.iter().zip(&resp.data).all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(
+            same,
+            "request {i}: wire reply is NOT bit-identical to the local reference block \
+             — do the serve and request flags agree on the block recipe?"
+        );
+    }
+    println!(
+        "verify-local: {} response(s) BIT-IDENTICAL to the local reference block",
+        responses.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,293 @@
+//! Per-tenant admission control and per-tenant serving metrics.
+//!
+//! Admission is counted in **in-flight requests**: a request holds one
+//! [`AdmitPermit`] from the moment it is admitted until its reply is
+//! queued (the permit is RAII — dropping it releases the slot even on
+//! error paths). Two caps apply, tenant first:
+//!
+//! * per-tenant cap ([`AdmissionConfig::per_tenant`]) — one noisy tenant
+//!   saturating its own slots cannot starve the others;
+//! * global cap ([`AdmissionConfig::global`]) — the process-wide bound,
+//!   sized against the coordinator queue.
+//!
+//! A request over either cap is **shed**: the caller replies with a
+//! `Shed` error frame carrying [`AdmissionConfig::retry_after_ms`]
+//! instead of queueing unboundedly. Shed decisions never block.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::metrics::Histogram;
+
+/// Admission caps for one server.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Max in-flight requests per tenant.
+    pub per_tenant: usize,
+    /// Max in-flight requests across all tenants.
+    pub global: usize,
+    /// Back-off carried in shed responses (ms).
+    pub retry_after_ms: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { per_tenant: 64, global: 256, retry_after_ms: 25 }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.per_tenant >= 1, "per-tenant cap must be ≥ 1, got {}", self.per_tenant);
+        ensure!(self.global >= 1, "global cap must be ≥ 1, got {}", self.global);
+        ensure!(
+            self.global >= self.per_tenant,
+            "global cap {} is below the per-tenant cap {} — a single tenant could never \
+             fill its own allowance",
+            self.global,
+            self.per_tenant
+        );
+        ensure!(self.retry_after_ms >= 1, "retry-after must be ≥ 1 ms");
+        Ok(())
+    }
+}
+
+/// Which cap shed a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedScope {
+    Tenant,
+    Global,
+}
+
+/// A shed decision: which bound fired and the back-off to report.
+#[derive(Debug, Clone)]
+pub struct Shed {
+    pub scope: ShedScope,
+    pub retry_after_ms: u32,
+    pub detail: String,
+}
+
+#[derive(Debug, Default)]
+struct Counts {
+    global: u64,
+    tenants: BTreeMap<String, u64>,
+}
+
+/// The admission gate. Cheap to share (`Arc`); counters are exact under
+/// one mutex — admission runs once per request, not per byte.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    counts: Mutex<Counts>,
+    /// Requests shed by the per-tenant cap.
+    pub shed_tenant: AtomicU64,
+    /// Requests shed by the global cap.
+    pub shed_global: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission {
+            cfg,
+            counts: Mutex::new(Counts::default()),
+            shed_tenant: AtomicU64::new(0),
+            shed_global: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one request for `tenant`, or shed it. The returned permit
+    /// must be held for the request's whole in-flight lifetime.
+    pub fn try_admit(self: &Arc<Self>, tenant: &str) -> Result<AdmitPermit, Shed> {
+        let mut counts = self.counts.lock().expect("admission counts poisoned");
+        if counts.global >= self.cfg.global as u64 {
+            drop(counts);
+            self.shed_global.fetch_add(1, Ordering::Relaxed);
+            return Err(Shed {
+                scope: ShedScope::Global,
+                retry_after_ms: self.cfg.retry_after_ms,
+                detail: format!("global in-flight cap {} reached", self.cfg.global),
+            });
+        }
+        let slot = counts.tenants.entry(tenant.to_string()).or_insert(0);
+        if *slot >= self.cfg.per_tenant as u64 {
+            drop(counts);
+            self.shed_tenant.fetch_add(1, Ordering::Relaxed);
+            return Err(Shed {
+                scope: ShedScope::Tenant,
+                retry_after_ms: self.cfg.retry_after_ms,
+                detail: format!("tenant '{tenant}' at in-flight cap {}", self.cfg.per_tenant),
+            });
+        }
+        *slot += 1;
+        counts.global += 1;
+        Ok(AdmitPermit { gate: Arc::clone(self), tenant: tenant.to_string() })
+    }
+
+    /// Total requests shed by either cap.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_tenant.load(Ordering::Relaxed) + self.shed_global.load(Ordering::Relaxed)
+    }
+
+    /// Current (global in-flight, distinct active tenants).
+    pub fn inflight(&self) -> (u64, usize) {
+        let counts = self.counts.lock().expect("admission counts poisoned");
+        (counts.global, counts.tenants.len())
+    }
+
+    fn release(&self, tenant: &str) {
+        let mut counts = self.counts.lock().expect("admission counts poisoned");
+        counts.global = counts.global.saturating_sub(1);
+        if let Some(slot) = counts.tenants.get_mut(tenant) {
+            *slot = slot.saturating_sub(1);
+            if *slot == 0 {
+                counts.tenants.remove(tenant);
+            }
+        }
+    }
+}
+
+/// RAII admission slot: dropping it releases the tenant's and the
+/// global in-flight count.
+#[derive(Debug)]
+pub struct AdmitPermit {
+    gate: Arc<Admission>,
+    tenant: String,
+}
+
+impl Drop for AdmitPermit {
+    fn drop(&mut self) {
+        self.gate.release(&self.tenant);
+    }
+}
+
+#[derive(Debug, Default)]
+struct TenantStat {
+    latency: Histogram,
+    served: u64,
+    shed: u64,
+}
+
+/// Per-tenant serving stats: latency histograms plus served/shed
+/// counters, rendered by the metrics endpoint.
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    stats: Mutex<BTreeMap<String, TenantStat>>,
+}
+
+impl TenantMetrics {
+    pub fn new() -> TenantMetrics {
+        TenantMetrics::default()
+    }
+
+    /// Record one completed request's wire-side latency.
+    pub fn record(&self, tenant: &str, latency: Duration) {
+        let mut stats = self.stats.lock().expect("tenant stats poisoned");
+        let entry = stats.entry(tenant.to_string()).or_default();
+        entry.latency.record(latency);
+        entry.served += 1;
+    }
+
+    /// Record one shed (admission or queue-full) for `tenant`.
+    pub fn record_shed(&self, tenant: &str) {
+        let mut stats = self.stats.lock().expect("tenant stats poisoned");
+        stats.entry(tenant.to_string()).or_default().shed += 1;
+    }
+
+    /// Plaintext metrics lines, one block per tenant:
+    /// `tenant_*{tenant="name"} value`.
+    pub fn render(&self) -> String {
+        let stats = self.stats.lock().expect("tenant stats poisoned");
+        let mut out = String::new();
+        for (tenant, s) in stats.iter() {
+            let t = tenant.replace('"', "'");
+            out.push_str(&format!("tenant_served_total{{tenant=\"{t}\"}} {}\n", s.served));
+            out.push_str(&format!("tenant_shed_total{{tenant=\"{t}\"}} {}\n", s.shed));
+            for (q, v) in [
+                ("p50", s.latency.quantile_us(0.50)),
+                ("p95", s.latency.quantile_us(0.95)),
+                ("p99", s.latency.quantile_us(0.99)),
+            ] {
+                out.push_str(&format!("tenant_latency_us{{tenant=\"{t}\",q=\"{q}\"}} {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_is_loud() {
+        AdmissionConfig::default().validate().unwrap();
+        let zero_tenant = AdmissionConfig { per_tenant: 0, ..AdmissionConfig::default() };
+        assert!(zero_tenant.validate().is_err());
+        let zero_global = AdmissionConfig { global: 0, ..AdmissionConfig::default() };
+        assert!(zero_global.validate().is_err());
+        let inverted = AdmissionConfig { per_tenant: 8, global: 4, ..AdmissionConfig::default() };
+        assert!(inverted.validate().is_err());
+        let zero_retry = AdmissionConfig { retry_after_ms: 0, ..AdmissionConfig::default() };
+        assert!(zero_retry.validate().is_err());
+    }
+
+    #[test]
+    fn per_tenant_cap_isolates_tenants() {
+        let cfg = AdmissionConfig { per_tenant: 2, global: 8, retry_after_ms: 11 };
+        let gate = Arc::new(Admission::new(cfg));
+        let a1 = gate.try_admit("a").unwrap();
+        let _a2 = gate.try_admit("a").unwrap();
+        // tenant a is full — shed names the tenant cap and the back-off
+        let shed = gate.try_admit("a").unwrap_err();
+        assert_eq!(shed.scope, ShedScope::Tenant);
+        assert_eq!(shed.retry_after_ms, 11);
+        assert!(shed.detail.contains('a'), "{}", shed.detail);
+        // tenant b is unaffected
+        let _b1 = gate.try_admit("b").unwrap();
+        assert_eq!(gate.inflight(), (3, 2));
+        assert_eq!(gate.shed_total(), 1);
+        // releasing a slot re-opens the tenant
+        drop(a1);
+        let _a3 = gate.try_admit("a").unwrap();
+    }
+
+    #[test]
+    fn global_cap_binds_across_tenants() {
+        let cfg = AdmissionConfig { per_tenant: 2, global: 2, retry_after_ms: 5 };
+        let gate = Arc::new(Admission::new(cfg));
+        let _x = gate.try_admit("x").unwrap();
+        let _y = gate.try_admit("y").unwrap();
+        let shed = gate.try_admit("z").unwrap_err();
+        assert_eq!(shed.scope, ShedScope::Global);
+        assert_eq!(gate.shed_global.load(Ordering::Relaxed), 1);
+        assert_eq!(gate.shed_tenant.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn permits_release_on_drop_and_idle_tenants_vanish() {
+        let gate = Arc::new(Admission::new(AdmissionConfig::default()));
+        {
+            let _p = gate.try_admit("ephemeral").unwrap();
+            assert_eq!(gate.inflight(), (1, 1));
+        }
+        assert_eq!(gate.inflight(), (0, 0), "drop released the slot and pruned the tenant");
+    }
+
+    #[test]
+    fn tenant_metrics_render_served_shed_and_quantiles() {
+        let tm = TenantMetrics::new();
+        tm.record("alpha", Duration::from_micros(100));
+        tm.record("alpha", Duration::from_micros(300));
+        tm.record_shed("alpha");
+        tm.record("beta", Duration::from_millis(2));
+        let text = tm.render();
+        assert!(text.contains("tenant_served_total{tenant=\"alpha\"} 2"), "{text}");
+        assert!(text.contains("tenant_shed_total{tenant=\"alpha\"} 1"), "{text}");
+        assert!(text.contains("tenant_latency_us{tenant=\"alpha\",q=\"p95\"}"), "{text}");
+        assert!(text.contains("tenant_served_total{tenant=\"beta\"} 1"), "{text}");
+    }
+}

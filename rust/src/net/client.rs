@@ -1,0 +1,225 @@
+//! Client side of the wire protocol: submit many requests on one
+//! connection, collect replies in any order (`submit`/`wait` mirror the
+//! plan-level submit/poll pair), with a shed-aware retry helper.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write as _};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::frame::{
+    decode_error, decode_response, encode_request, read_frame, write_frame, ErrorCode, Frame,
+    FrameType, NetError, NetRequest, NetResponse, ReadEvent,
+};
+use super::socket::{Listen, NetStream};
+
+/// One reply from the server, keyed off the stream id it echoes.
+#[derive(Debug, Clone)]
+pub enum NetReply {
+    Response(NetResponse),
+    Error(NetError),
+    Keepalive,
+}
+
+/// A connected protocol client. Stream ids are minted per submission;
+/// replies arriving out of order are parked until their `wait` call.
+pub struct Client {
+    writer: NetStream,
+    reader: BufReader<NetStream>,
+    next_stream: u64,
+    parked: BTreeMap<u64, NetReply>,
+}
+
+impl Client {
+    pub fn connect(to: &Listen) -> Result<Client> {
+        Client::from_stream(NetStream::connect(to)?)
+    }
+
+    /// Wrap an already-connected stream (socket pairs in tests).
+    pub fn from_stream(stream: NetStream) -> Result<Client> {
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader, next_stream: 1, parked: BTreeMap::new() })
+    }
+
+    /// Send one request; returns the stream id to `wait` on. Many
+    /// submissions may be in flight on the same connection.
+    pub fn submit(
+        &mut self,
+        tenant: &str,
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+    ) -> Result<u64> {
+        let stream = self.next_stream;
+        self.next_stream += 1;
+        let req = NetRequest { tenant: tenant.to_string(), rows, cols, data };
+        let payload = encode_request(&req)?;
+        write_frame(&mut self.writer, &Frame { ty: FrameType::Request, stream, payload })?;
+        self.writer.flush()?;
+        Ok(stream)
+    }
+
+    /// Block until the reply for `stream` arrives. Replies for other
+    /// streams read along the way are parked, not dropped.
+    pub fn wait(&mut self, stream: u64) -> Result<NetReply> {
+        if let Some(r) = self.parked.remove(&stream) {
+            return Ok(r);
+        }
+        loop {
+            match read_frame(&mut self.reader, &|| false)? {
+                ReadEvent::Frame(f) => {
+                    let reply = decode_reply(&f)?;
+                    if f.stream == stream {
+                        return Ok(reply);
+                    }
+                    self.parked.insert(f.stream, reply);
+                }
+                ReadEvent::Eof => bail!("server closed while stream {stream} waited"),
+                ReadEvent::Stopped => continue,
+                ReadEvent::Bad { code, detail, .. } => {
+                    bail!("server sent a malformed frame: {code}: {detail}")
+                }
+            }
+        }
+    }
+
+    /// Submit + wait; an error reply becomes an `Err`.
+    pub fn request(
+        &mut self,
+        tenant: &str,
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+    ) -> Result<NetResponse> {
+        let stream = self.submit(tenant, rows, cols, data)?;
+        match self.wait(stream)? {
+            NetReply::Response(r) => Ok(r),
+            NetReply::Error(e) => bail!("request failed: {e}"),
+            NetReply::Keepalive => bail!("keepalive reply to a request frame"),
+        }
+    }
+
+    /// Like [`Client::request`], but a `Shed` reply sleeps the carried
+    /// retry-after and resubmits. Returns the response plus how many
+    /// times the request was shed before it got through.
+    pub fn request_with_retry(
+        &mut self,
+        tenant: &str,
+        rows: usize,
+        cols: usize,
+        data: &[f32],
+        max_attempts: u32,
+    ) -> Result<(NetResponse, u32)> {
+        let mut sheds = 0u32;
+        for _ in 0..max_attempts {
+            let stream = self.submit(tenant, rows, cols, data.to_vec())?;
+            match self.wait(stream)? {
+                NetReply::Response(r) => return Ok((r, sheds)),
+                NetReply::Error(e) if e.code == ErrorCode::Shed => {
+                    sheds += 1;
+                    thread::sleep(Duration::from_millis(e.retry_after_ms.max(1) as u64));
+                }
+                NetReply::Error(e) => bail!("request failed: {e}"),
+                NetReply::Keepalive => bail!("keepalive reply to a request frame"),
+            }
+        }
+        bail!("request shed {sheds} times; gave up after {max_attempts} attempts")
+    }
+
+    /// Keepalive round-trip: proves the connection and the server's
+    /// reader loop are alive.
+    pub fn ping(&mut self) -> Result<()> {
+        let stream = self.next_stream;
+        self.next_stream += 1;
+        let f = Frame { ty: FrameType::Keepalive, stream, payload: Vec::new() };
+        write_frame(&mut self.writer, &f)?;
+        self.writer.flush()?;
+        match self.wait(stream)? {
+            NetReply::Keepalive => Ok(()),
+            other => bail!("expected a keepalive echo, got {other:?}"),
+        }
+    }
+}
+
+fn decode_reply(f: &Frame) -> Result<NetReply> {
+    match f.ty {
+        FrameType::Response => Ok(NetReply::Response(decode_response(&f.payload)?)),
+        FrameType::Error => Ok(NetReply::Error(decode_error(&f.payload)?)),
+        FrameType::Keepalive => Ok(NetReply::Keepalive),
+        FrameType::Request => bail!("server sent a request frame to a client"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::{decode_request, encode_response};
+    use super::*;
+    use std::os::unix::net::UnixStream;
+
+    /// A scripted peer: echoes keepalives and answers requests with the
+    /// negated activations, holding replies for even stream ids until
+    /// the next odd one to force out-of-order delivery.
+    fn scripted_peer(sock: UnixStream) {
+        let mut reader = BufReader::new(sock.try_clone().expect("clone peer socket"));
+        let mut writer = sock;
+        let mut held: Vec<Frame> = Vec::new();
+        loop {
+            match read_frame(&mut reader, &|| false).expect("peer read") {
+                ReadEvent::Frame(f) => match f.ty {
+                    FrameType::Keepalive => {
+                        write_frame(&mut writer, &f).unwrap();
+                        writer.flush().unwrap();
+                    }
+                    FrameType::Request => {
+                        let req = decode_request(&f.payload).unwrap();
+                        let data: Vec<f32> = req.data.iter().map(|v| -v).collect();
+                        let resp = NetResponse { rows: req.rows, cols: req.cols, data };
+                        let reply = Frame {
+                            ty: FrameType::Response,
+                            stream: f.stream,
+                            payload: encode_response(&resp).unwrap(),
+                        };
+                        if f.stream % 2 == 0 {
+                            held.push(reply); // delay even streams
+                        } else {
+                            write_frame(&mut writer, &reply).unwrap();
+                            for h in held.drain(..) {
+                                write_frame(&mut writer, &h).unwrap();
+                            }
+                            writer.flush().unwrap();
+                        }
+                    }
+                    _ => panic!("unexpected {:?}", f.ty),
+                },
+                ReadEvent::Eof => break,
+                other => panic!("peer saw {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn multiplexed_waits_park_out_of_order_replies() {
+        let (a, b) = UnixStream::pair().expect("socketpair");
+        let peer = std::thread::spawn(move || scripted_peer(b));
+        let mut client = Client::from_stream(NetStream::Uds(a)).unwrap();
+        client.ping().unwrap();
+        // the ping took stream id 1, so these mint ids 2 and 3
+        let s2 = client.submit("t", 1, 2, vec![1.0, -2.0]).unwrap();
+        let s3 = client.submit("t", 1, 2, vec![4.0, 0.5]).unwrap();
+        assert_eq!((s2, s3), (2, 3));
+        // the peer holds stream 2 and sends 3 first — waiting on 2
+        // forces the client to park 3's reply instead of dropping it
+        match client.wait(s2).unwrap() {
+            NetReply::Response(r) => assert_eq!(r.data, vec![-1.0, 2.0]),
+            other => panic!("{other:?}"),
+        }
+        match client.wait(s3).unwrap() {
+            NetReply::Response(r) => assert_eq!(r.data, vec![-4.0, -0.5]),
+            other => panic!("{other:?}"),
+        }
+        drop(client); // EOF ends the peer
+        peer.join().unwrap();
+    }
+}

@@ -1,0 +1,624 @@
+//! The framed wire protocol: a fixed 16-byte header followed by a
+//! length-prefixed binary payload.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  magic  0x69 0x56 ("iV")
+//!      2     1  version (currently 1)
+//!      3     1  frame type: 1 request, 2 response, 3 error, 4 keepalive
+//!      4     8  stream id (client-chosen; echoed on the reply)
+//!     12     4  payload length (bytes, ≤ 16 MiB)
+//! ```
+//!
+//! The header layout is **frozen across protocol versions**: the version
+//! byte gates payload semantics only, so a v1 server can still skip a
+//! v2 frame's payload (the length field stays trustworthy) and answer
+//! with an `UnsupportedVersion` error frame instead of desynchronizing.
+//!
+//! ## Recoverable vs. fatal
+//!
+//! A frame with good magic but an unknown version, unknown frame type,
+//! over-sized payload, or an undecodable payload is **recoverable**: the
+//! reader consumes the declared payload, reports
+//! [`ReadEvent::Bad`], and the connection keeps serving. Bad magic (or a
+//! stream truncated mid-frame) means framing is lost — that is a fatal
+//! `Err` and the connection must close after a best-effort error frame.
+//!
+//! ## Payloads
+//!
+//! * request: `u16` tenant length, tenant UTF-8, `u32` rows, `u32` cols,
+//!   then `rows·cols` f32 activations (raw LE bit patterns — responses
+//!   are therefore **bit-identical** to in-process execution).
+//! * response: `u32` rows, `u32` cols, `rows·cols` f32 outputs.
+//! * error: `u16` [`ErrorCode`], `u32` retry-after (ms, 0 = don't),
+//!   `u32` detail length, detail UTF-8.
+//! * keepalive: empty; the server echoes the stream id back.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// First two header bytes: "iV".
+pub const MAGIC: [u8; 2] = [0x69, 0x56];
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Hard cap on a single frame's payload (16 MiB).
+pub const MAX_PAYLOAD: u32 = 16 * 1024 * 1024;
+
+/// The four v1 frame types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    Request,
+    Response,
+    Error,
+    Keepalive,
+}
+
+impl FrameType {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            FrameType::Request => 1,
+            FrameType::Response => 2,
+            FrameType::Error => 3,
+            FrameType::Keepalive => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<FrameType> {
+        match v {
+            1 => Some(FrameType::Request),
+            2 => Some(FrameType::Response),
+            3 => Some(FrameType::Error),
+            4 => Some(FrameType::Keepalive),
+            _ => None,
+        }
+    }
+}
+
+/// Wire error codes carried in error-frame payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Header magic mismatched — framing lost, the connection closes.
+    BadMagic,
+    /// Unknown protocol version; the payload was skipped.
+    UnsupportedVersion,
+    /// Unknown frame type byte; the payload was skipped.
+    BadFrameType,
+    /// Declared payload exceeds [`MAX_PAYLOAD`]; the payload was skipped.
+    FrameTooLarge,
+    /// The payload did not decode (or had the wrong dimensions).
+    BadPayload,
+    /// Admission control shed the request — retry after the carried
+    /// `retry_after_ms`.
+    Shed,
+    /// Server-side execution failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn code(self) -> u16 {
+        match self {
+            ErrorCode::BadMagic => 1,
+            ErrorCode::UnsupportedVersion => 2,
+            ErrorCode::BadFrameType => 3,
+            ErrorCode::FrameTooLarge => 4,
+            ErrorCode::BadPayload => 5,
+            ErrorCode::Shed => 6,
+            ErrorCode::Internal => 7,
+        }
+    }
+
+    pub fn from_code(v: u16) -> Result<ErrorCode> {
+        match v {
+            1 => Ok(ErrorCode::BadMagic),
+            2 => Ok(ErrorCode::UnsupportedVersion),
+            3 => Ok(ErrorCode::BadFrameType),
+            4 => Ok(ErrorCode::FrameTooLarge),
+            5 => Ok(ErrorCode::BadPayload),
+            6 => Ok(ErrorCode::Shed),
+            7 => Ok(ErrorCode::Internal),
+            other => bail!("unknown wire error code {other}"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadMagic => "bad-magic",
+            ErrorCode::UnsupportedVersion => "unsupported-version",
+            ErrorCode::BadFrameType => "bad-frame-type",
+            ErrorCode::FrameTooLarge => "frame-too-large",
+            ErrorCode::BadPayload => "bad-payload",
+            ErrorCode::Shed => "shed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub ty: FrameType,
+    pub stream: u64,
+    pub payload: Vec<u8>,
+}
+
+/// What one [`read_frame`] call observed.
+#[derive(Debug)]
+pub enum ReadEvent {
+    /// A well-formed frame.
+    Frame(Frame),
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+    /// The stop predicate fired while waiting for bytes.
+    Stopped,
+    /// Recoverable protocol violation: the offending payload was
+    /// consumed, the connection may keep serving. Reply with an error
+    /// frame carrying `code` on `stream`.
+    Bad { stream: u64, code: ErrorCode, detail: String },
+}
+
+/// Serialize `frame` onto `w` (header + payload, no flush).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    ensure!(
+        frame.payload.len() <= MAX_PAYLOAD as usize,
+        "frame payload {} exceeds the {} byte cap",
+        frame.payload.len(),
+        MAX_PAYLOAD
+    );
+    let mut header = [0u8; HEADER_LEN];
+    header[..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = frame.ty.as_u8();
+    header[4..12].copy_from_slice(&frame.stream.to_le_bytes());
+    header[12..16].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(&frame.payload)?;
+    Ok(())
+}
+
+/// What [`read_exact_idle`] observed.
+enum Fill {
+    Full,
+    /// Zero bytes at offset 0 — clean EOF.
+    Eof,
+    Stopped,
+}
+
+/// `read_exact` that tolerates read-timeout wakeups: on
+/// `WouldBlock`/`TimedOut` the stop predicate is consulted and the read
+/// resumes, so a socket read timeout becomes a stop-flag poll interval
+/// instead of a hard error. Partial fills never corrupt framing — the
+/// buffer offset is tracked across wakeups.
+fn read_exact_idle(r: &mut impl Read, buf: &mut [u8], stop: &dyn Fn() -> bool) -> Result<Fill> {
+    let mut off = 0usize;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(Fill::Eof);
+                }
+                bail!("stream truncated mid-frame ({off}/{} bytes)", buf.len());
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if stop() {
+                    return Ok(Fill::Stopped);
+                }
+            }
+            Err(e) => return Err(anyhow!("read failed: {e}")),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+/// Consume and discard `len` payload bytes (recoverable-frame skip).
+fn skip_payload(r: &mut impl Read, len: u32, stop: &dyn Fn() -> bool) -> Result<Fill> {
+    let mut remaining = len as usize;
+    let mut scratch = [0u8; 64 * 1024];
+    while remaining > 0 {
+        let take = remaining.min(scratch.len());
+        match read_exact_idle(r, &mut scratch[..take], stop)? {
+            Fill::Full => remaining -= take,
+            Fill::Eof => bail!("stream truncated inside a skipped payload"),
+            Fill::Stopped => return Ok(Fill::Stopped),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+/// Read one frame. Recoverable protocol violations come back as
+/// [`ReadEvent::Bad`] with the payload consumed; a fatal `Err` (bad
+/// magic, truncation, I/O failure) means framing is lost and the caller
+/// must close the connection.
+pub fn read_frame(r: &mut impl Read, stop: &dyn Fn() -> bool) -> Result<ReadEvent> {
+    let mut header = [0u8; HEADER_LEN];
+    match read_exact_idle(r, &mut header, stop)? {
+        Fill::Full => {}
+        Fill::Eof => return Ok(ReadEvent::Eof),
+        Fill::Stopped => return Ok(ReadEvent::Stopped),
+    }
+    if header[..2] != MAGIC {
+        bail!("bad frame magic {:02x}{:02x} — framing lost", header[0], header[1]);
+    }
+    let version = header[2];
+    let ty_byte = header[3];
+    let stream = u64::from_le_bytes(header[4..12].try_into().expect("8 header bytes"));
+    let len = u32::from_le_bytes(header[12..16].try_into().expect("4 header bytes"));
+
+    // recoverable rejections: the length field sits in the frozen part
+    // of the header, so the payload can always be skipped
+    let reject = if version != VERSION {
+        Some((ErrorCode::UnsupportedVersion, format!("protocol version {version}, want {VERSION}")))
+    } else if len > MAX_PAYLOAD {
+        Some((ErrorCode::FrameTooLarge, format!("payload {len} bytes exceeds {MAX_PAYLOAD}")))
+    } else if FrameType::from_u8(ty_byte).is_none() {
+        Some((ErrorCode::BadFrameType, format!("unknown frame type {ty_byte}")))
+    } else {
+        None
+    };
+    if let Some((code, detail)) = reject {
+        return match skip_payload(r, len, stop)? {
+            Fill::Stopped => Ok(ReadEvent::Stopped),
+            _ => Ok(ReadEvent::Bad { stream, code, detail }),
+        };
+    }
+
+    let ty = FrameType::from_u8(ty_byte).expect("validated above");
+    let mut payload = vec![0u8; len as usize];
+    match read_exact_idle(r, &mut payload, stop)? {
+        Fill::Full => Ok(ReadEvent::Frame(Frame { ty, stream, payload })),
+        Fill::Eof => bail!("stream truncated between header and payload"),
+        Fill::Stopped => Ok(ReadEvent::Stopped),
+    }
+}
+
+/// A decoded request payload: one `rows × cols` fp activation matrix
+/// submitted by `tenant`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetRequest {
+    pub tenant: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// A decoded response payload: the `rows × cols` fp output matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetResponse {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// A decoded error payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetError {
+    pub code: ErrorCode,
+    /// Milliseconds the client should back off before retrying;
+    /// 0 = retrying will not help.
+    pub retry_after_ms: u32,
+    pub detail: String,
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.detail)?;
+        if self.retry_after_ms > 0 {
+            write!(f, " (retry after {} ms)", self.retry_after_ms)?;
+        }
+        Ok(())
+    }
+}
+
+fn push_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    out.reserve(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn pop_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+        .collect()
+}
+
+fn take_u16(b: &[u8], at: usize) -> Result<u16> {
+    let s = b.get(at..at + 2).ok_or_else(|| anyhow!("payload truncated at byte {at}"))?;
+    Ok(u16::from_le_bytes(s.try_into().expect("2 bytes")))
+}
+
+fn take_u32(b: &[u8], at: usize) -> Result<u32> {
+    let s = b.get(at..at + 4).ok_or_else(|| anyhow!("payload truncated at byte {at}"))?;
+    Ok(u32::from_le_bytes(s.try_into().expect("4 bytes")))
+}
+
+pub fn encode_request(req: &NetRequest) -> Result<Vec<u8>> {
+    ensure!(!req.tenant.is_empty(), "tenant must be non-empty");
+    ensure!(req.tenant.len() <= u16::MAX as usize, "tenant name too long");
+    ensure!(req.rows > 0 && req.cols > 0, "request dims must be non-zero");
+    ensure!(
+        req.data.len() == req.rows * req.cols,
+        "request carries {} values for a {}×{} matrix",
+        req.data.len(),
+        req.rows,
+        req.cols
+    );
+    let mut out = Vec::with_capacity(2 + req.tenant.len() + 8 + req.data.len() * 4);
+    out.extend_from_slice(&(req.tenant.len() as u16).to_le_bytes());
+    out.extend_from_slice(req.tenant.as_bytes());
+    out.extend_from_slice(&(req.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(req.cols as u32).to_le_bytes());
+    push_f32s(&mut out, &req.data);
+    ensure!(out.len() <= MAX_PAYLOAD as usize, "request payload exceeds the frame cap");
+    Ok(out)
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<NetRequest> {
+    let tenant_len = take_u16(payload, 0)? as usize;
+    ensure!(tenant_len > 0, "tenant must be non-empty");
+    let tenant_bytes = payload
+        .get(2..2 + tenant_len)
+        .ok_or_else(|| anyhow!("payload truncated inside the tenant name"))?;
+    let tenant = std::str::from_utf8(tenant_bytes)
+        .map_err(|_| anyhow!("tenant name is not UTF-8"))?
+        .to_string();
+    let at = 2 + tenant_len;
+    let rows = take_u32(payload, at)? as usize;
+    let cols = take_u32(payload, at + 4)? as usize;
+    ensure!(rows > 0 && cols > 0, "request dims must be non-zero");
+    let body = &payload[at + 8..];
+    ensure!(
+        body.len() == rows * cols * 4,
+        "request declares {rows}×{cols} but carries {} payload bytes",
+        body.len()
+    );
+    Ok(NetRequest { tenant, rows, cols, data: pop_f32s(body) })
+}
+
+pub fn encode_response(resp: &NetResponse) -> Result<Vec<u8>> {
+    ensure!(
+        resp.data.len() == resp.rows * resp.cols,
+        "response carries {} values for a {}×{} matrix",
+        resp.data.len(),
+        resp.rows,
+        resp.cols
+    );
+    let mut out = Vec::with_capacity(8 + resp.data.len() * 4);
+    out.extend_from_slice(&(resp.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(resp.cols as u32).to_le_bytes());
+    push_f32s(&mut out, &resp.data);
+    ensure!(out.len() <= MAX_PAYLOAD as usize, "response payload exceeds the frame cap");
+    Ok(out)
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<NetResponse> {
+    let rows = take_u32(payload, 0)? as usize;
+    let cols = take_u32(payload, 4)? as usize;
+    let body = &payload[8.min(payload.len())..];
+    ensure!(
+        body.len() == rows * cols * 4,
+        "response declares {rows}×{cols} but carries {} payload bytes",
+        body.len()
+    );
+    Ok(NetResponse { rows, cols, data: pop_f32s(body) })
+}
+
+pub fn encode_error(err: &NetError) -> Vec<u8> {
+    let detail = err.detail.as_bytes();
+    let detail = &detail[..detail.len().min(4096)];
+    let mut out = Vec::with_capacity(10 + detail.len());
+    out.extend_from_slice(&err.code.code().to_le_bytes());
+    out.extend_from_slice(&err.retry_after_ms.to_le_bytes());
+    out.extend_from_slice(&(detail.len() as u32).to_le_bytes());
+    out.extend_from_slice(detail);
+    out
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<NetError> {
+    let code = ErrorCode::from_code(take_u16(payload, 0)?)?;
+    let retry_after_ms = take_u32(payload, 2)?;
+    let detail_len = take_u32(payload, 6)? as usize;
+    let detail_bytes = payload
+        .get(10..10 + detail_len)
+        .ok_or_else(|| anyhow!("error payload truncated inside the detail"))?;
+    let detail = String::from_utf8_lossy(detail_bytes).into_owned();
+    Ok(NetError { code, retry_after_ms, detail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const NO_STOP: fn() -> bool = || false;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        match read_frame(&mut Cursor::new(buf), &NO_STOP).unwrap() {
+            ReadEvent::Frame(f) => f,
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrips_all_types() {
+        for ty in [FrameType::Request, FrameType::Response, FrameType::Error, FrameType::Keepalive]
+        {
+            let f = Frame { ty, stream: 0xdead_beef_cafe, payload: vec![1, 2, 3] };
+            let g = roundtrip(&f);
+            assert_eq!(g.ty, ty);
+            assert_eq!(g.stream, f.stream);
+            assert_eq!(g.payload, f.payload);
+        }
+    }
+
+    #[test]
+    fn eof_at_boundary_vs_truncation() {
+        let empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut Cursor::new(empty), &NO_STOP).unwrap(), ReadEvent::Eof));
+        // half a header is a fatal truncation, not EOF
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame { ty: FrameType::Keepalive, stream: 1, payload: vec![] })
+            .unwrap();
+        buf.truncate(7);
+        assert!(read_frame(&mut Cursor::new(buf), &NO_STOP).is_err());
+    }
+
+    #[test]
+    fn bad_magic_is_fatal() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame { ty: FrameType::Request, stream: 3, payload: vec![] })
+            .unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut Cursor::new(buf), &NO_STOP).unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn unknown_type_and_version_are_recoverable() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame { ty: FrameType::Request, stream: 9, payload: vec![7; 5] })
+            .unwrap();
+        // follow with a valid keepalive to prove the reader resyncs
+        write_frame(&mut buf, &Frame { ty: FrameType::Keepalive, stream: 10, payload: vec![] })
+            .unwrap();
+        for (byte, expect) in
+            [(3usize, ErrorCode::BadFrameType), (2usize, ErrorCode::UnsupportedVersion)]
+        {
+            let mut b = buf.clone();
+            b[byte] = 99;
+            let mut cur = Cursor::new(b);
+            match read_frame(&mut cur, &NO_STOP).unwrap() {
+                ReadEvent::Bad { stream, code, .. } => {
+                    assert_eq!(stream, 9);
+                    assert_eq!(code, expect);
+                }
+                other => panic!("expected Bad, got {other:?}"),
+            }
+            // payload was consumed: the next frame parses cleanly
+            match read_frame(&mut cur, &NO_STOP).unwrap() {
+                ReadEvent::Frame(f) => assert_eq!((f.ty, f.stream), (FrameType::Keepalive, 10)),
+                other => panic!("reader desynced: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_payload_is_recoverable() {
+        // hand-build a header declaring MAX_PAYLOAD+4 bytes, then supply
+        // them so the skip path runs end-to-end
+        let over = MAX_PAYLOAD + 4;
+        let mut buf = Vec::with_capacity(HEADER_LEN + over as usize);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        buf.push(FrameType::Request.as_u8());
+        buf.extend_from_slice(&42u64.to_le_bytes());
+        buf.extend_from_slice(&over.to_le_bytes());
+        buf.resize(HEADER_LEN + over as usize, 0);
+        write_frame(&mut buf, &Frame { ty: FrameType::Keepalive, stream: 43, payload: vec![] })
+            .unwrap();
+        let mut cur = Cursor::new(buf);
+        match read_frame(&mut cur, &NO_STOP).unwrap() {
+            ReadEvent::Bad { stream, code, .. } => {
+                assert_eq!(stream, 42);
+                assert_eq!(code, ErrorCode::FrameTooLarge);
+            }
+            other => panic!("expected Bad, got {other:?}"),
+        }
+        match read_frame(&mut cur, &NO_STOP).unwrap() {
+            ReadEvent::Frame(f) => assert_eq!(f.stream, 43),
+            other => panic!("reader desynced after skip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_payload_roundtrips_bit_exact() {
+        let req = NetRequest {
+            tenant: "tenant-a".into(),
+            rows: 2,
+            cols: 3,
+            data: vec![1.5, -0.25, f32::MIN_POSITIVE, 3.0e-39, 1e30, -0.0],
+        };
+        let got = decode_request(&encode_request(&req).unwrap()).unwrap();
+        assert_eq!(got.tenant, req.tenant);
+        assert_eq!((got.rows, got.cols), (2, 3));
+        let a: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = req.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "raw LE f32 transport must preserve bit patterns");
+    }
+
+    #[test]
+    fn request_payload_rejects_corruption() {
+        let req = NetRequest { tenant: "t".into(), rows: 1, cols: 2, data: vec![0.0, 1.0] };
+        let good = encode_request(&req).unwrap();
+        assert!(decode_request(&good[..good.len() - 1]).is_err(), "short body");
+        assert!(decode_request(&good[..3]).is_err(), "truncated dims");
+        assert!(decode_request(&[]).is_err(), "empty payload");
+        let mut zero_tenant = good.clone();
+        zero_tenant[0] = 0;
+        zero_tenant[1] = 0;
+        assert!(decode_request(&zero_tenant).is_err(), "empty tenant");
+        // mismatched declared dims vs body size
+        let bad = NetRequest { tenant: "t".into(), rows: 2, cols: 2, data: vec![0.0] };
+        assert!(encode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn response_and_error_payloads_roundtrip() {
+        let resp = NetResponse { rows: 1, cols: 4, data: vec![0.5, -2.0, 7.25, 0.0] };
+        assert_eq!(decode_response(&encode_response(&resp).unwrap()).unwrap(), resp);
+        assert!(decode_response(&[1, 2, 3]).is_err());
+
+        let err = NetError {
+            code: ErrorCode::Shed,
+            retry_after_ms: 25,
+            detail: "tenant over its in-flight cap".into(),
+        };
+        let got = decode_error(&encode_error(&err)).unwrap();
+        assert_eq!(got, err);
+        assert!(format!("{got}").contains("retry after 25 ms"), "{got}");
+        assert!(decode_error(&[9, 9]).is_err(), "unknown code is loud");
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadMagic,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::BadFrameType,
+            ErrorCode::FrameTooLarge,
+            ErrorCode::BadPayload,
+            ErrorCode::Shed,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_code(code.code()).unwrap(), code);
+            assert!(!code.as_str().is_empty());
+        }
+        assert!(ErrorCode::from_code(0).is_err());
+        assert!(ErrorCode::from_code(250).is_err());
+    }
+
+    #[test]
+    fn write_frame_rejects_oversized_payload() {
+        let f = Frame {
+            ty: FrameType::Request,
+            stream: 0,
+            payload: vec![0; MAX_PAYLOAD as usize + 1],
+        };
+        assert!(write_frame(&mut Vec::new(), &f).is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! Networked serving front end: the paper's integerized pipeline put
+//! behind a wire so many tenants can feed one accelerator plan.
+//!
+//! Layers, bottom up:
+//!
+//! * [`frame`] — the length-prefixed framed protocol (versioned 16-byte
+//!   header; request/response/error/keepalive frames; recoverable vs.
+//!   fatal violations) and the binary payload codecs. Activations ride
+//!   as raw little-endian f32 bit patterns, so wire responses are
+//!   bit-identical to in-process execution.
+//! * [`socket`] — `tcp:<host:port>` / `uds:<path>` transport
+//!   abstraction shared by `--listen` and `--connect`.
+//! * [`admission`] — per-tenant + global in-flight caps with RAII
+//!   permits; over-cap requests are shed with a retry-after instead of
+//!   queueing unboundedly.
+//! * [`server`] — accepts connections, multiplexes per-client streams
+//!   onto the coordinator's submit/poll pipeline, sheds under load, and
+//!   serves the plaintext metrics endpoint.
+//! * [`client`] — the client library behind `ivit request` and the
+//!   contract tests.
+
+pub mod admission;
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod socket;
+
+pub use admission::{Admission, AdmissionConfig, AdmitPermit, Shed, ShedScope, TenantMetrics};
+pub use client::{Client, NetReply};
+pub use frame::{
+    decode_error, decode_request, decode_response, encode_error, encode_request, encode_response,
+    read_frame, write_frame, ErrorCode, Frame, FrameType, NetError, NetRequest, NetResponse,
+    ReadEvent, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
+};
+pub use server::{Server, ServerConfig, ServerReport};
+pub use socket::{Listen, NetListener, NetStream};

@@ -1,0 +1,537 @@
+//! The networked serving front end: accepts framed connections over TCP
+//! or UDS, multiplexes many in-flight requests per connection onto one
+//! [`Handle`], and applies per-tenant admission control.
+//!
+//! ## Thread model (per process)
+//!
+//! * **acceptor** — non-blocking accept loop, polls the stop flag.
+//! * per connection:
+//!   * **reader** — decodes frames, validates and admits requests, and
+//!     submits them to the coordinator (`Handle::submit` is
+//!     non-blocking, so one slow request never stalls frame decoding);
+//!   * **completions** — drains the per-request reply channels in any
+//!     completion order and queues response/error frames, releasing the
+//!     admission permit as each job finishes. On client disconnect it
+//!     keeps draining until every in-flight job has completed — jobs
+//!     are never abandoned mid-flight;
+//!   * **writer** — owns the socket's write half behind a bounded frame
+//!     channel. A slow consumer backpressures only its own connection;
+//!     once the socket errors the writer drains and discards so the
+//!     other threads never wedge on a dead peer.
+//! * **metrics** (optional) — plaintext endpoint: accept, dump
+//!   [`Snapshot::render`] plus admission/tenant counters, close.
+//!
+//! Liveness under shutdown needs no force-close: reads carry a 100 ms
+//! timeout (a stop-flag poll interval via [`frame::read_frame`]'s idle
+//! handling) and writes a 5 s timeout, so every thread observes the
+//! stop flag in bounded time.
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::{Handle, Response, SubmitError};
+
+use super::admission::{Admission, AdmissionConfig, AdmitPermit, TenantMetrics};
+use super::frame::{
+    self, decode_request, encode_error, encode_response, read_frame, ErrorCode, Frame, FrameType,
+    NetError, NetResponse, ReadEvent,
+};
+use super::socket::{Listen, NetListener, NetStream};
+
+/// Connection-thread registry (joined at shutdown).
+type ConnRegistry = Arc<Mutex<Vec<thread::JoinHandle<()>>>>;
+
+/// Configuration for one [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub listen: Listen,
+    /// Optional second listener serving the plaintext metrics dump.
+    pub metrics_listen: Option<Listen>,
+    pub admission: AdmissionConfig,
+    /// Stop after this many admitted requests complete
+    /// (0 = serve until [`Server::shutdown`]).
+    pub request_limit: u64,
+    /// `(rows, cols)` every request must declare — the planned module's
+    /// `tokens × d_in`.
+    pub in_shape: (usize, usize),
+    /// `(rows, cols)` responses carry.
+    pub out_shape: (usize, usize),
+    /// Wall-clock backstop on [`Server::wait`] (`None` = no limit).
+    pub timeout: Option<Duration>,
+}
+
+/// Shutdown summary: wire-level counters plus the coordinator snapshot.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    /// Admitted requests whose reply was queued (success or error).
+    pub served: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    pub snapshot: Snapshot,
+    /// Per-tenant metrics text ([`TenantMetrics::render`]).
+    pub tenants: String,
+    /// True when the wall-clock backstop, not the request limit or a
+    /// shutdown call, ended the run.
+    pub timed_out: bool,
+}
+
+struct Shared {
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    tenants: TenantMetrics,
+    stop: AtomicBool,
+    served: AtomicU64,
+    request_limit: u64,
+    retry_after_ms: u32,
+    in_shape: (usize, usize),
+    out_shape: (usize, usize),
+}
+
+impl Shared {
+    fn should_stop(&self) -> bool {
+        if self.stop.load(Ordering::Acquire) {
+            return true;
+        }
+        self.request_limit > 0 && self.served.load(Ordering::Acquire) >= self.request_limit
+    }
+}
+
+/// A running server; [`Server::wait`] blocks until the request limit,
+/// the timeout backstop, or [`Server::shutdown`] ends the run.
+pub struct Server {
+    shared: Arc<Shared>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    metrics_thread: Option<thread::JoinHandle<()>>,
+    conns: ConnRegistry,
+    listen: Listen,
+    uds_cleanup: Vec<PathBuf>,
+    timeout: Option<Duration>,
+}
+
+impl Server {
+    /// Bind the listener(s) and start accepting. `handle` is the
+    /// coordinator submission handle the requests are multiplexed onto.
+    pub fn start(handle: Handle, cfg: ServerConfig) -> Result<Server> {
+        cfg.admission.validate()?;
+        ensure!(
+            cfg.in_shape.0 * cfg.in_shape.1 == handle.image_elems(),
+            "in_shape {}×{} disagrees with the executor payload of {} elements",
+            cfg.in_shape.0,
+            cfg.in_shape.1,
+            handle.image_elems()
+        );
+        let (listener, listen) = NetListener::bind(&cfg.listen)?;
+        let mut uds_cleanup = Vec::new();
+        if let Listen::Uds(p) = &listen {
+            uds_cleanup.push(p.clone());
+        }
+        let shared = Arc::new(Shared {
+            metrics: handle.metrics(),
+            admission: Arc::new(Admission::new(cfg.admission.clone())),
+            tenants: TenantMetrics::new(),
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            request_limit: cfg.request_limit,
+            retry_after_ms: cfg.admission.retry_after_ms,
+            in_shape: cfg.in_shape,
+            out_shape: cfg.out_shape,
+        });
+        let conns: ConnRegistry = Arc::new(Mutex::new(Vec::new()));
+
+        let metrics_thread = match &cfg.metrics_listen {
+            Some(spec) => {
+                let (ml, resolved) = NetListener::bind(spec)?;
+                if let Listen::Uds(p) = &resolved {
+                    uds_cleanup.push(p.clone());
+                }
+                let shared2 = Arc::clone(&shared);
+                let t = thread::Builder::new()
+                    .name("ivit-net-metrics".into())
+                    .spawn(move || metrics_loop(&shared2, ml))
+                    .expect("spawn metrics thread");
+                Some(t)
+            }
+            None => None,
+        };
+
+        let acceptor = {
+            let shared2 = Arc::clone(&shared);
+            let conns2 = Arc::clone(&conns);
+            thread::Builder::new()
+                .name("ivit-net-accept".into())
+                .spawn(move || acceptor_loop(&shared2, handle, listener, &conns2))
+                .expect("spawn acceptor thread")
+        };
+
+        Ok(Server {
+            shared,
+            acceptor: Some(acceptor),
+            metrics_thread,
+            conns,
+            listen,
+            uds_cleanup,
+            timeout: cfg.timeout,
+        })
+    }
+
+    /// The bound address — for `tcp:host:0` this carries the actual
+    /// OS-assigned port.
+    pub fn listen(&self) -> &Listen {
+        &self.listen
+    }
+
+    /// Completed (admitted) request count so far.
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Acquire)
+    }
+
+    /// Ask every server thread to wind down; [`Server::wait`] reaps.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::Release);
+    }
+
+    fn halt(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<_> = {
+            let mut c = self.conns.lock().expect("conn registry poisoned");
+            c.drain(..).collect()
+        };
+        for j in handles {
+            let _ = j.join();
+        }
+        if let Some(m) = self.metrics_thread.take() {
+            let _ = m.join();
+        }
+        for p in &self.uds_cleanup {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    /// Block until the run ends (request limit, timeout backstop, or a
+    /// [`Server::shutdown`] call), reap every thread, and report.
+    pub fn wait(mut self) -> Result<ServerReport> {
+        let t0 = Instant::now();
+        let mut timed_out = false;
+        while !self.shared.should_stop() {
+            if let Some(d) = self.timeout {
+                if t0.elapsed() >= d {
+                    timed_out = true;
+                    break;
+                }
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        self.halt();
+        Ok(ServerReport {
+            served: self.shared.served.load(Ordering::Acquire),
+            shed: self.shared.admission.shed_total(),
+            snapshot: self.shared.metrics.snapshot(),
+            tenants: self.shared.tenants.render(),
+            timed_out,
+        })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn error_frame(stream: u64, code: ErrorCode, retry_after_ms: u32, detail: &str) -> Frame {
+    let payload = encode_error(&NetError { code, retry_after_ms, detail: detail.to_string() });
+    Frame { ty: FrameType::Error, stream, payload }
+}
+
+fn acceptor_loop(
+    shared: &Arc<Shared>,
+    handle: Handle,
+    listener: NetListener,
+    conns: &ConnRegistry,
+) {
+    while !shared.should_stop() {
+        match listener.accept() {
+            Ok(Some(stream)) => {
+                let shared2 = Arc::clone(shared);
+                let handle2 = handle.clone();
+                let spawned = thread::Builder::new()
+                    .name("ivit-net-conn".into())
+                    .spawn(move || conn_main(&shared2, handle2, stream));
+                match spawned {
+                    Ok(j) => conns.lock().expect("conn registry poisoned").push(j),
+                    Err(e) => eprintln!("net: spawning a connection thread failed: {e}"),
+                }
+            }
+            Ok(None) => thread::sleep(Duration::from_millis(10)),
+            Err(e) => {
+                eprintln!("net: accept failed: {e:#}");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// One admitted, in-flight request.
+struct Pending {
+    stream: u64,
+    tenant: String,
+    rx: Receiver<Response>,
+    permit: AdmitPermit,
+    t0: Instant,
+}
+
+fn conn_main(shared: &Arc<Shared>, handle: Handle, stream: NetStream) {
+    // read timeout = stop-flag poll interval; write timeout bounds how
+    // long a fully wedged consumer can hold its writer thread
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("net: cloning a connection handle failed: {e:#}");
+            return;
+        }
+    };
+    let (tx, frame_rx) = sync_channel::<Frame>(64);
+    let writer = thread::Builder::new()
+        .name("ivit-net-write".into())
+        .spawn(move || writer_loop(write_half, frame_rx))
+        .expect("spawn writer thread");
+
+    let pending: Arc<Mutex<Vec<Pending>>> = Arc::new(Mutex::new(Vec::new()));
+    let reader_done = Arc::new(AtomicBool::new(false));
+    let completions = {
+        let shared2 = Arc::clone(shared);
+        let pending2 = Arc::clone(&pending);
+        let reader_done2 = Arc::clone(&reader_done);
+        let tx2 = tx.clone();
+        thread::Builder::new()
+            .name("ivit-net-complete".into())
+            .spawn(move || completions_loop(&shared2, &pending2, &reader_done2, &tx2))
+            .expect("spawn completions thread")
+    };
+
+    reader_loop(shared, &handle, stream, &tx, &pending);
+    reader_done.store(true, Ordering::Release);
+    drop(tx); // writer exits once completions drops its clone too
+    let _ = completions.join();
+    let _ = writer.join();
+}
+
+fn reader_loop(
+    shared: &Arc<Shared>,
+    handle: &Handle,
+    stream: NetStream,
+    tx: &SyncSender<Frame>,
+    pending: &Mutex<Vec<Pending>>,
+) {
+    let mut r = BufReader::new(stream);
+    let stop = || shared.should_stop();
+    loop {
+        if shared.should_stop() {
+            break;
+        }
+        match read_frame(&mut r, &stop) {
+            Ok(ReadEvent::Frame(f)) => match f.ty {
+                FrameType::Request => {
+                    handle_request(shared, handle, tx, pending, f.stream, &f.payload)
+                }
+                FrameType::Keepalive => {
+                    let _ = tx.send(Frame {
+                        ty: FrameType::Keepalive,
+                        stream: f.stream,
+                        payload: vec![],
+                    });
+                }
+                FrameType::Response | FrameType::Error => {
+                    let detail = "server accepts only request/keepalive frames";
+                    let _ = tx.send(error_frame(f.stream, ErrorCode::BadFrameType, 0, detail));
+                }
+            },
+            Ok(ReadEvent::Bad { stream, code, detail }) => {
+                // recoverable: reply loudly, keep the connection
+                let _ = tx.send(error_frame(stream, code, 0, &detail));
+            }
+            Ok(ReadEvent::Eof) | Ok(ReadEvent::Stopped) => break,
+            Err(e) => {
+                // framing lost: best-effort error frame, then close
+                let _ = tx.send(error_frame(0, ErrorCode::BadMagic, 0, &format!("{e:#}")));
+                break;
+            }
+        }
+    }
+}
+
+fn handle_request(
+    shared: &Arc<Shared>,
+    handle: &Handle,
+    tx: &SyncSender<Frame>,
+    pending: &Mutex<Vec<Pending>>,
+    stream: u64,
+    payload: &[u8],
+) {
+    let req = match decode_request(payload) {
+        Ok(q) => q,
+        Err(e) => {
+            let _ = tx.send(error_frame(stream, ErrorCode::BadPayload, 0, &format!("{e:#}")));
+            return;
+        }
+    };
+    // validate BEFORE Handle::submit — its payload-size check is an
+    // assert, and a malformed client must never panic the server
+    if (req.rows, req.cols) != shared.in_shape {
+        let (er, ec) = shared.in_shape;
+        let detail =
+            format!("this server takes {er}×{ec} activations, got {}×{}", req.rows, req.cols);
+        let _ = tx.send(error_frame(stream, ErrorCode::BadPayload, 0, &detail));
+        return;
+    }
+    let permit = match shared.admission.try_admit(&req.tenant) {
+        Ok(p) => p,
+        Err(shed) => {
+            shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            shared.tenants.record_shed(&req.tenant);
+            let reply = error_frame(stream, ErrorCode::Shed, shed.retry_after_ms, &shed.detail);
+            let _ = tx.send(reply);
+            return;
+        }
+    };
+    match handle.submit(req.data) {
+        Ok(rx) => {
+            let item = Pending { stream, tenant: req.tenant, rx, permit, t0: Instant::now() };
+            pending.lock().expect("pending ledger poisoned").push(item);
+        }
+        Err(SubmitError::QueueFull) => {
+            // admission passed but the batcher queue is the tighter
+            // bound right now — still a retry-able shed on the wire
+            drop(permit);
+            shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            shared.tenants.record_shed(&req.tenant);
+            let detail = "coordinator queue full";
+            let _ = tx.send(error_frame(stream, ErrorCode::Shed, shared.retry_after_ms, detail));
+        }
+        Err(SubmitError::Closed) => {
+            drop(permit);
+            let _ = tx.send(error_frame(stream, ErrorCode::Internal, 0, "coordinator closed"));
+        }
+    }
+}
+
+fn completions_loop(
+    shared: &Arc<Shared>,
+    pending: &Mutex<Vec<Pending>>,
+    reader_done: &AtomicBool,
+    tx: &SyncSender<Frame>,
+) {
+    loop {
+        let mut finished: Vec<(Pending, Option<Response>)> = Vec::new();
+        {
+            let mut p = pending.lock().expect("pending ledger poisoned");
+            let mut i = 0;
+            while i < p.len() {
+                match p[i].rx.try_recv() {
+                    Ok(resp) => {
+                        let item = p.swap_remove(i);
+                        finished.push((item, Some(resp)));
+                    }
+                    Err(TryRecvError::Empty) => i += 1,
+                    Err(TryRecvError::Disconnected) => {
+                        let item = p.swap_remove(i);
+                        finished.push((item, None));
+                    }
+                }
+            }
+        }
+        let progressed = !finished.is_empty();
+        for (item, resp) in finished {
+            finish(shared, tx, item, resp);
+        }
+        let drained = pending.lock().expect("pending ledger poisoned").is_empty();
+        if drained && reader_done.load(Ordering::Acquire) {
+            break;
+        }
+        if !progressed {
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+fn finish(shared: &Arc<Shared>, tx: &SyncSender<Frame>, item: Pending, resp: Option<Response>) {
+    let Pending { stream, tenant, rx: _, permit, t0 } = item;
+    shared.tenants.record(&tenant, t0.elapsed());
+    drop(permit); // release the admission slot before the write
+    let frame = match resp {
+        Some(r) if r.error.is_none() => {
+            let (rows, cols) = shared.out_shape;
+            match encode_response(&NetResponse { rows, cols, data: r.logits }) {
+                Ok(payload) => Frame { ty: FrameType::Response, stream, payload },
+                Err(e) => error_frame(stream, ErrorCode::Internal, 0, &format!("{e:#}")),
+            }
+        }
+        Some(r) => {
+            let msg = r.error.as_deref().unwrap_or("executor failed");
+            error_frame(stream, ErrorCode::Internal, 0, msg)
+        }
+        None => error_frame(stream, ErrorCode::Internal, 0, "coordinator died mid-job"),
+    };
+    let _ = tx.send(frame);
+    shared.served.fetch_add(1, Ordering::Release);
+}
+
+/// Owns the socket write half. Frames arrive over a bounded channel;
+/// once the socket errors the loop keeps draining (and discarding) so
+/// the reader/completions threads never block on a dead peer.
+fn writer_loop(stream: NetStream, rx: Receiver<Frame>) {
+    let mut w = BufWriter::new(stream);
+    let mut dead = false;
+    while let Ok(f) = rx.recv() {
+        if dead {
+            continue;
+        }
+        let ok = frame::write_frame(&mut w, &f).is_ok() && w.flush().is_ok();
+        if !ok {
+            dead = true;
+        }
+    }
+}
+
+fn metrics_loop(shared: &Arc<Shared>, listener: NetListener) {
+    while !shared.should_stop() {
+        match listener.accept() {
+            Ok(Some(mut s)) => {
+                let _ = s.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = s.write_all(render_metrics(shared).as_bytes());
+                // dropping `s` closes the dump connection
+            }
+            Ok(None) => thread::sleep(Duration::from_millis(25)),
+            Err(_) => thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// The plaintext metrics body: coordinator snapshot, wire counters,
+/// then the per-tenant block.
+fn render_metrics(shared: &Shared) -> String {
+    let mut out = shared.metrics.snapshot().render();
+    let (inflight, active) = shared.admission.inflight();
+    out.push_str(&format!("net_served_total {}\n", shared.served.load(Ordering::Relaxed)));
+    out.push_str(&format!("net_admitted_inflight {inflight}\n"));
+    out.push_str(&format!("net_tenants_active {active}\n"));
+    let shed_t = shared.admission.shed_tenant.load(Ordering::Relaxed);
+    let shed_g = shared.admission.shed_global.load(Ordering::Relaxed);
+    out.push_str(&format!("net_shed_tenant_total {shed_t}\n"));
+    out.push_str(&format!("net_shed_global_total {shed_g}\n"));
+    out.push_str(&shared.tenants.render());
+    out
+}

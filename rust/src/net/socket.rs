@@ -1,0 +1,247 @@
+//! Transport abstraction: one [`Listen`] spec grammar and one
+//! [`NetStream`]/[`NetListener`] pair covering TCP and Unix-domain
+//! sockets, so the framing/server/client layers are transport-agnostic.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Where to listen (or connect): `tcp:<host:port>` or `uds:<path>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Listen {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl Listen {
+    /// Parse a `--listen`/`--connect` spec. Structural errors (missing
+    /// scheme, bad port) fail here, before any socket is touched.
+    pub fn parse(spec: &str) -> Result<Listen> {
+        if let Some(addr) = spec.strip_prefix("tcp:") {
+            let (host, port) = addr
+                .rsplit_once(':')
+                .with_context(|| format!("tcp spec '{addr}' needs host:port"))?;
+            ensure!(!host.is_empty(), "tcp spec '{addr}' has an empty host");
+            port.parse::<u16>()
+                .map_err(|_| anyhow::anyhow!("tcp spec '{addr}' has a bad port '{port}'"))?;
+            Ok(Listen::Tcp(addr.to_string()))
+        } else if let Some(path) = spec.strip_prefix("uds:") {
+            ensure!(!path.is_empty(), "uds spec needs a socket path");
+            Ok(Listen::Uds(PathBuf::from(path)))
+        } else {
+            bail!("listen spec must be tcp:<host:port> or uds:<path>, got '{spec}'");
+        }
+    }
+}
+
+impl std::fmt::Display for Listen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Listen::Tcp(addr) => write!(f, "tcp:{addr}"),
+            Listen::Uds(path) => write!(f, "uds:{}", path.display()),
+        }
+    }
+}
+
+/// A connected stream over either transport.
+#[derive(Debug)]
+pub enum NetStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl NetStream {
+    pub fn connect(to: &Listen) -> Result<NetStream> {
+        match to {
+            Listen::Tcp(addr) => Ok(NetStream::Tcp(
+                TcpStream::connect(addr).with_context(|| format!("connecting to tcp:{addr}"))?,
+            )),
+            Listen::Uds(path) => Ok(NetStream::Uds(
+                UnixStream::connect(path)
+                    .with_context(|| format!("connecting to uds:{}", path.display()))?,
+            )),
+        }
+    }
+
+    /// Clone the OS handle (separate reader/writer halves).
+    pub fn try_clone(&self) -> Result<NetStream> {
+        Ok(match self {
+            NetStream::Tcp(s) => NetStream::Tcp(s.try_clone()?),
+            NetStream::Uds(s) => NetStream::Uds(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(d)?,
+            NetStream::Uds(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_write_timeout(d)?,
+            NetStream::Uds(s) => s.set_write_timeout(d)?,
+        }
+        Ok(())
+    }
+
+    /// Best-effort full shutdown (unblocks a peer's reads).
+    pub fn shutdown(&self) {
+        match self {
+            NetStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            NetStream::Uds(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listener over either transport, in non-blocking accept mode
+/// so the acceptor loop can poll a stop flag.
+#[derive(Debug)]
+pub enum NetListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl NetListener {
+    /// Bind `spec`. Returns the listener plus the **resolved** spec —
+    /// for `tcp:host:0` the actual port the OS assigned. A stale UDS
+    /// socket file from a dead process is removed before binding.
+    pub fn bind(spec: &Listen) -> Result<(NetListener, Listen)> {
+        match spec {
+            Listen::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp:{addr}"))?;
+                l.set_nonblocking(true)?;
+                let resolved = Listen::Tcp(l.local_addr()?.to_string());
+                Ok((NetListener::Tcp(l), resolved))
+            }
+            Listen::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding uds:{}", path.display()))?;
+                l.set_nonblocking(true)?;
+                Ok((NetListener::Uds(l), spec.clone()))
+            }
+        }
+    }
+
+    /// Accept one pending connection, or `None` when nothing is waiting.
+    /// The accepted stream is switched back to blocking mode.
+    pub fn accept(&self) -> Result<Option<NetStream>> {
+        let accepted = match self {
+            NetListener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Some(NetStream::Tcp(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => return Err(e.into()),
+            },
+            NetListener::Uds(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Some(NetStream::Uds(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => return Err(e.into()),
+            },
+        };
+        Ok(accepted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_parse_accepts_both_schemes() {
+        assert_eq!(
+            Listen::parse("tcp:127.0.0.1:8080").unwrap(),
+            Listen::Tcp("127.0.0.1:8080".into())
+        );
+        assert_eq!(Listen::parse("uds:/tmp/x.sock").unwrap(), Listen::Uds("/tmp/x.sock".into()));
+        // round-trips through Display
+        for spec in ["tcp:127.0.0.1:0", "uds:/tmp/a.sock"] {
+            assert_eq!(Listen::parse(spec).unwrap().to_string(), spec);
+        }
+    }
+
+    #[test]
+    fn listen_parse_rejects_malformed_specs() {
+        for bad in [
+            "127.0.0.1:8080",
+            "http:127.0.0.1:80",
+            "tcp:",
+            "tcp:8080",
+            "tcp::80",
+            "tcp:host:notaport",
+            "tcp:host:70000",
+            "uds:",
+            "",
+        ] {
+            assert!(Listen::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn tcp_bind_resolves_port_zero() {
+        let (listener, resolved) = NetListener::bind(&Listen::parse("tcp:127.0.0.1:0").unwrap())
+            .expect("bind an ephemeral port");
+        match &resolved {
+            Listen::Tcp(addr) => assert!(!addr.ends_with(":0"), "resolved: {addr}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(listener.accept().unwrap().is_none(), "no pending connection");
+        // a client can reach the resolved address
+        let client = NetStream::connect(&resolved).unwrap();
+        client.shutdown();
+    }
+
+    #[test]
+    fn uds_bind_replaces_stale_socket_file() {
+        let path = std::env::temp_dir().join("ivit_net_socket_stale_test.sock");
+        let _ = std::fs::remove_file(&path);
+        let spec = Listen::Uds(path.clone());
+        let (l1, _) = NetListener::bind(&spec).unwrap();
+        drop(l1); // leaves the socket file behind, like a killed process
+        assert!(path.exists(), "stale socket file expected");
+        let (_l2, _) = NetListener::bind(&spec).expect("rebinding over a stale file");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,432 @@
+//! Transport contract for the networked serving front end
+//! (`rust/src/net/`), pinned end to end over real TCP/UDS sockets:
+//!
+//! * wire responses are **bit-identical** to in-process `run_batch`
+//!   execution at DeiT-S dims, for `uniform:4` and `attn:4,mlp:8`;
+//! * malformed / oversized / mistyped frames get loud error frames and
+//!   the connection keeps serving; bad magic closes it;
+//! * a client disconnect mid-job never abandons in-flight work;
+//! * the per-tenant and global admission caps shed with a retry-after
+//!   and count into the coordinator metrics and tenant stats;
+//! * the plaintext metrics endpoint dumps the shared snapshot render
+//!   plus the wire counters.
+
+use std::io::{Read as _, Write as _};
+use std::time::{Duration, Instant};
+
+use ivit::backend::{
+    AttnBatchRequest, AttnRequest, Backend, BitProfile, ExecutionPlan as _, PlanOptions, PlanScope,
+    ReferenceBackend,
+};
+use ivit::block::EncoderBlock;
+use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, MockExecutor};
+use ivit::net::{
+    decode_error, encode_request, read_frame, write_frame, AdmissionConfig, Client, ErrorCode,
+    Frame, FrameType, Listen, NetError, NetReply, NetRequest, NetStream, ReadEvent, Server,
+    ServerConfig, MAGIC, MAX_PAYLOAD,
+};
+use ivit::quant::QTensor;
+use ivit::util::XorShift;
+
+/// A per-test UDS address under the temp dir (pid-disambiguated so
+/// concurrent `cargo test` processes never collide).
+fn uds(tag: &str) -> Listen {
+    let path = std::env::temp_dir().join(format!("ivit_net_{tag}_{}.sock", std::process::id()));
+    Listen::Uds(path)
+}
+
+/// Full serving stack over a reference block plan: coordinator +
+/// wire server. `request_limit` 0 = run until `shutdown`.
+fn block_server(
+    block: &EncoderBlock,
+    profile: BitProfile,
+    tokens: usize,
+    admission: AdmissionConfig,
+    request_limit: u64,
+    listen: Listen,
+) -> (Coordinator, Server) {
+    let backend = ReferenceBackend::for_block(block.clone());
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+    let plan = backend.plan(&opts).expect("block plan");
+    let exec = AttnBatchExecutor::for_block(plan, block, tokens, 2);
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 64,
+            max_wait: Duration::from_millis(1),
+            pipeline_depth: 2,
+        },
+    );
+    let cfg = ServerConfig {
+        listen,
+        metrics_listen: None,
+        admission,
+        request_limit,
+        in_shape: (tokens, block.d()),
+        out_shape: (tokens, block.d()),
+        timeout: Some(Duration::from_secs(60)),
+    };
+    let server = Server::start(coord.handle(), cfg).expect("server start");
+    (coord, server)
+}
+
+/// Serving stack over a [`MockExecutor`] (batch 2, 2×4 activations in,
+/// 2×2 logits out) with an injectable per-batch compute delay — the
+/// admission/shedding tests need jobs that stay in flight for a while.
+fn mock_server(
+    delay: Duration,
+    admission: AdmissionConfig,
+    listen: Listen,
+    metrics_listen: Option<Listen>,
+) -> (Coordinator, Server) {
+    let mut exec = MockExecutor::new(2, 8, 4);
+    exec.delay = delay;
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 64,
+            max_wait: Duration::from_millis(1),
+            pipeline_depth: 2,
+        },
+    );
+    let cfg = ServerConfig {
+        listen,
+        metrics_listen,
+        admission,
+        request_limit: 0,
+        in_shape: (2, 4),
+        out_shape: (2, 2),
+        timeout: Some(Duration::from_secs(60)),
+    };
+    let server = Server::start(coord.handle(), cfg).expect("server start");
+    (coord, server)
+}
+
+/// Hand-craft a 16-byte header (the tests' way to speak protocol
+/// violations the library encoder refuses to produce).
+fn raw_header(version: u8, ty: u8, stream: u64, len: u32) -> [u8; 16] {
+    let mut h = [0u8; 16];
+    h[..2].copy_from_slice(&MAGIC);
+    h[2] = version;
+    h[3] = ty;
+    h[4..12].copy_from_slice(&stream.to_le_bytes());
+    h[12..16].copy_from_slice(&len.to_le_bytes());
+    h
+}
+
+/// Read one frame and require it to be an error frame on `stream`.
+fn expect_error(sock: &mut NetStream, stream: u64) -> NetError {
+    match read_frame(sock, &|| false).expect("reply frame") {
+        ReadEvent::Frame(f) => {
+            assert_eq!(f.ty, FrameType::Error, "expected an error frame");
+            assert_eq!(f.stream, stream, "error frames echo the offending stream");
+            decode_error(&f.payload).expect("error payload")
+        }
+        other => panic!("expected an error frame on stream {stream}, got {other:?}"),
+    }
+}
+
+#[test]
+fn wire_responses_are_bit_identical_to_in_process_run_batch_at_deit_s_dims() {
+    // DeiT-S encoder dims: D=384, hidden 1536, 6 heads. uniform:4 rides
+    // TCP, the mixed attn:4,mlp:8 profile rides UDS — both transports
+    // must preserve f32 bit patterns exactly.
+    let tokens = 24;
+    for (spec, listen) in [
+        ("uniform:4", Listen::parse("tcp:127.0.0.1:0").unwrap()),
+        ("attn:4,mlp:8", uds("deit_mixed")),
+    ] {
+        let profile = BitProfile::parse(spec).unwrap();
+        let block = EncoderBlock::synthetic(384, 1536, 6, profile, 7).unwrap();
+        let (coord, server) =
+            block_server(&block, profile, tokens, AdmissionConfig::default(), 0, listen);
+
+        // in-process oracle: the same activations through run_batch
+        let mut rng = XorShift::new(11);
+        let act: Vec<f32> = rng.normal_vec(tokens * 384);
+        let qx = QTensor::quantize_f32(&act, tokens, 384, block.input_spec()).unwrap();
+        let backend = ReferenceBackend::for_block(block.clone());
+        let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+        let mut oracle = backend.plan(&opts).unwrap();
+        let got = oracle.run_batch(&AttnBatchRequest::single(AttnRequest::new(qx))).unwrap();
+        let want: Vec<f32> = got.items[0].out_codes.as_ref().unwrap().dequantize();
+
+        let mut client = Client::connect(server.listen()).unwrap();
+        let resp = client.request("parity", tokens, 384, act).unwrap();
+        assert_eq!((resp.rows, resp.cols), (tokens, 384), "{spec}");
+        assert_eq!(resp.data.len(), want.len(), "{spec}");
+        for (i, (g, w)) in resp.data.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{spec}: value {i} differs on the wire");
+        }
+        drop(client);
+        server.shutdown();
+        let report = server.wait().unwrap();
+        assert_eq!(report.served, 1, "{spec}");
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn malformed_frames_are_answered_loudly_and_the_connection_survives() {
+    let profile = BitProfile::uniform(3);
+    let block = EncoderBlock::synthetic(8, 16, 2, profile, 5).unwrap();
+    let tokens = 4;
+    let (coord, server) =
+        block_server(&block, profile, tokens, AdmissionConfig::default(), 0, uds("malformed"));
+    let mut sock = NetStream::connect(server.listen()).unwrap();
+
+    // unknown version: the payload is skipped, the stream id echoed
+    sock.write_all(&raw_header(9, 1, 21, 4)).unwrap();
+    sock.write_all(&[0, 1, 2, 3]).unwrap();
+    let e = expect_error(&mut sock, 21);
+    assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+
+    // unknown frame type byte
+    sock.write_all(&raw_header(1, 99, 22, 0)).unwrap();
+    assert_eq!(expect_error(&mut sock, 22).code, ErrorCode::BadFrameType);
+
+    // response frames are a server-to-client type only
+    write_frame(&mut sock, &Frame { ty: FrameType::Response, stream: 23, payload: vec![] })
+        .unwrap();
+    assert_eq!(expect_error(&mut sock, 23).code, ErrorCode::BadFrameType);
+
+    // garbage request payload
+    write_frame(&mut sock, &Frame { ty: FrameType::Request, stream: 24, payload: vec![7; 3] })
+        .unwrap();
+    assert_eq!(expect_error(&mut sock, 24).code, ErrorCode::BadPayload);
+
+    // well-formed request with the wrong dims — rejected BEFORE it can
+    // reach Handle::submit's payload-size assert
+    let req = NetRequest { tenant: "t".into(), rows: 2, cols: 2, data: vec![0.0; 4] };
+    let payload = encode_request(&req).unwrap();
+    write_frame(&mut sock, &Frame { ty: FrameType::Request, stream: 25, payload }).unwrap();
+    let e = expect_error(&mut sock, 25);
+    assert_eq!(e.code, ErrorCode::BadPayload);
+    assert!(e.detail.contains("4×8"), "detail names the expected dims: {}", e.detail);
+
+    // ...and the SAME connection still serves a real request
+    let mut client = Client::from_stream(sock).unwrap();
+    let act: Vec<f32> = XorShift::new(3).normal_vec(tokens * 8);
+    let resp = client.request("t", tokens, 8, act).unwrap();
+    assert_eq!(resp.data.len(), tokens * 8);
+    drop(client);
+    server.shutdown();
+    let report = server.wait().unwrap();
+    assert_eq!(report.served, 1, "only the valid request was admitted");
+    assert_eq!(report.shed, 0, "protocol errors are rejections, not sheds");
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_frames_are_skipped_and_answered_with_frame_too_large() {
+    let profile = BitProfile::uniform(3);
+    let block = EncoderBlock::synthetic(8, 16, 2, profile, 5).unwrap();
+    let tokens = 4;
+    let (coord, server) =
+        block_server(&block, profile, tokens, AdmissionConfig::default(), 0, uds("oversized"));
+    let mut sock = NetStream::connect(server.listen()).unwrap();
+
+    // declare one byte over the cap — the length field stays honest, so
+    // the server must stream-skip the whole payload without buffering it
+    let len = MAX_PAYLOAD + 1;
+    sock.write_all(&raw_header(1, 1, 31, len)).unwrap();
+    let chunk = vec![0u8; 64 * 1024];
+    let mut remaining = len as usize;
+    while remaining > 0 {
+        let take = remaining.min(chunk.len());
+        sock.write_all(&chunk[..take]).unwrap();
+        remaining -= take;
+    }
+    let e = expect_error(&mut sock, 31);
+    assert_eq!(e.code, ErrorCode::FrameTooLarge);
+
+    // framing intact: the next request on the same socket round-trips
+    let mut client = Client::from_stream(sock).unwrap();
+    let act: Vec<f32> = XorShift::new(4).normal_vec(tokens * 8);
+    assert_eq!(client.request("t", tokens, 8, act).unwrap().data.len(), tokens * 8);
+    drop(client);
+    server.shutdown();
+    let _ = server.wait().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn bad_magic_gets_a_final_error_frame_and_the_connection_closes() {
+    let profile = BitProfile::uniform(3);
+    let block = EncoderBlock::synthetic(8, 16, 2, profile, 5).unwrap();
+    let (coord, server) =
+        block_server(&block, profile, 4, AdmissionConfig::default(), 0, uds("badmagic"));
+    let mut sock = NetStream::connect(server.listen()).unwrap();
+    let mut junk = raw_header(1, 1, 0, 0);
+    junk[..2].copy_from_slice(&[0xde, 0xad]); // framing lost
+    sock.write_all(&junk).unwrap();
+    let e = expect_error(&mut sock, 0);
+    assert_eq!(e.code, ErrorCode::BadMagic);
+    // fatal: the server closes its half after the best-effort frame
+    match read_frame(&mut sock, &|| false).unwrap() {
+        ReadEvent::Eof => {}
+        other => panic!("connection must close after bad magic, got {other:?}"),
+    }
+    server.shutdown();
+    let _ = server.wait().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn client_disconnect_mid_job_never_abandons_inflight_work() {
+    let admission = AdmissionConfig { per_tenant: 8, global: 16, retry_after_ms: 5 };
+    let (coord, server) = mock_server(Duration::from_millis(30), admission, uds("disc"), None);
+    let mut client = Client::connect(server.listen()).unwrap();
+    for i in 0..4u32 {
+        let data: Vec<f32> = (0..8).map(|k| (i * 8 + k) as f32).collect();
+        client.submit("ghost", 2, 4, data).unwrap();
+    }
+    drop(client); // vanish with four jobs in flight
+
+    // the completions thread must drain every job anyway — no abandons,
+    // no panic, permits released
+    let t0 = Instant::now();
+    while server.served() < 4 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "in-flight jobs were abandoned");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // and the server keeps serving fresh connections afterwards
+    let mut fresh = Client::connect(server.listen()).unwrap();
+    fresh.ping().unwrap();
+    let resp = fresh.request("alive", 2, 4, vec![1.0; 8]).unwrap();
+    assert_eq!((resp.rows, resp.cols), (2, 2));
+    drop(fresh);
+    server.shutdown();
+    let report = server.wait().unwrap();
+    assert_eq!(report.served, 5);
+    assert!(!report.timed_out);
+    coord.shutdown();
+}
+
+#[test]
+fn per_tenant_cap_sheds_with_retry_after_and_counts_it() {
+    let admission = AdmissionConfig { per_tenant: 1, global: 8, retry_after_ms: 7 };
+    let (coord, server) = mock_server(Duration::from_millis(60), admission, uds("shed_t"), None);
+    let mut client = Client::connect(server.listen()).unwrap();
+    let s1 = client.submit("a", 2, 4, vec![1.0; 8]).unwrap();
+    let s2 = client.submit("a", 2, 4, vec![2.0; 8]).unwrap(); // over tenant a's cap
+    let s3 = client.submit("b", 2, 4, vec![3.0; 8]).unwrap(); // other tenants unaffected
+    match client.wait(s2).unwrap() {
+        NetReply::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Shed);
+            assert_eq!(e.retry_after_ms, 7, "the shed carries the configured back-off");
+            assert!(e.detail.contains("tenant 'a'"), "{}", e.detail);
+        }
+        other => panic!("tenant-cap overflow must shed, got {other:?}"),
+    }
+    assert!(matches!(client.wait(s1).unwrap(), NetReply::Response(_)));
+    assert!(matches!(client.wait(s3).unwrap(), NetReply::Response(_)));
+    drop(client);
+    server.shutdown();
+    let report = server.wait().unwrap();
+    assert_eq!(report.served, 2);
+    assert_eq!(report.shed, 1);
+    assert_eq!(report.snapshot.shed, 1, "the shed count reaches the coordinator metrics");
+    assert!(report.tenants.contains("tenant_shed_total{tenant=\"a\"} 1"), "{}", report.tenants);
+    assert!(report.tenants.contains("tenant_served_total{tenant=\"b\"} 1"), "{}", report.tenants);
+    coord.shutdown();
+}
+
+#[test]
+fn global_cap_sheds_and_the_metrics_endpoint_reports_it() {
+    let admission = AdmissionConfig { per_tenant: 1, global: 1, retry_after_ms: 9 };
+    let metrics_at = uds("metrics_ep");
+    let (coord, server) = mock_server(
+        Duration::from_millis(60),
+        admission,
+        uds("shed_g"),
+        Some(metrics_at.clone()),
+    );
+    let mut client = Client::connect(server.listen()).unwrap();
+    let s1 = client.submit("a", 2, 4, vec![1.0; 8]).unwrap();
+    let s2 = client.submit("b", 2, 4, vec![2.0; 8]).unwrap(); // global cap reached
+    match client.wait(s2).unwrap() {
+        NetReply::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Shed);
+            assert_eq!(e.retry_after_ms, 9);
+            assert!(e.detail.contains("global in-flight cap"), "{}", e.detail);
+        }
+        other => panic!("global-cap overflow must shed, got {other:?}"),
+    }
+    assert!(matches!(client.wait(s1).unwrap(), NetReply::Response(_)));
+    let t0 = Instant::now();
+    while server.served() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "served counter never advanced");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the plaintext endpoint dumps the shared snapshot render plus the
+    // wire counters, then closes
+    let mut ep = NetStream::connect(&metrics_at).unwrap();
+    let mut dump = String::new();
+    ep.read_to_string(&mut dump).unwrap();
+    assert!(dump.contains("requests_total"), "{dump}");
+    assert!(dump.contains("latency_us{q=\"p99\"}"), "{dump}");
+    assert!(dump.contains("net_served_total 1"), "{dump}");
+    assert!(dump.contains("net_shed_global_total 1"), "{dump}");
+    assert!(dump.contains("tenant_served_total{tenant=\"a\"} 1"), "{dump}");
+    drop(client);
+    server.shutdown();
+    let _ = server.wait().unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn multiplexed_streams_park_out_of_order_replies_and_stay_bit_exact() {
+    let profile = BitProfile::uniform(3);
+    let block = EncoderBlock::synthetic(8, 16, 2, profile, 5).unwrap();
+    let tokens = 4;
+    let (coord, server) =
+        block_server(&block, profile, tokens, AdmissionConfig::default(), 0, uds("mux"));
+    let mut client = Client::connect(server.listen()).unwrap();
+    client.ping().unwrap();
+
+    let mut rng = XorShift::new(9);
+    let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(tokens * 8)).collect();
+    let streams: Vec<u64> =
+        inputs.iter().map(|x| client.submit("mux", tokens, 8, x.clone()).unwrap()).collect();
+    // drain in REVERSE submission order — earlier replies get parked
+    for (x, s) in inputs.iter().zip(&streams).rev() {
+        let resp = match client.wait(*s).unwrap() {
+            NetReply::Response(r) => r,
+            other => panic!("stream {s}: {other:?}"),
+        };
+        let qx = QTensor::quantize_f32(x, tokens, 8, block.input_spec()).unwrap();
+        let want = block.run_reference(&qx).unwrap().dequantize();
+        assert_eq!(resp.data.len(), want.len());
+        let same = resp.data.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "stream {s}: multiplexed reply must stay bit-identical");
+    }
+    client.ping().unwrap(); // still healthy after the out-of-order drain
+    drop(client);
+    server.shutdown();
+    let report = server.wait().unwrap();
+    assert_eq!(report.served, 3);
+    coord.shutdown();
+}
+
+#[test]
+fn request_with_retry_rides_out_the_shed_window() {
+    let admission = AdmissionConfig { per_tenant: 1, global: 4, retry_after_ms: 5 };
+    let (coord, server) = mock_server(Duration::from_millis(150), admission, uds("retry"), None);
+    let mut holder = Client::connect(server.listen()).unwrap();
+    let held = holder.submit("a", 2, 4, vec![1.0; 8]).unwrap(); // occupies tenant a's slot
+    let mut client = Client::connect(server.listen()).unwrap();
+    let (resp, sheds) = client.request_with_retry("a", 2, 4, &[2.0; 8], 64).unwrap();
+    assert_eq!((resp.rows, resp.cols), (2, 2));
+    assert!(sheds >= 1, "the first attempt lands inside the held window and must shed");
+    assert!(matches!(holder.wait(held).unwrap(), NetReply::Response(_)));
+    drop(client);
+    drop(holder);
+    server.shutdown();
+    let report = server.wait().unwrap();
+    assert_eq!(report.served, 2);
+    assert!(report.shed >= 1);
+    coord.shutdown();
+}
