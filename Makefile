@@ -16,6 +16,9 @@
 #                      through an attn:4,mlp:8 encoder block with ref ≡ sim
 #                      bit-identity asserted (examples/profile_smoke.rs) plus
 #                      a tiny mixed-profile `ivit eval --backend ref`
+#   make jit-smoke   — CI smoke for the kernel codegen subsystem: one batch
+#                      through a compiled (jit) encoder block with jit ≡ ref
+#                      bit-identity asserted (examples/jit_smoke.rs)
 #   make serve-net-smoke — CI smoke for the wire protocol: a loopback-UDS
 #                      `ivit serve --listen` server plus an `ivit request`
 #                      client, with every reply asserted bit-identical to a
@@ -25,7 +28,7 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke serve-net-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke jit-smoke serve-net-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -54,6 +57,9 @@ profile-smoke:
 	cd $(RUST_DIR) && cargo run --release -q -- eval --backend ref \
 		--bits-profile "attn:4,mlp:8" --dim 16 --hidden 32 --patch 8 \
 		--limit 4 --images 4
+
+jit-smoke:
+	cd $(RUST_DIR) && cargo run --release -q --example jit_smoke
 
 serve-net-smoke:
 	cd $(RUST_DIR) && cargo build --release -q

@@ -11,9 +11,12 @@
 //! 2. `pipelined_vs_drain` — the submit/poll pipeline gate: K sim-mt
 //!    batches drained one at a time vs all K overlapped in flight;
 //!    FAILS if pipelined dispatch does not beat drain-per-batch.
-//! 3. attention serving through the coordinator for every integer
+//! 3. `jit_vs_ref` — the kernel-codegen arm: one encoder block through
+//!    the plan-time compiled `jit` program vs the `ref` interpreter,
+//!    **bit-identity asserted row for row** before any timing is read.
+//! 4. attention serving through the coordinator for every integer
 //!    backend (no artifacts needed).
-//! 4. image-classification serving over the PJRT executables
+//! 5. image-classification serving over the PJRT executables
 //!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
 //! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
@@ -31,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use ivit::backend::{
     AttnBatchRequest, AttnBatchResponse, AttnRequest, Backend, BackendConfig, BackendRegistry,
-    BitProfile, JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend,
+    BitProfile, JitBackend, JobState, PlanOptions, PlanScope, ReferenceBackend, SimBackend,
 };
 use ivit::bench::{BenchRecord, TableWriter};
 use ivit::block::EncoderBlock;
@@ -131,6 +134,7 @@ fn batch_vs_per_row() -> anyhow::Result<()> {
             .str_field("dispatch", dispatch)
             .str_field("backend", backend)
             .str_field("profile", &cfg.profile.key())
+            .bool_field("smoke", smoke())
             .num("rows", rows as f64)
             .num("rows_per_s", rows as f64 / wall)
             .num("ratio_vs_per_row", per_row_wall / wall)
@@ -232,6 +236,7 @@ fn pipelined_vs_drain() -> anyhow::Result<()> {
         BenchRecord::new("throughput.pipelined_vs_drain")
             .str_field("dispatch", name)
             .str_field("profile", &cfg.profile.key())
+            .bool_field("smoke", smoke())
             .num("batches", n_batches as f64)
             .num("rows_per_s", total_rows / wall)
             .num("ratio_vs_drain", drain_wall / wall)
@@ -299,6 +304,7 @@ fn uniform_vs_mixed() -> anyhow::Result<()> {
         ]);
         BenchRecord::new("throughput.uniform_vs_mixed")
             .str_field("profile", &profile.key())
+            .bool_field("smoke", smoke())
             .num("rows", rows as f64)
             .num("rows_per_s", rows as f64 / wall)
             .num("macs_m", macs)
@@ -308,6 +314,72 @@ fn uniform_vs_mixed() -> anyhow::Result<()> {
     }
     print!("{}", tbl.render());
     println!("\nuniform-vs-mixed: sim ≡ ref verified bit-identical on both arms ✓\n");
+    Ok(())
+}
+
+/// The kernel-codegen comparison point: one encoder block executed by
+/// the `ref` interpreter vs the plan-time compiled `jit` program, block
+/// scope, at the mixed `attn:4,mlp:8` profile. **Bit-identity is
+/// asserted row for row before any timing is read** — the compiled
+/// backend's standing contract, also pinned by tests/kernel_parity.rs.
+/// Emits one `throughput.jit_vs_ref` record per arm so the
+/// `IVIT_BENCH_JSON` trajectory tracks compiled-vs-interpreted
+/// throughput; there is no timing gate (the interpreter is the
+/// correctness oracle, not a performance baseline).
+fn jit_vs_ref() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows) =
+        if smoke() { (16usize, 32usize, 2usize, 8usize, 2usize) } else { (64, 256, 2, 32, 8) };
+    println!(
+        "compiled (jit) vs interpreted (ref) encoder block (D={dim} H={hidden}, batch {rows}):\n"
+    );
+    let profile = BitProfile::parse("attn:4,mlp:8")?;
+    let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 47)?;
+    let reqs: Vec<AttnRequest> = (0..rows as u64)
+        .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 700 + i)?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let req = AttnBatchRequest::new(reqs);
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+
+    let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts)?;
+    let t0 = Instant::now();
+    let want = ref_plan.run_batch(&req)?;
+    let ref_wall = t0.elapsed().as_secs_f64();
+
+    let mut jit_plan = JitBackend::for_block(block).plan(&opts)?;
+    let t0 = Instant::now();
+    let got = jit_plan.run_batch(&req)?;
+    let jit_wall = t0.elapsed().as_secs_f64();
+
+    // the numerics gate comes first: compiled must equal interpreted
+    for (i, (w, g)) in want.items.iter().zip(&got.items).enumerate() {
+        anyhow::ensure!(
+            w.out_codes.as_ref().unwrap().codes.data == g.out_codes.as_ref().unwrap().codes.data,
+            "row {i}: jit vs ref output codes differ at bits[{}]",
+            profile.key()
+        );
+    }
+
+    let mut tbl = TableWriter::new(&["backend", "rows", "wall ms", "rows/s"]);
+    for (name, wall) in [("ref (interpreted)", ref_wall), ("jit (compiled)", jit_wall)] {
+        tbl.row(vec![
+            name.to_string(),
+            rows.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", rows as f64 / wall),
+        ]);
+    }
+    for (backend, wall) in [("ref", ref_wall), ("jit", jit_wall)] {
+        BenchRecord::new("throughput.jit_vs_ref")
+            .str_field("backend", backend)
+            .str_field("profile", &profile.key())
+            .bool_field("smoke", smoke())
+            .num("rows", rows as f64)
+            .num("rows_per_s", rows as f64 / wall)
+            .num("ratio_vs_ref", ref_wall / wall)
+            .emit();
+    }
+    print!("{}", tbl.render());
+    println!("\njit-vs-ref: compiled output verified bit-identical to the interpreter ✓\n");
     Ok(())
 }
 
@@ -323,7 +395,7 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
     } else {
         std::env::var("IVIT_BENCH_ATTN_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(32)
     };
-    for name in ["ref", "sim", "sim-mt"] {
+    for name in ["ref", "sim", "sim-mt", "jit"] {
         let mut cfg =
             BackendConfig { d_in: 96, d_head: 32, workers: 4, ..BackendConfig::default() };
         let module = cfg.resolve_module()?;
@@ -358,6 +430,7 @@ fn backend_attention_throughput() -> anyhow::Result<()> {
         BenchRecord::new("throughput.attention_serving")
             .str_field("backend", name)
             .str_field("profile", &cfg.profile.key())
+            .bool_field("smoke", smoke())
             .num("tokens", tokens as f64)
             .num("batch", batch as f64)
             .num("req_per_s", n_requests as f64 / wall)
@@ -383,6 +456,7 @@ fn main() -> anyhow::Result<()> {
     batch_vs_per_row()?;
     pipelined_vs_drain()?;
     uniform_vs_mixed()?;
+    jit_vs_ref()?;
     backend_attention_throughput()?;
     if smoke() {
         println!("bench smoke: one tiny batch per backend completed OK");

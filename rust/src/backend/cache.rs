@@ -24,6 +24,19 @@
 //! differently-weighted modules in one process must label them (see
 //! [`crate::block::EncoderBlock::label`]) or use separate caches.
 //!
+//! ### Bounded residency (LRU)
+//!
+//! Plans hold live state — worker pools, bound engines, compiled
+//! kernel programs with repacked weights — so unbounded residency is a
+//! memory leak in long-lived serving processes. The cache is bounded:
+//! at most [`DEFAULT_PLAN_CAPACITY`] plans stay resident (configurable
+//! via [`PlanCache::with_capacity`] / [`PlanCache::set_capacity`]), and
+//! inserting past the bound evicts the least-recently-used entry
+//! ([`PlanCache::evictions`] counts them). Eviction drops only the
+//! resident plan — the [`PlanSeed`] rebuild index survives, so evicted
+//! seeded entries still persist and re-plan bit-identically on the
+//! next lookup (pinned by tests).
+//!
 //! A process-wide instance is available through [`PlanCache::global`]
 //! (what `ivit simulate` routes through).
 //!
@@ -43,7 +56,6 @@
 //! (synthetic modules are deterministic functions of their geometry +
 //! seed; pinned by tests).
 
-use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
@@ -56,15 +68,32 @@ use crate::util::Json;
 use super::registry::{BackendConfig, BackendRegistry};
 use super::{Backend, ExecutionPlan, PlanOptions, PlanScope};
 
-/// Name-keyed memoization of [`ExecutionPlan`]s, with an optional
+/// Resident plans a cache holds before evicting: generous enough for a
+/// full DeiT-S block stack per backend with headroom, small enough to
+/// bound a long-lived server.
+pub const DEFAULT_PLAN_CAPACITY: usize = 64;
+
+/// Name-keyed LRU memoization of [`ExecutionPlan`]s, with an optional
 /// [`PlanSeed`] index for the entries that can be rebuilt across
-/// process restarts.
-#[derive(Default)]
+/// process restarts. At most `capacity` plans stay resident; the seed
+/// index is unbounded (seeds are tiny, and dropping one would silently
+/// shrink the persisted sidecar).
 pub struct PlanCache {
     plans: BTreeMap<String, Box<dyn ExecutionPlan>>,
     seeds: BTreeMap<String, PlanSeed>,
+    /// Last-use stamp per *resident* plan; the minimum is the LRU.
+    stamps: BTreeMap<String, u64>,
+    clock: u64,
+    capacity: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(DEFAULT_PLAN_CAPACITY)
+    }
 }
 
 /// The JSON-serializable recipe for rebuilding one cached plan after a
@@ -202,6 +231,64 @@ impl PlanCache {
         PlanCache::default()
     }
 
+    /// A cache that keeps at most `capacity` plans resident (clamped to
+    /// at least 1 — a zero-capacity cache could never return a borrow).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            plans: BTreeMap::new(),
+            seeds: BTreeMap::new(),
+            stamps: BTreeMap::new(),
+            clock: 0,
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Change the residency bound, evicting LRU entries immediately if
+    /// the cache is over the new bound.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+        while self.plans.len() > self.capacity {
+            self.evict_lru();
+        }
+    }
+
+    /// The residency bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn touch(&mut self, key: &str) {
+        self.clock += 1;
+        self.stamps.insert(key.to_string(), self.clock);
+    }
+
+    /// Drop the least-recently-used resident plan. The seed index is
+    /// untouched: evicted seeded entries still persist and rebuild.
+    fn evict_lru(&mut self) {
+        let lru = self
+            .stamps
+            .iter()
+            .min_by_key(|(_, &stamp)| stamp)
+            .map(|(key, _)| key.clone());
+        if let Some(key) = lru {
+            self.plans.remove(&key);
+            self.stamps.remove(&key);
+            self.evictions += 1;
+        }
+    }
+
+    /// Make room if needed, insert, and stamp the entry most-recent.
+    fn insert_resident(&mut self, key: String, plan: Box<dyn ExecutionPlan>) {
+        while self.plans.len() >= self.capacity {
+            self.evict_lru();
+        }
+        self.touch(&key);
+        self.plans.insert(key, plan);
+    }
+
     /// The cache key for planning `backend` with `opts`: backend name,
     /// backend description, and the **full serialized** [`PlanOptions`]
     /// ([`PlanOptions::key`]) — every options field, bit profile
@@ -222,16 +309,15 @@ impl PlanCache {
         opts: &PlanOptions,
     ) -> Result<&mut dyn ExecutionPlan> {
         let key = Self::key(backend, opts);
-        match self.plans.entry(key) {
-            Entry::Occupied(e) => {
-                self.hits += 1;
-                Ok(e.into_mut().as_mut())
-            }
-            Entry::Vacant(v) => {
-                self.misses += 1;
-                Ok(v.insert(backend.plan(opts)?).as_mut())
-            }
+        if self.plans.contains_key(&key) {
+            self.hits += 1;
+            self.touch(&key);
+        } else {
+            self.misses += 1;
+            let plan = backend.plan(opts)?;
+            self.insert_resident(key.clone(), plan);
         }
+        Ok(self.plans.get_mut(&key).expect("resident above").as_mut())
     }
 
     /// Like [`Self::get_or_plan`], but through a rebuildable
@@ -247,16 +333,15 @@ impl PlanCache {
     ) -> Result<&mut dyn ExecutionPlan> {
         let (key, backend) = self.seed_backend(registry, seed)?;
         self.seeds.insert(key.clone(), seed.clone());
-        match self.plans.entry(key) {
-            Entry::Occupied(e) => {
-                self.hits += 1;
-                Ok(e.into_mut().as_mut())
-            }
-            Entry::Vacant(v) => {
-                self.misses += 1;
-                Ok(v.insert(backend.plan(&seed.options())?).as_mut())
-            }
+        if self.plans.contains_key(&key) {
+            self.hits += 1;
+            self.touch(&key);
+        } else {
+            self.misses += 1;
+            let plan = backend.plan(&seed.options())?;
+            self.insert_resident(key.clone(), plan);
         }
+        Ok(self.plans.get_mut(&key).expect("resident above").as_mut())
     }
 
     /// Like [`Self::get_or_plan_seeded`], but hands the plan out by
@@ -273,6 +358,7 @@ impl PlanCache {
         self.seeds.insert(key.clone(), seed.clone());
         match self.plans.remove(&key) {
             Some(plan) => {
+                self.stamps.remove(&key);
                 self.hits += 1;
                 Ok(plan)
             }
@@ -383,7 +469,7 @@ impl PlanCache {
             let plan = backend
                 .plan(&seed.options())
                 .with_context(|| format!("{path:?}: rebuilding plan for entry {i}"))?;
-            cache.plans.insert(key.clone(), plan);
+            cache.insert_resident(key.clone(), plan);
             cache.seeds.insert(key, seed);
         }
         Ok(cache)
@@ -399,6 +485,11 @@ impl PlanCache {
         self.misses
     }
 
+    /// Resident plans dropped to stay under the capacity bound.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
     /// Resident plan count.
     pub fn len(&self) -> usize {
         self.plans.len()
@@ -412,6 +503,7 @@ impl PlanCache {
     /// seed index.
     pub fn clear(&mut self) {
         self.plans.clear();
+        self.stamps.clear();
         self.seeds.clear();
     }
 
@@ -660,6 +752,53 @@ mod tests {
         assert_eq!(back.seed, (1u64 << 53) + 1);
 
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_the_least_recently_used_entry() {
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 5).unwrap();
+        let backend = ReferenceBackend::new(module);
+        // three distinct keys over one backend: workers is an options field
+        let oa = PlanOptions::default();
+        let ob = PlanOptions { workers: 3, ..PlanOptions::default() };
+        let oc = PlanOptions { workers: 5, ..PlanOptions::default() };
+        let mut cache = PlanCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        cache.get_or_plan(&backend, &oa).unwrap(); // miss, resident {a}
+        cache.get_or_plan(&backend, &ob).unwrap(); // miss, resident {a, b}
+        cache.get_or_plan(&backend, &oa).unwrap(); // hit — `a` is now the MRU
+        cache.get_or_plan(&backend, &oc).unwrap(); // miss — evicts `b`, the LRU
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        cache.get_or_plan(&backend, &oa).unwrap(); // `a` survived the eviction
+        assert_eq!((cache.misses(), cache.hits()), (3, 2));
+        cache.get_or_plan(&backend, &ob).unwrap(); // `b` was evicted → re-planned
+        assert_eq!((cache.misses(), cache.hits(), cache.evictions()), (4, 2, 2));
+        // shrinking the bound evicts down immediately
+        cache.set_capacity(1);
+        assert_eq!((cache.len(), cache.evictions()), (1, 3));
+        // a zero capacity is clamped — the cache can always hold one plan
+        assert_eq!(PlanCache::with_capacity(0).capacity(), 1);
+    }
+
+    #[test]
+    fn evicted_entries_replan_bit_identical() {
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 5).unwrap();
+        let backend = ReferenceBackend::new(module.clone());
+        let req = AttnBatchRequest::single(AttnRequest::new(module.random_input(4, 1).unwrap()));
+        let mut cache = PlanCache::with_capacity(1);
+        let oa = PlanOptions::default();
+        let ob = PlanOptions { workers: 3, ..PlanOptions::default() };
+        let first = cache.get_or_plan(&backend, &oa).unwrap().run_batch(&req).unwrap();
+        cache.get_or_plan(&backend, &ob).unwrap(); // capacity 1 → evicts `a`
+        assert_eq!(cache.evictions(), 1);
+        let again = cache.get_or_plan(&backend, &oa).unwrap().run_batch(&req).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (3, 0), "an evicted key re-plans, not hits");
+        assert_eq!(
+            first.items[0].out_codes.as_ref().unwrap().codes.data,
+            again.items[0].out_codes.as_ref().unwrap().codes.data,
+            "a re-planned entry must be bit-identical to the evicted one"
+        );
     }
 
     #[test]

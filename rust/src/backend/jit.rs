@@ -1,0 +1,236 @@
+//! [`JitBackend`] — the plan-time compiled execution path.
+//!
+//! `plan()` lowers the module/block + [`crate::quant::BitProfile`]
+//! through [`crate::kernel`] into one straight-line
+//! [`KernelProgram`] — every fold constant, clamp range, GELU table and
+//! dimension baked in at lowering time, weights repacked for the
+//! executor's streaming GEMM loops — and [`JitPlan`] then executes
+//! batches with no per-request branching on profile or geometry.
+//! Output codes (and the W_O fp values at attention scope) are
+//! bit-identical to [`super::ReferenceBackend`] — the contract
+//! `tests/kernel_parity.rs` pins at DeiT-S dimensions.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::block::EncoderBlock;
+use crate::kernel::{lower_attention, lower_block, KernelProgram};
+
+use super::{
+    ensure_plan_profile, AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest,
+    AttnResponse, Backend, Capabilities, ExecutionPlan, JobId, JobState, PlanOptions, PlanScope,
+    SyncJobs,
+};
+
+/// The kernel-compiler backend: lowering happens at plan time, batch
+/// execution runs the compiled program.
+#[derive(Debug)]
+pub struct JitBackend {
+    module: AttnModule,
+    /// The encoder block this backend lowers at [`PlanScope::Block`];
+    /// `None` for attention-only backends.
+    block: Option<EncoderBlock>,
+    /// Resident attention program for the single-request adapter (so
+    /// repeated `run_attention` calls lower once, like the other
+    /// built-ins' resident-plan paths).
+    attn_program: Option<KernelProgram>,
+}
+
+impl JitBackend {
+    pub fn new(module: AttnModule) -> JitBackend {
+        JitBackend { module, block: None, attn_program: None }
+    }
+
+    /// A backend that can plan the whole encoder block (its attention
+    /// half also serves [`PlanScope::Attention`] plans).
+    pub fn for_block(block: EncoderBlock) -> JitBackend {
+        JitBackend { module: block.attn.clone(), block: Some(block), attn_program: None }
+    }
+
+    pub fn module(&self) -> &AttnModule {
+        &self.module
+    }
+
+    pub fn block(&self) -> Option<&EncoderBlock> {
+        self.block.as_ref()
+    }
+}
+
+/// A compiled program plus the synchronous job parking lot: `submit`
+/// executes the batch through the program inline and parks the
+/// response for `poll`.
+#[derive(Debug)]
+pub struct JitPlan {
+    program: KernelProgram,
+    jobs: SyncJobs<AttnBatchResponse>,
+}
+
+impl JitPlan {
+    pub fn new(program: KernelProgram) -> JitPlan {
+        JitPlan { program, jobs: SyncJobs::new() }
+    }
+
+    /// The lowered program (disassemble it with `format!("{}", …)`).
+    pub fn program(&self) -> &KernelProgram {
+        &self.program
+    }
+
+    fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
+        let t0 = Instant::now();
+        let items = req
+            .items
+            .iter()
+            .map(|r| {
+                let row_t0 = Instant::now();
+                let (out, values) = self.program.execute(&r.x)?;
+                Ok(AttnResponse {
+                    out_codes: Some(out),
+                    out_values: values,
+                    stages: None,
+                    report: None,
+                    elapsed: row_t0.elapsed(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AttnBatchResponse { items, report: None, elapsed: t0.elapsed() })
+    }
+}
+
+impl ExecutionPlan for JitPlan {
+    fn backend_name(&self) -> &str {
+        "jit"
+    }
+
+    fn describe(&self) -> String {
+        self.program.summary()
+    }
+
+    fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
+        let result = self.execute(req);
+        Ok(self.jobs.push(result))
+    }
+
+    fn poll(&mut self, job: JobId) -> Result<JobState<AttnBatchResponse>> {
+        self.jobs.poll(job, "jit plan")
+    }
+}
+
+impl Backend for JitBackend {
+    fn name(&self) -> &str {
+        "jit"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { bit_exact_codes: true, hardware_stats: false, needs_artifacts: false }
+    }
+
+    fn describe(&self) -> String {
+        match &self.block {
+            Some(b) => format!("plan-time kernel compiler, {}", b.describe()),
+            None => format!(
+                "plan-time kernel compiler: D_in={} D_out={} heads={} bits[{}] ({}{})",
+                self.module.d_in(),
+                self.module.d_out(),
+                self.module.heads,
+                self.module.profile.key(),
+                if self.module.shift { "shift-exp" } else { "exact-exp" },
+                if self.module.wo.is_some() { ", W_O wired" } else { "" },
+            ),
+        }
+    }
+
+    fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        match opts.scope {
+            PlanScope::Attention => {
+                ensure_plan_profile(&opts.profile, &self.module.profile, "jit attention module")?;
+                Ok(Box::new(JitPlan::new(lower_attention(&self.module)?)))
+            }
+            PlanScope::Block => {
+                let block = self.block.as_ref().ok_or_else(|| {
+                    anyhow!("jit backend was built without an encoder block (scope=Block)")
+                })?;
+                ensure_plan_profile(&opts.profile, &block.profile, "jit encoder block")?;
+                Ok(Box::new(JitPlan::new(lower_block(block)?)))
+            }
+        }
+    }
+
+    /// Single-request adapter over a resident compiled program: lowers
+    /// the attention module on first use, then every call executes the
+    /// cached program (the default adapter would re-plan — and reject
+    /// non-default profiles at its `PlanOptions::default()` boundary).
+    fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
+        if self.attn_program.is_none() {
+            self.attn_program = Some(lower_attention(&self.module)?);
+        }
+        let program = self.attn_program.as_ref().expect("lowered above");
+        let t0 = Instant::now();
+        let (out, values) = program.execute(&req.x)?;
+        Ok(AttnResponse {
+            out_codes: Some(out),
+            out_values: values,
+            stages: None,
+            report: None,
+            elapsed: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BitProfile, QTensor, QuantSpec, ReferenceBackend, Step};
+    use super::*;
+    use crate::quant::linear::IntMat;
+
+    #[test]
+    fn jit_attention_matches_ref_on_a_tiny_module() {
+        let module = AttnModule::synthetic(16, 8, 2, BitProfile::uniform(3), 5).unwrap();
+        let x = module.random_input(6, 3).unwrap();
+        let mut jit = JitBackend::new(module.clone());
+        let mut reference = ReferenceBackend::new(module);
+        let a = jit.run_attention(&AttnRequest::new(x.clone())).unwrap();
+        let b = reference.run_attention(&AttnRequest::new(x)).unwrap();
+        assert_eq!(
+            a.out_codes.as_ref().unwrap().codes.data,
+            b.out_codes.as_ref().unwrap().codes.data
+        );
+        assert_eq!(a.out_values, b.out_values);
+        assert!(jit.capabilities().bit_exact_codes);
+    }
+
+    #[test]
+    fn jit_block_plan_matches_block_reference() {
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 31).unwrap();
+        let x = block.random_input(4, 1).unwrap();
+        let want = block.run_reference(&x).unwrap();
+        let backend = JitBackend::for_block(block);
+        let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
+        let mut plan = backend.plan(&opts).unwrap();
+        assert!(plan.describe().contains("compiled kernel program"));
+        let resp = plan.run_one(&AttnRequest::new(x)).unwrap();
+        assert_eq!(resp.out_codes.unwrap().codes.data, want.codes.data);
+        // attention-only jit backends refuse block scope
+        let plain =
+            JitBackend::new(AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 1).unwrap());
+        assert!(plain.plan(&opts).is_err());
+    }
+
+    #[test]
+    fn jit_rejects_profile_and_step_mismatches() {
+        let module = AttnModule::synthetic(12, 6, 2, BitProfile::uniform(4), 7).unwrap();
+        let backend = JitBackend::new(module.clone());
+        // plan-time: profile mismatch is loud
+        assert!(backend.plan(&PlanOptions::default()).is_err());
+        let opts = PlanOptions::for_profile(BitProfile::uniform(4));
+        let mut plan = backend.plan(&opts).unwrap();
+        // run-time: a near-miss input step is rejected (compiled kernels
+        // require the exact step they were lowered against)
+        let near = QuantSpec::signed(4, Step::new(0.120001).unwrap());
+        let bad = QTensor::new(IntMat::new(2, 12, vec![0; 24]), near).unwrap();
+        assert!(plan.run_one(&AttnRequest::new(bad)).is_err());
+        // the exact step passes
+        let good = module.random_input(2, 9).unwrap();
+        assert!(plan.run_one(&AttnRequest::new(good)).is_ok());
+    }
+}

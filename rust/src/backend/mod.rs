@@ -115,6 +115,7 @@
 //! twice, skipping it, or dividing the wrong way no longer typechecks.
 
 pub mod cache;
+pub mod jit;
 pub mod job;
 pub mod pjrt;
 pub mod reference;
@@ -139,6 +140,7 @@ use crate::util::{Json, XorShift};
 pub use crate::quant::profile::BitProfile;
 pub use crate::quant::qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 pub use cache::{PlanCache, PlanSeed};
+pub use jit::JitBackend;
 pub use job::{JobId, JobState, SyncJobs};
 pub use pjrt::PjrtBackend;
 pub use reference::ReferenceBackend;

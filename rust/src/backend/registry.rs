@@ -1,6 +1,6 @@
 //! [`BackendRegistry`] — name-keyed construction of [`Backend`]s.
 //!
-//! The registry is the single dispatch seam: `ivit --backend ref|sim|pjrt`,
+//! The registry is the single dispatch seam: `ivit --backend ref|sim|jit|pjrt`,
 //! the coordinator's attention executor, the examples and the benches all
 //! resolve backends here, and future substrates register under new names
 //! without touching any call site.
@@ -13,7 +13,9 @@ use anyhow::{anyhow, Result};
 use crate::block::EncoderBlock;
 use crate::quant::profile::BitProfile;
 
-use super::{AttnModule, Backend, PjrtBackend, ReferenceBackend, SimBackend, SimMtBackend};
+use super::{
+    AttnModule, Backend, JitBackend, PjrtBackend, ReferenceBackend, SimBackend, SimMtBackend,
+};
 
 /// Everything a factory may need to build a backend.
 #[derive(Debug, Clone)]
@@ -108,9 +110,15 @@ impl BackendRegistry {
         BackendRegistry { factories: BTreeMap::new() }
     }
 
-    /// The built-in set: `ref`, `sim`, `sim-mt`, `pjrt`.
+    /// The built-in set: `ref`, `sim`, `sim-mt`, `jit`, `pjrt`.
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
+        r.register("jit", |cfg| {
+            Ok(match &cfg.block {
+                Some(b) => Box::new(JitBackend::for_block(b.clone())) as Box<dyn Backend>,
+                None => Box::new(JitBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>,
+            })
+        });
         r.register("ref", |cfg| {
             Ok(match &cfg.block {
                 Some(b) => Box::new(ReferenceBackend::for_block(b.clone())) as Box<dyn Backend>,
@@ -194,7 +202,7 @@ mod tests {
     #[test]
     fn defaults_expose_the_builtin_set() {
         let r = BackendRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["pjrt", "ref", "sim", "sim-mt"]);
+        assert_eq!(r.names(), vec!["jit", "pjrt", "ref", "sim", "sim-mt"]);
     }
 
     #[test]
@@ -210,7 +218,7 @@ mod tests {
     fn creates_integer_backends_and_runs_them() {
         let r = BackendRegistry::with_defaults();
         let cfg = BackendConfig { workers: 2, ..small_cfg() };
-        for name in ["ref", "sim", "sim-mt"] {
+        for name in ["ref", "sim", "sim-mt", "jit"] {
             let mut b = r.create(name, &cfg).unwrap();
             assert_eq!(b.name(), name);
             assert!(!b.describe().is_empty());
@@ -230,7 +238,7 @@ mod tests {
         let reqs: Vec<AttnRequest> = (0..3u64)
             .map(|i| AttnRequest::new(module.random_input(5, i).unwrap()))
             .collect();
-        for name in ["ref", "sim", "sim-mt"] {
+        for name in ["ref", "sim", "sim-mt", "jit"] {
             let b = r.create(name, &cfg).unwrap();
             let mut plan = b.plan(&PlanOptions::default()).unwrap();
             assert_eq!(plan.backend_name(), name);
@@ -249,7 +257,7 @@ mod tests {
         let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
         let x = block.random_input(4, 1).unwrap();
         let want = block.run_reference(&x).unwrap().codes.data;
-        for name in ["ref", "sim", "sim-mt"] {
+        for name in ["ref", "sim", "sim-mt", "jit"] {
             let b = r.create(name, &cfg).unwrap();
             let mut plan = b.plan(&opts).unwrap();
             let req = AttnBatchRequest::single(AttnRequest::new(x.clone()));
@@ -275,6 +283,6 @@ mod tests {
             Ok(Box::new(super::super::ReferenceBackend::new(cfg.resolve_module()?))
                 as Box<dyn Backend>)
         });
-        assert_eq!(r.names().len(), 4);
+        assert_eq!(r.names().len(), 5);
     }
 }

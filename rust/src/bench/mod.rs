@@ -148,6 +148,15 @@ impl BenchRecord {
         self
     }
 
+    /// Add a boolean field (serialized as a bare JSON `true`/`false`).
+    /// Benches use this to mark rows produced under the CI smoke
+    /// profile (`smoke: true`) so trajectory consumers can filter out
+    /// tiny-shape timings instead of guessing from row counts.
+    pub fn bool_field(mut self, key: &str, v: bool) -> BenchRecord {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
     /// Render the record as one JSON object.
     pub fn render(&self) -> String {
         let body: Vec<String> =
@@ -265,12 +274,13 @@ mod tests {
     fn bench_record_renders_valid_json_lines() {
         let r = BenchRecord::new("throughput.batch_vs_per_row")
             .str_field("backend", "sim-mt")
+            .bool_field("smoke", true)
             .num("rows_per_s", 123.5)
             .num("ratio", f64::NAN);
         let s = r.render();
         assert_eq!(
             s,
-            r#"{"name":"throughput.batch_vs_per_row","schema_version":2,"backend":"sim-mt","rows_per_s":123.5,"ratio":null}"#
+            r#"{"name":"throughput.batch_vs_per_row","schema_version":2,"backend":"sim-mt","smoke":true,"rows_per_s":123.5,"ratio":null}"#
         );
         // escaping
         let esc = BenchRecord::new("a\"b\\c\nd").render();

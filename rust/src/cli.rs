@@ -93,7 +93,7 @@ pub fn validate_serve_scope(backend: &str, scope: &str) -> Result<()> {
     if backend == "pjrt" && scope == "block" {
         bail!(
             "--scope block is not available on the pjrt backend (no encoder-block \
-             artifact is exported) — use --backend ref|sim|sim-mt for block-scope \
+             artifact is exported) — use --backend ref|sim|sim-mt|jit for block-scope \
              serving, or drop --scope to serve the pjrt image path"
         );
     }
@@ -109,7 +109,7 @@ pub fn validate_backend_profile(backend: &str, profile: &BitProfile) -> Result<(
         bail!(
             "--bits-profile [{}] is mixed, but the pjrt backend executes a single-width \
              AOT artifact — use --bits-profile uniform:N with pjrt, or run the mixed \
-             profile on --backend ref|sim|sim-mt",
+             profile on --backend ref|sim|sim-mt|jit",
             profile.key()
         );
     }
@@ -130,7 +130,7 @@ pub fn validate_serve_net(
         bail!(
             "--listen serving is not wired to the pjrt backend (the networked front \
              end serves the attention/block activation path) — use --backend \
-             ref|sim|sim-mt with --listen, or drop --listen for the in-process loop"
+             ref|sim|sim-mt|jit with --listen, or drop --listen for the in-process loop"
         );
     }
     crate::net::Listen::parse(listen)?;
@@ -166,16 +166,29 @@ PRECISION (--bits-profile, on serve/simulate/eval):
     <path.json>            a JSON object mapping every site name to its width
   Widths must lie in 2..=8; unknown keys and out-of-range widths fail loudly.
   The pjrt backend accepts only uniform profiles (its artifact is lowered at
-  one width); mixed profiles run on ref/sim/sim-mt. `ivit eval` accepts a
+  one width); mixed profiles run on ref/sim/sim-mt/jit. `ivit eval` accepts a
   ';'-separated LIST of profiles and prints one Table-II row per profile.
+
+COMPILED BACKEND (--backend jit):
+  The jit backend compiles the module/block into a flat kernel program at
+  PLAN time: every requantizer scale, clamp range, softmax score scale and
+  GELU table is baked in during lowering, weights are repacked for streaming
+  integer GEMM loops, and execution runs the compiled program with no
+  per-request branching on profile or geometry. Output codes are
+  BIT-IDENTICAL to --backend ref for every profile and scope — the contract
+  is pinned by tests/kernel_parity.rs and asserted by the throughput bench.
+  Prefer jit over ref for serving throughput; prefer sim/sim-mt when you
+  need the cycle/energy hardware statistics (jit reports none). The compiled
+  program's disassembly is stable and snapshot-tested — a lowering change
+  shows up as a text diff, not a silent numerics drift.
 
 COMMANDS:
   serve       run the batching inference server (plans the backend once,
               then pipelines batches through its submit/poll ExecutionPlan —
               up to --pipeline-depth batches in flight at once)
-              --backend pjrt|sim|sim-mt|ref (default pjrt)
+              --backend pjrt|sim|sim-mt|ref|jit (default pjrt)
               pjrt: --artifacts DIR --mode integerized|qvit|fp32 --bits N
-              sim/sim-mt/ref (no artifacts needed):
+              sim/sim-mt/ref/jit (no artifacts needed):
                 --scope attention|block (default attention; block serves the
                 whole encoder block — pjrt rejects block scope at parse time)
                 attention: --tokens N --din D --dhead O
@@ -186,7 +199,7 @@ COMMANDS:
               sim-mt: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
                       --pipeline-depth N (in-flight batches, default 2)
-              networked serving (ref/sim/sim-mt only):
+              networked serving (ref/sim/sim-mt/jit):
                 --listen tcp:<host:port>|uds:<path> (serve the framed wire
                 protocol instead of the in-process synthetic load loop;
                 --requests N then means 'stop after N served replies',
@@ -205,14 +218,17 @@ COMMANDS:
               --tokens N --dim D (request shape; must match the server)
               --input-seed S (activation PRNG seed, default 11)
               --pipelined (submit all, then collect out of order)
+              --connections N (connection pool, default 1: requests are
+              dealt across N connections round-robin; composes with
+              --pipelined — each connection multiplexes its own streams)
               --verify-local: rebuild the server's synthetic block
               locally (--scope block --hidden H --heads N --bits-profile P
               --seed S, defaults matching serve) and assert the wire
               responses are BIT-IDENTICAL to in-process execution
   eval        Table II: accuracy of a model variant on the eval set
-              --backend pjrt|ref|sim|sim-mt (default pjrt)
+              --backend pjrt|ref|sim|sim-mt|jit (default pjrt)
               pjrt: --artifacts DIR  --mode ...  --bits N  [--limit N]
-              ref/sim/sim-mt (NO artifacts needed): the integerized
+              ref/sim/sim-mt/jit (NO artifacts needed): the integerized
               encoder-block stack on a synthetic checkpoint —
               --dim D --hidden H --heads N --depth L --patch P
               --classes C --bits B [--limit N] [--images N] [--seed S]
@@ -222,7 +238,7 @@ COMMANDS:
               --tokens N --din D --dhead O --bits B [--freq-mhz F]
   simulate    run the attention workload on a backend and verify
               bit-exactness against the exported JAX attn_case
-              --backend sim|sim-mt|ref|pjrt  --artifacts DIR  [--exact-exp]
+              --backend sim|sim-mt|ref|jit|pjrt  --artifacts DIR  [--exact-exp]
               [--workers N]
               (--synthetic: run a random module instead — verifies nothing)
   info        print the artifact manifest summary  --artifacts DIR
@@ -325,10 +341,10 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("pjrt") && msg.contains("ref|sim|sim-mt"), "actionable: {msg}");
         // uniform profiles pass on every backend; mixed pass off-pjrt
-        for backend in ["ref", "sim", "sim-mt", "pjrt"] {
+        for backend in ["ref", "sim", "sim-mt", "jit", "pjrt"] {
             validate_backend_profile(backend, &BitProfile::uniform(4)).unwrap();
         }
-        for backend in ["ref", "sim", "sim-mt"] {
+        for backend in ["ref", "sim", "sim-mt", "jit"] {
             validate_backend_profile(backend, &mixed).unwrap();
         }
     }
@@ -341,7 +357,7 @@ mod tests {
         assert!(msg.contains("pjrt") && msg.contains("block"), "{msg}");
         assert!(msg.contains("ref|sim|sim-mt"), "actionable: {msg}");
         // every supported combination passes
-        for backend in ["ref", "sim", "sim-mt"] {
+        for backend in ["ref", "sim", "sim-mt", "jit"] {
             validate_serve_scope(backend, "block").unwrap();
             validate_serve_scope(backend, "attention").unwrap();
         }

@@ -1,0 +1,228 @@
+//! Human-readable disassembly of a lowered [`KernelProgram`].
+//!
+//! The `Display` form is a stable contract (snapshot-tested): lowering
+//! regressions show up as text diffs. Formatting rules that keep the
+//! output deterministic across platforms: every floating-point constant
+//! prints with `{:.4}`, and weight-derived data (codes, biases, scale
+//! vectors, LUT entries) prints only as *lengths* — so the disassembly
+//! depends on geometry, steps and profile, never on weight values.
+
+use std::fmt;
+
+use super::ir::{KernelProgram, Stage};
+
+fn render_stage(s: &Stage) -> String {
+    match s {
+        Stage::GemmScale { label, src, dst, w, scale } => {
+            format!("%{src} -> %{dst} w[{}x{}] scale[{}] ; {label}", w.n, w.k, scale.len())
+        }
+        Stage::GemmRequant { label, src, dst, w, eff, bits, .. } => {
+            format!("%{src} -> %{dst} w[{}x{}] eff[{}] -> s{bits} ; {label}", w.n, w.k, eff.len())
+        }
+        Stage::LayerNormQuant { label, src, dst, step, bits, .. } => {
+            format!("%{src} -> %{dst} step {step:.4} -> s{bits} ; {label}")
+        }
+        Stage::Dequantize { label, src, dst, step } => {
+            format!("%{src} -> %{dst} step {step:.4} ; {label}")
+        }
+        Stage::Quantize { label, src, dst, step, bits, .. } => {
+            format!("%{src} -> %{dst} step {step:.4} -> s{bits} ; {label}")
+        }
+        Stage::GeluLut { label, src, dst, table, bits_in, bits_out, .. } => {
+            format!(
+                "%{src} -> %{dst} table[{}] s{bits_in} -> s{bits_out} ; {label}",
+                table.len()
+            )
+        }
+        Stage::AttnHead(h) => format!(
+            "h{} q=%{} k=%{} v=%{} -> %{} dh={} score {:.4} step {:.4} -> u{} shift={} \
+             eff_pv {:.4} -> s{}",
+            h.head,
+            h.q,
+            h.k,
+            h.v,
+            h.dst,
+            h.dh,
+            h.score_scale,
+            h.step_attn,
+            h.attn_bits,
+            h.shift,
+            h.eff_pv,
+            h.o_bits
+        ),
+        Stage::Residual { label, main, skip, dst, eff_main, eff_skip, bits, .. } => {
+            format!(
+                "%{main} + %{skip} -> %{dst} eff {eff_main:.4}/{eff_skip:.4} -> s{bits} ; {label}"
+            )
+        }
+    }
+}
+
+impl fmt::Display for KernelProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "kernel {} scope={} bits[{}]",
+            self.name,
+            self.scope.as_str(),
+            self.profile.key()
+        )?;
+        let sign = if self.input_spec.signed { 's' } else { 'u' };
+        writeln!(
+            f,
+            "  input %0 {sign}{} step {:.4} cols {}",
+            self.input_spec.bits,
+            self.input_spec.step.get(),
+            self.d_in
+        )?;
+        for (i, b) in self.bufs.iter().enumerate() {
+            writeln!(f, "  buf %{i} {} cols {} '{}'", b.kind.as_str(), b.cols, b.name)?;
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            writeln!(f, "  [{i:02}] {:<13}{}", s.opcode(), render_stage(s))?;
+        }
+        let osign = if self.out_spec.signed { 's' } else { 'u' };
+        write!(
+            f,
+            "  out codes %{} {osign}{} step {:.4}",
+            self.out_codes,
+            self.out_spec.bits,
+            self.out_spec.step.get()
+        )?;
+        if let Some(b) = self.out_values {
+            write!(f, ", values %{b}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::block::EncoderBlock;
+    use crate::kernel::lower::{lower_attention, lower_block};
+    use crate::quant::BitProfile;
+
+    /// Golden snapshot: the full disassembly of a tiny uniform:4 block.
+    /// Weight values never appear, so the text depends only on geometry,
+    /// steps and profile — any change to lowering shows as a text diff.
+    #[test]
+    fn block_disassembly_golden_uniform4() {
+        let b = EncoderBlock::synthetic(8, 16, 2, BitProfile::uniform(4), 500).unwrap();
+        let prog = lower_block(&b).unwrap();
+        let want = "\
+kernel block 'blk500' scope=block bits[uniform:4]
+  input %0 s4 step 0.1500 cols 8
+  buf %0 int cols 8 'x'
+  buf %1 fp cols 8 'xf'
+  buf %2 int cols 8 'attn_in'
+  buf %3 fp cols 8 'q_pre'
+  buf %4 fp cols 8 'k_pre'
+  buf %5 int cols 8 'v'
+  buf %6 int cols 8 'q'
+  buf %7 int cols 8 'k'
+  buf %8 int cols 8 'pv'
+  buf %9 fp cols 8 'attn_out'
+  buf %10 int cols 8 'attn_q'
+  buf %11 int cols 8 'r1'
+  buf %12 fp cols 8 'r1f'
+  buf %13 int cols 8 'mlp_in'
+  buf %14 int cols 16 'h'
+  buf %15 int cols 16 'g'
+  buf %16 int cols 8 'mlp_out'
+  buf %17 int cols 8 'out'
+  [00] dequant      %0 -> %1 step 0.1500 ; x
+  [01] ln.quant     %1 -> %2 step 0.1200 -> s4 ; ln1
+  [02] gemm.scale   %2 -> %3 w[8x8] scale[8] ; q_proj
+  [03] gemm.scale   %2 -> %4 w[8x8] scale[8] ; k_proj
+  [04] gemm.requant %2 -> %5 w[8x8] eff[8] -> s4 ; v_proj
+  [05] ln.quant     %3 -> %6 step 0.5000 -> s4 ; q_ln
+  [06] ln.quant     %4 -> %7 step 0.5000 -> s4 ; k_ln
+  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [09] gemm.scale   %8 -> %9 w[8x8] scale[8] ; o_proj
+  [10] quant        %9 -> %10 step 0.1000 -> s4 ; attn_out
+  [11] residual     %10 + %0 -> %11 eff 0.6667/1.0000 -> s4 ; residual1
+  [12] dequant      %11 -> %12 step 0.1500 ; r1
+  [13] ln.quant     %12 -> %13 step 0.5000 -> s4 ; ln2
+  [14] gemm.requant %13 -> %14 w[16x8] eff[16] -> s4 ; fc1
+  [15] gelu.lut     %14 -> %15 table[16] s4 -> s4 ; gelu
+  [16] gemm.requant %15 -> %16 w[8x16] eff[8] -> s4 ; fc2
+  [17] residual     %16 + %11 -> %17 eff 0.6667/1.0000 -> s4 ; residual2
+  out codes %17 s4 step 0.1500";
+        assert_eq!(format!("{prog}"), want);
+    }
+
+    /// Golden snapshot at the flagship mixed operating point: attention
+    /// sites at 4 bits, MLP and residual path at 8.
+    #[test]
+    fn block_disassembly_golden_attn4_mlp8() {
+        let profile = BitProfile::parse("attn:4,mlp:8").unwrap();
+        let b = EncoderBlock::synthetic(8, 16, 2, profile, 700).unwrap();
+        let prog = lower_block(&b).unwrap();
+        let want = "\
+kernel block 'blk700' scope=block bits[attn_x:4,q_proj:4,k_proj:4,v_proj:4,attn_probs:4,o_proj:4,mlp_x:8,fc1:8,gelu_in:8,gelu_out:8,fc2:8,mlp_out:8,residual:8]
+  input %0 s8 step 0.1500 cols 8
+  buf %0 int cols 8 'x'
+  buf %1 fp cols 8 'xf'
+  buf %2 int cols 8 'attn_in'
+  buf %3 fp cols 8 'q_pre'
+  buf %4 fp cols 8 'k_pre'
+  buf %5 int cols 8 'v'
+  buf %6 int cols 8 'q'
+  buf %7 int cols 8 'k'
+  buf %8 int cols 8 'pv'
+  buf %9 fp cols 8 'attn_out'
+  buf %10 int cols 8 'attn_q'
+  buf %11 int cols 8 'r1'
+  buf %12 fp cols 8 'r1f'
+  buf %13 int cols 8 'mlp_in'
+  buf %14 int cols 16 'h'
+  buf %15 int cols 16 'g'
+  buf %16 int cols 8 'mlp_out'
+  buf %17 int cols 8 'out'
+  [00] dequant      %0 -> %1 step 0.1500 ; x
+  [01] ln.quant     %1 -> %2 step 0.1200 -> s4 ; ln1
+  [02] gemm.scale   %2 -> %3 w[8x8] scale[8] ; q_proj
+  [03] gemm.scale   %2 -> %4 w[8x8] scale[8] ; k_proj
+  [04] gemm.requant %2 -> %5 w[8x8] eff[8] -> s4 ; v_proj
+  [05] ln.quant     %3 -> %6 step 0.5000 -> s4 ; q_ln
+  [06] ln.quant     %4 -> %7 step 0.5000 -> s4 ; k_ln
+  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [09] gemm.scale   %8 -> %9 w[8x8] scale[8] ; o_proj
+  [10] quant        %9 -> %10 step 0.1000 -> s8 ; attn_out
+  [11] residual     %10 + %0 -> %11 eff 0.6667/1.0000 -> s8 ; residual1
+  [12] dequant      %11 -> %12 step 0.1500 ; r1
+  [13] ln.quant     %12 -> %13 step 0.5000 -> s8 ; ln2
+  [14] gemm.requant %13 -> %14 w[16x8] eff[16] -> s8 ; fc1
+  [15] gelu.lut     %14 -> %15 table[256] s8 -> s8 ; gelu
+  [16] gemm.requant %15 -> %16 w[8x16] eff[8] -> s8 ; fc2
+  [17] residual     %16 + %11 -> %17 eff 0.6667/1.0000 -> s8 ; residual2
+  out codes %17 s8 step 0.1500";
+        assert_eq!(format!("{prog}"), want);
+    }
+
+    /// Attention-scope programs disassemble with the W_O values buffer
+    /// on the out line.
+    #[test]
+    fn attention_disassembly_shows_values_buffer() {
+        let b = EncoderBlock::synthetic(8, 16, 2, BitProfile::uniform(4), 500).unwrap();
+        let prog = lower_attention(&b.attn).unwrap();
+        let text = format!("{prog}");
+        assert!(text.starts_with("kernel attn D_in=8 D_out=8 heads=2 scope=attention"));
+        assert!(text.ends_with("  out codes %6 s4 step 0.1000, values %7"), "{text}");
+    }
+
+    /// Two profiles differing in ONE site lower to different programs —
+    /// the negative half of the snapshot contract.
+    #[test]
+    fn one_site_difference_changes_the_disassembly() {
+        let base = BitProfile::uniform(4);
+        let mut tweaked = base;
+        tweaked.set_site("gelu_out", 5).unwrap();
+        let pa = lower_block(&EncoderBlock::synthetic(8, 16, 2, base, 500).unwrap()).unwrap();
+        let pb = lower_block(&EncoderBlock::synthetic(8, 16, 2, tweaked, 500).unwrap()).unwrap();
+        assert_ne!(format!("{pa}"), format!("{pb}"));
+        assert!(format!("{pb}").contains("gelu_out:5"));
+    }
+}

@@ -1,0 +1,251 @@
+//! The buffer-slot executor for lowered [`KernelProgram`]s.
+//!
+//! Integer GEMMs run a row-tiled, reduction-middle, column-inner loop
+//! over the packed transposed weights — exact i64 accumulation makes
+//! the reordering bit-free (integer adds are associative), and the
+//! `i32::try_from` narrowing enforces the same overflow bound as the
+//! reference `int_matmul`. Floating-point epilogues replicate the
+//! reference expressions term for term, with all fold constants read
+//! from the lowered stages, so the executor is bit-identical to the
+//! interpreter by construction.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ir::{AttnHeadStage, BufKind, KernelProgram, Stage};
+use crate::block::LN_EPS;
+use crate::quant::layernorm::qlayernorm_comparator;
+use crate::quant::linear::IntMat;
+use crate::quant::qtensor::QTensor;
+use crate::quant::round_half_even;
+use crate::quant::softmax::{exact_softmax_row, shift_softmax_row};
+
+/// One executor buffer slot's backing storage.
+enum BufData {
+    Int(Vec<i32>),
+    Fp(Vec<f32>),
+}
+
+/// Rows of the activation matrix processed per accumulator tile. Small
+/// enough that a tile of accumulators stays cache-resident, large
+/// enough to reuse each streamed weight row several times.
+const ROW_TILE: usize = 4;
+
+/// Blocked integer GEMM: `x` is rows×k (row-major codes), `wt` is the
+/// packed k×n transposed weights; returns the rows×n i32 accumulator.
+/// The j-inner loop over a streamed `wt` row is a branch-free
+/// multiply-accumulate the compiler can autovectorize.
+fn gemm_i32(x: &[i32], rows: usize, wt: &[i32], n: usize, k: usize) -> Result<Vec<i32>> {
+    let mut acc64 = vec![0i64; ROW_TILE * n];
+    let mut out = vec![0i32; rows * n];
+    let mut ib = 0;
+    while ib < rows {
+        let rt = ROW_TILE.min(rows - ib);
+        acc64[..rt * n].fill(0);
+        for p in 0..k {
+            let wrow = &wt[p * n..(p + 1) * n];
+            for r in 0..rt {
+                let xv = x[(ib + r) * k + p] as i64;
+                if xv == 0 {
+                    continue;
+                }
+                let arow = &mut acc64[r * n..(r + 1) * n];
+                for (a, &wv) in arow.iter_mut().zip(wrow) {
+                    *a += xv * wv as i64;
+                }
+            }
+        }
+        for r in 0..rt {
+            for j in 0..n {
+                out[(ib + r) * n + j] = i32::try_from(acc64[r * n + j]).map_err(|_| {
+                    anyhow!("integer accumulator overflow at ({}, {j})", ib + r)
+                })?;
+            }
+        }
+        ib += rt;
+    }
+    Ok(out)
+}
+
+fn int_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a [i32]> {
+    match &bufs[id] {
+        BufData::Int(v) => Ok(v),
+        BufData::Fp(_) => bail!("{what}: buffer %{id} holds fp data, expected int codes"),
+    }
+}
+
+fn fp_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a [f32]> {
+    match &bufs[id] {
+        BufData::Fp(v) => Ok(v),
+        BufData::Int(_) => bail!("{what}: buffer %{id} holds int codes, expected fp data"),
+    }
+}
+
+/// One fused attention head: QKᵀ → softmax → probability quantizer →
+/// attn·V → PV requantizer into this head's column block of `dst`.
+fn apply_attn_head(s: &AttnHeadStage, bufs: &mut [BufData], rows: usize) -> Result<()> {
+    let off = s.head * s.dh;
+    let (q, k, v) = (
+        int_buf(bufs, s.q, "attn.head q")?,
+        int_buf(bufs, s.k, "attn.head k")?,
+        int_buf(bufs, s.v, "attn.head v")?,
+    );
+    // Gather this head's Q rows and pack Kᵀ so the score GEMM streams
+    // contiguously: kt[p * rows + j] = K[j, off + p].
+    let mut qh = vec![0i32; rows * s.dh];
+    let mut kt = vec![0i32; s.dh * rows];
+    for i in 0..rows {
+        qh[i * s.dh..(i + 1) * s.dh].copy_from_slice(&q[i * s.d + off..i * s.d + off + s.dh]);
+        for p in 0..s.dh {
+            kt[p * rows + i] = k[i * s.d + off + p];
+        }
+    }
+    let scores = gemm_i32(&qh, rows, &kt, rows, s.dh)?;
+    // Eq. 3/4: scale scores, softmax per row, quantize probabilities.
+    let mut probs = vec![0i32; rows * rows];
+    for i in 0..rows {
+        let row: Vec<f32> = scores[i * rows..(i + 1) * rows]
+            .iter()
+            .map(|&sc| sc as f32 * s.score_scale)
+            .collect();
+        let p = if s.shift { shift_softmax_row(&row) } else { exact_softmax_row(&row) };
+        for (j, &pj) in p.iter().enumerate() {
+            probs[i * rows + j] =
+                (round_half_even(pj / s.step_attn) as i32).clamp(s.a_qmin, s.a_qmax);
+        }
+    }
+    // Pack Vᵀ-of-the-transpose: vt[p * dh + j] = V[p, off + j], i.e.
+    // the attn·V reduction streams V's head column block row by row.
+    let mut vt = vec![0i32; rows * s.dh];
+    for p in 0..rows {
+        vt[p * s.dh..(p + 1) * s.dh].copy_from_slice(&v[p * s.d + off..p * s.d + off + s.dh]);
+    }
+    let acc = gemm_i32(&probs, rows, &vt, s.dh, rows)?;
+    let dst = match &mut bufs[s.dst] {
+        BufData::Int(v) => v,
+        BufData::Fp(_) => bail!("attn.head dst: buffer %{} holds fp data", s.dst),
+    };
+    for i in 0..rows {
+        for j in 0..s.dh {
+            let val = round_half_even(acc[i * s.dh + j] as f32 * s.eff_pv) as i32;
+            dst[i * s.d + off + j] = val.clamp(s.o_qmin, s.o_qmax);
+        }
+    }
+    Ok(())
+}
+
+fn apply_stage(stage: &Stage, bufs: &mut [BufData], rows: usize) -> Result<()> {
+    match stage {
+        Stage::GemmScale { src, dst, w, scale, .. } => {
+            let x = int_buf(bufs, *src, "gemm.scale src")?;
+            let acc = gemm_i32(x, rows, &w.wt, w.n, w.k)?;
+            let out = match &mut bufs[*dst] {
+                BufData::Fp(v) => v,
+                BufData::Int(_) => bail!("gemm.scale dst: buffer %{dst} holds int codes"),
+            };
+            for j in 0..w.n {
+                let (s, b) = (scale[j], w.bias[j]);
+                for i in 0..rows {
+                    out[i * w.n + j] = (acc[i * w.n + j] as f32 + b) * s;
+                }
+            }
+        }
+        Stage::GemmRequant { src, dst, w, eff, qmin, qmax, .. } => {
+            let x = int_buf(bufs, *src, "gemm.requant src")?;
+            let acc = gemm_i32(x, rows, &w.wt, w.n, w.k)?;
+            let out = match &mut bufs[*dst] {
+                BufData::Int(v) => v,
+                BufData::Fp(_) => bail!("gemm.requant dst: buffer %{dst} holds fp data"),
+            };
+            for j in 0..w.n {
+                let (e, b) = (eff[j], w.bias[j]);
+                for i in 0..rows {
+                    let v = (acc[i * w.n + j] as f32 + b) * e;
+                    out[i * w.n + j] = (round_half_even(v) as i32).clamp(*qmin, *qmax);
+                }
+            }
+        }
+        Stage::LayerNormQuant { src, dst, gamma, beta, step, bits, .. } => {
+            let d = gamma.len();
+            let x = fp_buf(bufs, *src, "ln.quant src")?;
+            let mut codes = vec![0i32; rows * d];
+            for r in 0..rows {
+                let row = qlayernorm_comparator(
+                    &x[r * d..(r + 1) * d],
+                    gamma,
+                    beta,
+                    *step,
+                    *bits,
+                    LN_EPS,
+                );
+                codes[r * d..(r + 1) * d].copy_from_slice(&row);
+            }
+            bufs[*dst] = BufData::Int(codes);
+        }
+        Stage::Dequantize { src, dst, step, .. } => {
+            let x = int_buf(bufs, *src, "dequant src")?;
+            let out: Vec<f32> = x.iter().map(|&c| c as f32 * step).collect();
+            bufs[*dst] = BufData::Fp(out);
+        }
+        Stage::Quantize { src, dst, step, qmin, qmax, .. } => {
+            let x = fp_buf(bufs, *src, "quant src")?;
+            let out: Vec<i32> = x
+                .iter()
+                .map(|&v| (round_half_even(v / step) as i32).clamp(*qmin, *qmax))
+                .collect();
+            bufs[*dst] = BufData::Int(out);
+        }
+        Stage::GeluLut { src, dst, lo, table, .. } => {
+            let x = int_buf(bufs, *src, "gelu.lut src")?;
+            let mut out = vec![0i32; x.len()];
+            for (o, &c) in out.iter_mut().zip(x) {
+                *o = *table
+                    .get((c - lo) as usize)
+                    .ok_or_else(|| anyhow!("gelu.lut: code {c} outside inlined table"))?;
+            }
+            bufs[*dst] = BufData::Int(out);
+        }
+        Stage::AttnHead(s) => apply_attn_head(s, bufs, rows)?,
+        Stage::Residual { main, skip, dst, eff_main, eff_skip, qmin, qmax, .. } => {
+            let a = int_buf(bufs, *main, "residual main")?;
+            let b = int_buf(bufs, *skip, "residual skip")?;
+            let mut out = vec![0i32; a.len()];
+            for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                let v = av as f32 * eff_main + bv as f32 * eff_skip;
+                *o = (round_half_even(v) as i32).clamp(*qmin, *qmax);
+            }
+            bufs[*dst] = BufData::Int(out);
+        }
+    }
+    Ok(())
+}
+
+impl KernelProgram {
+    /// Run the compiled program on one request tensor. Returns the
+    /// output codes and, when the program tracks one, the fp values
+    /// buffer (attention scope after W_O).
+    pub fn execute(&self, x: &QTensor) -> Result<(QTensor, Option<Vec<f32>>)> {
+        self.check_input(x)?;
+        let rows = x.rows();
+        let mut bufs: Vec<BufData> = self
+            .bufs
+            .iter()
+            .map(|decl| match decl.kind {
+                BufKind::Int => BufData::Int(vec![0i32; rows * decl.cols]),
+                BufKind::Fp => BufData::Fp(vec![0f32; rows * decl.cols]),
+            })
+            .collect();
+        bufs[0] = BufData::Int(x.codes.data.clone());
+        for (idx, stage) in self.stages.iter().enumerate() {
+            apply_stage(stage, &mut bufs, rows)
+                .with_context(|| format!("kernel stage [{idx:02}] {}", stage.opcode()))?;
+        }
+        let decl = &self.bufs[self.out_codes];
+        let codes = int_buf(&bufs, self.out_codes, "program output")?.to_vec();
+        let out = QTensor::new(IntMat::new(rows, decl.cols, codes), self.out_spec)?;
+        let values = match self.out_values {
+            Some(id) => Some(fp_buf(&bufs, id, "program values")?.to_vec()),
+            None => None,
+        };
+        Ok((out, values))
+    }
+}

@@ -1,0 +1,287 @@
+//! The kernel IR: a [`KernelProgram`] is a flat, fully specialized
+//! sequence of fused [`Stage`]s over numbered buffer slots.
+//!
+//! Everything the reference path recomputes per request is a *constant*
+//! here, baked at lowering time: absorbed requantizer scales (§IV-B),
+//! clamp ranges, softmax score scales, the inlined GELU table, head
+//! geometry, and the packed (transposed) weight layout the executor's
+//! j-inner GEMM loop streams. The only per-request dimension is the
+//! token count (buffer rows); there is no per-request branching on
+//! profile or geometry.
+
+use anyhow::{ensure, Result};
+
+use crate::backend::PlanScope;
+use crate::quant::linear::IntMat;
+use crate::quant::qtensor::{QTensor, QuantSpec};
+use crate::quant::BitProfile;
+
+/// Index of one executor buffer slot.
+pub type BufId = usize;
+
+/// What a buffer slot holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufKind {
+    /// Integer codes (`i32` storage, low-bit values).
+    Int,
+    /// Floating-point activations.
+    Fp,
+}
+
+impl BufKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BufKind::Int => "int",
+            BufKind::Fp => "fp",
+        }
+    }
+}
+
+/// One buffer slot declaration: kind + column count. Rows are the
+/// request's token count — the one dimension not baked at lowering.
+#[derive(Debug, Clone)]
+pub struct BufDecl {
+    pub name: &'static str,
+    pub kind: BufKind,
+    pub cols: usize,
+}
+
+/// Folded weights packed for the executor's j-inner GEMM loop:
+/// `wt[p * n + j] = W[j, p]` — the transpose of the
+/// [`crate::quant::FoldedLinear`] N×K code layout — so the reduction
+/// streams `wt` rows contiguously and the inner loop is a branch-free
+/// multiply-accumulate the compiler can vectorize.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    pub wt: Vec<i32>,
+    /// Output columns (N of the folded linear).
+    pub n: usize,
+    /// Reduction depth (K of the folded linear).
+    pub k: usize,
+    /// Folded bias b̃ (length N), added before the output scale.
+    pub bias: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Pack an N×K weight-code matrix (plus its folded bias).
+    pub fn pack(codes: &IntMat, bias: &[f32]) -> Result<PackedWeights> {
+        let (n, k) = (codes.rows, codes.cols);
+        ensure!(bias.len() == n, "folded bias length {} != {n} output columns", bias.len());
+        let mut wt = vec![0i32; n * k];
+        for j in 0..n {
+            for p in 0..k {
+                wt[p * n + j] = codes.at(j, p);
+            }
+        }
+        Ok(PackedWeights { wt, n, k, bias: bias.to_vec() })
+    }
+}
+
+/// One fused attention head: QKᵀ GEMM → softmax → probability quantizer
+/// → attn·V GEMM → PV requantizer writing this head's column block of
+/// `dst`. All scales and clamp ranges are lowering-time constants.
+#[derive(Debug, Clone)]
+pub struct AttnHeadStage {
+    pub head: usize,
+    /// Head dimension (columns this head owns in `q`/`k`/`v`/`dst`).
+    pub dh: usize,
+    /// Full projection width D = heads · dh.
+    pub d: usize,
+    pub q: BufId,
+    pub k: BufId,
+    pub v: BufId,
+    pub dst: BufId,
+    /// Eq. 3 score scale Δ_Q·Δ_K/√d, folded at lowering.
+    pub score_scale: f32,
+    pub step_attn: f32,
+    pub attn_bits: u32,
+    pub a_qmin: i32,
+    pub a_qmax: i32,
+    /// Eq. 4 shift exponential (false = exact-exp ablation).
+    pub shift: bool,
+    /// The §IV-B PV requantizer folding Δ_attn·Δ_V/Δ_O.
+    pub eff_pv: f32,
+    pub o_bits: u32,
+    pub o_qmin: i32,
+    pub o_qmax: i32,
+}
+
+/// One fused stage of a [`KernelProgram`]. Every fold constant, clamp
+/// range and table is baked at lowering; stages only name buffer slots.
+#[derive(Debug, Clone)]
+pub enum Stage {
+    /// Integer GEMM + fp post-scale: `out = (acc + b̃_j) · scale_j`
+    /// (the Eq. 2 linear with a per-column output scale).
+    GemmScale { label: &'static str, src: BufId, dst: BufId, w: PackedWeights, scale: Vec<f32> },
+    /// Integer GEMM + absorbed-scale requantizer (§IV-B):
+    /// `codes = clip(round((acc + b̃_j) · eff_j))`.
+    GemmRequant {
+        label: &'static str,
+        src: BufId,
+        dst: BufId,
+        w: PackedWeights,
+        eff: Vec<f32>,
+        bits: u32,
+        qmin: i32,
+        qmax: i32,
+    },
+    /// Per-row quantizing LayerNorm (the Fig. 5 comparator identity).
+    LayerNormQuant {
+        label: &'static str,
+        src: BufId,
+        dst: BufId,
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+        step: f32,
+        bits: u32,
+    },
+    /// Codes → fp: `out = c · Δ`.
+    Dequantize { label: &'static str, src: BufId, dst: BufId, step: f32 },
+    /// Fp → codes: `clip(round(x / Δ))`.
+    Quantize {
+        label: &'static str,
+        src: BufId,
+        dst: BufId,
+        step: f32,
+        bits: u32,
+        qmin: i32,
+        qmax: i32,
+    },
+    /// Element-wise code→code GELU table, inlined at lowering.
+    GeluLut {
+        label: &'static str,
+        src: BufId,
+        dst: BufId,
+        lo: i32,
+        table: Vec<i32>,
+        bits_in: u32,
+        bits_out: u32,
+    },
+    /// One fused attention head (see [`AttnHeadStage`]).
+    AttnHead(AttnHeadStage),
+    /// Dual-operand residual requantizer:
+    /// `clip(round(main·eff_main + skip·eff_skip))`.
+    Residual {
+        label: &'static str,
+        main: BufId,
+        skip: BufId,
+        dst: BufId,
+        eff_main: f32,
+        eff_skip: f32,
+        bits: u32,
+        qmin: i32,
+        qmax: i32,
+    },
+}
+
+impl Stage {
+    /// The disassembly opcode mnemonic (also used in executor errors).
+    pub fn opcode(&self) -> &'static str {
+        match self {
+            Stage::GemmScale { .. } => "gemm.scale",
+            Stage::GemmRequant { .. } => "gemm.requant",
+            Stage::LayerNormQuant { .. } => "ln.quant",
+            Stage::Dequantize { .. } => "dequant",
+            Stage::Quantize { .. } => "quant",
+            Stage::GeluLut { .. } => "gelu.lut",
+            Stage::AttnHead(_) => "attn.head",
+            Stage::Residual { .. } => "residual",
+        }
+    }
+}
+
+/// A lowered, fully specialized kernel program. Built by
+/// [`super::lower::lower_attention`] / [`super::lower::lower_block`],
+/// executed by [`KernelProgram::execute`], disassembled by its
+/// [`std::fmt::Display`] impl.
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    /// Human label (module/block identity) shown by the disassembly.
+    pub name: String,
+    pub scope: PlanScope,
+    /// The per-site precision the program was specialized for.
+    pub profile: BitProfile,
+    /// Input width D_in (buffer %0 columns).
+    pub d_in: usize,
+    /// The exact quantizer the fold constants were computed against.
+    pub input_spec: QuantSpec,
+    pub heads: usize,
+    pub bufs: Vec<BufDecl>,
+    pub stages: Vec<Stage>,
+    /// Buffer holding the output codes after the last stage.
+    pub out_codes: BufId,
+    pub out_spec: QuantSpec,
+    /// Buffer holding the fp output values (attention scope with W_O).
+    pub out_values: Option<BufId>,
+}
+
+impl KernelProgram {
+    pub(crate) fn shell(
+        name: String,
+        scope: PlanScope,
+        profile: BitProfile,
+        d_in: usize,
+        input_spec: QuantSpec,
+        heads: usize,
+    ) -> KernelProgram {
+        KernelProgram {
+            name,
+            scope,
+            profile,
+            d_in,
+            input_spec,
+            heads,
+            bufs: Vec::new(),
+            stages: Vec::new(),
+            out_codes: 0,
+            out_spec: input_spec,
+            out_values: None,
+        }
+    }
+
+    pub(crate) fn push_buf(&mut self, name: &'static str, kind: BufKind, cols: usize) -> BufId {
+        self.bufs.push(BufDecl { name, kind, cols });
+        self.bufs.len() - 1
+    }
+
+    pub(crate) fn push_stage(&mut self, stage: Stage) {
+        self.stages.push(stage);
+    }
+
+    /// One-line summary (what `JitPlan::describe` reports).
+    pub fn summary(&self) -> String {
+        format!(
+            "compiled kernel program '{}': {} stages, {} buffers, scope {}, bits[{}]",
+            self.name,
+            self.stages.len(),
+            self.bufs.len(),
+            self.scope.as_str(),
+            self.profile.key()
+        )
+    }
+
+    /// Validate a request tensor against the compiled input contract.
+    /// Geometry and signedness checks mirror the reference backend; the
+    /// step check is *stricter* (bitwise equality, not the reference's
+    /// 1e-3 tolerance), because Δ̄_X is baked into every fold constant
+    /// at lowering time — a near-miss step would silently change the
+    /// arithmetic, so it is rejected with a re-plan hint instead.
+    pub fn check_input(&self, x: &QTensor) -> Result<()> {
+        ensure!(x.cols() == self.d_in, "input D {} != compiled D {}", x.cols(), self.d_in);
+        let want = self.input_spec;
+        ensure!(
+            x.spec.signed == want.signed && x.spec.bits == want.bits,
+            "input spec {:?} does not match the compiled input spec {:?}",
+            x.spec,
+            want
+        );
+        ensure!(
+            x.spec.step.get().to_bits() == want.step.get().to_bits(),
+            "input step {} != compiled step {} — compiled kernels bake Δ̄_X into their fold \
+             constants and require the exact step they were lowered against (re-plan)",
+            x.spec.step.get(),
+            want.step.get()
+        );
+        Ok(())
+    }
+}

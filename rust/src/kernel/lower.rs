@@ -1,0 +1,302 @@
+//! Lowering: fold an [`AttnModule`] / [`EncoderBlock`] + its
+//! [`crate::quant::BitProfile`] into a straight-line [`KernelProgram`].
+//!
+//! Everything that is per-module (not per-request) is evaluated here,
+//! once, with the *same f32 expressions* the reference backend uses per
+//! request — absorbed requantizer scales `out_scale_j / Δ`, the Eq. 3
+//! score scale, the §IV-B PV folding, residual effective scales, GELU
+//! table entries, clamp ranges — so the compiled program is
+//! bit-identical to the interpreter by construction. Weight codes are
+//! repacked (transposed) once for the executor's streaming GEMM loop.
+
+use anyhow::{ensure, Result};
+
+use super::ir::{AttnHeadStage, BufId, BufKind, KernelProgram, PackedWeights, Stage};
+use crate::backend::{AttnModule, PlanScope};
+use crate::block::EncoderBlock;
+use crate::quant::qtensor::{QuantSpec, ScaleChain};
+
+/// Lower an attention module (Fig. 2, W_O included when wired) to a
+/// kernel program whose output codes are the PV codes at Δ_O and whose
+/// fp values buffer is the W_O output (when present).
+pub fn lower_attention(m: &AttnModule) -> Result<KernelProgram> {
+    let mut prog = KernelProgram::shell(
+        format!("attn D_in={} D_out={} heads={}", m.d_in(), m.d_out(), m.heads),
+        PlanScope::Attention,
+        m.profile,
+        m.d_in(),
+        m.input_spec(),
+        m.heads,
+    );
+    let src = prog.push_buf("x", BufKind::Int, m.d_in());
+    let (pv, attn_out) = lower_attention_stages(m, &mut prog, src)?;
+    prog.out_codes = pv;
+    prog.out_spec = QuantSpec::signed(m.profile.o_proj, m.steps.s_o);
+    prog.out_values = attn_out;
+    Ok(prog)
+}
+
+/// Append the attention stages (projections → quantizing LNs → fused
+/// heads → optional W_O) reading module-input codes from `src`. Returns
+/// (PV code buffer, W_O fp buffer when the projection is wired).
+fn lower_attention_stages(
+    m: &AttnModule,
+    prog: &mut KernelProgram,
+    src: BufId,
+) -> Result<(BufId, Option<BufId>)> {
+    let d = m.d_out();
+    ensure!(m.heads > 0 && d % m.heads == 0, "D {d} must divide into {} heads", m.heads);
+    let dh = d / m.heads;
+    let steps = &m.steps;
+
+    let q_pre = prog.push_buf("q_pre", BufKind::Fp, d);
+    let k_pre = prog.push_buf("k_pre", BufKind::Fp, d);
+    let v = prog.push_buf("v", BufKind::Int, d);
+    let q = prog.push_buf("q", BufKind::Int, d);
+    let k = prog.push_buf("k", BufKind::Int, d);
+    let pv = prog.push_buf("pv", BufKind::Int, d);
+
+    // Q/K linears post-scaled by diag(Δ_W) only (Δ̄_X cancels into the
+    // following quantizing LayerNorm); V through its §IV-B requantizer.
+    prog.push_stage(Stage::GemmScale {
+        label: "q_proj",
+        src,
+        dst: q_pre,
+        w: PackedWeights::pack(&m.wq.codes, &m.wq.bias_folded)?,
+        scale: m.wq.w_scale.clone(),
+    });
+    prog.push_stage(Stage::GemmScale {
+        label: "k_proj",
+        src,
+        dst: k_pre,
+        w: PackedWeights::pack(&m.wk.codes, &m.wk.bias_folded)?,
+        scale: m.wk.w_scale.clone(),
+    });
+    let v_spec = QuantSpec::signed(m.profile.v_proj, steps.s_v);
+    let (v_min, v_max) = v_spec.range();
+    prog.push_stage(Stage::GemmRequant {
+        label: "v_proj",
+        src,
+        dst: v,
+        w: PackedWeights::pack(&m.wv.codes, &m.wv.bias_folded)?,
+        eff: m.wv.out_scale.iter().map(|&s| s / steps.s_v.get()).collect(),
+        bits: m.profile.v_proj,
+        qmin: v_min,
+        qmax: v_max,
+    });
+    prog.push_stage(Stage::LayerNormQuant {
+        label: "q_ln",
+        src: q_pre,
+        dst: q,
+        gamma: m.lnq_gamma.clone(),
+        beta: m.lnq_beta.clone(),
+        step: steps.s_q.get(),
+        bits: m.profile.q_proj,
+    });
+    prog.push_stage(Stage::LayerNormQuant {
+        label: "k_ln",
+        src: k_pre,
+        dst: k,
+        gamma: m.lnk_gamma.clone(),
+        beta: m.lnk_beta.clone(),
+        step: steps.s_k.get(),
+        bits: m.profile.k_proj,
+    });
+
+    let attn_spec = QuantSpec::unsigned(m.profile.attn_probs, steps.s_attn);
+    let (a_qmin, a_qmax) = attn_spec.range();
+    let out_spec = QuantSpec::signed(m.profile.o_proj, steps.s_o);
+    let (o_qmin, o_qmax) = out_spec.range();
+    let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
+    for head in 0..m.heads {
+        prog.push_stage(Stage::AttnHead(AttnHeadStage {
+            head,
+            dh,
+            d,
+            q,
+            k,
+            v,
+            dst: pv,
+            score_scale: steps.score.eff(),
+            step_attn: steps.s_attn.get(),
+            attn_bits: m.profile.attn_probs,
+            a_qmin,
+            a_qmax,
+            shift: m.shift,
+            eff_pv,
+            o_bits: m.profile.o_proj,
+            o_qmin,
+            o_qmax,
+        }));
+    }
+
+    let attn_out = match &m.wo {
+        Some(wo) => {
+            let dst = prog.push_buf("attn_out", BufKind::Fp, wo.codes.rows);
+            prog.push_stage(Stage::GemmScale {
+                label: "o_proj",
+                src: pv,
+                dst,
+                w: PackedWeights::pack(&wo.codes, &wo.bias_folded)?,
+                scale: wo.out_scale.clone(),
+            });
+            Some(dst)
+        }
+        None => None,
+    };
+    Ok((pv, attn_out))
+}
+
+/// Lower a whole encoder block (LN → attention → +residual → LN → MLP
+/// → +residual) to one straight-line kernel program over block-input
+/// codes at Δ_x, emitting block-output codes at Δ_out.
+pub fn lower_block(b: &EncoderBlock) -> Result<KernelProgram> {
+    ensure!(b.attn.wo.is_some(), "block lowering needs the attention W_O projection");
+    let d = b.d();
+    let mut prog = KernelProgram::shell(
+        format!("block '{}'", b.label),
+        PlanScope::Block,
+        b.profile,
+        d,
+        b.input_spec(),
+        b.attn.heads,
+    );
+
+    let x = prog.push_buf("x", BufKind::Int, d);
+    let xf = prog.push_buf("xf", BufKind::Fp, d);
+    let attn_in = prog.push_buf("attn_in", BufKind::Int, d);
+    prog.push_stage(Stage::Dequantize {
+        label: "x",
+        src: x,
+        dst: xf,
+        step: b.steps.s_x.get(),
+    });
+    let attn_in_spec = b.attn.input_spec();
+    prog.push_stage(Stage::LayerNormQuant {
+        label: "ln1",
+        src: xf,
+        dst: attn_in,
+        gamma: b.norms.ln1_gamma.clone(),
+        beta: b.norms.ln1_beta.clone(),
+        step: attn_in_spec.step.get(),
+        bits: attn_in_spec.bits,
+    });
+
+    let (_pv, attn_out) = lower_attention_stages(&b.attn, &mut prog, attn_in)?;
+    let attn_out = attn_out.expect("W_O presence checked above");
+
+    let attn_q = prog.push_buf("attn_q", BufKind::Int, d);
+    let r1 = prog.push_buf("r1", BufKind::Int, d);
+    let r1f = prog.push_buf("r1f", BufKind::Fp, d);
+    let mlp_in = prog.push_buf("mlp_in", BufKind::Int, d);
+
+    let ao = b.attn_out_spec();
+    let (ao_min, ao_max) = ao.range();
+    prog.push_stage(Stage::Quantize {
+        label: "attn_out",
+        src: attn_out,
+        dst: attn_q,
+        step: ao.step.get(),
+        bits: ao.bits,
+        qmin: ao_min,
+        qmax: ao_max,
+    });
+    let res1 = b.res1_spec();
+    let (r1_min, r1_max) = res1.range();
+    prog.push_stage(Stage::Residual {
+        label: "residual1",
+        main: attn_q,
+        skip: x,
+        dst: r1,
+        eff_main: ScaleChain::new().times(ao.step).over(res1.step).eff(),
+        eff_skip: ScaleChain::new().times(b.steps.s_x).over(res1.step).eff(),
+        bits: res1.bits,
+        qmin: r1_min,
+        qmax: r1_max,
+    });
+    prog.push_stage(Stage::Dequantize {
+        label: "r1",
+        src: r1,
+        dst: r1f,
+        step: res1.step.get(),
+    });
+    let mlp_in_spec = b.mlp.input_spec();
+    prog.push_stage(Stage::LayerNormQuant {
+        label: "ln2",
+        src: r1f,
+        dst: mlp_in,
+        gamma: b.norms.ln2_gamma.clone(),
+        beta: b.norms.ln2_beta.clone(),
+        step: mlp_in_spec.step.get(),
+        bits: mlp_in_spec.bits,
+    });
+
+    let hidden = b.mlp.d_hidden();
+    let h = prog.push_buf("h", BufKind::Int, hidden);
+    let g = prog.push_buf("g", BufKind::Int, hidden);
+    let mlp_out = prog.push_buf("mlp_out", BufKind::Int, d);
+    let out = prog.push_buf("out", BufKind::Int, d);
+
+    let hin = QuantSpec::signed(b.profile.gelu_in, b.mlp.s_h);
+    let (h_min, h_max) = hin.range();
+    prog.push_stage(Stage::GemmRequant {
+        label: "fc1",
+        src: mlp_in,
+        dst: h,
+        w: PackedWeights::pack(&b.mlp.fc1.codes, &b.mlp.fc1.bias_folded)?,
+        eff: b.mlp.fc1.out_scale.iter().map(|&s| s / b.mlp.s_h.get()).collect(),
+        bits: hin.bits,
+        qmin: h_min,
+        qmax: h_max,
+    });
+
+    let lut = b.mlp.gelu_lut();
+    ensure!(
+        lut.in_spec == hin,
+        "GELU table input spec {:?} does not match the fc1 requantizer {:?}",
+        lut.in_spec,
+        hin
+    );
+    let (t_lo, t_hi) = lut.in_spec.range();
+    prog.push_stage(Stage::GeluLut {
+        label: "gelu",
+        src: h,
+        dst: g,
+        lo: t_lo,
+        table: (t_lo..=t_hi).map(|c| lut.lookup(c)).collect(),
+        bits_in: lut.in_spec.bits,
+        bits_out: lut.out_spec.bits,
+    });
+
+    let mo = b.mlp.out_spec();
+    let (mo_min, mo_max) = mo.range();
+    prog.push_stage(Stage::GemmRequant {
+        label: "fc2",
+        src: g,
+        dst: mlp_out,
+        w: PackedWeights::pack(&b.mlp.fc2.codes, &b.mlp.fc2.bias_folded)?,
+        eff: b.mlp.fc2.out_scale.iter().map(|&s| s / mo.step.get()).collect(),
+        bits: mo.bits,
+        qmin: mo_min,
+        qmax: mo_max,
+    });
+
+    let out_spec = b.out_spec();
+    let (out_min, out_max) = out_spec.range();
+    prog.push_stage(Stage::Residual {
+        label: "residual2",
+        main: mlp_out,
+        skip: r1,
+        dst: out,
+        eff_main: ScaleChain::new().times(mo.step).over(out_spec.step).eff(),
+        eff_skip: ScaleChain::new().times(res1.step).over(out_spec.step).eff(),
+        bits: out_spec.bits,
+        qmin: out_min,
+        qmax: out_max,
+    });
+
+    prog.out_codes = out;
+    prog.out_spec = out_spec;
+    prog.out_values = None;
+    Ok(prog)
+}

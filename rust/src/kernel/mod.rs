@@ -1,0 +1,30 @@
+//! Plan-time kernel compiler — the layer between the integerized
+//! modules ([`crate::block`], [`crate::backend::AttnModule`]) and the
+//! `jit` backend ([`crate::backend::jit`]).
+//!
+//! The paper's operand reordering makes the whole encoder block a
+//! sequence of integer matrix products whose dequantization collapses
+//! into per-column constants (Eq. 2, §IV-B). The reference and
+//! simulator backends *interpret* that structure per request; this
+//! module compiles it once at plan time instead:
+//!
+//! * [`lower::lower_attention`] / [`lower::lower_block`] fold a module
+//!   + its [`crate::quant::BitProfile`] into a straight-line
+//!   [`ir::KernelProgram`] — fused stages over numbered buffer slots
+//!   with every requantizer scale, clamp range, softmax score scale,
+//!   GELU table and dimension baked in, and weights repacked for the
+//!   executor's streaming loop;
+//! * [`exec`] runs a program with cache-blocked, autovectorizable
+//!   integer GEMM loops and fp epilogues that replicate the reference
+//!   expressions term for term — compiled ≡ interpreted is a pinned
+//!   bit-identity contract (`tests/kernel_parity.rs`);
+//! * the `Display` impl (`disasm`) is a stable, snapshot-tested
+//!   disassembly, so lowering regressions are loud text diffs.
+
+mod disasm;
+pub mod exec;
+pub mod ir;
+pub mod lower;
+
+pub use ir::{AttnHeadStage, BufDecl, BufId, BufKind, KernelProgram, PackedWeights, Stage};
+pub use lower::{lower_attention, lower_block};

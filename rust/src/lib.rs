@@ -34,11 +34,15 @@
 //! * `sim-mt` ([`backend::SimMtBackend`]) — the same systolic model
 //!   sharded across a fixed worker pool (heads × batch rows),
 //!   bit-identical for any worker count;
+//! * `jit` ([`backend::JitBackend`]) — the [`kernel`] plan-time
+//!   compiled program, bit-identical to `ref` with all fold constants
+//!   baked at lowering;
 //! * `pjrt` ([`backend::PjrtBackend`]) — the AOT Pallas artifact through
 //!   the [`runtime`] PJRT engine.
 //!
 //! Backends are constructed by name through a
-//! [`backend::BackendRegistry`] (`ivit --backend ref|sim|sim-mt|pjrt`),
+//! [`backend::BackendRegistry`]
+//! (`ivit --backend ref|sim|sim-mt|jit|pjrt`),
 //! and all operands are **typed**: [`quant::QTensor`] (codes + step +
 //! bits + signedness) and [`quant::ScaleChain`] (the explicit Eq. 2
 //! scale foldings) replace the bare `f32` scales and `bool` flags that
@@ -76,6 +80,12 @@
 //!   the name-keyed registry; [`backend::PlanCache`] memoizes plans and
 //!   persists its rebuild index across restarts
 //!   ([`backend::PlanSeed`]).
+//! * [`kernel`] — the plan-time kernel compiler behind the `jit`
+//!   backend: lowers a module/block + profile into a flat, specialized
+//!   [`kernel::KernelProgram`] (fused stages, fold constants and GELU
+//!   table baked in, weights repacked for streaming GEMM loops) with a
+//!   snapshot-tested disassembly; compiled ≡ interpreted bit-identity
+//!   is pinned by `tests/kernel_parity.rs`.
 //! * [`model`] — ViT configuration and integerized checkpoint loading.
 //! * [`runtime`] — PJRT engine (HLO-text load, compile cache, literal
 //!   marshalling); builds against an in-tree stub unless the `xla-rs`
@@ -106,6 +116,7 @@ pub mod bench;
 pub mod block;
 pub mod cli;
 pub mod coordinator;
+pub mod kernel;
 pub mod model;
 pub mod net;
 pub mod quant;

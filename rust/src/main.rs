@@ -136,7 +136,7 @@ fn backend_config(args: &Args) -> Result<BackendConfig> {
 /// the unsupported pjrt/block combination fails at arg validation, not
 /// deep inside planning.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let backend = args.choice("backend", &["pjrt", "sim", "sim-mt", "ref"], "pjrt")?;
+    let backend = args.choice("backend", &["pjrt", "sim", "sim-mt", "ref", "jit"], "pjrt")?;
     let scope = args.choice("scope", &["attention", "block"], "attention")?;
     validate_serve_scope(&backend, &scope)?;
     // plain --bits stays free-form for the pjrt image path (fp32 = 32);
@@ -440,7 +440,11 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
 /// `ivit request` — the wire-protocol client for `serve --listen`
 /// servers: deterministic synthetic activations out, fp activations
 /// back, with optional bit-identity verification against a local
-/// rebuild of the server's synthetic encoder block.
+/// rebuild of the server's synthetic encoder block. `--connections N`
+/// opens a pool of N connections and deals requests across them
+/// round-robin — the server multiplexes each connection independently,
+/// so a pool exercises (and benefits from) its per-connection
+/// concurrency.
 fn cmd_request(args: &Args) -> Result<()> {
     let connect = Listen::parse(args.require("connect")?)?;
     let tenant = args.str("tenant", "cli");
@@ -448,9 +452,15 @@ fn cmd_request(args: &Args) -> Result<()> {
     let dim = args.usize("dim", 64)?;
     let count = args.usize("count", 1)?;
     let input_seed = args.usize("input-seed", 11)? as u64;
+    let connections = args.usize("connections", 1)?;
+    anyhow::ensure!(connections >= 1, "--connections must be at least 1");
 
-    let mut client = Client::connect(&connect)?;
-    client.ping().context("keepalive handshake")?;
+    let mut clients = Vec::with_capacity(connections);
+    for _ in 0..connections {
+        let mut client = Client::connect(&connect)?;
+        client.ping().context("keepalive handshake")?;
+        clients.push(client);
+    }
 
     // the same PRNG stream the in-process serve loop draws from, so a
     // request served here is comparable to one served locally
@@ -461,21 +471,25 @@ fn cmd_request(args: &Args) -> Result<()> {
     let mut responses = Vec::with_capacity(count);
     let mut sheds = 0u32;
     if args.bool("pipelined") {
-        // many in-flight streams on one connection; replies may land in
-        // any order — Client::wait parks the out-of-order ones
+        // many in-flight streams per connection; replies may land in
+        // any order — Client::wait parks the out-of-order ones. Stream
+        // ids are per-connection, so each wait goes back to the
+        // connection that submitted.
         let mut streams = Vec::with_capacity(count);
-        for x in &inputs {
-            streams.push(client.submit(&tenant, tokens, dim, x.clone())?);
+        for (i, x) in inputs.iter().enumerate() {
+            let c = i % connections;
+            streams.push((c, clients[c].submit(&tenant, tokens, dim, x.clone())?));
         }
-        for stream in streams {
-            match client.wait(stream)? {
+        for (c, stream) in streams {
+            match clients[c].wait(stream)? {
                 NetReply::Response(r) => responses.push(r),
                 NetReply::Error(e) => anyhow::bail!("stream {stream} failed: {e}"),
                 NetReply::Keepalive => anyhow::bail!("keepalive echo on a request stream"),
             }
         }
     } else {
-        for x in &inputs {
+        for (i, x) in inputs.iter().enumerate() {
+            let client = &mut clients[i % connections];
             let (r, retried) = client.request_with_retry(&tenant, tokens, dim, x, 32)?;
             sheds += retried;
             responses.push(r);
@@ -483,7 +497,8 @@ fn cmd_request(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     println!(
-        "{count} request(s) of {tokens}×{dim} served in {:.1} ms ({sheds} shed retries)",
+        "{count} request(s) of {tokens}×{dim} over {connections} connection(s) \
+         served in {:.1} ms ({sheds} shed retries)",
         wall.as_secs_f64() * 1e3
     );
 
@@ -544,7 +559,7 @@ fn verify_local(
 /// ';'-separated `--bits-profile` LIST, printing one accuracy/energy
 /// row per profile.
 fn cmd_eval(args: &Args) -> Result<()> {
-    let backend = args.choice("backend", &["pjrt", "ref", "sim", "sim-mt"], "pjrt")?;
+    let backend = args.choice("backend", &["pjrt", "ref", "sim", "sim-mt", "jit"], "pjrt")?;
     // plain --bits stays free-form for the pjrt artifact path (fp32 =
     // 32); --bits-profile routes through the per-site model
     if args.flags.contains_key("bits-profile") {
@@ -792,7 +807,7 @@ fn cmd_power(args: &Args) -> Result<()> {
 /// when the exported attn_case is present, verify bit-exactness against
 /// the JAX reference.
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let backend_name = args.choice("backend", &["sim", "sim-mt", "ref", "pjrt"], "sim")?;
+    let backend_name = args.choice("backend", &["sim", "sim-mt", "ref", "jit", "pjrt"], "sim")?;
     let mut cfg = backend_config(args)?;
     validate_backend_profile(&backend_name, &cfg.profile)?;
     let shift = cfg.shift;

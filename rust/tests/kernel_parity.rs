@@ -1,0 +1,195 @@
+//! Compiled ≡ interpreted — the acceptance gate of the kernel codegen
+//! subsystem: the `jit` backend's plan-time compiled programs produce
+//! **bit-identical** output codes (and, at attention scope, bit-identical
+//! W_O fp values) to the `ref` interpreter at **DeiT-S dimensions**
+//! (N=198 tokens, D=384, 6 heads, MLP hidden 1536) for every uniform
+//! width and the mixed attn:4,mlp:8 operating point, at both plan
+//! scopes. Also pins the warm-PlanCache and seeded-restart paths for
+//! jit plans, and that one-site profile differences key apart.
+
+use ivit::backend::{
+    AttnBatchRequest, AttnModule, AttnRequest, Backend, BackendRegistry, BitProfile, JitBackend,
+    PlanCache, PlanOptions, PlanScope, PlanSeed, ReferenceBackend,
+};
+use ivit::block::EncoderBlock;
+use ivit::kernel::lower_block;
+
+const TOKENS: usize = 198;
+const DIM: usize = 384;
+const HIDDEN: usize = 1536;
+const HEADS: usize = 6;
+
+fn block_opts(profile: BitProfile) -> PlanOptions {
+    PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() }
+}
+
+#[test]
+fn compiled_block_is_bit_identical_to_ref_at_deit_s_dims() {
+    for bits in [2u32, 3, 4, 8] {
+        let profile = BitProfile::uniform(bits);
+        let block = EncoderBlock::synthetic(DIM, HIDDEN, HEADS, profile, 500 + bits as u64)
+            .expect("block");
+        let x = block.random_input(TOKENS, 9).expect("input");
+        let req = AttnRequest::new(x);
+        let opts = block_opts(profile);
+
+        let mut ref_plan =
+            ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
+        let mut jit_plan = JitBackend::for_block(block).plan(&opts).expect("jit plan");
+        let a = ref_plan.run_one(&req).expect("ref run");
+        let b = jit_plan.run_one(&req).expect("jit run");
+
+        let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+        assert_eq!(ob.codes.data, oa.codes.data, "{bits}-bit DeiT-S block: jit ≡ ref codes");
+        assert_eq!(ob.spec, oa.spec, "{bits}-bit DeiT-S block: output spec");
+        assert_eq!((ob.rows(), ob.cols()), (TOKENS, DIM), "{bits}-bit: output shape");
+    }
+}
+
+#[test]
+fn compiled_mixed_profile_block_is_bit_identical_to_ref() {
+    // the flagship mixed operating point: 4-bit attention datapath,
+    // 8-bit MLP datapath, residual path at the widest assigned width
+    let profile = BitProfile::parse("attn:4,mlp:8").expect("profile");
+    assert!(profile.as_uniform().is_none(), "must be genuinely mixed");
+    let block = EncoderBlock::synthetic(DIM, HIDDEN, HEADS, profile, 900).expect("block");
+    let x = block.random_input(TOKENS, 13).expect("input");
+    let req = AttnRequest::new(x);
+    let opts = block_opts(profile);
+
+    let mut ref_plan =
+        ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
+    let mut jit_plan = JitBackend::for_block(block).plan(&opts).expect("jit plan");
+    let a = ref_plan.run_one(&req).expect("ref run");
+    let b = jit_plan.run_one(&req).expect("jit run");
+    let (oa, ob) = (a.out_codes.as_ref().unwrap(), b.out_codes.as_ref().unwrap());
+    assert_eq!(ob.codes.data, oa.codes.data, "mixed-profile block: jit ≡ ref codes");
+    assert_eq!(ob.spec.bits, 8, "residual site widths the block output");
+}
+
+#[test]
+fn compiled_attention_matches_ref_codes_and_values_at_deit_s_dims() {
+    // attention scope: PV codes AND the W_O fp values must both be
+    // bit-identical — the fp epilogue is replicated term for term, so
+    // even float comparison is exact (to_bits), not approximate
+    let mut profiles = vec![BitProfile::uniform(3), BitProfile::uniform(8)];
+    profiles.push(BitProfile::parse("attn:4,mlp:8").expect("profile"));
+    for (i, profile) in profiles.into_iter().enumerate() {
+        let module =
+            AttnModule::synthetic(DIM, DIM, HEADS, profile, 40 + i as u64).expect("module");
+        let x = module.random_input(TOKENS, 9).expect("input");
+        let req = AttnRequest::new(x);
+        let opts = PlanOptions::for_profile(profile);
+
+        let mut ref_plan = ReferenceBackend::new(module.clone()).plan(&opts).expect("ref plan");
+        let mut jit_plan = JitBackend::new(module).plan(&opts).expect("jit plan");
+        let a = ref_plan.run_one(&req).expect("ref run");
+        let b = jit_plan.run_one(&req).expect("jit run");
+
+        let key = profile.key();
+        assert_eq!(
+            b.out_codes.as_ref().unwrap().codes.data,
+            a.out_codes.as_ref().unwrap().codes.data,
+            "[{key}] attention: jit ≡ ref PV codes"
+        );
+        let va = a.out_values.as_ref().expect("ref W_O values");
+        let vb = b.out_values.as_ref().expect("jit W_O values");
+        assert_eq!(vb.len(), va.len(), "[{key}] W_O value count");
+        let exact = va.iter().zip(vb).all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(exact, "[{key}] attention: jit W_O values must be bit-identical to ref");
+    }
+}
+
+#[test]
+fn plan_cache_serves_jit_block_plans_warm_and_bit_identical() {
+    let profile = BitProfile::uniform(3);
+    let block = EncoderBlock::synthetic(32, 64, 2, profile, 77).expect("block");
+    let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(6, 5).expect("input")));
+    let opts = block_opts(profile);
+
+    // the interpreter's answer is the contract the cached plans honor
+    let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
+    let want = ref_plan.run_batch(&req).expect("ref batch");
+
+    let backend = JitBackend::for_block(block);
+    let mut cache = PlanCache::new();
+    let cold = cache.get_or_plan(&backend, &opts).unwrap().run_batch(&req).unwrap();
+    let warm = cache.get_or_plan(&backend, &opts).unwrap().run_batch(&req).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 1), "second lookup must be a hit");
+    for (label, got) in [("cold", &cold), ("warm", &warm)] {
+        assert_eq!(
+            got.items[0].out_codes.as_ref().unwrap().codes.data,
+            want.items[0].out_codes.as_ref().unwrap().codes.data,
+            "{label} jit-through-cache ≡ ref"
+        );
+    }
+}
+
+#[test]
+fn persisted_jit_plans_warm_start_bit_identical_across_restart() {
+    let registry = BackendRegistry::with_defaults();
+    let seed = PlanSeed {
+        backend: "jit".into(),
+        options: block_opts(BitProfile::uniform(3)),
+        d_in: 12,
+        d_head: 6,
+        heads: 2,
+        hidden: 24,
+        shift: true,
+        seed: 19,
+        artifacts: None,
+    };
+    let dir = std::env::temp_dir().join(format!("ivit_kernel_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 19).expect("block");
+    let req = AttnBatchRequest::single(AttnRequest::new(block.random_input(4, 3).expect("input")));
+
+    // cold process: plan through the seeded path, run, persist
+    let mut cold_cache = PlanCache::new();
+    let cold = cold_cache
+        .get_or_plan_seeded(&registry, &seed)
+        .unwrap()
+        .run_batch(&req)
+        .unwrap();
+    assert_eq!((cold_cache.misses(), cold_cache.hits()), (1, 0));
+    cold_cache.persist(&dir).unwrap();
+
+    // restarted process: the rebuilt jit plan is resident, the seeded
+    // lookup is a hit, and the compiled program is bit-identical
+    let mut warm_cache = PlanCache::warm_start(&dir, &registry).unwrap();
+    assert_eq!(warm_cache.len(), 1, "warm start rebuilds the persisted jit plan");
+    let warm = warm_cache
+        .get_or_plan_seeded(&registry, &seed)
+        .unwrap()
+        .run_batch(&req)
+        .unwrap();
+    assert_eq!((warm_cache.misses(), warm_cache.hits()), (0, 1), "warm lookup must hit");
+    assert_eq!(
+        cold.items[0].out_codes.as_ref().unwrap().codes.data,
+        warm.items[0].out_codes.as_ref().unwrap().codes.data,
+        "jit outputs must be bit-identical across the persisted restart"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn one_site_profile_difference_compiles_apart_and_keys_apart() {
+    let base = BitProfile::uniform(4);
+    let mut tweaked = base;
+    tweaked.set_site("gelu_out", 5).expect("site");
+
+    let ba = JitBackend::for_block(EncoderBlock::synthetic(8, 16, 2, base, 500).expect("block"));
+    let bb =
+        JitBackend::for_block(EncoderBlock::synthetic(8, 16, 2, tweaked, 500).expect("block"));
+
+    // different lowered programs (the disassembly shows the diff) ...
+    let pa = lower_block(ba.block().expect("block")).expect("lower a");
+    let pb = lower_block(bb.block().expect("block")).expect("lower b");
+    assert_ne!(format!("{pa}"), format!("{pb}"), "one-site diff must change the program");
+
+    // ... and different PlanCache keys, so they can never alias
+    let ka = PlanCache::key(&ba, &block_opts(base));
+    let kb = PlanCache::key(&bb, &block_opts(tweaked));
+    assert_ne!(ka, kb, "one-site profile diff must key apart: {ka}");
+}
