@@ -19,6 +19,12 @@
 #   make jit-smoke   — CI smoke for the kernel codegen subsystem: one batch
 #                      through a compiled (jit) encoder block with jit ≡ ref
 #                      bit-identity asserted (examples/jit_smoke.rs)
+#   make trace-smoke — CI smoke for the observability subsystem: tiny jit and
+#                      ref block-scope serves with --trace, then
+#                      examples/trace_smoke.rs asserts both Chrome traces are
+#                      schema-valid (admit→respond pipeline kinds; one span per
+#                      kernel stage kind in the jit trace) and that tracing
+#                      on ≡ off is bit-identical
 #   make serve-net-smoke — CI smoke for the wire protocol: a loopback-UDS
 #                      `ivit serve --listen` server plus an `ivit request`
 #                      client, with every reply asserted bit-identical to a
@@ -28,7 +34,7 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke jit-smoke serve-net-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke jit-smoke trace-smoke serve-net-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -60,6 +66,16 @@ profile-smoke:
 
 jit-smoke:
 	cd $(RUST_DIR) && cargo run --release -q --example jit_smoke
+
+trace-smoke:
+	cd $(RUST_DIR) && cargo run --release -q -- serve --backend jit --scope block \
+		--tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8 \
+		--trace /tmp/ivit_trace_jit.json
+	cd $(RUST_DIR) && cargo run --release -q -- serve --backend ref --scope block \
+		--tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8 \
+		--trace /tmp/ivit_trace_ref.json
+	cd $(RUST_DIR) && cargo run --release -q --example trace_smoke -- \
+		/tmp/ivit_trace_jit.json /tmp/ivit_trace_ref.json
 
 serve-net-smoke:
 	cd $(RUST_DIR) && cargo build --release -q

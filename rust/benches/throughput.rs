@@ -14,9 +14,14 @@
 //! 3. `jit_vs_ref` — the kernel-codegen arm: one encoder block through
 //!    the plan-time compiled `jit` program vs the `ref` interpreter,
 //!    **bit-identity asserted row for row** before any timing is read.
-//! 4. attention serving through the coordinator for every integer
+//! 4. `tracing_overhead` — the observability arm: the cost of a
+//!    disabled tracer `span()` call (must stay nanoseconds-cheap) and
+//!    jit block batches with tracing off vs on, **bit-identity asserted
+//!    between the arms** (tracing must never perturb outputs) with the
+//!    on/off wall ratio gated outside the smoke profile.
+//! 5. attention serving through the coordinator for every integer
 //!    backend (no artifacts needed).
-//! 5. image-classification serving over the PJRT executables
+//! 6. image-classification serving over the PJRT executables
 //!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
 //! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
@@ -383,6 +388,100 @@ fn jit_vs_ref() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The observability arm: tracing off must cost nothing measurable and
+/// tracing on must never perturb outputs. Three checks: (a) the
+/// disabled-path `span()` call is a single relaxed load — its per-call
+/// cost is measured and gated outside the smoke profile; (b) the same
+/// jit block batch with the global tracer off vs on is **bit-identical**
+/// (always asserted) with the wall-clock ratio gated outside smoke;
+/// (c) both arms emit `throughput.tracing_overhead` records so the
+/// `IVIT_BENCH_JSON` trajectory tracks observability cost.
+fn tracing_overhead() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows) =
+        if smoke() { (16usize, 32usize, 2usize, 8usize, 2usize) } else { (64, 256, 2, 32, 8) };
+    println!("tracing overhead (jit block, D={dim} H={hidden}, batch {rows}):\n");
+    let tracer = ivit::obs::global();
+    tracer.set_enabled(false);
+    tracer.reset();
+
+    // (a) the disabled fast path: one relaxed load, no clock, no alloc
+    let iters: u64 = if smoke() { 10_000 } else { 1_000_000 };
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _s = tracer.span(ivit::obs::StageKind::GemmRequant);
+    }
+    let span_ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+    println!("  disabled span() call: {span_ns:.1} ns/call over {iters} iters");
+
+    // (b) off vs on through the compiled block — identical codes required
+    let profile = BitProfile::parse("attn:4,mlp:8")?;
+    let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 53)?;
+    let reqs: Vec<AttnRequest> = (0..rows as u64)
+        .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 800 + i)?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let req = AttnBatchRequest::new(reqs);
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+    let reps: usize = if smoke() { 1 } else { 8 };
+
+    let mut plan = JitBackend::for_block(block.clone()).plan(&opts)?;
+    let t0 = Instant::now();
+    let mut off = plan.run_batch(&req)?;
+    for _ in 1..reps {
+        off = plan.run_batch(&req)?;
+    }
+    let off_wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(tracer.drain().is_empty(), "disabled tracer recorded spans");
+
+    tracer.set_enabled(true);
+    let mut plan = JitBackend::for_block(block).plan(&opts)?;
+    let t0 = Instant::now();
+    let mut on = plan.run_batch(&req)?;
+    for _ in 1..reps {
+        on = plan.run_batch(&req)?;
+    }
+    let on_wall = t0.elapsed().as_secs_f64();
+    tracer.set_enabled(false);
+    let spans = tracer.drain();
+    tracer.reset();
+    anyhow::ensure!(!spans.is_empty(), "enabled tracer recorded nothing");
+
+    // the numerics gate: tracing is a pure observer
+    for (i, (a, b)) in off.items.iter().zip(&on.items).enumerate() {
+        anyhow::ensure!(
+            a.out_codes.as_ref().unwrap().codes.data == b.out_codes.as_ref().unwrap().codes.data,
+            "row {i}: tracing on vs off output codes differ"
+        );
+    }
+
+    let ratio = on_wall / off_wall;
+    let total_rows = (rows * reps) as f64;
+    for (arm, wall) in [("off", off_wall), ("on", on_wall)] {
+        BenchRecord::new("throughput.tracing_overhead")
+            .str_field("tracing", arm)
+            .str_field("profile", &profile.key())
+            .bool_field("smoke", smoke())
+            .num("rows", total_rows)
+            .num("rows_per_s", total_rows / wall)
+            .num("disabled_span_ns", span_ns)
+            .num("ratio_vs_off", wall / off_wall)
+            .emit();
+    }
+    println!("  tracing on vs off : {ratio:.2}x wall ({} spans recorded while on)", spans.len());
+    println!("  outputs verified bit-identical with tracing on vs off ✓\n");
+    if smoke() {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        span_ns < 1_000.0,
+        "REGRESSION: a disabled span() call costs {span_ns:.0} ns (target < 1 µs)"
+    );
+    anyhow::ensure!(
+        ratio < 2.0,
+        "REGRESSION: tracing-on wall is {ratio:.2}x tracing-off (target < 2x)"
+    );
+    Ok(())
+}
+
 /// Attention serving through the backend registry — runs standalone, so
 /// the bench produces numbers even before `make artifacts`.
 fn backend_attention_throughput() -> anyhow::Result<()> {
@@ -457,6 +556,7 @@ fn main() -> anyhow::Result<()> {
     pipelined_vs_drain()?;
     uniform_vs_mixed()?;
     jit_vs_ref()?;
+    tracing_overhead()?;
     backend_attention_throughput()?;
     if smoke() {
         println!("bench smoke: one tiny batch per backend completed OK");

@@ -1,0 +1,154 @@
+//! Observability smoke: validates the tracing subsystem end to end.
+//! This is what `make trace-smoke` runs in CI, in two parts:
+//!
+//! 1. **Trace-file validation** — each CLI argument is a Chrome
+//!    trace-event JSON written by `ivit serve --trace` (the Makefile
+//!    passes one from a jit block-scope serve and one from a ref
+//!    serve). Every file must parse, carry schema-complete `X` events,
+//!    and contain the admit-to-respond pipeline kinds. A trace whose
+//!    filename contains `jit` must additionally hold at least one span
+//!    for **every** kernel stage kind of the lowered program at the
+//!    smoke geometry (D=32, H=64, 2 heads, uniform 3-bit).
+//! 2. **Bit-identity** — the same compiled block executed with the
+//!    global tracer off and then on must produce identical integer
+//!    codes: tracing must never perturb outputs (exit code 1 if it
+//!    does).
+//!
+//! ```sh
+//! cargo run --release --example trace_smoke -- /tmp/ivit_trace_jit.json
+//! ```
+
+use std::collections::BTreeSet;
+
+use anyhow::{ensure, Context, Result};
+use ivit::backend::{Backend, BitProfile, JitBackend, PlanOptions, PlanScope};
+use ivit::block::EncoderBlock;
+use ivit::kernel::lower_block;
+use ivit::util::Json;
+
+const PIPELINE_KINDS: [&str; 6] =
+    ["request", "queue.wait", "batch.stage", "batch.quantize", "plan.submit", "respond"];
+
+fn smoke_block(profile: BitProfile) -> Result<EncoderBlock> {
+    EncoderBlock::synthetic(32, 64, 2, profile, 33)
+}
+
+/// The opcode set a jit serve at the smoke geometry must have traced.
+fn expected_kernel_kinds(profile: BitProfile) -> Result<BTreeSet<&'static str>> {
+    let prog = lower_block(&smoke_block(profile)?)?;
+    Ok(prog.stages.iter().map(|s| s.opcode()).collect())
+}
+
+fn validate_trace(path: &str, profile: BitProfile) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = Json::parse(&text).with_context(|| format!("{path} is not valid JSON"))?;
+    ensure!(
+        json.path("displayTimeUnit").and_then(Json::as_str) == Some("ms"),
+        "{path}: displayTimeUnit must be \"ms\""
+    );
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{path}: no traceEvents array"))?;
+    ensure!(!events.is_empty(), "{path}: empty trace");
+
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    let mut kernel_names: BTreeSet<String> = BTreeSet::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{path}: event {i} has no name"))?;
+        let cat = ev
+            .get("cat")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{path}: event {i} has no cat"))?;
+        ensure!(
+            cat == "pipeline" || cat == "kernel",
+            "{path}: event {i} ({name}) has unknown cat {cat}"
+        );
+        ensure!(
+            ev.get("ph").and_then(Json::as_str) == Some("X"),
+            "{path}: event {i} ({name}) is not a complete ('X') event"
+        );
+        for field in ["ts", "dur", "pid", "tid"] {
+            ensure!(
+                ev.get(field).and_then(Json::as_f64).is_some(),
+                "{path}: event {i} ({name}) lacks numeric {field}"
+            );
+        }
+        let id = ev.path("args.id").and_then(Json::as_f64).unwrap_or(0.0);
+        ensure!(id > 0.0, "{path}: event {i} ({name}) lacks a positive args.id");
+        if cat == "kernel" {
+            let parent = ev.path("args.parent").and_then(Json::as_f64).unwrap_or(0.0);
+            ensure!(parent > 0.0, "{path}: kernel event {name} must nest under plan.submit");
+            kernel_names.insert(name.to_string());
+        }
+        names.insert(name.to_string());
+    }
+
+    for kind in PIPELINE_KINDS {
+        ensure!(names.contains(kind), "{path}: no {kind} span — pipeline not fully traced");
+    }
+    if path.contains("jit") {
+        let expected = expected_kernel_kinds(profile)?;
+        for kind in &expected {
+            ensure!(
+                kernel_names.contains(*kind),
+                "{path}: jit trace has no {kind} span (kernel kinds seen: {kernel_names:?})"
+            );
+        }
+    }
+    println!("  {path}: {} events, kernel kinds {:?} ✓", events.len(), kernel_names);
+    Ok(())
+}
+
+/// Tracing must be a pure observer: identical codes with it on or off.
+fn assert_bit_identity(profile: BitProfile) -> Result<()> {
+    let block = smoke_block(profile)?;
+    let tokens = 16;
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+    let req = ivit::backend::AttnBatchRequest::new(vec![
+        ivit::backend::AttnRequest::new(block.random_input(tokens, 100)?),
+        ivit::backend::AttnRequest::new(block.random_input(tokens, 101)?),
+    ]);
+
+    let tracer = ivit::obs::global();
+    tracer.reset();
+    tracer.set_enabled(false);
+    let mut plan_off = JitBackend::for_block(block.clone()).plan(&opts)?;
+    let off = plan_off.run_batch(&req)?;
+    ensure!(tracer.drain().is_empty(), "disabled tracer recorded spans");
+
+    tracer.set_enabled(true);
+    let mut plan_on = JitBackend::for_block(block).plan(&opts)?;
+    let on = plan_on.run_batch(&req)?;
+    tracer.set_enabled(false);
+    let spans = tracer.drain();
+    ensure!(!spans.is_empty(), "enabled tracer recorded nothing");
+    let kernel = spans.iter().filter(|s| s.kind.category() == "kernel").count();
+    ensure!(kernel > 0, "enabled jit run produced no kernel-stage spans");
+
+    for (i, (w, g)) in off.items.iter().zip(&on.items).enumerate() {
+        let wc = &w.out_codes.as_ref().unwrap().codes.data;
+        let gc = &g.out_codes.as_ref().unwrap().codes.data;
+        ensure!(wc == gc, "row {i}: tracing on vs off DIFFER — tracer perturbs execution");
+    }
+    println!("  tracing on ≡ off: BIT-IDENTICAL ({kernel} kernel spans while on) ✓");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let profile = BitProfile::uniform(3);
+    println!("trace smoke: Chrome-trace validation + tracing bit-identity\n");
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    for path in &paths {
+        validate_trace(path, profile)?;
+    }
+    if paths.is_empty() {
+        println!("  (no trace files passed — skipping file validation)");
+    }
+    assert_bit_identity(profile)?;
+    println!("\ntrace smoke PASS");
+    Ok(())
+}

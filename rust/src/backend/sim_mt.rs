@@ -332,6 +332,7 @@ impl SimMtPlan {
                 // catch panics so a poisoned shard surfaces as an error
                 // instead of killing the worker (which would strand the
                 // queued jobs' result senders and hang the collector)
+                let _span = crate::obs::global().span(crate::obs::StageKind::Shard);
                 let r = catch_unwind(AssertUnwindSafe(|| sim.run_front(&xs[i])))
                     .unwrap_or_else(|_| Err(anyhow!("front shard {i} panicked")));
                 let _ = tx.send((i, r));
@@ -350,6 +351,7 @@ impl SimMtPlan {
             for h in 0..heads {
                 let (sim, fronts, tx) = (Arc::clone(&self.sim), Arc::clone(fronts), tx.clone());
                 self.pool.submit(Box::new(move || {
+                    let _span = crate::obs::global().span(crate::obs::StageKind::Shard);
                     let r = catch_unwind(AssertUnwindSafe(|| sim.run_head(&fronts[i], h)))
                         .unwrap_or_else(|_| Err(anyhow!("head shard ({i}, {h}) panicked")));
                     let _ = tx.send((i * heads + h, r));
@@ -572,6 +574,7 @@ impl ExecutionPlan for SimMtBlockPlan {
             for i in 0..b {
                 let (sim, xs, tx) = (Arc::clone(&self.sim), Arc::clone(&xs), tx.clone());
                 self.pool.submit(Box::new(move || {
+                    let _span = crate::obs::global().span(crate::obs::StageKind::Shard);
                     let r = catch_unwind(AssertUnwindSafe(|| sim.run(&xs[i])))
                         .unwrap_or_else(|_| Err(anyhow!("block shard {i} panicked")));
                     let _ = tx.send((i, r));

@@ -204,14 +204,17 @@ COMMANDS:
                 protocol instead of the in-process synthetic load loop;
                 --requests N then means 'stop after N served replies',
                 0 = serve until killed)
-                --metrics-listen tcp:...|uds:... (plaintext metrics dump
-                per connection: coordinator snapshot + per-tenant lines)
+                --metrics-listen tcp:...|uds:... (Prometheus text-format
+                dump per connection: coordinator snapshot, plan-cache
+                and wire counters, per-tenant and per-stage lines)
                 --tenants N (per-tenant in-flight cap, default 64)
                 --queue-bound N (global in-flight cap, default 256; must
                 be >= --tenants)
                 --retry-after-ms MS (back-off carried in shed replies,
                 default 25)
                 --serve-timeout-s S (wall-clock backstop, 0 = none)
+              --trace PATH (Chrome trace-event JSON of the whole run;
+              see OBSERVABILITY below)
   request     send activation batches to a `serve --listen` server
               --connect tcp:<host:port>|uds:<path> (required)
               --tenant NAME (default cli)  --count N (requests, default 1)
@@ -225,6 +228,11 @@ COMMANDS:
               locally (--scope block --hidden H --heads N --bits-profile P
               --seed S, defaults matching serve) and assert the wire
               responses are BIT-IDENTICAL to in-process execution
+              --trace PATH (client-side Chrome trace: one span per
+              request, submit -> reply in hand)
+              --latency-json PATH (append one request.latency JSON-Lines
+              row per request: client-observed latency_us, tenant,
+              pipelined, connections)
   eval        Table II: accuracy of a model variant on the eval set
               --backend pjrt|ref|sim|sim-mt|jit (default pjrt)
               pjrt: --artifacts DIR  --mode ...  --bits N  [--limit N]
@@ -265,6 +273,30 @@ WIRE PROTOCOL (serve --listen / request --connect):
   retry-after-ms > 0 — back off that long and resubmit (the client
   library's request_with_retry does). retry-after-ms = 0 on any other
   code means retrying will not help.
+
+OBSERVABILITY (serve/request --trace, --metrics-listen):
+  --trace PATH writes a Chrome trace-event JSON file at shutdown — load
+  it at chrome://tracing or ui.perfetto.dev. Spans nest wire-to-kernel:
+    request (root, enqueue -> reply write-back)
+      net.admit     validate + admission + submit (networked serving)
+      queue.wait    time parked in the bounded batcher queue
+      respond       reply channel write-back
+    batch.stage / batch.quantize   batch assembly on the worker
+    plan.submit   ExecutionPlan::submit; synchronous plans (ref/jit/sim)
+                  execute inside it, so their kernel-stage spans —
+                  gemm.scale gemm.requant ln.quant dequant quant
+                  gelu.lut attn.head residual — nest under it
+    plan.exec     submit -> poll-complete window; shard spans mark
+                  sim-mt worker-pool jobs on their own threads
+  Tracing costs one atomic load per probe when disabled and never
+  changes outputs — parity suites pass with it enabled. At exit the
+  per-stage aggregate table is printed and one serve.stage_breakdown
+  record per stage lands in the IVIT_BENCH_JSON trajectory; the same
+  aggregates appear on the metrics endpoint as ivit_stage_* families.
+  The metrics endpoint speaks the Prometheus text exposition format:
+  ivit_-prefixed families with # HELP/# TYPE headers, counters suffixed
+  _total (e.g. ivit_requests_total, ivit_plan_cache_hits_total,
+  ivit_stage_duration_us_sum{stage=\"gemm.requant\"}).
 ";
 
 #[cfg(test)]

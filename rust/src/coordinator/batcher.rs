@@ -40,6 +40,9 @@ pub struct Request {
     pub image: Vec<f32>,
     pub enqueued: Instant,
     pub reply: SyncSender<Response>,
+    /// Root span of this request's trace ([`crate::obs::SpanId::NONE`]
+    /// when tracing is off). Queue-wait and respond spans parent here.
+    pub span: crate::obs::SpanId,
 }
 
 /// The reply: logits for the request's image.
@@ -110,8 +113,20 @@ impl Handle {
         self.image_elems
     }
 
-    /// Submit an image; returns a receiver for the response.
+    /// Submit an image; returns a receiver for the response. Mints a
+    /// fresh trace root for the request.
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_with_span(image, crate::obs::global().alloc_id())
+    }
+
+    /// Submit under an externally minted trace root (the net reader
+    /// allocates the root at admit time so its `net.admit` span can
+    /// parent there before the request enters the queue).
+    pub fn submit_with_span(
+        &self,
+        image: Vec<f32>,
+        span: crate::obs::SpanId,
+    ) -> Result<Receiver<Response>, SubmitError> {
         assert_eq!(image.len(), self.image_elems, "image payload size");
         let (reply_tx, reply_rx) = sync_channel(1);
         let req = Request {
@@ -119,6 +134,7 @@ impl Handle {
             image,
             enqueued: Instant::now(),
             reply: reply_tx,
+            span,
         };
         // count BEFORE the send: once the request is in the channel the
         // worker may pop it (and decrement) at any moment, so a
@@ -253,7 +269,7 @@ fn gather_batch(
             Err(TryRecvError::Disconnected) => return Gather::Disconnected,
         }
     };
-    metrics.dequeued();
+    note_dequeue(&first, metrics);
     let mut batch = Vec::with_capacity(bsz);
     batch.push(first);
     // admit until full or the deadline passes
@@ -265,7 +281,7 @@ fn gather_batch(
         }
         match rx.recv_timeout(deadline - now) {
             Ok(req) => {
-                metrics.dequeued();
+                note_dequeue(&req, metrics);
                 batch.push(req);
             }
             Err(RecvTimeoutError::Timeout) => break,
@@ -273,6 +289,18 @@ fn gather_batch(
         }
     }
     Gather::Batch(batch)
+}
+
+/// Gauge decrement + queue-wait span (enqueue → this dequeue) under the
+/// request's trace root. The tracer check keeps the disabled path free
+/// of the extra clock read.
+fn note_dequeue(req: &Request, metrics: &Metrics) {
+    metrics.dequeued();
+    let tracer = crate::obs::global();
+    if tracer.enabled() {
+        let now = Instant::now();
+        tracer.record_interval(crate::obs::StageKind::Queue, req.span, req.enqueued, now);
+    }
 }
 
 /// Fail every request of a batch with one error message.
@@ -329,10 +357,13 @@ fn worker_loop<E: BatchExecutor>(
                 Gather::Empty => {}
                 Gather::Batch(batch) => {
                     progressed = true;
-                    // stage: zero the padding, copy the real rows
-                    payload.iter_mut().for_each(|v| *v = 0.0);
-                    for (i, r) in batch.iter().enumerate() {
-                        payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+                    {
+                        // stage: zero the padding, copy the real rows
+                        let _stage = crate::obs::global().span(crate::obs::StageKind::BatchStage);
+                        payload.iter_mut().for_each(|v| *v = 0.0);
+                        for (i, r) in batch.iter().enumerate() {
+                            payload[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+                        }
                     }
                     metrics.record_batch(batch.len());
                     match executor.submit(&payload, batch.len()) {
@@ -363,9 +394,12 @@ fn worker_loop<E: BatchExecutor>(
                     let done = inflight.pop_front().expect("head exists");
                     metrics.job_finished();
                     let real = done.reqs.len();
+                    let tracer = crate::obs::global();
                     for (i, req) in done.reqs.into_iter().enumerate() {
                         let latency = req.enqueued.elapsed();
                         metrics.latency.record(latency);
+                        let respond =
+                            tracer.span_with_parent(crate::obs::StageKind::Respond, req.span);
                         let _ = req.reply.send(Response {
                             id: req.id,
                             logits: logits[i * classes..(i + 1) * classes].to_vec(),
@@ -373,6 +407,18 @@ fn worker_loop<E: BatchExecutor>(
                             batch_size: real,
                             error: None,
                         });
+                        drop(respond);
+                        // close the per-request root: enqueue → write-back
+                        if tracer.enabled() {
+                            let now = Instant::now();
+                            tracer.record_span(
+                                crate::obs::StageKind::Request,
+                                req.span,
+                                crate::obs::SpanId::NONE,
+                                req.enqueued,
+                                now,
+                            );
+                        }
                     }
                 }
                 Err(e) => {

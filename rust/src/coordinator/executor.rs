@@ -173,10 +173,19 @@ pub struct AttnBatchExecutor {
     d_out: usize,
     spec: crate::backend::QuantSpec,
     batch: usize,
-    /// Plan job → the real-row count needed to de-pad its response.
-    inflight: BTreeMap<u64, usize>,
+    /// Plan job → de-pad row count + the tracing context of its submit
+    /// (the `plan.submit` span id parents the batch's `plan.exec`
+    /// interval recorded when `poll` sees `Done`).
+    inflight: BTreeMap<u64, InflightBatch>,
     /// Merged hardware report over every completed batch.
     report: Arc<Mutex<Option<AttentionReport>>>,
+}
+
+/// Book-keeping for one submitted plan job.
+struct InflightBatch {
+    real_rows: usize,
+    submitted: std::time::Instant,
+    span: crate::obs::SpanId,
 }
 
 impl AttnBatchExecutor {
@@ -264,15 +273,26 @@ impl BatchExecutor for AttnBatchExecutor {
         let elems = self.image_elems();
         anyhow::ensure!(images.len() == self.batch * elems, "batch payload size");
         anyhow::ensure!(real_rows <= self.batch, "real_rows {} > batch {}", real_rows, self.batch);
+        let tracer = crate::obs::global();
         // staging: only REAL rows are quantized and submitted
-        let items = (0..real_rows)
-            .map(|b| {
-                let row = &images[b * elems..(b + 1) * elems];
-                Ok(AttnRequest::new(QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let items = {
+            let _q = tracer.span(crate::obs::StageKind::Quantize);
+            (0..real_rows)
+                .map(|b| {
+                    let row = &images[b * elems..(b + 1) * elems];
+                    let x = QTensor::quantize_f32(row, self.tokens, self.d_in, self.spec)?;
+                    Ok(AttnRequest::new(x))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        let submitted = std::time::Instant::now();
+        let submit_span = tracer.span(crate::obs::StageKind::Submit);
+        let span = submit_span.id();
+        // synchronous plans (ref/sim/jit) execute inside submit, so
+        // their kernel-stage spans nest under this guard
         let job = self.plan.submit(&AttnBatchRequest::new(items))?;
-        self.inflight.insert(job.raw(), real_rows);
+        drop(submit_span);
+        self.inflight.insert(job.raw(), InflightBatch { real_rows, submitted, span });
         Ok(job)
     }
 
@@ -285,10 +305,17 @@ impl BatchExecutor for AttnBatchExecutor {
                 return Err(e);
             }
         };
-        let real_rows = self
+        let batch = self
             .inflight
             .remove(&job.raw())
             .ok_or_else(|| anyhow::anyhow!("attn executor: untracked {job}"))?;
+        let real_rows = batch.real_rows;
+        crate::obs::global().record_interval(
+            crate::obs::StageKind::Exec,
+            batch.span,
+            batch.submitted,
+            std::time::Instant::now(),
+        );
         anyhow::ensure!(resp.items.len() == real_rows, "plan returned {} rows", resp.items.len());
         if let Some(r) = &resp.report {
             let mut sink = self.report.lock().expect("report sink poisoned");

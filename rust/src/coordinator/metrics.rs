@@ -95,27 +95,173 @@ pub struct Snapshot {
     /// Most batches ever in flight at once (> 1 ⇔ the pipelined loop
     /// actually overlapped staging with execution).
     pub inflight_peak: u64,
+    /// Plan-cache counters at serve planning time (0 when no cache was
+    /// used — the lines still render so scrapes see a stable set).
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_evictions: u64,
+    /// Per-stage span aggregates from the global tracer (empty when
+    /// tracing never ran — the stage families are omitted then).
+    pub stages: Vec<crate::obs::StageStat>,
+}
+
+/// Append one Prometheus metric family: `# HELP` + `# TYPE` headers and
+/// its sample lines. Shared with the net layer so every endpoint speaks
+/// the same exposition format.
+pub(crate) fn family(out: &mut String, name: &str, help: &str, ty: &str, lines: &[String]) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} {ty}\n"));
+    for l in lines {
+        out.push_str(l);
+        out.push('\n');
+    }
 }
 
 impl Snapshot {
-    /// Plaintext metrics lines (`name value`), shared verbatim by the
-    /// serve shutdown report and the networked metrics endpoint.
+    /// Prometheus text-format metrics (`ivit_` prefix, `# HELP`/`# TYPE`
+    /// headers, counters suffixed `_total`), shared verbatim by the
+    /// serve shutdown report and the networked metrics endpoint. The
+    /// exact format is pinned by a unit test — scrapers parse this.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        out.push_str(&format!("requests_total {}\n", self.requests));
-        out.push_str(&format!("batches_total {}\n", self.batches));
-        out.push_str(&format!("batch_mean {:.2}\n", self.mean_batch));
-        for (q, v) in [("p50", self.p50_us), ("p95", self.p95_us), ("p99", self.p99_us)] {
-            out.push_str(&format!("latency_us{{q=\"{q}\"}} {v}\n"));
+        family(
+            &mut out,
+            "ivit_requests_total",
+            "Requests completed through the batcher.",
+            "counter",
+            &[format!("ivit_requests_total {}", self.requests)],
+        );
+        family(
+            &mut out,
+            "ivit_batches_total",
+            "Batches submitted to the executor.",
+            "counter",
+            &[format!("ivit_batches_total {}", self.batches)],
+        );
+        family(
+            &mut out,
+            "ivit_rejected_total",
+            "Requests rejected by queue backpressure.",
+            "counter",
+            &[format!("ivit_rejected_total {}", self.rejected)],
+        );
+        family(
+            &mut out,
+            "ivit_shed_total",
+            "Requests shed with a retry-after by the serving front end.",
+            "counter",
+            &[format!("ivit_shed_total {}", self.shed)],
+        );
+        family(
+            &mut out,
+            "ivit_batch_size_mean",
+            "Mean real rows per executed batch.",
+            "gauge",
+            &[format!("ivit_batch_size_mean {:.2}", self.mean_batch)],
+        );
+        family(
+            &mut out,
+            "ivit_latency_us",
+            "Request latency quantiles (microseconds, bucket upper bounds).",
+            "summary",
+            &[
+                format!("ivit_latency_us{{quantile=\"0.5\"}} {}", self.p50_us),
+                format!("ivit_latency_us{{quantile=\"0.95\"}} {}", self.p95_us),
+                format!("ivit_latency_us{{quantile=\"0.99\"}} {}", self.p99_us),
+            ],
+        );
+        family(
+            &mut out,
+            "ivit_latency_mean_us",
+            "Mean request latency (microseconds).",
+            "gauge",
+            &[format!("ivit_latency_mean_us {:.1}", self.mean_us)],
+        );
+        family(
+            &mut out,
+            "ivit_latency_max_us",
+            "Max request latency (microseconds).",
+            "gauge",
+            &[format!("ivit_latency_max_us {}", self.max_us)],
+        );
+        family(
+            &mut out,
+            "ivit_queue_depth",
+            "Requests waiting in the bounded queue.",
+            "gauge",
+            &[format!("ivit_queue_depth {}", self.queue_depth)],
+        );
+        family(
+            &mut out,
+            "ivit_queue_peak",
+            "Deepest the bounded queue ever got.",
+            "gauge",
+            &[format!("ivit_queue_peak {}", self.queue_peak)],
+        );
+        family(
+            &mut out,
+            "ivit_inflight",
+            "Batches submitted and not yet completed.",
+            "gauge",
+            &[format!("ivit_inflight {}", self.inflight)],
+        );
+        family(
+            &mut out,
+            "ivit_inflight_peak",
+            "Most batches ever in flight at once.",
+            "gauge",
+            &[format!("ivit_inflight_peak {}", self.inflight_peak)],
+        );
+        family(
+            &mut out,
+            "ivit_plan_cache_hits_total",
+            "Plan-cache hits at serve planning.",
+            "counter",
+            &[format!("ivit_plan_cache_hits_total {}", self.plan_hits)],
+        );
+        family(
+            &mut out,
+            "ivit_plan_cache_misses_total",
+            "Plan-cache misses at serve planning.",
+            "counter",
+            &[format!("ivit_plan_cache_misses_total {}", self.plan_misses)],
+        );
+        family(
+            &mut out,
+            "ivit_plan_cache_evictions_total",
+            "Plans evicted from the LRU-bounded cache.",
+            "counter",
+            &[format!("ivit_plan_cache_evictions_total {}", self.plan_evictions)],
+        );
+        if !self.stages.is_empty() {
+            let line = |metric: &str, pick: fn(&crate::obs::StageStat) -> u64| -> Vec<String> {
+                self.stages
+                    .iter()
+                    .map(|s| format!("{metric}{{stage=\"{}\"}} {}", s.kind.name(), pick(s)))
+                    .collect()
+            };
+            family(
+                &mut out,
+                "ivit_stage_spans_total",
+                "Recorded trace spans per pipeline/kernel stage.",
+                "counter",
+                &line("ivit_stage_spans_total", |s| s.count),
+            );
+            family(
+                &mut out,
+                "ivit_stage_duration_us_sum",
+                "Total traced duration per stage (microseconds).",
+                "counter",
+                &line("ivit_stage_duration_us_sum", |s| s.sum_us),
+            );
+            family(
+                &mut out,
+                "ivit_stage_duration_us_max",
+                "Longest single traced span per stage (microseconds).",
+                "gauge",
+                &line("ivit_stage_duration_us_max", |s| s.max_us),
+            );
         }
-        out.push_str(&format!("latency_mean_us {:.1}\n", self.mean_us));
-        out.push_str(&format!("latency_max_us {}\n", self.max_us));
-        out.push_str(&format!("queue_depth {}\n", self.queue_depth));
-        out.push_str(&format!("queue_peak {}\n", self.queue_peak));
-        out.push_str(&format!("inflight {}\n", self.inflight));
-        out.push_str(&format!("inflight_peak {}\n", self.inflight_peak));
-        out.push_str(&format!("rejected_total {}\n", self.rejected));
-        out.push_str(&format!("shed_total {}\n", self.shed));
         out
     }
 }
@@ -136,6 +282,9 @@ pub struct Metrics {
     queue_peak: AtomicU64,
     inflight: AtomicU64,
     inflight_peak: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    plan_evictions: AtomicU64,
 }
 
 impl Metrics {
@@ -176,6 +325,14 @@ impl Metrics {
         });
     }
 
+    /// Copy the global plan-cache counters in at serve setup so the
+    /// metrics endpoint surfaces them alongside the live gauges.
+    pub fn set_plan_cache(&self, hits: u64, misses: u64, evictions: u64) {
+        self.plan_hits.store(hits, Ordering::Relaxed);
+        self.plan_misses.store(misses, Ordering::Relaxed);
+        self.plan_evictions.store(evictions, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let reqs = self.batched_requests.load(Ordering::Relaxed);
@@ -194,6 +351,10 @@ impl Metrics {
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
             inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            plan_evictions: self.plan_evictions.load(Ordering::Relaxed),
+            stages: crate::obs::global().stage_summary(),
         }
     }
 }
@@ -242,17 +403,95 @@ mod tests {
         m.latency.record(Duration::from_micros(100));
         m.rejected.fetch_add(2, Ordering::Relaxed);
         m.shed.fetch_add(3, Ordering::Relaxed);
+        m.set_plan_cache(5, 6, 7);
         let text = m.snapshot().render();
         for needle in [
-            "requests_total 1",
-            "batches_total 1",
-            "latency_us{q=\"p95\"}",
-            "rejected_total 2",
-            "shed_total 3",
-            "queue_peak 0",
-            "inflight_peak 0",
+            "ivit_requests_total 1",
+            "ivit_batches_total 1",
+            "ivit_latency_us{quantile=\"0.95\"}",
+            "ivit_rejected_total 2",
+            "ivit_shed_total 3",
+            "ivit_queue_peak 0",
+            "ivit_inflight_peak 0",
+            "ivit_plan_cache_hits_total 5",
+            "ivit_plan_cache_misses_total 6",
+            "ivit_plan_cache_evictions_total 7",
         ] {
             assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+    }
+
+    /// Pins the exact Prometheus text format: every family gets `# HELP`
+    /// and `# TYPE` headers, all metrics carry the `ivit_` prefix, and
+    /// counters end in `_total`. Built from a literal [`Snapshot`] so the
+    /// shared global tracer cannot inject stage lines from other tests.
+    #[test]
+    fn render_is_prometheus_compliant() {
+        let s = Snapshot {
+            requests: 10,
+            batches: 4,
+            mean_batch: 2.5,
+            p50_us: 128,
+            p95_us: 256,
+            p99_us: 512,
+            mean_us: 150.0,
+            max_us: 400,
+            rejected: 1,
+            shed: 2,
+            queue_depth: 0,
+            queue_peak: 3,
+            inflight: 0,
+            inflight_peak: 2,
+            plan_hits: 1,
+            plan_misses: 2,
+            plan_evictions: 0,
+            stages: vec![crate::obs::StageStat {
+                kind: crate::obs::StageKind::GemmRequant,
+                count: 8,
+                sum_us: 900,
+                max_us: 200,
+            }],
+        };
+        let text = s.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(text.ends_with('\n'), "exposition must end with a newline");
+        // Every sample line is `name{labels} value` with the ivit_ prefix,
+        // and is preceded (somewhere above) by its HELP and TYPE headers.
+        for line in &lines {
+            if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+                continue;
+            }
+            assert!(line.starts_with("ivit_"), "unprefixed sample line: {line}");
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(text.contains(&format!("# HELP {name} ")), "no HELP for {name}");
+            assert!(text.contains(&format!("# TYPE {name} ")), "no TYPE for {name}");
+        }
+        // Counters are declared `counter` and suffixed `_total`.
+        for line in &lines {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let (name, ty) = (it.next().unwrap(), it.next().unwrap());
+                assert!(
+                    matches!(ty, "counter" | "gauge" | "summary"),
+                    "unknown type {ty} for {name}"
+                );
+                if ty == "counter" {
+                    assert!(name.ends_with("_total"), "counter {name} lacks _total");
+                }
+            }
+        }
+        // Spot-pin exact sample lines, including the labelled families.
+        for exact in [
+            "ivit_requests_total 10",
+            "ivit_batch_size_mean 2.50",
+            "ivit_latency_us{quantile=\"0.5\"} 128",
+            "ivit_latency_mean_us 150.0",
+            "ivit_plan_cache_misses_total 2",
+            "ivit_stage_spans_total{stage=\"gemm.requant\"} 8",
+            "ivit_stage_duration_us_sum{stage=\"gemm.requant\"} 900",
+            "ivit_stage_duration_us_max{stage=\"gemm.requant\"} 200",
+        ] {
+            assert!(lines.contains(&exact), "missing exact line '{exact}' in:\n{text}");
         }
     }
 

@@ -219,6 +219,23 @@ fn apply_stage(stage: &Stage, bufs: &mut [BufData], rows: usize) -> Result<()> {
     Ok(())
 }
 
+/// Trace kind of one IR stage (the closed [`StageKind`] mirror of
+/// [`Stage::opcode`] — a direct variant match, no string lookup on the
+/// execute path).
+fn stage_kind(stage: &Stage) -> crate::obs::StageKind {
+    use crate::obs::StageKind;
+    match stage {
+        Stage::GemmScale { .. } => StageKind::GemmScale,
+        Stage::GemmRequant { .. } => StageKind::GemmRequant,
+        Stage::LayerNormQuant { .. } => StageKind::LnQuant,
+        Stage::Dequantize { .. } => StageKind::Dequant,
+        Stage::Quantize { .. } => StageKind::Quant,
+        Stage::GeluLut { .. } => StageKind::GeluLut,
+        Stage::AttnHead(_) => StageKind::AttnHead,
+        Stage::Residual { .. } => StageKind::Residual,
+    }
+}
+
 impl KernelProgram {
     /// Run the compiled program on one request tensor. Returns the
     /// output codes and, when the program tracks one, the fp values
@@ -235,7 +252,12 @@ impl KernelProgram {
             })
             .collect();
         bufs[0] = BufData::Int(x.codes.data.clone());
+        let tracer = crate::obs::global();
         for (idx, stage) in self.stages.iter().enumerate() {
+            // one span per executed stage, parented under whatever the
+            // caller has open (plan.submit on the coordinator worker);
+            // a single relaxed load when tracing is off
+            let _span = tracer.span(stage_kind(stage));
             apply_stage(stage, &mut bufs, rows)
                 .with_context(|| format!("kernel stage [{idx:02}] {}", stage.opcode()))?;
         }

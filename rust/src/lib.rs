@@ -99,8 +99,14 @@
 //!   protocol (versioned header, request/response/error/keepalive
 //!   frames) over TCP/UDS, per-connection stream multiplexing onto the
 //!   coordinator, per-tenant admission control with overload shedding,
-//!   the plaintext metrics endpoint, and the client library behind
-//!   `ivit request`.
+//!   the Prometheus-format metrics endpoint, and the client library
+//!   behind `ivit request`.
+//! * [`obs`] — the observability substrate: the span [`obs::Tracer`]
+//!   (atomic enable flag, per-thread buffers, explicit parentage)
+//!   threaded from the wire through queue/batch/plan down to
+//!   individual kernel stages, Chrome trace-event export
+//!   (`--trace <path>`), and the per-stage duration aggregates the
+//!   metrics endpoint and `stage_breakdown` bench records render.
 //! * [`bench`] — the hand-rolled benchmark harness used by `cargo bench`
 //!   (criterion is not in this image's offline crate set).
 
@@ -119,6 +125,7 @@ pub mod coordinator;
 pub mod kernel;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -21,6 +21,7 @@ use ivit::cli::{validate_backend_profile, validate_serve_net, validate_serve_sco
 use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator, PjrtExecutor, Snapshot};
 use ivit::model::{AttnCase, EvalSet, VitConfig, VitModel};
 use ivit::net::{AdmissionConfig, Client, Listen, NetReply, NetResponse, Server, ServerConfig};
+use ivit::obs::{SpanId, StageKind};
 use ivit::quant::QTensor;
 use ivit::runtime::Engine;
 use ivit::sim::{AttentionSim, EnergyModel};
@@ -153,10 +154,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.usize("queue-bound", 256)?,
         )?;
     }
+    // --trace PATH: flip the global tracer on before any serving work so
+    // every span from admit to kernel stage lands in one Chrome trace
+    let trace_path = args.flags.get("trace").map(PathBuf::from);
+    if trace_path.is_some() {
+        ivit::obs::global().set_enabled(true);
+    }
     match backend.as_str() {
         "pjrt" => cmd_serve_images(args),
         other => cmd_serve_attention(args, other, &scope),
+    }?;
+    if let Some(path) = &trace_path {
+        finish_trace(path, &backend, &scope)?;
     }
+    Ok(())
+}
+
+/// End-of-run trace export: disable the tracer, drain every buffered
+/// span into a Chrome trace-event file (load it at `chrome://tracing`
+/// or `ui.perfetto.dev`), print the per-stage aggregate table, and
+/// append one `serve.stage_breakdown` record per stage to the
+/// `IVIT_BENCH_JSON` trajectory.
+fn finish_trace(path: &Path, backend: &str, scope: &str) -> Result<()> {
+    let tracer = ivit::obs::global();
+    tracer.set_enabled(false);
+    let spans = tracer.drain();
+    ivit::obs::write_chrome_trace(path, &spans)?;
+    println!("\ntrace: {} span(s) written to {path:?}", spans.len());
+    println!(
+        "{:<14} {:>8} {:>12} {:>10} {:>10}",
+        "stage", "count", "total µs", "mean µs", "max µs"
+    );
+    for s in tracer.stage_summary() {
+        let mean = s.sum_us as f64 / s.count as f64;
+        println!(
+            "{:<14} {:>8} {:>12} {:>10.1} {:>10}",
+            s.kind.name(),
+            s.count,
+            s.sum_us,
+            mean,
+            s.max_us
+        );
+        BenchRecord::new("serve.stage_breakdown")
+            .str_field("backend", backend)
+            .str_field("scope", scope)
+            .str_field("stage", s.kind.name())
+            .num("count", s.count as f64)
+            .num("total_us", s.sum_us as f64)
+            .num("mean_us", mean)
+            .num("max_us", s.max_us as f64)
+            .emit();
+    }
+    Ok(())
 }
 
 /// Append the serve report to the `IVIT_BENCH_JSON` perf trajectory, so
@@ -308,6 +357,7 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
     // plan: through the persistent cache when --cache-dir is set. Only
     // this configuration's entry is re-planned; other persisted seeds
     // load index-only (and survive the persist below untouched).
+    let mut plan_cache_counts: Option<(u64, u64, u64)> = None;
     let plan: Box<dyn ExecutionPlan> = match &cache_dir {
         Some(dir) => {
             let mut cache = PlanCache::warm_start_filtered(dir, &registry, |s| s == &seed)?;
@@ -319,6 +369,7 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
                 "MISS — planned fresh"
             };
             println!("plan cache: {outcome} ({warm_loaded} plan(s) warm-loaded from {dir:?})");
+            plan_cache_counts = Some((cache.hits(), cache.misses(), cache.evictions()));
             // write the index now: the recipe is final, the process may
             // not shut down cleanly
             cache.persist(dir)?;
@@ -354,6 +405,11 @@ fn cmd_serve_attention(args: &Args, backend_name: &str, scope: &str) -> Result<(
         },
     );
     let h = coord.handle();
+    // surface the plan-cache outcome on the metrics endpoint / shutdown
+    // snapshot next to the live serving gauges
+    if let Some((hits, misses, evictions)) = plan_cache_counts {
+        h.metrics().set_plan_cache(hits, misses, evictions);
+    }
 
     // --listen: hand the coordinator to the wire front end and let
     // remote clients drive it instead of the synthetic loop below
@@ -454,6 +510,12 @@ fn cmd_request(args: &Args) -> Result<()> {
     let input_seed = args.usize("input-seed", 11)? as u64;
     let connections = args.usize("connections", 1)?;
     anyhow::ensure!(connections >= 1, "--connections must be at least 1");
+    let trace_path = args.flags.get("trace").map(PathBuf::from);
+    let latency_json = args.flags.get("latency-json").map(PathBuf::from);
+    if trace_path.is_some() {
+        ivit::obs::global().set_enabled(true);
+    }
+    let tracer = ivit::obs::global();
 
     let mut clients = Vec::with_capacity(connections);
     for _ in 0..connections {
@@ -469,6 +531,10 @@ fn cmd_request(args: &Args) -> Result<()> {
 
     let t0 = Instant::now();
     let mut responses = Vec::with_capacity(count);
+    // client-observed latency per request (µs): submit → reply in hand.
+    // In pipelined mode that includes time spent parked behind earlier
+    // waits — that IS what this client observed for the request.
+    let mut lat_us: Vec<f64> = Vec::with_capacity(count);
     let mut sheds = 0u32;
     if args.bool("pipelined") {
         // many in-flight streams per connection; replies may land in
@@ -478,19 +544,26 @@ fn cmd_request(args: &Args) -> Result<()> {
         let mut streams = Vec::with_capacity(count);
         for (i, x) in inputs.iter().enumerate() {
             let c = i % connections;
-            streams.push((c, clients[c].submit(&tenant, tokens, dim, x.clone())?));
+            streams.push((c, clients[c].submit(&tenant, tokens, dim, x.clone())?, Instant::now()));
         }
-        for (c, stream) in streams {
+        for (c, stream, submitted) in streams {
             match clients[c].wait(stream)? {
                 NetReply::Response(r) => responses.push(r),
                 NetReply::Error(e) => anyhow::bail!("stream {stream} failed: {e}"),
                 NetReply::Keepalive => anyhow::bail!("keepalive echo on a request stream"),
             }
+            let done = Instant::now();
+            tracer.record_interval(StageKind::Request, SpanId::NONE, submitted, done);
+            lat_us.push(done.duration_since(submitted).as_secs_f64() * 1e6);
         }
     } else {
         for (i, x) in inputs.iter().enumerate() {
             let client = &mut clients[i % connections];
+            let sent = Instant::now();
             let (r, retried) = client.request_with_retry(&tenant, tokens, dim, x, 32)?;
+            let done = Instant::now();
+            tracer.record_interval(StageKind::Request, SpanId::NONE, sent, done);
+            lat_us.push(done.duration_since(sent).as_secs_f64() * 1e6);
             sheds += retried;
             responses.push(r);
         }
@@ -504,6 +577,27 @@ fn cmd_request(args: &Args) -> Result<()> {
 
     if args.bool("verify-local") {
         verify_local(args, tokens, dim, &inputs, &responses)?;
+    }
+    // --latency-json PATH: one JSON-Lines row per request, appended so
+    // repeated invocations accumulate a client-side latency trajectory
+    // (the rows also reach IVIT_BENCH_JSON via emit when that is set)
+    if let Some(path) = &latency_json {
+        let pipelined = args.bool("pipelined");
+        for (i, us) in lat_us.iter().enumerate() {
+            let rec = BenchRecord::new("request.latency")
+                .str_field("tenant", &tenant)
+                .num("request", i as f64)
+                .num("latency_us", *us)
+                .num("connections", connections as f64)
+                .bool_field("pipelined", pipelined);
+            rec.append_to(path)
+                .with_context(|| format!("appending latency rows to {path:?}"))?;
+            rec.emit();
+        }
+        println!("latency rows: {count} appended to {path:?}");
+    }
+    if let Some(path) = &trace_path {
+        finish_trace(path, "client", "request")?;
     }
     Ok(())
 }

@@ -197,23 +197,58 @@ impl TenantMetrics {
         stats.entry(tenant.to_string()).or_default().shed += 1;
     }
 
-    /// Plaintext metrics lines, one block per tenant:
-    /// `tenant_*{tenant="name"} value`.
+    /// Prometheus-format per-tenant families, samples grouped per
+    /// family as the exposition format requires:
+    /// `ivit_tenant_*{tenant="name"} value`. Empty when no tenant has
+    /// been seen — the families appear once traffic does.
     pub fn render(&self) -> String {
+        use crate::coordinator::metrics::family;
         let stats = self.stats.lock().expect("tenant stats poisoned");
         let mut out = String::new();
+        if stats.is_empty() {
+            return out;
+        }
+        let esc = |t: &str| t.replace('"', "'");
+        let served: Vec<String> = stats
+            .iter()
+            .map(|(t, s)| format!("ivit_tenant_served_total{{tenant=\"{}\"}} {}", esc(t), s.served))
+            .collect();
+        family(
+            &mut out,
+            "ivit_tenant_served_total",
+            "Completed requests per tenant.",
+            "counter",
+            &served,
+        );
+        let shed: Vec<String> = stats
+            .iter()
+            .map(|(t, s)| format!("ivit_tenant_shed_total{{tenant=\"{}\"}} {}", esc(t), s.shed))
+            .collect();
+        family(
+            &mut out,
+            "ivit_tenant_shed_total",
+            "Requests shed per tenant (admission caps or queue-full).",
+            "counter",
+            &shed,
+        );
+        let mut lat = Vec::new();
         for (tenant, s) in stats.iter() {
-            let t = tenant.replace('"', "'");
-            out.push_str(&format!("tenant_served_total{{tenant=\"{t}\"}} {}\n", s.served));
-            out.push_str(&format!("tenant_shed_total{{tenant=\"{t}\"}} {}\n", s.shed));
+            let t = esc(tenant);
             for (q, v) in [
-                ("p50", s.latency.quantile_us(0.50)),
-                ("p95", s.latency.quantile_us(0.95)),
-                ("p99", s.latency.quantile_us(0.99)),
+                ("0.5", s.latency.quantile_us(0.50)),
+                ("0.95", s.latency.quantile_us(0.95)),
+                ("0.99", s.latency.quantile_us(0.99)),
             ] {
-                out.push_str(&format!("tenant_latency_us{{tenant=\"{t}\",q=\"{q}\"}} {v}\n"));
+                lat.push(format!("ivit_tenant_latency_us{{tenant=\"{t}\",quantile=\"{q}\"}} {v}"));
             }
         }
+        family(
+            &mut out,
+            "ivit_tenant_latency_us",
+            "Wire-observed latency quantiles per tenant (microseconds).",
+            "summary",
+            &lat,
+        );
         out
     }
 }
@@ -285,9 +320,13 @@ mod tests {
         tm.record_shed("alpha");
         tm.record("beta", Duration::from_millis(2));
         let text = tm.render();
-        assert!(text.contains("tenant_served_total{tenant=\"alpha\"} 2"), "{text}");
-        assert!(text.contains("tenant_shed_total{tenant=\"alpha\"} 1"), "{text}");
-        assert!(text.contains("tenant_latency_us{tenant=\"alpha\",q=\"p95\"}"), "{text}");
-        assert!(text.contains("tenant_served_total{tenant=\"beta\"} 1"), "{text}");
+        assert!(text.contains("ivit_tenant_served_total{tenant=\"alpha\"} 2"), "{text}");
+        assert!(text.contains("ivit_tenant_shed_total{tenant=\"alpha\"} 1"), "{text}");
+        let q95 = "ivit_tenant_latency_us{tenant=\"alpha\",quantile=\"0.95\"}";
+        assert!(text.contains(q95), "{text}");
+        assert!(text.contains("ivit_tenant_served_total{tenant=\"beta\"} 1"), "{text}");
+        assert!(text.contains("# HELP ivit_tenant_served_total "), "{text}");
+        assert!(text.contains("# TYPE ivit_tenant_latency_us summary"), "{text}");
+        assert!(TenantMetrics::new().render().is_empty(), "no tenants → no families");
     }
 }

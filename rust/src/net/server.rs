@@ -18,8 +18,8 @@
 //!     channel. A slow consumer backpressures only its own connection;
 //!     once the socket errors the writer drains and discards so the
 //!     other threads never wedge on a dead peer.
-//! * **metrics** (optional) — plaintext endpoint: accept, dump
-//!   [`Snapshot::render`] plus admission/tenant counters, close.
+//! * **metrics** (optional) — Prometheus text-format endpoint: accept,
+//!   dump [`Snapshot::render`] plus admission/tenant counters, close.
 //!
 //! Liveness under shutdown needs no force-close: reads carry a 100 ms
 //! timeout (a stop-flag poll interval via [`frame::read_frame`]'s idle
@@ -388,6 +388,16 @@ fn handle_request(
             return;
         }
     };
+    // Root span for this request: minted here, threaded through the
+    // coordinator via submit_with_span, closed by the batcher worker at
+    // write-back. The admit interval (validate → admission → submit)
+    // hangs off it. NONE end-to-end when tracing is off.
+    let tracer = crate::obs::global();
+    let (root, admit_t0) = if tracer.enabled() {
+        (tracer.alloc_id(), Some(Instant::now()))
+    } else {
+        (crate::obs::SpanId::NONE, None)
+    };
     // validate BEFORE Handle::submit — its payload-size check is an
     // assert, and a malformed client must never panic the server
     if (req.rows, req.cols) != shared.in_shape {
@@ -407,10 +417,13 @@ fn handle_request(
             return;
         }
     };
-    match handle.submit(req.data) {
+    match handle.submit_with_span(req.data, root) {
         Ok(rx) => {
             let item = Pending { stream, tenant: req.tenant, rx, permit, t0: Instant::now() };
             pending.lock().expect("pending ledger poisoned").push(item);
+            if let Some(t0) = admit_t0 {
+                tracer.record_interval(crate::obs::StageKind::Admit, root, t0, Instant::now());
+            }
         }
         Err(SubmitError::QueueFull) => {
             // admission passed but the batcher queue is the tighter
@@ -520,18 +533,49 @@ fn metrics_loop(shared: &Arc<Shared>, listener: NetListener) {
     }
 }
 
-/// The plaintext metrics body: coordinator snapshot, wire counters,
-/// then the per-tenant block.
+/// The Prometheus-format metrics body: coordinator snapshot, wire
+/// counters, then the per-tenant block.
 fn render_metrics(shared: &Shared) -> String {
+    use crate::coordinator::metrics::family;
     let mut out = shared.metrics.snapshot().render();
     let (inflight, active) = shared.admission.inflight();
-    out.push_str(&format!("net_served_total {}\n", shared.served.load(Ordering::Relaxed)));
-    out.push_str(&format!("net_admitted_inflight {inflight}\n"));
-    out.push_str(&format!("net_tenants_active {active}\n"));
+    family(
+        &mut out,
+        "ivit_net_served_total",
+        "Admitted requests whose reply frame was queued.",
+        "counter",
+        &[format!("ivit_net_served_total {}", shared.served.load(Ordering::Relaxed))],
+    );
+    family(
+        &mut out,
+        "ivit_net_admitted_inflight",
+        "Requests holding an admission permit right now.",
+        "gauge",
+        &[format!("ivit_net_admitted_inflight {inflight}")],
+    );
+    family(
+        &mut out,
+        "ivit_net_tenants_active",
+        "Distinct tenants with in-flight requests.",
+        "gauge",
+        &[format!("ivit_net_tenants_active {active}")],
+    );
     let shed_t = shared.admission.shed_tenant.load(Ordering::Relaxed);
     let shed_g = shared.admission.shed_global.load(Ordering::Relaxed);
-    out.push_str(&format!("net_shed_tenant_total {shed_t}\n"));
-    out.push_str(&format!("net_shed_global_total {shed_g}\n"));
+    family(
+        &mut out,
+        "ivit_net_shed_tenant_total",
+        "Requests shed by the per-tenant in-flight cap.",
+        "counter",
+        &[format!("ivit_net_shed_tenant_total {shed_t}")],
+    );
+    family(
+        &mut out,
+        "ivit_net_shed_global_total",
+        "Requests shed by the global in-flight cap.",
+        "counter",
+        &[format!("ivit_net_shed_global_total {shed_g}")],
+    );
     out.push_str(&shared.tenants.render());
     out
 }

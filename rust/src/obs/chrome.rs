@@ -1,0 +1,115 @@
+//! Chrome trace-event export: render drained [`SpanRecord`]s as the
+//! JSON object format `chrome://tracing` and Perfetto load directly.
+//!
+//! Every span becomes one complete event (`"ph":"X"`) with µs
+//! timestamps relative to the tracer epoch, the tracer-assigned thread
+//! lane as `tid`, and the span/parent ids carried in `args` so the
+//! request hierarchy survives even across thread lanes. The output is
+//! plain ASCII JSON parseable by [`crate::util::json::Json`] — the
+//! trace smoke round-trips it.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::tracer::SpanRecord;
+
+/// Render spans as a Chrome trace-event JSON object
+/// (`{"traceEvents":[...],"displayTimeUnit":"ms"}`).
+pub fn chrome_trace(spans: &[SpanRecord]) -> String {
+    let mut out = String::with_capacity(64 + spans.len() * 128);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"id\":{},\"parent\":{}}}}}",
+            s.kind.name(),
+            s.kind.category(),
+            s.start_us,
+            s.dur_us,
+            s.tid,
+            s.id.raw(),
+            s.parent.raw(),
+        ));
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Render and write a trace file in one step (the `--trace <path>`
+/// exit path of `ivit serve` / `ivit request`).
+pub fn write_chrome_trace(path: &Path, spans: &[SpanRecord]) -> Result<()> {
+    std::fs::write(path, chrome_trace(spans))
+        .with_context(|| format!("writing Chrome trace to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::{SpanId, StageKind, Tracer};
+    use super::*;
+    use crate::util::json::Json;
+    use std::time::{Duration, Instant};
+
+    fn sample_spans() -> Vec<SpanRecord> {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        let t0 = Instant::now();
+        let root = t.record_interval(
+            StageKind::Request,
+            SpanId::NONE,
+            t0,
+            t0 + Duration::from_micros(500),
+        );
+        t.record_interval(StageKind::Queue, root, t0, t0 + Duration::from_micros(120));
+        t.drain()
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_complete_events() {
+        let spans = sample_spans();
+        let rendered = chrome_trace(&spans);
+        let json = Json::parse(&rendered).expect("chrome trace parses");
+        let events = json.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            assert!(ev.get("args").and_then(|a| a.get("id")).is_some());
+        }
+        // parentage survives the round trip
+        let queue = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("queue.wait"))
+            .expect("queue span present");
+        let request = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("request"))
+            .expect("request span present");
+        assert_eq!(
+            queue.path("args.parent").and_then(Json::as_f64),
+            request.path("args.id").and_then(Json::as_f64),
+        );
+        assert_eq!(request.get("cat").and_then(Json::as_str), Some("pipeline"));
+    }
+
+    #[test]
+    fn empty_trace_still_parses() {
+        let rendered = chrome_trace(&[]);
+        let json = Json::parse(&rendered).expect("empty trace parses");
+        assert_eq!(json.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
+    }
+
+    #[test]
+    fn write_chrome_trace_creates_the_file() {
+        let path = std::env::temp_dir().join("ivit_obs_chrome_test.json");
+        let _ = std::fs::remove_file(&path);
+        write_chrome_trace(&path, &sample_spans()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&body).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,34 @@
+//! Observability substrate: end-to-end span tracing and per-stage
+//! telemetry for the serving pipeline.
+//!
+//! The paper's argument is about *where cycles and energy go* once
+//! dequantization is delayed past the matmul — so the serving stack
+//! must be able to attribute wall-time below the request boundary:
+//! admit → queue wait → batch staging/quantize → plan submit →
+//! individual kernel stages (`gemm.requant`, `gelu.lut`, …) → sim-mt
+//! shards → completion write-back.
+//!
+//! * [`tracer`] — the [`Tracer`]: atomic enable flag (disabled path is
+//!   one relaxed load, no clock/alloc/lock), per-thread span buffers,
+//!   monotonic `Instant` timestamps, explicit parent/child [`SpanId`]s
+//!   with RAII same-thread nesting, and lock-free per-[`StageKind`]
+//!   aggregates feeding the metrics endpoint.
+//! * [`chrome`] — Chrome trace-event JSON export (`ivit serve --trace
+//!   <path>`, `ivit request --trace <path>`) for `chrome://tracing` /
+//!   Perfetto.
+//!
+//! Tracing is observational only: every parity suite runs with it
+//! enabled and outputs stay bit-identical (`tests/trace_contract.rs`,
+//! `make trace-smoke`).
+
+pub mod chrome;
+pub mod tracer;
+
+pub use chrome::{chrome_trace, write_chrome_trace};
+pub use tracer::{Span, SpanId, SpanRecord, StageKind, StageStat, Tracer};
+
+/// Shorthand for [`Tracer::global`] at the call sites threaded through
+/// the pipeline.
+pub fn global() -> &'static Tracer {
+    Tracer::global()
+}

@@ -1,0 +1,632 @@
+//! The span tracer: low-overhead, explicitly-parented interval records
+//! over a monotonic clock.
+//!
+//! Design constraints (the whole point of this layer living below the
+//! serving hot path):
+//!
+//! * **Disabled is free.** Every recording entry point starts with one
+//!   relaxed atomic load; when the tracer is off, no clock is read, no
+//!   allocation happens, and no lock is taken. The parity suites run
+//!   with tracing off and must see bit-identical outputs *and*
+//!   unchanged timings.
+//! * **Enabled stays cheap.** Spans land in per-thread buffers: the
+//!   owning thread pushes through its own buffer's mutex, which is
+//!   uncontended except during a [`Tracer::drain`] — threads never
+//!   serialize against each other on the record path. Per-stage
+//!   aggregates are plain relaxed atomics.
+//! * **Timestamps are monotonic.** Everything is [`Instant`]-based,
+//!   exported as microseconds since the tracer's epoch, so spans
+//!   recorded sequentially on one thread never overlap (floor(a) +
+//!   floor(b) ≤ floor(a+b) keeps that true after µs truncation —
+//!   pinned by `tests/trace_contract.rs`).
+//! * **Parentage is explicit.** Every record carries its own
+//!   [`SpanId`] and its parent's. Same-thread nesting is implicit via
+//!   a thread-local parent stack (RAII [`Span`] guards); cross-thread
+//!   edges (a request admitted on the reader thread, executed on the
+//!   worker) pass ids by value and record with
+//!   [`Tracer::record_span`].
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread;
+use std::time::Instant;
+
+/// Identifier of one recorded span. `SpanId::NONE` (raw 0) marks "no
+/// parent" and is what the disabled tracer hands out everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpanId(u64);
+
+impl SpanId {
+    pub const NONE: SpanId = SpanId(0);
+
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// The fixed vocabulary of span kinds — request-lifecycle phases plus
+/// one kind per compiled kernel [`crate::kernel::Stage`] opcode. A
+/// closed enum (instead of free-form strings) is what makes the
+/// per-stage aggregate table a flat array of atomics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Whole request: enqueue → completion write-back.
+    Request,
+    /// Net reader: decode + admission + submit.
+    Admit,
+    /// Queue wait: enqueue → dequeue by the batcher.
+    Queue,
+    /// Batch staging (zero + copy rows into the flat payload).
+    BatchStage,
+    /// Input quantization of the staged batch.
+    Quantize,
+    /// `ExecutionPlan::submit` (synchronous plans execute inside it).
+    Submit,
+    /// submit → `JobState::Done` at poll, per batch.
+    Exec,
+    /// One sim-mt pool shard (front / head / block row).
+    Shard,
+    /// Completion write-back to the caller / wire.
+    Respond,
+    /// Kernel stage `gemm.scale`.
+    GemmScale,
+    /// Kernel stage `gemm.requant`.
+    GemmRequant,
+    /// Kernel stage `ln.quant`.
+    LnQuant,
+    /// Kernel stage `dequant`.
+    Dequant,
+    /// Kernel stage `quant`.
+    Quant,
+    /// Kernel stage `gelu.lut`.
+    GeluLut,
+    /// Kernel stage `attn.head`.
+    AttnHead,
+    /// Kernel stage `residual`.
+    Residual,
+}
+
+impl StageKind {
+    /// Every kind, in aggregate-table order.
+    pub const ALL: [StageKind; 17] = [
+        StageKind::Request,
+        StageKind::Admit,
+        StageKind::Queue,
+        StageKind::BatchStage,
+        StageKind::Quantize,
+        StageKind::Submit,
+        StageKind::Exec,
+        StageKind::Shard,
+        StageKind::Respond,
+        StageKind::GemmScale,
+        StageKind::GemmRequant,
+        StageKind::LnQuant,
+        StageKind::Dequant,
+        StageKind::Quant,
+        StageKind::GeluLut,
+        StageKind::AttnHead,
+        StageKind::Residual,
+    ];
+
+    /// The kernel-program subset (kinds with a `Stage::opcode`), used
+    /// by the trace smoke to demand ≥ 1 span per executed stage kind.
+    pub const KERNEL: [StageKind; 8] = [
+        StageKind::GemmScale,
+        StageKind::GemmRequant,
+        StageKind::LnQuant,
+        StageKind::Dequant,
+        StageKind::Quant,
+        StageKind::GeluLut,
+        StageKind::AttnHead,
+        StageKind::Residual,
+    ];
+
+    pub(crate) fn idx(self) -> usize {
+        match self {
+            StageKind::Request => 0,
+            StageKind::Admit => 1,
+            StageKind::Queue => 2,
+            StageKind::BatchStage => 3,
+            StageKind::Quantize => 4,
+            StageKind::Submit => 5,
+            StageKind::Exec => 6,
+            StageKind::Shard => 7,
+            StageKind::Respond => 8,
+            StageKind::GemmScale => 9,
+            StageKind::GemmRequant => 10,
+            StageKind::LnQuant => 11,
+            StageKind::Dequant => 12,
+            StageKind::Quant => 13,
+            StageKind::GeluLut => 14,
+            StageKind::AttnHead => 15,
+            StageKind::Residual => 16,
+        }
+    }
+
+    /// Stable display name. Kernel kinds reuse the disassembly opcode
+    /// mnemonics exactly, so traces and `KernelProgram` disassembly
+    /// speak the same vocabulary.
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Request => "request",
+            StageKind::Admit => "net.admit",
+            StageKind::Queue => "queue.wait",
+            StageKind::BatchStage => "batch.stage",
+            StageKind::Quantize => "batch.quantize",
+            StageKind::Submit => "plan.submit",
+            StageKind::Exec => "plan.exec",
+            StageKind::Shard => "shard",
+            StageKind::Respond => "respond",
+            StageKind::GemmScale => "gemm.scale",
+            StageKind::GemmRequant => "gemm.requant",
+            StageKind::LnQuant => "ln.quant",
+            StageKind::Dequant => "dequant",
+            StageKind::Quant => "quant",
+            StageKind::GeluLut => "gelu.lut",
+            StageKind::AttnHead => "attn.head",
+            StageKind::Residual => "residual",
+        }
+    }
+
+    /// Chrome-trace category: pipeline phase vs kernel stage.
+    pub fn category(self) -> &'static str {
+        match self {
+            StageKind::Request
+            | StageKind::Admit
+            | StageKind::Queue
+            | StageKind::BatchStage
+            | StageKind::Quantize
+            | StageKind::Submit
+            | StageKind::Exec
+            | StageKind::Shard
+            | StageKind::Respond => "pipeline",
+            _ => "kernel",
+        }
+    }
+}
+
+/// One finished span. Timestamps are µs since the owning tracer's
+/// epoch; `tid` is the tracer-assigned recording-thread lane.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: SpanId,
+    pub parent: SpanId,
+    pub kind: StageKind,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+}
+
+/// Aggregate of every span of one kind (regardless of thread), read
+/// without draining the buffers — this is what feeds the metrics
+/// endpoint while a serve is still running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageStat {
+    pub kind: StageKind,
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+/// Per-kind aggregate cell. Relaxed atomics: the totals are exact
+/// (fetch_add / fetch_max), only cross-cell consistency is best-effort.
+struct StageCell {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl StageCell {
+    fn new() -> StageCell {
+        StageCell {
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One thread's span buffer. Only the owning thread pushes; `drain`
+/// (any thread) swaps the vector out. The mutex is therefore
+/// uncontended on the record path.
+struct ThreadBuf {
+    tid: u64,
+    owner: thread::ThreadId,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+struct ThreadSlot {
+    /// Which tracer the cached buffer belongs to.
+    token: u64,
+    buf: Option<Arc<ThreadBuf>>,
+    /// Ambient parent stack for RAII [`Span`] nesting.
+    stack: Vec<SpanId>,
+}
+
+thread_local! {
+    static SLOT: RefCell<ThreadSlot> =
+        const { RefCell::new(ThreadSlot { token: 0, buf: None, stack: Vec::new() }) };
+}
+
+/// Distinguishes tracer instances in the thread-local cache (tests
+/// build isolated tracers next to the process-global one).
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// The tracer. One process-global instance ([`Tracer::global`]) serves
+/// the CLI paths; tests may build isolated instances.
+pub struct Tracer {
+    enabled: AtomicBool,
+    token: u64,
+    epoch: Instant,
+    next_id: AtomicU64,
+    threads: Mutex<Vec<Arc<ThreadBuf>>>,
+    agg: [StageCell; StageKind::ALL.len()],
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// A fresh, **disabled** tracer.
+    pub fn new() -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            token: NEXT_TOKEN.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            threads: Mutex::new(Vec::new()),
+            agg: std::array::from_fn(|_| StageCell::new()),
+        }
+    }
+
+    /// The process-global tracer (disabled until `--trace` or a test
+    /// turns it on). Mirrors [`crate::backend::PlanCache::global`].
+    pub fn global() -> &'static Tracer {
+        static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+        GLOBAL.get_or_init(Tracer::new)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Mint a span id without recording anything yet — for spans whose
+    /// start and end live on different threads (request roots). Returns
+    /// [`SpanId::NONE`] when disabled, which every later recording call
+    /// treats as "skip".
+    #[inline]
+    pub fn alloc_id(&self) -> SpanId {
+        if !self.enabled() {
+            return SpanId::NONE;
+        }
+        SpanId(self.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// The innermost open RAII span on this thread ([`SpanId::NONE`]
+    /// outside any).
+    pub fn current_parent(&self) -> SpanId {
+        SLOT.with(|s| s.borrow().stack.last().copied().unwrap_or(SpanId::NONE))
+    }
+
+    /// Open a RAII span under the ambient per-thread parent. When the
+    /// tracer is disabled this is one relaxed load and a small struct —
+    /// no clock read, no allocation, no lock.
+    #[inline]
+    #[must_use = "the span records its duration when dropped"]
+    pub fn span(&self, kind: StageKind) -> Span<'_> {
+        if !self.enabled() {
+            return self.noop_span(kind);
+        }
+        self.span_with_parent(kind, self.current_parent())
+    }
+
+    /// Open a RAII span under an explicit parent (cross-thread edges:
+    /// the caller got `parent` by value, not from this thread's stack).
+    #[must_use = "the span records its duration when dropped"]
+    pub fn span_with_parent(&self, kind: StageKind, parent: SpanId) -> Span<'_> {
+        if !self.enabled() {
+            return self.noop_span(kind);
+        }
+        let id = SpanId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        SLOT.with(|s| s.borrow_mut().stack.push(id));
+        Span { tracer: self, id, parent, kind, start: Instant::now() }
+    }
+
+    /// A span that records nothing on drop. `start` copies the epoch —
+    /// no clock read on the disabled path.
+    fn noop_span(&self, kind: StageKind) -> Span<'_> {
+        Span { tracer: self, id: SpanId::NONE, parent: SpanId::NONE, kind, start: self.epoch }
+    }
+
+    /// Record a span whose id was minted earlier with [`Tracer::alloc_id`]
+    /// (no-op for `SpanId::NONE`, so the disabled-at-mint path stays free).
+    pub fn record_span(
+        &self,
+        kind: StageKind,
+        id: SpanId,
+        parent: SpanId,
+        start: Instant,
+        end: Instant,
+    ) {
+        if id.is_none() || !self.enabled() {
+            return;
+        }
+        self.record_raw(kind, id, parent, start, end);
+    }
+
+    /// Mint + record a closed interval in one call (queue waits and
+    /// other measured-after-the-fact phases). Returns the new id so the
+    /// interval can parent later spans.
+    pub fn record_interval(
+        &self,
+        kind: StageKind,
+        parent: SpanId,
+        start: Instant,
+        end: Instant,
+    ) -> SpanId {
+        if !self.enabled() {
+            return SpanId::NONE;
+        }
+        let id = SpanId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.record_raw(kind, id, parent, start, end);
+        id
+    }
+
+    fn record_raw(
+        &self,
+        kind: StageKind,
+        id: SpanId,
+        parent: SpanId,
+        start: Instant,
+        end: Instant,
+    ) {
+        let since_epoch = start.checked_duration_since(self.epoch).unwrap_or_default();
+        let start_us = since_epoch.as_micros() as u64;
+        let dur_us = end.checked_duration_since(start).unwrap_or_default().as_micros() as u64;
+        let cell = &self.agg[kind.idx()];
+        cell.count.fetch_add(1, Ordering::Relaxed);
+        cell.sum_us.fetch_add(dur_us, Ordering::Relaxed);
+        cell.max_us.fetch_max(dur_us, Ordering::Relaxed);
+        let rec = |tid: u64| SpanRecord { id, parent, kind, start_us, dur_us, tid };
+        SLOT.with(|s| {
+            let mut slot = s.borrow_mut();
+            if slot.token != self.token || slot.buf.is_none() {
+                slot.buf = Some(self.register_thread());
+                slot.token = self.token;
+            }
+            let buf = slot.buf.as_ref().expect("thread buffer just installed");
+            buf.spans.lock().expect("span buffer poisoned").push(rec(buf.tid));
+        });
+    }
+
+    fn register_thread(&self) -> Arc<ThreadBuf> {
+        let me = thread::current().id();
+        let mut threads = self.threads.lock().expect("tracer thread registry poisoned");
+        if let Some(b) = threads.iter().find(|b| b.owner == me) {
+            return Arc::clone(b);
+        }
+        let buf = Arc::new(ThreadBuf {
+            tid: threads.len() as u64 + 1,
+            owner: me,
+            spans: Mutex::new(Vec::new()),
+        });
+        threads.push(Arc::clone(&buf));
+        buf
+    }
+
+    /// Take every recorded span (all threads), sorted by start time.
+    /// The buffers are left empty; aggregates are *not* reset (use
+    /// [`Tracer::reset`] between independent measurements).
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let threads = self.threads.lock().expect("tracer thread registry poisoned");
+        let mut out = Vec::new();
+        for b in threads.iter() {
+            out.append(&mut b.spans.lock().expect("span buffer poisoned"));
+        }
+        out.sort_by_key(|r| (r.start_us, r.id.raw()));
+        out
+    }
+
+    /// Per-kind aggregates, kinds with at least one span only.
+    pub fn stage_summary(&self) -> Vec<StageStat> {
+        StageKind::ALL
+            .iter()
+            .filter_map(|&kind| {
+                let cell = &self.agg[kind.idx()];
+                let count = cell.count.load(Ordering::Relaxed);
+                if count == 0 {
+                    return None;
+                }
+                Some(StageStat {
+                    kind,
+                    count,
+                    sum_us: cell.sum_us.load(Ordering::Relaxed),
+                    max_us: cell.max_us.load(Ordering::Relaxed),
+                })
+            })
+            .collect()
+    }
+
+    /// Drop all buffered spans and zero the aggregates (tests and the
+    /// bench overhead arm isolate measurements with this).
+    pub fn reset(&self) {
+        let _ = self.drain();
+        for cell in &self.agg {
+            cell.count.store(0, Ordering::Relaxed);
+            cell.sum_us.store(0, Ordering::Relaxed);
+            cell.max_us.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// RAII span guard: records `[construction, drop]` as one span and
+/// keeps the per-thread parent stack so spans opened within its extent
+/// (on the same thread) become its children.
+pub struct Span<'a> {
+    tracer: &'a Tracer,
+    id: SpanId,
+    parent: SpanId,
+    kind: StageKind,
+    start: Instant,
+}
+
+impl Span<'_> {
+    /// This span's id ([`SpanId::NONE`] when the tracer was disabled),
+    /// for handing to cross-thread children.
+    pub fn id(&self) -> SpanId {
+        self.id
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if self.id.is_none() {
+            return;
+        }
+        let end = Instant::now();
+        SLOT.with(|s| {
+            let mut slot = s.borrow_mut();
+            // pop this span (it is the innermost unless a child guard
+            // leaked past its parent — then repair by truncating)
+            if let Some(pos) = slot.stack.iter().rposition(|&x| x == self.id) {
+                slot.stack.truncate(pos);
+            }
+        });
+        self.tracer.record_raw(self.kind, self.id, self.parent, self.start, end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_hands_out_none() {
+        let t = Tracer::new();
+        assert!(!t.enabled());
+        assert!(t.alloc_id().is_none());
+        {
+            let s = t.span(StageKind::GemmRequant);
+            assert!(s.id().is_none());
+            let inner = t.span(StageKind::Quant);
+            assert!(inner.id().is_none());
+        }
+        let now = Instant::now();
+        t.record_span(StageKind::Request, SpanId::NONE, SpanId::NONE, now, now);
+        assert_eq!(t.record_interval(StageKind::Queue, SpanId::NONE, now, now), SpanId::NONE);
+        assert!(t.drain().is_empty());
+        assert!(t.stage_summary().is_empty());
+    }
+
+    #[test]
+    fn raii_spans_nest_via_the_ambient_parent_stack() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        let (outer_id, inner_id, sibling_id);
+        {
+            let outer = t.span(StageKind::Submit);
+            outer_id = outer.id();
+            {
+                let inner = t.span(StageKind::GemmRequant);
+                inner_id = inner.id();
+            }
+            {
+                let sib = t.span(StageKind::Residual);
+                sibling_id = sib.id();
+            }
+        }
+        let spans = t.drain();
+        assert_eq!(spans.len(), 3);
+        let find = |id: SpanId| spans.iter().find(|r| r.id == id).expect("span recorded");
+        assert_eq!(find(outer_id).parent, SpanId::NONE);
+        assert_eq!(find(inner_id).parent, outer_id);
+        assert_eq!(find(sibling_id).parent, outer_id);
+        // ids are unique and non-zero
+        assert!(!outer_id.is_none() && inner_id != sibling_id);
+    }
+
+    #[test]
+    fn cross_thread_record_span_keeps_the_minted_parent() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        let root = t.alloc_id();
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_micros(250);
+        t.record_interval(StageKind::Queue, root, t0, t1);
+        t.record_span(StageKind::Request, root, SpanId::NONE, t0, t1);
+        let spans = t.drain();
+        assert_eq!(spans.len(), 2);
+        let queue = spans.iter().find(|r| r.kind == StageKind::Queue).unwrap();
+        let req = spans.iter().find(|r| r.kind == StageKind::Request).unwrap();
+        assert_eq!(queue.parent, root);
+        assert_eq!(req.id, root);
+        assert!(req.dur_us >= 200, "interval duration survived: {}", req.dur_us);
+    }
+
+    #[test]
+    fn stage_summary_aggregates_count_sum_and_max() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        let t0 = Instant::now();
+        t.record_interval(StageKind::Shard, SpanId::NONE, t0, t0 + Duration::from_micros(100));
+        t.record_interval(StageKind::Shard, SpanId::NONE, t0, t0 + Duration::from_micros(300));
+        let summary = t.stage_summary();
+        assert_eq!(summary.len(), 1);
+        let s = summary[0];
+        assert_eq!((s.kind, s.count), (StageKind::Shard, 2));
+        assert!(s.sum_us >= 398 && s.sum_us <= 400, "sum {}", s.sum_us);
+        assert!(s.max_us >= 299, "max {}", s.max_us);
+        t.reset();
+        assert!(t.stage_summary().is_empty() && t.drain().is_empty());
+    }
+
+    #[test]
+    fn spans_from_other_threads_land_in_the_same_drain() {
+        let t = std::sync::Arc::new(Tracer::new());
+        t.set_enabled(true);
+        {
+            let _here = t.span(StageKind::Submit);
+        }
+        let t2 = std::sync::Arc::clone(&t);
+        std::thread::spawn(move || {
+            let _there = t2.span(StageKind::Shard);
+        })
+        .join()
+        .unwrap();
+        let spans = t.drain();
+        assert_eq!(spans.len(), 2);
+        let tids: Vec<u64> = spans.iter().map(|r| r.tid).collect();
+        assert_ne!(tids[0], tids[1], "each thread got its own lane: {tids:?}");
+    }
+
+    #[test]
+    fn stage_kind_names_cover_all_and_match_kernel_opcodes() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in StageKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate name {}", k.name());
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(StageKind::ALL[StageKind::GemmRequant.idx()], StageKind::GemmRequant);
+        // the kernel subset mirrors Stage::opcode() mnemonics
+        for k in StageKind::KERNEL {
+            assert_eq!(k.category(), "kernel");
+        }
+        assert_eq!(StageKind::GemmScale.name(), "gemm.scale");
+        assert_eq!(StageKind::LnQuant.name(), "ln.quant");
+        assert_eq!(StageKind::AttnHead.name(), "attn.head");
+    }
+}

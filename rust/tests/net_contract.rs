@@ -8,8 +8,8 @@
 //! * a client disconnect mid-job never abandons in-flight work;
 //! * the per-tenant and global admission caps shed with a retry-after
 //!   and count into the coordinator metrics and tenant stats;
-//! * the plaintext metrics endpoint dumps the shared snapshot render
-//!   plus the wire counters.
+//! * the Prometheus-format metrics endpoint dumps the shared snapshot
+//!   render plus the wire counters.
 
 use std::io::{Read as _, Write as _};
 use std::time::{Duration, Instant};
@@ -328,8 +328,9 @@ fn per_tenant_cap_sheds_with_retry_after_and_counts_it() {
     assert_eq!(report.served, 2);
     assert_eq!(report.shed, 1);
     assert_eq!(report.snapshot.shed, 1, "the shed count reaches the coordinator metrics");
-    assert!(report.tenants.contains("tenant_shed_total{tenant=\"a\"} 1"), "{}", report.tenants);
-    assert!(report.tenants.contains("tenant_served_total{tenant=\"b\"} 1"), "{}", report.tenants);
+    let t = &report.tenants;
+    assert!(t.contains("ivit_tenant_shed_total{tenant=\"a\"} 1"), "{t}");
+    assert!(t.contains("ivit_tenant_served_total{tenant=\"b\"} 1"), "{t}");
     coord.shutdown();
 }
 
@@ -361,16 +362,17 @@ fn global_cap_sheds_and_the_metrics_endpoint_reports_it() {
         std::thread::sleep(Duration::from_millis(2));
     }
 
-    // the plaintext endpoint dumps the shared snapshot render plus the
-    // wire counters, then closes
+    // the Prometheus-format endpoint dumps the shared snapshot render
+    // plus the wire counters, then closes
     let mut ep = NetStream::connect(&metrics_at).unwrap();
     let mut dump = String::new();
     ep.read_to_string(&mut dump).unwrap();
-    assert!(dump.contains("requests_total"), "{dump}");
-    assert!(dump.contains("latency_us{q=\"p99\"}"), "{dump}");
-    assert!(dump.contains("net_served_total 1"), "{dump}");
-    assert!(dump.contains("net_shed_global_total 1"), "{dump}");
-    assert!(dump.contains("tenant_served_total{tenant=\"a\"} 1"), "{dump}");
+    assert!(dump.contains("ivit_requests_total"), "{dump}");
+    assert!(dump.contains("ivit_latency_us{quantile=\"0.99\"}"), "{dump}");
+    assert!(dump.contains("ivit_net_served_total 1"), "{dump}");
+    assert!(dump.contains("ivit_net_shed_global_total 1"), "{dump}");
+    assert!(dump.contains("ivit_tenant_served_total{tenant=\"a\"} 1"), "{dump}");
+    assert!(dump.contains("# TYPE ivit_net_served_total counter"), "{dump}");
     drop(client);
     server.shutdown();
     let _ = server.wait().unwrap();

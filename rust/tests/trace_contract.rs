@@ -1,0 +1,259 @@
+//! Observability contract for the tracing subsystem (`rust/src/obs/`):
+//!
+//! * RAII spans nest by thread-local parentage; cross-thread records
+//!   keep explicitly minted parents;
+//! * the kernel-stage spans of one `KernelProgram::execute` are
+//!   monotonic and non-overlapping — one span per compiled stage, in
+//!   program order;
+//! * a disabled tracer records nothing AND execution output is
+//!   bit-identical with tracing on vs off;
+//! * the Chrome trace exported from a real block-scope serve (jit plan
+//!   through the coordinator) is schema-valid and carries the
+//!   request → queue.wait / respond and plan.submit → kernel-stage
+//!   hierarchy.
+//!
+//! The tests share the process-global tracer (the serving code paths
+//! record into it), so every test that enables it holds one lock.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use ivit::backend::{Backend, BitProfile, JitBackend, PlanOptions, PlanScope};
+use ivit::block::EncoderBlock;
+use ivit::coordinator::{AttnBatchExecutor, BatcherConfig, Coordinator};
+use ivit::kernel::lower_block;
+use ivit::obs::{self, chrome_trace, SpanId, SpanRecord, StageKind, Tracer};
+use ivit::quant::QTensor;
+use ivit::util::{Json, XorShift};
+
+/// Serializes every test that touches the process-global tracer.
+/// Poison-tolerant: one failing test must not cascade into the rest.
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_block(profile: BitProfile) -> EncoderBlock {
+    EncoderBlock::synthetic(16, 32, 2, profile, 33).expect("synthetic block")
+}
+
+fn block_input(block: &EncoderBlock, tokens: usize, seed: u64) -> QTensor {
+    let x: Vec<f32> = XorShift::new(seed).normal_vec(tokens * block.d());
+    QTensor::quantize_f32(&x, tokens, block.d(), block.input_spec()).expect("quantize input")
+}
+
+#[test]
+fn raii_spans_nest_and_cross_thread_records_keep_minted_parents() {
+    // isolated tracer: parentage semantics need no global state
+    let t = Tracer::new();
+    t.set_enabled(true);
+    let root = t.alloc_id();
+    assert!(!root.is_none(), "enabled tracer must mint real ids");
+    {
+        let outer = t.span_with_parent(StageKind::Submit, root);
+        let outer_id = outer.id();
+        {
+            let inner = t.span(StageKind::GemmRequant);
+            assert!(!inner.id().is_none());
+        }
+        // sibling after the first child closed — still under outer
+        let _sibling = t.span(StageKind::Residual);
+        assert!(!outer_id.is_none());
+    }
+    // a worker thread records against the minted root by value — the
+    // ambient TLS parent stack of the spawning thread must not leak in
+    let eid = t.alloc_id();
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(1));
+            t.record_span(StageKind::Exec, eid, root, start, std::time::Instant::now());
+        });
+    });
+    t.set_enabled(false);
+
+    let spans = t.drain();
+    let by_kind = |k: StageKind| -> Vec<&SpanRecord> {
+        spans.iter().filter(|s| s.kind == k).collect()
+    };
+    let outer = by_kind(StageKind::Submit);
+    assert_eq!(outer.len(), 1);
+    assert_eq!(outer[0].parent, root, "explicit parent survives");
+    let inner = by_kind(StageKind::GemmRequant);
+    assert_eq!(inner.len(), 1);
+    assert_eq!(inner[0].parent, outer[0].id, "RAII nesting parents under the open span");
+    let sibling = by_kind(StageKind::Residual);
+    assert_eq!(sibling[0].parent, outer[0].id, "sibling re-parents under outer, not inner");
+    let exec = by_kind(StageKind::Exec);
+    assert_eq!(exec[0].parent, root, "cross-thread record keeps the minted parent");
+    assert!(exec[0].dur_us >= 1_000, "the 1 ms sleep must be visible in µs");
+    // ids are unique
+    let mut ids: Vec<u64> = spans.iter().map(|s| s.id.raw()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), spans.len(), "span ids must be unique");
+}
+
+#[test]
+fn kernel_stage_spans_are_monotonic_and_non_overlapping() {
+    let _g = tracer_lock();
+    let tracer = obs::global();
+    tracer.reset();
+
+    let block = small_block(BitProfile::uniform(4));
+    let prog = lower_block(&block).expect("lower block");
+    let qx = block_input(&block, 16, 5);
+
+    tracer.set_enabled(true);
+    let _ = prog.execute(&qx).expect("traced execute");
+    tracer.set_enabled(false);
+
+    let spans = tracer.drain();
+    let kernel: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.kind.category() == "kernel").collect();
+    assert_eq!(
+        kernel.len(),
+        prog.stages.len(),
+        "exactly one span per compiled stage"
+    );
+    // all on the executing thread, in program order (drain sorts by
+    // start time), strictly non-overlapping after µs truncation
+    for pair in kernel.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        assert_eq!(a.tid, b.tid, "kernel stages run on one thread");
+        assert!(b.start_us >= a.start_us, "stage starts must be monotonic");
+        assert!(
+            a.start_us + a.dur_us <= b.start_us,
+            "stage [{}..{}] overlaps the next start {}",
+            a.start_us,
+            a.start_us + a.dur_us,
+            b.start_us
+        );
+    }
+    // the span kinds mirror the program's stage opcodes, in order
+    for (span, stage) in kernel.iter().zip(&prog.stages) {
+        assert_eq!(span.kind.name(), stage.opcode(), "span kind mirrors the stage opcode");
+    }
+}
+
+#[test]
+fn disabled_tracer_records_nothing_and_never_perturbs_outputs() {
+    let _g = tracer_lock();
+    let tracer = obs::global();
+    tracer.reset();
+    tracer.set_enabled(false);
+
+    let block = small_block(BitProfile::parse("attn:4,mlp:8").unwrap());
+    let prog = lower_block(&block).expect("lower block");
+    let qx = block_input(&block, 16, 9);
+
+    // disabled: hand out NONE everywhere, record nothing
+    assert!(tracer.alloc_id().is_none());
+    let (out_off, _) = prog.execute(&qx).expect("untraced execute");
+    assert!(tracer.drain().is_empty(), "disabled tracer must buffer no spans");
+    assert!(tracer.stage_summary().is_empty(), "disabled tracer must aggregate nothing");
+
+    // enabled: same program, same input — identical integer codes
+    tracer.set_enabled(true);
+    let (out_on, _) = prog.execute(&qx).expect("traced execute");
+    tracer.set_enabled(false);
+    assert!(!tracer.drain().is_empty(), "enabled run must have recorded spans");
+    assert_eq!(
+        out_off.codes.data, out_on.codes.data,
+        "tracing must never perturb execution output"
+    );
+}
+
+#[test]
+fn chrome_trace_from_a_real_block_serve_is_schema_valid_and_hierarchical() {
+    let _g = tracer_lock();
+    let tracer = obs::global();
+    tracer.reset();
+
+    let profile = BitProfile::uniform(4);
+    let block = small_block(profile);
+    let tokens = 16;
+    let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+    let plan = JitBackend::for_block(block.clone()).plan(&opts).expect("jit block plan");
+    let exec = AttnBatchExecutor::for_block(plan, &block, tokens, 2);
+
+    tracer.set_enabled(true);
+    let coord = Coordinator::start(
+        exec,
+        BatcherConfig {
+            queue_capacity: 16,
+            max_wait: Duration::from_millis(1),
+            pipeline_depth: 2,
+        },
+    );
+    let h = coord.handle();
+    let mut rng = XorShift::new(11);
+    let receivers: Vec<_> = (0..6)
+        .map(|_| h.submit_blocking(rng.normal_vec(tokens * block.d())).unwrap())
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let _ = coord.shutdown();
+    tracer.set_enabled(false);
+
+    let spans = tracer.drain();
+    let text = chrome_trace(&spans);
+    let json = Json::parse(&text).expect("Chrome trace must be valid JSON");
+    assert_eq!(json.path("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len(), "one complete event per span");
+
+    // schema: every event is a complete ('X') event with the full field set
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        let cat = ev.get("cat").and_then(Json::as_str).expect("cat");
+        assert!(cat == "pipeline" || cat == "kernel", "unknown category {cat}");
+        assert!(!ev.get("name").and_then(Json::as_str).expect("name").is_empty());
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+        assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(1.0));
+        assert!(ev.get("tid").and_then(Json::as_f64).is_some());
+        assert!(ev.path("args.id").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    }
+
+    // the wire-to-kernel hierarchy, on the span records themselves
+    let find = |k: StageKind| -> Vec<&SpanRecord> {
+        spans.iter().filter(|s| s.kind == k).collect()
+    };
+    let requests = find(StageKind::Request);
+    assert_eq!(requests.len(), 6, "one root span per request");
+    let root_ids: Vec<SpanId> = requests.iter().map(|s| s.id).collect();
+    let queues = find(StageKind::Queue);
+    assert_eq!(queues.len(), 6);
+    for q in &queues {
+        assert!(root_ids.contains(&q.parent), "queue.wait parents under a request root");
+    }
+    for r in find(StageKind::Respond) {
+        assert!(root_ids.contains(&r.parent), "respond parents under a request root");
+    }
+    let submits = find(StageKind::Submit);
+    assert!(!submits.is_empty(), "plan.submit span per batch");
+    let submit_ids: Vec<SpanId> = submits.iter().map(|s| s.id).collect();
+    let kernel: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.kind.category() == "kernel").collect();
+    assert!(!kernel.is_empty(), "jit execution must produce kernel-stage spans");
+    for k in &kernel {
+        assert!(
+            submit_ids.contains(&k.parent),
+            "kernel stage {} must nest under plan.submit",
+            k.kind.name()
+        );
+    }
+    for e in find(StageKind::Exec) {
+        assert!(submit_ids.contains(&e.parent), "plan.exec parents under its submit");
+    }
+    assert!(!find(StageKind::Quantize).is_empty(), "batch.quantize span per batch");
+    assert!(!find(StageKind::BatchStage).is_empty(), "batch.stage span per batch");
+}
