@@ -18,7 +18,10 @@
 #                      a tiny mixed-profile `ivit eval --backend ref`
 #   make jit-smoke   — CI smoke for the kernel codegen subsystem: one batch
 #                      through a compiled (jit) encoder block with jit ≡ ref
-#                      bit-identity asserted (examples/jit_smoke.rs)
+#                      bit-identity asserted (examples/jit_smoke.rs), run
+#                      twice — once pinned to the scalar GEMM microkernel
+#                      (IVIT_KERNEL_ISA=scalar) and once auto-detected — so
+#                      every available ISA proves bit-identity in CI
 #   make trace-smoke — CI smoke for the observability subsystem: tiny jit and
 #                      ref block-scope serves with --trace, then
 #                      examples/trace_smoke.rs asserts both Chrome traces are
@@ -65,6 +68,7 @@ profile-smoke:
 		--limit 4 --images 4
 
 jit-smoke:
+	cd $(RUST_DIR) && IVIT_KERNEL_ISA=scalar cargo run --release -q --example jit_smoke
 	cd $(RUST_DIR) && cargo run --release -q --example jit_smoke
 
 trace-smoke:

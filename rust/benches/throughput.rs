@@ -14,14 +14,24 @@
 //! 3. `jit_vs_ref` — the kernel-codegen arm: one encoder block through
 //!    the plan-time compiled `jit` program vs the `ref` interpreter,
 //!    **bit-identity asserted row for row** before any timing is read.
-//! 4. `tracing_overhead` — the observability arm: the cost of a
+//! 4. `simd_vs_scalar` — the microkernel arm: the same compiled block
+//!    through the scalar GEMM inner loop vs the best runtime-detected
+//!    ISA, **bit-identity asserted row for row before any timing is
+//!    read** (exact i64 accumulation makes every ISA produce the same
+//!    bytes); outside smoke the detected ISA must not be slower than
+//!    scalar.
+//! 5. `jit_workers` — the parallel-execution arm: the jit plan at 1
+//!    worker (inline) vs 4 workers (row tiles + attention heads
+//!    sharded across the pool), bit-identity asserted first; no timing
+//!    gate (the contract is determinism).
+//! 6. `tracing_overhead` — the observability arm: the cost of a
 //!    disabled tracer `span()` call (must stay nanoseconds-cheap) and
 //!    jit block batches with tracing off vs on, **bit-identity asserted
 //!    between the arms** (tracing must never perturb outputs) with the
 //!    on/off wall ratio gated outside the smoke profile.
-//! 5. attention serving through the coordinator for every integer
+//! 7. attention serving through the coordinator for every integer
 //!    backend (no artifacts needed).
-//! 6. image-classification serving over the PJRT executables
+//! 8. image-classification serving over the PJRT executables
 //!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
 //! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
@@ -35,6 +45,7 @@
 //! table1_power); this bench demonstrates the serving stack.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ivit::backend::{
@@ -43,6 +54,7 @@ use ivit::backend::{
 };
 use ivit::bench::{BenchRecord, TableWriter};
 use ivit::block::EncoderBlock;
+use ivit::kernel::{lower_block, Isa, ProgramExecutor};
 use ivit::coordinator::{AttnBatchExecutor, BatchExecutor, BatcherConfig, Coordinator, PjrtExecutor};
 use ivit::model::EvalSet;
 use ivit::sim::EnergyModel;
@@ -388,6 +400,172 @@ fn jit_vs_ref() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The SIMD microkernel arm: the same compiled block executed inline
+/// (single-threaded, so the comparison isolates the GEMM inner loops)
+/// by the scalar microkernel vs the best runtime-detected ISA.
+/// **Bit-identity is asserted row for row — codes and fp values —
+/// before any timing is read**: exact i64 accumulation makes every ISA
+/// produce the same bytes by construction. Outside the smoke profile
+/// the detected ISA must not be slower than scalar; when detection
+/// resolves to scalar (no AVX2, or `IVIT_KERNEL_ISA=scalar`) the gate
+/// is vacuous and the bench says so.
+fn simd_vs_scalar() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows, reps) = if smoke() {
+        (16usize, 32usize, 2usize, 8usize, 2usize, 1usize)
+    } else {
+        (64, 256, 2, 48, 8, 8)
+    };
+    let best = Isa::resolve()?;
+    println!(
+        "scalar vs {} GEMM microkernels (compiled block, D={dim} H={hidden}, batch {rows}):\n",
+        best.as_str()
+    );
+    let profile = BitProfile::parse("attn:4,mlp:8")?;
+    let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 59)?;
+    let program = Arc::new(lower_block(&block)?);
+    let reqs: Vec<AttnRequest> = (0..rows as u64)
+        .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 600 + i)?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let scalar = ProgramExecutor::inline(Isa::Scalar);
+    let fast = ProgramExecutor::inline(best);
+
+    // the numerics gate comes first: every ISA must produce the same bytes
+    for (i, r) in reqs.iter().enumerate() {
+        let (sc, sv) = scalar.run(&program, &r.x)?;
+        let (fc, fv) = fast.run(&program, &r.x)?;
+        anyhow::ensure!(
+            sc.codes.data == fc.codes.data,
+            "row {i}: {} vs scalar output codes differ",
+            best.as_str()
+        );
+        let sv = sv.map(|v| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        let fv = fv.map(|v| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        anyhow::ensure!(
+            sv == fv,
+            "row {i}: {} vs scalar output values differ bitwise",
+            best.as_str()
+        );
+    }
+
+    let mut walls = Vec::new();
+    for (arm, exec) in [("scalar", &scalar), ("auto", &fast)] {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for r in &reqs {
+                let _ = exec.run(&program, &r.x)?;
+            }
+        }
+        walls.push((arm, exec.isa(), t0.elapsed().as_secs_f64()));
+    }
+    let scalar_wall = walls[0].2;
+    let total_rows = (rows * reps) as f64;
+    let mut tbl = TableWriter::new(&["arm", "isa", "rows/s", "ratio vs scalar"]);
+    for (arm, isa, wall) in &walls {
+        tbl.row(vec![
+            arm.to_string(),
+            isa.as_str().to_string(),
+            format!("{:.1}", total_rows / wall),
+            format!("{:.2}", scalar_wall / wall),
+        ]);
+        BenchRecord::new("throughput.simd_vs_scalar")
+            .str_field("arm", arm)
+            .str_field("isa", isa.as_str())
+            .str_field("profile", &profile.key())
+            .bool_field("smoke", smoke())
+            .num("rows", total_rows)
+            .num("rows_per_s", total_rows / wall)
+            .num("ratio_vs_scalar", scalar_wall / wall)
+            .emit();
+    }
+    print!("{}", tbl.render());
+    let ratio = scalar_wall / walls[1].2;
+    println!("\nsimd-vs-scalar: outputs verified bit-identical across ISAs ✓");
+    if smoke() {
+        println!();
+        return Ok(());
+    }
+    if best == Isa::Scalar {
+        println!("runtime detection resolved to scalar — no SIMD gate to apply\n");
+        return Ok(());
+    }
+    anyhow::ensure!(
+        ratio >= 1.0,
+        "REGRESSION: {} GEMM is only {ratio:.2}x scalar throughput (target >= 1x)",
+        best.as_str()
+    );
+    println!("{} vs scalar : {ratio:.2}x rows/sec (target >= 1x)\n", best.as_str());
+    Ok(())
+}
+
+/// The parallel-execution arm: the same compiled block batch through
+/// the jit plan at 1 worker (inline) vs 4 workers (row tiles and
+/// attention heads sharded across the persistent pool). **Bit-identity
+/// is asserted row for row before any timing is read** — sharding is a
+/// pure function of (rows, workers) and must never change bytes. Emits
+/// one `throughput.jit_workers` record per arm; there is no timing
+/// gate (tiny blocks can be coordination-bound — the determinism
+/// contract is the point here).
+fn jit_workers() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows) =
+        if smoke() { (16usize, 32usize, 2usize, 8usize, 2usize) } else { (64, 256, 2, 48, 16) };
+    println!("jit worker sharding (compiled block, D={dim} H={hidden}, batch {rows}):\n");
+    let profile = BitProfile::parse("attn:4,mlp:8")?;
+    let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 61)?;
+    let reqs: Vec<AttnRequest> = (0..rows as u64)
+        .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 650 + i)?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let req = AttnBatchRequest::new(reqs);
+    let opts = |workers: usize| PlanOptions {
+        scope: PlanScope::Block,
+        profile,
+        workers,
+        ..PlanOptions::default()
+    };
+    let mut plan_1 = JitBackend::for_block(block.clone()).plan(&opts(1))?;
+    let mut plan_4 = JitBackend::for_block(block).plan(&opts(4))?;
+
+    // the numerics gate comes first: worker count must never change bytes
+    let base = plan_1.run_batch(&req)?;
+    let wide = plan_4.run_batch(&req)?;
+    for (i, (a, b)) in base.items.iter().zip(&wide.items).enumerate() {
+        anyhow::ensure!(
+            a.out_codes.as_ref().unwrap().codes.data == b.out_codes.as_ref().unwrap().codes.data,
+            "row {i}: jit 4-worker vs 1-worker output codes differ"
+        );
+    }
+
+    let reps: usize = if smoke() { 1 } else { 4 };
+    let mut walls = Vec::new();
+    for (workers, plan) in [(1usize, &mut plan_1), (4, &mut plan_4)] {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = plan.run_batch(&req)?;
+        }
+        walls.push((workers, t0.elapsed().as_secs_f64()));
+    }
+    let base_wall = walls[0].1;
+    let total_rows = (rows * reps) as f64;
+    let mut tbl = TableWriter::new(&["workers", "rows/s", "ratio vs 1 worker"]);
+    for (workers, wall) in &walls {
+        tbl.row(vec![
+            workers.to_string(),
+            format!("{:.1}", total_rows / wall),
+            format!("{:.2}", base_wall / wall),
+        ]);
+        BenchRecord::new("throughput.jit_workers")
+            .str_field("profile", &profile.key())
+            .bool_field("smoke", smoke())
+            .num("workers", *workers as f64)
+            .num("rows", total_rows)
+            .num("rows_per_s", total_rows / wall)
+            .num("ratio_vs_1", base_wall / wall)
+            .emit();
+    }
+    print!("{}", tbl.render());
+    println!("\njit-workers: outputs verified bit-identical at 1 vs 4 workers ✓\n");
+    Ok(())
+}
+
 /// The observability arm: tracing off must cost nothing measurable and
 /// tracing on must never perturb outputs. Three checks: (a) the
 /// disabled-path `span()` call is a single relaxed load — its per-call
@@ -556,6 +734,8 @@ fn main() -> anyhow::Result<()> {
     pipelined_vs_drain()?;
     uniform_vs_mixed()?;
     jit_vs_ref()?;
+    simd_vs_scalar()?;
+    jit_workers()?;
     tracing_overhead()?;
     backend_attention_throughput()?;
     if smoke() {

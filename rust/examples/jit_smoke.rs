@@ -2,13 +2,18 @@
 //! codegen subsystem and executed through the `jit` backend, with every
 //! output row asserted **bit-identical** to the `ref` interpreter (exit
 //! code 1 on any divergence), at a uniform width and at the mixed
-//! `attn:4,mlp:8` operating point. This is what `make jit-smoke` runs
-//! in CI — a fast end-to-end proof that plan-time compilation preserves
-//! the interpreter's arithmetic exactly.
+//! `attn:4,mlp:8` operating point. The resolved GEMM ISA
+//! (`IVIT_KERNEL_ISA` overrides runtime detection) is also cross-checked
+//! in process against the scalar single-threaded executor, so `make
+//! jit-smoke` — which runs this binary once pinned to scalar and once
+//! auto-detected — proves ISA- and worker-independence end to end.
 //!
 //! ```sh
 //! cargo run --release --example jit_smoke
+//! IVIT_KERNEL_ISA=scalar cargo run --release --example jit_smoke
 //! ```
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 use ivit::backend::{
@@ -16,16 +21,20 @@ use ivit::backend::{
     ReferenceBackend,
 };
 use ivit::block::EncoderBlock;
-use ivit::kernel::lower_block;
+use ivit::kernel::{lower_block, Isa, ProgramExecutor};
 
 fn main() -> Result<()> {
     let (dim, hidden, heads, tokens, rows) = (16usize, 32usize, 2usize, 8usize, 3u64);
-    println!("jit smoke: encoder block D={dim} H={hidden}, compiled vs interpreted\n");
+    let isa = Isa::resolve()?;
+    println!(
+        "jit smoke: encoder block D={dim} H={hidden}, compiled vs interpreted (isa {})\n",
+        isa.as_str()
+    );
 
     let profiles = vec![BitProfile::uniform(3), BitProfile::parse("attn:4,mlp:8")?];
     for profile in profiles {
         let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 33)?;
-        let program = lower_block(&block)?;
+        let program = Arc::new(lower_block(&block)?);
         println!("bits[{}]: {}", profile.key(), program.summary());
 
         let req = AttnBatchRequest::new(
@@ -45,7 +54,23 @@ fn main() -> Result<()> {
             let gc = &g.out_codes.as_ref().unwrap().codes.data;
             ensure!(wc == gc, "row {i}: jit vs ref codes DIFFER at bits[{}]", profile.key());
         }
-        println!("  jit ≡ ref: BIT-IDENTICAL over {rows} rows ✓\n");
+        println!("  jit ≡ ref: BIT-IDENTICAL over {rows} rows ✓");
+
+        // in-process ISA/worker cross-check: the resolved ISA with a
+        // pooled executor must reproduce scalar single-threaded bytes
+        let scalar = ProgramExecutor::inline(Isa::Scalar);
+        let pooled = ProgramExecutor::pooled(isa, 3);
+        for (i, item) in req.items.iter().enumerate() {
+            let (sc, _) = scalar.run(&program, &item.x)?;
+            let (pc, _) = pooled.run(&program, &item.x)?;
+            ensure!(
+                sc.codes.data == pc.codes.data,
+                "row {i}: {} pooled vs scalar inline DIFFER at bits[{}]",
+                isa.as_str(),
+                profile.key()
+            );
+        }
+        println!("  {} x3 workers ≡ scalar x1: BIT-IDENTICAL ✓\n", isa.as_str());
     }
     println!("jit smoke PASS");
     Ok(())

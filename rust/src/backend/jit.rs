@@ -3,19 +3,25 @@
 //! `plan()` lowers the module/block + [`crate::quant::BitProfile`]
 //! through [`crate::kernel`] into one straight-line
 //! [`KernelProgram`] — every fold constant, clamp range, GELU table and
-//! dimension baked in at lowering time, weights repacked for the
-//! executor's streaming GEMM loops — and [`JitPlan`] then executes
-//! batches with no per-request branching on profile or geometry.
-//! Output codes (and the W_O fp values at attention scope) are
-//! bit-identical to [`super::ReferenceBackend`] — the contract
-//! `tests/kernel_parity.rs` pins at DeiT-S dimensions.
+//! dimension baked in at lowering time, weights repacked into narrow
+//! `i8` storage for the SIMD GEMM microkernels — and picks the
+//! execution strategy once: the GEMM ISA by runtime CPU detection
+//! (`IVIT_KERNEL_ISA` overrides) and a persistent `jit` worker pool
+//! when `--workers N` asks for shard parallelism. [`JitPlan`] then
+//! executes batches with no per-request branching on profile, geometry
+//! or strategy. Output codes (and the W_O fp values at attention
+//! scope) are bit-identical to [`super::ReferenceBackend`] for every
+//! (ISA, workers) pair — the contract `tests/kernel_parity.rs` pins at
+//! DeiT-S dimensions.
 
+use std::sync::Arc;
+use std::thread;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::block::EncoderBlock;
-use crate::kernel::{lower_attention, lower_block, KernelProgram};
+use crate::kernel::{lower_attention, lower_block, Isa, KernelProgram, ProgramExecutor};
 
 use super::{
     ensure_plan_profile, AttnBatchRequest, AttnBatchResponse, AttnModule, AttnRequest,
@@ -31,21 +37,31 @@ pub struct JitBackend {
     /// The encoder block this backend lowers at [`PlanScope::Block`];
     /// `None` for attention-only backends.
     block: Option<EncoderBlock>,
-    /// Resident attention program for the single-request adapter (so
-    /// repeated `run_attention` calls lower once, like the other
-    /// built-ins' resident-plan paths).
-    attn_program: Option<KernelProgram>,
+    /// Default shard parallelism for plans (0 = let [`PlanOptions`] or
+    /// the machine decide, mirroring the sim-mt backend).
+    workers: usize,
+    /// Resident attention program + executor for the single-request
+    /// adapter (so repeated `run_attention` calls lower once, like the
+    /// other built-ins' resident-plan paths).
+    resident: Option<(Arc<KernelProgram>, ProgramExecutor)>,
 }
 
 impl JitBackend {
     pub fn new(module: AttnModule) -> JitBackend {
-        JitBackend { module, block: None, attn_program: None }
+        JitBackend { module, block: None, workers: 0, resident: None }
     }
 
     /// A backend that can plan the whole encoder block (its attention
     /// half also serves [`PlanScope::Attention`] plans).
     pub fn for_block(block: EncoderBlock) -> JitBackend {
-        JitBackend { module: block.attn.clone(), block: Some(block), attn_program: None }
+        JitBackend { module: block.attn.clone(), block: Some(block), workers: 0, resident: None }
+    }
+
+    /// Default worker count for plans created without an explicit
+    /// [`PlanOptions::workers`].
+    pub fn with_workers(mut self, workers: usize) -> JitBackend {
+        self.workers = workers;
+        self
     }
 
     pub fn module(&self) -> &AttnModule {
@@ -55,25 +71,43 @@ impl JitBackend {
     pub fn block(&self) -> Option<&EncoderBlock> {
         self.block.as_ref()
     }
+
+    fn resolve_workers(&self, opts: &PlanOptions) -> usize {
+        let w = if opts.workers > 0 {
+            opts.workers
+        } else if self.workers > 0 {
+            self.workers
+        } else {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        };
+        w.max(1)
+    }
 }
 
-/// A compiled program plus the synchronous job parking lot: `submit`
-/// executes the batch through the program inline and parks the
-/// response for `poll`.
+/// A compiled program, its plan-time execution strategy (ISA + shard
+/// pool) and the synchronous job parking lot: `submit` executes the
+/// batch through the program inline and parks the response for `poll`.
 #[derive(Debug)]
 pub struct JitPlan {
-    program: KernelProgram,
+    program: Arc<KernelProgram>,
+    executor: ProgramExecutor,
     jobs: SyncJobs<AttnBatchResponse>,
 }
 
 impl JitPlan {
-    pub fn new(program: KernelProgram) -> JitPlan {
-        JitPlan { program, jobs: SyncJobs::new() }
+    pub fn new(program: KernelProgram, workers: usize) -> Result<JitPlan> {
+        let executor = ProgramExecutor::pooled(Isa::resolve()?, workers);
+        Ok(JitPlan { program: Arc::new(program), executor, jobs: SyncJobs::new() })
     }
 
     /// The lowered program (disassemble it with `format!("{}", …)`).
     pub fn program(&self) -> &KernelProgram {
         &self.program
+    }
+
+    /// The plan-time execution strategy.
+    pub fn executor(&self) -> &ProgramExecutor {
+        &self.executor
     }
 
     fn execute(&self, req: &AttnBatchRequest) -> Result<AttnBatchResponse> {
@@ -83,7 +117,7 @@ impl JitPlan {
             .iter()
             .map(|r| {
                 let row_t0 = Instant::now();
-                let (out, values) = self.program.execute(&r.x)?;
+                let (out, values) = self.executor.run(&self.program, &r.x)?;
                 Ok(AttnResponse {
                     out_codes: Some(out),
                     out_values: values,
@@ -103,7 +137,12 @@ impl ExecutionPlan for JitPlan {
     }
 
     fn describe(&self) -> String {
-        self.program.summary()
+        format!(
+            "{}, isa {}, {} workers",
+            self.program.summary(),
+            self.executor.isa().as_str(),
+            self.executor.workers()
+        )
     }
 
     fn submit(&mut self, req: &AttnBatchRequest) -> Result<JobId> {
@@ -141,17 +180,18 @@ impl Backend for JitBackend {
     }
 
     fn plan(&self, opts: &PlanOptions) -> Result<Box<dyn ExecutionPlan>> {
+        let workers = self.resolve_workers(opts);
         match opts.scope {
             PlanScope::Attention => {
                 ensure_plan_profile(&opts.profile, &self.module.profile, "jit attention module")?;
-                Ok(Box::new(JitPlan::new(lower_attention(&self.module)?)))
+                Ok(Box::new(JitPlan::new(lower_attention(&self.module)?, workers)?))
             }
             PlanScope::Block => {
                 let block = self.block.as_ref().ok_or_else(|| {
                     anyhow!("jit backend was built without an encoder block (scope=Block)")
                 })?;
                 ensure_plan_profile(&opts.profile, &block.profile, "jit encoder block")?;
-                Ok(Box::new(JitPlan::new(lower_block(block)?)))
+                Ok(Box::new(JitPlan::new(lower_block(block)?, workers)?))
             }
         }
     }
@@ -161,12 +201,15 @@ impl Backend for JitBackend {
     /// cached program (the default adapter would re-plan — and reject
     /// non-default profiles at its `PlanOptions::default()` boundary).
     fn run_attention(&mut self, req: &AttnRequest) -> Result<AttnResponse> {
-        if self.attn_program.is_none() {
-            self.attn_program = Some(lower_attention(&self.module)?);
+        if self.resident.is_none() {
+            let program = Arc::new(lower_attention(&self.module)?);
+            let workers = self.resolve_workers(&PlanOptions::default());
+            let executor = ProgramExecutor::pooled(Isa::resolve()?, workers);
+            self.resident = Some((program, executor));
         }
-        let program = self.attn_program.as_ref().expect("lowered above");
+        let (program, executor) = self.resident.as_ref().expect("lowered above");
         let t0 = Instant::now();
-        let (out, values) = program.execute(&req.x)?;
+        let (out, values) = executor.run(program, &req.x)?;
         Ok(AttnResponse {
             out_codes: Some(out),
             out_values: values,
@@ -208,12 +251,36 @@ mod tests {
         let opts = PlanOptions { scope: PlanScope::Block, ..PlanOptions::default() };
         let mut plan = backend.plan(&opts).unwrap();
         assert!(plan.describe().contains("compiled kernel program"));
+        assert!(plan.describe().contains("workers"));
         let resp = plan.run_one(&AttnRequest::new(x)).unwrap();
         assert_eq!(resp.out_codes.unwrap().codes.data, want.codes.data);
         // attention-only jit backends refuse block scope
         let plain =
             JitBackend::new(AttnModule::synthetic(12, 6, 2, BitProfile::uniform(3), 1).unwrap());
         assert!(plain.plan(&opts).is_err());
+    }
+
+    #[test]
+    fn jit_plan_output_is_identical_for_any_worker_count() {
+        let block = EncoderBlock::synthetic(12, 24, 2, BitProfile::uniform(3), 31).unwrap();
+        let x = block.random_input(9, 2).unwrap();
+        let opts = |workers| PlanOptions {
+            scope: PlanScope::Block,
+            workers,
+            ..PlanOptions::default()
+        };
+        let backend = JitBackend::for_block(block);
+        let mut single = backend.plan(&opts(1)).unwrap();
+        let base = single.run_one(&AttnRequest::new(x.clone())).unwrap();
+        for workers in [2usize, 3, 5] {
+            let mut plan = backend.plan(&opts(workers)).unwrap();
+            let got = plan.run_one(&AttnRequest::new(x.clone())).unwrap();
+            assert_eq!(
+                got.out_codes.as_ref().unwrap().codes.data,
+                base.out_codes.as_ref().unwrap().codes.data,
+                "jit output changed at {workers} workers"
+            );
+        }
     }
 
     #[test]

@@ -114,9 +114,15 @@ impl BackendRegistry {
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
         r.register("jit", |cfg| {
+            // `--workers` steers jit shard parallelism exactly like the
+            // sim-mt pool (0 keeps the machine-sized default).
             Ok(match &cfg.block {
-                Some(b) => Box::new(JitBackend::for_block(b.clone())) as Box<dyn Backend>,
-                None => Box::new(JitBackend::new(cfg.resolve_module()?)) as Box<dyn Backend>,
+                Some(b) => {
+                    Box::new(JitBackend::for_block(b.clone()).with_workers(cfg.workers))
+                        as Box<dyn Backend>
+                }
+                None => Box::new(JitBackend::new(cfg.resolve_module()?).with_workers(cfg.workers))
+                    as Box<dyn Backend>,
             })
         });
         r.register("ref", |cfg| {

@@ -40,7 +40,7 @@
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{self, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
@@ -54,6 +54,7 @@ use super::{
 use crate::block::EncoderBlock;
 use crate::sim::attention::{AttentionSim, FrontOutput, HeadOutput};
 use crate::sim::block::{BlockSim, BlockSimOutput};
+use crate::util::pool::WorkerPool;
 
 /// The sharded simulator backend. `workers == 0` means "pick at plan
 /// time": available parallelism, capped at 8.
@@ -159,59 +160,6 @@ impl Backend for SimMtBackend {
     }
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Fixed pool of worker threads fed through one shared job channel.
-/// Spawned once at plan time; joined on drop. Jobs never block on their
-/// result sends (`let _ = tx.send(..)`), so dropping a plan — and with
-/// it the receivers of any unfinished jobs — can never wedge a worker.
-struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
-}
-
-impl WorkerPool {
-    fn new(workers: usize) -> WorkerPool {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..workers)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                thread::Builder::new()
-                    .name(format!("sim-mt-{i}"))
-                    .spawn(move || loop {
-                        // the guard is held only while waiting for a job;
-                        // jobs themselves run outside the lock
-                        let job = rx.lock().expect("job queue poisoned").recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // plan dropped
-                        }
-                    })
-                    .expect("spawn sim-mt worker")
-            })
-            .collect();
-        WorkerPool { tx: Some(tx), handles }
-    }
-
-    fn submit(&self, job: Job) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("pool running")
-            .send(job)
-            .map_err(|_| anyhow!("sim-mt worker pool is gone"))
-    }
-}
-
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        self.tx.take(); // close the queue → workers exit their loop
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
 /// Non-blocking collector of `n` index-tagged shard results. Results
 /// (successes *and* errors) are counted until all `n` arrived;
 /// [`Self::finish`] then fails deterministically on the lowest-index
@@ -306,7 +254,7 @@ impl SimMtPlan {
     pub fn new(sim: AttentionSim, workers: usize, row_threshold: usize) -> SimMtPlan {
         SimMtPlan {
             sim: Arc::new(sim),
-            pool: WorkerPool::new(workers),
+            pool: WorkerPool::new("sim-mt", workers),
             workers,
             row_threshold,
             next_job: 0,
@@ -506,7 +454,7 @@ impl SimMtBlockPlan {
     pub fn new(block: &EncoderBlock, workers: usize, row_threshold: usize) -> SimMtBlockPlan {
         SimMtBlockPlan {
             sim: Arc::new(block.to_sim()),
-            pool: WorkerPool::new(workers),
+            pool: WorkerPool::new("sim-mt", workers),
             workers,
             row_threshold,
             next_job: 0,

@@ -171,14 +171,29 @@ PRECISION (--bits-profile, on serve/simulate/eval):
 
 COMPILED BACKEND (--backend jit):
   The jit backend compiles the module/block into a flat kernel program at
-  PLAN time: every requantizer scale, clamp range, softmax score scale and
-  GELU table is baked in during lowering, weights are repacked for streaming
-  integer GEMM loops, and execution runs the compiled program with no
-  per-request branching on profile or geometry. Output codes are
-  BIT-IDENTICAL to --backend ref for every profile and scope — the contract
-  is pinned by tests/kernel_parity.rs and asserted by the throughput bench.
-  Prefer jit over ref for serving throughput; prefer sim/sim-mt when you
-  need the cycle/energy hardware statistics (jit reports none). The compiled
+  PLAN time: every requantizer scale, clamp range, softmax score scale,
+  GELU table and per-head descriptor offset is baked in during lowering,
+  and activations/weights are packed into narrow i8 storage (disassembly
+  prints the layout per buffer: int[i8], fp[f32], w[NxK:i8]). Execution
+  runs the compiled program with no per-request branching on profile,
+  geometry or strategy:
+    * GEMM inner loops dispatch once, at plan time, to an ISA-specific
+      microkernel — AVX2 widening multiply-add when the CPU supports it,
+      a portable scalar path otherwise. IVIT_KERNEL_ISA=scalar|avx2
+      overrides the detection (requesting an unavailable ISA fails
+      loudly). Every ISA accumulates exactly in i64, so outputs are
+      bit-identical across ISAs.
+    * --workers N shards row tiles of the heavy stages (GEMMs,
+      quantizers, the GELU table) and whole attention heads across a
+      persistent jit worker pool, exactly like the sim-mt pool flag
+      (0 = auto-size to the machine, 1 = single-threaded). Chunking is
+      a pure function of (rows, workers), so outputs are bit-identical
+      for any worker count.
+  Output codes are BIT-IDENTICAL to --backend ref for every profile,
+  scope, ISA and worker count — the contract is pinned by
+  tests/kernel_parity.rs and asserted by the throughput bench. Prefer
+  jit over ref for serving throughput; prefer sim/sim-mt when you need
+  the cycle/energy hardware statistics (jit reports none). The compiled
   program's disassembly is stable and snapshot-tested — a lowering change
   shows up as a text diff, not a silent numerics drift.
 
@@ -196,7 +211,7 @@ COMMANDS:
                 --cache-dir DIR (persist the plan cache across restarts:
                 warm-loads on startup, writes plan_cache.json once the
                 plan is built)
-              sim-mt: --workers N (worker threads, 0 = auto)
+              sim-mt/jit: --workers N (worker threads, 0 = auto)
               common: --batch N --requests N --rate R (req/s, 0 = closed-loop)
                       --pipeline-depth N (in-flight batches, default 2)
               networked serving (ref/sim/sim-mt/jit):

@@ -6,6 +6,8 @@
 //! prints with `{:.4}`, and weight-derived data (codes, biases, scale
 //! vectors, LUT entries) prints only as *lengths* — so the disassembly
 //! depends on geometry, steps and profile, never on weight values.
+//! Every buffer and weight line names its pack layout (`int[i8]`,
+//! `fp[f32]`, `w[NxK:i8]`) so storage-format regressions show up too.
 
 use std::fmt;
 
@@ -14,10 +16,22 @@ use super::ir::{KernelProgram, Stage};
 fn render_stage(s: &Stage) -> String {
     match s {
         Stage::GemmScale { label, src, dst, w, scale } => {
-            format!("%{src} -> %{dst} w[{}x{}] scale[{}] ; {label}", w.n, w.k, scale.len())
+            format!(
+                "%{src} -> %{dst} w[{}x{}:{}] scale[{}] ; {label}",
+                w.n,
+                w.k,
+                w.layout().as_str(),
+                scale.len()
+            )
         }
         Stage::GemmRequant { label, src, dst, w, eff, bits, .. } => {
-            format!("%{src} -> %{dst} w[{}x{}] eff[{}] -> s{bits} ; {label}", w.n, w.k, eff.len())
+            format!(
+                "%{src} -> %{dst} w[{}x{}:{}] eff[{}] -> s{bits} ; {label}",
+                w.n,
+                w.k,
+                w.layout().as_str(),
+                eff.len()
+            )
         }
         Stage::LayerNormQuant { label, src, dst, step, bits, .. } => {
             format!("%{src} -> %{dst} step {step:.4} -> s{bits} ; {label}")
@@ -35,7 +49,7 @@ fn render_stage(s: &Stage) -> String {
             )
         }
         Stage::AttnHead(h) => format!(
-            "h{} q=%{} k=%{} v=%{} -> %{} dh={} score {:.4} step {:.4} -> u{} shift={} \
+            "h{} q=%{} k=%{} v=%{} -> %{} dh={} off={} score {:.4} step {:.4} -> u{} shift={} \
              eff_pv {:.4} -> s{}",
             h.head,
             h.q,
@@ -43,6 +57,7 @@ fn render_stage(s: &Stage) -> String {
             h.v,
             h.dst,
             h.dh,
+            h.off,
             h.score_scale,
             h.step_attn,
             h.attn_bits,
@@ -56,6 +71,13 @@ fn render_stage(s: &Stage) -> String {
             )
         }
     }
+}
+
+/// One numbered disassembly stage line (without the leading indent) —
+/// also used by the executor so failure contexts quote the exact line
+/// the disassembly prints for the failing stage.
+pub(crate) fn stage_line(idx: usize, s: &Stage) -> String {
+    format!("[{idx:02}] {:<13}{}", s.opcode(), render_stage(s))
 }
 
 impl fmt::Display for KernelProgram {
@@ -76,10 +98,17 @@ impl fmt::Display for KernelProgram {
             self.d_in
         )?;
         for (i, b) in self.bufs.iter().enumerate() {
-            writeln!(f, "  buf %{i} {} cols {} '{}'", b.kind.as_str(), b.cols, b.name)?;
+            writeln!(
+                f,
+                "  buf %{i} {}[{}] cols {} '{}'",
+                b.kind.as_str(),
+                b.layout.as_str(),
+                b.cols,
+                b.name
+            )?;
         }
         for (i, s) in self.stages.iter().enumerate() {
-            writeln!(f, "  [{i:02}] {:<13}{}", s.opcode(), render_stage(s))?;
+            writeln!(f, "  {}", stage_line(i, s))?;
         }
         let osign = if self.out_spec.signed { 's' } else { 'u' };
         write!(
@@ -112,41 +141,41 @@ mod tests {
         let want = "\
 kernel block 'blk500' scope=block bits[uniform:4]
   input %0 s4 step 0.1500 cols 8
-  buf %0 int cols 8 'x'
-  buf %1 fp cols 8 'xf'
-  buf %2 int cols 8 'attn_in'
-  buf %3 fp cols 8 'q_pre'
-  buf %4 fp cols 8 'k_pre'
-  buf %5 int cols 8 'v'
-  buf %6 int cols 8 'q'
-  buf %7 int cols 8 'k'
-  buf %8 int cols 8 'pv'
-  buf %9 fp cols 8 'attn_out'
-  buf %10 int cols 8 'attn_q'
-  buf %11 int cols 8 'r1'
-  buf %12 fp cols 8 'r1f'
-  buf %13 int cols 8 'mlp_in'
-  buf %14 int cols 16 'h'
-  buf %15 int cols 16 'g'
-  buf %16 int cols 8 'mlp_out'
-  buf %17 int cols 8 'out'
+  buf %0 int[i8] cols 8 'x'
+  buf %1 fp[f32] cols 8 'xf'
+  buf %2 int[i8] cols 8 'attn_in'
+  buf %3 fp[f32] cols 8 'q_pre'
+  buf %4 fp[f32] cols 8 'k_pre'
+  buf %5 int[i8] cols 8 'v'
+  buf %6 int[i8] cols 8 'q'
+  buf %7 int[i8] cols 8 'k'
+  buf %8 int[i8] cols 8 'pv'
+  buf %9 fp[f32] cols 8 'attn_out'
+  buf %10 int[i8] cols 8 'attn_q'
+  buf %11 int[i8] cols 8 'r1'
+  buf %12 fp[f32] cols 8 'r1f'
+  buf %13 int[i8] cols 8 'mlp_in'
+  buf %14 int[i8] cols 16 'h'
+  buf %15 int[i8] cols 16 'g'
+  buf %16 int[i8] cols 8 'mlp_out'
+  buf %17 int[i8] cols 8 'out'
   [00] dequant      %0 -> %1 step 0.1500 ; x
   [01] ln.quant     %1 -> %2 step 0.1200 -> s4 ; ln1
-  [02] gemm.scale   %2 -> %3 w[8x8] scale[8] ; q_proj
-  [03] gemm.scale   %2 -> %4 w[8x8] scale[8] ; k_proj
-  [04] gemm.requant %2 -> %5 w[8x8] eff[8] -> s4 ; v_proj
+  [02] gemm.scale   %2 -> %3 w[8x8:i8] scale[8] ; q_proj
+  [03] gemm.scale   %2 -> %4 w[8x8:i8] scale[8] ; k_proj
+  [04] gemm.requant %2 -> %5 w[8x8:i8] eff[8] -> s4 ; v_proj
   [05] ln.quant     %3 -> %6 step 0.5000 -> s4 ; q_ln
   [06] ln.quant     %4 -> %7 step 0.5000 -> s4 ; k_ln
-  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
-  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
-  [09] gemm.scale   %8 -> %9 w[8x8] scale[8] ; o_proj
+  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 off=0 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 off=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [09] gemm.scale   %8 -> %9 w[8x8:i8] scale[8] ; o_proj
   [10] quant        %9 -> %10 step 0.1000 -> s4 ; attn_out
   [11] residual     %10 + %0 -> %11 eff 0.6667/1.0000 -> s4 ; residual1
   [12] dequant      %11 -> %12 step 0.1500 ; r1
   [13] ln.quant     %12 -> %13 step 0.5000 -> s4 ; ln2
-  [14] gemm.requant %13 -> %14 w[16x8] eff[16] -> s4 ; fc1
+  [14] gemm.requant %13 -> %14 w[16x8:i8] eff[16] -> s4 ; fc1
   [15] gelu.lut     %14 -> %15 table[16] s4 -> s4 ; gelu
-  [16] gemm.requant %15 -> %16 w[8x16] eff[8] -> s4 ; fc2
+  [16] gemm.requant %15 -> %16 w[8x16:i8] eff[8] -> s4 ; fc2
   [17] residual     %16 + %11 -> %17 eff 0.6667/1.0000 -> s4 ; residual2
   out codes %17 s4 step 0.1500";
         assert_eq!(format!("{prog}"), want);
@@ -162,41 +191,41 @@ kernel block 'blk500' scope=block bits[uniform:4]
         let want = "\
 kernel block 'blk700' scope=block bits[attn_x:4,q_proj:4,k_proj:4,v_proj:4,attn_probs:4,o_proj:4,mlp_x:8,fc1:8,gelu_in:8,gelu_out:8,fc2:8,mlp_out:8,residual:8]
   input %0 s8 step 0.1500 cols 8
-  buf %0 int cols 8 'x'
-  buf %1 fp cols 8 'xf'
-  buf %2 int cols 8 'attn_in'
-  buf %3 fp cols 8 'q_pre'
-  buf %4 fp cols 8 'k_pre'
-  buf %5 int cols 8 'v'
-  buf %6 int cols 8 'q'
-  buf %7 int cols 8 'k'
-  buf %8 int cols 8 'pv'
-  buf %9 fp cols 8 'attn_out'
-  buf %10 int cols 8 'attn_q'
-  buf %11 int cols 8 'r1'
-  buf %12 fp cols 8 'r1f'
-  buf %13 int cols 8 'mlp_in'
-  buf %14 int cols 16 'h'
-  buf %15 int cols 16 'g'
-  buf %16 int cols 8 'mlp_out'
-  buf %17 int cols 8 'out'
+  buf %0 int[i8] cols 8 'x'
+  buf %1 fp[f32] cols 8 'xf'
+  buf %2 int[i8] cols 8 'attn_in'
+  buf %3 fp[f32] cols 8 'q_pre'
+  buf %4 fp[f32] cols 8 'k_pre'
+  buf %5 int[i8] cols 8 'v'
+  buf %6 int[i8] cols 8 'q'
+  buf %7 int[i8] cols 8 'k'
+  buf %8 int[i8] cols 8 'pv'
+  buf %9 fp[f32] cols 8 'attn_out'
+  buf %10 int[i8] cols 8 'attn_q'
+  buf %11 int[i8] cols 8 'r1'
+  buf %12 fp[f32] cols 8 'r1f'
+  buf %13 int[i8] cols 8 'mlp_in'
+  buf %14 int[i8] cols 16 'h'
+  buf %15 int[i8] cols 16 'g'
+  buf %16 int[i8] cols 8 'mlp_out'
+  buf %17 int[i8] cols 8 'out'
   [00] dequant      %0 -> %1 step 0.1500 ; x
   [01] ln.quant     %1 -> %2 step 0.1200 -> s4 ; ln1
-  [02] gemm.scale   %2 -> %3 w[8x8] scale[8] ; q_proj
-  [03] gemm.scale   %2 -> %4 w[8x8] scale[8] ; k_proj
-  [04] gemm.requant %2 -> %5 w[8x8] eff[8] -> s4 ; v_proj
+  [02] gemm.scale   %2 -> %3 w[8x8:i8] scale[8] ; q_proj
+  [03] gemm.scale   %2 -> %4 w[8x8:i8] scale[8] ; k_proj
+  [04] gemm.requant %2 -> %5 w[8x8:i8] eff[8] -> s4 ; v_proj
   [05] ln.quant     %3 -> %6 step 0.5000 -> s4 ; q_ln
   [06] ln.quant     %4 -> %7 step 0.5000 -> s4 ; k_ln
-  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
-  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
-  [09] gemm.scale   %8 -> %9 w[8x8] scale[8] ; o_proj
+  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 off=0 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 off=4 score 0.1250 step 0.0667 -> u4 shift=true eff_pv 0.0667 -> s4
+  [09] gemm.scale   %8 -> %9 w[8x8:i8] scale[8] ; o_proj
   [10] quant        %9 -> %10 step 0.1000 -> s8 ; attn_out
   [11] residual     %10 + %0 -> %11 eff 0.6667/1.0000 -> s8 ; residual1
   [12] dequant      %11 -> %12 step 0.1500 ; r1
   [13] ln.quant     %12 -> %13 step 0.5000 -> s8 ; ln2
-  [14] gemm.requant %13 -> %14 w[16x8] eff[16] -> s8 ; fc1
+  [14] gemm.requant %13 -> %14 w[16x8:i8] eff[16] -> s8 ; fc1
   [15] gelu.lut     %14 -> %15 table[256] s8 -> s8 ; gelu
-  [16] gemm.requant %15 -> %16 w[8x16] eff[8] -> s8 ; fc2
+  [16] gemm.requant %15 -> %16 w[8x16:i8] eff[8] -> s8 ; fc2
   [17] residual     %16 + %11 -> %17 eff 0.6667/1.0000 -> s8 ; residual2
   out codes %17 s8 step 0.1500";
         assert_eq!(format!("{prog}"), want);

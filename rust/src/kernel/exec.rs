@@ -1,219 +1,694 @@
 //! The buffer-slot executor for lowered [`KernelProgram`]s.
 //!
-//! Integer GEMMs run a row-tiled, reduction-middle, column-inner loop
-//! over the packed transposed weights — exact i64 accumulation makes
-//! the reordering bit-free (integer adds are associative), and the
-//! `i32::try_from` narrowing enforces the same overflow bound as the
-//! reference `int_matmul`. Floating-point epilogues replicate the
-//! reference expressions term for term, with all fold constants read
-//! from the lowered stages, so the executor is bit-identical to the
-//! interpreter by construction.
+//! Activations live in packed narrow layouts (`i8` codes / `f32`
+//! values, per [`PackLayout`]) and the integer GEMMs run through the
+//! [`super::simd`] microkernels — ISA picked once at plan time, exact
+//! i64 accumulation on every path, so scalar, AVX2 and the reference
+//! interpreter are bit-identical by construction. Floating-point
+//! epilogues replicate the reference expressions term for term with
+//! all fold constants read from the lowered stages.
+//!
+//! A [`ProgramExecutor`] optionally owns a persistent worker pool:
+//! row tiles of the heavy stages (GEMMs, quantizers, the GELU table)
+//! and whole attention heads shard across it. Chunk boundaries depend
+//! only on (rows, workers), every per-row computation is independent,
+//! and shard results merge in index order — so output bytes never
+//! depend on the worker count or scheduling. [`KernelProgram::execute`]
+//! stays the single-threaded convenience path (one kernel span per
+//! stage on the calling thread, pinned by `tests/trace_contract.rs`).
+
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::ir::{AttnHeadStage, BufKind, KernelProgram, Stage};
+use super::disasm::stage_line;
+use super::ir::{AttnHeadStage, KernelProgram, PackLayout, PackedWeights, Stage};
+use super::simd::{self, Isa, ROW_TILE};
 use crate::block::LN_EPS;
+use crate::obs::{SpanId, StageKind};
 use crate::quant::layernorm::qlayernorm_comparator;
 use crate::quant::linear::IntMat;
 use crate::quant::qtensor::QTensor;
 use crate::quant::round_half_even;
 use crate::quant::softmax::{exact_softmax_row, shift_softmax_row};
+use crate::util::pool::WorkerPool;
 
-/// One executor buffer slot's backing storage.
+/// One executor buffer slot's backing storage, matching the declared
+/// [`PackLayout`]. Slots are `Arc`ed so `'static` shard closures can
+/// share an input buffer with the coordinator without copying it.
 enum BufData {
-    Int(Vec<i32>),
-    Fp(Vec<f32>),
+    I8(Arc<Vec<i8>>),
+    Fp(Arc<Vec<f32>>),
 }
 
-/// Rows of the activation matrix processed per accumulator tile. Small
-/// enough that a tile of accumulators stays cache-resident, large
-/// enough to reuse each streamed weight row several times.
-const ROW_TILE: usize = 4;
+/// Plan-time executor configuration: the GEMM microkernel [`Isa`]
+/// resolved once (runtime CPU detection + `IVIT_KERNEL_ISA` override)
+/// and an optional persistent worker pool (`jit-{i}` threads) that row
+/// tiles and attention heads shard across. Outputs are bit-identical
+/// for any (ISA, workers) pair — pinned by `tests/kernel_parity.rs`.
+pub struct ProgramExecutor {
+    isa: Isa,
+    workers: usize,
+    pool: Option<WorkerPool>,
+}
 
-/// Blocked integer GEMM: `x` is rows×k (row-major codes), `wt` is the
-/// packed k×n transposed weights; returns the rows×n i32 accumulator.
-/// The j-inner loop over a streamed `wt` row is a branch-free
-/// multiply-accumulate the compiler can autovectorize.
-fn gemm_i32(x: &[i32], rows: usize, wt: &[i32], n: usize, k: usize) -> Result<Vec<i32>> {
-    let mut acc64 = vec![0i64; ROW_TILE * n];
-    let mut out = vec![0i32; rows * n];
-    let mut ib = 0;
-    while ib < rows {
-        let rt = ROW_TILE.min(rows - ib);
-        acc64[..rt * n].fill(0);
-        for p in 0..k {
-            let wrow = &wt[p * n..(p + 1) * n];
-            for r in 0..rt {
-                let xv = x[(ib + r) * k + p] as i64;
-                if xv == 0 {
-                    continue;
-                }
-                let arow = &mut acc64[r * n..(r + 1) * n];
-                for (a, &wv) in arow.iter_mut().zip(wrow) {
-                    *a += xv * wv as i64;
+impl ProgramExecutor {
+    /// Single-threaded executor at the given ISA.
+    pub fn inline(isa: Isa) -> ProgramExecutor {
+        ProgramExecutor { isa, workers: 1, pool: None }
+    }
+
+    /// Executor with a persistent shard pool; `workers <= 1` stays
+    /// inline (no pool, no dispatch overhead).
+    pub fn pooled(isa: Isa, workers: usize) -> ProgramExecutor {
+        if workers <= 1 {
+            return ProgramExecutor::inline(isa);
+        }
+        ProgramExecutor { isa, workers, pool: Some(WorkerPool::new("jit", workers)) }
+    }
+
+    /// The GEMM microkernel ISA this executor dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Shard parallelism (1 when inline).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `prog` on one request tensor (see [`KernelProgram::execute`]
+    /// for the single-threaded convenience form).
+    pub fn run(
+        &self,
+        prog: &Arc<KernelProgram>,
+        x: &QTensor,
+    ) -> Result<(QTensor, Option<Vec<f32>>)> {
+        let ctx = ExecCtx {
+            isa: self.isa,
+            pool: self.pool.as_ref().map(|p| (p, prog, self.workers)),
+        };
+        run_program(prog, &ctx, x)
+    }
+}
+
+impl fmt::Debug for ProgramExecutor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ProgramExecutor")
+            .field("isa", &self.isa)
+            .field("workers", &self.workers)
+            .finish()
+    }
+}
+
+/// How one program run executes: the microkernel ISA plus, when
+/// pooled, the pool handle, an `Arc` of the program for `'static`
+/// shard closures, and the shard count.
+struct ExecCtx<'a> {
+    isa: Isa,
+    pool: Option<(&'a WorkerPool, &'a Arc<KernelProgram>, usize)>,
+}
+
+impl KernelProgram {
+    /// Run the compiled program on one request tensor, single-threaded
+    /// at the [`Isa::resolve`]d microkernel ISA. Returns the output
+    /// codes and, when the program tracks one, the fp values buffer
+    /// (attention scope after W_O).
+    pub fn execute(&self, x: &QTensor) -> Result<(QTensor, Option<Vec<f32>>)> {
+        let ctx = ExecCtx { isa: Isa::resolve()?, pool: None };
+        run_program(self, &ctx, x)
+    }
+}
+
+fn run_program(
+    prog: &KernelProgram,
+    ctx: &ExecCtx,
+    x: &QTensor,
+) -> Result<(QTensor, Option<Vec<f32>>)> {
+    prog.check_input(x)?;
+    let rows = x.rows();
+    let mut bufs: Vec<BufData> = prog
+        .bufs
+        .iter()
+        .map(|decl| match decl.layout {
+            PackLayout::I8 => BufData::I8(Arc::new(vec![0i8; rows * decl.cols])),
+            PackLayout::F32 => BufData::Fp(Arc::new(vec![0f32; rows * decl.cols])),
+        })
+        .collect();
+    bufs[0] = BufData::I8(Arc::new(pack_input(&x.codes.data)?));
+    let tracer = crate::obs::global();
+    let mut idx = 0;
+    while idx < prog.stages.len() {
+        if matches!(prog.stages[idx], Stage::AttnHead(_)) {
+            // maximal run of consecutive heads — one lowered attention
+            let mut end = idx + 1;
+            while end < prog.stages.len() && matches!(prog.stages[end], Stage::AttnHead(_)) {
+                end += 1;
+            }
+            run_head_group(prog, ctx, &mut bufs, rows, idx, end)?;
+            idx = end;
+        } else {
+            // one span per executed stage, parented under whatever the
+            // caller has open (plan.submit on the coordinator worker);
+            // a single relaxed load when tracing is off. Shards of a
+            // row-split stage parent under this span by id.
+            let span = tracer.span(stage_kind(&prog.stages[idx]));
+            apply_stage(prog, ctx, idx, &mut bufs, rows, span.id())
+                .with_context(|| format!("kernel stage {}", stage_line(idx, &prog.stages[idx])))?;
+            drop(span);
+            idx += 1;
+        }
+    }
+    let decl = &prog.bufs[prog.out_codes];
+    let codes: Vec<i32> =
+        i8_buf(&bufs, prog.out_codes, "program output")?.iter().map(|&c| c as i32).collect();
+    let out = QTensor::new(IntMat::new(rows, decl.cols, codes), prog.out_spec)?;
+    let values = match prog.out_values {
+        Some(id) => Some(fp_buf(&bufs, id, "program values")?.to_vec()),
+        None => None,
+    };
+    Ok((out, values))
+}
+
+/// Convert validated request codes into the packed input layout.
+/// `QTensor::new` already range-checked every code against its spec
+/// (at most 8 signed bits), so a miss here means a corrupted tensor.
+fn pack_input(codes: &[i32]) -> Result<Vec<i8>> {
+    codes
+        .iter()
+        .map(|&c| {
+            i8::try_from(c)
+                .map_err(|_| anyhow!("input code {c} does not fit the packed i8 activation layout"))
+        })
+        .collect()
+}
+
+/// Narrow a clamped i32 code into the packed i8 layout. Callers clamp
+/// to an at-most-8-bit signed range first, so the cast is exact; the
+/// debug assert guards the invariant in test builds.
+#[inline]
+fn pack_code(v: i32) -> i8 {
+    debug_assert!((i8::MIN as i32..=i8::MAX as i32).contains(&v), "code {v} escapes i8");
+    v as i8
+}
+
+/// Narrow a clamped attention-probability code (unsigned, at most
+/// 8 bits) into the executor's internal `u8` temporary layout.
+#[inline]
+fn pack_prob(v: i32) -> u8 {
+    debug_assert!((0..=u8::MAX as i32).contains(&v), "prob code {v} escapes u8");
+    v as u8
+}
+
+fn i8_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a Arc<Vec<i8>>> {
+    match &bufs[id] {
+        BufData::I8(v) => Ok(v),
+        BufData::Fp(_) => bail!("{what}: buffer %{id} holds fp data, expected packed codes"),
+    }
+}
+
+fn fp_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a Arc<Vec<f32>>> {
+    match &bufs[id] {
+        BufData::Fp(v) => Ok(v),
+        BufData::I8(_) => bail!("{what}: buffer %{id} holds packed codes, expected fp data"),
+    }
+}
+
+/// Contiguous row ranges, one per shard, aligned to the GEMM row tile
+/// so no accumulator tile spans a shard boundary. Depends only on
+/// (rows, shards): chunking — and therefore output assembly — is
+/// deterministic for any worker count.
+fn row_chunks(rows: usize, shards: usize) -> Vec<(usize, usize)> {
+    let tiles = rows / ROW_TILE + usize::from(rows % ROW_TILE != 0);
+    let shards = shards.clamp(1, tiles.max(1));
+    let (base, extra) = (tiles / shards, tiles % shards);
+    let mut out = Vec::with_capacity(shards);
+    let mut tile = 0;
+    for s in 0..shards {
+        let take = base + usize::from(s < extra);
+        let (t0, t1) = (tile, tile + take);
+        tile = t1;
+        let (r0, r1) = ((t0 * ROW_TILE).min(rows), (t1 * ROW_TILE).min(rows));
+        if r0 < r1 {
+            out.push((r0, r1));
+        }
+    }
+    out
+}
+
+/// The pool handle + row chunking when this stage should shard:
+/// `None` when inline, single-worker, or when the request is too small
+/// to split past one tile-aligned chunk.
+fn pooled<'a>(
+    ctx: &ExecCtx<'a>,
+    rows: usize,
+) -> Option<(&'a WorkerPool, &'a Arc<KernelProgram>, Vec<(usize, usize)>)> {
+    let (pool, arc, workers) = ctx.pool?;
+    let chunks = row_chunks(rows, workers);
+    if chunks.len() < 2 {
+        return None;
+    }
+    Some((pool, arc, chunks))
+}
+
+/// Drain `n` indexed shard results, merging in index order. The lowest
+/// shard index's error wins so failure messages are deterministic for
+/// any completion order.
+fn collect_shards<T>(rx: mpsc::Receiver<(usize, Result<T>)>, n: usize) -> Result<Vec<T>> {
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    for _ in 0..n {
+        match rx.recv() {
+            Ok((i, Ok(v))) => slots[i] = Some(v),
+            Ok((i, Err(e))) => {
+                let lowest = match &first_err {
+                    Some((j, _)) => i < *j,
+                    None => true,
+                };
+                if lowest {
+                    first_err = Some((i, e));
                 }
             }
+            Err(_) => bail!("kernel worker pool died mid-stage"),
         }
-        for r in 0..rt {
-            for j in 0..n {
-                out[(ib + r) * n + j] = i32::try_from(acc64[r * n + j]).map_err(|_| {
-                    anyhow!("integer accumulator overflow at ({}, {j})", ib + r)
-                })?;
-            }
+    }
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("kernel shard {i} produced no result")))
+        .collect()
+}
+
+/// Run `work(r0, r1)` for each chunk on the pool and concatenate the
+/// per-chunk outputs in chunk order. Each shard runs under a `Shard`
+/// span parented to the stage span and is panic-isolated.
+fn dispatch_rows<T, F>(
+    pool: &WorkerPool,
+    chunks: &[(usize, usize)],
+    shard_parent: SpanId,
+    work: F,
+) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(usize, usize) -> Result<Vec<T>> + Clone + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    for (i, &(r0, r1)) in chunks.iter().enumerate() {
+        let (tx, work) = (tx.clone(), work.clone());
+        pool.submit(Box::new(move || {
+            let _span = crate::obs::global().span_with_parent(StageKind::Shard, shard_parent);
+            let r = catch_unwind(AssertUnwindSafe(|| work(r0, r1)))
+                .unwrap_or_else(|_| Err(anyhow!("kernel shard {i} (rows {r0}..{r1}) panicked")));
+            let _ = tx.send((i, r));
+        }))?;
+    }
+    drop(tx);
+    Ok(collect_shards(rx, chunks.len())?.into_iter().flatten().collect())
+}
+
+/// Error context for GEMM overflow messages: the stage label and the
+/// activation buffer the failing codes were read from.
+#[derive(Clone, Copy)]
+struct GemmErr<'a> {
+    label: &'a str,
+    src: &'a str,
+}
+
+/// Projection GEMM through the packed weights, with overflow errors
+/// naming the stage, the source buffer and the program-global row.
+fn gemm(
+    isa: Isa,
+    x: &[i8],
+    rows: usize,
+    w: &PackedWeights,
+    row_base: usize,
+    err: GemmErr<'_>,
+) -> Result<Vec<i32>> {
+    simd::gemm_i8(isa, x, rows, &w.wt, w.n, w.k).map_err(|o| {
+        anyhow!(
+            "integer accumulator overflow at ({}, {}) in '{}' (reading codes from buffer '{}')",
+            row_base + o.row,
+            o.col,
+            err.label,
+            err.src
+        )
+    })
+}
+
+/// GemmScale epilogue for rows [r0, r1) of the full activation buffer:
+/// `(acc + bias_j) * scale_j`, per-element fp identical to the
+/// interpreter, so chunk boundaries never change the bytes.
+fn gemm_scale_rows(
+    isa: Isa,
+    x: &[i8],
+    span: (usize, usize),
+    w: &PackedWeights,
+    scale: &[f32],
+    err: GemmErr<'_>,
+) -> Result<Vec<f32>> {
+    let (r0, r1) = span;
+    let acc = gemm(isa, &x[r0 * w.k..r1 * w.k], r1 - r0, w, r0, err)?;
+    let mut out = vec![0f32; (r1 - r0) * w.n];
+    for i in 0..r1 - r0 {
+        for j in 0..w.n {
+            out[i * w.n + j] = (acc[i * w.n + j] as f32 + w.bias[j]) * scale[j];
         }
-        ib += rt;
     }
     Ok(out)
 }
 
-fn int_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a [i32]> {
-    match &bufs[id] {
-        BufData::Int(v) => Ok(v),
-        BufData::Fp(_) => bail!("{what}: buffer %{id} holds fp data, expected int codes"),
-    }
-}
-
-fn fp_buf<'a>(bufs: &'a [BufData], id: usize, what: &str) -> Result<&'a [f32]> {
-    match &bufs[id] {
-        BufData::Fp(v) => Ok(v),
-        BufData::Int(_) => bail!("{what}: buffer %{id} holds int codes, expected fp data"),
-    }
-}
-
-/// One fused attention head: QKᵀ → softmax → probability quantizer →
-/// attn·V → PV requantizer into this head's column block of `dst`.
-fn apply_attn_head(s: &AttnHeadStage, bufs: &mut [BufData], rows: usize) -> Result<()> {
-    let off = s.head * s.dh;
-    let (q, k, v) = (
-        int_buf(bufs, s.q, "attn.head q")?,
-        int_buf(bufs, s.k, "attn.head k")?,
-        int_buf(bufs, s.v, "attn.head v")?,
-    );
-    // Gather this head's Q rows and pack Kᵀ so the score GEMM streams
-    // contiguously: kt[p * rows + j] = K[j, off + p].
-    let mut qh = vec![0i32; rows * s.dh];
-    let mut kt = vec![0i32; s.dh * rows];
-    for i in 0..rows {
-        qh[i * s.dh..(i + 1) * s.dh].copy_from_slice(&q[i * s.d + off..i * s.d + off + s.dh]);
-        for p in 0..s.dh {
-            kt[p * rows + i] = k[i * s.d + off + p];
+/// GemmRequant epilogue for rows [r0, r1): absorbed-scale requantizer
+/// `round_half_even((acc + bias_j) * eff_j)` clamped to the out range.
+fn gemm_requant_rows(
+    isa: Isa,
+    x: &[i8],
+    span: (usize, usize),
+    w: &PackedWeights,
+    eff: &[f32],
+    clamp: (i32, i32),
+    err: GemmErr<'_>,
+) -> Result<Vec<i8>> {
+    let (r0, r1) = span;
+    let (qmin, qmax) = clamp;
+    let acc = gemm(isa, &x[r0 * w.k..r1 * w.k], r1 - r0, w, r0, err)?;
+    let mut out = vec![0i8; (r1 - r0) * w.n];
+    for i in 0..r1 - r0 {
+        for j in 0..w.n {
+            let v = (acc[i * w.n + j] as f32 + w.bias[j]) * eff[j];
+            out[i * w.n + j] = pack_code((round_half_even(v) as i32).clamp(qmin, qmax));
         }
     }
-    let scores = gemm_i32(&qh, rows, &kt, rows, s.dh)?;
+    Ok(out)
+}
+
+/// Uniform quantizer over a pre-sliced row range.
+fn quantize_rows(x: &[f32], step: f32, qmin: i32, qmax: i32) -> Vec<i8> {
+    x.iter().map(|&v| pack_code((round_half_even(v / step) as i32).clamp(qmin, qmax))).collect()
+}
+
+/// GELU table lookup over a pre-sliced row range.
+fn gelu_rows(x: &[i8], lo: i32, table: &[i32]) -> Result<Vec<i8>> {
+    x.iter()
+        .map(|&c| {
+            let c = c as i32;
+            table
+                .get((c - lo) as usize)
+                .map(|&v| pack_code(v))
+                .ok_or_else(|| anyhow!("gelu.lut: code {c} outside inlined table"))
+        })
+        .collect()
+}
+
+/// One fused attention head over all rows: QKᵀ → softmax → probability
+/// quantizer (internal `u8` temporaries) → attn·V → PV requantizer.
+/// Reads the head's column block at the lowering-baked descriptor
+/// offset `s.off` and returns the rows×dh output block.
+fn attn_head_rows(
+    isa: Isa,
+    s: &AttnHeadStage,
+    q: &[i8],
+    k: &[i8],
+    v: &[i8],
+    rows: usize,
+) -> Result<Vec<i8>> {
+    // Gather this head's Q rows and pack Kᵀ so the score GEMM streams
+    // contiguously: kt[p * rows + j] = K[j, off + p].
+    let mut qh = vec![0i8; rows * s.dh];
+    let mut kt = vec![0i8; s.dh * rows];
+    for i in 0..rows {
+        let base = i * s.d + s.off;
+        qh[i * s.dh..(i + 1) * s.dh].copy_from_slice(&q[base..base + s.dh]);
+        for p in 0..s.dh {
+            kt[p * rows + i] = k[base + p];
+        }
+    }
+    let scores = simd::gemm_i8(isa, &qh, rows, &kt, rows, s.dh).map_err(|o| {
+        anyhow!(
+            "integer accumulator overflow at ({}, {}) in 'h{} scores' (reading q/k head codes)",
+            o.row,
+            o.col,
+            s.head
+        )
+    })?;
     // Eq. 3/4: scale scores, softmax per row, quantize probabilities.
-    let mut probs = vec![0i32; rows * rows];
+    let mut probs = vec![0u8; rows * rows];
     for i in 0..rows {
         let row: Vec<f32> = scores[i * rows..(i + 1) * rows]
             .iter()
             .map(|&sc| sc as f32 * s.score_scale)
             .collect();
         let p = if s.shift { shift_softmax_row(&row) } else { exact_softmax_row(&row) };
-        for (j, &pj) in p.iter().enumerate() {
-            probs[i * rows + j] =
-                (round_half_even(pj / s.step_attn) as i32).clamp(s.a_qmin, s.a_qmax);
+        for (o, &pj) in probs[i * rows..(i + 1) * rows].iter_mut().zip(&p) {
+            *o = pack_prob((round_half_even(pj / s.step_attn) as i32).clamp(s.a_qmin, s.a_qmax));
         }
     }
     // Pack Vᵀ-of-the-transpose: vt[p * dh + j] = V[p, off + j], i.e.
     // the attn·V reduction streams V's head column block row by row.
-    let mut vt = vec![0i32; rows * s.dh];
+    let mut vt = vec![0i8; rows * s.dh];
     for p in 0..rows {
-        vt[p * s.dh..(p + 1) * s.dh].copy_from_slice(&v[p * s.d + off..p * s.d + off + s.dh]);
+        let base = p * s.d + s.off;
+        vt[p * s.dh..(p + 1) * s.dh].copy_from_slice(&v[base..base + s.dh]);
     }
-    let acc = gemm_i32(&probs, rows, &vt, s.dh, rows)?;
-    let dst = match &mut bufs[s.dst] {
-        BufData::Int(v) => v,
-        BufData::Fp(_) => bail!("attn.head dst: buffer %{} holds fp data", s.dst),
+    let acc = simd::gemm_u8(isa, &probs, rows, &vt, s.dh, rows).map_err(|o| {
+        anyhow!(
+            "integer accumulator overflow at ({}, {}) in 'h{} attn·v' (reading prob/v codes)",
+            o.row,
+            o.col,
+            s.head
+        )
+    })?;
+    let mut out = vec![0i8; rows * s.dh];
+    for (o, &a) in out.iter_mut().zip(&acc) {
+        let val = round_half_even(a as f32 * s.eff_pv) as i32;
+        *o = pack_code(val.clamp(s.o_qmin, s.o_qmax));
+    }
+    Ok(out)
+}
+
+/// Scatter one head's rows×dh output block into its `off..off + dh`
+/// column window of the shared rows×d destination.
+fn scatter_head(dst: &mut [i8], block: &[i8], rows: usize, d: usize, off: usize, dh: usize) {
+    for r in 0..rows {
+        dst[r * d + off..r * d + off + dh].copy_from_slice(&block[r * dh..(r + 1) * dh]);
+    }
+}
+
+/// Per-head output + optional (start, end) timestamps for the trace.
+type HeadOut = (Vec<i8>, Option<(Instant, Instant)>);
+
+/// Execute a maximal run of consecutive `attn.head` stages
+/// ([start, end)): one lowered attention. The heads share q/k/v and
+/// each writes its own lowering-baked `off..off + dh` column block of
+/// a fresh destination, so whole heads shard across the pool with
+/// index-merged, deterministic assembly.
+fn run_head_group(
+    prog: &KernelProgram,
+    ctx: &ExecCtx,
+    bufs: &mut [BufData],
+    rows: usize,
+    start: usize,
+    end: usize,
+) -> Result<()> {
+    let first = match &prog.stages[start] {
+        Stage::AttnHead(s) => s,
+        _ => unreachable!("head group starts at an attn.head stage"),
     };
-    for i in 0..rows {
-        for j in 0..s.dh {
-            let val = round_half_even(acc[i * s.dh + j] as f32 * s.eff_pv) as i32;
-            dst[i * s.d + off + j] = val.clamp(s.o_qmin, s.o_qmax);
+    if cfg!(debug_assertions) {
+        for stage in &prog.stages[start..end] {
+            if let Stage::AttnHead(s) = stage {
+                debug_assert!(
+                    s.q == first.q && s.k == first.k && s.v == first.v && s.dst == first.dst,
+                    "attn.head group mixes buffers"
+                );
+            }
         }
     }
+    let (dst_id, d) = (first.dst, first.d);
+    let q = Arc::clone(i8_buf(bufs, first.q, "attn.head q")?);
+    let k = Arc::clone(i8_buf(bufs, first.k, "attn.head k")?);
+    let v = Arc::clone(i8_buf(bufs, first.v, "attn.head v")?);
+    let tracer = crate::obs::global();
+    let mut dst = vec![0i8; rows * d];
+    match ctx.pool {
+        Some((pool, arc, _)) if end - start > 1 => {
+            let parent = tracer.current_parent();
+            let (tx, rx) = mpsc::channel();
+            for (i, si) in (start..end).enumerate() {
+                let (tx, arc) = (tx.clone(), Arc::clone(arc));
+                let (q, k, v) = (Arc::clone(&q), Arc::clone(&k), Arc::clone(&v));
+                let isa = ctx.isa;
+                pool.submit(Box::new(move || {
+                    let tr = crate::obs::global();
+                    let _span = tr.span_with_parent(StageKind::Shard, parent);
+                    let r = catch_unwind(AssertUnwindSafe(|| -> Result<HeadOut> {
+                        let s = match &arc.stages[si] {
+                            Stage::AttnHead(s) => s,
+                            other => bail!("attn.head group stage changed to {}", other.opcode()),
+                        };
+                        let t0 = tr.enabled().then(Instant::now);
+                        let block = attn_head_rows(isa, s, &q, &k, &v, rows).with_context(|| {
+                            format!("kernel stage {}", stage_line(si, &arc.stages[si]))
+                        })?;
+                        Ok((block, t0.map(|a| (a, Instant::now()))))
+                    }))
+                    .unwrap_or_else(|_| Err(anyhow!("kernel attn.head shard {i} panicked")));
+                    let _ = tx.send((i, r));
+                }))?;
+            }
+            drop(tx);
+            let parts = collect_shards(rx, end - start)?;
+            for (i, (block, ts)) in parts.into_iter().enumerate() {
+                let s = match &prog.stages[start + i] {
+                    Stage::AttnHead(s) => s,
+                    _ => unreachable!("attn.head group stage changed kind"),
+                };
+                if let Some((a, b)) = ts {
+                    tracer.record_interval(StageKind::AttnHead, parent, a, b);
+                }
+                scatter_head(&mut dst, &block, rows, d, s.off, s.dh);
+            }
+        }
+        _ => {
+            for si in start..end {
+                let s = match &prog.stages[si] {
+                    Stage::AttnHead(s) => s,
+                    _ => unreachable!("attn.head group stage changed kind"),
+                };
+                let _span = tracer.span(StageKind::AttnHead);
+                let block = attn_head_rows(ctx.isa, s, &q, &k, &v, rows)
+                    .with_context(|| format!("kernel stage {}", stage_line(si, &prog.stages[si])))?;
+                scatter_head(&mut dst, &block, rows, d, s.off, s.dh);
+            }
+        }
+    }
+    bufs[dst_id] = BufData::I8(Arc::new(dst));
     Ok(())
 }
 
-fn apply_stage(stage: &Stage, bufs: &mut [BufData], rows: usize) -> Result<()> {
-    match stage {
-        Stage::GemmScale { src, dst, w, scale, .. } => {
-            let x = int_buf(bufs, *src, "gemm.scale src")?;
-            let acc = gemm_i32(x, rows, &w.wt, w.n, w.k)?;
-            let out = match &mut bufs[*dst] {
-                BufData::Fp(v) => v,
-                BufData::Int(_) => bail!("gemm.scale dst: buffer %{dst} holds int codes"),
-            };
-            for j in 0..w.n {
-                let (s, b) = (scale[j], w.bias[j]);
-                for i in 0..rows {
-                    out[i * w.n + j] = (acc[i * w.n + j] as f32 + b) * s;
+fn apply_stage(
+    prog: &KernelProgram,
+    ctx: &ExecCtx,
+    idx: usize,
+    bufs: &mut [BufData],
+    rows: usize,
+    shard_parent: SpanId,
+) -> Result<()> {
+    match &prog.stages[idx] {
+        Stage::GemmScale { src, dst, w, scale, label } => {
+            let src_name = prog.bufs[*src].name;
+            let x = Arc::clone(i8_buf(bufs, *src, "gemm.scale src")?);
+            let out = match pooled(ctx, rows) {
+                Some((pool, arc, chunks)) => {
+                    let (arc, isa) = (Arc::clone(arc), ctx.isa);
+                    dispatch_rows(pool, &chunks, shard_parent, move |r0, r1| {
+                        match &arc.stages[idx] {
+                            Stage::GemmScale { w, scale, label, .. } => {
+                                let err = GemmErr { label, src: src_name };
+                                gemm_scale_rows(isa, &x, (r0, r1), w, scale, err)
+                            }
+                            other => bail!("stage {idx} changed to {}", other.opcode()),
+                        }
+                    })?
                 }
-            }
+                None => {
+                    let err = GemmErr { label, src: src_name };
+                    gemm_scale_rows(ctx.isa, &x, (0, rows), w, scale, err)?
+                }
+            };
+            bufs[*dst] = BufData::Fp(Arc::new(out));
         }
-        Stage::GemmRequant { src, dst, w, eff, qmin, qmax, .. } => {
-            let x = int_buf(bufs, *src, "gemm.requant src")?;
-            let acc = gemm_i32(x, rows, &w.wt, w.n, w.k)?;
-            let out = match &mut bufs[*dst] {
-                BufData::Int(v) => v,
-                BufData::Fp(_) => bail!("gemm.requant dst: buffer %{dst} holds fp data"),
-            };
-            for j in 0..w.n {
-                let (e, b) = (eff[j], w.bias[j]);
-                for i in 0..rows {
-                    let v = (acc[i * w.n + j] as f32 + b) * e;
-                    out[i * w.n + j] = (round_half_even(v) as i32).clamp(*qmin, *qmax);
+        Stage::GemmRequant { src, dst, w, eff, qmin, qmax, label, .. } => {
+            let src_name = prog.bufs[*src].name;
+            let clamp = (*qmin, *qmax);
+            let x = Arc::clone(i8_buf(bufs, *src, "gemm.requant src")?);
+            let out = match pooled(ctx, rows) {
+                Some((pool, arc, chunks)) => {
+                    let (arc, isa) = (Arc::clone(arc), ctx.isa);
+                    dispatch_rows(pool, &chunks, shard_parent, move |r0, r1| {
+                        match &arc.stages[idx] {
+                            Stage::GemmRequant { w, eff, label, .. } => {
+                                let err = GemmErr { label, src: src_name };
+                                gemm_requant_rows(isa, &x, (r0, r1), w, eff, clamp, err)
+                            }
+                            other => bail!("stage {idx} changed to {}", other.opcode()),
+                        }
+                    })?
                 }
-            }
+                None => {
+                    let err = GemmErr { label, src: src_name };
+                    gemm_requant_rows(ctx.isa, &x, (0, rows), w, eff, clamp, err)?
+                }
+            };
+            bufs[*dst] = BufData::I8(Arc::new(out));
         }
         Stage::LayerNormQuant { src, dst, gamma, beta, step, bits, .. } => {
             let d = gamma.len();
             let x = fp_buf(bufs, *src, "ln.quant src")?;
-            let mut codes = vec![0i32; rows * d];
+            let mut codes = vec![0i8; rows * d];
             for r in 0..rows {
-                let row = qlayernorm_comparator(
-                    &x[r * d..(r + 1) * d],
-                    gamma,
-                    beta,
-                    *step,
-                    *bits,
-                    LN_EPS,
-                );
-                codes[r * d..(r + 1) * d].copy_from_slice(&row);
+                let x_row = &x[r * d..(r + 1) * d];
+                let row = qlayernorm_comparator(x_row, gamma, beta, *step, *bits, LN_EPS);
+                for (o, &c) in codes[r * d..(r + 1) * d].iter_mut().zip(&row) {
+                    *o = pack_code(c);
+                }
             }
-            bufs[*dst] = BufData::Int(codes);
+            bufs[*dst] = BufData::I8(Arc::new(codes));
         }
         Stage::Dequantize { src, dst, step, .. } => {
-            let x = int_buf(bufs, *src, "dequant src")?;
+            let x = i8_buf(bufs, *src, "dequant src")?;
             let out: Vec<f32> = x.iter().map(|&c| c as f32 * step).collect();
-            bufs[*dst] = BufData::Fp(out);
+            bufs[*dst] = BufData::Fp(Arc::new(out));
         }
         Stage::Quantize { src, dst, step, qmin, qmax, .. } => {
-            let x = fp_buf(bufs, *src, "quant src")?;
-            let out: Vec<i32> = x
-                .iter()
-                .map(|&v| (round_half_even(v / step) as i32).clamp(*qmin, *qmax))
-                .collect();
-            bufs[*dst] = BufData::Int(out);
+            let cols = prog.bufs[*src].cols;
+            let x = Arc::clone(fp_buf(bufs, *src, "quant src")?);
+            let out = match pooled(ctx, rows) {
+                Some((pool, _arc, chunks)) => {
+                    let (step, qmin, qmax) = (*step, *qmin, *qmax);
+                    dispatch_rows(pool, &chunks, shard_parent, move |r0, r1| {
+                        Ok(quantize_rows(&x[r0 * cols..r1 * cols], step, qmin, qmax))
+                    })?
+                }
+                None => quantize_rows(&x, *step, *qmin, *qmax),
+            };
+            bufs[*dst] = BufData::I8(Arc::new(out));
         }
         Stage::GeluLut { src, dst, lo, table, .. } => {
-            let x = int_buf(bufs, *src, "gelu.lut src")?;
-            let mut out = vec![0i32; x.len()];
-            for (o, &c) in out.iter_mut().zip(x) {
-                *o = *table
-                    .get((c - lo) as usize)
-                    .ok_or_else(|| anyhow!("gelu.lut: code {c} outside inlined table"))?;
-            }
-            bufs[*dst] = BufData::Int(out);
+            let cols = prog.bufs[*src].cols;
+            let x = Arc::clone(i8_buf(bufs, *src, "gelu.lut src")?);
+            let out = match pooled(ctx, rows) {
+                Some((pool, arc, chunks)) => {
+                    let arc = Arc::clone(arc);
+                    dispatch_rows(pool, &chunks, shard_parent, move |r0, r1| {
+                        match &arc.stages[idx] {
+                            Stage::GeluLut { lo, table, .. } => {
+                                gelu_rows(&x[r0 * cols..r1 * cols], *lo, table)
+                            }
+                            other => bail!("stage {idx} changed to {}", other.opcode()),
+                        }
+                    })?
+                }
+                None => gelu_rows(&x, *lo, table)?,
+            };
+            bufs[*dst] = BufData::I8(Arc::new(out));
         }
-        Stage::AttnHead(s) => apply_attn_head(s, bufs, rows)?,
+        Stage::AttnHead(_) => unreachable!("attn.head stages execute via run_head_group"),
         Stage::Residual { main, skip, dst, eff_main, eff_skip, qmin, qmax, .. } => {
-            let a = int_buf(bufs, *main, "residual main")?;
-            let b = int_buf(bufs, *skip, "residual skip")?;
-            let mut out = vec![0i32; a.len()];
-            for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+            let a = i8_buf(bufs, *main, "residual main")?;
+            let b = i8_buf(bufs, *skip, "residual skip")?;
+            let mut out = vec![0i8; a.len()];
+            for ((o, &av), &bv) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
                 let v = av as f32 * eff_main + bv as f32 * eff_skip;
-                *o = (round_half_even(v) as i32).clamp(*qmin, *qmax);
+                *o = pack_code((round_half_even(v) as i32).clamp(*qmin, *qmax));
             }
-            bufs[*dst] = BufData::Int(out);
+            bufs[*dst] = BufData::I8(Arc::new(out));
         }
     }
     Ok(())
@@ -222,8 +697,7 @@ fn apply_stage(stage: &Stage, bufs: &mut [BufData], rows: usize) -> Result<()> {
 /// Trace kind of one IR stage (the closed [`StageKind`] mirror of
 /// [`Stage::opcode`] — a direct variant match, no string lookup on the
 /// execute path).
-fn stage_kind(stage: &Stage) -> crate::obs::StageKind {
-    use crate::obs::StageKind;
+fn stage_kind(stage: &Stage) -> StageKind {
     match stage {
         Stage::GemmScale { .. } => StageKind::GemmScale,
         Stage::GemmRequant { .. } => StageKind::GemmRequant,
@@ -236,38 +710,41 @@ fn stage_kind(stage: &Stage) -> crate::obs::StageKind {
     }
 }
 
-impl KernelProgram {
-    /// Run the compiled program on one request tensor. Returns the
-    /// output codes and, when the program tracks one, the fp values
-    /// buffer (attention scope after W_O).
-    pub fn execute(&self, x: &QTensor) -> Result<(QTensor, Option<Vec<f32>>)> {
-        self.check_input(x)?;
-        let rows = x.rows();
-        let mut bufs: Vec<BufData> = self
-            .bufs
-            .iter()
-            .map(|decl| match decl.kind {
-                BufKind::Int => BufData::Int(vec![0i32; rows * decl.cols]),
-                BufKind::Fp => BufData::Fp(vec![0f32; rows * decl.cols]),
-            })
-            .collect();
-        bufs[0] = BufData::Int(x.codes.data.clone());
-        let tracer = crate::obs::global();
-        for (idx, stage) in self.stages.iter().enumerate() {
-            // one span per executed stage, parented under whatever the
-            // caller has open (plan.submit on the coordinator worker);
-            // a single relaxed load when tracing is off
-            let _span = tracer.span(stage_kind(stage));
-            apply_stage(stage, &mut bufs, rows)
-                .with_context(|| format!("kernel stage [{idx:02}] {}", stage.opcode()))?;
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_chunks_cover_rows_in_order_and_align_to_tiles() {
+        for rows in [0usize, 1, 3, 4, 5, 17, 64, 198, 385] {
+            for shards in [1usize, 2, 3, 5, 8] {
+                let chunks = row_chunks(rows, shards);
+                assert!(chunks.len() <= shards, "rows {rows} shards {shards}");
+                let mut next = 0;
+                for &(r0, r1) in &chunks {
+                    assert_eq!(r0, next, "rows {rows} shards {shards}");
+                    assert!(r1 > r0, "empty chunk at rows {rows} shards {shards}");
+                    assert_eq!(r0 % ROW_TILE, 0, "chunk start {r0} is not tile-aligned");
+                    next = r1;
+                }
+                assert_eq!(next, rows, "chunks must cover every row exactly once");
+            }
         }
-        let decl = &self.bufs[self.out_codes];
-        let codes = int_buf(&bufs, self.out_codes, "program output")?.to_vec();
-        let out = QTensor::new(IntMat::new(rows, decl.cols, codes), self.out_spec)?;
-        let values = match self.out_values {
-            Some(id) => Some(fp_buf(&bufs, id, "program values")?.to_vec()),
-            None => None,
-        };
-        Ok((out, values))
+    }
+
+    #[test]
+    fn row_chunking_is_a_pure_function_of_rows_and_shards() {
+        assert_eq!(row_chunks(198, 4), row_chunks(198, 4));
+        // one worker, or fewer tiles than workers, degrades gracefully
+        assert_eq!(row_chunks(198, 1), vec![(0, 198)]);
+        assert_eq!(row_chunks(3, 8), vec![(0, 3)]);
+        assert!(row_chunks(0, 4).is_empty());
+    }
+
+    #[test]
+    fn input_packing_rejects_codes_outside_i8() {
+        assert_eq!(pack_input(&[-128, 0, 127]).unwrap(), vec![-128, 0, 127]);
+        let err = pack_input(&[1, 200, 3]).unwrap_err().to_string();
+        assert!(err.contains("input code 200"), "{err}");
     }
 }

@@ -22,7 +22,7 @@ pub type BufId = usize;
 /// What a buffer slot holds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BufKind {
-    /// Integer codes (`i32` storage, low-bit values).
+    /// Integer codes (packed narrow storage, low-bit values).
     Int,
     /// Floating-point activations.
     Fp,
@@ -37,12 +37,38 @@ impl BufKind {
     }
 }
 
-/// One buffer slot declaration: kind + column count. Rows are the
-/// request's token count — the one dimension not baked at lowering.
+/// The executor storage layout of a buffer or weight matrix, chosen at
+/// lowering time. The profile validator caps every site at 8 bits and
+/// all code buffers are signed, so integer slots always lower to the
+/// packed [`PackLayout::I8`] form — 4× more operands per cache line
+/// (and per SIMD lane) than the old `i32` storage. (Quantized
+/// attention probabilities are unsigned up to 255; they live in
+/// executor-internal `u8` temporaries, never in a declared buffer.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackLayout {
+    /// Packed signed 8-bit codes.
+    I8,
+    /// 32-bit floating point.
+    F32,
+}
+
+impl PackLayout {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PackLayout::I8 => "i8",
+            PackLayout::F32 => "f32",
+        }
+    }
+}
+
+/// One buffer slot declaration: kind + storage layout + column count.
+/// Rows are the request's token count — the one dimension not baked at
+/// lowering.
 #[derive(Debug, Clone)]
 pub struct BufDecl {
     pub name: &'static str,
     pub kind: BufKind,
+    pub layout: PackLayout,
     pub cols: usize,
 }
 
@@ -53,7 +79,10 @@ pub struct BufDecl {
 /// multiply-accumulate the compiler can vectorize.
 #[derive(Debug, Clone)]
 pub struct PackedWeights {
-    pub wt: Vec<i32>,
+    /// Transposed weight codes in the packed narrow layout
+    /// ([`PackLayout::I8`]): every valid profile width (≤ 8 signed
+    /// bits) fits; [`PackedWeights::pack`] rejects anything wider.
+    pub wt: Vec<i8>,
     /// Output columns (N of the folded linear).
     pub n: usize,
     /// Reduction depth (K of the folded linear).
@@ -63,17 +92,28 @@ pub struct PackedWeights {
 }
 
 impl PackedWeights {
-    /// Pack an N×K weight-code matrix (plus its folded bias).
+    /// Pack an N×K weight-code matrix (plus its folded bias) into the
+    /// narrow `i8` layout.
     pub fn pack(codes: &IntMat, bias: &[f32]) -> Result<PackedWeights> {
         let (n, k) = (codes.rows, codes.cols);
         ensure!(bias.len() == n, "folded bias length {} != {n} output columns", bias.len());
-        let mut wt = vec![0i32; n * k];
+        let mut wt = vec![0i8; n * k];
         for j in 0..n {
             for p in 0..k {
-                wt[p * n + j] = codes.at(j, p);
+                let c = codes.at(j, p);
+                ensure!(
+                    (i8::MIN as i32..=i8::MAX as i32).contains(&c),
+                    "weight code {c} at ({j}, {p}) does not fit the packed i8 layout"
+                );
+                wt[p * n + j] = c as i8;
             }
         }
         Ok(PackedWeights { wt, n, k, bias: bias.to_vec() })
+    }
+
+    /// The executor storage layout of the packed matrix.
+    pub fn layout(&self) -> PackLayout {
+        PackLayout::I8
     }
 }
 
@@ -85,6 +125,10 @@ pub struct AttnHeadStage {
     pub head: usize,
     /// Head dimension (columns this head owns in `q`/`k`/`v`/`dst`).
     pub dh: usize,
+    /// Lowering-time head descriptor: this head's first column in the
+    /// shared `q`/`k`/`v`/`dst` buffers (`head · dh`, baked so the
+    /// executor never re-derives per-head strides per request).
+    pub off: usize,
     /// Full projection width D = heads · dh.
     pub d: usize,
     pub q: BufId,
@@ -240,7 +284,11 @@ impl KernelProgram {
     }
 
     pub(crate) fn push_buf(&mut self, name: &'static str, kind: BufKind, cols: usize) -> BufId {
-        self.bufs.push(BufDecl { name, kind, cols });
+        let layout = match kind {
+            BufKind::Int => PackLayout::I8,
+            BufKind::Fp => PackLayout::F32,
+        };
+        self.bufs.push(BufDecl { name, kind, layout, cols });
         self.bufs.len() - 1
     }
 
@@ -283,5 +331,57 @@ impl KernelProgram {
             want.step.get()
         );
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int_range;
+    use crate::util::proptest::prop_check;
+
+    /// Packing round-trip at every profile width: random N×K code
+    /// matrices in the signed `bits` range transpose into the `i8`
+    /// layout losslessly — `wt[p * n + j] == codes.at(j, p)`.
+    #[test]
+    fn packing_round_trips_for_all_profile_widths() {
+        for bits in 2..=8u32 {
+            let (qmin, qmax) = int_range(bits);
+            prop_check(&format!("pack round-trip s{bits}"), 90 + bits as u64, 24, |rng| {
+                let n = rng.int_in(1, 12) as usize;
+                let k = rng.int_in(1, 12) as usize;
+                let codes = IntMat::new(n, k, rng.codes(n * k, qmin, qmax));
+                let bias = vec![0.0; n];
+                let w = PackedWeights::pack(&codes, &bias).map_err(|e| e.to_string())?;
+                if (w.n, w.k) != (n, k) {
+                    return Err(format!("geometry ({}, {}) != ({n}, {k})", w.n, w.k));
+                }
+                for j in 0..n {
+                    for p in 0..k {
+                        let (got, want) = (w.wt[p * n + j] as i32, codes.at(j, p));
+                        if got != want {
+                            return Err(format!("wt[{p} * n + {j}] = {got} != code {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    /// The negative half: codes outside the i8 range (impossible for a
+    /// validated ≤ 8-bit profile) are rejected loudly, not truncated.
+    #[test]
+    fn packing_rejects_codes_wider_than_i8() {
+        for bad in [i8::MIN as i32 - 1, i8::MAX as i32 + 1, 300] {
+            let codes = IntMat::new(2, 2, vec![1, -1, bad, 0]);
+            let err = PackedWeights::pack(&codes, &[0.0, 0.0]).unwrap_err();
+            assert!(err.to_string().contains("does not fit the packed i8 layout"), "{err}");
+        }
+        // the extremes of the widest signed profile width still fit
+        let codes = IntMat::new(1, 2, vec![i8::MIN as i32, i8::MAX as i32]);
+        let w = PackedWeights::pack(&codes, &[0.0]).unwrap();
+        assert_eq!(w.wt, vec![i8::MIN, i8::MAX]);
+        assert_eq!(w.layout(), PackLayout::I8);
     }
 }

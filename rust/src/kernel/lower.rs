@@ -112,6 +112,7 @@ fn lower_attention_stages(
         prog.push_stage(Stage::AttnHead(AttnHeadStage {
             head,
             dh,
+            off: head * dh,
             d,
             q,
             k,

@@ -12,12 +12,18 @@
 //!   + its [`crate::quant::BitProfile`] into a straight-line
 //!   [`ir::KernelProgram`] — fused stages over numbered buffer slots
 //!   with every requantizer scale, clamp range, softmax score scale,
-//!   GELU table and dimension baked in, and weights repacked for the
-//!   executor's streaming loop;
-//! * [`exec`] runs a program with cache-blocked, autovectorizable
-//!   integer GEMM loops and fp epilogues that replicate the reference
-//!   expressions term for term — compiled ≡ interpreted is a pinned
-//!   bit-identity contract (`tests/kernel_parity.rs`);
+//!   GELU table, per-head descriptor offset and dimension baked in,
+//!   and weights repacked into narrow `i8` storage for the executor's
+//!   streaming loop;
+//! * [`simd`] holds the GEMM microkernels — explicit AVX2 widening
+//!   multiply-add inner loops plus a portable scalar path, selected
+//!   once at plan time by runtime CPU detection (`IVIT_KERNEL_ISA`
+//!   overrides), every path accumulating exactly in i64;
+//! * [`exec`] runs a program over packed `i8`/`f32` buffer slots,
+//!   optionally sharding row tiles and whole attention heads across a
+//!   persistent worker pool — compiled ≡ interpreted stays a pinned
+//!   bit-identity contract for every (ISA, workers) pair
+//!   (`tests/kernel_parity.rs`);
 //! * the `Display` impl (`disasm`) is a stable, snapshot-tested
 //!   disassembly, so lowering regressions are loud text diffs.
 
@@ -25,6 +31,11 @@ mod disasm;
 pub mod exec;
 pub mod ir;
 pub mod lower;
+pub mod simd;
 
-pub use ir::{AttnHeadStage, BufDecl, BufId, BufKind, KernelProgram, PackedWeights, Stage};
+pub use exec::ProgramExecutor;
+pub use ir::{
+    AttnHeadStage, BufDecl, BufId, BufKind, KernelProgram, PackLayout, PackedWeights, Stage,
+};
 pub use lower::{lower_attention, lower_block};
+pub use simd::{Isa, ISA_ENV};

@@ -1,0 +1,386 @@
+//! ISA-dispatched GEMM microkernels over packed narrow operands.
+//!
+//! The paper's operand reordering means every matrix product in the
+//! datapath consumes *quantized codes* directly — and the profile
+//! validator caps every site at 8 bits, so activations and weights
+//! always fit the packed `i8` layout (attention probabilities are
+//! unsigned and ride as `u8`). This module owns the two inner-loop
+//! implementations behind that layout:
+//!
+//! * **scalar** — the portable row-tiled, reduction-middle,
+//!   column-inner loop with exact `i64` accumulation (what the
+//!   executor always ran, now reading `i8`);
+//! * **avx2** — `std::arch::x86_64` widening multiply-add: 8 weight
+//!   codes are sign-extended to `i32` lanes per step and accumulated
+//!   in exact `i32` lanes, spilled into `i64` totals every
+//!   [`K_BLOCK`] reduction steps (the block bound keeps lane partials
+//!   far from `i32` wrap, see below).
+//!
+//! Integer adds are associative and neither path can wrap before the
+//! final `i32::try_from` narrowing, so **every ISA produces
+//! bit-identical accumulators** — the `tests/kernel_parity.rs`
+//! contract extends to each one. The ISA is picked once at plan time
+//! ([`Isa::resolve`]): runtime CPU-feature detection, overridable via
+//! the [`ISA_ENV`] environment variable.
+
+use anyhow::{bail, ensure, Result};
+
+/// Environment override for [`Isa::resolve`]: `scalar` or `avx2`.
+pub const ISA_ENV: &str = "IVIT_KERNEL_ISA";
+
+/// Rows of the activation matrix processed per accumulator tile. Small
+/// enough that a tile of accumulators stays cache-resident, large
+/// enough to reuse each streamed weight row several times.
+pub(crate) const ROW_TILE: usize = 4;
+
+/// Which GEMM microkernel implementation a plan executes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loop, exact `i64` accumulation.
+    Scalar,
+    /// AVX2 widening multiply-add (x86_64 only, runtime-detected).
+    Avx2,
+}
+
+impl Isa {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this ISA can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 => false,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Isa> {
+        match s {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            other => bail!("unknown kernel ISA '{other}' (expected scalar|avx2)"),
+        }
+    }
+
+    /// The plan-time ISA decision: an explicit [`ISA_ENV`] value wins
+    /// (and is *rejected loudly* when the CPU can't run it — a silent
+    /// fallback would invalidate what the override is for: pinning
+    /// benchmarks and bit-identity checks to one code path); otherwise
+    /// the best available ISA is detected at runtime.
+    pub fn resolve() -> Result<Isa> {
+        match std::env::var(ISA_ENV) {
+            Ok(v) if !v.is_empty() => {
+                let isa = Isa::parse(&v)?;
+                ensure!(
+                    isa.available(),
+                    "{ISA_ENV}={v} requested, but this CPU does not support {v}"
+                );
+                Ok(isa)
+            }
+            _ => Ok(if Isa::Avx2.available() { Isa::Avx2 } else { Isa::Scalar }),
+        }
+    }
+}
+
+/// `i64 → i32` narrowing overflow at `(row, col)` of a GEMM output.
+/// Carried as a position so the executor can name the stage, the
+/// source buffer and the failing disassembly line in its error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccOverflow {
+    pub row: usize,
+    pub col: usize,
+}
+
+/// Signed-code GEMM: `x` is rows×k packed `i8` codes (row-major), `wt`
+/// the packed k×n transposed `i8` weights; returns the rows×n exact
+/// `i32` accumulator.
+pub fn gemm_i8(isa: Isa, x: &[i8], rows: usize, wt: &[i8], n: usize, k: usize) -> GemmResult {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(wt.len(), k * n);
+    match isa {
+        Isa::Scalar => gemm_scalar(x, rows, wt, n, k),
+        #[cfg(target_arch = "x86_64")]
+        // selection (`Isa::resolve` / `Isa::available`) verified AVX2
+        Isa::Avx2 => unsafe { gemm_i8_avx2(x, rows, wt, n, k) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => gemm_scalar(x, rows, wt, n, k), // unreachable: never resolved here
+    }
+}
+
+/// Unsigned-left GEMM (quantized attention probabilities × `i8` V
+/// codes) — same contract as [`gemm_i8`] with a `u8` left operand.
+pub fn gemm_u8(isa: Isa, x: &[u8], rows: usize, wt: &[i8], n: usize, k: usize) -> GemmResult {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(wt.len(), k * n);
+    match isa {
+        Isa::Scalar => gemm_scalar(x, rows, wt, n, k),
+        #[cfg(target_arch = "x86_64")]
+        // selection (`Isa::resolve` / `Isa::available`) verified AVX2
+        Isa::Avx2 => unsafe { gemm_u8_avx2(x, rows, wt, n, k) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => gemm_scalar(x, rows, wt, n, k), // unreachable: never resolved here
+    }
+}
+
+type GemmResult = Result<Vec<i32>, AccOverflow>;
+
+/// The portable microkernel: row-tiled, reduction-middle, column-inner
+/// loop over the streamed `wt` rows — a branch-free multiply-accumulate
+/// the compiler can autovectorize — with exact `i64` accumulation and
+/// the same `i32::try_from` narrowing bound as the reference
+/// `int_matmul`.
+fn gemm_scalar<T: Copy + Into<i32>>(
+    x: &[T],
+    rows: usize,
+    wt: &[i8],
+    n: usize,
+    k: usize,
+) -> GemmResult {
+    let mut acc64 = vec![0i64; ROW_TILE * n];
+    let mut out = vec![0i32; rows * n];
+    let mut ib = 0;
+    while ib < rows {
+        let rt = ROW_TILE.min(rows - ib);
+        acc64[..rt * n].fill(0);
+        for p in 0..k {
+            let wrow = &wt[p * n..(p + 1) * n];
+            for r in 0..rt {
+                let xv: i32 = x[(ib + r) * k + p].into();
+                if xv == 0 {
+                    continue;
+                }
+                let xv = xv as i64;
+                let arow = &mut acc64[r * n..(r + 1) * n];
+                for (a, &wv) in arow.iter_mut().zip(wrow) {
+                    *a += xv * wv as i64;
+                }
+            }
+        }
+        narrow_tile(&acc64, &mut out, ib, rt, n)?;
+        ib += rt;
+    }
+    Ok(out)
+}
+
+/// Spill a tile of `i64` accumulators into the `i32` output, reporting
+/// the first (row-major) overflow position. Shared by both ISAs so the
+/// overflow scan order — and therefore the reported position — is
+/// identical everywhere.
+fn narrow_tile(
+    acc64: &[i64],
+    out: &mut [i32],
+    ib: usize,
+    rt: usize,
+    n: usize,
+) -> Result<(), AccOverflow> {
+    for r in 0..rt {
+        for j in 0..n {
+            out[(ib + r) * n + j] = i32::try_from(acc64[r * n + j])
+                .map_err(|_| AccOverflow { row: ib + r, col: j })?;
+        }
+    }
+    Ok(())
+}
+
+/// Reduction steps between `i32`-lane → `i64` spills in the AVX2
+/// kernel. The largest single product is `255 · 128 = 32640`
+/// (`u8 × i8`), so a block accumulates at most
+/// `4096 · 32640 ≈ 1.3e8 ≪ i32::MAX` per lane — lane partials are
+/// exact, making the blocked sum bit-identical to the scalar `i64`
+/// accumulation.
+#[cfg(target_arch = "x86_64")]
+const K_BLOCK: usize = 4096;
+
+/// The AVX2 microkernel body, shared between the `i8` and `u8` left
+/// operands (a macro rather than a generic fn: `#[target_feature]`
+/// needs concrete signatures to guarantee vector codegen).
+#[cfg(target_arch = "x86_64")]
+macro_rules! avx2_gemm_body {
+    ($x:ident, $rows:ident, $wt:ident, $n:ident, $k:ident) => {{
+        use std::arch::x86_64::{
+            _mm256_add_epi32, _mm256_cvtepi8_epi32, _mm256_loadu_si256, _mm256_mullo_epi32,
+            _mm256_set1_epi32, _mm256_storeu_si256, _mm_loadl_epi64, __m128i, __m256i,
+        };
+        let mut acc64 = vec![0i64; ROW_TILE * $n];
+        let mut acc32 = vec![0i32; ROW_TILE * $n];
+        let mut out = vec![0i32; $rows * $n];
+        let mut ib = 0;
+        while ib < $rows {
+            let rt = ROW_TILE.min($rows - ib);
+            acc64[..rt * $n].fill(0);
+            let mut p0 = 0;
+            while p0 < $k {
+                let pe = ($k).min(p0 + K_BLOCK);
+                acc32[..rt * $n].fill(0);
+                for p in p0..pe {
+                    let wrow = &$wt[p * $n..(p + 1) * $n];
+                    for r in 0..rt {
+                        let xv: i32 = $x[(ib + r) * $k + p].into();
+                        if xv == 0 {
+                            continue;
+                        }
+                        let xv_v = _mm256_set1_epi32(xv);
+                        let arow = &mut acc32[r * $n..(r + 1) * $n];
+                        let mut j = 0;
+                        while j + 8 <= $n {
+                            // 8 i8 weight codes → sign-extended i32 lanes
+                            let w8 = _mm_loadl_epi64(wrow.as_ptr().add(j) as *const __m128i);
+                            let wv = _mm256_cvtepi8_epi32(w8);
+                            let prod = _mm256_mullo_epi32(wv, xv_v);
+                            let aptr = arow.as_mut_ptr().add(j);
+                            let a = _mm256_loadu_si256(aptr as *const __m256i);
+                            _mm256_storeu_si256(aptr as *mut __m256i, _mm256_add_epi32(a, prod));
+                            j += 8;
+                        }
+                        while j < $n {
+                            arow[j] += xv * wrow[j] as i32;
+                            j += 1;
+                        }
+                    }
+                }
+                // exact lane partials → i64 totals (see K_BLOCK bound)
+                for (a64, &a32) in acc64[..rt * $n].iter_mut().zip(acc32[..rt * $n].iter()) {
+                    *a64 += a32 as i64;
+                }
+                p0 = pe;
+            }
+            narrow_tile(&acc64, &mut out, ib, rt, $n)?;
+            ib += rt;
+        }
+        Ok(out)
+    }};
+}
+
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch only after
+/// [`Isa::available`] / [`Isa::resolve`] verified it).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_i8_avx2(x: &[i8], rows: usize, wt: &[i8], n: usize, k: usize) -> GemmResult {
+    avx2_gemm_body!(x, rows, wt, n, k)
+}
+
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch only after
+/// [`Isa::available`] / [`Isa::resolve`] verified it).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_u8_avx2(x: &[u8], rows: usize, wt: &[i8], n: usize, k: usize) -> GemmResult {
+    avx2_gemm_body!(x, rows, wt, n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    /// Ground truth: the naive triple loop in full i64.
+    fn naive<T: Copy + Into<i32>>(x: &[T], rows: usize, wt: &[i8], n: usize, k: usize) -> Vec<i64> {
+        let mut out = vec![0i64; rows * n];
+        for i in 0..rows {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for p in 0..k {
+                    let xv: i32 = x[i * k + p].into();
+                    acc += xv as i64 * wt[p * n + j] as i64;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn random_i8(rng: &mut XorShift, len: usize, lo: i64, hi: i64) -> Vec<i8> {
+        (0..len).map(|_| rng.int_in(lo, hi) as i8).collect()
+    }
+
+    fn isas_under_test() -> Vec<Isa> {
+        let mut isas = vec![Isa::Scalar];
+        if Isa::Avx2.available() {
+            isas.push(Isa::Avx2);
+        }
+        isas
+    }
+
+    /// Every ISA matches the naive i64 ground truth at deliberately
+    /// non-lane-multiple shapes (n = 385 = 48·8 + 1 exercises the
+    /// vector tail; dh = 64 and k = 198 the DeiT-S attention shapes).
+    #[test]
+    fn all_isas_match_naive_at_odd_dims() {
+        let mut rng = XorShift::new(41);
+        for &(rows, n, k) in &[(5usize, 385usize, 198usize), (7, 64, 198), (3, 9, 17), (1, 8, 1)] {
+            let x = random_i8(&mut rng, rows * k, -8, 7);
+            let wt = random_i8(&mut rng, k * n, -8, 7);
+            let want: Vec<i32> =
+                naive(&x, rows, &wt, n, k).iter().map(|&v| i32::try_from(v).unwrap()).collect();
+            for isa in isas_under_test() {
+                let got = gemm_i8(isa, &x, rows, &wt, n, k).unwrap();
+                assert_eq!(got, want, "i8 gemm mismatch on {} at {rows}x{n}x{k}", isa.as_str());
+            }
+        }
+    }
+
+    /// The unsigned-left kernel (attention probabilities) at full u8
+    /// range, again across every available ISA.
+    #[test]
+    fn unsigned_left_operand_matches_naive() {
+        let mut rng = XorShift::new(43);
+        let (rows, n, k) = (6usize, 64usize, 198usize);
+        let x: Vec<u8> = (0..rows * k).map(|_| rng.int_in(0, 255) as u8).collect();
+        let wt = random_i8(&mut rng, k * n, -128, 127);
+        let want: Vec<i32> =
+            naive(&x, rows, &wt, n, k).iter().map(|&v| i32::try_from(v).unwrap()).collect();
+        for isa in isas_under_test() {
+            let got = gemm_u8(isa, &x, rows, &wt, n, k).unwrap();
+            assert_eq!(got, want, "u8 gemm mismatch on {}", isa.as_str());
+        }
+    }
+
+    /// A reduction deep enough to overflow i32 reports the same first
+    /// overflow position on every ISA (shared `narrow_tile` scan).
+    #[test]
+    fn overflow_position_is_isa_independent() {
+        let k = (i32::MAX as usize) / (127 * 127) + 2;
+        let (rows, n) = (2usize, 3usize);
+        let x = vec![127i8; rows * k];
+        let wt = vec![127i8; k * n];
+        for isa in isas_under_test() {
+            let err = gemm_i8(isa, &x, rows, &wt, n, k).unwrap_err();
+            assert_eq!(err, AccOverflow { row: 0, col: 0 }, "on {}", isa.as_str());
+        }
+    }
+
+    /// The AVX2 K_BLOCK spill boundary is exercised explicitly: a
+    /// reduction longer than one block must still be exact.
+    #[test]
+    fn deep_reductions_cross_the_spill_boundary_exactly() {
+        #[cfg(target_arch = "x86_64")]
+        assert!(K_BLOCK < 5000, "test must span at least one spill");
+        let mut rng = XorShift::new(47);
+        let (rows, n, k) = (2usize, 9usize, 5000usize);
+        let x = random_i8(&mut rng, rows * k, -128, 127);
+        let wt = random_i8(&mut rng, k * n, -128, 127);
+        let want = gemm_i8(Isa::Scalar, &x, rows, &wt, n, k).unwrap();
+        for isa in isas_under_test() {
+            assert_eq!(gemm_i8(isa, &x, rows, &wt, n, k).unwrap(), want, "on {}", isa.as_str());
+        }
+    }
+
+    #[test]
+    fn isa_parse_and_strings_round_trip() {
+        assert_eq!(Isa::parse("scalar").unwrap(), Isa::Scalar);
+        assert_eq!(Isa::parse("avx2").unwrap(), Isa::Avx2);
+        assert!(Isa::parse("neon").is_err());
+        for isa in [Isa::Scalar, Isa::Avx2] {
+            assert_eq!(Isa::parse(isa.as_str()).unwrap(), isa);
+        }
+        assert!(Isa::Scalar.available(), "the portable ISA is always available");
+    }
+}

@@ -69,7 +69,8 @@ pub enum StageKind {
     Submit,
     /// submit → `JobState::Done` at poll, per batch.
     Exec,
-    /// One sim-mt pool shard (front / head / block row).
+    /// One worker-pool shard: a sim-mt front/head/block-row shard, or
+    /// a jit row-tile/attention-head shard of a compiled stage.
     Shard,
     /// Completion write-back to the caller / wire.
     Respond,

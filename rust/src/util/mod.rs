@@ -1,10 +1,12 @@
-//! Support substrates: tensor I/O, JSON, PRNG, property testing, logging.
+//! Support substrates: tensor I/O, JSON, PRNG, property testing, the
+//! shared worker pool, logging.
 //!
 //! The offline crate set of this image has no serde/rand/proptest, so the
 //! small pieces of each that the project needs are implemented here and
 //! tested like any other module.
 
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod tensorio;

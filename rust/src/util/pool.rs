@@ -1,0 +1,99 @@
+//! Fixed worker-thread pool fed through one shared job channel — the
+//! shard-execution substrate shared by the `sim-mt` backend and the
+//! compiled-kernel executor ([`crate::kernel::ProgramExecutor`]).
+//!
+//! Spawned once at plan time; joined on drop. Jobs never block on
+//! their result sends (`let _ = tx.send(..)` at every call site), so
+//! dropping an owner — and with it the receivers of any unfinished
+//! jobs — can never wedge a worker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+/// One queued unit of work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads (named `{name}-{i}`) over one shared
+/// job channel.
+pub struct WorkerPool {
+    name: &'static str,
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(name: &'static str, workers: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        // the guard is held only while waiting for a job;
+                        // jobs themselves run outside the lock
+                        let job = rx.lock().expect("job queue poisoned").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // owner dropped
+                        }
+                    })
+                    .unwrap_or_else(|e| panic!("spawn {name} worker: {e}"))
+            })
+            .collect();
+        WorkerPool { name, tx: Some(tx), handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("pool running")
+            .send(job)
+            .map_err(|_| anyhow!("{} worker pool is gone", self.name))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue → workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_run_on_named_threads_and_drop_joins() {
+        let pool = WorkerPool::new("pool-test", 3);
+        assert_eq!(pool.workers(), 3);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..12usize {
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                let name = thread::current().name().map(str::to_owned);
+                let _ = tx.send((i, name));
+            }))
+            .unwrap();
+        }
+        drop(tx);
+        let got: Vec<(usize, Option<String>)> = rx.iter().collect();
+        assert_eq!(got.len(), 12, "every job runs exactly once");
+        for (_, name) in &got {
+            let name = name.as_deref().expect("workers are named");
+            assert!(name.starts_with("pool-test-"), "unexpected thread name {name}");
+        }
+        drop(pool); // joins without deadlock
+    }
+}

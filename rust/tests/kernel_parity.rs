@@ -4,15 +4,20 @@
 //! W_O fp values) to the `ref` interpreter at **DeiT-S dimensions**
 //! (N=198 tokens, D=384, 6 heads, MLP hidden 1536) for every uniform
 //! width and the mixed attn:4,mlp:8 operating point, at both plan
-//! scopes. Also pins the warm-PlanCache and seeded-restart paths for
-//! jit plans, and that one-site profile differences key apart.
+//! scopes — and for **every GEMM microkernel ISA and worker count**:
+//! jit(simd, any workers) ≡ jit(scalar, 1 worker) ≡ ref, including at
+//! non-lane-multiple dims (N=198, dh=64, N=385). Also pins the
+//! warm-PlanCache and seeded-restart paths for jit plans, and that
+//! one-site profile differences key apart.
+
+use std::sync::Arc;
 
 use ivit::backend::{
     AttnBatchRequest, AttnModule, AttnRequest, Backend, BackendRegistry, BitProfile, JitBackend,
     PlanCache, PlanOptions, PlanScope, PlanSeed, ReferenceBackend,
 };
 use ivit::block::EncoderBlock;
-use ivit::kernel::lower_block;
+use ivit::kernel::{lower_attention, lower_block, Isa, ProgramExecutor};
 
 const TOKENS: usize = 198;
 const DIM: usize = 384;
@@ -23,6 +28,16 @@ fn block_opts(profile: BitProfile) -> PlanOptions {
     PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() }
 }
 
+/// Every GEMM ISA this machine can execute (scalar always, AVX2 when
+/// the CPU supports it) — the parity matrix runs over all of them.
+fn isas() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar];
+    if Isa::Avx2.available() {
+        v.push(Isa::Avx2);
+    }
+    v
+}
+
 #[test]
 fn compiled_block_is_bit_identical_to_ref_at_deit_s_dims() {
     for bits in [2u32, 3, 4, 8] {
@@ -30,8 +45,9 @@ fn compiled_block_is_bit_identical_to_ref_at_deit_s_dims() {
         let block = EncoderBlock::synthetic(DIM, HIDDEN, HEADS, profile, 500 + bits as u64)
             .expect("block");
         let x = block.random_input(TOKENS, 9).expect("input");
-        let req = AttnRequest::new(x);
+        let req = AttnRequest::new(x.clone());
         let opts = block_opts(profile);
+        let prog = Arc::new(lower_block(&block).expect("lower block"));
 
         let mut ref_plan =
             ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
@@ -43,6 +59,13 @@ fn compiled_block_is_bit_identical_to_ref_at_deit_s_dims() {
         assert_eq!(ob.codes.data, oa.codes.data, "{bits}-bit DeiT-S block: jit ≡ ref codes");
         assert_eq!(ob.spec, oa.spec, "{bits}-bit DeiT-S block: output spec");
         assert_eq!((ob.rows(), ob.cols()), (TOKENS, DIM), "{bits}-bit: output shape");
+
+        // the scalar single-threaded executor anchors the ISA/worker
+        // equivalence class the plan path (detected ISA, auto workers)
+        // was just compared against
+        let scalar = ProgramExecutor::inline(Isa::Scalar);
+        let (sc, _) = scalar.run(&prog, &x).expect("scalar inline run");
+        assert_eq!(sc.codes.data, oa.codes.data, "{bits}-bit: jit(scalar, 1 worker) ≡ ref");
     }
 }
 
@@ -78,8 +101,9 @@ fn compiled_attention_matches_ref_codes_and_values_at_deit_s_dims() {
         let module =
             AttnModule::synthetic(DIM, DIM, HEADS, profile, 40 + i as u64).expect("module");
         let x = module.random_input(TOKENS, 9).expect("input");
-        let req = AttnRequest::new(x);
+        let req = AttnRequest::new(x.clone());
         let opts = PlanOptions::for_profile(profile);
+        let prog = Arc::new(lower_attention(&module).expect("lower attention"));
 
         let mut ref_plan = ReferenceBackend::new(module.clone()).plan(&opts).expect("ref plan");
         let mut jit_plan = JitBackend::new(module).plan(&opts).expect("jit plan");
@@ -97,6 +121,74 @@ fn compiled_attention_matches_ref_codes_and_values_at_deit_s_dims() {
         assert_eq!(vb.len(), va.len(), "[{key}] W_O value count");
         let exact = va.iter().zip(vb).all(|(p, q)| p.to_bits() == q.to_bits());
         assert!(exact, "[{key}] attention: jit W_O values must be bit-identical to ref");
+
+        // scalar single-threaded anchor: codes AND fp values exact
+        let scalar = ProgramExecutor::inline(Isa::Scalar);
+        let (sc, sv) = scalar.run(&prog, &x).expect("scalar inline run");
+        assert_eq!(
+            sc.codes.data,
+            a.out_codes.as_ref().unwrap().codes.data,
+            "[{key}] attention: jit(scalar, 1 worker) ≡ ref PV codes"
+        );
+        let sv = sv.expect("scalar W_O values");
+        let exact = va.iter().zip(&sv).all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(exact, "[{key}] attention: scalar W_O values must be bit-identical to ref");
+    }
+}
+
+#[test]
+fn isa_and_worker_matrix_is_bit_identical_at_non_lane_multiple_dims() {
+    // N=385 tokens (not a multiple of the 8-wide AVX2 lane count or the
+    // row tile), dh=64: every (ISA, workers) pair must reproduce the
+    // interpreter exactly, codes and W_O fp values both
+    let profile = BitProfile::uniform(4);
+    let module = AttnModule::synthetic(64, 64, 1, profile, 61).expect("module");
+    let x = module.random_input(385, 7).expect("input");
+    let req = AttnRequest::new(x.clone());
+    let opts = PlanOptions::for_profile(profile);
+    let mut ref_plan = ReferenceBackend::new(module.clone()).plan(&opts).expect("ref plan");
+    let want = ref_plan.run_one(&req).expect("ref run");
+    let want_codes = &want.out_codes.as_ref().unwrap().codes.data;
+    let want_values = want.out_values.as_ref().expect("ref W_O values");
+
+    let prog = Arc::new(lower_attention(&module).expect("lower attention"));
+    for isa in isas() {
+        for workers in [1usize, 2, 5] {
+            let exec = ProgramExecutor::pooled(isa, workers);
+            let (codes, values) = exec.run(&prog, &x).expect("executor run");
+            let tag = format!("isa {} workers {workers}", isa.as_str());
+            assert_eq!(&codes.codes.data, want_codes, "[{tag}] PV codes ≡ ref");
+            let values = values.expect("executor W_O values");
+            let exact =
+                want_values.iter().zip(&values).all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(exact, "[{tag}] W_O values ≡ ref (bitwise)");
+        }
+    }
+}
+
+#[test]
+fn mixed_profile_block_matrix_is_bit_identical_for_every_isa_and_worker_count() {
+    let profile = BitProfile::parse("attn:4,mlp:8").expect("profile");
+    let block = EncoderBlock::synthetic(32, 64, 2, profile, 83).expect("block");
+    let x = block.random_input(21, 11).expect("input");
+    let req = AttnRequest::new(x.clone());
+    let mut ref_plan =
+        ReferenceBackend::for_block(block.clone()).plan(&block_opts(profile)).expect("ref plan");
+    let want = ref_plan.run_one(&req).expect("ref run");
+    let want_codes = &want.out_codes.as_ref().unwrap().codes.data;
+
+    let prog = Arc::new(lower_block(&block).expect("lower block"));
+    for isa in isas() {
+        for workers in [1usize, 3, 8] {
+            let exec = ProgramExecutor::pooled(isa, workers);
+            let (codes, _) = exec.run(&prog, &x).expect("executor run");
+            assert_eq!(
+                &codes.codes.data,
+                want_codes,
+                "mixed block [isa {} workers {workers}] ≡ ref",
+                isa.as_str()
+            );
+        }
     }
 }
 
