@@ -22,6 +22,12 @@
 #                      twice — once pinned to the scalar GEMM microkernel
 #                      (IVIT_KERNEL_ISA=scalar) and once auto-detected — so
 #                      every available ISA proves bit-identity in CI
+#   make po2-smoke   — CI smoke for power-of-two scale chains: a tiny
+#                      `:po2` encoder block with the compiled shift-only
+#                      requant datapath asserted bit-identical to the fp
+#                      interpreter, and the systolic sim's shifter/fp
+#                      requant energy split asserted positive with
+#                      ref-pinned numerics (examples/po2_smoke.rs)
 #   make trace-smoke — CI smoke for the observability subsystem: tiny jit and
 #                      ref block-scope serves with --trace, then
 #                      examples/trace_smoke.rs asserts both Chrome traces are
@@ -37,7 +43,7 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke jit-smoke trace-smoke serve-net-smoke artifacts
+.PHONY: tier1 fmt clippy bench bench-smoke eval-smoke serve-smoke profile-smoke jit-smoke po2-smoke trace-smoke serve-net-smoke artifacts
 
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -70,6 +76,9 @@ profile-smoke:
 jit-smoke:
 	cd $(RUST_DIR) && IVIT_KERNEL_ISA=scalar cargo run --release -q --example jit_smoke
 	cd $(RUST_DIR) && cargo run --release -q --example jit_smoke
+
+po2-smoke:
+	cd $(RUST_DIR) && cargo run --release -q --example po2_smoke
 
 trace-smoke:
 	cd $(RUST_DIR) && cargo run --release -q -- serve --backend jit --scope block \

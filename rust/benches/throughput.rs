@@ -14,24 +14,30 @@
 //! 3. `jit_vs_ref` — the kernel-codegen arm: one encoder block through
 //!    the plan-time compiled `jit` program vs the `ref` interpreter,
 //!    **bit-identity asserted row for row** before any timing is read.
-//! 4. `simd_vs_scalar` — the microkernel arm: the same compiled block
+//! 4. `po2_vs_fp_requant` — the shift-requant arm: the same block
+//!    geometry compiled at `uniform:4:po2` (shift-only requantizers)
+//!    vs `uniform:4` (fp requantizers) on the jit backend,
+//!    **bit-identity vs the interpreter asserted per mode before any
+//!    timing is read**; outside smoke the shift datapath must not be
+//!    slower than the fp one, and each record carries its mode.
+//! 5. `simd_vs_scalar` — the microkernel arm: the same compiled block
 //!    through the scalar GEMM inner loop vs the best runtime-detected
 //!    ISA, **bit-identity asserted row for row before any timing is
 //!    read** (exact i64 accumulation makes every ISA produce the same
 //!    bytes); outside smoke the detected ISA must not be slower than
 //!    scalar.
-//! 5. `jit_workers` — the parallel-execution arm: the jit plan at 1
+//! 6. `jit_workers` — the parallel-execution arm: the jit plan at 1
 //!    worker (inline) vs 4 workers (row tiles + attention heads
 //!    sharded across the pool), bit-identity asserted first; no timing
 //!    gate (the contract is determinism).
-//! 6. `tracing_overhead` — the observability arm: the cost of a
+//! 7. `tracing_overhead` — the observability arm: the cost of a
 //!    disabled tracer `span()` call (must stay nanoseconds-cheap) and
 //!    jit block batches with tracing off vs on, **bit-identity asserted
 //!    between the arms** (tracing must never perturb outputs) with the
 //!    on/off wall ratio gated outside the smoke profile.
-//! 7. attention serving through the coordinator for every integer
+//! 8. attention serving through the coordinator for every integer
 //!    backend (no artifacts needed).
-//! 8. image-classification serving over the PJRT executables
+//! 9. image-classification serving over the PJRT executables
 //!    (integerized vs Q-ViT-style vs fp32) — requires `make artifacts`.
 //!
 //! `cargo bench --bench throughput`. Set `IVIT_BENCH_SMOKE=1` for the
@@ -400,6 +406,92 @@ fn jit_vs_ref() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The po2 requantization arm: the same block geometry compiled at
+/// `uniform:4:po2` (every inter-stage requantizer a shift) vs
+/// `uniform:4` (fp requantizers), both through the jit backend. **Bit-
+/// identity is asserted before any timing is read**, per mode: the
+/// compiled program — shift-only for po2 — must reproduce the fp
+/// interpreter on the same folded constants row for row, which is the
+/// shift ≡ fp exactness claim itself (the interpreter executes the po2
+/// block's requants as f32 multiplies). Outside the smoke profile the
+/// shift datapath must not be slower than the fp one. Each
+/// `throughput.po2_vs_fp_requant` record carries `mode=po2|free`.
+fn po2_vs_fp_requant() -> anyhow::Result<()> {
+    let (dim, hidden, heads, tokens, rows, reps) = if smoke() {
+        (16usize, 32usize, 2usize, 8usize, 2usize, 1usize)
+    } else {
+        (64, 256, 2, 48, 8, 8)
+    };
+    println!(
+        "shift-only (po2) vs fp requantization (jit block, D={dim} H={hidden}, batch {rows}):\n"
+    );
+    let mut walls: Vec<(&str, String, f64)> = Vec::new();
+    for (mode, spec) in [("po2", "uniform:4:po2"), ("free", "uniform:4")] {
+        let profile = BitProfile::parse(spec)?;
+        let block = EncoderBlock::synthetic(dim, hidden, heads, profile, 67)?;
+        let reqs: Vec<AttnRequest> = (0..rows as u64)
+            .map(|i| Ok(AttnRequest::new(block.random_input(tokens, 750 + i)?)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let req = AttnBatchRequest::new(reqs);
+        let opts = PlanOptions { scope: PlanScope::Block, profile, ..PlanOptions::default() };
+
+        // the numerics gate comes first: compiled ≡ interpreted on the
+        // same folded constants, row for row — for po2 that is the
+        // integer-shift vs f32-multiply agreement itself
+        let mut ref_plan = ReferenceBackend::for_block(block.clone()).plan(&opts)?;
+        let want = ref_plan.run_batch(&req)?;
+        let mut jit_plan = JitBackend::for_block(block).plan(&opts)?;
+        let got = jit_plan.run_batch(&req)?;
+        for (i, (w, g)) in want.items.iter().zip(&got.items).enumerate() {
+            anyhow::ensure!(
+                w.out_codes.as_ref().unwrap().codes.data
+                    == g.out_codes.as_ref().unwrap().codes.data,
+                "{mode} row {i}: jit vs ref output codes differ at bits[{}]",
+                profile.key()
+            );
+        }
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = jit_plan.run_batch(&req)?;
+        }
+        walls.push((mode, profile.key(), t0.elapsed().as_secs_f64()));
+    }
+    let total_rows = (rows * reps) as f64;
+    let free_wall = walls.iter().find(|w| w.0 == "free").expect("free arm").2;
+    let mut tbl = TableWriter::new(&["mode", "profile", "rows/s", "ratio vs fp"]);
+    for (mode, key, wall) in &walls {
+        tbl.row(vec![
+            mode.to_string(),
+            key.clone(),
+            format!("{:.1}", total_rows / wall),
+            format!("{:.2}", free_wall / wall),
+        ]);
+        BenchRecord::new("throughput.po2_vs_fp_requant")
+            .str_field("mode", mode)
+            .str_field("profile", key)
+            .bool_field("smoke", smoke())
+            .num("rows", total_rows)
+            .num("rows_per_s", total_rows / wall)
+            .num("ratio_vs_fp", free_wall / wall)
+            .emit();
+    }
+    print!("{}", tbl.render());
+    let po2_wall = walls.iter().find(|w| w.0 == "po2").expect("po2 arm").2;
+    let ratio = free_wall / po2_wall;
+    println!("\npo2-vs-fp: shift datapath verified bit-identical to the fp interpreter ✓");
+    if smoke() {
+        println!();
+        return Ok(());
+    }
+    anyhow::ensure!(
+        ratio >= 1.0,
+        "REGRESSION: shift-only requant is only {ratio:.2}x the fp requant datapath (target >= 1x)"
+    );
+    println!("po2 vs fp requant : {ratio:.2}x rows/sec (target >= 1x)\n");
+    Ok(())
+}
+
 /// The SIMD microkernel arm: the same compiled block executed inline
 /// (single-threaded, so the comparison isolates the GEMM inner loops)
 /// by the scalar microkernel vs the best runtime-detected ISA.
@@ -734,6 +826,7 @@ fn main() -> anyhow::Result<()> {
     pipelined_vs_drain()?;
     uniform_vs_mixed()?;
     jit_vs_ref()?;
+    po2_vs_fp_requant()?;
     simd_vs_scalar()?;
     jit_workers()?;
     tracing_overhead()?;

@@ -20,6 +20,7 @@ use ivit::backend::{
     AttnBatchRequest, AttnRequest, Backend, BitProfile, JitBackend, PlanOptions, PlanScope,
     ReferenceBackend,
 };
+use ivit::bench::BenchRecord;
 use ivit::block::EncoderBlock;
 use ivit::kernel::{lower_block, Isa, ProgramExecutor};
 
@@ -71,6 +72,14 @@ fn main() -> Result<()> {
             );
         }
         println!("  {} x3 workers ≡ scalar x1: BIT-IDENTICAL ✓\n", isa.as_str());
+
+        // machine-readable row for the IVIT_BENCH_JSON trajectory
+        BenchRecord::new("smoke.jit")
+            .str_field("profile", &profile.key())
+            .str_field("isa", isa.as_str())
+            .bool_field("bit_identical", true)
+            .num("rows", rows as f64)
+            .emit();
     }
     println!("jit smoke PASS");
     Ok(())

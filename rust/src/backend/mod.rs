@@ -316,6 +316,14 @@ impl PlanOptions {
     pub fn key(&self) -> String {
         self.to_json().to_string()
     }
+
+    /// Short human rendering for logs and errors: scope, workers and the
+    /// full profile key — po2 suffixes included, so two plans differing
+    /// only in scale mode never read alike.
+    pub fn describe(&self) -> String {
+        let workers = if self.workers == 0 { "auto".to_string() } else { self.workers.to_string() };
+        format!("scope={} workers={workers} profile=[{}]", self.scope.as_str(), self.profile.key())
+    }
 }
 
 /// Validate that the profile a caller planned with matches the profile
@@ -325,14 +333,28 @@ pub(crate) fn ensure_plan_profile(
     actual: &BitProfile,
     what: &str,
 ) -> Result<()> {
-    ensure!(
-        requested == actual,
+    if requested == actual {
+        return Ok(());
+    }
+    // same widths, po2-only mismatch: call the real hazard out — a
+    // shift-only plan cannot execute free-scale folded constants (its
+    // scale chains were never snapped), and a free-scale plan silently
+    // forfeits the shift datapath the caller asked for
+    if requested.strip_po2() == actual.strip_po2() {
+        return Err(anyhow!(
+            "plan options request bit profile [{}] but the {what} was built at [{}] — the \
+             widths agree but the po2 scale modes differ; build the backend and the plan \
+             options from the same :po2 profile",
+            requested.key(),
+            actual.key()
+        ));
+    }
+    Err(anyhow!(
         "plan options request bit profile [{}] but the {what} was built at [{}] — \
          construct the backend and the plan options from the same profile",
         requested.key(),
         actual.key()
-    );
-    Ok(())
+    ))
 }
 
 /// A batch of attention inferences over one planned module.
@@ -511,7 +533,8 @@ impl AttnModule {
         AttentionSim {
             wq: LinearArraySim::new_split("Q linear", self.wq.clone(), p.attn_x, p.q_proj),
             wk: LinearArraySim::new_split("K linear", self.wk.clone(), p.attn_x, p.k_proj),
-            wv: LinearArraySim::new_split("V linear", self.wv.clone(), p.attn_x, p.v_proj),
+            wv: LinearArraySim::new_split("V linear", self.wv.clone(), p.attn_x, p.v_proj)
+                .with_po2_requant(p.po2_mode("v_proj").map(|m| m.is_po2()).unwrap_or(false)),
             wo: self
                 .wo
                 .as_ref()
@@ -628,31 +651,46 @@ impl AttnModule {
         ensure!(heads > 0 && d_out % heads == 0, "d_out {d_out} must divide into {heads} heads");
         profile.validate()?;
         let mut rng = XorShift::new(seed);
-        let step_x = 0.12f32;
-        let mut mk = |bits: u32| -> Result<FoldedLinear> {
+        // Each quantizer step is owned by one profile site; po2 sites
+        // snap their step at construction (see crate::quant::po2). The
+        // RNG draw order is identical for free and po2 profiles, so
+        // free-scale modules stay byte-identical to the pre-po2 stack.
+        let s_x = Step::new(0.12)?.snap_for(profile.po2_mode("attn_x")?)?;
+        let step_x = s_x.get();
+        let mut mk = |site: &str| -> Result<FoldedLinear> {
+            let bits = profile.site(site)?;
+            let mode = profile.po2_mode(site)?;
             let w: Vec<f32> = rng.normal_vec(d_out * d_in).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
             let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
-            FoldedLinear::fold(&w, d_out, d_in, &bias, &QuantParams { bits, step_x, step_w })
+            FoldedLinear::fold_site(
+                &w,
+                d_out,
+                d_in,
+                &bias,
+                &QuantParams { bits, step_x, step_w },
+                mode,
+            )
         };
-        let (wq, wk, wv) = (mk(profile.q_proj)?, mk(profile.k_proj)?, mk(profile.v_proj)?);
+        let (wq, wk, wv) = (mk("q_proj")?, mk("k_proj")?, mk("v_proj")?);
         let gamma: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
         let beta: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.2).collect();
-        let s_q = Step::new(0.5)?;
-        let s_k = Step::new(0.5)?;
-        let s_o = 0.1f32;
+        let s_q = Step::new(0.5)?.snap_for(profile.po2_mode("q_proj")?)?;
+        let s_k = Step::new(0.5)?.snap_for(profile.po2_mode("k_proj")?)?;
+        let s_o = Step::new(0.1)?.snap_for(profile.po2_mode("o_proj")?)?;
         // W_O: D→D projection folded with Δ̄_X = Δ_O (its operands are
         // the PV output codes).
         let wo = {
             let w: Vec<f32> = rng.normal_vec(d_out * d_out).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(d_out).iter().map(|v| v * 0.5).collect();
             let step_w: Vec<f32> = (0..d_out).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
-            FoldedLinear::fold(
+            FoldedLinear::fold_site(
                 &w,
                 d_out,
                 d_out,
                 &bias,
-                &QuantParams { bits: profile.o_proj, step_x: s_o, step_w },
+                &QuantParams { bits: profile.o_proj, step_x: s_o.get(), step_w },
+                profile.po2_mode("o_proj")?,
             )?
         };
         Ok(AttnModule {
@@ -667,12 +705,13 @@ impl AttnModule {
             steps: AttentionSteps {
                 s_q,
                 s_k,
-                s_v: Step::new(0.1)?,
-                s_attn: Step::new(1.0 / ((1u32 << profile.attn_probs) - 1) as f32)?,
-                s_o: Step::new(s_o)?,
+                s_v: Step::new(0.1)?.snap_for(profile.po2_mode("v_proj")?)?,
+                s_attn: Step::new(1.0 / ((1u32 << profile.attn_probs) - 1) as f32)?
+                    .snap_for(profile.po2_mode("attn_probs")?)?,
+                s_o,
                 score: ScaleChain::scores(s_q, s_k, d_out / heads),
             },
-            s_x: Step::new(step_x)?,
+            s_x,
             heads,
             profile,
             shift: true,

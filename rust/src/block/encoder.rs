@@ -223,10 +223,13 @@ impl EncoderBlock {
             attn,
             mlp,
             BlockSteps {
-                s_x: Step::new(0.15)?,
-                s_attn_out: Step::new(0.1)?,
-                s_res1: Step::new(0.15)?,
-                s_out: Step::new(0.15)?,
+                // the residual site owns every block-boundary step: a
+                // po2 residual mode snaps all four, so both residual
+                // requantizers lower to integer shifts
+                s_x: Step::new(0.15)?.snap_for(profile.po2_mode("residual")?)?,
+                s_attn_out: Step::new(0.1)?.snap_for(profile.po2_mode("residual")?)?,
+                s_res1: Step::new(0.15)?.snap_for(profile.po2_mode("residual")?)?,
+                s_out: Step::new(0.15)?.snap_for(profile.po2_mode("residual")?)?,
             },
             profile,
         )

@@ -153,22 +153,27 @@ impl MlpModule {
         crate::sim::MlpSim::new(self)
     }
 
-    /// Randomised MLP for parity / stress testing.
+    /// Randomised MLP for parity / stress testing. Steps owned by po2
+    /// sites of the profile are snapped to powers of two at
+    /// construction (see [`crate::quant::po2`]); free-scale profiles
+    /// fold byte-identically to the pre-po2 stack.
     pub fn synthetic(d: usize, hidden: usize, profile: BitProfile, seed: u64) -> Result<MlpModule> {
         ensure!(d > 0 && hidden > 0, "degenerate MLP {d}×{hidden}");
         let mut rng = XorShift::new(seed);
-        let s_in = Step::new(0.5)?;
-        let s_h = Step::new(0.25)?;
-        let s_g = Step::new(0.25)?;
-        let s_out = Step::new(0.1)?;
-        let mut mk = |n: usize, k: usize, step_x: f32, bits: u32| -> Result<FoldedLinear> {
+        let s_in = Step::new(0.5)?.snap_for(profile.po2_mode("mlp_x")?)?;
+        let s_h = Step::new(0.25)?.snap_for(profile.po2_mode("gelu_in")?)?;
+        let s_g = Step::new(0.25)?.snap_for(profile.po2_mode("gelu_out")?)?;
+        let s_out = Step::new(0.1)?.snap_for(profile.po2_mode("mlp_out")?)?;
+        let mut mk = |n: usize, k: usize, step_x: f32, site: &str| -> Result<FoldedLinear> {
+            let bits = profile.site(site)?;
+            let mode = profile.po2_mode(site)?;
             let w: Vec<f32> = rng.normal_vec(n * k).iter().map(|v| v * 0.15).collect();
             let bias: Vec<f32> = rng.normal_vec(n).iter().map(|v| v * 0.3).collect();
             let step_w: Vec<f32> = (0..n).map(|_| rng.uniform(0.03, 0.15) as f32).collect();
-            FoldedLinear::fold(&w, n, k, &bias, &QuantParams { bits, step_x, step_w })
+            FoldedLinear::fold_site(&w, n, k, &bias, &QuantParams { bits, step_x, step_w }, mode)
         };
-        let fc1 = mk(hidden, d, s_in.get(), profile.fc1)?;
-        let fc2 = mk(d, hidden, s_g.get(), profile.fc2)?;
+        let fc1 = mk(hidden, d, s_in.get(), "fc1")?;
+        let fc2 = mk(d, hidden, s_g.get(), "fc2")?;
         MlpModule::new(fc1, fc2, s_in, s_h, s_g, s_out, profile)
     }
 

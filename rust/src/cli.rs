@@ -113,6 +113,14 @@ pub fn validate_backend_profile(backend: &str, profile: &BitProfile) -> Result<(
             profile.key()
         );
     }
+    if backend == "pjrt" && profile.any_po2() {
+        bail!(
+            "--bits-profile [{}] requests power-of-two scales, but the pjrt backend \
+             executes a pre-lowered AOT artifact whose scales are baked in — drop the \
+             :po2 suffix with pjrt, or run the po2 profile on --backend ref|sim|sim-mt|jit",
+            profile.key()
+        );
+    }
     Ok(())
 }
 
@@ -168,6 +176,36 @@ PRECISION (--bits-profile, on serve/simulate/eval):
   The pjrt backend accepts only uniform profiles (its artifact is lowered at
   one width); mixed profiles run on ref/sim/sim-mt/jit. `ivit eval` accepts a
   ';'-separated LIST of profiles and prints one Table-II row per profile.
+
+POWER-OF-TWO REQUANTIZATION (:po2 scale modes):
+  Any profile entry may append a scale mode after its width:
+    attn:4:po2,mlp:8       the attn group's sites snap every quantizer
+                           step to the nearest power of two at fold time
+                           (strict: a scale chain that is still not
+                           exactly power-of-two at lowering — e.g. fed
+                           by a free-scale site — fails the plan loudly)
+    uniform:4:po2?         lenient: sites whose chains are not exactly
+                           power-of-two log a warning and fall back to
+                           the free-scale fp requantizer, per site
+    <path.json>            JSON values may be N, \"N:po2\" or \"N:po2?\"
+  Under po2 every inter-stage requantizer's effective scale is an exact
+  power of two, so the compiled datapath lowers it to an integer
+  multiply-free shift — (acc + rounding_bias) >> shift with round-half-
+  even — shown in the disassembly as gemm.shift / res.shift stages.
+  Outputs stay BIT-IDENTICAL across ref/sim/sim-mt/jit (every ISA and
+  worker count): ref keeps its f32 epilogues and agrees exactly because
+  snapped chains never round. The sim re-costs po2 requant rows as
+  barrel shifters (see the 'requant split' line; shift vs fp energy).
+  pjrt rejects po2 profiles (its artifact bakes free scales). Plans are
+  keyed by the full profile including scale modes — a po2 plan is never
+  served for a free-scale request or vice versa; the mismatch fails
+  loudly. `ivit eval` pairs every po2 profile with its free-scale twin
+  and prints a po2-vs-free comparison row (Δacc, energy, shift count).
+  Examples:
+    ivit eval --backend jit --bits-profile \"attn:4:po2,mlp:8\" --dim 16 \\
+        --hidden 32 --patch 8 --limit 4 --images 4
+    ivit serve --backend jit --scope block --bits-profile uniform:4:po2 \\
+        --tokens 16 --dim 32 --hidden 64 --heads 2 --batch 2 --requests 8
 
 COMPILED BACKEND (--backend jit):
   The jit backend compiles the module/block into a flat kernel program at
@@ -393,6 +431,18 @@ mod tests {
         }
         for backend in ["ref", "sim", "sim-mt", "jit"] {
             validate_backend_profile(backend, &mixed).unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_profile_validation_rejects_po2_pjrt() {
+        let po2 = BitProfile::parse("uniform:4:po2").unwrap();
+        let err = validate_backend_profile("pjrt", &po2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("po2") && msg.contains("ref|sim|sim-mt"), "actionable: {msg}");
+        // po2 profiles run on every integer backend
+        for backend in ["ref", "sim", "sim-mt", "jit"] {
+            validate_backend_profile(backend, &po2).unwrap();
         }
     }
 

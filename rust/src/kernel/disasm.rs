@@ -48,26 +48,49 @@ fn render_stage(s: &Stage) -> String {
                 table.len()
             )
         }
-        Stage::AttnHead(h) => format!(
-            "h{} q=%{} k=%{} v=%{} -> %{} dh={} off={} score {:.4} step {:.4} -> u{} shift={} \
-             eff_pv {:.4} -> s{}",
-            h.head,
-            h.q,
-            h.k,
-            h.v,
-            h.dst,
-            h.dh,
-            h.off,
-            h.score_scale,
-            h.step_attn,
-            h.attn_bits,
-            h.shift,
-            h.eff_pv,
-            h.o_bits
-        ),
+        Stage::AttnHead(h) => {
+            // Shift-only PV requantizers print `>>s` in place of the fp
+            // multiplier so free-scale snapshots stay byte-identical.
+            let pv = match h.pv_shift {
+                Some(s) => format!(">>{s}"),
+                None => format!("{:.4}", h.eff_pv),
+            };
+            format!(
+                "h{} q=%{} k=%{} v=%{} -> %{} dh={} off={} score {:.4} step {:.4} -> u{} \
+                 shift={} eff_pv {} -> s{}",
+                h.head,
+                h.q,
+                h.k,
+                h.v,
+                h.dst,
+                h.dh,
+                h.off,
+                h.score_scale,
+                h.step_attn,
+                h.attn_bits,
+                h.shift,
+                pv,
+                h.o_bits
+            )
+        }
         Stage::Residual { label, main, skip, dst, eff_main, eff_skip, bits, .. } => {
             format!(
                 "%{main} + %{skip} -> %{dst} eff {eff_main:.4}/{eff_skip:.4} -> s{bits} ; {label}"
+            )
+        }
+        Stage::RequantShift { label, src, dst, w, shift, bits, .. } => {
+            format!(
+                "%{src} -> %{dst} w[{}x{}:{}] >>s[{}] -> s{bits} ; {label}",
+                w.n,
+                w.k,
+                w.layout().as_str(),
+                shift.len()
+            )
+        }
+        Stage::ResidualShift { label, main, skip, dst, lift_main, lift_skip, shift, bits, .. } => {
+            format!(
+                "%{main} + %{skip} -> %{dst} lift {lift_main}/{lift_skip} >>{shift} -> s{bits} \
+                 ; {label}"
             )
         }
     }
@@ -229,6 +252,86 @@ kernel block 'blk700' scope=block bits[attn_x:4,q_proj:4,k_proj:4,v_proj:4,attn_
   [17] residual     %16 + %11 -> %17 eff 0.6667/1.0000 -> s8 ; residual2
   out codes %17 s8 step 0.1500";
         assert_eq!(format!("{prog}"), want);
+    }
+
+    /// Golden snapshot of the same tiny block under `uniform:4:po2`: every
+    /// step snaps to a power of two at construction, so every inter-stage
+    /// requantizer lowers to the shift-only form — `gemm.shift` epilogues,
+    /// `res.shift` residual merges, and a `>>4` PV requantizer on each
+    /// attention head.
+    #[test]
+    fn block_disassembly_golden_uniform4_po2() {
+        let profile = BitProfile::parse("uniform:4:po2").unwrap();
+        let b = EncoderBlock::synthetic(8, 16, 2, profile, 500).unwrap();
+        let prog = lower_block(&b).unwrap();
+        let want = "\
+kernel block 'blk500' scope=block bits[uniform:4:po2]
+  input %0 s4 step 0.1250 cols 8
+  buf %0 int[i8] cols 8 'x'
+  buf %1 fp[f32] cols 8 'xf'
+  buf %2 int[i8] cols 8 'attn_in'
+  buf %3 fp[f32] cols 8 'q_pre'
+  buf %4 fp[f32] cols 8 'k_pre'
+  buf %5 int[i8] cols 8 'v'
+  buf %6 int[i8] cols 8 'q'
+  buf %7 int[i8] cols 8 'k'
+  buf %8 int[i8] cols 8 'pv'
+  buf %9 fp[f32] cols 8 'attn_out'
+  buf %10 int[i8] cols 8 'attn_q'
+  buf %11 int[i8] cols 8 'r1'
+  buf %12 fp[f32] cols 8 'r1f'
+  buf %13 int[i8] cols 8 'mlp_in'
+  buf %14 int[i8] cols 16 'h'
+  buf %15 int[i8] cols 16 'g'
+  buf %16 int[i8] cols 8 'mlp_out'
+  buf %17 int[i8] cols 8 'out'
+  [00] dequant      %0 -> %1 step 0.1250 ; x
+  [01] ln.quant     %1 -> %2 step 0.1250 -> s4 ; ln1
+  [02] gemm.scale   %2 -> %3 w[8x8:i8] scale[8] ; q_proj
+  [03] gemm.scale   %2 -> %4 w[8x8:i8] scale[8] ; k_proj
+  [04] gemm.shift   %2 -> %5 w[8x8:i8] >>s[8] -> s4 ; v_proj
+  [05] ln.quant     %3 -> %6 step 0.5000 -> s4 ; q_ln
+  [06] ln.quant     %4 -> %7 step 0.5000 -> s4 ; k_ln
+  [07] attn.head    h0 q=%6 k=%7 v=%5 -> %8 dh=4 off=0 score 0.1250 step 0.0625 -> u4 shift=true eff_pv >>4 -> s4
+  [08] attn.head    h1 q=%6 k=%7 v=%5 -> %8 dh=4 off=4 score 0.1250 step 0.0625 -> u4 shift=true eff_pv >>4 -> s4
+  [09] gemm.scale   %8 -> %9 w[8x8:i8] scale[8] ; o_proj
+  [10] quant        %9 -> %10 step 0.1250 -> s4 ; attn_out
+  [11] res.shift    %10 + %0 -> %11 lift 0/0 >>0 -> s4 ; residual1
+  [12] dequant      %11 -> %12 step 0.1250 ; r1
+  [13] ln.quant     %12 -> %13 step 0.5000 -> s4 ; ln2
+  [14] gemm.shift   %13 -> %14 w[16x8:i8] >>s[16] -> s4 ; fc1
+  [15] gelu.lut     %14 -> %15 table[16] s4 -> s4 ; gelu
+  [16] gemm.shift   %15 -> %16 w[8x16:i8] >>s[8] -> s4 ; fc2
+  [17] res.shift    %16 + %11 -> %17 lift 0/0 >>0 -> s4 ; residual2
+  out codes %17 s4 step 0.1250";
+        assert_eq!(format!("{prog}"), want);
+    }
+
+    /// Mixed po2: attention sites snapped (shift-only v_proj and PV),
+    /// MLP and residual path left free-scale — their stages keep the fp
+    /// requantizer forms, proving po2 lowering is per-site, not global.
+    #[test]
+    fn block_disassembly_golden_attn4_po2_mlp8() {
+        let profile = BitProfile::parse("attn:4:po2,mlp:8").unwrap();
+        let b = EncoderBlock::synthetic(8, 16, 2, profile, 700).unwrap();
+        let prog = lower_block(&b).unwrap();
+        let text = format!("{prog}");
+        assert!(
+            text.starts_with(
+                "kernel block 'blk700' scope=block bits[attn_x:4:po2,q_proj:4:po2,\
+                 k_proj:4:po2,v_proj:4:po2,attn_probs:4:po2,o_proj:4:po2,mlp_x:8,fc1:8,\
+                 gelu_in:8,gelu_out:8,fc2:8,mlp_out:8,residual:8]"
+            ),
+            "{text}"
+        );
+        // Attention side lowers to shifts…
+        assert!(text.contains("[04] gemm.shift   %2 -> %5 w[8x8:i8] >>s[8] -> s4 ; v_proj"));
+        assert!(text.contains("step 0.0625 -> u4 shift=true eff_pv >>4 -> s4"));
+        // …while the free-scale MLP and residual path keep fp requantizers.
+        assert!(text.contains("[14] gemm.requant %13 -> %14 w[16x8:i8] eff[16] -> s8 ; fc1"));
+        assert!(text.contains("[16] gemm.requant %15 -> %16 w[8x16:i8] eff[8] -> s8 ; fc2"));
+        assert!(text.contains("[11] residual     %10 + %0 -> %11 eff 0.6667/1.0000 -> s8 ; residual1"));
+        assert!(!text.contains("res.shift"), "free residual must not lower to a shift: {text}");
     }
 
     /// Attention-scope programs disassemble with the W_O values buffer

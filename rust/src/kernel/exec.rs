@@ -31,6 +31,7 @@ use crate::block::LN_EPS;
 use crate::obs::{SpanId, StageKind};
 use crate::quant::layernorm::qlayernorm_comparator;
 use crate::quant::linear::IntMat;
+use crate::quant::po2::rhe_shift;
 use crate::quant::qtensor::QTensor;
 use crate::quant::round_half_even;
 use crate::quant::softmax::{exact_softmax_row, shift_softmax_row};
@@ -388,6 +389,27 @@ fn gemm_requant_rows(
     Ok(out)
 }
 
+/// RequantShift epilogue for rows [r0, r1): the multiply-free po2
+/// requantizer `clamp(rhe_shift(acc + b̃_j, s_j))` — integer end to
+/// end, no fp op anywhere past the GEMM (the po2 bit-identity
+/// contract, see [`crate::quant::po2`]). The epilogue dispatches
+/// through [`simd::requant_shift`], which is bit-identical on every
+/// ISA by construction.
+fn gemm_requant_shift_rows(
+    isa: Isa,
+    x: &[i8],
+    span: (usize, usize),
+    w: &PackedWeights,
+    bias_q: &[i32],
+    shift: &[i32],
+    clamp: (i32, i32),
+    err: GemmErr<'_>,
+) -> Result<Vec<i8>> {
+    let (r0, r1) = span;
+    let acc = gemm(isa, &x[r0 * w.k..r1 * w.k], r1 - r0, w, r0, err)?;
+    Ok(simd::requant_shift(isa, &acc, r1 - r0, w.n, bias_q, shift, clamp.0, clamp.1))
+}
+
 /// Uniform quantizer over a pre-sliced row range.
 fn quantize_rows(x: &[f32], step: f32, qmin: i32, qmax: i32) -> Vec<i8> {
     x.iter().map(|&v| pack_code((round_half_even(v / step) as i32).clamp(qmin, qmax))).collect()
@@ -465,9 +487,21 @@ fn attn_head_rows(
         )
     })?;
     let mut out = vec![0i8; rows * s.dh];
-    for (o, &a) in out.iter_mut().zip(&acc) {
-        let val = round_half_even(a as f32 * s.eff_pv) as i32;
-        *o = pack_code(val.clamp(s.o_qmin, s.o_qmax));
+    match s.pv_shift {
+        // po2 o_proj site: eff_pv = 2^-sh exactly, so the requantizer
+        // is a pure shift-round — no fp multiply (see crate::quant::po2)
+        Some(sh) => {
+            for (o, &a) in out.iter_mut().zip(&acc) {
+                let val = rhe_shift(a as i64, sh).clamp(s.o_qmin as i64, s.o_qmax as i64);
+                *o = pack_code(val as i32);
+            }
+        }
+        None => {
+            for (o, &a) in out.iter_mut().zip(&acc) {
+                let val = round_half_even(a as f32 * s.eff_pv) as i32;
+                *o = pack_code(val.clamp(s.o_qmin, s.o_qmax));
+            }
+        }
     }
     Ok(out)
 }
@@ -690,6 +724,44 @@ fn apply_stage(
             }
             bufs[*dst] = BufData::I8(Arc::new(out));
         }
+        Stage::RequantShift { src, dst, w, bias_q, shift, qmin, qmax, label, .. } => {
+            let src_name = prog.bufs[*src].name;
+            let clamp = (*qmin, *qmax);
+            let x = Arc::clone(i8_buf(bufs, *src, "requant.shift src")?);
+            let out = match pooled(ctx, rows) {
+                Some((pool, arc, chunks)) => {
+                    let (arc, isa) = (Arc::clone(arc), ctx.isa);
+                    dispatch_rows(pool, &chunks, shard_parent, move |r0, r1| {
+                        match &arc.stages[idx] {
+                            Stage::RequantShift { w, bias_q, shift, label, .. } => {
+                                let err = GemmErr { label, src: src_name };
+                                gemm_requant_shift_rows(isa, &x, (r0, r1), w, bias_q, shift, clamp, err)
+                            }
+                            other => bail!("stage {idx} changed to {}", other.opcode()),
+                        }
+                    })?
+                }
+                None => {
+                    let err = GemmErr { label, src: src_name };
+                    gemm_requant_shift_rows(ctx.isa, &x, (0, rows), w, bias_q, shift, clamp, err)?
+                }
+            };
+            bufs[*dst] = BufData::I8(Arc::new(out));
+        }
+        Stage::ResidualShift { main, skip, dst, lift_main, lift_skip, shift, qmin, qmax, .. } => {
+            let a = i8_buf(bufs, *main, "residual.shift main")?;
+            let b = i8_buf(bufs, *skip, "residual.shift skip")?;
+            let (lm, ls) = (*lift_main as u32, *lift_skip as u32);
+            let (lo, hi) = (*qmin as i64, *qmax as i64);
+            let mut out = vec![0i8; a.len()];
+            // v = a·2^(lm-sh) + b·2^(ls-sh): integer adder + shifter,
+            // round-half-even via rhe_shift — no multiplier, no fp op
+            for ((o, &av), &bv) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+                let lifted = ((av as i64) << lm) + ((bv as i64) << ls);
+                *o = pack_code(rhe_shift(lifted, *shift).clamp(lo, hi) as i32);
+            }
+            bufs[*dst] = BufData::I8(Arc::new(out));
+        }
     }
     Ok(())
 }
@@ -707,6 +779,10 @@ fn stage_kind(stage: &Stage) -> StageKind {
         Stage::GeluLut { .. } => StageKind::GeluLut,
         Stage::AttnHead(_) => StageKind::AttnHead,
         Stage::Residual { .. } => StageKind::Residual,
+        // po2 lowerings keep their fp twins' trace kinds: the datapath
+        // position is identical, only the arithmetic substrate changes
+        Stage::RequantShift { .. } => StageKind::GemmRequant,
+        Stage::ResidualShift { .. } => StageKind::Residual,
     }
 }
 

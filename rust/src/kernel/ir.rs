@@ -145,6 +145,11 @@ pub struct AttnHeadStage {
     pub shift: bool,
     /// The §IV-B PV requantizer folding Δ_attn·Δ_V/Δ_O.
     pub eff_pv: f32,
+    /// When the governing `o_proj` site runs power-of-two scales and
+    /// `eff_pv` is exactly `2^-s`, the PV requantizer lowers to the
+    /// multiply-free `rhe_shift(acc, s)` (see [`crate::quant::po2`]).
+    /// `None` keeps the fp `eff_pv` multiply.
+    pub pv_shift: Option<i32>,
     pub o_bits: u32,
     pub o_qmin: i32,
     pub o_qmax: i32,
@@ -216,6 +221,43 @@ pub enum Stage {
         qmin: i32,
         qmax: i32,
     },
+    /// [`Stage::GemmRequant`] lowered for a power-of-two scale chain:
+    /// every per-column effective scale is exactly `2^-shift_j` and the
+    /// folded bias is integral, so the epilogue is the multiply-free
+    /// `codes = clip(rhe_shift(acc + bias_q_j, shift_j))` — bit-identical
+    /// to the fp expression by construction (see [`crate::quant::po2`]).
+    RequantShift {
+        label: &'static str,
+        src: BufId,
+        dst: BufId,
+        w: PackedWeights,
+        /// b̃ rounded integral at fold time (lowering bounds |b̃| < 2^24,
+        /// so `i32` holds it exactly) — added into the accumulator with
+        /// no fp op.
+        bias_q: Vec<i32>,
+        /// Per-column right-shift amounts `s_j` (eff_j = 2^-s_j).
+        shift: Vec<i32>,
+        bits: u32,
+        qmin: i32,
+        qmax: i32,
+    },
+    /// [`Stage::Residual`] lowered for power-of-two effective scales:
+    /// `clip(rhe_shift((main << lift_main) + (skip << lift_skip), shift))`
+    /// where `eff_main = 2^(lift_main - shift)` and
+    /// `eff_skip = 2^(lift_skip - shift)` — integer adder + shifter, no
+    /// multiplier.
+    ResidualShift {
+        label: &'static str,
+        main: BufId,
+        skip: BufId,
+        dst: BufId,
+        lift_main: i32,
+        lift_skip: i32,
+        shift: i32,
+        bits: u32,
+        qmin: i32,
+        qmax: i32,
+    },
 }
 
 impl Stage {
@@ -230,6 +272,8 @@ impl Stage {
             Stage::GeluLut { .. } => "gelu.lut",
             Stage::AttnHead(_) => "attn.head",
             Stage::Residual { .. } => "residual",
+            Stage::RequantShift { .. } => "gemm.shift",
+            Stage::ResidualShift { .. } => "res.shift",
         }
     }
 }

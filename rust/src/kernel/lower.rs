@@ -14,7 +14,123 @@ use anyhow::{ensure, Result};
 use super::ir::{AttnHeadStage, BufId, BufKind, KernelProgram, PackedWeights, Stage};
 use crate::backend::{AttnModule, PlanScope};
 use crate::block::EncoderBlock;
+use crate::quant::fold::FoldedLinear;
+use crate::quant::po2::{po2_exponent, shifts_for};
+use crate::quant::profile::Po2Mode;
 use crate::quant::qtensor::{QuantSpec, ScaleChain};
+
+/// The loud-fallback policy of a po2 site whose scale chain does not
+/// lower to a pure shift: Strict (`:po2`) fails the whole lowering with
+/// the site named; Lenient (`:po2?`) logs a warning and keeps the fp
+/// multiply. Never called for `Po2Mode::Free`.
+fn po2_fallback(site: &str, label: &str, mode: Po2Mode, why: &str) -> Result<()> {
+    ensure!(
+        mode != Po2Mode::Strict,
+        "po2[{site}]: cannot lower '{label}' to a shift-only requantizer — {why}; snap every \
+         step contributing to this boundary to a :po2 site, or soften the site to :po2? to \
+         permit the fp fallback"
+    );
+    log::warn!("po2?[{site}]: '{label}' falls back to the fp requantizer — {why}");
+    Ok(())
+}
+
+/// Lower one §IV-B GEMM requantizer, producing the multiply-free
+/// [`Stage::RequantShift`] when the governing po2 `site` cooperates
+/// (every per-column effective scale `out_scale_j/Δ_out` an exact power
+/// of two and the folded bias integral — both guaranteed when every
+/// contributing step was snapped at fold time), and the fp
+/// [`Stage::GemmRequant`] otherwise.
+#[allow(clippy::too_many_arguments)]
+fn requant_stage(
+    label: &'static str,
+    site: &str,
+    mode: Po2Mode,
+    src: BufId,
+    dst: BufId,
+    folded: &FoldedLinear,
+    step_out: f32,
+    bits: u32,
+    qmin: i32,
+    qmax: i32,
+) -> Result<Stage> {
+    let eff: Vec<f32> = folded.out_scale.iter().map(|&s| s / step_out).collect();
+    let w = PackedWeights::pack(&folded.codes, &folded.bias_folded)?;
+    if mode.is_po2() {
+        let shifts = shifts_for(&eff);
+        let integral = folded.bias_folded.iter().all(|b| b.fract() == 0.0 && b.abs() < 2f32.powi(24));
+        match shifts {
+            Some(shift) if integral => {
+                return Ok(Stage::RequantShift {
+                    label,
+                    src,
+                    dst,
+                    w,
+                    bias_q: folded.bias_folded.iter().map(|&b| b as i32).collect(),
+                    shift,
+                    bits,
+                    qmin,
+                    qmax,
+                });
+            }
+            shifts => {
+                let why = if shifts.is_none() {
+                    "an effective scale out_scale_j/Δ_out is not an exact power of two"
+                } else {
+                    "the folded bias is not exactly integral"
+                };
+                po2_fallback(site, label, mode, why)?;
+            }
+        }
+    }
+    Ok(Stage::GemmRequant { label, src, dst, w, eff, bits, qmin, qmax })
+}
+
+/// Lower one dual-operand residual requantizer, producing the
+/// adder+shifter [`Stage::ResidualShift`] when both effective scales
+/// are exact powers of two under a po2 `residual` site, and the fp
+/// [`Stage::Residual`] otherwise.
+#[allow(clippy::too_many_arguments)]
+fn residual_stage(
+    label: &'static str,
+    mode: Po2Mode,
+    main: BufId,
+    skip: BufId,
+    dst: BufId,
+    eff_main: f32,
+    eff_skip: f32,
+    bits: u32,
+    qmin: i32,
+    qmax: i32,
+) -> Result<Stage> {
+    if mode.is_po2() {
+        match (po2_exponent(eff_main), po2_exponent(eff_skip)) {
+            (Some(e_main), Some(e_skip)) => {
+                // v = a·2^e_main + b·2^e_skip, rewritten over the common
+                // denominator 2^-shift so both lifts are non-negative.
+                let shift = 0.max(-e_main).max(-e_skip);
+                return Ok(Stage::ResidualShift {
+                    label,
+                    main,
+                    skip,
+                    dst,
+                    lift_main: e_main + shift,
+                    lift_skip: e_skip + shift,
+                    shift,
+                    bits,
+                    qmin,
+                    qmax,
+                });
+            }
+            _ => po2_fallback(
+                "residual",
+                label,
+                mode,
+                "a residual effective scale is not an exact power of two",
+            )?,
+        }
+    }
+    Ok(Stage::Residual { label, main, skip, dst, eff_main, eff_skip, bits, qmin, qmax })
+}
 
 /// Lower an attention module (Fig. 2, W_O included when wired) to a
 /// kernel program whose output codes are the PV codes at Δ_O and whose
@@ -74,16 +190,18 @@ fn lower_attention_stages(
     });
     let v_spec = QuantSpec::signed(m.profile.v_proj, steps.s_v);
     let (v_min, v_max) = v_spec.range();
-    prog.push_stage(Stage::GemmRequant {
-        label: "v_proj",
+    prog.push_stage(requant_stage(
+        "v_proj",
+        "v_proj",
+        m.profile.po2_mode("v_proj")?,
         src,
-        dst: v,
-        w: PackedWeights::pack(&m.wv.codes, &m.wv.bias_folded)?,
-        eff: m.wv.out_scale.iter().map(|&s| s / steps.s_v.get()).collect(),
-        bits: m.profile.v_proj,
-        qmin: v_min,
-        qmax: v_max,
-    });
+        v,
+        &m.wv,
+        steps.s_v.get(),
+        m.profile.v_proj,
+        v_min,
+        v_max,
+    )?);
     prog.push_stage(Stage::LayerNormQuant {
         label: "q_ln",
         src: q_pre,
@@ -108,6 +226,25 @@ fn lower_attention_stages(
     let out_spec = QuantSpec::signed(m.profile.o_proj, steps.s_o);
     let (o_qmin, o_qmax) = out_spec.range();
     let eff_pv = ScaleChain::requant(steps.s_attn, steps.s_v, steps.s_o).eff();
+    // The PV requantizer is governed by the o_proj site (it quantizes
+    // to Δ_O): po2 mode lowers `·eff_pv` to `rhe_shift(acc, s)`.
+    let o_mode = m.profile.po2_mode("o_proj")?;
+    let pv_shift = if o_mode.is_po2() {
+        match po2_exponent(eff_pv) {
+            Some(e) => Some(-e),
+            None => {
+                po2_fallback(
+                    "o_proj",
+                    "attn.pv",
+                    o_mode,
+                    "the PV folding Δ_attn·Δ_V/Δ_O is not an exact power of two",
+                )?;
+                None
+            }
+        }
+    } else {
+        None
+    };
     for head in 0..m.heads {
         prog.push_stage(Stage::AttnHead(AttnHeadStage {
             head,
@@ -125,6 +262,7 @@ fn lower_attention_stages(
             a_qmax,
             shift: m.shift,
             eff_pv,
+            pv_shift,
             o_bits: m.profile.o_proj,
             o_qmin,
             o_qmax,
@@ -204,17 +342,18 @@ pub fn lower_block(b: &EncoderBlock) -> Result<KernelProgram> {
     });
     let res1 = b.res1_spec();
     let (r1_min, r1_max) = res1.range();
-    prog.push_stage(Stage::Residual {
-        label: "residual1",
-        main: attn_q,
-        skip: x,
-        dst: r1,
-        eff_main: ScaleChain::new().times(ao.step).over(res1.step).eff(),
-        eff_skip: ScaleChain::new().times(b.steps.s_x).over(res1.step).eff(),
-        bits: res1.bits,
-        qmin: r1_min,
-        qmax: r1_max,
-    });
+    prog.push_stage(residual_stage(
+        "residual1",
+        b.profile.po2_mode("residual")?,
+        attn_q,
+        x,
+        r1,
+        ScaleChain::new().times(ao.step).over(res1.step).eff(),
+        ScaleChain::new().times(b.steps.s_x).over(res1.step).eff(),
+        res1.bits,
+        r1_min,
+        r1_max,
+    )?);
     prog.push_stage(Stage::Dequantize {
         label: "r1",
         src: r1,
@@ -240,16 +379,20 @@ pub fn lower_block(b: &EncoderBlock) -> Result<KernelProgram> {
 
     let hin = QuantSpec::signed(b.profile.gelu_in, b.mlp.s_h);
     let (h_min, h_max) = hin.range();
-    prog.push_stage(Stage::GemmRequant {
-        label: "fc1",
-        src: mlp_in,
-        dst: h,
-        w: PackedWeights::pack(&b.mlp.fc1.codes, &b.mlp.fc1.bias_folded)?,
-        eff: b.mlp.fc1.out_scale.iter().map(|&s| s / b.mlp.s_h.get()).collect(),
-        bits: hin.bits,
-        qmin: h_min,
-        qmax: h_max,
-    });
+    // fc1 quantizes into the GELU input step, so its requantizer is
+    // governed by the gelu_in site (fc2's by mlp_out below).
+    prog.push_stage(requant_stage(
+        "fc1",
+        "gelu_in",
+        b.profile.po2_mode("gelu_in")?,
+        mlp_in,
+        h,
+        &b.mlp.fc1,
+        b.mlp.s_h.get(),
+        hin.bits,
+        h_min,
+        h_max,
+    )?);
 
     let lut = b.mlp.gelu_lut();
     ensure!(
@@ -271,30 +414,33 @@ pub fn lower_block(b: &EncoderBlock) -> Result<KernelProgram> {
 
     let mo = b.mlp.out_spec();
     let (mo_min, mo_max) = mo.range();
-    prog.push_stage(Stage::GemmRequant {
-        label: "fc2",
-        src: g,
-        dst: mlp_out,
-        w: PackedWeights::pack(&b.mlp.fc2.codes, &b.mlp.fc2.bias_folded)?,
-        eff: b.mlp.fc2.out_scale.iter().map(|&s| s / mo.step.get()).collect(),
-        bits: mo.bits,
-        qmin: mo_min,
-        qmax: mo_max,
-    });
+    prog.push_stage(requant_stage(
+        "fc2",
+        "mlp_out",
+        b.profile.po2_mode("mlp_out")?,
+        g,
+        mlp_out,
+        &b.mlp.fc2,
+        mo.step.get(),
+        mo.bits,
+        mo_min,
+        mo_max,
+    )?);
 
     let out_spec = b.out_spec();
     let (out_min, out_max) = out_spec.range();
-    prog.push_stage(Stage::Residual {
-        label: "residual2",
-        main: mlp_out,
-        skip: r1,
-        dst: out,
-        eff_main: ScaleChain::new().times(mo.step).over(out_spec.step).eff(),
-        eff_skip: ScaleChain::new().times(res1.step).over(out_spec.step).eff(),
-        bits: out_spec.bits,
-        qmin: out_min,
-        qmax: out_max,
-    });
+    prog.push_stage(residual_stage(
+        "residual2",
+        b.profile.po2_mode("residual")?,
+        mlp_out,
+        r1,
+        out,
+        ScaleChain::new().times(mo.step).over(out_spec.step).eff(),
+        ScaleChain::new().times(res1.step).over(out_spec.step).eff(),
+        out_spec.bits,
+        out_min,
+        out_max,
+    )?);
 
     prog.out_codes = out;
     prog.out_spec = out_spec;

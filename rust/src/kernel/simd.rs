@@ -25,6 +25,8 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::quant::po2::rhe_shift;
+
 /// Environment override for [`Isa::resolve`]: `scalar` or `avx2`.
 pub const ISA_ENV: &str = "IVIT_KERNEL_ISA";
 
@@ -276,6 +278,152 @@ unsafe fn gemm_u8_avx2(x: &[u8], rows: usize, wt: &[i8], n: usize, k: usize) -> 
     avx2_gemm_body!(x, rows, wt, n, k)
 }
 
+/// Accumulator headroom bound for the AVX2 po2-requant epilogue:
+/// lanes inside `(-2^29, 2^29)` keep `acc + bias` (|bias| < 2^24,
+/// enforced at lowering) and the rounding constants exactly inside
+/// `i32`; anything wider takes the exact scalar `i64` path.
+#[cfg(target_arch = "x86_64")]
+const SHIFT_ACC_LIMIT: i32 = 1 << 29;
+
+/// The multiply-free po2 requantizer epilogue over a rows×n GEMM
+/// accumulator: `out_ij = clamp(rhe_shift(acc_ij + bias_j, s_j))`
+/// (see [`crate::quant::po2::rhe_shift`] — round-half-even, no fp op).
+///
+/// The AVX2 path vectorizes 8 columns per step when every shift lies
+/// in `[1, 24]`, guarding each accumulator vector against the `i32`
+/// headroom bound; out-of-range shifts, guard misses and vector tails
+/// run the scalar `i64` form. Both paths compute the identical
+/// integer, so — like the GEMMs above — **every ISA produces
+/// bit-identical codes**.
+pub fn requant_shift(
+    isa: Isa,
+    acc: &[i32],
+    rows: usize,
+    n: usize,
+    bias_q: &[i32],
+    shift: &[i32],
+    qmin: i32,
+    qmax: i32,
+) -> Vec<i8> {
+    debug_assert_eq!(acc.len(), rows * n);
+    debug_assert_eq!(bias_q.len(), n);
+    debug_assert_eq!(shift.len(), n);
+    match isa {
+        Isa::Scalar => requant_shift_scalar(acc, rows, n, bias_q, shift, qmin, qmax),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            if shift.iter().all(|&s| (1..=24).contains(&s)) {
+                // selection (`Isa::resolve` / `Isa::available`) verified AVX2
+                unsafe { requant_shift_avx2(acc, rows, n, bias_q, shift, qmin, qmax) }
+            } else {
+                requant_shift_scalar(acc, rows, n, bias_q, shift, qmin, qmax)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => requant_shift_scalar(acc, rows, n, bias_q, shift, qmin, qmax),
+    }
+}
+
+/// One element of the scalar epilogue (also the AVX2 guard-miss/tail
+/// form): exact `i64` shift-round, clamped into the packed `i8` range.
+#[inline]
+fn requant_shift_one(acc: i32, bias: i32, s: i32, qmin: i32, qmax: i32) -> i8 {
+    rhe_shift(acc as i64 + bias as i64, s).clamp(qmin as i64, qmax as i64) as i8
+}
+
+fn requant_shift_scalar(
+    acc: &[i32],
+    rows: usize,
+    n: usize,
+    bias_q: &[i32],
+    shift: &[i32],
+    qmin: i32,
+    qmax: i32,
+) -> Vec<i8> {
+    let mut out = vec![0i8; rows * n];
+    for i in 0..rows {
+        for j in 0..n {
+            out[i * n + j] = requant_shift_one(acc[i * n + j], bias_q[j], shift[j], qmin, qmax);
+        }
+    }
+    out
+}
+
+/// # Safety
+/// The CPU must support AVX2 (callers dispatch only after
+/// [`Isa::available`] / [`Isa::resolve`] verified it). Callers also
+/// check every `shift` lies in `[1, 24]` so the lane constants
+/// (`1 << s`, `1 << (s-1)`) cannot wrap.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn requant_shift_avx2(
+    acc: &[i32],
+    rows: usize,
+    n: usize,
+    bias_q: &[i32],
+    shift: &[i32],
+    qmin: i32,
+    qmax: i32,
+) -> Vec<i8> {
+    use std::arch::x86_64::{
+        _mm256_add_epi32, _mm256_and_si256, _mm256_cmpeq_epi32, _mm256_cmpgt_epi32,
+        _mm256_loadu_si256, _mm256_max_epi32, _mm256_min_epi32, _mm256_movemask_epi8,
+        _mm256_or_si256, _mm256_set1_epi32, _mm256_sllv_epi32, _mm256_srav_epi32,
+        _mm256_storeu_si256, _mm256_sub_epi32, __m256i,
+    };
+    let mut out = vec![0i8; rows * n];
+    let ones = _mm256_set1_epi32(1);
+    let hi = _mm256_set1_epi32(SHIFT_ACC_LIMIT);
+    let lo = _mm256_set1_epi32(-SHIFT_ACC_LIMIT);
+    let qmin_v = _mm256_set1_epi32(qmin);
+    let qmax_v = _mm256_set1_epi32(qmax);
+    for i in 0..rows {
+        let row = &acc[i * n..(i + 1) * n];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 8 <= n {
+            let a = _mm256_loadu_si256(row.as_ptr().add(j) as *const __m256i);
+            // headroom guard: every lane strictly inside (-2^29, 2^29),
+            // else this block takes the exact scalar form
+            let ok = _mm256_and_si256(_mm256_cmpgt_epi32(hi, a), _mm256_cmpgt_epi32(a, lo));
+            if _mm256_movemask_epi8(ok) != -1 {
+                for jj in j..j + 8 {
+                    orow[jj] = requant_shift_one(row[jj], bias_q[jj], shift[jj], qmin, qmax);
+                }
+                j += 8;
+                continue;
+            }
+            let b = _mm256_loadu_si256(bias_q.as_ptr().add(j) as *const __m256i);
+            let s = _mm256_loadu_si256(shift.as_ptr().add(j) as *const __m256i);
+            let x = _mm256_add_epi32(a, b);
+            // q = x >> s (arithmetic = floor), r = x mod 2^s (non-negative)
+            let q = _mm256_srav_epi32(x, s);
+            let mask = _mm256_sub_epi32(_mm256_sllv_epi32(ones, s), ones);
+            let r = _mm256_and_si256(x, mask);
+            // round half (r == 2^(s-1)) to the even neighbour
+            let half = _mm256_sllv_epi32(ones, _mm256_sub_epi32(s, ones));
+            let gt = _mm256_cmpgt_epi32(r, half);
+            let eq = _mm256_cmpeq_epi32(r, half);
+            let odd = _mm256_cmpeq_epi32(_mm256_and_si256(q, ones), ones);
+            let up = _mm256_or_si256(gt, _mm256_and_si256(eq, odd));
+            // round-up lanes hold -1: q - (-1) = q + 1
+            let rounded = _mm256_sub_epi32(q, up);
+            let clamped = _mm256_min_epi32(_mm256_max_epi32(rounded, qmin_v), qmax_v);
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, clamped);
+            for (o, &v) in orow[j..j + 8].iter_mut().zip(&lanes) {
+                *o = v as i8;
+            }
+            j += 8;
+        }
+        while j < n {
+            orow[j] = requant_shift_one(row[j], bias_q[j], shift[j], qmin, qmax);
+            j += 1;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -370,6 +518,57 @@ mod tests {
         let want = gemm_i8(Isa::Scalar, &x, rows, &wt, n, k).unwrap();
         for isa in isas_under_test() {
             assert_eq!(gemm_i8(isa, &x, rows, &wt, n, k).unwrap(), want, "on {}", isa.as_str());
+        }
+    }
+
+    /// The po2 requant epilogue is bit-identical on every ISA, at
+    /// shapes exercising vector blocks, tails, exact .5 ties, negative
+    /// accumulators, headroom-guard misses (lanes beyond ±2^29) and
+    /// shifts outside the AVX2 fast range (scalar fallback).
+    #[test]
+    fn requant_shift_is_bit_identical_across_isas() {
+        let mut rng = XorShift::new(53);
+        for &(rows, n) in &[(3usize, 17usize), (5, 8), (2, 7), (4, 64)] {
+            let mut acc: Vec<i32> =
+                (0..rows * n).map(|_| rng.int_in(-(1 << 20), 1 << 20) as i32).collect();
+            // exact ties (k + ½)·2^s and a couple of guard-busting lanes
+            acc[0] = 3 << 3; // tie at shift 4: 24/16 = 1.5 → 2
+            acc[1] = 1 << 3; // tie at shift 4: 8/16 = 0.5 → 0
+            if acc.len() > 4 {
+                acc[3] = i32::MAX - 7;
+                acc[4] = i32::MIN + 7;
+            }
+            let mut bias_q: Vec<i32> = (0..n).map(|_| rng.int_in(-1000, 1000) as i32).collect();
+            // zero bias under the tie lanes so they stay exact .5 ties
+            bias_q[0] = 0;
+            bias_q[1] = 0;
+            for shift_range in [(1i64, 6i64), (0, 30)] {
+                let shift: Vec<i32> =
+                    (0..n).map(|_| rng.int_in(shift_range.0, shift_range.1) as i32).collect();
+                let want = requant_shift(Isa::Scalar, &acc, rows, n, &bias_q, &shift, -8, 7);
+                for isa in isas_under_test() {
+                    let got = requant_shift(isa, &acc, rows, n, &bias_q, &shift, -8, 7);
+                    assert_eq!(got, want, "requant.shift mismatch on {} at {rows}x{n}", isa.as_str());
+                }
+            }
+        }
+    }
+
+    /// The scalar epilogue agrees with the f32 round-half-even
+    /// expression it replaces whenever the accumulator is f32-exact —
+    /// the bit-identity theorem the po2 datapath rests on.
+    #[test]
+    fn requant_shift_matches_f32_requant_on_exact_accumulators() {
+        use crate::quant::round_half_even;
+        let mut rng = XorShift::new(59);
+        for _ in 0..500 {
+            let acc = rng.int_in(-(1 << 23), 1 << 23) as i32;
+            let bias = rng.int_in(-100, 100) as i32;
+            let s = rng.int_in(1, 10) as i32;
+            let eff = 2f32.powi(-s);
+            let want = (round_half_even((acc as f32 + bias as f32) * eff) as i32).clamp(-8, 7);
+            let got = requant_shift(Isa::Scalar, &[acc], 1, 1, &[bias], &[s], -8, 7)[0] as i32;
+            assert_eq!(got, want, "acc={acc} bias={bias} s={s}");
         }
     }
 

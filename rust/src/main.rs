@@ -735,11 +735,24 @@ fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
     // folded stack and lowered plans instead of re-planning
     let mut resident: BTreeMap<String, (VitModel, Vec<Box<dyn ExecutionPlan>>)> = BTreeMap::new();
 
+    // every po2 profile is followed by its free-scale twin (same widths,
+    // po2 suffixes stripped) so `ivit eval` always emits the paired
+    // comparison row — the accuracy cost and energy win of snapping
+    let mut jobs: Vec<(BitProfile, Option<String>)> = Vec::new();
+    for profile in &profiles {
+        jobs.push((*profile, None));
+        if profile.any_po2() {
+            jobs.push((profile.strip_po2(), Some(profile.key())));
+        }
+    }
+    // per-profile (accuracy, workload µJ, shift-requant ops) for pairing
+    let mut results: BTreeMap<String, (f64, f64, u64)> = BTreeMap::new();
+
     println!(
         "{:<28} {:>9} {:>12} {:>12}  per-width split",
         "profile", "acc", "# MAC (M)", "energy (µJ)"
     );
-    for profile in &profiles {
+    for (profile, twin_of) in &jobs {
         let key = profile.key();
         if !resident.contains_key(&key) {
             let cfg = VitConfig { profile: *profile, ..base_cfg.clone() };
@@ -795,10 +808,36 @@ fn cmd_eval_blocks(args: &Args, backend_name: &str) -> Result<()> {
                 println!("{key:<28} {acc:>9.4} {:>12} {:>12}  (ref backend: no stats)", "-", "-")
             }
         }
+        if let (Some(r), true) = (&report, profile.any_po2()) {
+            println!("  └ {}", r.render_requant_split(&energy));
+        }
         println!(
             "  └ {limit} images in {wall:.2}s, {} block plan(s) resident",
             plans.len()
         );
+        results.insert(
+            key.clone(),
+            match &report {
+                Some(r) => (acc, r.workload_energy_uj(&energy), r.total_shift_ops()),
+                None => (acc, f64::NAN, 0),
+            },
+        );
+        if let Some(po2_key) = twin_of {
+            if let (Some(&(pa, pe, ps)), Some(&(fa, fe, _))) =
+                (results.get(po2_key), results.get(&key))
+            {
+                let energy_part = if pe.is_finite() && fe > 0.0 {
+                    format!("energy {pe:.2} µJ vs {fe:.2} µJ (×{:.2})", pe / fe)
+                } else {
+                    "energy n/a (ref backend carries no stats)".to_string()
+                };
+                println!(
+                    "  └ po2 vs free-scale [{po2_key}]: Δacc {:+.4}, {energy_part}, \
+                     {ps} shift-requants",
+                    pa - fa
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -8,6 +8,8 @@
 use anyhow::{ensure, Result};
 
 use super::linear::IntMat;
+use super::po2::{round_bias_integral, snap_po2};
+use super::profile::Po2Mode;
 use super::{int_range, quantize};
 
 /// Quantizer hyper-parameters for one linear layer.
@@ -51,6 +53,37 @@ impl FoldedLinear {
         let w_scale = qp.step_w.clone();
         let out_scale: Vec<f32> = qp.step_w.iter().map(|&sw| qp.step_x * sw).collect();
         Ok(FoldedLinear { codes: IntMat::new(n, k, codes), bias_folded, w_scale, out_scale })
+    }
+
+    /// [`Self::fold`] for a po2 [`crate::quant::BitProfile`] site: the
+    /// per-channel weight steps are snapped to the nearest power of two
+    /// *before* the weights are quantized, and the folded bias
+    /// `b̃ = b/(Δ̄_X·Δ_W)` is rounded (half-even) to an exact integer —
+    /// so the governed requantizer `(acc + b̃)·2^e` is expressible as a
+    /// pure integer shift and the f32 epilogues compute the identical
+    /// value. `step_x` must already carry the *owner* site's snapping
+    /// (the activation step is owned by the operand's site, not this
+    /// layer's); `Po2Mode::Free` folds exactly like [`Self::fold`].
+    pub fn fold_site(
+        w: &[f32],
+        n: usize,
+        k: usize,
+        bias: &[f32],
+        qp: &QuantParams,
+        mode: Po2Mode,
+    ) -> Result<Self> {
+        if !mode.is_po2() {
+            return Self::fold(w, n, k, bias, qp);
+        }
+        let step_w = qp
+            .step_w
+            .iter()
+            .map(|&s| snap_po2(s))
+            .collect::<Result<Vec<f32>>>()?;
+        let snapped = QuantParams { bits: qp.bits, step_x: qp.step_x, step_w };
+        let mut folded = Self::fold(w, n, k, bias, &snapped)?;
+        round_bias_integral(&mut folded.bias_folded)?;
+        Ok(folded)
     }
 
     /// Apply the folded layer to activation codes: Eq. 2 end to end.
@@ -147,6 +180,26 @@ mod tests {
         let folded = FoldedLinear::fold(&w, n, k, &bias, &qp).unwrap();
         let err = fold_error(&w, &folded.codes, &qp.step_w, 4);
         assert!(err <= 0.5 + 1e-5, "fold error {err} exceeds half a step");
+    }
+
+    #[test]
+    fn po2_fold_snaps_steps_and_rounds_bias() {
+        use crate::quant::po2::po2_exponent;
+        let mut rng = XorShift::new(74);
+        let (w, n, k, bias, mut qp) = random_fold(&mut rng, 4);
+        qp.step_x = 0.125; // owner-snapped activation step
+        let f = FoldedLinear::fold_site(&w, n, k, &bias, &qp, Po2Mode::Strict).unwrap();
+        for (&ws, &os) in f.w_scale.iter().zip(&f.out_scale) {
+            assert!(po2_exponent(ws).is_some(), "w_scale {ws} not snapped");
+            assert!(po2_exponent(os).is_some(), "out_scale {os} not exactly po2");
+        }
+        assert!(f.bias_folded.iter().all(|b| b.fract() == 0.0), "bias not integral");
+        // Free mode stays byte-identical to the plain fold
+        let a = FoldedLinear::fold(&w, n, k, &bias, &qp).unwrap();
+        let b2 = FoldedLinear::fold_site(&w, n, k, &bias, &qp, Po2Mode::Free).unwrap();
+        assert_eq!(a.codes.data, b2.codes.data);
+        assert_eq!(a.bias_folded, b2.bias_folded);
+        assert_eq!(a.out_scale, b2.out_scale);
     }
 
     #[test]

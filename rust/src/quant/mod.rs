@@ -12,6 +12,7 @@ pub mod fold;
 pub mod gelu;
 pub mod layernorm;
 pub mod linear;
+pub mod po2;
 pub mod profile;
 pub mod qtensor;
 pub mod shift_exp;
@@ -22,7 +23,8 @@ pub use fold::{FoldedLinear, QuantParams};
 pub use gelu::{gelu_ref, shift_gelu, shift_sigmoid, GeluLut};
 pub use layernorm::{qlayernorm_comparator, qlayernorm_reference, welford};
 pub use linear::{dequant_linear, int_linear, int_matmul};
-pub use profile::BitProfile;
+pub use po2::{po2_exponent, rhe_shift, snap_po2, PO2_MAX_REL_ERROR};
+pub use profile::{BitProfile, Po2Mode};
 pub use qtensor::{QTensor, QuantSpec, ScaleChain, Step};
 pub use shift_exp::{shift_exp, shift_exp_fixed, LOG2E};
 pub use softmax::{exact_softmax_row, qk_attention, shift_softmax_row};

@@ -1,0 +1,240 @@
+//! Power-of-two scale support (P²-ViT-style requantization).
+//!
+//! Every inter-stage requantization in the integer datapath is a
+//! multiply by an *effective scale* `eff = Πnum/Πden` of quantizer
+//! steps followed by round-half-even. When all the contributing steps
+//! are exact powers of two, `eff` is an exact power of two (products
+//! and quotients of exact f32 powers of two never round), and the
+//! whole requant collapses to an integer shift with round-half-even
+//! tie handling — no f32 multiply, no multiplier in hardware.
+//!
+//! This module is the single source of truth for that arithmetic:
+//!
+//! * [`po2_exponent`] — exactness inspection (`x == 2^e` bitwise);
+//! * [`snap_po2`] — nearest-po2 rounding with the pinned relative
+//!   error bound [`PO2_MAX_REL_ERROR`] (√2 − 1), loud on any
+//!   non-positive / non-finite / denormal input;
+//! * [`rhe_shift`] — the integer `(x) >> s` with round-half-even
+//!   semantics matching [`crate::quant::round_half_even`] exactly.
+//!
+//! The fold layer snaps steps ([`crate::quant::BitProfile`] po2 sites)
+//! and rounds folded biases to integers, so by the time lowering asks
+//! "is this requant shift-only?" the answer is a bitwise check, never
+//! a tolerance.
+//!
+//! Exactness caveat (documented contract): the reference/simulator
+//! epilogues convert accumulators through f32, which is exact below
+//! 2^24. Low-bit accumulators at the paper's dimensions stay orders of
+//! magnitude under that bound, so `rhe_shift` on the integer
+//! accumulator is bit-identical to the f32 expression by construction.
+
+use anyhow::{bail, ensure, Result};
+
+/// Worst-case relative error of nearest-po2 snapping: the geometric
+/// midpoint `2^(e+1/2)` snaps up, giving `√2 − 1 ≈ 0.4142`.
+pub const PO2_MAX_REL_ERROR: f32 = std::f32::consts::SQRT_2 - 1.0;
+
+/// `Some(e)` iff `x` is *exactly* `2^e` as an f32 — positive, finite,
+/// normal, zero mantissa. Subnormals (denormal-adjacent scales) return
+/// `None` so callers stay loud instead of shifting into garbage.
+pub fn po2_exponent(x: f32) -> Option<i32> {
+    if !x.is_finite() || x <= 0.0 {
+        return None;
+    }
+    let bits = x.to_bits();
+    let mantissa = bits & 0x007f_ffff;
+    let exp = (bits >> 23) & 0xff;
+    if mantissa != 0 || exp == 0 {
+        return None; // not a pure po2, or subnormal
+    }
+    Some(exp as i32 - 127)
+}
+
+/// Snap `x` to the nearest power of two (in log space, ties toward the
+/// larger magnitude). Errors loudly on non-positive, non-finite or
+/// subnormal inputs — a scale that cannot be snapped must never be
+/// silently passed through. The result always satisfies
+/// `|snap − x| / x ≤ PO2_MAX_REL_ERROR` (pinned by tests).
+pub fn snap_po2(x: f32) -> Result<f32> {
+    ensure!(x.is_finite(), "po2 snap: scale {x} is not finite");
+    ensure!(x > 0.0, "po2 snap: scale {x} is not positive");
+    ensure!(x.is_normal(), "po2 snap: scale {x:e} is subnormal — refusing to snap");
+    if po2_exponent(x).is_some() {
+        return Ok(x); // already exact; never perturb
+    }
+    let e = x.log2().round();
+    ensure!(
+        (-120.0..=120.0).contains(&e),
+        "po2 snap: scale {x:e} snaps outside the exact-f32 exponent range"
+    );
+    let snapped = 2f32.powi(e as i32);
+    let rel = (snapped - x).abs() / x;
+    // belt-and-braces: the bound is part of the contract, not a hope
+    ensure!(
+        rel <= PO2_MAX_REL_ERROR + 1e-6,
+        "po2 snap: {x} -> {snapped} violates the relative-error bound ({rel})"
+    );
+    Ok(snapped)
+}
+
+/// Integer requantization shift: round-half-even of `x / 2^s`, exactly
+/// matching `round_half_even(x as f32 * 2^-s)` for accumulators in the
+/// exact-f32 range. Negative `s` is an exact left shift (eff ≥ 1).
+pub fn rhe_shift(x: i64, s: i32) -> i64 {
+    if s <= 0 {
+        return x << (-s).min(62) as u32;
+    }
+    if s >= 63 {
+        // |x/2^s| ≤ 1/2 for any i64 — rhe lands on 0 (ties go even).
+        return 0;
+    }
+    let q = x >> s; // arithmetic shift: floor(x / 2^s)
+    let r = x & ((1i64 << s) - 1); // non-negative remainder
+    let half = 1i64 << (s - 1);
+    if r > half || (r == half && (q & 1) == 1) {
+        q + 1
+    } else {
+        q
+    }
+}
+
+/// Snap the per-row weight steps and fold-time bias of a po2 site. The
+/// folded bias `b̃ = b/(Δ̄_X·Δ_W)` is rounded (half-even) to an exact
+/// integer so the shift epilogue `(acc + b̃) >> s` needs no fraction —
+/// and the f32 epilogues see the *same* integral bias, keeping every
+/// backend bit-identical.
+pub fn round_bias_integral(bias_folded: &mut [f32]) -> Result<()> {
+    for b in bias_folded.iter_mut() {
+        ensure!(b.is_finite(), "po2 fold: folded bias {b} is not finite");
+        ensure!(
+            b.abs() < 16_777_216.0,
+            "po2 fold: folded bias {b} exceeds the exact-f32 integer range"
+        );
+        *b = crate::quant::round_half_even(*b);
+    }
+    Ok(())
+}
+
+/// All-or-nothing exponent extraction for a requant vector: `Some`
+/// with one shift per column iff **every** effective scale is exactly
+/// a power of two (`shift = -e`, so `eff = 2^-shift`).
+pub fn shifts_for(effs: &[f32]) -> Option<Vec<i32>> {
+    effs.iter().map(|&e| po2_exponent(e).map(|p| -p)).collect()
+}
+
+/// Fallible single-eff shift used by Strict po2 sites: names the site
+/// and the offending scale when the chain is not exactly po2.
+pub fn shift_for(eff: f32, site: &str) -> Result<i32> {
+    match po2_exponent(eff) {
+        Some(e) => Ok(-e),
+        None => bail!(
+            "po2[{site}]: effective scale {eff:e} is not an exact power of two — \
+             snap every contributing step (mark the owning sites :po2) or use the \
+             lenient ':po2?' fallback"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::round_half_even;
+    use crate::util::proptest::prop_check;
+
+    #[test]
+    fn exponent_detects_exact_powers_only() {
+        assert_eq!(po2_exponent(1.0), Some(0));
+        assert_eq!(po2_exponent(0.5), Some(-1));
+        assert_eq!(po2_exponent(0.0625), Some(-4));
+        assert_eq!(po2_exponent(1024.0), Some(10));
+        assert_eq!(po2_exponent(0.1), None);
+        assert_eq!(po2_exponent(3.0), None);
+        assert_eq!(po2_exponent(-2.0), None);
+        assert_eq!(po2_exponent(0.0), None);
+        assert_eq!(po2_exponent(f32::NAN), None);
+        assert_eq!(po2_exponent(f32::INFINITY), None);
+        // subnormal: smallest positive f32 is 2^-149 but not "normal"
+        assert_eq!(po2_exponent(f32::from_bits(1)), None);
+    }
+
+    #[test]
+    fn snap_is_exact_on_powers_and_loud_on_garbage() {
+        for e in [-20i32, -4, -1, 0, 1, 7] {
+            let x = 2f32.powi(e);
+            assert_eq!(snap_po2(x).unwrap(), x);
+        }
+        assert!(snap_po2(0.0).is_err());
+        assert!(snap_po2(-0.25).is_err());
+        assert!(snap_po2(f32::NAN).is_err());
+        assert!(snap_po2(f32::INFINITY).is_err());
+        assert!(snap_po2(f32::from_bits(1)).is_err()); // subnormal
+    }
+
+    #[test]
+    fn snap_error_bound_property() {
+        prop_check("po2-snap-bound", 901, 500, |rng| {
+            // span many decades, including the quantizer-step regime
+            let mag = rng.uniform(-12.0, 6.0);
+            let x = (2f64.powf(mag) * rng.uniform(1.0, 2.0)) as f32;
+            let s = snap_po2(x).map_err(|e| e.to_string())?;
+            if po2_exponent(s).is_none() {
+                return Err(format!("snap({x}) = {s} is not exactly po2"));
+            }
+            let rel = (s - x).abs() / x;
+            if rel > PO2_MAX_REL_ERROR + 1e-6 {
+                return Err(format!("snap({x}) = {s}: rel error {rel} over bound"));
+            }
+            // idempotent: snapping a snapped value never moves it
+            if snap_po2(s).map_err(|e| e.to_string())? != s {
+                return Err(format!("snap not idempotent at {s}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rhe_shift_matches_f32_round_half_even() {
+        // exhaustive tie/sign cases
+        assert_eq!(rhe_shift(-3, 1), -2); // -1.5 → -2 (even)
+        assert_eq!(rhe_shift(-1, 1), 0); // -0.5 → 0
+        assert_eq!(rhe_shift(1, 1), 0); // 0.5 → 0
+        assert_eq!(rhe_shift(3, 1), 2); // 1.5 → 2
+        assert_eq!(rhe_shift(5, 1), 2); // 2.5 → 2
+        assert_eq!(rhe_shift(6, 2), 2); // 1.5 → 2
+        assert_eq!(rhe_shift(10, 2), 2); // 2.5 → 2
+        assert_eq!(rhe_shift(-10, 2), -2); // -2.5 → -2
+        assert_eq!(rhe_shift(7, 0), 7); // s = 0: identity
+        assert_eq!(rhe_shift(7, -2), 28); // negative s: exact left shift
+        assert_eq!(rhe_shift(1, 63), 0);
+        prop_check("po2-rhe-shift", 902, 400, |rng| {
+            let s = rng.int_in(0, 20) as i32;
+            let x = rng.int_in(-(1 << 22), 1 << 22);
+            let want = round_half_even(x as f32 * 2f32.powi(-s)) as i64;
+            let got = rhe_shift(x, s);
+            if got != want {
+                return Err(format!("rhe_shift({x}, {s}) = {got}, f32 path says {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bias_rounding_is_integral_and_loud_out_of_range() {
+        let mut b = vec![1.25, -0.5, 3.0, 1000.4];
+        round_bias_integral(&mut b).unwrap();
+        assert_eq!(b, vec![1.0, 0.0, 3.0, 1000.0]);
+        let mut huge = vec![3.0e8f32];
+        assert!(round_bias_integral(&mut huge).is_err());
+        let mut nan = vec![f32::NAN];
+        assert!(round_bias_integral(&mut nan).is_err());
+    }
+
+    #[test]
+    fn shift_vectors_are_all_or_nothing() {
+        assert_eq!(shifts_for(&[0.25, 0.5, 2.0]), Some(vec![2, 1, -1]));
+        assert_eq!(shifts_for(&[0.25, 0.3]), None);
+        assert_eq!(shift_for(0.125, "t").unwrap(), 3);
+        let err = shift_for(0.3, "fc2").unwrap_err().to_string();
+        assert!(err.contains("po2[fc2]"), "{err}");
+    }
+}

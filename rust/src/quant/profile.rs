@@ -42,6 +42,19 @@
 //! when no `uniform:` base is given, unassigned sites default to the
 //! **widest** assigned value (the safe choice for the shared residual
 //! path). Unknown keys and out-of-range widths fail loudly.
+//!
+//! ## Power-of-two scale mode
+//!
+//! Any entry may append a [`Po2Mode`] suffix: `attn:4:po2,mlp:8`
+//! constrains every attention-site scale to an exact power of two
+//! (snapped at fold time, see [`crate::quant::po2`]), so the governed
+//! requantizers lower to integer shifts. `:po2` is **strict** — a
+//! scale chain that is not exactly po2 after snapping is a loud
+//! error; `:po2?` is **lenient** — it falls back to the f32 requant
+//! path with a warning. Sites not marked keep free scales. The po2
+//! assignment is part of the profile's identity: [`BitProfile::key`],
+//! the JSON form and equality all carry it, so plan caches key po2
+//! and free-scale plans apart and profile mismatches stay loud.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -55,6 +68,45 @@ pub const MIN_BITS: u32 = 2;
 /// Widest supported site width (the narrow-accumulator regime of
 /// [`crate::sim::accumulate`]).
 pub const MAX_BITS: u32 = 8;
+
+/// Per-site power-of-two scale policy (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Po2Mode {
+    /// Free scales — the f32 requantization path (the default).
+    #[default]
+    Free,
+    /// Scales snapped to exact powers of two; a requant chain that is
+    /// not exactly po2 at lowering time is a **loud error** (`:po2`).
+    Strict,
+    /// Scales snapped, but a non-po2 chain falls back to the f32
+    /// requant path with a warning (`:po2?`).
+    Lenient,
+}
+
+impl Po2Mode {
+    /// The grammar/JSON suffix this mode spells as.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Po2Mode::Free => "",
+            Po2Mode::Strict => ":po2",
+            Po2Mode::Lenient => ":po2?",
+        }
+    }
+
+    /// Parse the suffix token (`po2` / `po2?`).
+    pub fn parse_token(tok: &str) -> Result<Po2Mode> {
+        match tok {
+            "po2" => Ok(Po2Mode::Strict),
+            "po2?" => Ok(Po2Mode::Lenient),
+            other => bail!("unknown po2 mode '{other}' — expected 'po2' (strict) or 'po2?' (lenient)"),
+        }
+    }
+
+    /// Does this mode ask for snapped (power-of-two) scales?
+    pub fn is_po2(self) -> bool {
+        !matches!(self, Po2Mode::Free)
+    }
+}
 
 /// The per-site precision assignment of one encoder block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +124,8 @@ pub struct BitProfile {
     pub fc2: u32,
     pub mlp_out: u32,
     pub residual: u32,
+    /// Per-site po2 scale policy, indexed in [`SITE_NAMES`] order.
+    pub po2: [Po2Mode; 13],
 }
 
 /// Site names in canonical order (the order [`BitProfile::sites`],
@@ -128,6 +182,7 @@ impl BitProfile {
             fc2: bits,
             mlp_out: bits,
             residual: bits,
+            po2: [Po2Mode::Free; 13],
         }
     }
 
@@ -188,6 +243,37 @@ impl BitProfile {
         Ok(())
     }
 
+    /// Canonical index of a site name in [`SITE_NAMES`] order.
+    fn site_index(name: &str) -> Result<usize> {
+        SITE_NAMES
+            .iter()
+            .position(|n| *n == name)
+            .ok_or_else(|| anyhow!("unknown bit-profile site '{name}' — expected one of {SITE_NAMES:?}"))
+    }
+
+    /// The po2 scale policy of a named site.
+    pub fn po2_mode(&self, name: &str) -> Result<Po2Mode> {
+        Ok(self.po2[Self::site_index(name)?])
+    }
+
+    /// Assign a named site's po2 scale policy.
+    pub fn set_po2(&mut self, name: &str, mode: Po2Mode) -> Result<()> {
+        self.po2[Self::site_index(name)?] = mode;
+        Ok(())
+    }
+
+    /// Does any site ask for power-of-two scales?
+    pub fn any_po2(&self) -> bool {
+        self.po2.iter().any(|m| m.is_po2())
+    }
+
+    /// The free-scale twin: same widths, every po2 flag cleared — what
+    /// `ivit eval` pairs a po2 profile against for the accuracy/energy
+    /// comparison row.
+    pub fn strip_po2(&self) -> BitProfile {
+        BitProfile { po2: [Po2Mode::Free; 13], ..*self }
+    }
+
     /// `Some(bits)` when every site shares one width.
     pub fn as_uniform(&self) -> Option<u32> {
         let b = self.attn_x;
@@ -214,11 +300,15 @@ impl BitProfile {
     /// strings and cache keys embed.
     pub fn key(&self) -> String {
         if let Some(b) = self.as_uniform() {
-            return format!("uniform:{b}");
+            let mode = self.po2[0];
+            if self.po2.iter().all(|m| *m == mode) {
+                return format!("uniform:{b}{}", mode.suffix());
+            }
         }
         self.sites()
             .iter()
-            .map(|(n, b)| format!("{n}:{b}"))
+            .zip(self.po2.iter())
+            .map(|((n, b), m)| format!("{n}:{b}{}", m.suffix()))
             .collect::<Vec<_>>()
             .join(",")
     }
@@ -231,53 +321,76 @@ impl BitProfile {
     pub fn parse(spec: &str) -> Result<BitProfile> {
         let spec = spec.trim();
         ensure!(!spec.is_empty(), "empty bit-profile spec");
-        let mut entries: Vec<(&str, u32)> = Vec::new();
+        let mut entries: Vec<(&str, u32, Po2Mode)> = Vec::new();
         for part in spec.split(',') {
             let part = part.trim();
-            let (key, val) = part.split_once(':').ok_or_else(|| {
-                anyhow!("bit-profile entry '{part}' is not of the form key:bits")
+            let mut toks = part.splitn(3, ':');
+            let key = toks.next().unwrap_or("").trim();
+            let val = toks.next().ok_or_else(|| {
+                anyhow!("bit-profile entry '{part}' is not of the form key:bits[:po2|:po2?]")
             })?;
             let bits: u32 = val
                 .trim()
                 .parse()
-                .map_err(|_| anyhow!("bit-profile entry '{part}': '{val}' is not an integer"))?;
+                .map_err(|_| anyhow!("bit-profile entry '{part}': '{}' is not an integer", val.trim()))?;
             check_bits(&format!("entry '{part}'"), bits)?;
-            entries.push((key.trim(), bits));
+            let mode = match toks.next() {
+                Some(m) => Po2Mode::parse_token(m.trim())
+                    .map_err(|e| anyhow!("bit-profile entry '{part}': {e}"))?,
+                None => Po2Mode::Free,
+            };
+            entries.push((key, bits, mode));
         }
         let base = match entries.first() {
-            Some(("uniform", b)) => *b,
-            _ => entries.iter().map(|(_, b)| *b).max().expect("at least one entry"),
+            Some(("uniform", b, _)) => *b,
+            _ => entries.iter().map(|(_, b, _)| *b).max().expect("at least one entry"),
         };
         let mut profile = BitProfile::uniform(base);
-        for (key, bits) in entries {
+        for (key, bits, mode) in entries {
             match key {
-                "uniform" => profile = BitProfile::uniform(bits),
+                "uniform" => {
+                    profile = BitProfile::uniform(bits);
+                    profile.po2 = [mode; 13];
+                }
                 "attn" => {
                     for site in ATTN_GROUP {
                         profile.set_site(site, bits)?;
+                        profile.set_po2(site, mode)?;
                     }
                 }
                 "mlp" => {
                     for site in MLP_GROUP {
                         profile.set_site(site, bits)?;
+                        profile.set_po2(site, mode)?;
                     }
                 }
-                _ => profile.set_site(key, bits).map_err(|_| {
-                    anyhow!(
-                        "unknown bit-profile key '{key}' — expected 'uniform', 'attn', 'mlp', \
-                         or a site name from {SITE_NAMES:?}"
-                    )
-                })?,
+                _ => {
+                    profile.set_site(key, bits).map_err(|_| {
+                        anyhow!(
+                            "unknown bit-profile key '{key}' — expected 'uniform', 'attn', 'mlp', \
+                             or a site name from {SITE_NAMES:?}"
+                        )
+                    })?;
+                    profile.set_po2(key, mode)?;
+                }
             }
         }
         Ok(profile)
     }
 
-    /// JSON object with every site name mapped to its width.
+    /// JSON object with every site name mapped to its width: a plain
+    /// number for free-scale sites, a `"bits:po2"` / `"bits:po2?"`
+    /// string for po2 sites (so legacy free-scale profiles round-trip
+    /// byte-identically).
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
-        for (name, bits) in self.sites() {
-            obj.insert(name.to_string(), Json::Num(bits as f64));
+        for ((name, bits), mode) in self.sites().iter().zip(self.po2.iter()) {
+            let val = if mode.is_po2() {
+                Json::Str(format!("{bits}{}", mode.suffix()))
+            } else {
+                Json::Num(*bits as f64)
+            };
+            obj.insert(name.to_string(), val);
         }
         Json::Obj(obj)
     }
@@ -300,15 +413,29 @@ impl BitProfile {
         }
         let mut profile = BitProfile::uniform(MIN_BITS);
         for name in SITE_NAMES {
-            let bits = j
+            let val = j
                 .get(name)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("bit profile: missing or non-numeric site '{name}'"))?;
+                .ok_or_else(|| anyhow!("bit profile: missing site '{name}'"))?;
+            let (bits, mode) = if let Some(n) = val.as_f64() {
+                (n, Po2Mode::Free)
+            } else if let Some(s) = val.as_str() {
+                // the po2 string form: "bits:po2" / "bits:po2?"
+                let (b, m) = s.split_once(':').ok_or_else(|| {
+                    anyhow!("bit profile: site '{name}' string '{s}' is not of the form bits:po2")
+                })?;
+                let bits: f64 = b
+                    .parse()
+                    .map_err(|_| anyhow!("bit profile: site '{name}': '{b}' is not an integer"))?;
+                (bits, Po2Mode::parse_token(m).map_err(|e| anyhow!("bit profile: site '{name}': {e}"))?)
+            } else {
+                bail!("bit profile: site '{name}' is neither a number nor a bits:po2 string");
+            };
             ensure!(
                 bits.fract() == 0.0 && bits >= 0.0,
                 "bit profile: site '{name}' is not an integer ({bits})"
             );
             profile.set_site(name, bits as u32)?;
+            profile.set_po2(name, mode)?;
         }
         Ok(profile)
     }
@@ -428,6 +555,73 @@ mod tests {
         obj.insert("attn".into(), Json::Num(4.0));
         let err = BitProfile::from_json(&Json::Obj(obj)).unwrap_err();
         assert!(format!("{err:#}").contains("unknown key 'attn'"), "{err:#}");
+    }
+
+    #[test]
+    fn po2_grammar_parses_and_round_trips() {
+        // the ISSUE's two po2 operating points
+        let u = BitProfile::parse("uniform:4:po2").unwrap();
+        assert!(u.po2.iter().all(|m| *m == Po2Mode::Strict));
+        assert!(u.any_po2());
+        assert_eq!(u.key(), "uniform:4:po2");
+        assert_eq!(BitProfile::parse(&u.key()).unwrap(), u);
+
+        let mixed = BitProfile::parse("attn:4:po2,mlp:8").unwrap();
+        assert_eq!(mixed.po2_mode("v_proj").unwrap(), Po2Mode::Strict);
+        assert_eq!(mixed.po2_mode("o_proj").unwrap(), Po2Mode::Strict);
+        assert_eq!(mixed.po2_mode("fc2").unwrap(), Po2Mode::Free);
+        assert_eq!(mixed.po2_mode("residual").unwrap(), Po2Mode::Free);
+        assert_eq!(mixed.attn_x, 4);
+        assert_eq!(mixed.mlp_x, 8);
+        assert_eq!(BitProfile::parse(&mixed.key()).unwrap(), mixed);
+
+        // lenient fallback suffix
+        let lenient = BitProfile::parse("uniform:4,gelu_in:4:po2?").unwrap();
+        assert_eq!(lenient.po2_mode("gelu_in").unwrap(), Po2Mode::Lenient);
+        assert_eq!(lenient.po2_mode("gelu_out").unwrap(), Po2Mode::Free);
+        assert_eq!(BitProfile::parse(&lenient.key()).unwrap(), lenient);
+
+        // bad mode tokens are loud
+        assert!(BitProfile::parse("attn:4:po3").is_err());
+        assert!(BitProfile::parse("uniform:4:").is_err());
+    }
+
+    #[test]
+    fn po2_is_part_of_profile_identity() {
+        let free = BitProfile::uniform(4);
+        let po2 = BitProfile::parse("uniform:4:po2").unwrap();
+        // same widths, different identity — this is what keeps plan
+        // caches and ensure_plan_profile honest
+        assert_ne!(free, po2);
+        assert_ne!(free.key(), po2.key());
+        assert_eq!(po2.strip_po2(), free);
+        assert!(!free.any_po2());
+        // strict and lenient are distinct identities too
+        let lenient = BitProfile::parse("uniform:4:po2?").unwrap();
+        assert_ne!(po2, lenient);
+        assert_ne!(po2.key(), lenient.key());
+    }
+
+    #[test]
+    fn po2_json_round_trips_and_rejects_garbage() {
+        let p = BitProfile::parse("attn:4:po2,mlp:8,gelu_in:8:po2?").unwrap();
+        let text = format!("{}", p.to_json());
+        assert!(text.contains("\"4:po2\""), "{text}");
+        assert!(text.contains("\"8:po2?\""), "{text}");
+        let back = BitProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // a free-scale profile still serializes as plain numbers
+        let free = BitProfile::uniform(4);
+        assert!(!format!("{}", free.to_json()).contains("po2"));
+        // corrupt string form is loud
+        let mut obj = match p.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.insert("attn_x".into(), Json::Str("4:nope".into()));
+        assert!(BitProfile::from_json(&Json::Obj(obj.clone())).is_err());
+        obj.insert("attn_x".into(), Json::Str("po2".into()));
+        assert!(BitProfile::from_json(&Json::Obj(obj)).is_err());
     }
 
     #[test]

@@ -37,6 +37,22 @@ impl Step {
     pub fn get(self) -> f32 {
         self.0
     }
+
+    /// This step snapped to the nearest power of two (identity when the
+    /// step is already exact) — how po2 [`crate::quant::BitProfile`]
+    /// sites normalise their quantizer steps at fold time.
+    pub fn snap_po2(self) -> Result<Step> {
+        Step::new(super::po2::snap_po2(self.0)?)
+    }
+
+    /// Snap only when `mode` asks for power-of-two scales.
+    pub fn snap_for(self, mode: super::profile::Po2Mode) -> Result<Step> {
+        if mode.is_po2() {
+            self.snap_po2()
+        } else {
+            Ok(self)
+        }
+    }
 }
 
 /// One quantizer: step + bit width + signedness. Pairs of
@@ -211,6 +227,15 @@ impl ScaleChain {
         let n: f32 = self.num.iter().product();
         let d: f32 = self.den.iter().product();
         n / d
+    }
+
+    /// `Some(e)` iff the chain's effective scale is *exactly* `2^e`.
+    /// When every contributing step has been snapped to a power of two
+    /// ([`crate::quant::po2::snap_po2`]) this always succeeds, because
+    /// products and quotients of exact f32 powers of two never round —
+    /// the property the shift-only requantization path rests on.
+    pub fn eff_po2(&self) -> Option<i32> {
+        super::po2::po2_exponent(self.eff())
     }
 }
 

@@ -161,6 +161,35 @@ impl AttentionReport {
         self.blocks.iter().map(|b| b.pe_count).sum()
     }
 
+    /// Boundary-crossing energy split (pJ): `(shifter, fp)` — how much
+    /// the module spends on shift-only po2 requantizers vs on its fp
+    /// datapath (free-scale requantizers plus the LN/softmax/scale fp
+    /// ops). Under a po2 profile the shifter share replaces the requant
+    /// half of the fp column; the split is the Table-I-style evidence
+    /// that the datapath got cheaper, since the numerics are pinned
+    /// bit-identical either way.
+    pub fn requant_energy_split_pj(&self, m: &EnergyModel) -> (f64, f64) {
+        let shift = self.blocks.iter().map(|b| b.shift_ops as f64 * m.shift_pj()).sum();
+        let fp = self.blocks.iter().map(|b| b.fp_ops as f64 * m.fp_pj()).sum();
+        (shift, fp)
+    }
+
+    /// Total shift-only requantizations across all rows.
+    pub fn total_shift_ops(&self) -> u64 {
+        self.blocks.iter().map(|b| b.shift_ops).sum()
+    }
+
+    /// One-line rendering of the shifter/fp split, e.g.
+    /// `requant split: 0.012 µJ shifters | 1.204 µJ fp datapath`.
+    pub fn render_requant_split(&self, m: &EnergyModel) -> String {
+        let (shift, fp) = self.requant_energy_split_pj(m);
+        format!(
+            "requant split: {:.3} µJ shifters | {:.3} µJ fp datapath",
+            shift / 1e6,
+            fp / 1e6
+        )
+    }
+
     /// MAC totals split by multiplier width (the bit-width classes of a
     /// mixed [`BitProfile`]). Values sum to [`Self::total_macs`] exactly
     /// — pinned by tests.
@@ -324,7 +353,14 @@ impl AttentionSim {
             attn_spec,
             self.shift,
         )?;
+        // the PV scan-chain quantizer is a barrel shifter when the site
+        // governing it (o_proj) snapped the chain to an exact power of two
+        let pv_po2 = p.po2_mode("o_proj").map(|m| m.is_po2()).unwrap_or(false)
+            && ScaleChain::requant(self.steps.s_attn, self.steps.s_v, self.steps.s_o)
+                .eff_po2()
+                .is_some();
         let pv_h = MatmulArraySim::new("PV matmul", p.attn_probs.max(p.v_proj))
+            .with_po2_requant(pv_po2)
             .run(&qk.codes, &vh, out_spec)?;
         Ok(HeadOutput {
             head: h,

@@ -37,6 +37,7 @@ pub struct BlockSim {
     res1_spec: QuantSpec,
     out_spec: QuantSpec,
     residual_bits: u32,
+    residual_po2: bool,
 }
 
 /// Everything [`BlockSim::run`] produces.
@@ -62,10 +63,18 @@ fn quantizer_stats(name: &str, rows: usize, d: usize, bits: u32) -> BlockStats {
 }
 
 /// Stats row for a dual-operand residual requantizer: two folded-scale
-/// multiplies + one add per element, then the comparator bank.
-fn residual_stats(name: &str, rows: usize, d: usize, bits: u32) -> BlockStats {
+/// multiplies + one add per element, then the comparator bank. Under a
+/// po2 residual site both effective scales are exact powers of two, so
+/// the bank is two barrel shifts (operand alignment + merge-round) and
+/// an integer add — no fp ops at all.
+fn residual_stats(name: &str, rows: usize, d: usize, bits: u32, po2: bool) -> BlockStats {
     let mut s = quantizer_stats(name, rows, d, bits);
-    s.fp_ops = 3 * (rows * d) as u64;
+    if po2 {
+        s.fp_ops = 0;
+        s.shift_ops = 2 * (rows * d) as u64;
+    } else {
+        s.fp_ops = 3 * (rows * d) as u64;
+    }
     s
 }
 
@@ -97,6 +106,11 @@ impl BlockSim {
             res1_spec: block.res1_spec(),
             out_spec: block.out_spec(),
             residual_bits: block.profile.residual,
+            residual_po2: block
+                .profile
+                .po2_mode("residual")
+                .map(|m| m.is_po2())
+                .unwrap_or(false),
         }
     }
 
@@ -136,7 +150,7 @@ impl BlockSim {
 
         // residual 1
         let r1 = residual_requant(&attn_q, x, self.res1_spec)?;
-        blocks.push(residual_stats("residual add 1", n, d, self.residual_bits));
+        blocks.push(residual_stats("residual add 1", n, d, self.residual_bits, self.residual_po2));
 
         // pre-LN 2 → MLP input codes
         let r1f = r1.dequantize();
@@ -149,7 +163,7 @@ impl BlockSim {
 
         // residual 2 → block output codes
         let out = residual_requant(&mlp_out.codes, &r1, self.out_spec)?;
-        blocks.push(residual_stats("residual add 2", n, d, self.residual_bits));
+        blocks.push(residual_stats("residual add 2", n, d, self.residual_bits, self.residual_po2));
 
         Ok(BlockSimOutput { out_codes: out, report: AttentionReport { blocks } })
     }
@@ -205,6 +219,53 @@ mod tests {
         assert_eq!(mac("FC1 linear"), 5 * 12 * 24);
         assert_eq!(mac("FC2 linear"), 5 * 24 * 12);
         assert!(out.report.total_macs() > 0);
+    }
+
+    #[test]
+    fn po2_profile_recosts_requant_rows_as_shifters() {
+        let profile = BitProfile::parse("uniform:4:po2").unwrap();
+        let block = EncoderBlock::synthetic(16, 32, 2, profile, 71).unwrap();
+        let sim = block.to_sim();
+        let x = block.random_input(6, 2).unwrap();
+        // numerics stay pinned to the reference…
+        let want = block.run_reference(&x).unwrap();
+        let got = sim.run(&x).unwrap();
+        assert_eq!(got.out_codes.codes.data, want.codes.data, "po2 sim ≡ ref");
+        // …while every integer-boundary row now runs on shifters
+        let row = |name: &str| {
+            got.report
+                .blocks
+                .iter()
+                .find(|b| b.name == name)
+                .unwrap_or_else(|| panic!("missing row {name}"))
+        };
+        for name in [
+            "V linear",
+            "PV matmul",
+            "FC1 linear",
+            "FC2 linear",
+            "residual add 1",
+            "residual add 2",
+        ] {
+            assert!(row(name).shift_ops > 0, "{name} should be shift-costed");
+            assert_eq!(row(name).fp_ops, 0, "{name} should burn no fp requant ops");
+        }
+        // fp rows that are not requantizers (LN stats) are untouched
+        assert!(row("Block LN1").fp_ops > 0);
+        // the free-scale twin has the same activity shape with fp
+        // requantizers instead of shifters, so po2 is strictly cheaper
+        // under the energy model while producing its own pinned numerics
+        let free = EncoderBlock::synthetic(16, 32, 2, BitProfile::uniform(4), 71).unwrap();
+        let free_out = free.to_sim().run(&free.random_input(6, 2).unwrap()).unwrap();
+        let m = super::super::energy::EnergyModel::default();
+        assert_eq!(free_out.report.total_shift_ops(), 0);
+        assert!(got.report.total_shift_ops() > 0);
+        let (shift, fp) = got.report.requant_energy_split_pj(&m);
+        assert!(shift > 0.0 && fp > 0.0);
+        assert!(
+            got.report.workload_energy_uj(&m) < free_out.report.workload_energy_uj(&m),
+            "shift-only requant must be cheaper than the fp twin"
+        );
     }
 
     #[test]

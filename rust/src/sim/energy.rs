@@ -71,6 +71,11 @@ pub struct EnergyModel {
     pub c_exp_pj: f64,
     /// Comparator energy per compared bit (pJ).
     pub c_cmp_pj_per_bit: f64,
+    /// One barrel-shift + round-half-even increment of a requantizer that
+    /// lowered to a power-of-two scale (pJ). A shifter is wiring plus one
+    /// conditional increment — far below the flat fp32 multiply it
+    /// replaces, and that gap *is* the po2 claim.
+    pub c_shift_pj: f64,
     /// Static/idle leakage per PE per cycle (pJ) — clock-gated residue.
     pub c_idle_pj: f64,
     /// Word-level register+mux move in the reversing module (pJ) — FPGA
@@ -100,6 +105,7 @@ impl Default for EnergyModel {
             c_fp_pj: 22.0,
             c_exp_pj: 9.0,
             c_cmp_pj_per_bit: 0.35,
+            c_shift_pj: 1.1,
             c_idle_pj: 0.02,
             c_rev_pj: 3.69,
             c_delay_pj: 0.677,
@@ -131,6 +137,12 @@ impl EnergyModel {
     /// One threshold comparison at `bits` precision.
     pub fn cmp_pj(&self, bits: u32) -> f64 {
         self.c_cmp_pj_per_bit * bits as f64
+    }
+
+    /// One shift-only requantization (po2 scale): barrel shift + RHE
+    /// rounding increment.
+    pub fn shift_pj(&self) -> f64 {
+        self.c_shift_pj
     }
 
     /// One register write of `bits` bits (delay lines, scan chains).
@@ -236,6 +248,16 @@ mod tests {
         assert!(lut3 > 0.0);
         assert!(lut3 < lut8);
         assert!(lut8 < m.pe_cycle_pj(PeKind::LnStats));
+    }
+
+    #[test]
+    fn shift_requant_is_far_cheaper_than_fp_requant() {
+        // A free-scale requantizer spends two fp32 ops per element
+        // (multiply + round); the po2 form spends one shift. The energy
+        // model must keep that ratio large or the po2 mode is pointless.
+        let m = EnergyModel::default();
+        assert!(m.shift_pj() > 0.0);
+        assert!(2.0 * m.fp_pj() > 20.0 * m.shift_pj());
     }
 
     #[test]

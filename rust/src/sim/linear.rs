@@ -69,6 +69,13 @@ pub struct LinearArraySim {
     /// Stationary weight code width.
     pub w_bits: u32,
     pub name: String,
+    /// The governing site snapped this boundary's scale chain to powers
+    /// of two, so the Quantize epilogue is a barrel shifter, not an fp
+    /// multiplier. Cost accounting only — the simulated numerics are
+    /// identical by construction (a po2 fold produces exactly-po2 `eff`
+    /// and integral folded biases, so the fp epilogue already computes
+    /// the shift result bit-for-bit).
+    pub po2_requant: bool,
 }
 
 impl LinearArraySim {
@@ -85,7 +92,13 @@ impl LinearArraySim {
         x_bits: u32,
         w_bits: u32,
     ) -> Self {
-        LinearArraySim { folded, x_bits, w_bits, name: name.into() }
+        LinearArraySim { folded, x_bits, w_bits, name: name.into(), po2_requant: false }
+    }
+
+    /// Mark the Quantize epilogue as shift-only (po2 scale chain).
+    pub fn with_po2_requant(mut self, po2: bool) -> Self {
+        self.po2_requant = po2;
+        self
     }
 
     /// Multiplier width of this array's PEs (the wider operand).
@@ -190,7 +203,13 @@ impl LinearArraySim {
                 // parallel comparator: 2^b - 1 boundary compares per element
                 out.stats.cmp_ops = (m * n) as u64 * ((1u64 << spec.bits) - 1);
                 out.stats.cmp_bits = spec.bits;
-                out.stats.fp_ops += 2 * (m * n) as u64; // bias add + eff mult
+                if self.po2_requant {
+                    // shift-only requantizer: one barrel shift + RHE
+                    // increment per element, no fp ops at the boundary
+                    out.stats.shift_ops += (m * n) as u64;
+                } else {
+                    out.stats.fp_ops += 2 * (m * n) as u64; // bias add + eff mult
+                }
                 out.codes = Some(QTensor {
                     codes: crate::quant::linear::IntMat::new(m, n, codes),
                     spec,
@@ -288,6 +307,25 @@ mod tests {
             assert_eq!(*c, want);
         }
         assert!(q.stats.cmp_ops > 0);
+    }
+
+    #[test]
+    fn po2_flag_recosts_epilogue_without_changing_codes() {
+        let mut rng = XorShift::new(87);
+        let f = folded(&mut rng, 4, 8, 3);
+        let fp = LinearArraySim::new("v", f.clone(), 3);
+        let po2 = LinearArraySim::new("v", f, 3).with_po2_requant(true);
+        let x = qinput(&mut rng, 3, 8, 3);
+        let spec = QuantSpec::signed(3, Step::new(0.09).unwrap());
+        let a = fp.run(&x, &Epilogue::Quantize(spec)).unwrap();
+        let b = po2.run(&x, &Epilogue::Quantize(spec)).unwrap();
+        // identical numerics…
+        assert_eq!(a.codes.unwrap().codes.data, b.codes.unwrap().codes.data);
+        // …but the boundary is costed as shifts, not fp ops
+        assert_eq!(a.stats.shift_ops, 0);
+        assert_eq!(b.stats.shift_ops, (3 * 4) as u64);
+        assert_eq!(b.stats.fp_ops, 0);
+        assert_eq!(a.stats.fp_ops, 2 * 3 * 4);
     }
 
     #[test]

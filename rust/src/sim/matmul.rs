@@ -27,6 +27,12 @@ use super::stats::BlockStats;
 pub struct MatmulArraySim {
     pub name: String,
     pub bits: u32,
+    /// The PV scale chain Δ_A·Δ_B/Δ_out is an exact power of two, so the
+    /// scan-chain quantizer is a barrel shifter instead of an fp
+    /// multiplier. Cost accounting only — numerics are unchanged (an
+    /// exactly-po2 `eff` makes the fp multiply bit-identical to the
+    /// shift for in-range accumulators).
+    pub po2_requant: bool,
 }
 
 #[derive(Debug)]
@@ -42,7 +48,13 @@ pub struct MatmulOutput {
 
 impl MatmulArraySim {
     pub fn new(name: impl Into<String>, bits: u32) -> Self {
-        MatmulArraySim { name: name.into(), bits }
+        MatmulArraySim { name: name.into(), bits, po2_requant: false }
+    }
+
+    /// Mark the scan-chain quantizer as shift-only (po2 scale chain).
+    pub fn with_po2_requant(mut self, po2: bool) -> Self {
+        self.po2_requant = po2;
+        self
     }
 
     /// `a` (M×K codes) × `b_rows` (K×N codes, row-major K rows) →
@@ -86,7 +98,11 @@ impl MatmulArraySim {
         }
         stats.cmp_ops = (m * n) as u64 * ((1u64 << out.bits) - 1);
         stats.cmp_bits = out.bits;
-        stats.fp_ops += (m * n) as u64; // eff-scale mult at the quantizer
+        if self.po2_requant {
+            stats.shift_ops += (m * n) as u64; // barrel shift at the quantizer
+        } else {
+            stats.fp_ops += (m * n) as u64; // eff-scale mult at the quantizer
+        }
 
         Ok(MatmulOutput {
             codes: QTensor { codes: IntMat::new(m, n, codes), spec: out },

@@ -48,9 +48,15 @@ impl MlpSim {
     /// Lower a folded [`MlpModule`] onto the systolic substrate.
     pub fn new(module: &MlpModule) -> MlpSim {
         let p = &module.profile;
+        // fc1's quantizer is governed by gelu_in, fc2's by mlp_out: a po2
+        // site there means the module folded its scale chain to exact
+        // powers of two, so the sim costs those boundaries as shifters
+        let po2_at = |site: &str| p.po2_mode(site).map(|m| m.is_po2()).unwrap_or(false);
         MlpSim {
-            fc1: LinearArraySim::new_split("FC1 linear", module.fc1.clone(), p.mlp_x, p.fc1),
-            fc2: LinearArraySim::new_split("FC2 linear", module.fc2.clone(), p.gelu_out, p.fc2),
+            fc1: LinearArraySim::new_split("FC1 linear", module.fc1.clone(), p.mlp_x, p.fc1)
+                .with_po2_requant(po2_at("gelu_in")),
+            fc2: LinearArraySim::new_split("FC2 linear", module.fc2.clone(), p.gelu_out, p.fc2)
+                .with_po2_requant(po2_at("mlp_out")),
             lut: module.gelu_lut().clone(),
             h_spec: QuantSpec::signed(p.gelu_in, module.s_h),
             out_spec: module.out_spec(),

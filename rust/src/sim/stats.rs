@@ -21,6 +21,9 @@ pub struct BlockStats {
     pub fp_ops: u64,
     /// Shift-exponential evaluations (Eq. 4 units).
     pub exp_ops: u64,
+    /// Shift-only requantizations (po2 scale chains): barrel shift + RHE
+    /// increment replacing the two fp32 ops of a free-scale requantizer.
+    pub shift_ops: u64,
     /// Threshold comparisons (quantizers, Fig. 5 bank).
     pub cmp_ops: u64,
     /// Bits compared per comparison.
@@ -47,6 +50,7 @@ impl BlockStats {
         self.mac_ops as f64 * m.mac_pj(self.mac_bits)
             + self.fp_ops as f64 * m.fp_pj()
             + self.exp_ops as f64 * m.exp_pj()
+            + self.shift_ops as f64 * m.shift_pj()
             + self.cmp_ops as f64 * m.cmp_pj(self.cmp_bits.max(1))
             + self.reg_bit_writes as f64 * m.reg_pj(1)
             + self.rev_moves as f64 * m.c_rev_pj
@@ -91,6 +95,7 @@ impl BlockStats {
         self.mac_ops += other.mac_ops;
         self.fp_ops += other.fp_ops;
         self.exp_ops += other.exp_ops;
+        self.shift_ops += other.shift_ops;
         self.cmp_ops += other.cmp_ops;
         self.reg_bit_writes += other.reg_bit_writes;
         self.rev_moves += other.rev_moves;
@@ -130,6 +135,18 @@ mod tests {
         s.cycles = 100;
         let total = s.power_w(&m);
         assert!((s.per_pe_mw(&m) - total * 1e3 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shift_ops_priced_as_shifters() {
+        let m = EnergyModel::default();
+        let mut s = BlockStats::new("t", "1x1", 1);
+        s.shift_ops = 8;
+        assert!((s.energy_pj(&m) - 8.0 * m.shift_pj()).abs() < 1e-9);
+        let mut o = BlockStats::new("o", "1x1", 1);
+        o.shift_ops = 3;
+        s.absorb(&o);
+        assert_eq!(s.shift_ops, 11);
     }
 
     #[test]

@@ -13,8 +13,8 @@
 use std::sync::Arc;
 
 use ivit::backend::{
-    AttnBatchRequest, AttnModule, AttnRequest, Backend, BackendRegistry, BitProfile, JitBackend,
-    PlanCache, PlanOptions, PlanScope, PlanSeed, ReferenceBackend,
+    AttnBatchRequest, AttnModule, AttnRequest, Backend, BackendConfig, BackendRegistry,
+    BitProfile, JitBackend, PlanCache, PlanOptions, PlanScope, PlanSeed, ReferenceBackend,
 };
 use ivit::block::EncoderBlock;
 use ivit::kernel::{lower_attention, lower_block, Isa, ProgramExecutor};
@@ -189,6 +189,100 @@ fn mixed_profile_block_matrix_is_bit_identical_for_every_isa_and_worker_count() 
                 isa.as_str()
             );
         }
+    }
+}
+
+#[test]
+fn po2_profiles_are_bit_identical_across_backends_isas_and_workers_at_deit_s_dims() {
+    // the po2 acceptance matrix: for both po2 operating points, the
+    // shift-only compiled datapath must reproduce the fp interpreter
+    // exactly — ref ≡ sim ≡ sim-mt ≡ jit, and jit across every GEMM ISA
+    // and worker count. The fp/shift agreement is not approximate: the
+    // fold snapped every contributing step to an exact power of two and
+    // integralized the folded biases, so the f32 epilogue and the
+    // integer shift compute the same rounded value bit for bit.
+    let registry = BackendRegistry::with_defaults();
+    for (i, key) in ["uniform:4:po2", "attn:4:po2,mlp:8"].iter().enumerate() {
+        let profile = BitProfile::parse(key).expect("profile");
+        assert!(profile.any_po2(), "[{key}] must request po2 sites");
+        let block = EncoderBlock::synthetic(DIM, HIDDEN, HEADS, profile, 910 + i as u64)
+            .expect("block");
+        let x = block.random_input(TOKENS, 17).expect("input");
+        let req = AttnRequest::new(x.clone());
+        let opts = block_opts(profile);
+
+        let mut ref_plan =
+            ReferenceBackend::for_block(block.clone()).plan(&opts).expect("ref plan");
+        let want = ref_plan.run_one(&req).expect("ref run");
+        let want_codes = &want.out_codes.as_ref().unwrap().codes.data;
+
+        for backend_name in ["sim", "sim-mt", "jit"] {
+            let cfg = BackendConfig {
+                block: Some(block.clone()),
+                profile,
+                ..BackendConfig::default()
+            };
+            let mut plan = registry
+                .create(backend_name, &cfg)
+                .expect("backend")
+                .plan(&opts)
+                .expect("plan");
+            let got = plan.run_one(&req).expect("run");
+            assert_eq!(
+                &got.out_codes.as_ref().unwrap().codes.data,
+                want_codes,
+                "[{key}] {backend_name} ≡ ref at DeiT-S dims"
+            );
+        }
+
+        // the compiled program must actually carry shift stages …
+        let prog = Arc::new(lower_block(&block).expect("lower block"));
+        let text = format!("{prog}");
+        assert!(text.contains("gemm.shift"), "[{key}] po2 block must lower shift requantizers");
+        assert!(text.contains(">>"), "[{key}] disassembly must print the shift notation");
+        // … and execute them identically on every ISA × worker pair
+        for isa in isas() {
+            for workers in [1usize, 4] {
+                let exec = ProgramExecutor::pooled(isa, workers);
+                let (codes, _) = exec.run(&prog, &x).expect("executor run");
+                assert_eq!(
+                    &codes.codes.data,
+                    want_codes,
+                    "[{key}] jit(isa {} workers {workers}) ≡ ref",
+                    isa.as_str()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn po2_only_profile_difference_keys_apart_and_cross_planning_is_loud() {
+    let free = BitProfile::uniform(4);
+    let po2 = BitProfile::parse("uniform:4:po2").expect("profile");
+
+    let bf = JitBackend::for_block(EncoderBlock::synthetic(8, 16, 2, free, 500).expect("block"));
+    let bp = JitBackend::for_block(EncoderBlock::synthetic(8, 16, 2, po2, 500).expect("block"));
+
+    // PlanOptions carry the po2 suffix everywhere a plan is named …
+    assert!(block_opts(po2).describe().contains(":po2"), "describe() must show po2");
+    assert!(!block_opts(free).describe().contains(":po2"));
+    assert!(block_opts(po2).key().contains("po2"), "options key must carry po2");
+
+    // … so po2-only differences can never collide in the PlanCache
+    let kf = PlanCache::key(&bf, &block_opts(free));
+    let kp = PlanCache::key(&bp, &block_opts(po2));
+    assert_ne!(kf, kp, "po2-only profile difference must key plans apart");
+
+    // and feeding a po2 plan request to a free-scale module (either
+    // direction) is a loud error naming the mode mismatch
+    for (backend, opts_profile) in [(&bf, po2), (&bp, free)] {
+        let err = backend
+            .plan(&block_opts(opts_profile))
+            .err()
+            .expect("po2/free cross-plan must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("po2"), "error must name the po2 mismatch: {msg}");
     }
 }
 
